@@ -1,0 +1,108 @@
+//! END-TO-END DRIVER (the required full-system validation).
+//!
+//! Proves all layers compose on a real small workload:
+//!   1. pretrain a from-scratch transformer on synthetic worked examples
+//!      (supervised CE via the AOT `lm` artifact), logging the loss curve,
+//!   2. GRPO + Sparse-RL post-training with compressed (R-KV) rollouts —
+//!      the paper's full pipeline: sparse sampler -> dense scorer ->
+//!      rejection + reweighting -> Eq. 7 updates,
+//!   3. evaluate on the 7-benchmark suite, dense and sparse-inference.
+//!
+//!     cargo run --release --example e2e_train -- \
+//!         [--model tiny] [--pretrain-steps 1500] [--rl-steps 60] \
+//!         [--mode sparse-rl:rkv] [--eval-limit 50]
+//!
+//! Results are recorded in EXPERIMENTS.md; curves land in
+//! runs/e2e/<model>/.
+
+use anyhow::Result;
+
+use sparse_rl::config::{ExperimentConfig, RolloutMode};
+use sparse_rl::experiments;
+use sparse_rl::runtime::ModelEngine;
+use sparse_rl::util::cli::CliArgs;
+
+fn main() -> Result<()> {
+    let args = CliArgs::from_env();
+    let model = args.get("model", "tiny".to_string());
+    let pretrain_steps = args.get(
+        "pretrain-steps",
+        experiments::default_pretrain_steps(&model),
+    );
+    let rl_steps = args.get("rl-steps", 60usize);
+    let mode = RolloutMode::parse(&args.get("mode", "sparse-rl:rkv".to_string()))?;
+    let eval_limit = args.get("eval-limit", 50usize);
+    let seed = args.get("seed", 0u64);
+
+    let dir = experiments::find_artifacts(&model)?;
+    let engine = ModelEngine::load(&dir)?;
+    println!(
+        "== e2e driver: {} ({} params) ==",
+        model, engine.manifest.config.n_params
+    );
+
+    // ---- stage 1: supervised pretraining (loss curve logged) ----------
+    let t0 = std::time::Instant::now();
+    let base = experiments::load_or_pretrain_base(&engine, pretrain_steps, seed)?;
+    println!("stage 1 done in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // base-model eval (the "Base" row of Table 1)
+    println!("\nbase model eval (dense):");
+    let (_, base_avg) =
+        experiments::eval_checkpoint(&engine, &base.params, RolloutMode::Dense, eval_limit, seed)?;
+
+    // ---- stage 2: RL post-training -------------------------------------
+    let mut cfg = ExperimentConfig::new(&dir);
+    cfg.apply_cli(&args)?;
+    cfg.mode = mode;
+    cfg.train.steps = rl_steps;
+    cfg.out_dir = format!("runs/e2e/{model}").into();
+    let t1 = std::time::Instant::now();
+    let trainer = experiments::run_rl(&engine, cfg, base.clone(), 5)?;
+    println!("stage 2 done in {:.1}s", t1.elapsed().as_secs_f64());
+    let (csv, ckpt) = experiments::save_run(&trainer, &mode.label().replace(':', "-"))?;
+    println!("metrics -> {}  checkpoint -> {}", csv.display(), ckpt.display());
+
+    println!("\ntraining dynamics (bucketed means):");
+    for series in ["reward", "response_len", "entropy", "mismatch_kl", "rejection_rate",
+                   "grad_norm", "toks_saving"] {
+        experiments::print_series(&trainer.metrics, series, 10);
+    }
+
+    // ---- stage 3: evaluation --------------------------------------------
+    println!("\npost-RL eval (dense inference):");
+    let (_, rl_avg) = experiments::eval_checkpoint(
+        &engine,
+        &trainer.state.params,
+        RolloutMode::Dense,
+        eval_limit,
+        seed,
+    )?;
+    println!("\npost-RL eval (sparse inference, same compression as training):");
+    let sparse_eval_mode = match mode {
+        RolloutMode::Dense => RolloutMode::SparseRl(sparse_rl::runtime::Method::RKv),
+        m => m,
+    };
+    let (_, rl_sparse_avg) = experiments::eval_checkpoint(
+        &engine,
+        &trainer.state.params,
+        sparse_eval_mode,
+        eval_limit,
+        seed,
+    )?;
+
+    println!("\n== e2e summary ==");
+    println!("  base avg:              {base_avg:.3}");
+    println!("  after RL ({}) avg: {rl_avg:.3}", mode.label());
+    println!("  sparse-inference avg:  {rl_sparse_avg:.3}");
+    println!(
+        "  mean toks saving during training: {:.1}%",
+        100.0 * trainer.metrics.tail_mean("toks_saving", rl_steps)
+    );
+    println!(
+        "  total wall: pretrain {:.0}s + rl {:.0}s",
+        t0.elapsed().as_secs_f64() - t1.elapsed().as_secs_f64(),
+        t1.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Figure 1 harness: training stability — naive GRPO with compression vs
+//! GRPO + Sparse-RL (reward curve + gradient-norm spikes).
+//!
+//!     cargo run --release --example fig1_stability -- \
+//!         [--model tiny] [--steps 60] [--method rkv] [--show-anomaly]
+//!
+//! Prints both series side by side and a collapse diagnosis (tail reward
+//! vs peak, grad-norm spike count). `--show-anomaly` hunts for a concrete
+//! compression-induced anomalous sequence (paper Appendix F) and prints it
+//! decoded.
+
+use anyhow::Result;
+
+use sparse_rl::config::{ExperimentConfig, RolloutMode};
+use sparse_rl::coordinator::rollout::RolloutEngine;
+use sparse_rl::data::{benchmarks, task, tokenizer};
+use sparse_rl::experiments;
+use sparse_rl::runtime::{Method, ModelEngine};
+use sparse_rl::util::cli::CliArgs;
+use sparse_rl::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = CliArgs::from_env();
+    let model = args.get("model", "tiny".to_string());
+    let steps = args.get("steps", 60usize);
+    let method = Method::parse(&args.get("method", "rkv".to_string()))?;
+    let seed = args.get("seed", 0u64);
+
+    let dir = experiments::find_artifacts(&model)?;
+    let engine = ModelEngine::load(&dir)?;
+    let base = experiments::load_or_pretrain_base(
+        &engine,
+        experiments::default_pretrain_steps(&model),
+        seed,
+    )?;
+
+    if args.flag("show-anomaly") {
+        show_anomaly(&engine, &base.params, method, seed)?;
+        return Ok(());
+    }
+
+    let mut runs = Vec::new();
+    for mode in [RolloutMode::NaiveSparse(method), RolloutMode::SparseRl(method)] {
+        let tag = mode.label().replace(':', "-");
+        // reuse series from an earlier table1/fig run when available
+        let reuse = [
+            format!("runs/fig1/{model}/{tag}-metrics.csv"),
+            format!("runs/table1/{model}/{tag}-metrics.csv"),
+        ]
+        .into_iter()
+        .map(std::path::PathBuf::from)
+        .find(|p| p.exists());
+        if let Some(csv) = reuse {
+            println!("reusing {}", csv.display());
+            runs.push((mode.label(), sparse_rl::coordinator::Metrics::read_csv(&csv)?));
+            continue;
+        }
+        println!("\n-- training {} for {steps} steps --", mode.label());
+        let mut cfg = ExperimentConfig::new(&dir);
+        cfg.apply_cli(&args)?;
+        cfg.seed = seed;
+        cfg.mode = mode;
+        cfg.train.steps = steps;
+        cfg.out_dir = format!("runs/fig1/{model}").into();
+        let trainer = experiments::run_rl(&engine, cfg, base.clone(), 10)?;
+        experiments::save_run(&trainer, &tag)?;
+        runs.push((mode.label(), trainer.metrics));
+    }
+
+    println!("\n=== Figure 1: reward & grad-norm dynamics ({model}, {}) ===", method.name());
+    for (label, metrics) in &runs {
+        println!("\n[{label}]");
+        experiments::print_series(metrics, "reward", 12);
+        experiments::print_series(metrics, "grad_norm", 12);
+        experiments::print_series(metrics, "anomaly_rate", 12);
+        let peak = metrics
+            .series("reward")
+            .into_iter()
+            .filter(|v| !v.is_nan())
+            .fold(0.0f64, f64::max);
+        let tail = metrics.tail_mean("reward", steps / 5 + 1);
+        let spikes = metrics
+            .series("grad_norm")
+            .into_iter()
+            .filter(|v| *v > 5.0)
+            .count();
+        println!(
+            "  diagnosis: peak reward {peak:.3}, tail reward {tail:.3}, grad spikes(>5) {spikes}{}",
+            if tail < 0.6 * peak && peak > 0.05 { "  << COLLAPSE" } else { "" }
+        );
+    }
+    println!("\nCSV series in runs/fig1/{model}/");
+    Ok(())
+}
+
+/// Hunt for a compression-induced anomalous trajectory (Appendix F).
+fn show_anomaly(engine: &ModelEngine, params: &[f32], method: Method, seed: u64) -> Result<()> {
+    let m = &engine.manifest;
+    let sampling = sparse_rl::config::SamplingConfig {
+        temperature: 1.0,
+        top_p: 1.0,
+        max_response: m.config.max_seq - m.config.prompt_len,
+    };
+    let ro = RolloutEngine::new(engine, RolloutMode::NaiveSparse(method), sampling);
+    let mut rng = Rng::new(seed ^ 0xA40);
+    for round in 0..50 {
+        let tasks = benchmarks::training_split_ops(
+            m.shapes.decode_batch,
+            m.config.prompt_len,
+            seed + round,
+            3,
+            5,
+        );
+        let chunk: Vec<_> = tasks.iter().enumerate().map(|(i, t)| (i, t)).collect();
+        let seqs = ro.rollout_chunk(params, &chunk, &mut rng)?;
+        for (seq, t) in seqs.iter().zip(tasks.iter()) {
+            if task::looks_repetitive(&seq.response_ids, 5) && seq.accounting.compressions > 0 {
+                println!("== anomalous sparse rollout (Appendix F analog) ==");
+                println!("prompt:   {}", t.prompt_text);
+                println!("expected: {}", t.expr.chain_of_thought());
+                println!("got:      {}", tokenizer::decode_raw(&seq.response_ids));
+                println!(
+                    "({} compressions, finished={}, len={})",
+                    seq.accounting.compressions,
+                    seq.finished,
+                    seq.response_ids.len()
+                );
+                return Ok(());
+            }
+        }
+    }
+    println!("no repetitive anomaly found in 50 rounds (policy may be too strong/weak)");
+    Ok(())
+}

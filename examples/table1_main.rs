@@ -1,0 +1,139 @@
+//! Table 1 harness: main results over the 7 benchmarks.
+//!
+//! Rows per model scale: Base, GRPO-Dense, GRPO naive:<m>, +Sparse-RL:<m>
+//! for m in {R-KV, SnapKV}, with the Avg column and Toks.saving — the same
+//! row layout as the paper's Table 1.
+//!
+//!     cargo run --release --example table1_main -- \
+//!         [--models nano,tiny] [--rl-steps 40] [--eval-limit 30] [--seed 0]
+//!
+//! Full paper scale (4 models x 400 steps x full benchmarks) is the same
+//! command with --models nano,tiny,small,base --rl-steps 400
+//! --eval-limit 0; defaults are scaled down to run on this testbed
+//! (EXPERIMENTS.md records which setting produced the committed numbers).
+
+use anyhow::Result;
+
+use sparse_rl::config::{ExperimentConfig, RolloutMode};
+use sparse_rl::coordinator::EvalResult;
+use sparse_rl::experiments;
+use sparse_rl::runtime::{Method, ModelEngine, TrainState};
+use sparse_rl::util::cli::CliArgs;
+
+struct Row {
+    label: String,
+    accs: Vec<f64>,
+    avg: f64,
+    toks_saving: Option<f64>,
+}
+
+fn eval_row(
+    engine: &ModelEngine,
+    label: &str,
+    params: &[f32],
+    limit: usize,
+    seed: u64,
+    toks_saving: Option<f64>,
+) -> Result<Row> {
+    let (results, avg): (Vec<EvalResult>, f64) =
+        experiments::eval_checkpoint(engine, params, RolloutMode::Dense, limit, seed)?;
+    Ok(Row {
+        label: label.to_string(),
+        accs: results.iter().map(|r| r.accuracy).collect(),
+        avg,
+        toks_saving,
+    })
+}
+
+fn train_mode(
+    engine: &ModelEngine,
+    base: &TrainState,
+    mode: RolloutMode,
+    rl_steps: usize,
+    seed: u64,
+) -> Result<(TrainState, f64)> {
+    let mut cfg = ExperimentConfig::new(&engine.manifest.dir);
+    cfg.seed = seed;
+    cfg.mode = mode;
+    cfg.train.steps = rl_steps;
+    cfg.out_dir = format!("runs/table1/{}", engine.manifest.config.name).into();
+    let trainer = experiments::run_rl(engine, cfg, base.clone(), 0)?;
+    let saving = trainer.metrics.tail_mean("toks_saving", rl_steps.max(1));
+    experiments::save_run(&trainer, &mode.label().replace(':', "-"))?;
+    Ok((trainer.state, saving))
+}
+
+fn main() -> Result<()> {
+    let args = CliArgs::from_env();
+    let models: Vec<String> = args
+        .get("models", "nano,tiny".to_string())
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let rl_steps = args.get("rl-steps", 40usize);
+    let limit = args.get("eval-limit", 30usize);
+    let seed = args.get("seed", 0u64);
+    let methods = [Method::RKv, Method::SnapKv];
+
+    let suite = experiments::suite();
+    let names: Vec<&str> = suite.iter().map(|b| b.name).collect();
+
+    for model in &models {
+        let dir = experiments::find_artifacts(model)?;
+        let engine = ModelEngine::load(&dir)?;
+        let base = experiments::load_or_pretrain_base(
+            &engine,
+            experiments::default_pretrain_steps(model),
+            seed,
+        )?;
+
+        let mut rows: Vec<Row> = Vec::new();
+        rows.push(eval_row(&engine, "Base", &base.params, limit, seed, None)?);
+
+        let (dense_state, _) =
+            train_mode(&engine, &base, RolloutMode::Dense, rl_steps, seed)?;
+        rows.push(eval_row(&engine, "GRPO Dense", &dense_state.params, limit, seed, None)?);
+
+        for method in methods {
+            let (naive, _) =
+                train_mode(&engine, &base, RolloutMode::NaiveSparse(method), rl_steps, seed)?;
+            rows.push(eval_row(
+                &engine,
+                &format!("GRPO naive w/ {}", method.name()),
+                &naive.params,
+                limit,
+                seed,
+                None,
+            )?);
+            let (ours, saving) =
+                train_mode(&engine, &base, RolloutMode::SparseRl(method), rl_steps, seed)?;
+            rows.push(eval_row(
+                &engine,
+                &format!("+Sparse-RL w/ {}", method.name()),
+                &ours.params,
+                limit,
+                seed,
+                Some(saving),
+            )?);
+        }
+
+        // ---- print the table --------------------------------------------
+        println!("\n=== Table 1 ({model}) — rl_steps={rl_steps} eval_limit={limit} ===");
+        print!("{:<22}", "Rollout");
+        for n in &names {
+            print!(" {n:>8}");
+        }
+        println!(" {:>8} {:>10}", "Avg.", "Toks.sav");
+        for row in &rows {
+            print!("{:<22}", row.label);
+            for a in &row.accs {
+                print!(" {:>8.3}", a);
+            }
+            match row.toks_saving {
+                Some(s) => println!(" {:>8.3} {:>9.1}%", row.avg, 100.0 * s),
+                None => println!(" {:>8.3} {:>10}", row.avg, "-"),
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,267 @@
+"""AOT pipeline: lower every L2 entry point to HLO text + manifest.json.
+
+Interchange format is HLO **text**, NOT `.serialize()`: the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). All functions are lowered with
+`return_tuple=True` so the Rust side unwraps one tuple per call.
+
+Usage (from python/):
+    python -m compile.aot --preset tiny --out-dir ../artifacts
+    python -m compile.aot --preset small --budget 16 --out-dir ../artifacts
+
+Each build produces `artifacts/<preset>[-b<budget>]/` containing one
+`<entry>.hlo.txt` per entry point and a `manifest.json` describing every
+input/output tensor (name, dtype, dims), the flat parameter layout, and the
+model/rollout hyper-parameters — the Rust runtime binds against the
+manifest and never guesses shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import PRESETS, ModelConfig, RolloutShapes
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via StableHLO (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(dtype, *dims):
+    return jax.ShapeDtypeStruct(tuple(dims), dtype)
+
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def _dtype_name(d):
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(d)]
+
+
+class EntryBuilder:
+    """Collects (name, fn, arg specs, output names) and lowers them all."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = {}
+
+    def add(self, name, fn, args, arg_names, out_names):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = lowered.out_info
+        out_list = jax.tree_util.tree_leaves(outs)
+        self.entries[name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "dtype": _dtype_name(a.dtype), "dims": list(a.shape)}
+                for n, a in zip(arg_names, args)
+            ],
+            "outputs": [
+                {"name": n, "dtype": _dtype_name(o.dtype), "dims": list(o.shape)}
+                for n, o in zip(out_names, out_list)
+            ],
+        }
+        print(
+            f"  {name:<22s} {len(text)/1024:8.1f} KiB  {time.time()-t0:5.1f}s",
+            flush=True,
+        )
+
+
+def build(cfg: ModelConfig, shapes: RolloutShapes, out_dir: str,
+          methods=("rkv", "snapkv", "h2o", "streaming"), skip_train=False):
+    os.makedirs(out_dir, exist_ok=True)
+    layout = model.ParamLayout(cfg)
+    N = layout.total
+    L, H, Dh, V = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.vocab
+    P, T = cfg.prompt_len, cfg.max_seq
+    R, Btr = shapes.decode_batch, shapes.train_batch
+    Cd, Cs = cfg.max_seq, shapes.sparse_capacity
+    print(f"building {cfg.name}: params={N} ({N*4/1e6:.1f} MB) -> {out_dir}")
+
+    b = EntryBuilder(out_dir)
+
+    b.add(
+        "init_params",
+        functools.partial(model.init_params, cfg),
+        [_spec(I32)],
+        ["seed"],
+        ["params"],
+    )
+
+    cache_outs = ["kv", "stats_cum", "stats_win", "birth"]
+    for variant, C in (("dense", Cd), ("sparse", Cs)):
+        def prefill_fn(params, ids, lens, C=C):
+            p = model.ParamLayout(cfg).unflatten(params)
+            return model.prefill(cfg, p, ids, lens, capacity=C)
+
+        b.add(
+            f"prefill_{variant}",
+            prefill_fn,
+            [_spec(F32, N), _spec(I32, R, P), _spec(I32, R)],
+            ["params", "ids", "lens"],
+            cache_outs + ["logp_last"],
+        )
+
+        def decode_fn(params, kv, sc, sw, birth, lens, pos, token):
+            p = model.ParamLayout(cfg).unflatten(params)
+            return model.decode_step(cfg, p, kv, sc, sw, birth, lens, pos, token)
+
+        b.add(
+            f"decode_{variant}",
+            decode_fn,
+            [
+                _spec(F32, N),
+                _spec(F32, L, 2, R, H, C, Dh),
+                _spec(F32, L, R, H, C),
+                _spec(F32, L, R, H, C),
+                _spec(I32, L, R, H, C),
+                _spec(I32, R),
+                _spec(I32, R),
+                _spec(I32, R),
+            ],
+            ["params", "kv", "stats_cum", "stats_win", "birth", "lens", "pos", "token"],
+            ["logp"] + cache_outs,
+        )
+
+    for method in methods:
+        b.add(
+            f"compress_{method}",
+            functools.partial(model.compress_step, method=method, shapes=shapes),
+            [
+                _spec(F32, L, 2, R, H, Cs, Dh),
+                _spec(F32, L, R, H, Cs),
+                _spec(F32, L, R, H, Cs),
+                _spec(I32, L, R, H, Cs),
+                _spec(F32, R),
+            ],
+            ["kv", "stats_cum", "stats_win", "birth", "do"],
+            cache_outs,
+        )
+
+    def score_fn(params, ids, lens):
+        p = model.ParamLayout(cfg).unflatten(params)
+        return model.token_logprobs(cfg, p, ids, lens)
+
+    b.add(
+        "score",
+        score_fn,
+        [_spec(F32, N), _spec(I32, Btr, T), _spec(I32, Btr)],
+        ["params", "ids", "lens"],
+        ["logp", "entropy"],
+    )
+
+    if not skip_train:
+        b.add(
+            "train",
+            functools.partial(model.train_step, cfg),
+            [
+                _spec(F32, N), _spec(F32, N), _spec(F32, N), _spec(I32),
+                _spec(I32, Btr, T), _spec(F32, Btr, T), _spec(I32, Btr),
+                _spec(F32, Btr), _spec(F32, Btr, T), _spec(F32, Btr),
+                _spec(F32, Btr, T), _spec(F32, 4),
+            ],
+            ["params", "m", "v", "step", "ids", "loss_mask", "lens", "adv",
+             "xi", "mrs", "logp_old", "hyp"],
+            ["params", "m", "v", "step", "loss", "grad_norm", "clip_frac",
+             "entropy", "kl"],
+        )
+
+        b.add(
+            "lm",
+            functools.partial(model.lm_step, cfg),
+            [
+                _spec(F32, N), _spec(F32, N), _spec(F32, N), _spec(I32),
+                _spec(I32, Btr, T), _spec(F32, Btr, T), _spec(I32, Btr),
+                _spec(F32, 4),
+            ],
+            ["params", "m", "v", "step", "ids", "mask", "lens", "hyp"],
+            ["params", "m", "v", "step", "loss"],
+        )
+
+    manifest = {
+        "config": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "d_head": cfg.d_head,
+            "max_seq": cfg.max_seq,
+            "prompt_len": cfg.prompt_len,
+            "n_params": N,
+        },
+        "shapes": {
+            "decode_batch": R,
+            "train_batch": Btr,
+            "budget": shapes.budget,
+            "buffer": shapes.buffer,
+            "alpha": shapes.alpha,
+            "lam": shapes.lam,
+            "sinks": shapes.sinks,
+            "sparse_capacity": Cs,
+            "dense_capacity": Cd,
+        },
+        "params": layout.manifest(),
+        "entries": b.entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  manifest.json           {len(b.entries)} entries")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--budget", type=int, default=32)
+    ap.add_argument("--buffer", type=int, default=16)
+    ap.add_argument("--alpha", type=int, default=4)
+    ap.add_argument("--lam", type=float, default=0.1)
+    ap.add_argument("--decode-batch", type=int, default=16)
+    ap.add_argument("--train-batch", type=int, default=16)
+    ap.add_argument("--methods", default="rkv,snapkv,h2o,streaming")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="skip train/lm artifacts (eval-only builds)")
+    ap.add_argument("--tag", default="",
+                    help="directory suffix (default: -b<budget> if != 32)")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    shapes = RolloutShapes(
+        decode_batch=args.decode_batch,
+        train_batch=args.train_batch,
+        budget=args.budget,
+        buffer=args.buffer,
+        alpha=args.alpha,
+        lam=args.lam,
+    )
+    tag = args.tag or (f"-b{args.budget}" if args.budget != 32 else "")
+    out_dir = os.path.join(args.out_dir, cfg.name + tag)
+    t0 = time.time()
+    build(cfg, shapes, out_dir, methods=args.methods.split(","),
+          skip_train=args.skip_train)
+    print(f"done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

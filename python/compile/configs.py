@@ -1,0 +1,66 @@
+"""Model/scale presets shared by the AOT pipeline and pytest.
+
+The paper trains Llama-3.2-1B / Qwen2.5-1.5B/3B/7B; we map those to four
+from-scratch scale points (DESIGN.md §5) plus an `e2e` config for the
+end-to-end driver. The Rust side never imports this — it binds artifacts
+through `manifest.json`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer hyper-parameters.
+
+    Attributes mirror the fields serialized into the artifact manifest.
+    """
+
+    name: str
+    vocab: int = 32
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 0  # 0 -> 8/3 * d_model rounded to a multiple of 16 (SwiGLU)
+    max_seq: int = 208  # prompt (48) + response (160)
+    prompt_len: int = 48
+
+    def __post_init__(self):
+        if self.d_ff == 0:
+            ff = int(self.d_model * 8 / 3)
+            ff = ((ff + 15) // 16) * 16
+            object.__setattr__(self, "d_ff", ff)
+        assert self.d_model % self.n_heads == 0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Paper-model analogs (DESIGN.md §5 scale mapping).
+PRESETS = {
+    "nano": ModelConfig("nano", d_model=64, n_layers=2, n_heads=2),
+    "tiny": ModelConfig("tiny", d_model=128, n_layers=4, n_heads=4),
+    "small": ModelConfig("small", d_model=192, n_layers=6, n_heads=6),
+    "base": ModelConfig("base", d_model=256, n_layers=8, n_heads=8),
+    "e2e": ModelConfig("e2e", d_model=768, n_layers=12, n_heads=12),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RolloutShapes:
+    """Static shapes an artifact set is specialized for."""
+
+    decode_batch: int = 16  # rollout slots per decode dispatch
+    train_batch: int = 16  # sequences per train_step
+    budget: int = 32  # retained KV tokens after compression (paper: 512)
+    buffer: int = 16  # fresh tokens between compressions (paper: 128)
+    alpha: int = 4  # always-retained observation tokens (paper: 8)
+    lam: float = 0.1  # R-KV importance/redundancy trade-off
+    sinks: int = 2  # StreamingLLM attention sinks
+
+    @property
+    def sparse_capacity(self) -> int:
+        return self.budget + self.buffer

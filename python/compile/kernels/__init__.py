@@ -1,0 +1,5 @@
+"""L1: Pallas kernels for the rollout hot-spot (decode attention with fused
+compression statistics, prefill attention, R-KV redundancy scoring) plus
+their pure-jnp oracles (ref)."""
+
+from . import attention, compress, ref  # noqa: F401

@@ -1,0 +1,171 @@
+"""Pallas attention kernels — the rollout hot-spot (L1).
+
+Two kernels:
+
+* ``decode_attention`` — single-query attention over a fixed-capacity KV
+  cache. One grid cell per (batch, head); the whole per-head cache is a
+  single VMEM-resident block (the Sparse-RL insight: with a token budget B
+  the cache *fits on-chip*, so decode attention needs no HBM streaming —
+  see DESIGN.md §Hardware-Adaptation). The kernel also emits the attention
+  probabilities per cache slot, which the compression scorers (H2O
+  cumulative mass, SnapKV observation window) accumulate — fused, so the
+  cache is read exactly once per step.
+
+* ``prefill_attention`` — causal self-attention over the (padded) prompt,
+  emitting the column-sum attention-mass statistic that seeds the decode
+  stats. Wrapped in ``jax.custom_vjp`` with the reference VJP so the same
+  Pallas forward is usable inside the differentiated training graph.
+
+All kernels run with ``interpret=True``: the image's CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers the kernel body to
+plain HLO so the AOT artifact runs at native XLA-CPU speed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = ref.NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, p_ref, *, scale):
+    """Per-(batch, head) block: q [D], k/v [C, D], m [C] -> o [D], p [C]."""
+    q = q_ref[...]
+    k = k_ref[...]
+    s = jnp.dot(k, q) * scale + m_ref[...]
+    s = s - jnp.max(s)
+    e = jnp.exp(s)
+    p = e / jnp.sum(e)
+    o_ref[...] = jnp.dot(p, v_ref[...])
+    p_ref[...] = p
+
+
+def decode_attention(q, k, v, mask):
+    """Single-query attention over the KV cache (Pallas, interpret mode).
+
+    Args:
+      q:    [B, H, D]    current-token query.
+      k, v: [B, H, C, D] cached keys / values (C = cache capacity; for the
+                         sparse path C = budget + buffer and the whole block
+                         is VMEM-resident).
+      mask: [B, C]       additive validity mask (0 valid / NEG_INF empty).
+
+    Returns:
+      out:   [B, H, D]
+      probs: [B, H, C] attention probability mass per cache slot.
+    """
+    B, H, D = q.shape
+    C = k.shape[2]
+    scale = 1.0 / (D**0.5)
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    out, probs = pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((None, None, D), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((None, None, C, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, C, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, C), lambda b, h: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, D), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((None, None, C), lambda b, h: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, C), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, mask)
+    return out, probs
+
+
+# ---------------------------------------------------------------------------
+# prefill attention
+# ---------------------------------------------------------------------------
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, qm_ref, km_ref, o_ref, c_ref, *, scale):
+    """Per-(batch, head) block: q/k/v [T, D], qm/km [T] -> o [T, D], c [T]."""
+    q = q_ref[...]
+    k = k_ref[...]
+    T = q.shape[0]
+    s = jnp.dot(q, k.T) * scale
+    row = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    causal = jnp.where(row >= col, 0.0, NEG_INF).astype(s.dtype)
+    s = s + causal + km_ref[...][None, :]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v_ref[...])
+    c_ref[...] = jnp.sum(p * qm_ref[...][:, None], axis=0)
+
+
+def _prefill_pallas(q, k, v, qmask, kmask):
+    B, H, T, D = q.shape
+    scale = 1.0 / (D**0.5)
+    kernel = functools.partial(_prefill_kernel, scale=scale)
+    out, colsum = pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((None, None, T, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, T, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, T, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, T), lambda b, h: (b, 0)),
+            pl.BlockSpec((None, T), lambda b, h: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, T, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, T), lambda b, h: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, T), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, qmask, kmask)
+    return out, colsum
+
+
+@jax.custom_vjp
+def prefill_attention(q, k, v, qmask, kmask):
+    """Causal attention with attention-mass statistics (Pallas forward).
+
+    Args:
+      q, k, v: [B, H, T, D]
+      qmask:   [B, T] 1.0 at real query positions (weights the statistic).
+      kmask:   [B, T] additive key-validity mask (0 / NEG_INF).
+
+    Returns:
+      out:    [B, H, T, D]
+      colsum: [B, H, T] per-slot cumulative attention mass.
+
+    Differentiable: the backward pass is the VJP of the pure-jnp reference,
+    which computes the identical function, so gradients are exact.
+    """
+    return _prefill_pallas(q, k, v, qmask, kmask)
+
+
+def _prefill_fwd(q, k, v, qmask, kmask):
+    return _prefill_pallas(q, k, v, qmask, kmask), (q, k, v, qmask, kmask)
+
+
+def _prefill_bwd(res, cts):
+    _, vjp = jax.vjp(ref.prefill_attention_ref, *res)
+    return vjp(cts)
+
+
+prefill_attention.defvjp(_prefill_fwd, _prefill_bwd)

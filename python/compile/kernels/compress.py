@@ -1,0 +1,151 @@
+"""Pallas KV-compression scoring kernel + jnp selection machinery (L1).
+
+The compression operator M(.) of the paper (Eq. 2) is a *selection* of
+which cache slots to retain. All four supported methods reduce to:
+
+    score each occupied slot  ->  force-keep the alpha most recent slots
+    ->  top-k(budget)  ->  compact the cache.
+
+The only compute-heavy part is R-KV's redundancy statistic (pairwise key
+cosine similarities, O(C^2 D) per head) — that is the Pallas kernel here.
+SnapKV / H2O scores are statistics already accumulated by the fused decode
+kernel (observation-window / cumulative attention mass), and StreamingLLM
+is purely positional; their selection shares `select_topk` below, which
+stays in jnp (top_k + gather lower to tight HLO already).
+
+Methods (paper §2, Appendix A):
+  * R-KV (Cai et al., 2025):   lam * norm(importance) - (1-lam) * norm(redundancy)
+  * SnapKV (Li et al., 2024):  attention mass from the observation window
+  * H2O (Zhang et al., 2023):  cumulative attention mass (heavy hitters)
+  * StreamingLLM (Xiao 2023):  attention sinks + most recent window
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = ref.NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# R-KV score kernel
+# ---------------------------------------------------------------------------
+
+
+def _rkv_kernel(k_ref, imp_ref, val_ref, s_ref, *, lam):
+    """Per-group block: keys [C, D], imp [C], valid [C] -> score [C]."""
+    keys = k_ref[...]
+    valid = val_ref[...]
+    C = keys.shape[0]
+
+    norm = jnp.sqrt(jnp.sum(keys * keys, axis=-1, keepdims=True))
+    khat = keys / jnp.maximum(norm, 1e-6)
+    sim = jnp.dot(khat, khat.T)  # [C, C]
+    row = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    offdiag = jnp.where(row != col, 1.0, 0.0).astype(keys.dtype)
+    pair_valid = valid[:, None] * valid[None, :] * offdiag
+    ssum = jnp.sum(sim * pair_valid, axis=-1)
+    cnt = jnp.sum(pair_valid, axis=-1)
+    red = jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1.0), 0.0) * valid
+
+    def mmnorm(x):
+        big = 1e30
+        lo = jnp.min(jnp.where(valid > 0, x, big))
+        hi = jnp.max(jnp.where(valid > 0, x, -big))
+        rng = hi - lo
+        normed = jnp.where(rng > 1e-12, (x - lo) / jnp.maximum(rng, 1e-12), 0.5)
+        return jnp.clip(normed, 0.0, 1.0) * valid
+
+    score = (lam * mmnorm(imp_ref[...]) - (1.0 - lam) * mmnorm(red)) * valid
+    # Push invalid slots far below any valid score so top-k never picks them.
+    s_ref[...] = score - (1.0 - valid)
+
+
+def rkv_scores(keys, imp, valid, lam):
+    """R-KV selection scores (Pallas, interpret mode).
+
+    Args:
+      keys:  [G, C, D] cached keys, G = layers*batch*heads flattened.
+      imp:   [G, C]    importance statistic (cumulative attention mass).
+      valid: [G, C]    slot occupancy (1.0 / 0.0).
+      lam:   python float trade-off (paper: 0.1).
+
+    Returns:
+      score: [G, C]; invalid slots are pushed to <= -1 so top-k skips them.
+    """
+    G, C, D = keys.shape
+    kernel = functools.partial(_rkv_kernel, lam=lam)
+    return pl.pallas_call(
+        kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((None, C, D), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, C), lambda g: (g, 0)),
+            pl.BlockSpec((None, C), lambda g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, C), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, C), keys.dtype),
+        interpret=True,
+    )(keys, imp, valid)
+
+
+# ---------------------------------------------------------------------------
+# shared selection machinery (jnp — lowers to top_k + gather)
+# ---------------------------------------------------------------------------
+
+
+def select_topk(score, birth, valid, budget, alpha):
+    """Pick `budget` slots per group: force-keep the `alpha` most recently
+    written valid slots (observation tokens, paper Appendix A), fill the
+    rest by descending score. Returns indices sorted by birth position so
+    the compacted cache preserves generation order.
+
+    Args:
+      score: [G, C] method score (invalid slots must already be < valid ones).
+      birth: [G, C] int32 absolute position at which each slot was written
+             (-1 for empty slots).
+      valid: [G, C] occupancy.
+      budget, alpha: python ints.
+
+    Returns:
+      idx:  [G, budget] int32 slot indices to retain.
+      keep: [G, C] 1.0 where the slot was retained.
+    """
+    C = score.shape[-1]
+    # NOTE: no jax.lax.top_k here — it lowers to the `topk` HLO instruction
+    # which the image's xla_extension 0.5.1 text parser rejects. Sort-based
+    # selection lowers to the classic `sort` op instead.
+    # Rank slots by recency: the alpha highest birth positions get +BIG.
+    recency = jnp.where(valid > 0, birth, -(2**30))
+    rec_sorted = jnp.sort(recency, axis=-1)  # ascending
+    k = min(alpha, C)
+    thresh = rec_sorted[..., C - k : C - k + 1]
+    force = (recency >= thresh) & (valid > 0)
+    sel_score = jnp.where(force, 1e6 + birth.astype(score.dtype), score)
+    order_by_score = jnp.argsort(sel_score, axis=-1)  # ascending
+    idx = order_by_score[..., C - budget :]
+    # Stable order: sort retained indices by birth position (ascending).
+    b_at = jnp.take_along_axis(birth, idx, axis=-1)
+    order = jnp.argsort(b_at, axis=-1)
+    idx = jnp.take_along_axis(idx, order, axis=-1).astype(jnp.int32)
+    keep = jnp.zeros_like(score).at[
+        jnp.arange(score.shape[0])[:, None], idx
+    ].set(1.0)
+    return idx, keep
+
+
+def streaming_scores(birth, valid, sinks):
+    """StreamingLLM scores: attention sinks (the `sinks` oldest positions)
+    and recent tokens win; middle tokens lose. Recency handled by the
+    force-keep in select_topk plus monotone birth score here."""
+    is_sink = (birth >= 0) & (birth < sinks)
+    base = birth.astype(jnp.float32) * 1e-3  # newer slightly better
+    score = jnp.where(is_sink, 1e3, base)
+    return jnp.where(valid > 0, score, NEG_INF)

@@ -1,0 +1,130 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an exact (up to float tolerance) reference
+implementation here. These are the CORE correctness signal: pytest sweeps
+shapes with hypothesis-style random cases and asserts allclose between the
+Pallas kernels (interpret=True) and these functions.
+
+They are also used as the *backward* rule for the differentiable attention
+wrapper (see attention.py): the Pallas forward is paired with the VJP of the
+reference, which is mathematically the same function.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def decode_attention_ref(q, k, v, mask):
+    """Single-query attention over a fixed-capacity KV cache.
+
+    Args:
+      q:    [B, H, D]    query for the current token.
+      k:    [B, H, C, D] cached keys (C = cache capacity).
+      v:    [B, H, C, D] cached values.
+      mask: [B, C]       additive validity mask (0 for valid, NEG_INF for
+                         empty/evicted slots).
+
+    Returns:
+      out:   [B, H, D]   attention output.
+      probs: [B, H, C]   attention probabilities per cache slot (consumed by
+                         the compression scorers: H2O/SnapKV statistics).
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    s = jnp.einsum("bhd,bhcd->bhc", q, k) * scale + mask[:, None, :]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("bhc,bhcd->bhd", p, v)
+    return out, p
+
+
+def prefill_attention_ref(q, k, v, qmask, kmask):
+    """Causal self-attention over a full (padded) sequence, with the
+    per-slot attention-mass statistic needed to seed compression stats.
+
+    Args:
+      q, k, v: [B, H, T, D]
+      qmask:   [B, T] 1.0 for real query positions, 0.0 for padding.
+      kmask:   [B, T] additive mask for key positions (0 valid / NEG_INF).
+
+    Returns:
+      out:    [B, H, T, D] attention output (garbage at padded queries —
+              callers mask downstream).
+      colsum: [B, H, T]    sum over *valid* query rows of the attention
+              probability assigned to each key slot (cumulative attention
+              mass, the H2O statistic seeding the decode-time stats).
+    """
+    T = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    s = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    causal = jnp.where(
+        jnp.arange(T)[:, None] >= jnp.arange(T)[None, :], 0.0, NEG_INF
+    ).astype(q.dtype)
+    s = s + causal[None, None, :, :] + kmask[:, None, None, :]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("bhts,bhsd->bhtd", p, v)
+    colsum = jnp.einsum("bhts,bt->bhs", p, qmask.astype(q.dtype))
+    return out, colsum
+
+
+def redundancy_scores_ref(keys, valid):
+    """Mean cosine similarity of each cached key against the other valid
+    cached keys — the R-KV redundancy statistic. Tokens that sit in dense
+    similarity clusters (repeated/redundant reasoning) score high.
+
+    Args:
+      keys:  [G, C, D] cached keys (G = flattened layer*batch*head groups).
+      valid: [G, C]    1.0 for occupied slots, 0.0 otherwise.
+
+    Returns:
+      red: [G, C] mean pairwise cosine similarity (0 where invalid or fewer
+           than 2 valid slots).
+    """
+    norm = jnp.sqrt(jnp.sum(keys * keys, axis=-1, keepdims=True))
+    khat = keys / jnp.maximum(norm, 1e-6)
+    sim = jnp.einsum("gcd,ged->gce", khat, khat)
+    C = keys.shape[-2]
+    eye = jnp.eye(C, dtype=keys.dtype)
+    pair_valid = valid[..., :, None] * valid[..., None, :] * (1.0 - eye)
+    ssum = jnp.sum(sim * pair_valid, axis=-1)
+    cnt = jnp.sum(pair_valid, axis=-1)
+    red = jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1.0), 0.0)
+    return red * valid
+
+
+def minmax_normalize_ref(x, valid):
+    """Min-max normalize x to [0, 1] over the valid slots of the last axis.
+
+    Invalid slots map to 0. Degenerate (constant) ranges map to 0.5 so that
+    neither importance nor redundancy dominates spuriously.
+    """
+    big = 1e30
+    lo = jnp.min(jnp.where(valid > 0, x, big), axis=-1, keepdims=True)
+    hi = jnp.max(jnp.where(valid > 0, x, -big), axis=-1, keepdims=True)
+    rng = hi - lo
+    normed = jnp.where(rng > 1e-12, (x - lo) / jnp.maximum(rng, 1e-12), 0.5)
+    return jnp.clip(normed, 0.0, 1.0) * valid
+
+
+def rkv_scores_ref(keys, imp, valid, lam):
+    """R-KV selection score: lam * importance - (1 - lam) * redundancy,
+    both min-max normalized over valid slots (Cai et al., 2025).
+
+    Args:
+      keys:  [G, C, D] cached keys.
+      imp:   [G, C]    importance statistic (cumulative attention mass).
+      valid: [G, C]    slot validity.
+      lam:   scalar trade-off (paper: 0.1).
+
+    Returns:
+      score: [G, C] selection score; higher = keep.
+    """
+    red = redundancy_scores_ref(keys, valid)
+    imp_n = minmax_normalize_ref(imp, valid)
+    red_n = minmax_normalize_ref(red, valid)
+    return (lam * imp_n - (1.0 - lam) * red_n) * valid - (1.0 - valid)

@@ -1,0 +1,487 @@
+"""L2: the JAX model — transformer LM forward/backward + RL training step.
+
+Every function here is an AOT entry point (lowered to HLO text by aot.py)
+or a building block of one. The rollout-path functions (prefill, decode,
+compress) call the L1 Pallas kernels so the kernels lower into the same
+HLO artifact the Rust coordinator executes.
+
+Parameter handling: all weights live in ONE flat f32 vector. The layout is
+computed deterministically from the ModelConfig (see `ParamLayout`) and
+recorded in the artifact manifest, so the Rust side moves exactly one
+buffer per call and never needs to know tensor names.
+
+Policy triangle implemented here (paper §3):
+  * π_sparse — `decode` over the compressed cache (sampler),
+  * π_old    — `score_tokens` dense teacher forcing with θ_old (scorer),
+  * π_θ      — `train_step` recomputes log-probs with the learner weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, RolloutShapes
+from .kernels import attention, compress
+from .kernels.ref import NEG_INF
+
+# ---------------------------------------------------------------------------
+# parameter layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamEntry:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+class ParamLayout:
+    """Deterministic flat layout of all model weights.
+
+    Order: tok_emb, pos_emb, per-layer (ln1, wq, wk, wv, wo, ln2, w1, w3,
+    w2), final ln. The output projection is tied to tok_emb.
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_seq
+        entries: List[ParamEntry] = []
+        off = 0
+
+        def add(name, shape):
+            nonlocal off
+            e = ParamEntry(name, tuple(shape), off)
+            entries.append(e)
+            off += e.size
+
+        add("tok_emb", (v, d))
+        add("pos_emb", (s, d))
+        for i in range(cfg.n_layers):
+            add(f"l{i}.ln1", (d,))
+            add(f"l{i}.wq", (d, d))
+            add(f"l{i}.wk", (d, d))
+            add(f"l{i}.wv", (d, d))
+            add(f"l{i}.wo", (d, d))
+            add(f"l{i}.ln2", (d,))
+            add(f"l{i}.w1", (d, f))
+            add(f"l{i}.w3", (d, f))
+            add(f"l{i}.w2", (f, d))
+        add("ln_f", (d,))
+        self.entries = entries
+        self.total = off
+        self._by_name = {e.name: e for e in entries}
+
+    def slice(self, flat: jnp.ndarray, name: str) -> jnp.ndarray:
+        e = self._by_name[name]
+        return jax.lax.dynamic_slice(flat, (e.offset,), (e.size,)).reshape(e.shape)
+
+    def unflatten(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        return {e.name: self.slice(flat, e.name) for e in self.entries}
+
+    def manifest(self) -> list:
+        return [
+            {"name": e.name, "shape": list(e.shape), "offset": e.offset, "size": e.size}
+            for e in self.entries
+        ]
+
+
+def init_params(cfg: ModelConfig, seed: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic init from an i32 seed: N(0, 0.02), residual-output
+    projections (wo, w2) scaled by 1/sqrt(2 * n_layers), ln scales = 1."""
+    layout = ParamLayout(cfg)
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    for i, e in enumerate(layout.entries):
+        k = jax.random.fold_in(key, i)
+        if e.name.endswith("ln1") or e.name.endswith("ln2") or e.name == "ln_f":
+            parts.append(jnp.ones((e.size,), jnp.float32))
+        else:
+            w = jax.random.normal(k, (e.size,), jnp.float32) * 0.02
+            if e.name.endswith(".wo") or e.name.endswith(".w2"):
+                w = w * resid_scale
+            parts.append(w)
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# shared blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * scale
+
+
+def swiglu(x, w1, w3, w2):
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def _split_heads(x, n_heads):
+    # [..., D] -> [B, H, ..., Dh]; works for [B, D] and [B, T, D]
+    *lead, d = x.shape
+    dh = d // n_heads
+    x = x.reshape(*lead, n_heads, dh)
+    if len(lead) == 1:  # [B, H, Dh]
+        return x
+    return x.transpose(0, 2, 1, 3)  # [B, H, T, Dh]
+
+
+def _merge_heads(x):
+    if x.ndim == 3:  # [B, H, Dh]
+        b, h, dh = x.shape
+        return x.reshape(b, h * dh)
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (training / scoring path)
+# ---------------------------------------------------------------------------
+
+
+def forward_full(cfg: ModelConfig, p: Dict[str, jnp.ndarray], ids, lens):
+    """Causal forward over a padded batch.
+
+    Args:
+      ids:  [B, T] int32 token ids (right-padded).
+      lens: [B]    int32 valid lengths.
+
+    Returns:
+      logits: [B, T, V]
+    """
+    B, T = ids.shape
+    pos = jnp.arange(T, dtype=jnp.int32)
+    x = p["tok_emb"][ids] + p["pos_emb"][pos][None, :, :]
+    qmask = (pos[None, :] < lens[:, None]).astype(jnp.float32)
+    kmask = jnp.where(qmask > 0, 0.0, NEG_INF).astype(jnp.float32)
+    for i in range(cfg.n_layers):
+        h = rms_norm(x, p[f"l{i}.ln1"])
+        q = _split_heads(h @ p[f"l{i}.wq"], cfg.n_heads)
+        k = _split_heads(h @ p[f"l{i}.wk"], cfg.n_heads)
+        v = _split_heads(h @ p[f"l{i}.wv"], cfg.n_heads)
+        att, _ = attention.prefill_attention(q, k, v, qmask, kmask)
+        x = x + _merge_heads(att) @ p[f"l{i}.wo"]
+        h2 = rms_norm(x, p[f"l{i}.ln2"])
+        x = x + swiglu(h2, p[f"l{i}.w1"], p[f"l{i}.w3"], p[f"l{i}.w2"])
+    x = rms_norm(x, p["ln_f"])
+    return x @ p["tok_emb"].T
+
+
+def token_logprobs(cfg: ModelConfig, p, ids, lens):
+    """Per-token log-probs + entropies under teacher forcing.
+
+    Returns:
+      logp: [B, T] log π(ids[t] | ids[<t]); position 0 is 0.
+      ent:  [B, T] entropy of the predictive distribution *for* position t
+            (i.e. computed from context < t); position 0 is 0.
+    """
+    logits = forward_full(cfg, p, ids, lens)
+    logall = jax.nn.log_softmax(logits, axis=-1)  # [B, T, V]
+    pred = jnp.take_along_axis(
+        logall[:, :-1, :], ids[:, 1:, None], axis=-1
+    )[..., 0]  # [B, T-1]
+    logp = jnp.pad(pred, ((0, 0), (1, 0)))
+    probs = jnp.exp(logall)
+    ent_src = -jnp.sum(probs * logall, axis=-1)  # [B, T] at context position
+    ent = jnp.pad(ent_src[:, :-1], ((0, 0), (1, 0)))
+    return logp, ent
+
+
+# ---------------------------------------------------------------------------
+# rollout path: prefill / decode / compress
+# ---------------------------------------------------------------------------
+#
+# Cache state (all fixed-shape, device-resident across the whole rollout):
+#   kv        [L, 2, B, H, C, Dh] keys (index 0) and values (index 1)
+#   stats_cum [L, B, H, C]  cumulative attention mass   (H2O importance)
+#   stats_win [L, B, H, C]  mass since last compression (SnapKV window)
+#   birth     [L, B, H, C]  absolute position written in each slot, -1 empty
+#
+# Slot occupancy is uniform across layers/heads (compaction always leaves
+# exactly `budget` slots, appends are lockstep), so a single per-sequence
+# `lens` vector tracks the number of occupied slots.
+
+
+def prefill(cfg: ModelConfig, p, ids, lens, capacity: int):
+    """Run the prompt through the model, building the KV cache.
+
+    Args:
+      ids:  [B, P] right-padded prompt tokens.
+      lens: [B] prompt lengths.
+      capacity: cache capacity C >= P.
+
+    Returns:
+      (kv, stats_cum, stats_win, birth, logp_last [B, V])
+    """
+    B, P = ids.shape
+    L, H, Dh, C = cfg.n_layers, cfg.n_heads, cfg.d_head, capacity
+    pos = jnp.arange(P, dtype=jnp.int32)
+    x = p["tok_emb"][ids] + p["pos_emb"][pos][None, :, :]
+    qmask = (pos[None, :] < lens[:, None]).astype(jnp.float32)
+    kmask = jnp.where(qmask > 0, 0.0, NEG_INF).astype(jnp.float32)
+
+    kv = jnp.zeros((L, 2, B, H, C, Dh), jnp.float32)
+    stats = jnp.zeros((L, B, H, C), jnp.float32)
+    pad_c = C - P
+    for i in range(cfg.n_layers):
+        h = rms_norm(x, p[f"l{i}.ln1"])
+        q = _split_heads(h @ p[f"l{i}.wq"], cfg.n_heads)
+        k = _split_heads(h @ p[f"l{i}.wk"], cfg.n_heads)
+        v = _split_heads(h @ p[f"l{i}.wv"], cfg.n_heads)
+        att, colsum = attention.prefill_attention(q, k, v, qmask, kmask)
+        # zero out padded-slot K/V so evicted/pad slots hold zeros
+        kpad = k * qmask[:, None, :, None]
+        vpad = v * qmask[:, None, :, None]
+        kv = kv.at[i, 0, :, :, :P, :].set(kpad)
+        kv = kv.at[i, 1, :, :, :P, :].set(vpad)
+        stats = stats.at[i, :, :, :P].set(colsum * qmask[:, None, :])
+        x = x + _merge_heads(att) @ p[f"l{i}.wo"]
+        h2 = rms_norm(x, p[f"l{i}.ln2"])
+        x = x + swiglu(h2, p[f"l{i}.w1"], p[f"l{i}.w3"], p[f"l{i}.w2"])
+    x = rms_norm(x, p["ln_f"])
+    logits = x @ p["tok_emb"].T  # [B, P, V]
+    last = jnp.take_along_axis(
+        logits, (lens - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0, :]
+    logp_last = jax.nn.log_softmax(last, axis=-1)
+
+    occupied = (pos[None, :] < lens[:, None])
+    birth_row = jnp.where(occupied, pos[None, :], -1).astype(jnp.int32)
+    birth_row = jnp.pad(birth_row, ((0, 0), (0, pad_c)), constant_values=-1)
+    birth = jnp.broadcast_to(birth_row[None, :, None, :], (L, B, H, C))
+    return kv, stats, stats, birth, logp_last
+
+
+def decode_step(cfg: ModelConfig, p, kv, stats_cum, stats_win, birth, lens, pos, token):
+    """One autoregressive step over the (possibly compressed) cache.
+
+    Args:
+      kv/stats_cum/stats_win/birth: cache state (see module comment).
+      lens:  [B] i32 number of occupied slots (the write index).
+      pos:   [B] i32 absolute position of `token` in the sequence.
+      token: [B] i32 token to feed.
+
+    Returns:
+      (logp [B, V], kv', stats_cum', stats_win', birth')
+    """
+    L, _, B, H, C, Dh = kv.shape
+    x = p["tok_emb"][token] + p["pos_emb"][pos]  # [B, D]
+    slot_oh = jax.nn.one_hot(lens, C, dtype=jnp.float32)  # [B, C]
+    for i in range(cfg.n_layers):
+        h = rms_norm(x, p[f"l{i}.ln1"])
+        q = _split_heads(h @ p[f"l{i}.wq"], cfg.n_heads)  # [B, H, Dh]
+        k = _split_heads(h @ p[f"l{i}.wk"], cfg.n_heads)
+        v = _split_heads(h @ p[f"l{i}.wv"], cfg.n_heads)
+        # scatter the new K/V into slot lens[b]
+        kv = kv.at[i, 0].add(slot_oh[:, None, :, None] * k[:, :, None, :])
+        kv = kv.at[i, 1].add(slot_oh[:, None, :, None] * v[:, :, None, :])
+        valid = (jnp.arange(C, dtype=jnp.int32)[None, :] <= lens[:, None])
+        mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+        att, probs = attention.decode_attention(q, kv[i, 0], kv[i, 1], mask)
+        stats_cum = stats_cum.at[i].add(probs)
+        stats_win = stats_win.at[i].add(probs)
+        x = x + _merge_heads(att) @ p[f"l{i}.wo"]
+        h2 = rms_norm(x, p[f"l{i}.ln2"])
+        x = x + swiglu(h2, p[f"l{i}.w1"], p[f"l{i}.w3"], p[f"l{i}.w2"])
+    birth = birth + (
+        slot_oh.astype(jnp.int32)[None, :, None, :]
+        * (pos[None, :, None, None] + 1)
+    )  # birth was -1: -1 + (pos+1) = pos
+    x = rms_norm(x, p["ln_f"])
+    logits = x @ p["tok_emb"].T
+    return jax.nn.log_softmax(logits, axis=-1), kv, stats_cum, stats_win, birth
+
+
+def compress_step(
+    kv, stats_cum, stats_win, birth, do, method: str, shapes: RolloutShapes
+):
+    """Compact each sequence's cache to `budget` slots (where do[b] = 1).
+
+    The method determines the per-slot score; selection (force-keep the
+    alpha most recent + top-k by score, order-preserving compaction) is
+    shared. Sequences with do[b] = 0 pass through untouched, so the engine
+    can batch heterogeneous trigger points.
+
+    Returns (kv', stats_cum', stats_win', birth'); retained slots occupy
+    indices [0, budget), all other slots are zeroed / invalidated.
+    """
+    L, _, B, H, C, Dh = kv.shape
+    G = L * B * H
+    keys = kv[:, 0].reshape(G, C, Dh)
+    valid = (birth >= 0).astype(jnp.float32).reshape(G, C)
+    cum = stats_cum.reshape(G, C)
+    win = stats_win.reshape(G, C)
+    birth_g = birth.reshape(G, C)
+
+    if method == "rkv":
+        score = compress.rkv_scores(keys, cum, valid, shapes.lam)
+    elif method == "snapkv":
+        score = jnp.where(valid > 0, win, NEG_INF)
+    elif method == "h2o":
+        score = jnp.where(valid > 0, cum, NEG_INF)
+    elif method == "streaming":
+        score = compress.streaming_scores(birth_g, valid, shapes.sinks)
+    else:
+        raise ValueError(f"unknown compression method {method!r}")
+
+    idx, _ = compress.select_topk(score, birth_g, valid, shapes.budget, shapes.alpha)
+
+    def compact(x_g, fill):
+        kept = jnp.take_along_axis(x_g, idx, axis=1)
+        pad = jnp.full((G, C - shapes.budget), fill, x_g.dtype)
+        return jnp.concatenate([kept, pad], axis=1)
+
+    k_new = jnp.take_along_axis(keys, idx[:, :, None], axis=1)
+    v_new = jnp.take_along_axis(kv[:, 1].reshape(G, C, Dh), idx[:, :, None], axis=1)
+    zpad = jnp.zeros((G, C - shapes.budget, Dh), jnp.float32)
+    k_new = jnp.concatenate([k_new, zpad], axis=1).reshape(L, B, H, C, Dh)
+    v_new = jnp.concatenate([v_new, zpad], axis=1).reshape(L, B, H, C, Dh)
+    kv_new = jnp.stack([k_new, v_new], axis=1)
+    cum_new = compact(cum, 0.0).reshape(L, B, H, C)
+    win_new = jnp.zeros_like(stats_win)
+    birth_new = compact(birth_g, jnp.int32(-1)).reshape(L, B, H, C)
+
+    sel = do[None, None, :, None, None, None] > 0
+    kv = jnp.where(sel, kv_new, kv)
+    sel4 = do[None, :, None, None] > 0
+    stats_cum = jnp.where(sel4, cum_new, stats_cum)
+    stats_win = jnp.where(sel4, win_new, stats_win)
+    birth = jnp.where(sel4, birth_new, birth)
+    return kv, stats_cum, stats_win, birth
+
+
+# ---------------------------------------------------------------------------
+# RL training step (Eq. 7) + supervised LM step
+# ---------------------------------------------------------------------------
+
+
+def adam_update(flat_params, grads, m, v, step, lr, max_grad_norm=1.0,
+                b1=0.9, b2=0.999, eps=1e-8):
+    """Adam with global-norm gradient clipping on the flat vector.
+
+    Returns (params', m', v', step', grad_norm_preclip).
+    """
+    gnorm = jnp.sqrt(jnp.sum(grads * grads))
+    scale = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gnorm, 1e-12))
+    g = grads * scale
+    step1 = step + 1
+    m1 = b1 * m + (1 - b1) * g
+    v1 = b2 * v + (1 - b2) * g * g
+    t = step1.astype(jnp.float32)
+    mhat = m1 / (1 - b1**t)
+    vhat = v1 / (1 - b2**t)
+    new = flat_params - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new, m1, v1, step1, gnorm
+
+
+def train_step(
+    cfg: ModelConfig,
+    flat_params,
+    m,
+    v,
+    step,
+    ids,
+    loss_mask,
+    lens,
+    adv,
+    xi,
+    mrs,
+    logp_old,
+    hyp,
+):
+    """One Sparse-RL policy update (paper Eq. 7) + Adam.
+
+    Args:
+      flat_params/m/v/step: learner weights and Adam state.
+      ids:       [B, T] full (prompt + response) token ids, right-padded.
+      loss_mask: [B, T] 1.0 on response tokens (positions t where ids[t]
+                 was *generated*), 0 elsewhere.
+      lens:      [B]    valid lengths.
+      adv:       [B]    group-relative advantages Â_i (Eq. 10).
+      xi:        [B, T] sparsity consistency ratios ξ_{i,t} = π_old/π_sparse
+                 (Eq. 5), applied OUTSIDE the clip. Pass all-ones for the
+                 GRPO-dense / naive-sparse baselines.
+      mrs:       [B]    sequence-level rejection weights M^RS ∈ {0, 1}
+                 (Eq. 6). Pass all-ones to disable rejection sampling.
+      logp_old:  [B, T] dense old-policy log-probs (the w_{i,t} denominator).
+      hyp:       [4] f32: (lr, clip_eps, kl_coef, max_grad_norm).
+
+    Returns:
+      (params', m', v', step', loss, grad_norm, clip_frac, entropy, kl)
+    """
+    layout = ParamLayout(cfg)
+    lr, clip_eps, kl_coef, max_gn = hyp[0], hyp[1], hyp[2], hyp[3]
+
+    def loss_fn(theta):
+        p = layout.unflatten(theta)
+        logp_new, ent = token_logprobs(cfg, p, ids, lens)
+        w = jnp.exp(logp_new - logp_old)
+        w_clip = jnp.clip(w, 1.0 - clip_eps, 1.0 + clip_eps)
+        surr = jnp.minimum(w * adv[:, None], w_clip * adv[:, None])
+        tok = xi * surr * loss_mask
+        denom = jnp.maximum(jnp.sum(loss_mask, axis=1), 1.0)
+        per_seq = jnp.sum(tok, axis=1) / denom * mrs
+        objective = jnp.mean(per_seq)
+        # k3 KL estimator vs the dense old policy (KL regularization)
+        logr = logp_old - logp_new
+        k3 = jnp.exp(logr) - logr - 1.0
+        tokens = jnp.maximum(jnp.sum(loss_mask), 1.0)
+        kl = jnp.sum(k3 * loss_mask) / tokens
+        loss = -objective + kl_coef * kl
+        clipped = (
+            ((w > 1.0 + clip_eps) | (w < 1.0 - clip_eps)).astype(jnp.float32)
+            * loss_mask
+        )
+        stats = (
+            jnp.sum(clipped) / tokens,
+            jnp.sum(ent * loss_mask) / tokens,
+            kl,
+        )
+        return loss, stats
+
+    (loss, (clip_frac, entropy, kl)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True
+    )(flat_params)
+    new, m1, v1, step1, gnorm = adam_update(
+        flat_params, grads, m, v, step, lr, max_gn
+    )
+    return new, m1, v1, step1, loss, gnorm, clip_frac, entropy, kl
+
+
+def lm_step(cfg: ModelConfig, flat_params, m, v, step, ids, mask, lens, hyp):
+    """Supervised next-token cross-entropy step (base-model pretraining).
+
+    Args:
+      ids:  [B, T] tokens; mask [B, T] 1.0 at positions whose *prediction*
+            counts toward the loss (i.e. target positions t >= 1).
+      hyp:  [4] f32, only hyp[0] (lr) and hyp[3] (max grad norm) are used.
+
+    Returns: (params', m', v', step', loss)
+    """
+    layout = ParamLayout(cfg)
+
+    def loss_fn(theta):
+        p = layout.unflatten(theta)
+        logp, _ = token_logprobs(cfg, p, ids, lens)
+        tokens = jnp.maximum(jnp.sum(mask), 1.0)
+        return -jnp.sum(logp * mask) / tokens
+
+    loss, grads = jax.value_and_grad(loss_fn)(flat_params)
+    new, m1, v1, step1, _ = adam_update(
+        flat_params, grads, m, v, step, hyp[0], hyp[3]
+    )
+    return new, m1, v1, step1, loss

@@ -1,0 +1,108 @@
+"""AOT pipeline sanity: manifests are complete and HLO text is loadable
+(the parser-compatibility gotchas that bit during bring-up become tests)."""
+
+import json
+import os
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+ROOT = Path(__file__).resolve().parents[2]
+ART = ROOT / "artifacts" / "nano"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(),
+    reason="artifacts/nano not built (run `make artifacts`)",
+)
+
+EXPECTED_ENTRIES = {
+    "init_params",
+    "prefill_dense",
+    "prefill_sparse",
+    "decode_dense",
+    "decode_sparse",
+    "compress_rkv",
+    "compress_snapkv",
+    "compress_h2o",
+    "compress_streaming",
+    "score",
+    "train",
+    "lm",
+}
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(ART / "manifest.json") as f:
+        return json.load(f)
+
+
+def test_all_entries_present(manifest):
+    assert set(manifest["entries"]) == EXPECTED_ENTRIES
+
+
+def test_artifact_files_exist(manifest):
+    for e in manifest["entries"].values():
+        assert (ART / e["file"]).exists(), e["file"]
+
+
+def test_param_layout_covers_flat_vector(manifest):
+    off = 0
+    for p in manifest["params"]:
+        assert p["offset"] == off
+        size = 1
+        for d in p["shape"]:
+            size *= d
+        assert size == p["size"]
+        off += p["size"]
+    assert off == manifest["config"]["n_params"]
+
+
+def test_shapes_consistent(manifest):
+    s = manifest["shapes"]
+    c = manifest["config"]
+    assert s["sparse_capacity"] == s["budget"] + s["buffer"]
+    assert s["dense_capacity"] == c["max_seq"]
+    assert c["d_head"] * c["n_heads"] == c["d_model"]
+    # decode io shapes match the manifest dims
+    dec = manifest["entries"]["decode_sparse"]
+    kv = next(t for t in dec["inputs"] if t["name"] == "kv")
+    assert kv["dims"] == [
+        c["n_layers"], 2, s["decode_batch"], c["n_heads"],
+        s["sparse_capacity"], c["d_head"],
+    ]
+
+
+def test_signature_symmetry(manifest):
+    # decode outputs (minus logp) mirror the cache inputs — the Rust engine
+    # relies on this to thread literals through
+    for variant in ("dense", "sparse"):
+        dec = manifest["entries"][f"decode_{variant}"]
+        in_cache = {t["name"]: t for t in dec["inputs"] if t["name"] in
+                    ("kv", "stats_cum", "stats_win", "birth")}
+        out_cache = {t["name"]: t for t in dec["outputs"] if t["name"] in in_cache}
+        assert set(in_cache) == set(out_cache)
+        for name in in_cache:
+            assert in_cache[name]["dims"] == out_cache[name]["dims"], name
+            assert in_cache[name]["dtype"] == out_cache[name]["dtype"], name
+
+
+def test_no_topk_instruction_in_hlo(manifest):
+    """xla_extension 0.5.1's HLO text parser rejects the `topk` op
+    (jax.lax.top_k lowers to it). The compress artifacts must use sort."""
+    for name, e in manifest["entries"].items():
+        text = (ART / e["file"]).read_text()
+        for line in text.splitlines():
+            stripped = line.strip()
+            assert not stripped.startswith("topk") and " topk(" not in stripped, (
+                f"{name} contains a topk instruction (0.5.1-incompatible)"
+            )
+
+
+def test_hlo_text_starts_with_module(manifest):
+    for e in manifest["entries"].values():
+        head = (ART / e["file"]).read_text()[:200]
+        assert head.startswith("HloModule"), e["file"]

@@ -1,0 +1,233 @@
+"""Kernel vs reference oracles — the CORE correctness signal (L1).
+
+Random-case sweeps over shapes (hypothesis-style: many seeded cases with
+growing sizes; the `hypothesis` package is not in the image, so the sweep
+is explicit and exhaustive over a shape grid × seeds).
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import attention, compress, ref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def lens_mask(rng, b, c):
+    lens = rng.integers(1, c + 1, size=(b,))
+    valid = np.arange(c)[None, :] < lens[:, None]
+    add = np.where(valid, 0.0, ref.NEG_INF).astype(np.float32)
+    return jnp.asarray(add), jnp.asarray(valid.astype(np.float32)), lens
+
+
+DECODE_SHAPES = [
+    (1, 1, 4, 4),
+    (2, 2, 8, 8),
+    (3, 4, 16, 8),
+    (4, 2, 48, 32),
+    (2, 8, 33, 16),  # non-power-of-two cache
+]
+
+
+@pytest.mark.parametrize("b,h,c,d", DECODE_SHAPES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_decode_attention_matches_ref(b, h, c, d, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, b, h, d)
+    k = rand(rng, b, h, c, d)
+    v = rand(rng, b, h, c, d)
+    mask, _, _ = lens_mask(rng, b, c)
+    o1, p1 = attention.decode_attention(q, k, v, mask)
+    o2, p2 = ref.decode_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(o1, o2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(p1, p2, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("b,h,c,d", DECODE_SHAPES[:3])
+def test_decode_probs_are_distribution(b, h, c, d):
+    rng = np.random.default_rng(7)
+    q = rand(rng, b, h, d)
+    k = rand(rng, b, h, c, d)
+    v = rand(rng, b, h, c, d)
+    mask, valid, _ = lens_mask(rng, b, c)
+    _, p = attention.decode_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(p).sum(-1), 1.0, rtol=1e-5)
+    # no probability mass on invalid slots
+    dead = np.asarray(p) * (1.0 - np.asarray(valid))[:, None, :]
+    assert np.abs(dead).max() < 1e-6
+
+
+PREFILL_SHAPES = [
+    (1, 1, 4, 4),
+    (2, 2, 12, 8),
+    (2, 4, 48, 16),
+    (3, 2, 30, 8),
+]
+
+
+@pytest.mark.parametrize("b,h,t,d", PREFILL_SHAPES)
+@pytest.mark.parametrize("seed", [0, 3])
+def test_prefill_attention_matches_ref(b, h, t, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (rand(rng, b, h, t, d) for _ in range(3))
+    km, qm, _ = lens_mask(rng, b, t)
+    o1, c1 = attention.prefill_attention(q, k, v, qm, km)
+    o2, c2 = ref.prefill_attention_ref(q, k, v, qm, km)
+    np.testing.assert_allclose(o1, o2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(c1, c2, rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_colsum_conserves_query_mass():
+    # Σ_slots colsum = number of valid queries (each row sums to 1)
+    rng = np.random.default_rng(11)
+    b, h, t, d = 3, 2, 20, 8
+    q, k, v = (rand(rng, b, h, t, d) for _ in range(3))
+    km, qm, lens = lens_mask(rng, b, t)
+    _, colsum = attention.prefill_attention(q, k, v, qm, km)
+    total = np.asarray(colsum).sum(-1)  # [b, h]
+    np.testing.assert_allclose(total, np.broadcast_to(lens[:, None], total.shape), rtol=1e-4)
+
+
+@pytest.mark.parametrize("wrt", [0, 1, 2])
+def test_prefill_vjp_matches_ref_grad(wrt):
+    rng = np.random.default_rng(5)
+    b, h, t, d = 2, 2, 10, 8
+    args = [rand(rng, b, h, t, d) for _ in range(3)]
+    km, qm, _ = lens_mask(rng, b, t)
+
+    def f_pallas(x):
+        a = list(args)
+        a[wrt] = x
+        out, _ = attention.prefill_attention(*a, qm, km)
+        return jnp.sum(out * out)
+
+    def f_ref(x):
+        a = list(args)
+        a[wrt] = x
+        out, _ = ref.prefill_attention_ref(*a, qm, km)
+        return jnp.sum(out * out)
+
+    g1 = jax.grad(f_pallas)(args[wrt])
+    g2 = jax.grad(f_ref)(args[wrt])
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+RKV_SHAPES = [(1, 4, 4), (4, 16, 8), (6, 48, 32), (2, 33, 16)]
+
+
+@pytest.mark.parametrize("g,c,d", RKV_SHAPES)
+@pytest.mark.parametrize("lam", [0.0, 0.1, 0.9])
+def test_rkv_scores_match_ref(g, c, d, lam):
+    rng = np.random.default_rng(13)
+    keys = rand(rng, g, c, d)
+    imp = jnp.asarray(rng.uniform(size=(g, c)), jnp.float32)
+    _, valid, _ = lens_mask(rng, g, c)
+    s1 = compress.rkv_scores(keys, imp, valid, lam)
+    s2 = ref.rkv_scores_ref(keys, imp, valid, lam)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-5)
+
+
+def test_rkv_prefers_low_redundancy():
+    # two identical keys (a redundancy cluster) + two distinct keys:
+    # with lam = 0 (pure redundancy), the clones must score lowest
+    g, c, d = 1, 4, 8
+    rng = np.random.default_rng(17)
+    base = rng.normal(size=(d,))
+    keys = np.stack([base, base, rng.normal(size=(d,)), rng.normal(size=(d,))])
+    keys = jnp.asarray(keys[None, :, :], jnp.float32)
+    imp = jnp.ones((g, c), jnp.float32)
+    valid = jnp.ones((g, c), jnp.float32)
+    s = np.asarray(compress.rkv_scores(keys, imp, valid, 0.0))[0]
+    assert max(s[0], s[1]) < min(s[2], s[3]), f"clone scores {s}"
+
+
+def test_redundancy_zero_for_single_valid_slot():
+    rng = np.random.default_rng(19)
+    keys = rand(rng, 2, 6, 4)
+    valid = jnp.asarray([[1, 0, 0, 0, 0, 0], [1, 1, 0, 0, 0, 0]], jnp.float32)
+    red = ref.redundancy_scores_ref(keys, valid)
+    assert float(jnp.abs(red[0]).max()) == 0.0
+
+
+def test_minmax_normalize_range():
+    rng = np.random.default_rng(23)
+    x = jnp.asarray(rng.normal(size=(3, 10)), jnp.float32)
+    _, valid, _ = lens_mask(rng, 3, 10)
+    n = np.asarray(ref.minmax_normalize_ref(x, valid))
+    assert n.min() >= 0.0 and n.max() <= 1.0
+    dead = n * (1.0 - np.asarray(valid))
+    assert np.abs(dead).max() == 0.0
+
+
+class TestSelectTopk:
+    def setup_method(self):
+        rng = np.random.default_rng(29)
+        self.g, self.c = 5, 24
+        self.score = jnp.asarray(rng.normal(size=(self.g, self.c)), jnp.float32)
+        lens = rng.integers(10, self.c + 1, size=(self.g,))
+        occ = np.arange(self.c)[None, :] < lens[:, None]
+        self.valid = jnp.asarray(occ.astype(np.float32))
+        self.birth = jnp.asarray(np.where(occ, np.arange(self.c)[None, :], -1), jnp.int32)
+        self.score = jnp.where(self.valid > 0, self.score, ref.NEG_INF)
+
+    def test_budget_slots_survive(self):
+        idx, keep = compress.select_topk(self.score, self.birth, self.valid, 8, 2)
+        assert idx.shape == (self.g, 8)
+        np.testing.assert_array_equal(np.asarray(keep).sum(-1), 8)
+
+    def test_only_valid_slots_selected(self):
+        idx, _ = compress.select_topk(self.score, self.birth, self.valid, 8, 2)
+        sel_valid = np.take_along_axis(np.asarray(self.valid), np.asarray(idx), axis=1)
+        assert sel_valid.min() == 1.0
+
+    def test_alpha_most_recent_retained(self):
+        alpha = 3
+        idx, _ = compress.select_topk(self.score, self.birth, self.valid, 8, alpha)
+        birth = np.asarray(self.birth)
+        for gi in range(self.g):
+            occupied = birth[gi][birth[gi] >= 0]
+            recent = set(np.sort(occupied)[-alpha:])
+            kept_births = set(birth[gi][np.asarray(idx)[gi]])
+            assert recent <= kept_births, f"group {gi}: {recent} not in {kept_births}"
+
+    def test_order_preserved(self):
+        idx, _ = compress.select_topk(self.score, self.birth, self.valid, 8, 2)
+        b_at = np.take_along_axis(np.asarray(self.birth), np.asarray(idx), axis=1)
+        assert (np.diff(b_at, axis=1) > 0).all(), "compacted order not by birth"
+
+    def test_highest_scores_win(self):
+        # with alpha=0-like tiny alpha, top scores dominate selection
+        idx, keep = compress.select_topk(self.score, self.birth, self.valid, 8, 1)
+        score = np.asarray(self.score)
+        keep = np.asarray(keep)
+        for gi in range(self.g):
+            kept_scores = score[gi][keep[gi] > 0]
+            dropped = score[gi][(keep[gi] == 0) & (np.asarray(self.valid)[gi] > 0)]
+            if len(dropped) == 0:
+                continue
+            # all but the forced-keep slot must beat every dropped slot
+            assert np.sort(kept_scores)[1:].min() >= dropped.max() - 1e-6
+
+
+def test_streaming_scores_sinks_and_recency():
+    birth = jnp.asarray([[0, 1, 2, 3, 4, 5, -1, -1]], jnp.int32)
+    valid = (birth >= 0).astype(jnp.float32)
+    s = np.asarray(compress.streaming_scores(birth, valid, 2))[0]
+    # sinks (birth 0, 1) dominate
+    assert s[0] > s[5] and s[1] > s[5]
+    # recency is monotone among non-sinks
+    assert s[5] > s[4] > s[3] > s[2]
+    # invalid slots are NEG_INF
+    assert s[6] == ref.NEG_INF and s[7] == ref.NEG_INF

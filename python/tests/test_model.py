@@ -1,0 +1,320 @@
+"""L2 model invariants: decode/teacher-forcing equivalence, compression
+semantics, training-step correctness (the in-graph half of the three-policy
+consistency the Rust integration tests check end-to-end)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import ModelConfig, RolloutShapes
+
+CFG = ModelConfig("t", d_model=32, n_layers=2, n_heads=2, max_seq=32, prompt_len=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    flat = model.init_params(CFG, jnp.int32(0))
+    return flat, model.ParamLayout(CFG).unflatten(flat)
+
+
+def mk_ids(seed, b, t, lo=3, hi=26):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, hi, size=(b, t)), jnp.int32)
+
+
+class TestParamLayout:
+    def test_layout_tiles_flat_vector(self):
+        layout = model.ParamLayout(CFG)
+        off = 0
+        for e in layout.entries:
+            assert e.offset == off
+            off += e.size
+        assert off == layout.total
+
+    def test_init_deterministic(self):
+        a = model.init_params(CFG, jnp.int32(3))
+        b = model.init_params(CFG, jnp.int32(3))
+        c = model.init_params(CFG, jnp.int32(4))
+        np.testing.assert_array_equal(a, b)
+        assert np.abs(np.asarray(a) - np.asarray(c)).max() > 0
+
+    def test_ln_scales_are_ones(self):
+        flat = model.init_params(CFG, jnp.int32(0))
+        p = model.ParamLayout(CFG).unflatten(flat)
+        np.testing.assert_array_equal(p["l0.ln1"], 1.0)
+        np.testing.assert_array_equal(p["ln_f"], 1.0)
+
+
+class TestDecodeEquivalence:
+    """Dense decode must reproduce teacher forcing exactly (per token)."""
+
+    def run_decode(self, p, ids, plen, capacity):
+        B, T = ids.shape
+        plens = jnp.full((B,), plen, jnp.int32)
+        kv, sc, sw, birth, logp_last = model.prefill(CFG, p, ids[:, :plen], plens, capacity)
+        cur = plens
+        logps = [logp_last]
+        for t in range(plen, T - 1):
+            lp, kv, sc, sw, birth = model.decode_step(
+                CFG, p, kv, sc, sw, birth, cur, jnp.full((B,), t, jnp.int32), ids[:, t]
+            )
+            cur = cur + 1
+            logps.append(lp)
+        return logps
+
+    def test_matches_teacher_forcing(self, params):
+        _, p = params
+        B, P, T = 2, 8, 24
+        ids = mk_ids(1, B, T)
+        lens = jnp.full((B,), T, jnp.int32)
+        logp_tf = jax.nn.log_softmax(model.forward_full(CFG, p, ids, lens), -1)
+        logps = self.run_decode(p, ids, P, capacity=T)
+        for i, lp in enumerate(logps):
+            t = P - 1 + i  # prediction of token t+1 from context ≤ t
+            np.testing.assert_allclose(lp, logp_tf[:, t, :], rtol=1e-4, atol=2e-5)
+
+    def test_token_logprobs_consistent_with_forward(self, params):
+        _, p = params
+        ids = mk_ids(2, 3, 20)
+        lens = jnp.asarray([20, 14, 9], jnp.int32)
+        logp, ent = model.token_logprobs(CFG, p, ids, lens)
+        full = jax.nn.log_softmax(model.forward_full(CFG, p, ids, lens), -1)
+        for b in range(3):
+            for t in range(1, int(lens[b])):
+                want = full[b, t - 1, ids[b, t]]
+                np.testing.assert_allclose(logp[b, t], want, rtol=1e-5, atol=1e-6)
+        # entropies positive at valid positions
+        assert float(ent[:, 1:].min()) >= 0.0
+        # position 0 is padding by construction
+        np.testing.assert_array_equal(logp[:, 0], 0.0)
+
+
+class TestCompression:
+    def setup_cache(self, p, capacity=16, plen=8, extra=6):
+        B = 2
+        ids = mk_ids(5, B, plen + extra)
+        plens = jnp.full((B,), plen, jnp.int32)
+        kv, sc, sw, birth, _ = model.prefill(CFG, p, ids[:, :plen], plens, capacity)
+        cur = plens
+        for t in range(plen, plen + extra):
+            _, kv, sc, sw, birth = model.decode_step(
+                CFG, p, kv, sc, sw, birth, cur, jnp.full((B,), t, jnp.int32), ids[:, t]
+            )
+            cur = cur + 1
+        return kv, sc, sw, birth, cur
+
+    @pytest.mark.parametrize("method", ["rkv", "snapkv", "h2o", "streaming"])
+    def test_budget_and_validity(self, params, method):
+        _, p = params
+        kv, sc, sw, birth, _ = self.setup_cache(p)
+        shapes = RolloutShapes(budget=8, buffer=8, alpha=2)
+        kv2, sc2, sw2, b2 = model.compress_step(
+            kv, sc, sw, birth, jnp.asarray([1.0, 1.0]), method, shapes
+        )
+        occ = np.asarray(b2 >= 0)
+        # exactly budget slots live, all in the first `budget` positions
+        assert occ.sum(-1).min() == 8 and occ.sum(-1).max() == 8
+        assert not occ[..., 8:].any()
+        # stats_win reset, evicted kv zeroed
+        np.testing.assert_array_equal(np.asarray(sw2), 0.0)
+        kv2 = np.asarray(kv2)
+        assert np.abs(kv2[:, :, :, :, 8:, :]).max() == 0.0
+
+    def test_do_mask_passthrough(self, params):
+        _, p = params
+        kv, sc, sw, birth, _ = self.setup_cache(p)
+        shapes = RolloutShapes(budget=8, buffer=8, alpha=2)
+        kv2, sc2, sw2, b2 = model.compress_step(
+            kv, sc, sw, birth, jnp.asarray([1.0, 0.0]), "rkv", shapes
+        )
+        # sequence 1 untouched
+        np.testing.assert_array_equal(np.asarray(kv2)[:, :, 1], np.asarray(kv)[:, :, 1])
+        np.testing.assert_array_equal(np.asarray(b2)[:, 1], np.asarray(birth)[:, 1])
+        # sequence 0 compacted
+        assert (np.asarray(b2)[:, 0] >= 0).sum(-1).max() == 8
+
+    def test_alpha_recency_survives(self, params):
+        _, p = params
+        kv, sc, sw, birth, cur = self.setup_cache(p)
+        shapes = RolloutShapes(budget=8, buffer=8, alpha=3)
+        _, _, _, b2 = model.compress_step(
+            kv, sc, sw, birth, jnp.asarray([1.0, 1.0]), "rkv", shapes
+        )
+        birth_np = np.asarray(birth)
+        b2_np = np.asarray(b2)
+        L, B, H, C = birth_np.shape
+        for l in range(L):
+            for b in range(B):
+                for h in range(H):
+                    occupied = birth_np[l, b, h][birth_np[l, b, h] >= 0]
+                    recent = set(np.sort(occupied)[-3:].tolist())
+                    kept = set(b2_np[l, b, h][b2_np[l, b, h] >= 0].tolist())
+                    assert recent <= kept
+
+    def test_compressed_decode_still_runs(self, params):
+        _, p = params
+        kv, sc, sw, birth, cur = self.setup_cache(p)
+        shapes = RolloutShapes(budget=8, buffer=8, alpha=2)
+        kv, sc, sw, birth = model.compress_step(
+            kv, sc, sw, birth, jnp.asarray([1.0, 1.0]), "h2o", shapes
+        )
+        lens = jnp.asarray([8, 8], jnp.int32)
+        pos = cur  # absolute positions keep advancing
+        lp, *_ = model.decode_step(
+            CFG, p, kv, sc, sw, birth, lens, pos, jnp.asarray([5, 6], jnp.int32)
+        )
+        assert np.isfinite(np.asarray(lp)).all()
+        np.testing.assert_allclose(np.exp(np.asarray(lp)).sum(-1), 1.0, rtol=1e-5)
+
+
+class TestTrainStep:
+    def batch(self, seed=9, B=2, T=24, P=8):
+        ids = mk_ids(seed, B, T)
+        lens = jnp.asarray([T, T - 5], jnp.int32)
+        mask = (
+            (jnp.arange(T)[None, :] >= P) & (jnp.arange(T)[None, :] < lens[:, None])
+        ).astype(jnp.float32)
+        return ids, lens, mask
+
+    def test_positive_advantage_raises_logp(self, params):
+        flat, p = params
+        ids, lens, mask = self.batch()
+        logp_old, _ = model.token_logprobs(CFG, p, ids, lens)
+        m0 = jnp.zeros_like(flat)
+        hyp = jnp.asarray([1e-2, 0.2, 0.0, 1e9], jnp.float32)  # big lr, no KL
+        adv = jnp.asarray([1.0, 1.0])
+        out = model.train_step(
+            CFG, flat, m0, m0, jnp.int32(0), ids, mask, lens, adv,
+            jnp.ones_like(mask), jnp.ones((2,)), logp_old, hyp,
+        )
+        new_flat = out[0]
+        p2 = model.ParamLayout(CFG).unflatten(new_flat)
+        logp_new, _ = model.token_logprobs(CFG, p2, ids, lens)
+        masked_delta = float(((logp_new - logp_old) * mask).sum())
+        assert masked_delta > 0, f"positive advantage decreased logp ({masked_delta})"
+
+    def test_rejected_rows_have_no_gradient(self, params):
+        flat, p = params
+        ids, lens, mask = self.batch()
+        logp_old, _ = model.token_logprobs(CFG, p, ids, lens)
+        m0 = jnp.zeros_like(flat)
+        hyp = jnp.asarray([1e-3, 0.2, 0.0, 1e9], jnp.float32)
+        out = model.train_step(
+            CFG, flat, m0, m0, jnp.int32(0), ids, mask, lens,
+            jnp.asarray([1.0, -1.0]), jnp.ones_like(mask), jnp.zeros((2,)),
+            logp_old, hyp,
+        )
+        gnorm = float(out[5])
+        assert gnorm < 1e-5, f"all-rejected batch produced grad norm {gnorm}"
+
+    def test_xi_scales_gradient(self, params):
+        flat, p = params
+        ids, lens, mask = self.batch()
+        logp_old, _ = model.token_logprobs(CFG, p, ids, lens)
+        m0 = jnp.zeros_like(flat)
+        hyp = jnp.asarray([1e-3, 10.0, 0.0, 1e9], jnp.float32)  # wide clip
+        adv = jnp.asarray([1.0, -1.0])
+        mrs = jnp.ones((2,))
+
+        def gnorm_with_xi(scale):
+            out = model.train_step(
+                CFG, flat, m0, m0, jnp.int32(0), ids, mask, lens, adv,
+                jnp.ones_like(mask) * scale, mrs, logp_old, hyp,
+            )
+            return float(out[5])
+
+        g1 = gnorm_with_xi(1.0)
+        g2 = gnorm_with_xi(2.0)
+        np.testing.assert_allclose(g2, 2.0 * g1, rtol=1e-3)
+
+    def test_clip_frac_responds_to_stale_policy(self, params):
+        flat, p = params
+        ids, lens, mask = self.batch()
+        logp_old, _ = model.token_logprobs(CFG, p, ids, lens)
+        # fake a very stale old policy -> ratios far from 1 -> clipping
+        stale = logp_old - 1.0
+        m0 = jnp.zeros_like(flat)
+        hyp = jnp.asarray([1e-3, 0.2, 0.0, 1e9], jnp.float32)
+        out = model.train_step(
+            CFG, flat, m0, m0, jnp.int32(0), ids, mask, lens,
+            jnp.asarray([1.0, 1.0]), jnp.ones_like(mask), jnp.ones((2,)),
+            stale, hyp,
+        )
+        clip_frac = float(out[6])
+        assert clip_frac > 0.5, f"expected heavy clipping, got {clip_frac}"
+
+    def test_adam_state_advances(self, params):
+        flat, _ = params
+        ids, lens, mask = self.batch()
+        m0 = jnp.zeros_like(flat)
+        hyp = jnp.asarray([1e-3, 0.2, 1e-4, 1.0], jnp.float32)
+        logp_old = jnp.zeros_like(mask)
+        out = model.train_step(
+            CFG, flat, m0, m0, jnp.int32(5), ids, mask, lens,
+            jnp.asarray([1.0, 0.0]), jnp.ones_like(mask), jnp.ones((2,)),
+            logp_old, hyp,
+        )
+        assert int(out[3]) == 6
+        assert float(jnp.abs(out[1]).max()) > 0  # m updated
+
+
+class TestLmStep:
+    def test_loss_decreases(self, params):
+        flat, _ = params
+        ids = mk_ids(11, 2, 24)
+        lens = jnp.full((2,), 24, jnp.int32)
+        mask = jnp.ones((2, 24), jnp.float32).at[:, 0].set(0.0)
+        hyp = jnp.asarray([5e-3, 0.2, 0.0, 1.0], jnp.float32)
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        theta, step = flat, jnp.int32(0)
+        losses = []
+        for _ in range(8):
+            theta, m, v, step, loss = model.lm_step(CFG, theta, m, v, step, ids, mask, lens, hyp)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.2, losses
+
+    def test_initial_loss_near_uniform(self, params):
+        flat, _ = params
+        ids = mk_ids(13, 2, 24)
+        lens = jnp.full((2,), 24, jnp.int32)
+        mask = jnp.ones((2, 24), jnp.float32).at[:, 0].set(0.0)
+        hyp = jnp.asarray([0.0, 0.2, 0.0, 1.0], jnp.float32)
+        m = jnp.zeros_like(flat)
+        _, _, _, _, loss = model.lm_step(CFG, flat, m, m, jnp.int32(0), ids, mask, lens, hyp)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.3
+
+
+class TestAdam:
+    def test_matches_reference_formula(self):
+        n = 16
+        rng = np.random.default_rng(0)
+        theta = jnp.asarray(rng.normal(size=n), jnp.float32)
+        g = jnp.asarray(rng.normal(size=n), jnp.float32) * 0.01
+        m = jnp.zeros(n, jnp.float32)
+        v = jnp.zeros(n, jnp.float32)
+        new, m1, v1, step1, gnorm = model.adam_update(
+            theta, g, m, v, jnp.int32(0), 1e-3, max_grad_norm=1e9
+        )
+        # closed form at t=1: mhat = g, vhat = g^2 -> update ≈ lr * sign(g)
+        expect = theta - 1e-3 * g / (jnp.abs(g) + 1e-8)
+        np.testing.assert_allclose(new, expect, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(gnorm, jnp.sqrt((g * g).sum()), rtol=1e-5)
+
+    def test_grad_clipping(self):
+        theta = jnp.zeros(4, jnp.float32)
+        g = jnp.asarray([3.0, 4.0, 0.0, 0.0], jnp.float32)  # norm 5
+        m = jnp.zeros(4, jnp.float32)
+        new, m1, _, _, gnorm = model.adam_update(
+            theta, g, m, m, jnp.int32(0), 1.0, max_grad_norm=1.0
+        )
+        np.testing.assert_allclose(gnorm, 5.0, rtol=1e-6)
+        # post-clip first moment reflects the scaled gradient
+        np.testing.assert_allclose(m1, 0.1 * g / 5.0, rtol=1e-5)

@@ -1,0 +1,86 @@
+//! Pure-Rust coordinator micro-benchmarks: the L3 pieces that must never
+//! be the bottleneck (paper's contribution is the coordinator, so we hold
+//! it to <10% of step time — §Perf).
+//!
+//!     cargo bench --bench bench_components
+
+use sparse_rl::coordinator::kv_manager::KvMemoryManager;
+use sparse_rl::coordinator::scheduler::Scheduler;
+use sparse_rl::coordinator::{group, rejection};
+use sparse_rl::data::{benchmarks, task::Task};
+use sparse_rl::util::bench::Bencher;
+use sparse_rl::util::json::Json;
+use sparse_rl::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    b.header("L3 coordinator components");
+
+    {
+        let mut rng = Rng::new(1);
+        let logp: Vec<f32> = (0..32).map(|_| -rng.next_f32() * 6.0).collect();
+        b.bench("sample_logits (V=32, T=1, top-p=1)", || {
+            std::hint::black_box(rng.sample_logits(&logp, 1.0, 1.0));
+        });
+        b.bench("sample_logits (T=0.7, top-p=0.95)", || {
+            std::hint::black_box(rng.sample_logits(&logp, 0.7, 0.95));
+        });
+    }
+
+    {
+        let mut rng = Rng::new(2);
+        let t = Task::gen(&mut rng, 4, 48);
+        let resp = t.target_ids();
+        b.bench("reward verification (CoT parse + match)", || {
+            std::hint::black_box(t.reward(&resp));
+        });
+        b.bench("task generation (4 ops, bounded)", || {
+            std::hint::black_box(Task::gen(&mut rng, 4, 48));
+        });
+    }
+
+    {
+        let rewards: Vec<f64> = (0..64).map(|i| (i % 3 == 0) as u8 as f64).collect();
+        b.bench("group advantages (64 seqs, G=8)", || {
+            std::hint::black_box(group::batched_group_advantages(&rewards, 8));
+        });
+    }
+
+    {
+        let logp_old: Vec<f32> = (0..160).map(|i| -1.0 - (i % 7) as f32 * 0.1).collect();
+        let logp_sp: Vec<f32> = logp_old.iter().map(|x| x - 0.01).collect();
+        b.bench("xi ratios + rejection verdict (160 tok)", || {
+            let xi = rejection::xi_ratios(&logp_old, &logp_sp);
+            std::hint::black_box(rejection::verdict(&xi, 1e-4));
+        });
+    }
+
+    {
+        b.bench("scheduler: plan 1024 seqs against the wall", || {
+            let mut kv = KvMemoryManager::new(4096);
+            let mut s = Scheduler { slots: 16, reserve_per_seq: 208, stats: Default::default() };
+            let mut pending: Vec<usize> = (0..1024).collect();
+            let mut base = 0u64;
+            while let Some(c) = s.next_chunk(&mut pending, &mut kv, base) {
+                s.finish_chunk(&c, &mut kv, base);
+                base += c.items.len() as u64;
+            }
+        });
+    }
+
+    {
+        let text = std::fs::read_to_string("artifacts/nano/manifest.json")
+            .or_else(|_| std::fs::read_to_string("../artifacts/nano/manifest.json"));
+        if let Ok(text) = text {
+            b.bench("manifest.json parse", || {
+                std::hint::black_box(Json::parse(&text).unwrap());
+            });
+        }
+    }
+
+    {
+        b.bench("benchmark suite materialize (gsm8k, 1319 tasks)", || {
+            std::hint::black_box(benchmarks::suite()[0].tasks(48));
+        });
+    }
+}

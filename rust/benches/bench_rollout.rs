@@ -1,0 +1,124 @@
+//! Component latency bench: every artifact on the rollout/training path.
+//!
+//! Backs the §Perf numbers in EXPERIMENTS.md: decode step latency (dense
+//! vs sparse — the memory-wall compute story), compression overhead per
+//! method, prefill, dense scoring, and the RL train step.
+//!
+//!     cargo bench --bench bench_rollout [-- --model nano]
+
+use sparse_rl::experiments;
+use sparse_rl::runtime::{Hyp, Method, ModelEngine, ParamsLit, TrainState, Variant};
+use sparse_rl::util::bench::Bencher;
+use sparse_rl::util::cli::CliArgs;
+
+fn main() {
+    let args = CliArgs::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let model = args.get("model", "nano".to_string());
+    let dir = match experiments::find_artifacts(&model) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("skipping bench: {e}");
+            return;
+        }
+    };
+    let engine = ModelEngine::load(&dir).expect("engine");
+    let m = engine.manifest.clone();
+    let params = TrainState::new(engine.init_params(0).expect("init")).params;
+    let plit = ParamsLit::new(&params);
+    let r = m.shapes.decode_batch;
+    let p = m.config.prompt_len;
+
+    let mut b = Bencher::default();
+    b.header(&format!(
+        "rollout components ({model}: {} params, R={r}, Cd={}, Cs={})",
+        m.config.n_params, m.shapes.dense_capacity, m.shapes.sparse_capacity
+    ));
+
+    // prompt batch
+    let mut ids = vec![0i32; r * p];
+    let mut lens = vec![(p / 2) as i32; r];
+    for s in 0..r {
+        ids[s * p] = 1;
+        for i in 1..p / 2 {
+            ids[s * p + i] = 3 + ((s + i) % 20) as i32;
+        }
+        lens[s] = (p / 2) as i32;
+    }
+
+    for variant in [Variant::Dense, Variant::Sparse] {
+        b.bench(&format!("prefill_{}", variant.name()), || {
+            engine.prefill(variant, &plit, &ids, &lens).expect("prefill");
+        });
+    }
+
+    for variant in [Variant::Dense, Variant::Sparse] {
+        let (mut cache, _) = engine.prefill(variant, &plit, &ids, &lens).expect("prefill");
+        let cur: Vec<i32> = lens.clone();
+        let pos: Vec<i32> = lens.clone();
+        let tok = vec![5i32; r];
+        b.bench(&format!("decode_{}", variant.name()), || {
+            engine.decode(&plit, &mut cache, &cur, &pos, &tok).expect("decode");
+        });
+    }
+
+    {
+        let do_all = vec![1.0f32; r];
+        for method in Method::all() {
+            let (mut cache, _) =
+                engine.prefill(Variant::Sparse, &plit, &ids, &lens).expect("prefill");
+            b.bench(&format!("compress_{}", method.name()), || {
+                engine.compress(method, &mut cache, &do_all).expect("compress");
+            });
+        }
+    }
+
+    {
+        let (bt, t) = (m.shapes.train_batch, m.config.max_seq);
+        let sids = vec![5i32; bt * t];
+        let slens = vec![t as i32; bt];
+        b.bench("score (dense TF)", || {
+            engine.score(&params, &sids, &slens).expect("score");
+        });
+
+        let mut state = TrainState::new(params.clone());
+        let mask = vec![1.0f32; bt * t];
+        let adv = vec![0.5f32; bt];
+        let xi = vec![1.0f32; bt * t];
+        let mrs = vec![1.0f32; bt];
+        let (logp_old, _) = engine.score(&params, &sids, &slens).expect("score");
+        b.bench("train_step (Eq.7 + Adam)", || {
+            engine
+                .train(&mut state, &sids, &mask, &slens, &adv, &xi, &mrs, &logp_old, Hyp::default())
+                .expect("train");
+        });
+
+        b.bench("lm_step", || {
+            engine.lm(&mut state, &sids, &mask, &slens, Hyp::default()).expect("lm");
+        });
+    }
+
+    // derived report: per-token decode cost and the dense/sparse ratio
+    let results = b.results();
+    let get = |name: &str| {
+        results
+            .iter()
+            .find(|r| r.name.starts_with(name))
+            .map(|r| r.mean_ns())
+            .unwrap_or(f64::NAN)
+    };
+    let dense = get("decode_dense");
+    let sparse = get("decode_sparse");
+    println!("\nderived:");
+    println!(
+        "  decode per-token (batch {r}): dense {:.1} µs, sparse {:.1} µs, dense/sparse = {:.2}x",
+        dense / 1e3 / r as f64,
+        sparse / 1e3 / r as f64,
+        dense / sparse
+    );
+    println!(
+        "  KV bytes/seq: dense {} KiB vs sparse {} KiB ({}x reduction)",
+        m.kv_bytes_per_seq(m.shapes.dense_capacity) / 1024,
+        m.kv_bytes_per_seq(m.shapes.sparse_capacity) / 1024,
+        m.shapes.dense_capacity as f64 / m.shapes.sparse_capacity as f64
+    );
+}

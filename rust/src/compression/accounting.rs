@@ -1,0 +1,127 @@
+//! KV-storage accounting: the numbers behind the paper's "Toks. saving"
+//! column and the memory-wall analysis.
+//!
+//! Two views are tracked per rollout:
+//!  * **integral** — token-steps of KV storage (sum over decode steps of
+//!    resident KV tokens), the quantity that determines sustained memory
+//!    pressure and therefore admissible batch width;
+//!  * **peak** — maximum simultaneous resident tokens for one sequence,
+//!    the quantity that determines worst-case (OOM) reservation.
+//!
+//! "Toks. saving" (Table 1) = 1 - sparse_integral / dense_integral, where
+//! the dense integral is reconstructed from the same generation lengths —
+//! i.e. exactly "reduction in stored KV tokens compared to the generation
+//! length of the dense rollout" at matched lengths.
+
+/// Accumulates KV residency for a set of sequences.
+#[derive(Debug, Clone, Default)]
+pub struct KvAccounting {
+    /// Σ over steps of resident tokens (actual, with compression).
+    pub integral_actual: u64,
+    /// Σ over steps of resident tokens had the cache been dense.
+    pub integral_dense: u64,
+    /// Max resident tokens for any single sequence at any step (actual).
+    pub peak_actual: usize,
+    /// Max resident tokens for any single sequence at any step (dense).
+    pub peak_dense: usize,
+    /// Number of decode steps accounted.
+    pub steps: u64,
+    /// Number of compressions performed.
+    pub compressions: u64,
+    /// Tokens evicted across all compressions.
+    pub evicted: u64,
+}
+
+impl KvAccounting {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one decode step for one sequence.
+    ///
+    /// `resident` = occupied cache slots after the step (compressed path);
+    /// `dense_equiv` = what a dense cache would hold (prompt + generated).
+    pub fn step(&mut self, resident: usize, dense_equiv: usize) {
+        self.integral_actual += resident as u64;
+        self.integral_dense += dense_equiv as u64;
+        self.peak_actual = self.peak_actual.max(resident);
+        self.peak_dense = self.peak_dense.max(dense_equiv);
+        self.steps += 1;
+    }
+
+    /// Record a compression event that dropped `evicted` tokens.
+    pub fn compression(&mut self, evicted: usize) {
+        self.compressions += 1;
+        self.evicted += evicted as u64;
+    }
+
+    /// Fractional reduction in stored KV token-steps vs dense (paper's
+    /// "Toks. saving"). 0 when nothing was tracked.
+    pub fn toks_saving(&self) -> f64 {
+        if self.integral_dense == 0 {
+            return 0.0;
+        }
+        1.0 - self.integral_actual as f64 / self.integral_dense as f64
+    }
+
+    /// Peak-memory reduction factor (drives the admissible batch ratio).
+    pub fn peak_saving(&self) -> f64 {
+        if self.peak_dense == 0 {
+            return 0.0;
+        }
+        1.0 - self.peak_actual as f64 / self.peak_dense as f64
+    }
+
+    pub fn merge(&mut self, other: &KvAccounting) {
+        self.integral_actual += other.integral_actual;
+        self.integral_dense += other.integral_dense;
+        self.peak_actual = self.peak_actual.max(other.peak_actual);
+        self.peak_dense = self.peak_dense.max(other.peak_dense);
+        self.steps += other.steps;
+        self.compressions += other.compressions;
+        self.evicted += other.evicted;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_rollout_saves_nothing() {
+        let mut a = KvAccounting::new();
+        for t in 10..50 {
+            a.step(t, t);
+        }
+        assert_eq!(a.toks_saving(), 0.0);
+        assert_eq!(a.peak_actual, 49);
+    }
+
+    #[test]
+    fn capped_rollout_saves() {
+        let mut a = KvAccounting::new();
+        let cap = 48;
+        for t in 10..200usize {
+            a.step(t.min(cap), t);
+        }
+        assert!(a.toks_saving() > 0.4, "saving {}", a.toks_saving());
+        assert_eq!(a.peak_actual, cap);
+        assert_eq!(a.peak_dense, 199);
+        assert!(a.peak_saving() > 0.7);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = KvAccounting::new();
+        a.step(5, 10);
+        let mut b = KvAccounting::new();
+        b.step(20, 20);
+        b.compression(7);
+        a.merge(&b);
+        assert_eq!(a.integral_actual, 25);
+        assert_eq!(a.integral_dense, 30);
+        assert_eq!(a.peak_actual, 20);
+        assert_eq!(a.evicted, 7);
+        assert_eq!(a.steps, 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Compression accounting + pure-Rust reference policies.
+//!
+//! The *actual* cache compaction runs inside the AOT artifacts (L1/L2).
+//! This module provides (a) the KV-storage accounting behind the paper's
+//! "Toks. saving" column, and (b) a pure-Rust reference of the positional
+//! StreamingLLM selection used by property tests to cross-check the
+//! artifact's behavior (attention-score methods can only be checked
+//! in-graph, which pytest does against ref.py).
+
+pub mod accounting;
+pub mod policy;
+
+pub use accounting::KvAccounting;

@@ -1,0 +1,141 @@
+//! Pure-Rust reference of the *positional* selection rules, used by
+//! property tests to cross-check the artifact behavior and by the
+//! scheduler to predict post-compression occupancy without running the
+//! graph.
+//!
+//! Attention-score-based methods (R-KV / SnapKV / H2O) depend on the
+//! model's attention values and can only be verified in-graph (pytest does
+//! that against ref.py); what Rust *can* verify independently is the
+//! shared selection contract:
+//!   1. exactly `budget` slots survive,
+//!   2. the `alpha` most recent tokens always survive,
+//!   3. survivors keep their generation order,
+//!   4. StreamingLLM keeps sinks + recency exactly.
+
+/// Shared selection contract parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SelectParams {
+    pub budget: usize,
+    pub alpha: usize,
+    pub sinks: usize,
+}
+
+/// Reference StreamingLLM retention over birth positions.
+///
+/// Input: `birth[slot]` = absolute position (all >= 0, occupied slots
+/// only). Output: retained slot indices sorted by birth (ascending) —
+/// sinks (oldest `sinks` positions) plus the most recent fill.
+pub fn streaming_keep(birth: &[i64], p: SelectParams) -> Vec<usize> {
+    let n = birth.len();
+    if n <= p.budget {
+        let mut all: Vec<usize> = (0..n).collect();
+        all.sort_by_key(|&i| birth[i]);
+        return all;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| birth[i]);
+    let mut keep: Vec<usize> = Vec::with_capacity(p.budget);
+    // sinks = oldest positions
+    let n_sinks = p.sinks.min(p.budget);
+    keep.extend_from_slice(&order[..n_sinks]);
+    // fill the rest with the most recent
+    let n_recent = p.budget - n_sinks;
+    keep.extend_from_slice(&order[n - n_recent..]);
+    keep.sort_by_key(|&i| birth[i]);
+    keep.dedup();
+    keep
+}
+
+/// Check the shared selection contract over a retained set.
+///
+/// `birth_before[slot]` for all occupied slots, `kept` = retained slot
+/// indices in compacted order. Returns Err(description) on violation.
+pub fn check_contract(
+    birth_before: &[i64],
+    kept: &[usize],
+    p: SelectParams,
+) -> Result<(), String> {
+    let n = birth_before.len();
+    let expect = p.budget.min(n);
+    if kept.len() != expect {
+        return Err(format!("kept {} slots, expected {}", kept.len(), expect));
+    }
+    // order-preserving: birth positions strictly increase in compacted order
+    for w in kept.windows(2) {
+        if birth_before[w[0]] >= birth_before[w[1]] {
+            return Err(format!(
+                "order violated: slot {} (birth {}) before slot {} (birth {})",
+                w[0], birth_before[w[0]], w[1], birth_before[w[1]]
+            ));
+        }
+    }
+    // alpha most recent must survive
+    let mut by_recency: Vec<usize> = (0..n).collect();
+    by_recency.sort_by_key(|&i| std::cmp::Reverse(birth_before[i]));
+    for &slot in by_recency.iter().take(p.alpha.min(expect)) {
+        if !kept.contains(&slot) {
+            return Err(format!(
+                "recent slot {} (birth {}) evicted",
+                slot, birth_before[slot]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    fn params() -> SelectParams {
+        SelectParams { budget: 8, alpha: 3, sinks: 2 }
+    }
+
+    #[test]
+    fn streaming_keeps_sinks_and_recent() {
+        let birth: Vec<i64> = (0..20).collect();
+        let kept = streaming_keep(&birth, params());
+        assert_eq!(kept.len(), 8);
+        // sinks 0,1 plus recency 14..19
+        assert_eq!(kept, vec![0, 1, 14, 15, 16, 17, 18, 19]);
+    }
+
+    #[test]
+    fn streaming_underfull_keeps_all() {
+        let birth: Vec<i64> = (0..5).collect();
+        let kept = streaming_keep(&birth, params());
+        assert_eq!(kept, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn streaming_satisfies_contract() {
+        propcheck::quick("streaming-contract", |rng, size| {
+            let n = 9 + size % 40;
+            // random strictly increasing births (scattered positions)
+            let mut birth: Vec<i64> = Vec::with_capacity(n);
+            let mut cur = 0i64;
+            for _ in 0..n {
+                cur += 1 + rng.below(3) as i64;
+                birth.push(cur);
+            }
+            let p = params();
+            let kept = streaming_keep(&birth, p);
+            check_contract(&birth, &kept, p)
+        });
+    }
+
+    #[test]
+    fn contract_detects_violations() {
+        let birth: Vec<i64> = (0..10).collect();
+        let p = SelectParams { budget: 4, alpha: 2, sinks: 1 };
+        // wrong count
+        assert!(check_contract(&birth, &[0, 1, 2], p).is_err());
+        // out of order
+        assert!(check_contract(&birth, &[0, 9, 8, 7], p).is_err());
+        // missing recent
+        assert!(check_contract(&birth, &[0, 1, 2, 3], p).is_err());
+        // valid
+        assert!(check_contract(&birth, &[0, 1, 8, 9], p).is_ok());
+    }
+}

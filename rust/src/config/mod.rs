@@ -1,0 +1,324 @@
+//! Typed experiment configuration + a small `key = value` config-file
+//! format with CLI overrides.
+//!
+//! The artifact manifest fixes the *shapes* (model dims, batch sizes,
+//! budget); this module fixes the *policies*: rollout mode, correction
+//! switches, sampling, schedule, and the global KV memory wall.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Hyp, Method};
+use crate::util::cli::CliArgs;
+
+/// How rollouts are generated (paper §5.1 baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RolloutMode {
+    /// Full KV cache (GRPO-Dense upper bound).
+    Dense,
+    /// Compressed rollouts + Sparse-RL corrections (ours).
+    SparseRl(Method),
+    /// Compressed rollouts, no corrections (naive baseline; collapses).
+    NaiveSparse(Method),
+}
+
+impl RolloutMode {
+    pub fn parse(s: &str) -> Result<RolloutMode> {
+        // forms: dense | sparse-rl:rkv | naive:snapkv
+        if s == "dense" {
+            return Ok(RolloutMode::Dense);
+        }
+        if let Some(m) = s.strip_prefix("sparse-rl:") {
+            return Ok(RolloutMode::SparseRl(Method::parse(m)?));
+        }
+        if let Some(m) = s.strip_prefix("naive:") {
+            return Ok(RolloutMode::NaiveSparse(Method::parse(m)?));
+        }
+        bail!("bad rollout mode {s:?} (dense | sparse-rl:<m> | naive:<m>)");
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        !matches!(self, RolloutMode::Dense)
+    }
+
+    pub fn method(&self) -> Option<Method> {
+        match self {
+            RolloutMode::Dense => None,
+            RolloutMode::SparseRl(m) | RolloutMode::NaiveSparse(m) => Some(*m),
+        }
+    }
+
+    /// Sparse-RL corrections enabled? (rejection sampling + ξ reweighting)
+    pub fn corrections(&self) -> bool {
+        matches!(self, RolloutMode::SparseRl(_))
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            RolloutMode::Dense => "dense".into(),
+            RolloutMode::SparseRl(m) => format!("sparse-rl:{}", m.name()),
+            RolloutMode::NaiveSparse(m) => format!("naive:{}", m.name()),
+        }
+    }
+}
+
+/// Sampling parameters (paper §5.1: T=1.0, top-p=1.0, max 4096 -> scaled).
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingConfig {
+    pub temperature: f32,
+    pub top_p: f32,
+    /// Maximum generated tokens per response (excludes prompt).
+    pub max_response: usize,
+}
+
+impl Default for SamplingConfig {
+    fn default() -> Self {
+        SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 96 }
+    }
+}
+
+/// How compression-induced mismatch is corrected (paper §4 vs the
+/// Limitations section's proposed future work).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorrectionMode {
+    /// Paper Eq. 6: any token with ξ_t < ε vetoes the whole trajectory.
+    Reject,
+    /// Future-work variant: keep every trajectory but clamp ξ_t to
+    /// [ε, XI_CAP] — continuous token-level correction, no sample waste.
+    Clamp,
+}
+
+impl CorrectionMode {
+    pub fn parse(s: &str) -> Result<CorrectionMode> {
+        Ok(match s {
+            "reject" | "sequence" => CorrectionMode::Reject,
+            "clamp" | "token" => CorrectionMode::Clamp,
+            other => bail!("bad correction mode {other:?} (reject | clamp)"),
+        })
+    }
+}
+
+/// RL schedule + correction switches.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of RL steps.
+    pub steps: usize,
+    /// Prompts sampled per step (G rollouts each).
+    pub prompts_per_step: usize,
+    /// Rollouts per prompt (GRPO group size; paper: 8).
+    pub group_size: usize,
+    pub hyp: Hyp,
+    /// Rejection-sampling threshold ε on ξ_t (paper: 1e-4).
+    pub rejection_eps: f64,
+    /// Enable M^RS rejection sampling (Eq. 6).
+    pub rejection: bool,
+    /// Enable ξ importance reweighting (Eq. 7).
+    pub reweight: bool,
+    /// Sequence-level rejection (paper) vs token-level clamping
+    /// (Limitations/future work). Only meaningful for sparse-rl modes.
+    pub correction_mode: CorrectionMode,
+    /// Train minibatch passes per rollout batch.
+    pub updates_per_step: usize,
+    /// Training-task difficulty range (operator count). 0 = auto per
+    /// model scale (paper §5.1: match data to model capability).
+    pub ops_lo: usize,
+    pub ops_hi: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 100,
+            prompts_per_step: 4,
+            group_size: 8,
+            hyp: Hyp::default(),
+            rejection_eps: 1e-4,
+            rejection: true,
+            reweight: true,
+            correction_mode: CorrectionMode::Reject,
+            updates_per_step: 1,
+            ops_lo: 0,
+            ops_hi: 0,
+        }
+    }
+}
+
+/// The memory wall: a global KV token budget shared by concurrent
+/// sequences (the simulated HBM capacity the scheduler packs against).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryConfig {
+    /// Total KV tokens that may be resident at once across all slots.
+    pub global_kv_tokens: usize,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        MemoryConfig { global_kv_tokens: 2048 }
+    }
+}
+
+/// Everything an experiment needs.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub artifact_dir: PathBuf,
+    pub seed: u64,
+    pub mode: RolloutMode,
+    pub sampling: SamplingConfig,
+    pub train: TrainConfig,
+    pub memory: MemoryConfig,
+    /// Optional checkpoint to start from (pretrained base model).
+    pub init_checkpoint: Option<PathBuf>,
+    /// Where to write checkpoints/metrics.
+    pub out_dir: PathBuf,
+}
+
+impl ExperimentConfig {
+    pub fn new(artifact_dir: &Path) -> Self {
+        ExperimentConfig {
+            artifact_dir: artifact_dir.to_path_buf(),
+            seed: 0,
+            mode: RolloutMode::Dense,
+            sampling: SamplingConfig::default(),
+            train: TrainConfig::default(),
+            memory: MemoryConfig::default(),
+            init_checkpoint: None,
+            out_dir: PathBuf::from("runs/default"),
+        }
+    }
+
+    /// Apply `--key value` CLI overrides (also used for config-file lines).
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "artifacts" => self.artifact_dir = PathBuf::from(value),
+            "seed" => self.seed = value.parse().context("seed")?,
+            "mode" => self.mode = RolloutMode::parse(value)?,
+            "temperature" => self.sampling.temperature = value.parse().context("temperature")?,
+            "top-p" => self.sampling.top_p = value.parse().context("top-p")?,
+            "max-response" => self.sampling.max_response = value.parse().context("max-response")?,
+            "steps" => self.train.steps = value.parse().context("steps")?,
+            "prompts-per-step" => {
+                self.train.prompts_per_step = value.parse().context("prompts-per-step")?
+            }
+            "group-size" => self.train.group_size = value.parse().context("group-size")?,
+            "lr" => self.train.hyp.lr = value.parse().context("lr")?,
+            "clip-eps" => self.train.hyp.clip_eps = value.parse().context("clip-eps")?,
+            "kl-coef" => self.train.hyp.kl_coef = value.parse().context("kl-coef")?,
+            "max-grad-norm" => {
+                self.train.hyp.max_grad_norm = value.parse().context("max-grad-norm")?
+            }
+            "rejection-eps" => self.train.rejection_eps = value.parse().context("rejection-eps")?,
+            "rejection" => self.train.rejection = value.parse().context("rejection")?,
+            "reweight" => self.train.reweight = value.parse().context("reweight")?,
+            "correction-mode" => {
+                self.train.correction_mode = CorrectionMode::parse(value)?
+            }
+            "updates-per-step" => {
+                self.train.updates_per_step = value.parse().context("updates-per-step")?
+            }
+            "ops-lo" => self.train.ops_lo = value.parse().context("ops-lo")?,
+            "ops-hi" => self.train.ops_hi = value.parse().context("ops-hi")?,
+            "global-kv-tokens" => {
+                self.memory.global_kv_tokens = value.parse().context("global-kv-tokens")?
+            }
+            "init-checkpoint" => self.init_checkpoint = Some(PathBuf::from(value)),
+            "out-dir" => self.out_dir = PathBuf::from(value),
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Load `key = value` lines ('#' comments) from a file.
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{}:{}: expected key = value", path.display(), lineno + 1))?;
+            self.apply(k.trim(), v.trim())
+                .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Apply all recognized CLI options (unknown options are left for the
+    /// caller to interpret).
+    pub fn apply_cli(&mut self, args: &CliArgs) -> Result<()> {
+        if let Some(path) = args.opt("config") {
+            self.load_file(Path::new(path))?;
+        }
+        for (k, v) in &args.options {
+            if k == "config" {
+                continue;
+            }
+            // Ignore keys this config doesn't know; subcommands have extras.
+            let _ = self.apply(k, v);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(RolloutMode::parse("dense").unwrap(), RolloutMode::Dense);
+        assert_eq!(
+            RolloutMode::parse("sparse-rl:rkv").unwrap(),
+            RolloutMode::SparseRl(Method::RKv)
+        );
+        assert_eq!(
+            RolloutMode::parse("naive:snapkv").unwrap(),
+            RolloutMode::NaiveSparse(Method::SnapKv)
+        );
+        assert!(RolloutMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn corrections_only_for_sparse_rl() {
+        assert!(RolloutMode::parse("sparse-rl:h2o").unwrap().corrections());
+        assert!(!RolloutMode::parse("naive:h2o").unwrap().corrections());
+        assert!(!RolloutMode::Dense.corrections());
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = ExperimentConfig::new(Path::new("artifacts/tiny"));
+        c.apply("steps", "42").unwrap();
+        c.apply("mode", "sparse-rl:rkv").unwrap();
+        c.apply("lr", "0.001").unwrap();
+        assert_eq!(c.train.steps, 42);
+        assert!(c.mode.corrections());
+        assert!((c.train.hyp.lr - 1e-3).abs() < 1e-9);
+        assert!(c.apply("nope", "1").is_err());
+    }
+
+    #[test]
+    fn correction_mode_parsing() {
+        assert_eq!(CorrectionMode::parse("reject").unwrap(), CorrectionMode::Reject);
+        assert_eq!(CorrectionMode::parse("token").unwrap(), CorrectionMode::Clamp);
+        assert!(CorrectionMode::parse("x").is_err());
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        c.apply("correction-mode", "clamp").unwrap();
+        assert_eq!(c.train.correction_mode, CorrectionMode::Clamp);
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("srl_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exp.conf");
+        std::fs::write(&p, "# comment\nsteps = 7\nmode = naive:h2o  # inline\n").unwrap();
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        c.load_file(&p).unwrap();
+        assert_eq!(c.train.steps, 7);
+        assert_eq!(c.mode, RolloutMode::NaiveSparse(Method::H2O));
+    }
+}

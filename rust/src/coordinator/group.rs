@@ -1,0 +1,115 @@
+//! GRPO group-relative advantages (paper Eq. 10).
+//!
+//! For each prompt, G responses are sampled and each reward is normalized
+//! against the group's mean and standard deviation:
+//!   Â_i = (r_i - mean(r)) / std(r)
+//! Degenerate groups (all rewards equal, std = 0) yield zero advantages —
+//! no gradient signal, exactly as in GRPO implementations.
+
+/// Rewards for one group -> advantages.
+pub fn group_advantages(rewards: &[f64]) -> Vec<f64> {
+    let g = rewards.len();
+    if g == 0 {
+        return vec![];
+    }
+    let mean = rewards.iter().sum::<f64>() / g as f64;
+    let var = rewards.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / g as f64;
+    let std = var.sqrt();
+    if std < 1e-8 {
+        return vec![0.0; g];
+    }
+    rewards.iter().map(|r| (r - mean) / std).collect()
+}
+
+/// Advantages for a flat batch laid out as consecutive groups of size `g`.
+pub fn batched_group_advantages(rewards: &[f64], g: usize) -> Vec<f64> {
+    assert!(g > 0 && rewards.len() % g == 0, "batch not divisible into groups");
+    rewards
+        .chunks(g)
+        .flat_map(|grp| group_advantages(grp))
+        .collect()
+}
+
+/// Summary statistics of one rollout batch's rewards.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RewardSummary {
+    pub mean: f64,
+    /// Fraction of groups with non-zero advantage signal (not all-same).
+    pub informative_groups: f64,
+}
+
+pub fn summarize(rewards: &[f64], g: usize) -> RewardSummary {
+    if rewards.is_empty() {
+        return RewardSummary::default();
+    }
+    let mean = rewards.iter().sum::<f64>() / rewards.len() as f64;
+    let groups = rewards.chunks(g);
+    let n_groups = rewards.len().div_ceil(g);
+    let informative = groups
+        .filter(|grp| {
+            let first = grp[0];
+            grp.iter().any(|&r| (r - first).abs() > 1e-9)
+        })
+        .count();
+    RewardSummary { mean, informative_groups: informative as f64 / n_groups as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn binary_rewards_normalize() {
+        // 2 successes of 4: mean 0.5, std 0.5 -> advantages ±1
+        let adv = group_advantages(&[1.0, 0.0, 1.0, 0.0]);
+        assert!((adv[0] - 1.0).abs() < 1e-9);
+        assert!((adv[1] + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_group_zero() {
+        assert_eq!(group_advantages(&[1.0; 8]), vec![0.0; 8]);
+        assert_eq!(group_advantages(&[0.0; 8]), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn prop_advantages_zero_mean_unit_std() {
+        propcheck::quick("adv-normalized", |rng, size| {
+            let g = 2 + size % 14;
+            let rewards: Vec<f64> = (0..g).map(|_| rng.below(2) as f64).collect();
+            let adv = group_advantages(&rewards);
+            let first = rewards[0];
+            if rewards.iter().all(|&r| (r - first).abs() < 1e-12) {
+                if adv.iter().any(|&a| a != 0.0) {
+                    return Err("degenerate group produced signal".into());
+                }
+                return Ok(());
+            }
+            let mean: f64 = adv.iter().sum::<f64>() / g as f64;
+            let var: f64 = adv.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>() / g as f64;
+            if mean.abs() > 1e-9 {
+                return Err(format!("mean {mean}"));
+            }
+            if (var - 1.0).abs() > 1e-6 {
+                return Err(format!("var {var}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batched_layout() {
+        let adv = batched_group_advantages(&[1.0, 0.0, 0.0, 0.0, 1.0, 1.0], 2);
+        assert_eq!(adv.len(), 6);
+        assert!(adv[0] > 0.0 && adv[1] < 0.0);
+        assert_eq!(&adv[4..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn summary_counts_informative() {
+        let s = summarize(&[1.0, 0.0, 1.0, 1.0], 2);
+        assert!((s.mean - 0.75).abs() < 1e-9);
+        assert!((s.informative_groups - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,196 @@
+//! KV memory manager — the "memory wall" (paper §1).
+//!
+//! Simulates the accelerator's KV-cache capacity as a global token pool.
+//! Sequences must *reserve* their worst-case residency before admission
+//! (exactly the OOM-avoidance policy the paper describes: "rollout batch
+//! sizes must be constrained" under dense caches). Dense sequences reserve
+//! `max_seq` tokens (long-tail worst case); sparse sequences reserve only
+//! `budget + buffer`. The resulting admissible width is what drives the
+//! dense-vs-sparse throughput gap in the benches.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Sequence handle for reservations.
+pub type SeqId = u64;
+
+#[derive(Debug)]
+pub struct KvMemoryManager {
+    /// Total KV tokens that may be resident simultaneously.
+    capacity: usize,
+    reserved: usize,
+    seqs: BTreeMap<SeqId, usize>,
+    /// High-water mark of reserved tokens.
+    pub peak_reserved: usize,
+    /// Count of rejected admission attempts (pressure signal).
+    pub rejections: u64,
+}
+
+impl KvMemoryManager {
+    pub fn new(capacity: usize) -> Self {
+        KvMemoryManager {
+            capacity,
+            reserved: 0,
+            seqs: BTreeMap::new(),
+            peak_reserved: 0,
+            rejections: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn reserved(&self) -> usize {
+        self.reserved
+    }
+
+    pub fn available(&self) -> usize {
+        self.capacity - self.reserved
+    }
+
+    /// How many sequences each reserving `per_seq` tokens fit right now.
+    pub fn admissible(&self, per_seq: usize) -> usize {
+        if per_seq == 0 {
+            return usize::MAX;
+        }
+        self.available() / per_seq
+    }
+
+    /// Reserve `tokens` for a sequence; fails when the wall is hit.
+    pub fn reserve(&mut self, seq: SeqId, tokens: usize) -> Result<()> {
+        if self.seqs.contains_key(&seq) {
+            bail!("sequence {seq} already holds a reservation");
+        }
+        if tokens > self.available() {
+            self.rejections += 1;
+            bail!(
+                "KV memory wall: need {tokens}, only {} of {} available",
+                self.available(),
+                self.capacity
+            );
+        }
+        self.reserved += tokens;
+        self.peak_reserved = self.peak_reserved.max(self.reserved);
+        self.seqs.insert(seq, tokens);
+        Ok(())
+    }
+
+    /// Release a sequence's reservation (finished / evicted).
+    pub fn release(&mut self, seq: SeqId) -> Result<usize> {
+        match self.seqs.remove(&seq) {
+            Some(tokens) => {
+                self.reserved -= tokens;
+                Ok(tokens)
+            }
+            None => bail!("sequence {seq} holds no reservation"),
+        }
+    }
+
+    /// Shrink a live reservation (e.g. after compression established a
+    /// tighter bound). Growing is rejected — grow-by-release-and-reserve so
+    /// the wall check always runs.
+    pub fn shrink(&mut self, seq: SeqId, new_tokens: usize) -> Result<()> {
+        match self.seqs.get_mut(&seq) {
+            Some(cur) => {
+                if new_tokens > *cur {
+                    bail!("shrink({seq}) would grow {} -> {}", cur, new_tokens);
+                }
+                self.reserved -= *cur - new_tokens;
+                *cur = new_tokens;
+                Ok(())
+            }
+            None => bail!("sequence {seq} holds no reservation"),
+        }
+    }
+
+    pub fn live_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.capacity == 0 {
+            0.0
+        } else {
+            self.reserved as f64 / self.capacity as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn admission_widths_dense_vs_sparse() {
+        // the paper's core arithmetic: 2048-token wall, dense seqs reserve
+        // 208 (worst case), sparse reserve 48
+        let m = KvMemoryManager::new(2048);
+        assert_eq!(m.admissible(208), 9);
+        assert_eq!(m.admissible(48), 42);
+    }
+
+    #[test]
+    fn wall_rejects_overcommit() {
+        let mut m = KvMemoryManager::new(100);
+        m.reserve(1, 60).unwrap();
+        assert!(m.reserve(2, 60).is_err());
+        assert_eq!(m.rejections, 1);
+        m.release(1).unwrap();
+        m.reserve(2, 60).unwrap();
+    }
+
+    #[test]
+    fn duplicate_and_unknown_rejected() {
+        let mut m = KvMemoryManager::new(100);
+        m.reserve(1, 10).unwrap();
+        assert!(m.reserve(1, 10).is_err());
+        assert!(m.release(99).is_err());
+    }
+
+    #[test]
+    fn shrink_only_shrinks() {
+        let mut m = KvMemoryManager::new(100);
+        m.reserve(1, 50).unwrap();
+        m.shrink(1, 30).unwrap();
+        assert_eq!(m.reserved(), 30);
+        assert!(m.shrink(1, 40).is_err());
+    }
+
+    #[test]
+    fn prop_accounting_conserves() {
+        propcheck::quick("kv-conservation", |rng, size| {
+            let cap = 64 + size * 8;
+            let mut m = KvMemoryManager::new(cap);
+            let mut live: Vec<(SeqId, usize)> = vec![];
+            let mut next_id = 0u64;
+            for _ in 0..200 {
+                if rng.chance(0.6) || live.is_empty() {
+                    let want = 1 + rng.below(cap / 4 + 1);
+                    next_id += 1;
+                    if m.reserve(next_id, want).is_ok() {
+                        live.push((next_id, want));
+                    }
+                } else {
+                    let k = rng.below(live.len());
+                    let (id, _) = live.swap_remove(k);
+                    m.release(id).map_err(|e| e.to_string())?;
+                }
+                let expect: usize = live.iter().map(|(_, t)| t).sum();
+                if m.reserved() != expect {
+                    return Err(format!("reserved {} != sum {}", m.reserved(), expect));
+                }
+                if m.reserved() > cap {
+                    return Err("over capacity".into());
+                }
+                if m.live_sequences() != live.len() {
+                    return Err("live count mismatch".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

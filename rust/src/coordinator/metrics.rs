@@ -1,0 +1,198 @@
+//! Training metrics: named time-series with CSV persistence.
+//!
+//! Every figure in the paper's §5.3 (reward, response length, entropy,
+//! mismatch KL, rejection rate, clip ratio, grad norm) is a column here;
+//! the figure harnesses replay the CSVs.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Column-oriented step metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// step -> (name -> value)
+    rows: Vec<BTreeMap<String, f64>>,
+    names: Vec<String>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a new step row.
+    pub fn begin_step(&mut self) {
+        self.rows.push(BTreeMap::new());
+    }
+
+    /// Record a value for the current step.
+    pub fn push(&mut self, name: &str, value: f64) {
+        if self.rows.is_empty() {
+            self.begin_step();
+        }
+        if !self.names.iter().any(|n| n == name) {
+            self.names.push(name.to_string());
+        }
+        self.rows.last_mut().unwrap().insert(name.to_string(), value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Series for one metric (NaN where missing).
+    pub fn series(&self, name: &str) -> Vec<f64> {
+        self.rows
+            .iter()
+            .map(|r| r.get(name).copied().unwrap_or(f64::NAN))
+            .collect()
+    }
+
+    /// Last value of a metric.
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.rows.iter().rev().find_map(|r| r.get(name)).copied()
+    }
+
+    /// Mean of the final `k` values of a metric (collapse detection etc.).
+    pub fn tail_mean(&self, name: &str, k: usize) -> f64 {
+        let s: Vec<f64> = self
+            .series(name)
+            .into_iter()
+            .filter(|v| !v.is_nan())
+            .collect();
+        if s.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &s[s.len().saturating_sub(k)..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    /// Write all series as CSV (step column first).
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        write!(f, "step")?;
+        for n in &self.names {
+            write!(f, ",{n}")?;
+        }
+        writeln!(f)?;
+        for (i, row) in self.rows.iter().enumerate() {
+            write!(f, "{i}")?;
+            for n in &self.names {
+                match row.get(n) {
+                    Some(v) => write!(f, ",{v}")?,
+                    None => write!(f, ",")?,
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+
+    /// Read a CSV previously written by `write_csv` (figure harnesses
+    /// reuse earlier runs instead of re-training).
+    pub fn read_csv(path: &Path) -> Result<Metrics> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty csv")?;
+        let names: Vec<String> = header.split(',').skip(1).map(str::to_string).collect();
+        let mut m = Metrics { rows: vec![], names: names.clone() };
+        for line in lines {
+            let mut row = BTreeMap::new();
+            for (name, cell) in names.iter().zip(line.split(',').skip(1)) {
+                if let Ok(v) = cell.parse::<f64>() {
+                    row.insert(name.clone(), v);
+                }
+            }
+            m.rows.push(row);
+        }
+        Ok(m)
+    }
+
+    /// One-line human summary of the current step.
+    pub fn step_summary(&self, keys: &[&str]) -> String {
+        let row = match self.rows.last() {
+            Some(r) => r,
+            None => return String::new(),
+        };
+        let mut parts = vec![format!("step {:>4}", self.rows.len() - 1)];
+        for k in keys {
+            if let Some(v) = row.get(*k) {
+                parts.push(format!("{k}={v:.4}"));
+            }
+        }
+        parts.join("  ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_and_tail() {
+        let mut m = Metrics::new();
+        for i in 0..5 {
+            m.begin_step();
+            m.push("reward", i as f64);
+            if i % 2 == 0 {
+                m.push("kl", 0.1 * i as f64);
+            }
+        }
+        assert_eq!(m.series("reward"), vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.last("kl"), Some(0.4));
+        assert!((m.tail_mean("reward", 2) - 3.5).abs() < 1e-9);
+        let kl = m.series("kl");
+        assert!(kl[1].is_nan());
+    }
+
+    #[test]
+    fn csv_read_roundtrip() {
+        let mut m = Metrics::new();
+        for i in 0..4 {
+            m.begin_step();
+            m.push("reward", i as f64 * 0.25);
+            if i % 2 == 0 {
+                m.push("kl", 1e-3 * i as f64);
+            }
+        }
+        let dir = std::env::temp_dir().join("srl_metrics_test");
+        let p = dir.join("rt.csv");
+        m.write_csv(&p).unwrap();
+        let m2 = Metrics::read_csv(&p).unwrap();
+        assert_eq!(m2.len(), 4);
+        assert_eq!(m2.series("reward"), m.series("reward"));
+        assert_eq!(m2.last("kl"), m.last("kl"));
+        // missing cells stay missing
+        assert!(m2.series("kl")[1].is_nan());
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut m = Metrics::new();
+        m.begin_step();
+        m.push("a", 1.0);
+        m.begin_step();
+        m.push("a", 2.0);
+        m.push("b", 3.0);
+        let dir = std::env::temp_dir().join("srl_metrics_test");
+        let p = dir.join("m.csv");
+        m.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "step,a,b");
+        assert_eq!(lines[1], "0,1,");
+        assert_eq!(lines[2], "1,2,3");
+    }
+}

@@ -1,0 +1,28 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! * `rollout`    — batched dense/sparse generation over the AOT artifacts
+//! * `scheduler`  — memory-wall admission (the batch-size story of §1)
+//! * `kv_manager` — the simulated KV memory wall itself
+//! * `group`      — GRPO group advantages (Eq. 10)
+//! * `rejection`  — Sparsity-Aware Rejection Sampling (Eq. 5-6)
+//! * `reweight`   — Importance-based Reweighting inputs (Eq. 7)
+//! * `trainer`    — the full RL loop tying it together
+//! * `eval`       — the 7-benchmark evaluation harness
+//! * `metrics`    — training-dynamics time series (Figs. 1-6)
+
+pub mod eval;
+pub mod group;
+pub mod kv_manager;
+pub mod metrics;
+pub mod rejection;
+pub mod reweight;
+pub mod rollout;
+pub mod scheduler;
+pub mod trainer;
+
+pub use eval::{evaluate, evaluate_suite, EvalResult};
+pub use kv_manager::KvMemoryManager;
+pub use metrics::Metrics;
+pub use rollout::{GenSeq, RolloutEngine};
+pub use scheduler::Scheduler;
+pub use trainer::{StepReport, Trainer};

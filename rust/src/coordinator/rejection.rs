@@ -1,0 +1,137 @@
+//! Sparsity-Aware Rejection Sampling (paper §4.2, Eq. 5-6).
+//!
+//! Per-token sparsity consistency ratio
+//!     ξ_t = π_old(o_t | x, o_<t) / π_sparse(o_t | x, o_<t)
+//! computed from the dense teacher-forcing log-probs (score artifact) and
+//! the sampler log-probs recorded during the sparse rollout. A trajectory
+//! is rejected (M^RS = 0) iff any generated token has ξ_t < ε: a single
+//! support-mismatch token (a hallucination the dense policy would never
+//! produce) invalidates the whole chain of thought.
+
+/// Per-sequence rejection verdict + diagnostics.
+#[derive(Debug, Clone)]
+pub struct RejectionVerdict {
+    /// M^RS ∈ {0, 1} (Eq. 6).
+    pub accept: bool,
+    /// min_t ξ_t over the response.
+    pub min_xi: f64,
+    /// Index (within the response) of the offending token, if rejected.
+    pub first_bad: Option<usize>,
+}
+
+/// Compute ξ_t for one response.
+///
+/// `logp_old[t]` and `logp_sparse[t]` are log-probs of the *same* sampled
+/// token o_t under the dense old policy and the sparse sampler policy.
+pub fn xi_ratios(logp_old: &[f32], logp_sparse: &[f32]) -> Vec<f64> {
+    debug_assert_eq!(logp_old.len(), logp_sparse.len());
+    logp_old
+        .iter()
+        .zip(logp_sparse.iter())
+        .map(|(&o, &s)| ((o as f64) - (s as f64)).exp())
+        .collect()
+}
+
+/// Sequence-level rejection weight M^RS (Eq. 6).
+pub fn verdict(xi: &[f64], eps: f64) -> RejectionVerdict {
+    let mut min_xi = f64::INFINITY;
+    let mut first_bad = None;
+    for (t, &x) in xi.iter().enumerate() {
+        if x < min_xi {
+            min_xi = x;
+        }
+        if x < eps && first_bad.is_none() {
+            first_bad = Some(t);
+        }
+    }
+    if xi.is_empty() {
+        min_xi = 1.0;
+    }
+    RejectionVerdict { accept: first_bad.is_none(), min_xi, first_bad }
+}
+
+/// Batch statistics of the filter (Fig. 5: rejection-rate dynamics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RejectionStats {
+    pub total: usize,
+    pub rejected: usize,
+}
+
+impl RejectionStats {
+    pub fn rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.total as f64
+        }
+    }
+
+    pub fn record(&mut self, v: &RejectionVerdict) {
+        self.total += 1;
+        if !v.accept {
+            self.rejected += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn consistent_tokens_accepted() {
+        // ξ ≈ 1 everywhere
+        let xi = xi_ratios(&[-1.0, -2.0, -0.5], &[-1.0, -2.0, -0.5]);
+        let v = verdict(&xi, 1e-4);
+        assert!(v.accept);
+        assert!((v.min_xi - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_support_mismatch_rejects() {
+        // token 1: dense says -15 nats, sparse sampled it at -1 -> ξ ~ 8e-7
+        let xi = xi_ratios(&[-1.0, -15.0, -0.5], &[-1.0, -1.0, -0.5]);
+        let v = verdict(&xi, 1e-4);
+        assert!(!v.accept);
+        assert_eq!(v.first_bad, Some(1));
+    }
+
+    #[test]
+    fn empty_response_accepted() {
+        let v = verdict(&[], 1e-4);
+        assert!(v.accept);
+    }
+
+    #[test]
+    fn prop_rejection_iff_min_below_eps() {
+        propcheck::quick("rejection-iff", |rng, size| {
+            let n = 1 + size % 60;
+            let logp_sparse: Vec<f32> = (0..n).map(|_| -(rng.next_f32() * 5.0)).collect();
+            let logp_old: Vec<f32> = logp_sparse
+                .iter()
+                .map(|&s| s + (rng.next_f32() - 0.6) * 12.0)
+                .collect();
+            let eps = 1e-4;
+            let xi = xi_ratios(&logp_old, &logp_sparse);
+            let v = verdict(&xi, eps);
+            let has_bad = xi.iter().any(|&x| x < eps);
+            if v.accept == has_bad {
+                return Err(format!("accept={} but has_bad={}", v.accept, has_bad));
+            }
+            if (v.min_xi - xi.iter().cloned().fold(f64::INFINITY, f64::min)).abs() > 1e-12 {
+                return Err("min_xi mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stats_rate() {
+        let mut s = RejectionStats::default();
+        s.record(&verdict(&[1.0], 1e-4));
+        s.record(&verdict(&[1e-6], 1e-4));
+        s.record(&verdict(&[0.9], 1e-4));
+        assert!((s.rate() - 1.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,199 @@
+//! Importance-based Reweighting: assembling the Eq. 7 training inputs.
+//!
+//! The train artifact consumes, per sequence: token ids, a response loss
+//! mask, the advantage Â_i, the per-token ξ_{i,t} (applied OUTSIDE the
+//! clip), the rejection weight M^RS, and the dense-old-policy log-probs
+//! (the denominator of the clipped staleness ratio w_{i,t}). This module
+//! packs ragged rollout results into the fixed [Btr, T] tensors and
+//! computes the mismatch-KL diagnostic (Fig. 3).
+
+use crate::runtime::manifest::Manifest;
+
+/// One finished rollout sequence, ready for training.
+#[derive(Debug, Clone)]
+pub struct TrainSeq {
+    /// Prompt + response token ids (unpadded).
+    pub ids: Vec<i32>,
+    /// Prompt length (response starts here).
+    pub prompt_len: usize,
+    /// Â_i.
+    pub advantage: f64,
+    /// ξ_{i,t} for response tokens (len = response length); 1.0 for the
+    /// uncorrected baselines.
+    pub xi: Vec<f64>,
+    /// M^RS ∈ {0,1}.
+    pub accept: bool,
+    /// Dense old-policy log-prob of each response token.
+    pub logp_old: Vec<f32>,
+}
+
+/// Fixed-shape tensors for one train_step call.
+#[derive(Debug, Clone)]
+pub struct TrainBatch {
+    pub ids: Vec<i32>,       // [B, T]
+    pub loss_mask: Vec<f32>, // [B, T]
+    pub lens: Vec<i32>,      // [B]
+    pub adv: Vec<f32>,       // [B]
+    pub xi: Vec<f32>,        // [B, T]
+    pub mrs: Vec<f32>,       // [B]
+    pub logp_old: Vec<f32>,  // [B, T]
+    /// Number of real (non-padding) rows.
+    pub rows: usize,
+}
+
+/// ξ values are clamped to this ceiling before entering the objective.
+/// The paper applies ξ unclipped; a finite ceiling only guards against
+/// degenerate exp() overflow on f32 (ξ > 1e4 implies the dense policy
+/// *strongly prefers* the sampled token — keeping the weight huge adds
+/// variance without information). Documented deviation, measured in the
+/// ablation bench.
+pub const XI_CAP: f64 = 1e4;
+
+/// Pack up to `train_batch` sequences into one fixed-shape batch.
+///
+/// Rows beyond `seqs.len()` are padding: mrs = 0 so they contribute
+/// nothing to the objective (the artifact multiplies per-sequence terms by
+/// M^RS).
+pub fn pack(manifest: &Manifest, seqs: &[&TrainSeq]) -> TrainBatch {
+    let b = manifest.shapes.train_batch;
+    let t = manifest.config.max_seq;
+    assert!(seqs.len() <= b, "{} seqs > train_batch {}", seqs.len(), b);
+
+    let mut batch = TrainBatch {
+        ids: vec![0; b * t],
+        loss_mask: vec![0.0; b * t],
+        lens: vec![1; b],
+        adv: vec![0.0; b],
+        xi: vec![1.0; b * t],
+        mrs: vec![0.0; b],
+        logp_old: vec![0.0; b * t],
+        rows: seqs.len(),
+    };
+
+    for (row, seq) in seqs.iter().enumerate() {
+        let n = seq.ids.len().min(t);
+        let resp_len = n.saturating_sub(seq.prompt_len);
+        debug_assert!(seq.xi.len() >= resp_len, "xi shorter than response");
+        debug_assert!(seq.logp_old.len() >= resp_len);
+        batch.lens[row] = n as i32;
+        batch.adv[row] = seq.advantage as f32;
+        batch.mrs[row] = if seq.accept { 1.0 } else { 0.0 };
+        for i in 0..n {
+            batch.ids[row * t + i] = seq.ids[i];
+        }
+        for r in 0..resp_len {
+            let col = seq.prompt_len + r;
+            batch.loss_mask[row * t + col] = 1.0;
+            batch.xi[row * t + col] = seq.xi[r].min(XI_CAP).max(0.0) as f32;
+            batch.logp_old[row * t + col] = seq.logp_old[r];
+        }
+    }
+    batch
+}
+
+/// Mismatch KL estimate KL(π_sparse ‖ π_old) over a set of sequences
+/// (Fig. 3): mean over response tokens of (log π_sparse - log π_old)
+/// under samples from π_sparse.
+pub fn mismatch_kl(seqs: &[(&[f32], &[f32])]) -> f64 {
+    // seqs: (logp_sparse, logp_old) pairs per sequence
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for (sp, old) in seqs {
+        debug_assert_eq!(sp.len(), old.len());
+        for (s, o) in sp.iter().zip(old.iter()) {
+            sum += (*s as f64) - (*o as f64);
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::Path;
+
+    fn tiny_manifest() -> Option<Manifest> {
+        // Prefer real artifacts when present (CI builds them first).
+        for cand in ["artifacts/nano", "../artifacts/nano", "../../artifacts/nano"] {
+            if let Ok(m) = Manifest::load(Path::new(cand)) {
+                return Some(m);
+            }
+        }
+        None
+    }
+
+    fn mk_seq(prompt: usize, resp: usize, accept: bool) -> TrainSeq {
+        TrainSeq {
+            ids: (0..(prompt + resp) as i32).map(|i| i % 30).collect(),
+            prompt_len: prompt,
+            advantage: 0.5,
+            xi: vec![1.1; resp],
+            accept,
+            logp_old: vec![-0.7; resp],
+        }
+    }
+
+    #[test]
+    fn pack_masks_and_pads() {
+        let Some(m) = tiny_manifest() else {
+            eprintln!("skipping: no artifacts built");
+            return;
+        };
+        let t = m.config.max_seq;
+        let s1 = mk_seq(5, 7, true);
+        let s2 = mk_seq(3, 2, false);
+        let b = pack(&m, &[&s1, &s2]);
+        assert_eq!(b.rows, 2);
+        assert_eq!(b.lens[0], 12);
+        assert_eq!(b.mrs[0], 1.0);
+        assert_eq!(b.mrs[1], 0.0);
+        // padding rows are inert
+        for row in 2..m.shapes.train_batch {
+            assert_eq!(b.mrs[row], 0.0);
+            assert_eq!(b.adv[row], 0.0);
+            assert!(b.loss_mask[row * t..(row + 1) * t].iter().all(|&x| x == 0.0));
+        }
+        // mask exactly covers the response
+        let mask_sum: f32 = b.loss_mask[..t].iter().sum();
+        assert_eq!(mask_sum, 7.0);
+        assert_eq!(b.loss_mask[5], 1.0);
+        assert_eq!(b.loss_mask[4], 0.0);
+        // xi written at masked positions only
+        assert!((b.xi[5] - 1.1).abs() < 1e-6);
+        assert_eq!(b.xi[4], 1.0);
+    }
+
+    #[test]
+    fn xi_capped() {
+        let Some(m) = tiny_manifest() else {
+            eprintln!("skipping: no artifacts built");
+            return;
+        };
+        let mut s = mk_seq(2, 3, true);
+        s.xi = vec![1e9, 0.5, -1.0]; // -1 can't happen but must clamp safely
+        let b = pack(&m, &[&s]);
+        let t = m.config.max_seq;
+        assert_eq!(b.xi[2], XI_CAP as f32);
+        assert_eq!(b.xi[3], 0.5);
+        assert_eq!(b.xi[4], 0.0);
+        let _ = t;
+    }
+
+    #[test]
+    fn mismatch_kl_signs() {
+        // sparse assigns higher prob to its own samples -> positive KL
+        let sp = [-0.5f32, -0.6];
+        let old = [-1.0f32, -1.2];
+        let kl = mismatch_kl(&[(&sp, &old)]);
+        assert!(kl > 0.0);
+        // identical policies -> zero
+        assert_eq!(mismatch_kl(&[(&sp, &sp)]), 0.0);
+        assert_eq!(mismatch_kl(&[]), 0.0);
+    }
+}

@@ -1,0 +1,329 @@
+//! Batched autoregressive rollout engine (dense and sparse paths).
+//!
+//! Drives the AOT prefill/decode/compress executables over a chunk of
+//! sequences occupying the decode batch's slots. The engine owns sampling
+//! (temperature / top-p), EOS handling, per-token sampler log-prob
+//! recording (this *is* log π_sparse — Eq. 2 — the number the corrections
+//! need), KV compression triggering, and KV accounting.
+//!
+//! The sparse path realizes the paper's rollout: the cache holds at most
+//! `budget + buffer` slots; whenever a sequence fills the buffer, the
+//! compression artifact compacts it back to `budget` retained tokens.
+
+use anyhow::Result;
+
+use crate::compression::KvAccounting;
+use crate::config::{RolloutMode, SamplingConfig};
+use crate::data::task::Task;
+use crate::data::tokenizer::{BOS, EOS, PAD};
+use crate::runtime::{ModelEngine, ParamsLit, Variant};
+use crate::util::rng::Rng;
+
+/// One finished rollout.
+#[derive(Debug, Clone)]
+pub struct GenSeq {
+    /// Caller-side identifier (index into the step's task list).
+    pub task_idx: usize,
+    pub prompt_ids: Vec<i32>,
+    /// Generated tokens (includes the terminating EOS when finished).
+    pub response_ids: Vec<i32>,
+    /// log π_sparse(o_t | ·) of every generated token (the actual sampling
+    /// distribution, i.e. after temperature/top-p modification).
+    pub sampler_logp: Vec<f32>,
+    /// True iff the model emitted EOS before the length cap.
+    pub finished: bool,
+    pub accounting: KvAccounting,
+}
+
+impl GenSeq {
+    /// Full sequence ids: prompt + response.
+    pub fn full_ids(&self) -> Vec<i32> {
+        let mut v = self.prompt_ids.clone();
+        v.extend_from_slice(&self.response_ids);
+        v
+    }
+}
+
+/// Sample from log-probs with temperature/top-p; returns the token and the
+/// log-prob of the token under the *modified* (actually sampled)
+/// distribution. With temperature=1, top_p=1 this is exactly `logp[tok]`.
+pub fn sample_token(rng: &mut Rng, logp: &[f32], s: &SamplingConfig) -> (usize, f32) {
+    if s.temperature < 1e-3 {
+        // greedy decoding: a point mass
+        let (mut best, mut bv) = (0usize, f32::NEG_INFINITY);
+        for (i, &l) in logp.iter().enumerate() {
+            if l > bv {
+                best = i;
+                bv = l;
+            }
+        }
+        return (best, 0.0);
+    }
+    if (s.temperature - 1.0).abs() < 1e-6 && s.top_p >= 1.0 {
+        let tok = rng.sample_logits(logp, 1.0, 1.0);
+        return (tok, logp[tok]);
+    }
+    // general case: materialize the modified distribution
+    let inv_t = 1.0 / s.temperature;
+    let mx = logp.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f32> = logp.iter().map(|&l| ((l - mx) * inv_t).exp()).collect();
+    let z: f32 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+    if s.top_p < 1.0 {
+        let mut idx: Vec<usize> = (0..probs.len()).collect();
+        idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let mut acc = 0.0;
+        let mut cut = probs.len();
+        for (rank, &i) in idx.iter().enumerate() {
+            acc += probs[i];
+            if acc >= s.top_p {
+                cut = rank + 1;
+                break;
+            }
+        }
+        let keep: std::collections::HashSet<usize> = idx[..cut].iter().cloned().collect();
+        let mut mass = 0.0;
+        for (i, p) in probs.iter_mut().enumerate() {
+            if keep.contains(&i) {
+                mass += *p;
+            } else {
+                *p = 0.0;
+            }
+        }
+        for p in probs.iter_mut() {
+            *p /= mass;
+        }
+    }
+    let r = rng.next_f32();
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if r < acc && p > 0.0 {
+            return (i, p.ln());
+        }
+    }
+    let last = probs.iter().rposition(|&p| p > 0.0).unwrap_or(0);
+    (last, probs[last].ln())
+}
+
+/// The rollout engine for one artifact set + mode.
+pub struct RolloutEngine<'a> {
+    pub engine: &'a ModelEngine,
+    pub mode: RolloutMode,
+    pub sampling: SamplingConfig,
+}
+
+impl<'a> RolloutEngine<'a> {
+    pub fn new(engine: &'a ModelEngine, mode: RolloutMode, sampling: SamplingConfig) -> Self {
+        RolloutEngine { engine, mode, sampling }
+    }
+
+    fn variant(&self) -> Variant {
+        if self.mode.is_sparse() {
+            Variant::Sparse
+        } else {
+            Variant::Dense
+        }
+    }
+
+    /// Roll out one chunk of tasks (≤ decode_batch sequences; the
+    /// scheduler guarantees admission). `tasks` pairs a caller-side index
+    /// with the task occupying that slot.
+    pub fn rollout_chunk(
+        &self,
+        params: &[f32],
+        tasks: &[(usize, &Task)],
+        rng: &mut Rng,
+    ) -> Result<Vec<GenSeq>> {
+        // weights are uploaded once per chunk, not once per decode step
+        let params = ParamsLit::new(params);
+        self.rollout_chunk_lit(&params, tasks, rng)
+    }
+
+    /// Same as `rollout_chunk` but with pre-uploaded weights (callers that
+    /// run many chunks per step share one upload).
+    pub fn rollout_chunk_lit(
+        &self,
+        params: &ParamsLit,
+        tasks: &[(usize, &Task)],
+        rng: &mut Rng,
+    ) -> Result<Vec<GenSeq>> {
+        let m = &self.engine.manifest;
+        let r = m.shapes.decode_batch;
+        let p_len = m.config.prompt_len;
+        let max_seq = m.config.max_seq;
+        let variant = self.variant();
+        let capacity = match variant {
+            Variant::Dense => m.shapes.dense_capacity,
+            Variant::Sparse => m.shapes.sparse_capacity,
+        };
+        let budget = m.shapes.budget;
+        assert!(tasks.len() <= r, "chunk of {} > {} slots", tasks.len(), r);
+
+        // ---- prefill ----------------------------------------------------
+        let mut ids = vec![PAD; r * p_len];
+        let mut plens = vec![1i32; r];
+        for (slot, (_, task)) in tasks.iter().enumerate() {
+            let pi = &task.prompt_ids;
+            assert!(pi.len() <= p_len, "prompt {} > {}", pi.len(), p_len);
+            ids[slot * p_len..slot * p_len + pi.len()].copy_from_slice(pi);
+            plens[slot] = pi.len() as i32;
+        }
+        for slot in tasks.len()..r {
+            ids[slot * p_len] = BOS;
+        }
+        let (mut cache, mut logp) = self.engine.prefill(variant, params, &ids, &plens)?;
+
+        // ---- decode loop -------------------------------------------------
+        let vocab = m.config.vocab;
+        let n = tasks.len();
+        let mut active: Vec<bool> = (0..r).map(|i| i < n).collect();
+        let mut lens: Vec<i32> = plens.clone(); // occupied cache slots
+        let mut abs_pos: Vec<i32> = plens.clone(); // absolute next position
+        let mut out: Vec<GenSeq> = tasks
+            .iter()
+            .map(|(idx, task)| GenSeq {
+                task_idx: *idx,
+                prompt_ids: task.prompt_ids.clone(),
+                response_ids: vec![],
+                sampler_logp: vec![],
+                finished: false,
+                accounting: KvAccounting::new(),
+            })
+            .collect();
+        let mut slot_rngs: Vec<Rng> = (0..r).map(|i| rng.fork(i as u64 + 1)).collect();
+
+        let mut tokens = vec![PAD; r];
+        let mut do_mask = vec![0.0f32; r];
+        loop {
+            // sample next token per active slot
+            let mut any_active = false;
+            for slot in 0..n {
+                if !active[slot] {
+                    tokens[slot] = PAD;
+                    continue;
+                }
+                let dist = &logp[slot * vocab..(slot + 1) * vocab];
+                let (tok, lp) = sample_token(&mut slot_rngs[slot], dist, &self.sampling);
+                tokens[slot] = tok as i32;
+                out[slot].response_ids.push(tok as i32);
+                out[slot].sampler_logp.push(lp);
+                let dense_equiv = abs_pos[slot] as usize + 1;
+                out[slot].accounting.step(
+                    ((lens[slot] + 1) as usize).min(capacity),
+                    dense_equiv,
+                );
+                if tok as i32 == EOS {
+                    active[slot] = false;
+                    out[slot].finished = true;
+                    tokens[slot] = tok as i32; // still fed once below
+                }
+                let gen_len = out[slot].response_ids.len();
+                let cap_hit = gen_len >= self.sampling.max_response
+                    || (abs_pos[slot] as usize + 1) >= max_seq;
+                if cap_hit {
+                    active[slot] = false;
+                }
+                any_active = any_active || active[slot];
+            }
+            if !any_active {
+                break; // final tokens recorded; their logits are never needed
+            }
+
+            // compression trigger: a slot whose next write would overflow
+            if variant == Variant::Sparse {
+                let mut any = false;
+                for slot in 0..r {
+                    let need = active[slot] && lens[slot] as usize >= capacity;
+                    do_mask[slot] = if need { 1.0 } else { 0.0 };
+                    if need {
+                        any = true;
+                    }
+                }
+                if any {
+                    let method = self.mode.method().expect("sparse mode has a method");
+                    self.engine.compress(method, &mut cache, &do_mask)?;
+                    for slot in 0..r {
+                        if do_mask[slot] > 0.0 {
+                            out[slot].accounting.compression(capacity - budget);
+                            lens[slot] = budget as i32;
+                        }
+                    }
+                }
+            }
+
+            // one decode step over the whole batch
+            let step_tokens: Vec<i32> = (0..r)
+                .map(|s| if s < n { tokens[s] } else { PAD })
+                .collect();
+            logp = self
+                .engine
+                .decode(params, &mut cache, &lens, &abs_pos, &step_tokens)?;
+            for slot in 0..r {
+                // frozen for finished/idle slots: they take no cache writes
+                // we care about, and freezing avoids spurious compressions
+                if slot < n && (active[slot] || step_tokens[slot] == EOS) {
+                    lens[slot] += 1;
+                    abs_pos[slot] += 1;
+                }
+            }
+            // EOS has been fed exactly once; fully retire those slots
+            for slot in 0..n {
+                if out[slot].finished {
+                    // no-op: active already false
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(t: f32, p: f32) -> SamplingConfig {
+        SamplingConfig { temperature: t, top_p: p, max_response: 16 }
+    }
+
+    #[test]
+    fn sample_token_records_exact_logp_at_unit_temp() {
+        let mut rng = Rng::new(1);
+        let logp = [-0.5f32, -1.5, -3.0];
+        for _ in 0..50 {
+            let (tok, lp) = sample_token(&mut rng, &logp, &cfg(1.0, 1.0));
+            assert_eq!(lp, logp[tok]);
+        }
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Rng::new(2);
+        let logp = [-2.0f32, -0.1, -5.0];
+        for _ in 0..20 {
+            let (tok, _) = sample_token(&mut rng, &logp, &cfg(0.0, 1.0));
+            assert_eq!(tok, 1);
+        }
+    }
+
+    #[test]
+    fn tempered_logp_is_normalized() {
+        let mut rng = Rng::new(3);
+        let logp = [-0.7f32, -1.1, -2.0, -2.5];
+        // collect the modified distribution empirically
+        let mut mass = [0.0f64; 4];
+        let n = 30_000;
+        for _ in 0..n {
+            let (tok, lp) = sample_token(&mut rng, &logp, &cfg(0.7, 0.95));
+            mass[tok] += 1.0;
+            // recorded logp must be a valid log-probability
+            assert!(lp <= 0.0 && lp.is_finite());
+        }
+        let total: f64 = mass.iter().sum();
+        assert_eq!(total as usize, n);
+        // last token should be rarer than first under sharpening
+        assert!(mass[0] > mass[3]);
+    }
+}

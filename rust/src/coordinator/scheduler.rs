@@ -1,0 +1,210 @@
+//! Memory-aware rollout scheduler.
+//!
+//! Packs pending prompts into decode-batch chunks subject to the KV memory
+//! wall: every admitted sequence first reserves its worst-case residency
+//! with the `KvMemoryManager` (dense: `max_seq`; sparse: `budget+buffer`).
+//! The decode artifact is compiled for a fixed slot width R, so a chunk is
+//! `min(R, admissible, pending)` sequences wide — the admissible term is
+//! exactly where dense rollouts lose throughput (paper §1: "rollout batch
+//! sizes must be constrained" to dodge long-tail OOM).
+
+use crate::runtime::Manifest;
+
+use super::kv_manager::KvMemoryManager;
+
+/// One scheduled chunk: which pending items occupy which decode slots.
+#[derive(Debug, Clone)]
+pub struct Chunk {
+    /// Indices into the pending queue, one per occupied slot (slot i of
+    /// the decode batch holds pending[task_of_slot[i]]).
+    pub items: Vec<usize>,
+    /// Reservation per sequence this chunk was admitted with.
+    pub reserve_per_seq: usize,
+}
+
+/// Scheduling statistics for the utilization benches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedulerStats {
+    pub chunks: usize,
+    pub scheduled_seqs: usize,
+    /// Σ over chunks of occupied slots / R (decode-slot utilization).
+    pub slot_utilization_sum: f64,
+    /// Σ over chunks of reserved KV / capacity at admission time.
+    pub kv_utilization_sum: f64,
+}
+
+impl SchedulerStats {
+    pub fn mean_slot_utilization(&self) -> f64 {
+        if self.chunks == 0 {
+            0.0
+        } else {
+            self.slot_utilization_sum / self.chunks as f64
+        }
+    }
+
+    pub fn mean_kv_utilization(&self) -> f64 {
+        if self.chunks == 0 {
+            0.0
+        } else {
+            self.kv_utilization_sum / self.chunks as f64
+        }
+    }
+}
+
+/// Plans chunks over a queue of `n_pending` sequences.
+pub struct Scheduler {
+    /// Decode slot width (from the manifest).
+    pub slots: usize,
+    /// Worst-case KV tokens one sequence may hold.
+    pub reserve_per_seq: usize,
+    pub stats: SchedulerStats,
+}
+
+impl Scheduler {
+    /// `sparse` selects the reservation bound (the whole memory-wall
+    /// story is this one line: capacity-bounded vs length-bounded).
+    pub fn new(manifest: &Manifest, sparse: bool) -> Self {
+        let reserve = if sparse {
+            manifest.shapes.sparse_capacity
+        } else {
+            manifest.config.max_seq
+        };
+        Scheduler {
+            slots: manifest.shapes.decode_batch,
+            reserve_per_seq: reserve,
+            stats: SchedulerStats::default(),
+        }
+    }
+
+    /// Admit the next chunk from `pending` (indices not yet scheduled).
+    /// Reserves KV for every admitted sequence; returns None when nothing
+    /// can be admitted (caller should drain running chunks first).
+    pub fn next_chunk(
+        &mut self,
+        pending: &mut Vec<usize>,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+    ) -> Option<Chunk> {
+        if pending.is_empty() {
+            return None;
+        }
+        let width = self
+            .slots
+            .min(kv.admissible(self.reserve_per_seq))
+            .min(pending.len());
+        if width == 0 {
+            return None;
+        }
+        let items: Vec<usize> = pending.drain(..width).collect();
+        for (slot, _) in items.iter().enumerate() {
+            kv.reserve(seq_id_base + slot as u64, self.reserve_per_seq)
+                .expect("admissible() guaranteed room");
+        }
+        self.stats.chunks += 1;
+        self.stats.scheduled_seqs += width;
+        self.stats.slot_utilization_sum += width as f64 / self.slots as f64;
+        self.stats.kv_utilization_sum += kv.utilization();
+        Some(Chunk { items, reserve_per_seq: self.reserve_per_seq })
+    }
+
+    /// Release a finished chunk's reservations.
+    pub fn finish_chunk(&mut self, chunk: &Chunk, kv: &mut KvMemoryManager, seq_id_base: u64) {
+        for slot in 0..chunk.items.len() {
+            kv.release(seq_id_base + slot as u64).expect("reservation exists");
+        }
+    }
+
+    /// Number of chunks needed for `n` sequences on an idle manager —
+    /// the closed-form the throughput benches check against.
+    pub fn predicted_chunks(&self, n: usize, kv_capacity: usize) -> usize {
+        let width = self.slots.min(kv_capacity / self.reserve_per_seq.max(1)).max(1);
+        n.div_ceil(width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    fn fake_manifest(slots: usize, max_seq: usize, sparse_cap: usize) -> (usize, usize, usize) {
+        // Scheduler only reads three numbers; tests construct it directly.
+        (slots, max_seq, sparse_cap)
+    }
+
+    fn mk(slots: usize, reserve: usize) -> Scheduler {
+        Scheduler { slots, reserve_per_seq: reserve, stats: SchedulerStats::default() }
+    }
+
+    #[test]
+    fn dense_is_memory_limited_sparse_is_slot_limited() {
+        let (slots, max_seq, sparse_cap) = fake_manifest(16, 208, 48);
+        let mut kv = KvMemoryManager::new(2048);
+        let mut dense = mk(slots, max_seq);
+        let mut pending: Vec<usize> = (0..16).collect();
+        let c = dense.next_chunk(&mut pending, &mut kv, 0).unwrap();
+        assert_eq!(c.items.len(), 9); // 2048 / 208
+        dense.finish_chunk(&c, &mut kv, 0);
+        assert_eq!(kv.reserved(), 0);
+
+        let mut sparse = mk(slots, sparse_cap);
+        let mut pending: Vec<usize> = (0..64).collect();
+        let c = sparse.next_chunk(&mut pending, &mut kv, 100).unwrap();
+        assert_eq!(c.items.len(), 16); // slot-limited, not memory-limited
+        sparse.finish_chunk(&c, &mut kv, 100);
+    }
+
+    #[test]
+    fn predicted_chunks_match_actual() {
+        propcheck::quick("sched-prediction", |rng, size| {
+            let slots = 1 + rng.below(32);
+            let reserve = 1 + rng.below(300);
+            let cap = reserve + rng.below(4096);
+            let n = 1 + size;
+            let mut sched = mk(slots, reserve);
+            let mut kv = KvMemoryManager::new(cap);
+            let mut pending: Vec<usize> = (0..n).collect();
+            let mut chunks = 0usize;
+            let mut scheduled = 0usize;
+            while !pending.is_empty() {
+                match sched.next_chunk(&mut pending, &mut kv, 1000) {
+                    Some(c) => {
+                        chunks += 1;
+                        scheduled += c.items.len();
+                        // synchronous drain (static batching)
+                        sched.finish_chunk(&c, &mut kv, 1000);
+                    }
+                    None => return Err("deadlock: nothing admissible".into()),
+                }
+                if chunks > n {
+                    return Err("more chunks than sequences".into());
+                }
+            }
+            if scheduled != n {
+                return Err(format!("scheduled {scheduled} of {n}"));
+            }
+            if chunks != sched.predicted_chunks(n, cap) {
+                return Err(format!(
+                    "chunks {} != predicted {}",
+                    chunks,
+                    sched.predicted_chunks(n, cap)
+                ));
+            }
+            if kv.reserved() != 0 {
+                return Err("kv not fully released".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stats_track_utilization() {
+        let mut kv = KvMemoryManager::new(208 * 4);
+        let mut s = mk(8, 208);
+        let mut pending: Vec<usize> = (0..8).collect();
+        let c = s.next_chunk(&mut pending, &mut kv, 0).unwrap();
+        assert_eq!(c.items.len(), 4);
+        assert!((s.stats.mean_slot_utilization() - 0.5).abs() < 1e-9);
+        assert!((s.stats.mean_kv_utilization() - 1.0).abs() < 1e-9);
+    }
+}

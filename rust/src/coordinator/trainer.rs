@@ -1,0 +1,338 @@
+//! The GRPO / Sparse-RL training loop (paper §4, §5.1).
+//!
+//! One RL step:
+//!   1. sample P prompts, G rollouts each (group layout preserved),
+//!   2. schedule rollout chunks against the KV memory wall,
+//!   3. generate with π_sparse (or dense), recording sampler log-probs,
+//!   4. score every trajectory under the dense θ_old (teacher forcing) —
+//!      the π_old of Eq. 4,
+//!   5. verify rewards, compute group advantages (Eq. 10),
+//!   6. Sparse-RL corrections: ξ ratios (Eq. 5) + rejection M^RS (Eq. 6),
+//!   7. minibatch Eq. 7 updates via the train artifact (Adam inside).
+//!
+//! The mode switches reproduce the paper's baselines exactly:
+//!   dense          -> ξ≡1, M^RS≡1, rollouts uncompressed (GRPO-Dense)
+//!   naive:<m>      -> ξ≡1, M^RS≡1, rollouts compressed  (collapse-prone)
+//!   sparse-rl:<m>  -> full corrections                   (ours)
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::data::task::{looks_repetitive, Task};
+use crate::runtime::{ModelEngine, ParamsLit, TrainState};
+use crate::util::rng::Rng;
+
+use super::group::{batched_group_advantages, summarize};
+use super::kv_manager::KvMemoryManager;
+use super::metrics::Metrics;
+use super::rejection::{self, RejectionStats};
+use super::reweight::{self, TrainSeq};
+use super::rollout::{GenSeq, RolloutEngine};
+use super::scheduler::Scheduler;
+
+/// Everything produced by one RL step, for logging/analysis.
+#[derive(Debug, Clone, Default)]
+pub struct StepReport {
+    pub reward_mean: f64,
+    pub response_len_mean: f64,
+    pub entropy_mean: f64,
+    pub mismatch_kl: f64,
+    pub rejection_rate: f64,
+    pub anomaly_rate: f64,
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub clip_frac: f64,
+    pub toks_saving: f64,
+    pub rollout_secs: f64,
+    pub train_secs: f64,
+    pub rollout_chunks: usize,
+    pub gen_tokens: usize,
+}
+
+/// The trainer: owns learner state, data order, metrics, and the wall.
+pub struct Trainer<'a> {
+    pub engine: &'a ModelEngine,
+    pub cfg: ExperimentConfig,
+    pub state: TrainState,
+    pub tasks: Vec<Task>,
+    pub rng: Rng,
+    pub metrics: Metrics,
+    pub kv: KvMemoryManager,
+    cursor: usize,
+    order: Vec<usize>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(
+        engine: &'a ModelEngine,
+        cfg: ExperimentConfig,
+        state: TrainState,
+        tasks: Vec<Task>,
+    ) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut order: Vec<usize> = (0..tasks.len()).collect();
+        rng.shuffle(&mut order);
+        let kv = KvMemoryManager::new(cfg.memory.global_kv_tokens);
+        Trainer { engine, cfg, state, tasks, rng, metrics: Metrics::new(), kv, cursor: 0, order }
+    }
+
+    fn next_task_idx(&mut self) -> usize {
+        if self.cursor >= self.order.len() {
+            self.cursor = 0;
+            self.rng.shuffle(&mut self.order);
+        }
+        let idx = self.order[self.cursor];
+        self.cursor += 1;
+        idx
+    }
+
+    /// Run all rollouts for one step through the memory-wall scheduler.
+    /// Returns sequences in prompt-major group order.
+    pub fn rollout_batch(&mut self, task_indices: &[usize]) -> Result<(Vec<GenSeq>, usize)> {
+        let g = self.cfg.train.group_size;
+        let n = task_indices.len() * g;
+        let rollout = RolloutEngine::new(self.engine, self.cfg.mode, self.cfg.sampling);
+        let mut scheduler = Scheduler::new(&self.engine.manifest, self.cfg.mode.is_sparse());
+        // pending holds flat sequence ids: seq s belongs to prompt s / g
+        let mut pending: Vec<usize> = (0..n).collect();
+        let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
+        let mut chunk_base = 0u64;
+        let mut chunks = 0usize;
+        let params = ParamsLit::new(&self.state.params);
+        while !pending.is_empty() {
+            let chunk = scheduler
+                .next_chunk(&mut pending, &mut self.kv, chunk_base)
+                .expect("static batching drains synchronously, admission cannot stall");
+            let tasks: Vec<(usize, &Task)> = chunk
+                .items
+                .iter()
+                .map(|&s| (s, &self.tasks[task_indices[s / g]]))
+                .collect();
+            let seqs = rollout.rollout_chunk_lit(&params, &tasks, &mut self.rng)?;
+            for seq in seqs {
+                let s = seq.task_idx;
+                results[s] = Some(seq);
+            }
+            scheduler.finish_chunk(&chunk, &mut self.kv, chunk_base);
+            chunk_base += chunk.items.len() as u64;
+            chunks += 1;
+        }
+        Ok((results.into_iter().map(|s| s.expect("all slots filled")).collect(), chunks))
+    }
+
+    /// Dense teacher-forcing scores for a set of sequences under the
+    /// current (θ_old) weights. Returns per-seq (logp_old, entropy) over
+    /// *response* tokens.
+    pub fn score_sequences(&self, seqs: &[GenSeq]) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+        let m = &self.engine.manifest;
+        let (b, t) = (m.shapes.train_batch, m.config.max_seq);
+        let mut out = Vec::with_capacity(seqs.len());
+        for chunk in seqs.chunks(b) {
+            let mut ids = vec![0i32; b * t];
+            let mut lens = vec![1i32; b];
+            for (row, seq) in chunk.iter().enumerate() {
+                let full = seq.full_ids();
+                let n = full.len().min(t);
+                ids[row * t..row * t + n].copy_from_slice(&full[..n]);
+                lens[row] = n as i32;
+            }
+            let (logp, ent) = self.engine.score(&self.state.params, &ids, &lens)?;
+            for (row, seq) in chunk.iter().enumerate() {
+                let p0 = seq.prompt_ids.len();
+                let rl = seq.response_ids.len().min(t - p0);
+                let lo: Vec<f32> = (0..rl).map(|r| logp[row * t + p0 + r]).collect();
+                let en: Vec<f32> = (0..rl).map(|r| ent[row * t + p0 + r]).collect();
+                out.push((lo, en));
+            }
+        }
+        Ok(out)
+    }
+
+    /// One full RL step.
+    pub fn rl_step(&mut self) -> Result<StepReport> {
+        let cfg = self.cfg.clone();
+        let g = cfg.train.group_size;
+        let task_indices: Vec<usize> =
+            (0..cfg.train.prompts_per_step).map(|_| self.next_task_idx()).collect();
+
+        // ---- rollouts ---------------------------------------------------
+        let t0 = Instant::now();
+        let (seqs, chunks) = self.rollout_batch(&task_indices)?;
+        let rollout_secs = t0.elapsed().as_secs_f64();
+
+        // ---- dense scoring (π_old) --------------------------------------
+        let scored = self.score_sequences(&seqs)?;
+
+        // ---- rewards + advantages ---------------------------------------
+        let rewards: Vec<f64> = seqs
+            .iter()
+            .map(|s| self.tasks[task_indices[s.task_idx / g]].reward(&s.response_ids))
+            .collect();
+        let advantages = batched_group_advantages(&rewards, g);
+        let summary = summarize(&rewards, g);
+
+        // ---- corrections -------------------------------------------------
+        let corrections = cfg.mode.corrections();
+        let mut rej_stats = RejectionStats::default();
+        let mut anomalies = 0usize;
+        let mut train_seqs: Vec<TrainSeq> = Vec::with_capacity(seqs.len());
+        let mut kl_pairs: Vec<(&[f32], &[f32])> = Vec::with_capacity(seqs.len());
+        for (i, seq) in seqs.iter().enumerate() {
+            let (logp_old, _ent) = &scored[i];
+            let rl = logp_old.len();
+            let sampler = &seq.sampler_logp[..rl];
+            if looks_repetitive(&seq.response_ids, 5) {
+                anomalies += 1;
+            }
+            let (xi, accept) = if corrections {
+                let mut xi = rejection::xi_ratios(logp_old, sampler);
+                let verdict = rejection::verdict(&xi, cfg.train.rejection_eps);
+                rej_stats.record(&verdict);
+                let accept = match cfg.train.correction_mode {
+                    // Eq. 6: hard sequence-level veto
+                    crate::config::CorrectionMode::Reject => {
+                        !cfg.train.rejection || verdict.accept
+                    }
+                    // future-work variant: keep the trajectory, clamp the
+                    // offending ratios so no token dominates or vanishes
+                    crate::config::CorrectionMode::Clamp => {
+                        let eps = cfg.train.rejection_eps;
+                        for x in xi.iter_mut() {
+                            *x = x.max(eps);
+                        }
+                        true
+                    }
+                };
+                let xi = if cfg.train.reweight { xi } else { vec![1.0; rl] };
+                (xi, accept)
+            } else {
+                (vec![1.0; rl], true)
+            };
+            train_seqs.push(TrainSeq {
+                ids: seq.full_ids(),
+                prompt_len: seq.prompt_ids.len(),
+                advantage: advantages[i],
+                xi,
+                accept,
+                logp_old: logp_old.clone(),
+            });
+            kl_pairs.push((sampler, &logp_old[..]));
+        }
+        let mismatch_kl = reweight::mismatch_kl(&kl_pairs);
+
+        // ---- policy updates ----------------------------------------------
+        let t1 = Instant::now();
+        let btr = self.engine.manifest.shapes.train_batch;
+        let mut order: Vec<usize> = (0..train_seqs.len()).collect();
+        let mut loss_acc = 0.0;
+        let mut gnorm_acc = 0.0f64;
+        let mut clip_acc = 0.0;
+        let mut _ent_acc = 0.0;
+        let mut n_updates = 0usize;
+        for _ in 0..cfg.train.updates_per_step {
+            self.rng.shuffle(&mut order);
+            for mb in order.chunks(btr) {
+                let refs: Vec<&TrainSeq> = mb.iter().map(|&i| &train_seqs[i]).collect();
+                let batch = reweight::pack(&self.engine.manifest, &refs);
+                let stats = self.engine.train(
+                    &mut self.state,
+                    &batch.ids,
+                    &batch.loss_mask,
+                    &batch.lens,
+                    &batch.adv,
+                    &batch.xi,
+                    &batch.mrs,
+                    &batch.logp_old,
+                    cfg.train.hyp,
+                )?;
+                loss_acc += stats.loss;
+                gnorm_acc = gnorm_acc.max(stats.grad_norm);
+                clip_acc += stats.clip_frac;
+                _ent_acc += stats.entropy;
+                n_updates += 1;
+            }
+        }
+        let train_secs = t1.elapsed().as_secs_f64();
+
+        // ---- accounting + metrics ----------------------------------------
+        let mut acct = crate::compression::KvAccounting::new();
+        for s in &seqs {
+            acct.merge(&s.accounting);
+        }
+        let gen_tokens: usize = seqs.iter().map(|s| s.response_ids.len()).sum();
+        let report = StepReport {
+            reward_mean: summary.mean,
+            response_len_mean: gen_tokens as f64 / seqs.len() as f64,
+            entropy_mean: {
+                let (mut s, mut n) = (0.0, 0usize);
+                for (_, ent) in &scored {
+                    for &e in ent {
+                        s += e as f64;
+                        n += 1;
+                    }
+                }
+                if n == 0 { 0.0 } else { s / n as f64 }
+            },
+            mismatch_kl,
+            rejection_rate: rej_stats.rate(),
+            anomaly_rate: anomalies as f64 / seqs.len() as f64,
+            loss: loss_acc / n_updates.max(1) as f64,
+            grad_norm: gnorm_acc,
+            clip_frac: clip_acc / n_updates.max(1) as f64,
+            toks_saving: acct.toks_saving(),
+            rollout_secs,
+            train_secs,
+            rollout_chunks: chunks,
+            gen_tokens,
+        };
+
+        self.metrics.begin_step();
+        self.metrics.push("reward", report.reward_mean);
+        self.metrics.push("response_len", report.response_len_mean);
+        self.metrics.push("entropy", report.entropy_mean);
+        self.metrics.push("mismatch_kl", report.mismatch_kl);
+        self.metrics.push("rejection_rate", report.rejection_rate);
+        self.metrics.push("anomaly_rate", report.anomaly_rate);
+        self.metrics.push("loss", report.loss);
+        self.metrics.push("grad_norm", report.grad_norm);
+        self.metrics.push("clip_frac", report.clip_frac);
+        self.metrics.push("toks_saving", report.toks_saving);
+        self.metrics.push("rollout_secs", report.rollout_secs);
+        self.metrics.push("train_secs", report.train_secs);
+        self.metrics.push("informative_groups", summary.informative_groups);
+        Ok(report)
+    }
+
+    /// Supervised pretraining over worked examples (base-model analog).
+    /// Returns the per-step losses.
+    pub fn pretrain(&mut self, corpus: &[Task], steps: usize, log_every: usize) -> Result<Vec<f64>> {
+        let m = &self.engine.manifest;
+        let (b, t) = (m.shapes.train_batch, m.config.max_seq);
+        let mut losses = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let mut ids = vec![0i32; b * t];
+            let mut mask = vec![0.0f32; b * t];
+            let mut lens = vec![1i32; b];
+            for row in 0..b {
+                let task = &corpus[self.rng.below(corpus.len())];
+                let mut full = task.prompt_ids.clone();
+                full.extend(task.target_ids());
+                let n = full.len().min(t);
+                ids[row * t..row * t + n].copy_from_slice(&full[..n]);
+                lens[row] = n as i32;
+                // predict every token after BOS (full-sequence LM loss)
+                for i in 1..n {
+                    mask[row * t + i] = 1.0;
+                }
+            }
+            let loss = self.engine.lm(&mut self.state, &ids, &mask, &lens, self.cfg.train.hyp)?;
+            losses.push(loss);
+            if log_every > 0 && (step % log_every == 0 || step + 1 == steps) {
+                println!("  pretrain step {step:>5}  ce-loss {loss:.4}");
+            }
+        }
+        Ok(losses)
+    }
+}

@@ -1,0 +1,240 @@
+//! The 7-benchmark evaluation suite + training split (paper Table 3 analog).
+//!
+//! Each paper benchmark maps to a deterministic synthetic split graded by
+//! expression depth (operator count), with the *same item counts* as the
+//! paper's Table 3. Seeds are fixed per benchmark, and the training split
+//! uses a disjoint seed space, so train/eval never overlap.
+
+use crate::util::rng::Rng;
+
+use super::task::Task;
+
+/// Evaluation protocol for a benchmark (paper §5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    /// One greedy-ish sample per problem.
+    Pass1,
+    /// Mean accuracy over k samples per problem (AIME24/AMC23: Avg@32).
+    AvgK(usize),
+}
+
+/// A benchmark definition.
+#[derive(Debug, Clone)]
+pub struct Benchmark {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub size: usize,
+    pub ops_lo: usize,
+    pub ops_hi: usize,
+    pub protocol: Protocol,
+    seed: u64,
+}
+
+/// The 7 benchmarks, mirroring paper Table 3 sizes and difficulty ordering.
+pub fn suite() -> Vec<Benchmark> {
+    vec![
+        Benchmark {
+            name: "gsm8k",
+            description: "grade-school analog: shallow 1-2 op chains",
+            size: 1319,
+            ops_lo: 1,
+            ops_hi: 2,
+            protocol: Protocol::Pass1,
+            seed: 0xB1,
+        },
+        Benchmark {
+            name: "math500",
+            description: "MATH500 analog: 2-3 op chains",
+            size: 500,
+            ops_lo: 2,
+            ops_hi: 3,
+            protocol: Protocol::Pass1,
+            seed: 0xB2,
+        },
+        Benchmark {
+            name: "gaokao",
+            description: "Gaokao analog: 3 op chains",
+            size: 385,
+            ops_lo: 3,
+            ops_hi: 3,
+            protocol: Protocol::Pass1,
+            seed: 0xB3,
+        },
+        Benchmark {
+            name: "minerva",
+            description: "Minerva analog: 3-4 op chains",
+            size: 272,
+            ops_lo: 3,
+            ops_hi: 4,
+            protocol: Protocol::Pass1,
+            seed: 0xB4,
+        },
+        Benchmark {
+            name: "olympiad",
+            description: "OlympiadBench analog: 4-5 op chains",
+            size: 675,
+            ops_lo: 4,
+            ops_hi: 5,
+            protocol: Protocol::Pass1,
+            seed: 0xB5,
+        },
+        Benchmark {
+            name: "aime24",
+            description: "AIME24 analog: deepest 5-6 op chains, Avg@32",
+            size: 30,
+            ops_lo: 5,
+            ops_hi: 6,
+            protocol: Protocol::AvgK(32),
+            seed: 0xB6,
+        },
+        Benchmark {
+            name: "amc23",
+            description: "AMC23 analog: 4-6 op chains, Avg@32",
+            size: 40,
+            ops_lo: 4,
+            ops_hi: 6,
+            protocol: Protocol::AvgK(32),
+            seed: 0xB7,
+        },
+    ]
+}
+
+impl Benchmark {
+    /// Materialize the benchmark's tasks (deterministic).
+    pub fn tasks(&self, max_prompt: usize) -> Vec<Task> {
+        let mut rng = Rng::new(0x5EED_0000 ^ self.seed);
+        (0..self.size)
+            .map(|i| {
+                let ops = self.ops_lo + (i % (self.ops_hi - self.ops_lo + 1));
+                Task::gen(&mut rng, ops, max_prompt)
+            })
+            .collect()
+    }
+
+    pub fn samples_per_item(&self) -> usize {
+        match self.protocol {
+            Protocol::Pass1 => 1,
+            Protocol::AvgK(k) => k,
+        }
+    }
+}
+
+/// Training split analog of SimpleRL-Zoo (paper §5.1): disjoint seed space
+/// from all benchmarks. The paper's Easy/Medium/Hard split maps to the op
+/// range; §5.1's observation that "successful training critically depends
+/// on using data that matches the model's capability" holds here too —
+/// weaker scale points train on shallower ranges (see
+/// `difficulty_for_model`).
+pub fn training_split_ops(
+    n: usize,
+    max_prompt: usize,
+    seed: u64,
+    ops_lo: usize,
+    ops_hi: usize,
+) -> Vec<Task> {
+    assert!(ops_lo >= 1 && ops_hi >= ops_lo);
+    let mut rng = Rng::new(0x7EA1_0000 ^ seed);
+    (0..n)
+        .map(|i| {
+            let ops = ops_lo + (i % (ops_hi - ops_lo + 1));
+            Task::gen(&mut rng, ops, max_prompt)
+        })
+        .collect()
+}
+
+/// Default split: the paper's "hard" analog (3-5 ops).
+pub fn training_split(n: usize, max_prompt: usize, seed: u64) -> Vec<Task> {
+    training_split_ops(n, max_prompt, seed, 3, 5)
+}
+
+/// Capability-matched training difficulty per model scale (paper §5.1).
+pub fn difficulty_for_model(model: &str) -> (usize, usize) {
+    match model {
+        "nano" => (1, 2),
+        "tiny" => (1, 3),
+        "small" => (2, 4),
+        _ => (3, 5),
+    }
+}
+
+/// Pretraining corpus: worked examples across all difficulties (1-6 ops),
+/// the analog of the base model's math pretraining exposure.
+pub fn pretrain_corpus(n: usize, max_prompt: usize, seed: u64) -> Vec<Task> {
+    let mut rng = Rng::new(0xC0DE_0000 ^ seed);
+    (0..n)
+        .map(|i| {
+            let ops = 1 + (i % 6);
+            Task::gen(&mut rng, ops, max_prompt)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_matches_table3_sizes() {
+        let s = suite();
+        let sizes: Vec<(&str, usize)> = s.iter().map(|b| (b.name, b.size)).collect();
+        assert_eq!(
+            sizes,
+            vec![
+                ("gsm8k", 1319),
+                ("math500", 500),
+                ("gaokao", 385),
+                ("minerva", 272),
+                ("olympiad", 675),
+                ("aime24", 30),
+                ("amc23", 40),
+            ]
+        );
+    }
+
+    #[test]
+    fn benchmarks_deterministic() {
+        let b = &suite()[1];
+        let a1 = b.tasks(48);
+        let a2 = b.tasks(48);
+        assert_eq!(a1.len(), 500);
+        for (x, y) in a1.iter().zip(a2.iter()) {
+            assert_eq!(x.prompt_text, y.prompt_text);
+        }
+    }
+
+    #[test]
+    fn difficulty_in_range() {
+        for b in suite() {
+            // sample a prefix to keep the test fast
+            for t in b.tasks(48).into_iter().take(25) {
+                let ops = t.expr.n_ops();
+                assert!(
+                    (b.ops_lo..=b.ops_hi).contains(&ops),
+                    "{}: {} ops outside [{}, {}]",
+                    b.name,
+                    ops,
+                    b.ops_lo,
+                    b.ops_hi
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_disjoint_from_eval() {
+        // prompt-string collision between train split and gsm8k analog
+        // should be essentially absent for deeper-op train items
+        let train = training_split(500, 48, 0);
+        let eval: std::collections::HashSet<String> =
+            suite()[4].tasks(48).iter().map(|t| t.prompt_text.clone()).collect();
+        let collisions = train.iter().filter(|t| eval.contains(&t.prompt_text)).count();
+        assert!(collisions < 10, "{collisions} train/eval collisions");
+    }
+
+    #[test]
+    fn avg_at_32_protocol() {
+        let s = suite();
+        assert_eq!(s[5].samples_per_item(), 32);
+        assert_eq!(s[0].samples_per_item(), 1);
+    }
+}

@@ -1,0 +1,244 @@
+//! Arithmetic expression ASTs: generation, evaluation, chain-of-thought
+//! rendering.
+//!
+//! The synthetic analog of the paper's math training data (DESIGN.md §2):
+//! random expression trees over digits 0-9 with {+, -, *}, every
+//! intermediate value constrained to |v| <= 99 so chains stay within the
+//! token budget of the task format. Difficulty = number of operators,
+//! mirroring the paper's Easy/Medium/Hard splits by MATH level.
+
+use crate::util::rng::Rng;
+
+/// Maximum magnitude of any intermediate (and final) value.
+pub const MAX_ABS: i64 = 99;
+
+/// Binary operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Add,
+    Sub,
+    Mul,
+}
+
+impl Op {
+    pub fn apply(self, a: i64, b: i64) -> i64 {
+        match self {
+            Op::Add => a + b,
+            Op::Sub => a - b,
+            Op::Mul => a * b,
+        }
+    }
+
+    pub fn symbol(self) -> char {
+        match self {
+            Op::Add => '+',
+            Op::Sub => '-',
+            Op::Mul => '*',
+        }
+    }
+}
+
+/// Expression tree. Leaves are single digits 0-9.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Expr {
+    Leaf(i64),
+    Node(Op, Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn value(&self) -> i64 {
+        match self {
+            Expr::Leaf(v) => *v,
+            Expr::Node(op, a, b) => op.apply(a.value(), b.value()),
+        }
+    }
+
+    pub fn n_ops(&self) -> usize {
+        match self {
+            Expr::Leaf(_) => 0,
+            Expr::Node(_, a, b) => 1 + a.n_ops() + b.n_ops(),
+        }
+    }
+
+    /// Render with full parentheses around compound subtrees (top level
+    /// unparenthesized): `(3+4)*2`, `((3+4)*(2-1))-5`.
+    pub fn render(&self) -> String {
+        match self {
+            Expr::Leaf(v) => v.to_string(),
+            Expr::Node(op, a, b) => {
+                format!("{}{}{}", Self::child(a), op.symbol(), Self::child(b))
+            }
+        }
+    }
+
+    fn child(e: &Expr) -> String {
+        match e {
+            Expr::Leaf(v) => v.to_string(),
+            node => format!("({})", node.render()),
+        }
+    }
+
+    /// All intermediate values are within [-MAX_ABS, MAX_ABS].
+    pub fn bounded(&self) -> bool {
+        match self {
+            Expr::Leaf(v) => v.abs() <= MAX_ABS,
+            Expr::Node(_, a, b) => {
+                a.bounded() && b.bounded() && self.value().abs() <= MAX_ABS
+            }
+        }
+    }
+
+    /// Reduce the leftmost innermost operation once; returns the reduction
+    /// step `(a, op, b, result)` and the new tree, or None for a leaf.
+    pub fn reduce_step(&self) -> Option<((i64, Op, i64, i64), Expr)> {
+        match self {
+            Expr::Leaf(_) => None,
+            Expr::Node(op, a, b) => {
+                if let Some((step, a2)) = a.reduce_step() {
+                    return Some((step, Expr::Node(*op, Box::new(a2), b.clone())));
+                }
+                if let Some((step, b2)) = b.reduce_step() {
+                    return Some((step, Expr::Node(*op, a.clone(), Box::new(b2))));
+                }
+                let (av, bv) = (a.value(), b.value());
+                let r = op.apply(av, bv);
+                Some(((av, *op, bv, r), Expr::Leaf(r)))
+            }
+        }
+    }
+
+    /// Render the chain-of-thought: one `a{op}b=c;` line per reduction,
+    /// ending with `#answer`. This is the supervised target format and what
+    /// a well-trained policy reproduces during RL rollouts.
+    pub fn chain_of_thought(&self) -> String {
+        let mut out = String::new();
+        let mut cur = self.clone();
+        while let Some(((a, op, b, r), next)) = cur.reduce_step() {
+            out.push_str(&format!("{}{}{}={};", a, op.symbol(), b, r));
+            cur = next;
+        }
+        out.push('#');
+        out.push_str(&self.value().to_string());
+        out
+    }
+}
+
+/// Generate a random expression with exactly `n_ops` operators and all
+/// intermediates bounded. Rejection-samples subtrees (cheap at this size).
+pub fn gen_expr(rng: &mut Rng, n_ops: usize) -> Expr {
+    loop {
+        let e = gen_unchecked(rng, n_ops);
+        if e.bounded() {
+            return e;
+        }
+    }
+}
+
+fn gen_unchecked(rng: &mut Rng, n_ops: usize) -> Expr {
+    if n_ops == 0 {
+        return Expr::Leaf(rng.range_i64(0, 9));
+    }
+    // split remaining ops between the two children
+    let left_ops = rng.below(n_ops);
+    let right_ops = n_ops - 1 - left_ops;
+    let op = match rng.below(3) {
+        0 => Op::Add,
+        1 => Op::Sub,
+        _ => Op::Mul,
+    };
+    Expr::Node(
+        op,
+        Box::new(gen_unchecked(rng, left_ops)),
+        Box::new(gen_unchecked(rng, right_ops)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn leaf_renders_value() {
+        assert_eq!(Expr::Leaf(7).render(), "7");
+        assert_eq!(Expr::Leaf(7).chain_of_thought(), "#7");
+    }
+
+    #[test]
+    fn node_renders_with_parens() {
+        let e = Expr::Node(
+            Op::Mul,
+            Box::new(Expr::Node(
+                Op::Add,
+                Box::new(Expr::Leaf(3)),
+                Box::new(Expr::Leaf(4)),
+            )),
+            Box::new(Expr::Leaf(2)),
+        );
+        assert_eq!(e.render(), "(3+4)*2");
+        assert_eq!(e.value(), 14);
+        assert_eq!(e.chain_of_thought(), "3+4=7;7*2=14;#14");
+    }
+
+    #[test]
+    fn prop_generated_exprs_valid() {
+        propcheck::quick("expr-gen", |rng, size| {
+            let n_ops = size % 7;
+            let e = gen_expr(rng, n_ops);
+            if e.n_ops() != n_ops {
+                return Err(format!("wanted {n_ops} ops, got {}", e.n_ops()));
+            }
+            if !e.bounded() {
+                return Err(format!("unbounded expr {}", e.render()));
+            }
+            // CoT's final answer always equals the tree value
+            let cot = e.chain_of_thought();
+            let ans: i64 = cot.rsplit('#').next().unwrap().parse().unwrap();
+            if ans != e.value() {
+                return Err(format!("cot answer {ans} != value {}", e.value()));
+            }
+            // number of ';' steps equals n_ops
+            let steps = cot.matches(';').count();
+            if steps != n_ops {
+                return Err(format!("{steps} CoT steps for {n_ops} ops"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_cot_steps_are_correct_arithmetic() {
+        propcheck::quick("cot-steps", |rng, size| {
+            let e = gen_expr(rng, 1 + size % 5);
+            for step in e.chain_of_thought().split(';') {
+                if step.starts_with('#') || step.is_empty() {
+                    continue;
+                }
+                let (lhs, rhs) = step.split_once('=').ok_or("step missing '='")?;
+                let rhs: i64 = rhs.parse().map_err(|_| "bad rhs")?;
+                // parse "a{op}b" with possibly negative a and b
+                let mut op_idx = None;
+                for (i, c) in lhs.char_indices().skip(1) {
+                    if matches!(c, '+' | '*') || (c == '-' && !lhs[..i].ends_with(|p: char| "+-*".contains(p))) {
+                        op_idx = Some(i);
+                        break;
+                    }
+                }
+                let i = op_idx.ok_or("no op found")?;
+                let a: i64 = lhs[..i].parse().map_err(|_| "bad a")?;
+                let opc = lhs.as_bytes()[i] as char;
+                let b: i64 = lhs[i + 1..].parse().map_err(|_| "bad b")?;
+                let expect = match opc {
+                    '+' => a + b,
+                    '-' => a - b,
+                    '*' => a * b,
+                    _ => return Err("bad op".into()),
+                };
+                if expect != rhs {
+                    return Err(format!("step {step} wrong"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

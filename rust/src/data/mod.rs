@@ -1,0 +1,10 @@
+//! Data substrate: tokenizer, synthetic arithmetic-CoT task generator,
+//! verifier, and the 7-benchmark evaluation suite (paper Table 3 analog).
+
+pub mod benchmarks;
+pub mod expr;
+pub mod task;
+pub mod tokenizer;
+
+pub use benchmarks::{suite, training_split, Benchmark, Protocol};
+pub use task::{verify, Task};

@@ -1,0 +1,167 @@
+//! Task formatting + the rule-based binary verifier (paper §5.1: reward 1
+//! for a correct final answer, 0 otherwise).
+//!
+//! Task string format (all within the 32-char vocabulary):
+//!   prompt:   `Q:(3+4)*2=?A:`
+//!   response: `3+4=7;7*2=14;#14` + EOS
+//! The verifier extracts the text after the last `#` and compares the
+//! parsed integer against the ground truth — exact match, strict binary.
+
+use crate::util::rng::Rng;
+
+use super::expr::{gen_expr, Expr};
+use super::tokenizer::{self, BOS, EOS};
+
+/// One task instance: a prompt and its verifiable answer.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub expr: Expr,
+    pub answer: i64,
+    pub prompt_text: String,
+    /// Prompt token ids including leading BOS.
+    pub prompt_ids: Vec<i32>,
+}
+
+impl Task {
+    pub fn from_expr(expr: Expr) -> Task {
+        let answer = expr.value();
+        let prompt_text = format!("Q:{}=?A:", expr.render());
+        let mut prompt_ids = vec![BOS];
+        prompt_ids.extend(tokenizer::encode(&prompt_text));
+        Task { expr, answer, prompt_text, prompt_ids }
+    }
+
+    /// Generate a task with `n_ops` operators whose prompt fits in
+    /// `max_prompt` tokens.
+    pub fn gen(rng: &mut Rng, n_ops: usize, max_prompt: usize) -> Task {
+        loop {
+            let t = Task::from_expr(gen_expr(rng, n_ops));
+            if t.prompt_ids.len() <= max_prompt {
+                return t;
+            }
+        }
+    }
+
+    /// The ideal chain-of-thought response (supervised target), with EOS.
+    pub fn target_ids(&self) -> Vec<i32> {
+        let mut ids = tokenizer::encode(&self.expr.chain_of_thought());
+        ids.push(EOS);
+        ids
+    }
+
+    /// Binary reward for a generated response (token ids, EOS-terminated
+    /// or truncated).
+    pub fn reward(&self, response_ids: &[i32]) -> f64 {
+        if verify(&tokenizer::decode(response_ids), self.answer) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Extract the final answer (text after the last '#') and compare.
+///
+/// Deliberately strict, mirroring the paper's rule-based verifier: missing
+/// `#`, unparsable integer, or trailing garbage all score 0.
+pub fn verify(response_text: &str, answer: i64) -> bool {
+    match response_text.rsplit_once('#') {
+        Some((_, tail)) => {
+            let tail = tail.trim();
+            match tail.parse::<i64>() {
+                Ok(v) => v == answer,
+                Err(_) => false,
+            }
+        }
+        None => false,
+    }
+}
+
+/// Detect degenerate repetition (the paper's Appendix-F anomaly): the
+/// response ends in >= `min_repeats` copies of the same short motif. Used
+/// only for *reporting* anomalous-sample statistics — rejection sampling
+/// itself is probability-based (paper Eq. 6), never pattern-based.
+pub fn looks_repetitive(ids: &[i32], min_repeats: usize) -> bool {
+    let n = ids.len();
+    for motif in 2..=12usize {
+        if n < motif * min_repeats {
+            continue;
+        }
+        let tail = &ids[n - motif * min_repeats..];
+        let pattern = &tail[..motif];
+        if tail.chunks(motif).all(|c| c == pattern) {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn verifier_accepts_exact() {
+        assert!(verify("3+4=7;#7", 7));
+        assert!(verify("#-12", -12));
+        assert!(!verify("#8", 7));
+        assert!(!verify("no hash", 7));
+        assert!(!verify("#", 7));
+        assert!(!verify("#7;", 7)); // trailing garbage after the answer
+    }
+
+    #[test]
+    fn verifier_uses_last_hash() {
+        assert!(verify("#3;junk#7", 7));
+    }
+
+    #[test]
+    fn target_passes_own_verifier() {
+        propcheck::quick("target-verifies", |rng, size| {
+            let t = Task::gen(rng, 1 + size % 5, 48);
+            if t.reward(&t.target_ids()) != 1.0 {
+                return Err(format!("target for {} failed", t.prompt_text));
+            }
+            // and a wrong answer fails
+            let mut bad = t.target_ids();
+            let k = bad.len() - 2; // last digit before EOS
+            bad[k] = if bad[k] == tokenizer::DIGIT0 {
+                tokenizer::DIGIT0 + 1
+            } else {
+                tokenizer::DIGIT0
+            };
+            if t.reward(&bad) != 0.0 {
+                return Err("corrupted answer still verified".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prompt_fits_and_roundtrips() {
+        propcheck::quick("prompt-fits", |rng, size| {
+            let t = Task::gen(rng, 1 + size % 6, 48);
+            if t.prompt_ids.len() > 48 {
+                return Err(format!("prompt too long: {}", t.prompt_ids.len()));
+            }
+            let decoded = tokenizer::decode(&t.prompt_ids);
+            if decoded != t.prompt_text {
+                return Err(format!("{decoded:?} != {:?}", t.prompt_text));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn repetition_detector() {
+        let motif = [5, 6, 7];
+        let mut ids: Vec<i32> = vec![1, 2, 3];
+        for _ in 0..10 {
+            ids.extend_from_slice(&motif);
+        }
+        assert!(looks_repetitive(&ids, 5));
+        let normal = tokenizer::encode("3+4=7;7*2=14;#14");
+        assert!(!looks_repetitive(&normal, 4));
+    }
+}

@@ -1,0 +1,129 @@
+//! Character-level tokenizer for the arithmetic-CoT task (vocab = 32).
+//!
+//! The paper trains on natural-language math; our substitution (DESIGN.md
+//! §2) uses synthetic arithmetic chains with verifiable answers, so a tiny
+//! fixed character vocabulary suffices. The id assignment must match
+//! nothing on the Python side — the model is trained from scratch and the
+//! manifest only carries `vocab = 32`.
+
+/// Special tokens.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+
+/// Offset of digit '0'; digits are ids 3..=12.
+pub const DIGIT0: i32 = 3;
+
+const SYMBOLS: &[(char, i32)] = &[
+    ('+', 13),
+    ('-', 14),
+    ('*', 15),
+    ('(', 16),
+    (')', 17),
+    ('=', 18),
+    ('#', 19),
+    (';', 20),
+    (' ', 21),
+    ('Q', 22),
+    ('A', 23),
+    (':', 24),
+    ('?', 25),
+];
+
+pub const VOCAB_SIZE: usize = 32;
+
+/// Encode a char; panics on unsupported characters (task strings are fully
+/// under our control, so an unknown char is a bug, not input error).
+pub fn encode_char(c: char) -> i32 {
+    if let Some(d) = c.to_digit(10) {
+        return DIGIT0 + d as i32;
+    }
+    for &(s, id) in SYMBOLS {
+        if s == c {
+            return id;
+        }
+    }
+    panic!("unencodable character {c:?}");
+}
+
+/// Decode an id to a char; special/unknown ids map to printable markers.
+pub fn decode_char(id: i32) -> char {
+    match id {
+        PAD => '_',
+        BOS => '^',
+        EOS => '$',
+        d if (DIGIT0..DIGIT0 + 10).contains(&d) => {
+            char::from_digit((d - DIGIT0) as u32, 10).unwrap()
+        }
+        other => SYMBOLS
+            .iter()
+            .find(|&&(_, id)| id == other)
+            .map(|&(c, _)| c)
+            .unwrap_or('?'),
+    }
+}
+
+/// Encode a string (no BOS/EOS added).
+pub fn encode(s: &str) -> Vec<i32> {
+    s.chars().map(encode_char).collect()
+}
+
+/// Decode a token slice, stopping at EOS, skipping PAD/BOS.
+pub fn decode(ids: &[i32]) -> String {
+    let mut out = String::new();
+    for &id in ids {
+        if id == EOS {
+            break;
+        }
+        if id == PAD || id == BOS {
+            continue;
+        }
+        out.push(decode_char(id));
+    }
+    out
+}
+
+/// Decode everything including markers (debugging / anomaly dumps).
+pub fn decode_raw(ids: &[i32]) -> String {
+    ids.iter().map(|&id| decode_char(id)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_task_chars() {
+        let s = "Q:(3+4)*2=?A:3+4=7;7*2=14;#14";
+        let ids = encode(s);
+        assert_eq!(decode(&ids), s);
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        for c in "0123456789+-*()=#; QA:?".chars() {
+            let id = encode_char(c);
+            assert!((0..VOCAB_SIZE as i32).contains(&id), "{c:?} -> {id}");
+        }
+    }
+
+    #[test]
+    fn ids_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for c in "0123456789+-*()=#; QA:?".chars() {
+            assert!(seen.insert(encode_char(c)), "duplicate id for {c:?}");
+        }
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let ids = vec![BOS, DIGIT0 + 7, EOS, DIGIT0 + 9];
+        assert_eq!(decode(&ids), "7");
+    }
+
+    #[test]
+    #[should_panic(expected = "unencodable")]
+    fn unknown_char_panics() {
+        encode_char('x');
+    }
+}

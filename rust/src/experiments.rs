@@ -1,0 +1,176 @@
+//! High-level experiment runners shared by the CLI, examples, and benches.
+//!
+//! Each paper table/figure harness composes these: pretrain (or load) a
+//! base model, run RL under some mode, evaluate on the benchmark suite,
+//! and emit the series/rows. Keeping them in the library means the
+//! examples stay thin and the benches measure exactly the production code
+//! path.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{ExperimentConfig, RolloutMode};
+use crate::coordinator::{evaluate_suite, EvalResult, Metrics, Trainer};
+use crate::data::benchmarks::{self, Benchmark};
+use crate::runtime::{ModelEngine, TrainState};
+
+/// Default pretraining schedule per model scale (steps chosen so the base
+/// model reaches non-trivial accuracy on shallow tasks, mirroring the
+/// paper's requirement that zero-RL data "match the model's capability").
+pub fn default_pretrain_steps(model_name: &str) -> usize {
+    match model_name {
+        "nano" => 400,
+        "tiny" => 500,
+        "small" => 600,
+        "base" => 800,
+        _ => 400,
+    }
+}
+
+/// Pretrain a fresh base model on worked examples; returns the state.
+pub fn pretrain_base(
+    engine: &ModelEngine,
+    steps: usize,
+    seed: u64,
+    log_every: usize,
+) -> Result<(TrainState, Vec<f64>)> {
+    let state = TrainState::new(engine.init_params(seed as i32)?);
+    let mut cfg = ExperimentConfig::new(&engine.manifest.dir);
+    cfg.seed = seed;
+    cfg.train.hyp.lr = 1e-3;
+    let corpus = benchmarks::pretrain_corpus(4096, engine.manifest.config.prompt_len, seed);
+    let mut trainer = Trainer::new(engine, cfg, state, vec![]);
+    let losses = trainer.pretrain(&corpus, steps, log_every)?;
+    Ok((trainer.state, losses))
+}
+
+/// Load a cached pretrained base checkpoint, or pretrain and cache it.
+/// Cache key: runs/base/<model>-s<steps>.srl
+pub fn load_or_pretrain_base(
+    engine: &ModelEngine,
+    steps: usize,
+    seed: u64,
+) -> Result<TrainState> {
+    let name = &engine.manifest.config.name;
+    let path = PathBuf::from(format!("runs/base/{name}-s{steps}-seed{seed}.srl"));
+    if path.exists() {
+        let (model, state) = crate::runtime::params::load(&path, engine.manifest.config.n_params)
+            .with_context(|| format!("loading cached base {}", path.display()))?;
+        anyhow::ensure!(model == *name, "cached base is for model {model}, wanted {name}");
+        eprintln!("loaded cached base model {}", path.display());
+        return Ok(state);
+    }
+    eprintln!("pretraining base model ({steps} steps)...");
+    let (state, _losses) = pretrain_base(engine, steps, seed, steps / 10)?;
+    crate::runtime::params::save(&path, name, &state, false)?;
+    eprintln!("cached base model at {}", path.display());
+    Ok(state)
+}
+
+/// Run an RL experiment; returns the trainer (metrics + final state).
+pub fn run_rl<'a>(
+    engine: &'a ModelEngine,
+    mut cfg: ExperimentConfig,
+    init: TrainState,
+    print_every: usize,
+) -> Result<Trainer<'a>> {
+    let (auto_lo, auto_hi) = benchmarks::difficulty_for_model(&engine.manifest.config.name);
+    let ops_lo = if cfg.train.ops_lo == 0 { auto_lo } else { cfg.train.ops_lo };
+    let ops_hi = if cfg.train.ops_hi == 0 { auto_hi } else { cfg.train.ops_hi.max(ops_lo) };
+    let tasks = benchmarks::training_split_ops(
+        8192,
+        engine.manifest.config.prompt_len,
+        cfg.seed,
+        ops_lo,
+        ops_hi,
+    );
+    cfg.artifact_dir = engine.manifest.dir.clone();
+    let steps = cfg.train.steps;
+    let label = cfg.mode.label();
+    let mut trainer = Trainer::new(engine, cfg, init, tasks);
+    for step in 0..steps {
+        let r = trainer.rl_step()?;
+        if print_every > 0 && (step % print_every == 0 || step + 1 == steps) {
+            println!(
+                "[{label}] step {step:>4} reward {:.3} len {:>5.1} ent {:.3} kl {:.2e} rej {:.3} gnorm {:.3} save {:.2}",
+                r.reward_mean,
+                r.response_len_mean,
+                r.entropy_mean,
+                r.mismatch_kl,
+                r.rejection_rate,
+                r.grad_norm,
+                r.toks_saving,
+            );
+        }
+    }
+    Ok(trainer)
+}
+
+/// Evaluate a checkpoint on the full suite (optionally item-limited).
+pub fn eval_checkpoint(
+    engine: &ModelEngine,
+    params: &[f32],
+    mode: RolloutMode,
+    limit: usize,
+    seed: u64,
+) -> Result<(Vec<EvalResult>, f64)> {
+    let suite = benchmarks::suite();
+    evaluate_suite(engine, params, mode, &suite, limit, seed)
+}
+
+/// Persist a trainer's metrics + checkpoint under its out_dir.
+pub fn save_run(trainer: &Trainer, tag: &str) -> Result<(PathBuf, PathBuf)> {
+    let dir = trainer.cfg.out_dir.clone();
+    std::fs::create_dir_all(&dir).ok();
+    let csv = dir.join(format!("{tag}-metrics.csv"));
+    trainer.metrics.write_csv(&csv)?;
+    let ckpt = dir.join(format!("{tag}.srl"));
+    crate::runtime::params::save(
+        &ckpt,
+        &trainer.engine.manifest.config.name,
+        &trainer.state,
+        false,
+    )?;
+    Ok((csv, ckpt))
+}
+
+/// Pretty-print a metrics series as a sparkline-ish text row (figures in
+/// terminal form; the CSVs carry the full data).
+pub fn print_series(metrics: &Metrics, name: &str, buckets: usize) {
+    let s: Vec<f64> = metrics
+        .series(name)
+        .into_iter()
+        .filter(|v| !v.is_nan())
+        .collect();
+    if s.is_empty() {
+        println!("  {name:<16} (no data)");
+        return;
+    }
+    let bucket = (s.len() as f64 / buckets as f64).ceil().max(1.0) as usize;
+    let vals: Vec<f64> = s
+        .chunks(bucket)
+        .map(|c| c.iter().sum::<f64>() / c.len() as f64)
+        .collect();
+    let cells: Vec<String> = vals.iter().map(|v| format!("{v:>8.3}")).collect();
+    println!("  {name:<16} {}", cells.join(" "));
+}
+
+/// Resolve an artifacts dir for a model preset from common roots.
+pub fn find_artifacts(model: &str) -> Result<PathBuf> {
+    for root in ["artifacts", "../artifacts"] {
+        let p = Path::new(root).join(model);
+        if p.join("manifest.json").exists() {
+            return Ok(p);
+        }
+    }
+    anyhow::bail!(
+        "artifacts for {model:?} not found; build with \
+         `cd python && python -m compile.aot --preset {model} --out-dir ../artifacts`"
+    )
+}
+
+/// Standard benchmark suite accessor (re-export for examples).
+pub fn suite() -> Vec<Benchmark> {
+    benchmarks::suite()
+}

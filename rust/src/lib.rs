@@ -1,0 +1,25 @@
+//! # sparse-rl
+//!
+//! Reproduction of *"Sparse-RL: Breaking the Memory Wall in LLM
+//! Reinforcement Learning via Stable Sparse Rollouts"* (ACL 2026) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** Pallas kernels (decode attention with fused compression stats,
+//!   R-KV scoring) — `python/compile/kernels/`, AOT-lowered,
+//! * **L2** JAX transformer + GRPO/Sparse-RL train step —
+//!   `python/compile/model.py`, AOT-lowered to `artifacts/`,
+//! * **L3** this crate: the RL coordinator (rollout engine, memory-wall
+//!   scheduler, KV manager, rejection sampling, importance reweighting,
+//!   trainer) plus every substrate (tokenizer, task generator, benchmark
+//!   suite, metrics, JSON/RNG/CLI/bench utilities).
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `sparse-rl` binary is self-contained.
+
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,236 @@
+//! sparse-rl launcher: the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   pretrain   supervised base-model pretraining (worked examples)
+//!   train      RL training (dense | naive:<m> | sparse-rl:<m>)
+//!   eval       benchmark-suite evaluation of a checkpoint
+//!   rollout    print sample generations (debugging / demos)
+//!   table3     print the benchmark-statistics table (paper Table 3)
+//!   latency    per-artifact execution latency report
+//!
+//! Everything is driven by `--model <preset>` (artifact lookup) plus the
+//! config keys in `config::ExperimentConfig` (`--steps`, `--mode`, `--lr`,
+//! ... or `--config file.conf`).
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use sparse_rl::config::{ExperimentConfig, RolloutMode};
+use sparse_rl::coordinator::rollout::RolloutEngine;
+use sparse_rl::data::{benchmarks, tokenizer};
+use sparse_rl::experiments;
+use sparse_rl::runtime::{params, ModelEngine, TrainState};
+use sparse_rl::util::cli::CliArgs;
+use sparse_rl::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: sparse-rl <pretrain|train|eval|rollout|table3|latency> [options]
+  common:   --model <nano|tiny|small|base|e2e>   --artifacts <dir>
+  pretrain: --steps N --seed S --out ckpt.srl
+  train:    --mode <dense|naive:M|sparse-rl:M> --steps N
+            --init-checkpoint ckpt --out-dir runs/x  [config keys...]
+  eval:     --checkpoint ckpt --mode <...> [--bench name] [--limit N]
+  rollout:  --checkpoint ckpt --mode <...> [--n 4] [--temperature T]"
+    );
+    std::process::exit(2);
+}
+
+fn load_engine(args: &CliArgs) -> Result<ModelEngine> {
+    let dir = match args.opt("artifacts") {
+        Some(d) => PathBuf::from(d),
+        None => {
+            let model = args.get("model", "tiny".to_string());
+            experiments::find_artifacts(&model)?
+        }
+    };
+    eprintln!("artifacts: {}", dir.display());
+    ModelEngine::load(&dir)
+}
+
+fn load_state(engine: &ModelEngine, args: &CliArgs) -> Result<TrainState> {
+    match args.opt("checkpoint").or_else(|| args.opt("init-checkpoint")) {
+        Some(p) => {
+            let (model, state) = params::load(&PathBuf::from(p), engine.manifest.config.n_params)?;
+            anyhow::ensure!(
+                model == engine.manifest.config.name,
+                "checkpoint is for {model}, artifacts are {}",
+                engine.manifest.config.name
+            );
+            Ok(state)
+        }
+        None => Ok(TrainState::new(engine.init_params(args.get("seed", 0u64) as i32)?)),
+    }
+}
+
+fn run() -> Result<()> {
+    let args = CliArgs::from_env();
+    let cmd = match args.positional.first() {
+        Some(c) => c.clone(),
+        None => usage(),
+    };
+    match cmd.as_str() {
+        "pretrain" => cmd_pretrain(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "rollout" => cmd_rollout(&args),
+        "table3" => cmd_table3(),
+        "latency" => cmd_latency(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}");
+            usage()
+        }
+    }
+}
+
+fn cmd_pretrain(args: &CliArgs) -> Result<()> {
+    let engine = load_engine(args)?;
+    let steps = args.get(
+        "steps",
+        experiments::default_pretrain_steps(&engine.manifest.config.name),
+    );
+    let seed = args.get("seed", 0u64);
+    let (state, losses) = experiments::pretrain_base(&engine, steps, seed, 25)?;
+    let default_out = format!(
+        "runs/base/{}-s{}-seed{}.srl",
+        engine.manifest.config.name, steps, seed
+    );
+    let out = PathBuf::from(args.get("out", default_out));
+    params::save(&out, &engine.manifest.config.name, &state, false)?;
+    println!(
+        "pretrained {} for {} steps (final ce-loss {:.4}) -> {}",
+        engine.manifest.config.name,
+        steps,
+        losses.last().copied().unwrap_or(f64::NAN),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &CliArgs) -> Result<()> {
+    let engine = load_engine(args)?;
+    let mut cfg = ExperimentConfig::new(&engine.manifest.dir);
+    cfg.apply_cli(args)?;
+    let state = load_state(&engine, args)?;
+    println!(
+        "RL training: model={} mode={} steps={} prompts/step={} G={}",
+        engine.manifest.config.name,
+        cfg.mode.label(),
+        cfg.train.steps,
+        cfg.train.prompts_per_step,
+        cfg.train.group_size
+    );
+    let trainer = experiments::run_rl(&engine, cfg, state, args.get("print-every", 1usize))?;
+    let tag = trainer.cfg.mode.label().replace(':', "-");
+    let (csv, ckpt) = experiments::save_run(&trainer, &tag)?;
+    println!("metrics -> {}\ncheckpoint -> {}", csv.display(), ckpt.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &CliArgs) -> Result<()> {
+    let engine = load_engine(args)?;
+    let state = load_state(&engine, args)?;
+    let mode = RolloutMode::parse(&args.get("mode", "dense".to_string()))?;
+    let limit = args.get("limit", 50usize);
+    let seed = args.get("seed", 0u64);
+    match args.opt("bench") {
+        Some(name) => {
+            let suite = benchmarks::suite();
+            let b = suite
+                .iter()
+                .find(|b| b.name == name)
+                .with_context(|| format!("unknown benchmark {name:?}"))?;
+            let r = sparse_rl::coordinator::evaluate(&engine, &state.params, mode, b, limit, seed)?;
+            println!(
+                "{}: acc {:.3} over {} items ({} samples), mean len {:.1}, toks saved {:.2}",
+                r.benchmark, r.accuracy, r.items, r.samples, r.mean_response_len, r.toks_saving
+            );
+        }
+        None => {
+            let (_results, avg) =
+                experiments::eval_checkpoint(&engine, &state.params, mode, limit, seed)?;
+            println!("suite average: {avg:.3} (mode {}, limit {limit})", mode.label());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_rollout(args: &CliArgs) -> Result<()> {
+    let engine = load_engine(args)?;
+    let state = load_state(&engine, args)?;
+    let mode = RolloutMode::parse(&args.get("mode", "dense".to_string()))?;
+    let mut cfg = ExperimentConfig::new(&engine.manifest.dir);
+    cfg.apply_cli(args)?;
+    let n = args.get("n", 4usize).min(engine.manifest.shapes.decode_batch);
+    let seed = args.get("seed", 0u64);
+    let mut rng = Rng::new(seed);
+    let tasks = benchmarks::training_split(n, engine.manifest.config.prompt_len, seed);
+    let ro = RolloutEngine::new(&engine, mode, cfg.sampling);
+    let chunk: Vec<(usize, &sparse_rl::data::Task)> =
+        tasks.iter().enumerate().map(|(i, t)| (i, t)).collect();
+    let seqs = ro.rollout_chunk(&state.params, &chunk, &mut rng)?;
+    for (seq, task) in seqs.iter().zip(tasks.iter()) {
+        println!(
+            "prompt: {}\nanswer: {}  reward: {}  compressions: {}  toks-saved: {:.2}",
+            task.prompt_text,
+            task.answer,
+            task.reward(&seq.response_ids),
+            seq.accounting.compressions,
+            seq.accounting.toks_saving()
+        );
+        println!("response: {}\n", tokenizer::decode(&seq.response_ids));
+    }
+    Ok(())
+}
+
+fn cmd_table3() -> Result<()> {
+    println!("Table 3: benchmark statistics (synthetic analogs)\n");
+    println!("{:<10} {:>5}  {:<6} {}", "Benchmark", "Size", "Ops", "Description");
+    for b in benchmarks::suite() {
+        println!(
+            "{:<10} {:>5}  {:<6} {}",
+            b.name,
+            b.size,
+            format!("{}-{}", b.ops_lo, b.ops_hi),
+            b.description
+        );
+    }
+    Ok(())
+}
+
+fn cmd_latency(args: &CliArgs) -> Result<()> {
+    let engine = load_engine(args)?;
+    let state = TrainState::new(engine.init_params(0)?);
+    // touch the rollout path once so latencies are populated
+    let mut cfg = ExperimentConfig::new(&engine.manifest.dir);
+    cfg.apply_cli(args)?;
+    let mode = RolloutMode::parse(&args.get("mode", "sparse-rl:rkv".to_string()))?;
+    let mut rng = Rng::new(0);
+    let tasks = benchmarks::training_split(
+        engine.manifest.shapes.decode_batch,
+        engine.manifest.config.prompt_len,
+        0,
+    );
+    let ro = RolloutEngine::new(&engine, mode, cfg.sampling);
+    let chunk: Vec<(usize, &sparse_rl::data::Task)> =
+        tasks.iter().enumerate().map(|(i, t)| (i, t)).collect();
+    ro.rollout_chunk(&state.params, &chunk, &mut rng)?;
+    println!("{:<20} {:>8} {:>12}", "artifact", "calls", "mean");
+    for (name, calls, ns) in engine.latency_report() {
+        println!(
+            "{:<20} {:>8} {:>12}",
+            name,
+            calls,
+            sparse_rl::util::bench::fmt_ns(ns)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,430 @@
+//! Typed façade over one artifact directory: the `ModelEngine`.
+//!
+//! Owns the PJRT client, lazily compiles entry points on first use, and
+//! exposes the six operations the coordinator needs (init / prefill /
+//! decode / compress / score / train / lm) with plain-Rust types. All
+//! shapes come from the manifest; the engine's job is marshalling and
+//! invariant checks, never shape arithmetic.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::executable::Executable;
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+/// Dense (full cache) vs sparse (budget-compressed cache) rollout path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Dense,
+    Sparse,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Dense => "dense",
+            Variant::Sparse => "sparse",
+        }
+    }
+}
+
+/// KV compression method (paper §2 / Appendix A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    RKv,
+    SnapKv,
+    H2O,
+    Streaming,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::RKv => "rkv",
+            Method::SnapKv => "snapkv",
+            Method::H2O => "h2o",
+            Method::Streaming => "streaming",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "rkv" | "r-kv" => Method::RKv,
+            "snapkv" | "snap-kv" => Method::SnapKv,
+            "h2o" => Method::H2O,
+            "streaming" | "streamingllm" => Method::Streaming,
+            other => bail!("unknown compression method {other:?}"),
+        })
+    }
+
+    pub fn all() -> [Method; 4] {
+        [Method::RKv, Method::SnapKv, Method::H2O, Method::Streaming]
+    }
+}
+
+/// Device-shaped KV cache state for one decode batch.
+///
+/// Layout mirrors the artifacts: kv [L,2,R,H,C,Dh] f32, stats [L,R,H,C]
+/// f32, birth [L,R,H,C] i32. `lens` (occupied slots) and `pos` (absolute
+/// positions) live with the rollout engine, not here, because they advance
+/// per-sequence on the Rust side.
+///
+/// State tensors are kept as XLA literals between steps (hot-path
+/// optimization: they re-enter the next decode exactly as the previous
+/// call produced them, with no HostTensor round-trip — §Perf).
+pub struct CacheState {
+    pub kv: xla::Literal,
+    pub stats_cum: xla::Literal,
+    pub stats_win: xla::Literal,
+    pub birth: xla::Literal,
+    pub capacity: usize,
+    pub variant: Variant,
+}
+
+/// Model weights uploaded once per rollout chunk (not per decode step).
+pub struct ParamsLit(xla::Literal);
+
+impl ParamsLit {
+    pub fn new(params: &[f32]) -> ParamsLit {
+        ParamsLit(xla::Literal::vec1(params))
+    }
+}
+
+/// Learner weights + Adam state (flat, matching the manifest layout).
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i32,
+}
+
+impl TrainState {
+    pub fn new(params: Vec<f32>) -> Self {
+        let n = params.len();
+        TrainState { params, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+}
+
+/// Scalar statistics returned by one RL train step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainStats {
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub clip_frac: f64,
+    pub entropy: f64,
+    pub kl: f64,
+}
+
+/// RL hyper-parameters fed to the train artifact (runtime inputs, so
+/// sweeps don't need recompilation).
+#[derive(Debug, Clone, Copy)]
+pub struct Hyp {
+    pub lr: f32,
+    pub clip_eps: f32,
+    pub kl_coef: f32,
+    pub max_grad_norm: f32,
+}
+
+impl Default for Hyp {
+    fn default() -> Self {
+        // Paper §5.1: lr 1e-6, KL coef 1e-4. Scaled for our from-scratch
+        // small models: lr 1e-4; KL 1e-3 anchors the weak base against
+        // drift under sparse binary rewards (tuning log in EXPERIMENTS.md).
+        Hyp { lr: 1e-4, clip_eps: 0.2, kl_coef: 1e-3, max_grad_norm: 1.0 }
+    }
+}
+
+impl Hyp {
+    fn tensor(&self) -> HostTensor {
+        HostTensor::f32(
+            vec![self.lr, self.clip_eps, self.kl_coef, self.max_grad_norm],
+            &[4],
+        )
+    }
+}
+
+/// The engine: client + manifest + lazily compiled entry points.
+pub struct ModelEngine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+impl ModelEngine {
+    /// Open an artifact directory (compiles nothing yet).
+    pub fn load(dir: &Path) -> Result<ModelEngine> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(ModelEngine { client, manifest, exes: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Get (compiling on first use) an entry point by name.
+    pub fn exe(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.entry(name)?;
+        let exe = Rc::new(Executable::load(&self.client, spec)?);
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile a set of entry points (startup cost, not hot path).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.exe(n)?;
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // typed operations
+    // ---------------------------------------------------------------
+
+    /// Deterministic parameter init (same bits as pytest's jax init).
+    pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let out = self.exe("init_params")?.run(&[HostTensor::scalar_i32(seed)])?;
+        Ok(out.into_iter().next().unwrap().as_f32()?.to_vec())
+    }
+
+    /// Fresh all-zero cache of the variant's capacity (tests/benches; the
+    /// rollout path gets its cache from `prefill`).
+    pub fn empty_cache(&self, variant: Variant) -> CacheState {
+        let c = &self.manifest.config;
+        let s = &self.manifest.shapes;
+        let cap = match variant {
+            Variant::Dense => s.dense_capacity,
+            Variant::Sparse => s.sparse_capacity,
+        };
+        let (l, r, h, dh) = (c.n_layers, s.decode_batch, c.n_heads, c.d_head);
+        let lit = |t: HostTensor| t.to_literal().expect("literal");
+        CacheState {
+            kv: lit(HostTensor::zeros_f32(&[l, 2, r, h, cap, dh])),
+            stats_cum: lit(HostTensor::zeros_f32(&[l, r, h, cap])),
+            stats_win: lit(HostTensor::zeros_f32(&[l, r, h, cap])),
+            birth: lit(HostTensor::i32(vec![-1; l * r * h * cap], &[l, r, h, cap])),
+            capacity: cap,
+            variant,
+        }
+    }
+
+    /// Prefill the prompt batch; returns the cache and last-token log-probs
+    /// [R, V] flattened.
+    pub fn prefill(
+        &self,
+        variant: Variant,
+        params: &ParamsLit,
+        ids: &[i32],
+        lens: &[i32],
+    ) -> Result<(CacheState, Vec<f32>)> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let name = format!("prefill_{}", variant.name());
+        let exe = self.exe(&name)?;
+        let ids_l = HostTensor::i32(ids.to_vec(), &[s.decode_batch, c.prompt_len]).to_literal()?;
+        let lens_l = HostTensor::i32(lens.to_vec(), &[s.decode_batch]).to_literal()?;
+        let out = exe.run_literals(&[&params.0, &ids_l, &lens_l])?;
+        let mut it = out.into_iter();
+        let kv = it.next().unwrap();
+        let stats_cum = it.next().unwrap();
+        let stats_win = it.next().unwrap();
+        let birth = it.next().unwrap();
+        let logp = it
+            .next()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("prefill logp: {e:?}"))?;
+        let cap = match variant {
+            Variant::Dense => s.dense_capacity,
+            Variant::Sparse => s.sparse_capacity,
+        };
+        Ok((CacheState { kv, stats_cum, stats_win, birth, capacity: cap, variant }, logp))
+    }
+
+    /// One decode step over the batch; returns log-probs [R, V] flattened
+    /// and replaces the cache state in place. This is THE hot path: the
+    /// cache literals flow straight back in, and only the small control
+    /// vectors (lens/pos/token) are fresh allocations.
+    pub fn decode(
+        &self,
+        params: &ParamsLit,
+        cache: &mut CacheState,
+        lens: &[i32],
+        pos: &[i32],
+        token: &[i32],
+    ) -> Result<Vec<f32>> {
+        let s = &self.manifest.shapes;
+        let name = format!("decode_{}", cache.variant.name());
+        let exe = self.exe(&name)?;
+        let r = s.decode_batch;
+        let lens_l = HostTensor::i32(lens.to_vec(), &[r]).to_literal()?;
+        let pos_l = HostTensor::i32(pos.to_vec(), &[r]).to_literal()?;
+        let tok_l = HostTensor::i32(token.to_vec(), &[r]).to_literal()?;
+        let out = exe.run_literals(&[
+            &params.0,
+            &cache.kv,
+            &cache.stats_cum,
+            &cache.stats_win,
+            &cache.birth,
+            &lens_l,
+            &pos_l,
+            &tok_l,
+        ])?;
+        let mut it = out.into_iter();
+        let logp = it
+            .next()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("decode logp: {e:?}"))?;
+        cache.kv = it.next().unwrap();
+        cache.stats_cum = it.next().unwrap();
+        cache.stats_win = it.next().unwrap();
+        cache.birth = it.next().unwrap();
+        Ok(logp)
+    }
+
+    /// Compress the sequences with `do_mask[b] = 1.0` down to the budget.
+    pub fn compress(
+        &self,
+        method: Method,
+        cache: &mut CacheState,
+        do_mask: &[f32],
+    ) -> Result<()> {
+        if cache.variant != Variant::Sparse {
+            bail!("compress called on a dense cache");
+        }
+        let s = &self.manifest.shapes;
+        let name = format!("compress_{}", method.name());
+        let exe = self.exe(&name)?;
+        let do_l = HostTensor::f32(do_mask.to_vec(), &[s.decode_batch]).to_literal()?;
+        let out = exe.run_literals(&[
+            &cache.kv,
+            &cache.stats_cum,
+            &cache.stats_win,
+            &cache.birth,
+            &do_l,
+        ])?;
+        let mut it = out.into_iter();
+        cache.kv = it.next().unwrap();
+        cache.stats_cum = it.next().unwrap();
+        cache.stats_win = it.next().unwrap();
+        cache.birth = it.next().unwrap();
+        Ok(())
+    }
+
+    /// Dense teacher-forcing scores: per-token log π(ids[t] | ids[<t]) and
+    /// predictive entropy, both [Btr, T] flattened.
+    pub fn score(
+        &self,
+        params: &[f32],
+        ids: &[i32],
+        lens: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let exe = self.exe("score")?;
+        let out = exe.run(&[
+            HostTensor::f32(params.to_vec(), &[c.n_params]),
+            HostTensor::i32(ids.to_vec(), &[s.train_batch, c.max_seq]),
+            HostTensor::i32(lens.to_vec(), &[s.train_batch]),
+        ])?;
+        let mut it = out.into_iter();
+        let logp = it.next().unwrap().as_f32()?.to_vec();
+        let ent = it.next().unwrap().as_f32()?.to_vec();
+        Ok((logp, ent))
+    }
+
+    /// Inputs for one RL train step over [Btr, T].
+    #[allow(clippy::too_many_arguments)]
+    pub fn train(
+        &self,
+        state: &mut TrainState,
+        ids: &[i32],
+        loss_mask: &[f32],
+        lens: &[i32],
+        adv: &[f32],
+        xi: &[f32],
+        mrs: &[f32],
+        logp_old: &[f32],
+        hyp: Hyp,
+    ) -> Result<TrainStats> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let exe = self.exe("train")?;
+        let (b, t, n) = (s.train_batch, c.max_seq, c.n_params);
+        let out = exe.run(&[
+            HostTensor::f32(std::mem::take(&mut state.params), &[n]),
+            HostTensor::f32(std::mem::take(&mut state.m), &[n]),
+            HostTensor::f32(std::mem::take(&mut state.v), &[n]),
+            HostTensor::scalar_i32(state.step),
+            HostTensor::i32(ids.to_vec(), &[b, t]),
+            HostTensor::f32(loss_mask.to_vec(), &[b, t]),
+            HostTensor::i32(lens.to_vec(), &[b]),
+            HostTensor::f32(adv.to_vec(), &[b]),
+            HostTensor::f32(xi.to_vec(), &[b, t]),
+            HostTensor::f32(mrs.to_vec(), &[b]),
+            HostTensor::f32(logp_old.to_vec(), &[b, t]),
+            hyp.tensor(),
+        ])?;
+        let mut it = out.into_iter();
+        state.params = it.next().unwrap().as_f32()?.to_vec();
+        state.m = it.next().unwrap().as_f32()?.to_vec();
+        state.v = it.next().unwrap().as_f32()?.to_vec();
+        state.step = it.next().unwrap().as_i32()?[0];
+        Ok(TrainStats {
+            loss: it.next().unwrap().scalar()?,
+            grad_norm: it.next().unwrap().scalar()?,
+            clip_frac: it.next().unwrap().scalar()?,
+            entropy: it.next().unwrap().scalar()?,
+            kl: it.next().unwrap().scalar()?,
+        })
+    }
+
+    /// One supervised LM (pretraining) step; returns the CE loss.
+    pub fn lm(
+        &self,
+        state: &mut TrainState,
+        ids: &[i32],
+        mask: &[f32],
+        lens: &[i32],
+        hyp: Hyp,
+    ) -> Result<f64> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let exe = self.exe("lm")?;
+        let (b, t, n) = (s.train_batch, c.max_seq, c.n_params);
+        let out = exe.run(&[
+            HostTensor::f32(std::mem::take(&mut state.params), &[n]),
+            HostTensor::f32(std::mem::take(&mut state.m), &[n]),
+            HostTensor::f32(std::mem::take(&mut state.v), &[n]),
+            HostTensor::scalar_i32(state.step),
+            HostTensor::i32(ids.to_vec(), &[b, t]),
+            HostTensor::f32(mask.to_vec(), &[b, t]),
+            HostTensor::i32(lens.to_vec(), &[b]),
+            hyp.tensor(),
+        ])?;
+        let mut it = out.into_iter();
+        state.params = it.next().unwrap().as_f32()?.to_vec();
+        state.m = it.next().unwrap().as_f32()?.to_vec();
+        state.v = it.next().unwrap().as_f32()?.to_vec();
+        state.step = it.next().unwrap().as_i32()?[0];
+        it.next().unwrap().scalar()
+    }
+
+    /// Per-entry mean latency report (perf instrumentation).
+    pub fn latency_report(&self) -> Vec<(String, u64, f64)> {
+        self.exes
+            .borrow()
+            .iter()
+            .map(|(n, e)| (n.clone(), e.calls.get(), e.mean_latency_ns()))
+            .collect()
+    }
+}

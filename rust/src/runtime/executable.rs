@@ -1,0 +1,156 @@
+//! Loading and executing AOT artifacts on the PJRT client.
+//!
+//! `Executable` wraps one compiled entry point: it validates inputs against
+//! the manifest signature, executes on the PJRT CPU client, and unpacks the
+//! (return_tuple=True) tuple output back into `HostTensor`s. Compilation
+//! happens once at load; execution is the request-path operation.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::EntrySpec;
+use super::tensor::HostTensor;
+
+/// A compiled AOT entry point bound to its manifest signature.
+pub struct Executable {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative execution statistics (lock-free; single-threaded use).
+    pub calls: std::cell::Cell<u64>,
+    pub total_ns: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    /// Load HLO text, compile on the client (one-time cost).
+    pub fn load(client: &xla::PjRtClient, spec: &EntrySpec) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .with_context(|| format!("non-utf8 path {:?}", spec.file))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", spec.name))?;
+        let dt = t0.elapsed();
+        if dt.as_millis() > 500 {
+            eprintln!("  compiled {} in {:.1}s", spec.name, dt.as_secs_f64());
+        }
+        Ok(Executable {
+            spec: spec.clone(),
+            exe,
+            calls: std::cell::Cell::new(0),
+            total_ns: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Execute with host tensors; returns outputs in manifest order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest says {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(self.spec.inputs.iter()) {
+            t.check_spec(s)
+                .with_context(|| format!("entry {} input {}", self.spec.name, s.name))?;
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        let parts = self.execute_via_buffers(&refs)?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(self.spec.outputs.iter())
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+
+    /// Mean execution latency so far (ns), for the perf report.
+    pub fn mean_latency_ns(&self) -> f64 {
+        let c = self.calls.get();
+        if c == 0 {
+            0.0
+        } else {
+            self.total_ns.get() as f64 / c as f64
+        }
+    }
+
+    /// Hot-path execute: literals in, literals out, no HostTensor
+    /// conversion. State tensors (KV cache etc.) stay as literals between
+    /// steps, saving two full copies per tensor per call relative to
+    /// `run` (see EXPERIMENTS.md §Perf). Only the argument *count* is
+    /// checked; shapes are trusted because state literals originate from
+    /// this executable family's own outputs.
+    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest says {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let parts = self.execute_via_buffers(inputs)?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Leak-free execution core.
+    ///
+    /// MEMORY-SAFETY NOTE: the crate's literal-based `execute` C++ shim
+    /// creates a device buffer per input and `release()`s it without ever
+    /// freeing (vendor/xla/xla_rs/xla_rs.cc) — every call leaks all input
+    /// bytes, which OOM-killed multi-thousand-call RL runs (§Perf log #4).
+    /// We instead create the input buffers ourselves (`PjRtBuffer` has a
+    /// proper Drop) and go through `execute_b`, which borrows.
+    fn execute_via_buffers(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let client = self.exe.client();
+        let t0 = Instant::now();
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|l| {
+                client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow::anyhow!("uploading {} input: {e:?}", self.spec.name))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.spec.name))?;
+        drop(bufs); // inputs freed here — the whole point
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {} output: {e:?}", self.spec.name))?;
+        self.calls.set(self.calls.get() + 1);
+        self.total_ns
+            .set(self.total_ns.get() + t0.elapsed().as_nanos() as u64);
+        out_lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {} output: {e:?}", self.spec.name))
+    }
+}

@@ -1,0 +1,253 @@
+//! Typed view of `artifacts/<model>/manifest.json` (written by aot.py).
+//!
+//! The manifest is the single source of truth for every tensor shape the
+//! Rust side touches: entry-point signatures, the flat parameter layout,
+//! and the model/rollout hyper-parameters the artifacts were specialized
+//! for. Nothing on the Rust side hard-codes a shape.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor in the artifact interface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+}
+
+/// One input/output tensor of an entry point.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT entry point (an HLO text file + its signature).
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Flat-parameter layout entry (mirrors model.ParamLayout).
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Model dimensions the artifacts were built for.
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+    pub prompt_len: usize,
+    pub n_params: usize,
+}
+
+/// Rollout/compression shape constants baked into the artifacts.
+#[derive(Debug, Clone)]
+pub struct RolloutDims {
+    pub decode_batch: usize,
+    pub train_batch: usize,
+    pub budget: usize,
+    pub buffer: usize,
+    pub alpha: usize,
+    pub lam: f64,
+    pub sinks: usize,
+    pub sparse_capacity: usize,
+    pub dense_capacity: usize,
+}
+
+/// Fully parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelDims,
+    pub shapes: RolloutDims,
+    pub params: Vec<ParamEntry>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().context("expected array of tensor specs")?;
+    arr.iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.get("name").as_str().context("tensor name")?.to_string(),
+                dtype: DType::parse(t.get("dtype").as_str().context("tensor dtype")?)?,
+                dims: t
+                    .get("dims")
+                    .as_arr()
+                    .context("tensor dims")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let c = j.get("config");
+        let u = |k: &str| -> Result<usize> {
+            c.get(k).as_usize().with_context(|| format!("config.{k}"))
+        };
+        let config = ModelDims {
+            name: c.get("name").as_str().context("config.name")?.to_string(),
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            d_ff: u("d_ff")?,
+            d_head: u("d_head")?,
+            max_seq: u("max_seq")?,
+            prompt_len: u("prompt_len")?,
+            n_params: u("n_params")?,
+        };
+
+        let s = j.get("shapes");
+        let su = |k: &str| -> Result<usize> {
+            s.get(k).as_usize().with_context(|| format!("shapes.{k}"))
+        };
+        let shapes = RolloutDims {
+            decode_batch: su("decode_batch")?,
+            train_batch: su("train_batch")?,
+            budget: su("budget")?,
+            buffer: su("buffer")?,
+            alpha: su("alpha")?,
+            lam: s.get("lam").as_f64().context("shapes.lam")?,
+            sinks: su("sinks")?,
+            sparse_capacity: su("sparse_capacity")?,
+            dense_capacity: su("dense_capacity")?,
+        };
+
+        let params = j
+            .get("params")
+            .as_arr()
+            .context("params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p.get("name").as_str().context("param name")?.to_string(),
+                    shape: p
+                        .get("shape")
+                        .as_arr()
+                        .context("param shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("param dim"))
+                        .collect::<Result<_>>()?,
+                    offset: p.get("offset").as_usize().context("param offset")?,
+                    size: p.get("size").as_usize().context("param size")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries").as_obj().context("entries")? {
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: dir.join(e.get("file").as_str().context("entry file")?),
+                    inputs: tensor_specs(e.get("inputs"))?,
+                    outputs: tensor_specs(e.get("outputs"))?,
+                },
+            );
+        }
+
+        let m = Manifest { dir: dir.to_path_buf(), config, shapes, params, entries };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Internal consistency checks (cheap; run at load).
+    fn validate(&self) -> Result<()> {
+        // Param layout must tile [0, n_params) exactly.
+        let mut off = 0usize;
+        for p in &self.params {
+            if p.offset != off {
+                bail!("param {} offset {} != expected {}", p.name, p.offset, off);
+            }
+            let sz: usize = p.shape.iter().product();
+            if sz != p.size {
+                bail!("param {} size mismatch", p.name);
+            }
+            off += p.size;
+        }
+        if off != self.config.n_params {
+            bail!("param layout covers {} of {} params", off, self.config.n_params);
+        }
+        if self.shapes.sparse_capacity != self.shapes.budget + self.shapes.buffer {
+            bail!("sparse_capacity != budget + buffer");
+        }
+        for e in self.entries.values() {
+            if !e.file.exists() {
+                bail!("artifact file missing: {}", e.file.display());
+            }
+        }
+        Ok(())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("entry point {name:?} not in manifest (have: {:?})",
+                self.entries.keys().collect::<Vec<_>>()))
+    }
+
+    /// KV bytes per sequence at a given cache capacity (f32 K+V).
+    pub fn kv_bytes_per_seq(&self, capacity: usize) -> usize {
+        self.config.n_layers * 2 * self.config.n_heads * capacity * self.config.d_head * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime layer: PJRT client + AOT artifact loading and execution.
+//!
+//! Python is build-time only; this module is how the Rust coordinator runs
+//! the compiled model. See /opt/xla-example/README.md for the HLO-text
+//! interchange rationale (xla_extension 0.5.1 rejects jax>=0.5 serialized
+//! protos; text round-trips).
+
+pub mod engine;
+pub mod executable;
+pub mod manifest;
+pub mod params;
+pub mod tensor;
+
+pub use engine::{CacheState, Hyp, Method, ModelEngine, ParamsLit, TrainState, TrainStats, Variant};
+pub use manifest::Manifest;
+pub use tensor::HostTensor;

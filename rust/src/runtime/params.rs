@@ -1,0 +1,145 @@
+//! Checkpoint persistence for flat parameters + Adam state.
+//!
+//! Self-contained binary format (`.srl` files):
+//!   magic "SRLCKPT1" | u32 header_len | JSON header | f32-LE params
+//!   [| f32-LE m | f32-LE v]   (present when `with_opt`)
+//! The JSON header records the model name, step, and counts so loads are
+//! validated against the manifest before any training resumes.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{to_string, Json};
+
+use super::engine::TrainState;
+
+const MAGIC: &[u8; 8] = b"SRLCKPT1";
+
+/// Save a checkpoint; `with_opt` includes the Adam moments.
+pub fn save(path: &Path, model_name: &str, state: &TrainState, with_opt: bool) -> Result<()> {
+    let mut header = std::collections::BTreeMap::new();
+    header.insert("model".to_string(), Json::Str(model_name.to_string()));
+    header.insert("step".to_string(), Json::Num(state.step as f64));
+    header.insert("n_params".to_string(), Json::Num(state.params.len() as f64));
+    header.insert("with_opt".to_string(), Json::Bool(with_opt));
+    let header = to_string(&Json::Obj(header));
+
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    write_f32s(&mut f, &state.params)?;
+    if with_opt {
+        write_f32s(&mut f, &state.m)?;
+        write_f32s(&mut f, &state.v)?;
+    }
+    Ok(())
+}
+
+/// Load a checkpoint; `expect_params` validates against the manifest.
+pub fn load(path: &Path, expect_params: usize) -> Result<(String, TrainState)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a sparse-rl checkpoint", path.display());
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+
+    let model = header.get("model").as_str().unwrap_or("?").to_string();
+    let step = header.get("step").as_i64().unwrap_or(0) as i32;
+    let n = header.get("n_params").as_usize().context("n_params")?;
+    let with_opt = header.get("with_opt").as_bool().unwrap_or(false);
+    if n != expect_params {
+        bail!(
+            "{}: checkpoint has {} params, manifest expects {}",
+            path.display(),
+            n,
+            expect_params
+        );
+    }
+    let params = read_f32s(&mut f, n)?;
+    let (m, v) = if with_opt {
+        (read_f32s(&mut f, n)?, read_f32s(&mut f, n)?)
+    } else {
+        (vec![0.0; n], vec![0.0; n])
+    };
+    Ok((model, TrainState { params, m, v, step }))
+}
+
+fn write_f32s(f: &mut std::fs::File, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(f: &mut std::fs::File, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_opt() {
+        let dir = std::env::temp_dir().join("srl_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.srl");
+        let state = TrainState {
+            params: vec![1.0, -2.5, 3.25],
+            m: vec![0.1, 0.2, 0.3],
+            v: vec![0.01, 0.02, 0.03],
+            step: 42,
+        };
+        save(&path, "tiny", &state, true).unwrap();
+        let (model, got) = load(&path, 3).unwrap();
+        assert_eq!(model, "tiny");
+        assert_eq!(got.step, 42);
+        assert_eq!(got.params, state.params);
+        assert_eq!(got.m, state.m);
+        assert_eq!(got.v, state.v);
+    }
+
+    #[test]
+    fn roundtrip_params_only() {
+        let dir = std::env::temp_dir().join("srl_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.srl");
+        let state = TrainState::new(vec![5.0; 7]);
+        save(&path, "nano", &state, false).unwrap();
+        let (_, got) = load(&path, 7).unwrap();
+        assert_eq!(got.params, state.params);
+        assert_eq!(got.m, vec![0.0; 7]);
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let dir = std::env::temp_dir().join("srl_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.srl");
+        save(&path, "x", &TrainState::new(vec![0.0; 4]), false).unwrap();
+        assert!(load(&path, 5).is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! Host-side tensors and conversion to/from XLA literals.
+//!
+//! The coordinator works entirely in `HostTensor`s (flat storage + dims);
+//! conversion to `xla::Literal` happens at the executable boundary. On the
+//! CPU PJRT backend these conversions are memcpys, not device transfers.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host tensor: flat row-major storage plus dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        HostTensor::F32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        HostTensor::I32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn zeros_f32(dims: &[usize]) -> Self {
+        HostTensor::F32 { data: vec![0.0; dims.iter().product()], dims: dims.to_vec() }
+    }
+
+    pub fn zeros_i32(dims: &[usize]) -> Self {
+        HostTensor::I32 { data: vec![0; dims.iter().product()], dims: dims.to_vec() }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { data: vec![v], dims: vec![] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { data: vec![v], dims: vec![] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Scalar extraction (any rank-0 or single-element tensor).
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 => Ok(data[0] as f64),
+            HostTensor::I32 { data, .. } if data.len() == 1 => Ok(data[0] as f64),
+            _ => bail!("tensor is not a scalar (elems = {})", self.elems()),
+        }
+    }
+
+    /// Check against a manifest tensor spec.
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!("tensor {}: dtype {:?} != manifest {:?}", spec.name, self.dtype(), spec.dtype);
+        }
+        if self.dims() != spec.dims.as_slice() {
+            bail!(
+                "tensor {}: dims {:?} != manifest {:?}",
+                spec.name,
+                self.dims(),
+                spec.dims
+            );
+        }
+        Ok(())
+    }
+
+    /// Convert to an XLA literal (host copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, dims } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims_i64)?
+                }
+            }
+            HostTensor::I32 { data, dims } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims_i64)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert from an XLA literal using the manifest spec for dims/dtype.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        let t = match spec.dtype {
+            DType::F32 => HostTensor::F32 { data: lit.to_vec::<f32>()?, dims: spec.dims.clone() },
+            DType::I32 => HostTensor::I32 { data: lit.to_vec::<i32>()?, dims: spec.dims.clone() },
+        };
+        if t.elems() != spec.elems() {
+            bail!(
+                "output {}: literal has {} elems, manifest says {}",
+                spec.name,
+                t.elems(),
+                spec.elems()
+            );
+        }
+        Ok(t)
+    }
+
+    /// Row-major index helper.
+    pub fn index(&self, idx: &[usize]) -> usize {
+        let dims = self.dims();
+        debug_assert_eq!(idx.len(), dims.len());
+        let mut flat = 0usize;
+        for (i, &d) in idx.iter().zip(dims.iter()) {
+            debug_assert!(*i < d || d == 0, "index {i} out of dim {d}");
+            let _ = d;
+            flat = flat * d + i;
+        }
+        flat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_row_major() {
+        let t = HostTensor::zeros_f32(&[2, 3, 4]);
+        assert_eq!(t.index(&[0, 0, 0]), 0);
+        assert_eq!(t.index(&[0, 0, 3]), 3);
+        assert_eq!(t.index(&[0, 1, 0]), 4);
+        assert_eq!(t.index(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn spec_check() {
+        let spec = TensorSpec { name: "x".into(), dtype: DType::F32, dims: vec![2, 2] };
+        assert!(HostTensor::zeros_f32(&[2, 2]).check_spec(&spec).is_ok());
+        assert!(HostTensor::zeros_f32(&[2, 3]).check_spec(&spec).is_err());
+        assert!(HostTensor::zeros_i32(&[2, 2]).check_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let lit = t.to_literal().unwrap();
+        let spec = TensorSpec { name: "x".into(), dtype: DType::F32, dims: vec![2, 2] };
+        let t2 = HostTensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn scalar_extraction_errors_on_vectors() {
+        assert!(HostTensor::zeros_f32(&[3]).scalar().is_err());
+        assert_eq!(HostTensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+        assert_eq!(HostTensor::scalar_i32(-3).scalar().unwrap(), -3.0);
+    }
+
+    #[test]
+    fn literal_scalar() {
+        let t = HostTensor::scalar_i32(7);
+        let lit = t.to_literal().unwrap();
+        let spec = TensorSpec { name: "s".into(), dtype: DType::I32, dims: vec![] };
+        let t2 = HostTensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(t2.as_i32().unwrap(), &[7]);
+    }
+}

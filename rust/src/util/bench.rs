@@ -1,0 +1,148 @@
+//! Micro-benchmark harness (the offline registry has no `criterion`).
+//!
+//! Warmup + timed iterations with mean / std / percentiles, printed in a
+//! criterion-like format. Used by the `rust/benches/*.rs` targets
+//! (`cargo bench` with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark measurement series.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        stats::mean(&self.samples_ns)
+    }
+
+    pub fn report(&self) -> String {
+        let mean = self.mean_ns();
+        let p50 = stats::percentile(&self.samples_ns, 50.0);
+        let p95 = stats::percentile(&self.samples_ns, 95.0);
+        let sd = stats::std(&self.samples_ns);
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>10}  ({} iters)",
+            self.name,
+            fmt_ns(mean),
+            fmt_ns(p50),
+            fmt_ns(p95),
+            format!("±{}", fmt_ns(sd)),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            budget: Duration::from_secs(3),
+            min_iters: 5,
+            max_iters: 1000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(800),
+            min_iters: 3,
+            max_iters: 200,
+            ..Default::default()
+        }
+    }
+
+    /// Time `f` repeatedly; prints and records the result.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while (t1.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        let r = BenchResult { name: name.to_string(), iters: samples.len(), samples_ns: samples };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn header(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>10}",
+            "benchmark", "mean", "p50", "p95", "std"
+        );
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 50,
+            results: vec![],
+        };
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(b.results()[0].iters >= 3);
+        assert!(b.results()[0].mean_ns() >= 0.0);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3.5e6), "3.50 ms");
+        assert_eq!(fmt_ns(1.25e9), "1.250 s");
+    }
+}

@@ -1,0 +1,127 @@
+//! Tiny command-line argument parser (no `clap` in the offline registry).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Typed accessors with defaults keep call sites terse:
+//!
+//! ```ignore
+//! let args = CliArgs::parse(std::env::args().skip(1));
+//! let steps: usize = args.get("steps", 100);
+//! let model: String = args.get("model", "tiny".to_string());
+//! if args.flag("verbose") { ... }
+//! ```
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+#[derive(Debug, Clone, Default)]
+pub struct CliArgs {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl CliArgs {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = CliArgs::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` if the next token isn't an option,
+                    // otherwise a boolean flag
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.options.insert(stripped.to_string(), v);
+                        }
+                        _ => out.flags.push(stripped.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Typed option lookup with a default.
+    pub fn get<T: FromStr + Clone>(&self, key: &str, default: T) -> T {
+        match self.options.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("warning: could not parse --{key} {v:?}; using default");
+                default.clone()
+            }),
+            None => default,
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: FromStr>(&self, key: &str) -> T {
+        let v = self
+            .options
+            .get(key)
+            .unwrap_or_else(|| panic!("missing required option --{key}"));
+        v.parse()
+            .unwrap_or_else(|_| panic!("could not parse --{key} {v:?}"))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || self
+                .options
+                .get(key)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> CliArgs {
+        CliArgs::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse("train --steps 50 --model=tiny --verbose --out dir pos1");
+        assert_eq!(a.positional, vec!["train", "pos1"]);
+        assert_eq!(a.get::<usize>("steps", 0), 50);
+        assert_eq!(a.get::<String>("model", "x".into()), "tiny");
+        assert_eq!(a.opt("out"), Some("dir"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("--dry-run --steps 3");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get::<usize>("steps", 0), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.get::<f64>("lr", 1e-3), 1e-3);
+        assert!(a.opt("missing").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "missing required option")]
+    fn require_missing_panics() {
+        let a = parse("cmd");
+        let _: usize = a.require("steps");
+    }
+}

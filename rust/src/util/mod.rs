@@ -1,0 +1,10 @@
+//! Self-contained utility substrates (the offline registry lacks the usual
+//! crates, so JSON, RNG, CLI parsing, stats, the bench harness, and the
+//! property-testing runner are implemented here).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,81 @@
+//! Minimal property-based testing runner (no `proptest` offline).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! failing seed/case index so the case is reproducible, and retries with a
+//! "smaller" size parameter to give a crude shrink. Used by the coordinator
+//! invariant tests (routing, batching, KV accounting, rejection sampling).
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Max "size" hint passed to the generator (case index scales up to it).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 256, seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Check `prop(rng, size)` over `cfg.cases` random cases.
+///
+/// `prop` returns `Err(msg)` to signal a violated invariant. Size grows
+/// from 1 to `max_size` across cases so small counterexamples are tried
+/// first (cheap built-in shrinking).
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let size = 1 + case * cfg.max_size / cfg.cases.max(1);
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            panic!(
+                "property `{name}` failed at case {case} (size {size}, seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: check with default config.
+pub fn quick<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        quick("reverse-involution", |rng, size| {
+            let xs: Vec<u64> = (0..size).map(|_| rng.next_u64()).collect();
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            if xs == ys {
+                Ok(())
+            } else {
+                Err("reverse twice changed the vec".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            PropConfig { cases: 3, ..Default::default() },
+            |_, _| Err("nope".into()),
+        );
+    }
+}

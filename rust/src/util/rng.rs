@@ -1,0 +1,232 @@
+//! Deterministic PRNG utilities (SplitMix64 / xoshiro256**).
+//!
+//! The offline registry has no `rand` crate; this module provides the
+//! generator the coordinator uses for sampling tokens, shuffling datasets,
+//! and generating synthetic tasks. Fully deterministic from a seed so every
+//! experiment is reproducible from its config.
+
+/// xoshiro256** seeded via SplitMix64 — fast, high-quality, reproducible.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion of the seed into the xoshiro state.
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent stream (e.g. per sequence slot).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        // Lemire-style rejection-free enough for our n << 2^64.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + (self.next_u64() % ((hi - lo + 1) as u64)) as i64
+    }
+
+    /// Bernoulli with probability p.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Sample from a categorical distribution given log-probabilities,
+    /// applying `temperature` and nucleus (top-p) truncation — the token
+    /// sampler on the rollout hot path.
+    ///
+    /// With temperature 1.0 and top_p 1.0 this samples the exact softmax of
+    /// `logp` (which the decode artifact already normalized).
+    pub fn sample_logits(&mut self, logp: &[f32], temperature: f32, top_p: f32) -> usize {
+        assert!(!logp.is_empty());
+        let inv_t = 1.0 / temperature.max(1e-6);
+        let mx = logp.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut probs: Vec<f32> = logp.iter().map(|&l| ((l - mx) * inv_t).exp()).collect();
+        let sum: f32 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= sum;
+        }
+        if top_p < 1.0 {
+            // nucleus truncation: keep the smallest prefix of the sorted
+            // distribution whose mass reaches top_p
+            let mut idx: Vec<usize> = (0..probs.len()).collect();
+            idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            let mut acc = 0.0f32;
+            let mut cut = probs.len();
+            for (rank, &i) in idx.iter().enumerate() {
+                acc += probs[i];
+                if acc >= top_p {
+                    cut = rank + 1;
+                    break;
+                }
+            }
+            let keep: std::collections::HashSet<usize> =
+                idx[..cut].iter().cloned().collect();
+            let mut mass = 0.0;
+            for (i, p) in probs.iter_mut().enumerate() {
+                if keep.contains(&i) {
+                    mass += *p;
+                } else {
+                    *p = 0.0;
+                }
+            }
+            for p in probs.iter_mut() {
+                *p /= mass;
+            }
+        }
+        let r = self.next_f32();
+        let mut acc = 0.0f32;
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if r < acc {
+                return i;
+            }
+        }
+        probs.len() - 1
+    }
+
+    /// Standard normal via Box–Muller (tests / synthetic data).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(7);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            counts[r.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((800..1200).contains(&c), "bucket count {c} out of range");
+        }
+    }
+
+    #[test]
+    fn sample_logits_matches_softmax() {
+        let mut r = Rng::new(3);
+        let logp = [0.0f32, -1.0, -2.0, -30.0];
+        let mut counts = [0usize; 4];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[r.sample_logits(&logp, 1.0, 1.0)] += 1;
+        }
+        let z: f32 = logp.iter().map(|l| l.exp()).sum();
+        for i in 0..4 {
+            let expect = (logp[i].exp() / z) as f64;
+            let got = counts[i] as f64 / n as f64;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "token {i}: got {got}, expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn top_p_truncates_tail() {
+        let mut r = Rng::new(5);
+        // last token has ~2e-14 mass; top_p=0.9 must never sample it
+        let logp = [0.0f32, -0.1, -30.0];
+        for _ in 0..10_000 {
+            assert_ne!(r.sample_logits(&logp, 1.0, 0.9), 2);
+        }
+    }
+
+    #[test]
+    fn greedy_via_low_temperature() {
+        let mut r = Rng::new(11);
+        let logp = [-2.0f32, -0.5, -1.0];
+        for _ in 0..100 {
+            assert_eq!(r.sample_logits(&logp, 1e-4, 1.0), 1);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}
