@@ -1,23 +1,163 @@
-//! Component latency bench: every artifact on the rollout/training path.
+//! Rollout-path benches: engine comparison + component latency.
 //!
-//! Backs the §Perf numbers in EXPERIMENTS.md: decode step latency (dense
-//! vs sparse — the memory-wall compute story), compression overhead per
-//! method, prefill, dense scoring, and the RL train step.
+//! Part 1 (always runs, no artifacts needed): static chunked vs continuous
+//! slot-recycling engines head-to-head on the deterministic mock backend
+//! under a skewed response-length workload — decode steps, decode-step
+//! slot occupancy, idle fraction, refills. Both engines are verified to
+//! emit token-identical sequences before the numbers are printed.
+//!
+//! Part 2 (needs `make artifacts`): every artifact on the rollout/training
+//! path — decode step latency (dense vs sparse — the memory-wall compute
+//! story), compression overhead per method, prefill, dense scoring, and
+//! the RL train step. Backs the §Perf numbers in EXPERIMENTS.md.
 //!
 //!     cargo bench --bench bench_rollout [-- --model nano]
 
+use sparse_rl::config::{RolloutMode, SamplingConfig};
+use sparse_rl::coordinator::scheduler::SchedulerStats;
+use sparse_rl::coordinator::{
+    GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy, RolloutStats,
+    Scheduler,
+};
+use sparse_rl::data::task::Task;
 use sparse_rl::experiments;
 use sparse_rl::runtime::{Hyp, Method, ModelEngine, ParamsLit, TrainState, Variant};
 use sparse_rl::util::bench::Bencher;
 use sparse_rl::util::cli::CliArgs;
+use sparse_rl::util::rng::Rng;
+
+fn mk_sched(slots: usize, reserve: usize) -> Scheduler {
+    Scheduler { slots, reserve_per_seq: reserve, stats: SchedulerStats::default() }
+}
+
+fn run_static_mock(
+    policy: &RolloutPolicy,
+    backend: &mut MockModelBackend,
+    tasks: &[Task],
+    seed: u64,
+    reserve: usize,
+    kv_cap: usize,
+) -> (Vec<GenSeq>, RolloutStats) {
+    let mut kv = KvMemoryManager::new(kv_cap);
+    let mut sched = mk_sched(backend.slots(), reserve);
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    policy
+        .rollout_static_queue(backend, &flat, seed, &mut sched, &mut kv, 0)
+        .expect("rollout")
+}
+
+fn run_continuous_mock(
+    policy: &RolloutPolicy,
+    backend: &mut MockModelBackend,
+    tasks: &[Task],
+    seed: u64,
+    reserve: usize,
+    kv_cap: usize,
+) -> (Vec<GenSeq>, RolloutStats) {
+    let mut kv = KvMemoryManager::new(kv_cap);
+    let mut sched = mk_sched(backend.slots(), reserve);
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    policy
+        .rollout_continuous(backend, &flat, seed, &mut sched, &mut kv, 0)
+        .expect("rollout")
+}
+
+/// Static vs continuous on the mock model: the long-tail-bubble numbers.
+fn engine_comparison() {
+    let (slots, prompt_len, max_seq, budget, buffer) = (8usize, 24usize, 160usize, 28usize, 8usize);
+    let n_tasks = 64;
+    let seed = 7u64;
+    let mut rng = Rng::new(1);
+    let tasks: Vec<Task> = (0..n_tasks)
+        .map(|_| {
+            let ops = 1 + rng.below(2);
+            Task::gen(&mut rng, ops, prompt_len)
+        })
+        .collect();
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 64 };
+
+    println!(
+        "== engine comparison: static vs continuous (mock model, R={slots}, {n_tasks} tasks, \
+         skewed lengths) =="
+    );
+    println!(
+        "{:<16} {:<11} {:>12} {:>10} {:>7} {:>8} {:>9}",
+        "mode", "engine", "decode-steps", "occupancy", "idle%", "refills", "prefills"
+    );
+
+    for mode in [RolloutMode::Dense, RolloutMode::SparseRl(Method::RKv)] {
+        let policy = RolloutPolicy::new(mode, sampling);
+        let capacity = if mode.is_sparse() { budget + buffer } else { max_seq };
+        let reserve = capacity;
+        let kv_cap = reserve * slots * 4; // slot-limited: isolate the bubble
+        let backend = || {
+            let mut b = if mode.is_sparse() {
+                MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer)
+            } else {
+                MockModelBackend::dense(slots, prompt_len, max_seq, 32)
+            };
+            b.eos_pull = 0.12; // long-tailed response lengths
+            b
+        };
+
+        let (stat_seqs, ss) =
+            run_static_mock(&policy, &mut backend(), &tasks, seed, reserve, kv_cap);
+        let (cont_seqs, cs) =
+            run_continuous_mock(&policy, &mut backend(), &tasks, seed, reserve, kv_cap);
+
+        // engines must agree token-for-token before the numbers mean anything
+        let agree = stat_seqs
+            .iter()
+            .zip(cont_seqs.iter())
+            .all(|(a, b)| a.response_ids == b.response_ids && a.sampler_logp == b.sampler_logp);
+        let mut lens: Vec<usize> = stat_seqs.iter().map(|s| s.response_ids.len()).collect();
+        lens.sort_unstable();
+
+        for (engine, st) in [("static", &ss), ("continuous", &cs)] {
+            println!(
+                "{:<16} {:<11} {:>12} {:>10.3} {:>6.1}% {:>8} {:>9}",
+                mode.label(),
+                engine,
+                st.decode_steps,
+                st.occupancy(),
+                100.0 * st.idle_frac(),
+                st.refills,
+                st.prefills + st.slot_prefills,
+            );
+        }
+        let saved = 1.0 - cs.decode_steps as f64 / ss.decode_steps.max(1) as f64;
+        println!(
+            "  -> lengths p0/p50/p100 = {}/{}/{}: continuous saves {:.1}% decode steps, \
+             token-identical outputs: {}",
+            lens.first().unwrap(),
+            lens[lens.len() / 2],
+            lens.last().unwrap(),
+            100.0 * saved,
+            if agree { "yes" } else { "NO (BUG)" },
+        );
+        assert!(agree, "engines diverged on the bench workload");
+        if lens.first() != lens.last() {
+            assert!(
+                cs.decode_steps < ss.decode_steps,
+                "continuous must need strictly fewer decode steps under skew"
+            );
+        }
+    }
+    println!();
+}
 
 fn main() {
     let args = CliArgs::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+
+    // Part 1: engine comparison on the mock backend (always runs).
+    engine_comparison();
+
+    // Part 2: artifact component latencies.
     let model = args.get("model", "nano".to_string());
     let dir = match experiments::find_artifacts(&model) {
         Ok(d) => d,
         Err(e) => {
-            eprintln!("skipping bench: {e}");
+            eprintln!("skipping artifact benches: {e}");
             return;
         }
     };
@@ -48,6 +188,16 @@ fn main() {
     for variant in [Variant::Dense, Variant::Sparse] {
         b.bench(&format!("prefill_{}", variant.name()), || {
             engine.prefill(variant, &plit, &ids, &lens).expect("prefill");
+        });
+    }
+
+    // per-slot prefill (slot recycling cost: full prefill + host splice)
+    {
+        let (mut cache, _) =
+            engine.prefill(Variant::Sparse, &plit, &ids, &lens).expect("prefill");
+        let prompt: Vec<i32> = ids[..(p / 2)].to_vec();
+        b.bench("prefill_slot (recycle)", || {
+            engine.prefill_slot(&plit, &mut cache, r / 2, &prompt).expect("prefill_slot");
         });
     }
 

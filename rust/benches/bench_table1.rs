@@ -59,7 +59,8 @@ fn main() {
         let task_indices: Vec<usize> = (0..n_seqs / 8).collect();
 
         let t0 = Instant::now();
-        let (seqs, chunks) = trainer.rollout_batch(&task_indices).expect("rollout");
+        let (seqs, rstats) = trainer.rollout_batch(&task_indices).expect("rollout");
+        let chunks = rstats.chunks;
         let wall = t0.elapsed().as_secs_f64();
 
         let gen_tokens: usize = seqs.iter().map(|s| s.response_ids.len()).sum();

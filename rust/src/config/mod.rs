@@ -63,6 +63,39 @@ impl RolloutMode {
     }
 }
 
+/// Which rollout data path drives generation.
+///
+/// `Static` is the original chunked engine: a chunk of sequences is
+/// admitted together and the whole chunk decodes until its slowest
+/// sequence finishes (long-tail bubble). `Continuous` recycles decode
+/// slots: a finished sequence releases its KV reservation immediately and
+/// the next pending prompt is prefilled into the freed slot mid-flight.
+/// Both paths produce token-identical sequences per task (per-task RNG),
+/// so every mode/baseline can run either engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    #[default]
+    Static,
+    Continuous,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        Ok(match s {
+            "static" | "chunked" => EngineKind::Static,
+            "continuous" | "cb" => EngineKind::Continuous,
+            other => bail!("bad engine {other:?} (static | continuous)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Static => "static",
+            EngineKind::Continuous => "continuous",
+        }
+    }
+}
+
 /// Sampling parameters (paper §5.1: T=1.0, top-p=1.0, max 4096 -> scaled).
 #[derive(Debug, Clone, Copy)]
 pub struct SamplingConfig {
@@ -164,6 +197,9 @@ pub struct ExperimentConfig {
     pub artifact_dir: PathBuf,
     pub seed: u64,
     pub mode: RolloutMode,
+    /// Rollout data path: static chunked batching vs continuous batching
+    /// with slot recycling. Orthogonal to `mode`.
+    pub engine: EngineKind,
     pub sampling: SamplingConfig,
     pub train: TrainConfig,
     pub memory: MemoryConfig,
@@ -179,6 +215,7 @@ impl ExperimentConfig {
             artifact_dir: artifact_dir.to_path_buf(),
             seed: 0,
             mode: RolloutMode::Dense,
+            engine: EngineKind::default(),
             sampling: SamplingConfig::default(),
             train: TrainConfig::default(),
             memory: MemoryConfig::default(),
@@ -193,6 +230,7 @@ impl ExperimentConfig {
             "artifacts" => self.artifact_dir = PathBuf::from(value),
             "seed" => self.seed = value.parse().context("seed")?,
             "mode" => self.mode = RolloutMode::parse(value)?,
+            "engine" => self.engine = EngineKind::parse(value)?,
             "temperature" => self.sampling.temperature = value.parse().context("temperature")?,
             "top-p" => self.sampling.top_p = value.parse().context("top-p")?,
             "max-response" => self.sampling.max_response = value.parse().context("max-response")?,
@@ -298,6 +336,18 @@ mod tests {
         assert!(c.mode.corrections());
         assert!((c.train.hyp.lr - 1e-3).abs() < 1e-9);
         assert!(c.apply("nope", "1").is_err());
+    }
+
+    #[test]
+    fn engine_kind_parsing() {
+        assert_eq!(EngineKind::parse("static").unwrap(), EngineKind::Static);
+        assert_eq!(EngineKind::parse("continuous").unwrap(), EngineKind::Continuous);
+        assert_eq!(EngineKind::parse("cb").unwrap(), EngineKind::Continuous);
+        assert!(EngineKind::parse("batchy").is_err());
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        assert_eq!(c.engine, EngineKind::Static); // default preserves behavior
+        c.apply("engine", "continuous").unwrap();
+        assert_eq!(c.engine, EngineKind::Continuous);
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Model-backend abstraction for the rollout engines.
+//!
+//! Both rollout data paths (static chunked and continuous with slot
+//! recycling, `rollout.rs`) are generic over a `RolloutBackend`: the small
+//! surface a decode loop needs from the model — batched prefill, per-slot
+//! prefill (slot recycling), one decode step, and masked KV compression.
+//!
+//! Two implementations exist:
+//! * [`EngineBackend`] — the production path over the AOT artifacts
+//!   (`runtime::ModelEngine`), owning the device cache state for one
+//!   rollout.
+//! * `coordinator::mock::MockModelBackend` — a deterministic pure-Rust
+//!   model used by the determinism/equivalence test harness and the
+//!   engine-comparison benches; it needs no artifacts, so the equivalence
+//!   properties run hermetically in CI.
+//!
+//! The contract that makes engine equivalence testable token-for-token:
+//! a slot's logits depend only on that slot's own cache contents (batch
+//! rows are independent), and `prefill_slot` must leave the target slot in
+//! exactly the state a batched `prefill` would have produced.
+
+use anyhow::{Context, Result};
+
+use crate::config::RolloutMode;
+use crate::runtime::{CacheState, Method, ModelEngine, ParamsLit, Variant};
+
+/// What a rollout loop needs from the model. All logits returned are
+/// log-probabilities over the vocabulary; batched calls return `[R * V]`
+/// flattened, `prefill_slot` returns one `[V]` row.
+pub trait RolloutBackend {
+    /// Decode batch width R.
+    fn slots(&self) -> usize;
+    /// Maximum prompt tokens per sequence.
+    fn prompt_len(&self) -> usize;
+    /// Maximum absolute sequence position.
+    fn max_seq(&self) -> usize;
+    fn vocab(&self) -> usize;
+    /// Per-sequence KV cache capacity for the active variant.
+    fn capacity(&self) -> usize;
+    /// Retained tokens after a compression (== capacity when dense).
+    fn budget(&self) -> usize;
+
+    /// Batched prefill of all R slots; replaces the whole cache. Returns
+    /// last-prompt-token log-probs `[R * V]`.
+    fn prefill(&mut self, ids: &[i32], plens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Prefill one slot in place without disturbing the others (slot
+    /// recycling). Returns that slot's last-prompt-token log-probs `[V]`.
+    fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>>;
+
+    /// One decode step over the whole batch. `lens[s]` is the occupied
+    /// cache length (the write position), `pos[s]` the absolute position.
+    fn decode(&mut self, lens: &[i32], pos: &[i32], tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Compress the cache of every slot with `do_mask[s] == 1.0` down to
+    /// the budget.
+    fn compress(&mut self, do_mask: &[f32]) -> Result<()>;
+}
+
+/// Production backend: drives the AOT artifacts through `ModelEngine`,
+/// holding the device-side cache for the rollout in flight.
+pub struct EngineBackend<'a> {
+    engine: &'a ModelEngine,
+    params: &'a ParamsLit,
+    variant: Variant,
+    method: Option<Method>,
+    cache: Option<CacheState>,
+}
+
+impl<'a> EngineBackend<'a> {
+    pub fn new(engine: &'a ModelEngine, params: &'a ParamsLit, mode: RolloutMode) -> Self {
+        let variant = if mode.is_sparse() { Variant::Sparse } else { Variant::Dense };
+        EngineBackend { engine, params, variant, method: mode.method(), cache: None }
+    }
+}
+
+impl RolloutBackend for EngineBackend<'_> {
+    fn slots(&self) -> usize {
+        self.engine.manifest.shapes.decode_batch
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.engine.manifest.config.prompt_len
+    }
+
+    fn max_seq(&self) -> usize {
+        self.engine.manifest.config.max_seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.engine.manifest.config.vocab
+    }
+
+    fn capacity(&self) -> usize {
+        match self.variant {
+            Variant::Dense => self.engine.manifest.shapes.dense_capacity,
+            Variant::Sparse => self.engine.manifest.shapes.sparse_capacity,
+        }
+    }
+
+    fn budget(&self) -> usize {
+        match self.variant {
+            Variant::Dense => self.engine.manifest.shapes.dense_capacity,
+            Variant::Sparse => self.engine.manifest.shapes.budget,
+        }
+    }
+
+    fn prefill(&mut self, ids: &[i32], plens: &[i32]) -> Result<Vec<f32>> {
+        let (cache, logp) = self.engine.prefill(self.variant, self.params, ids, plens)?;
+        self.cache = Some(cache);
+        Ok(logp)
+    }
+
+    fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
+        let cache = self
+            .cache
+            .as_mut()
+            .context("prefill_slot before the initial batched prefill")?;
+        self.engine.prefill_slot(self.params, cache, slot, prompt)
+    }
+
+    fn decode(&mut self, lens: &[i32], pos: &[i32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let cache = self.cache.as_mut().context("decode before prefill")?;
+        self.engine.decode(self.params, cache, lens, pos, tokens)
+    }
+
+    fn compress(&mut self, do_mask: &[f32]) -> Result<()> {
+        let cache = self.cache.as_mut().context("compress before prefill")?;
+        let method = self.method.context("compress in dense mode")?;
+        self.engine.compress(method, cache, do_mask)
+    }
+}

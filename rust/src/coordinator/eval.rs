@@ -12,7 +12,6 @@ use crate::config::{RolloutMode, SamplingConfig};
 use crate::data::benchmarks::{Benchmark, Protocol};
 use crate::data::task::Task;
 use crate::runtime::ModelEngine;
-use crate::util::rng::Rng;
 
 use super::rollout::RolloutEngine;
 
@@ -66,7 +65,9 @@ pub fn evaluate(
         },
     };
     let rollout = RolloutEngine::new(engine, mode, sampling);
-    let mut rng = Rng::new(seed ^ 0xE7A1_5EED);
+    // per-task RNG streams key off (rollout seed, flat sample id), so
+    // every Avg@k sample draws an independent, reproducible stream
+    let rollout_seed = seed ^ 0xE7A1_5EED;
 
     // flat sample list: item i sample j -> flat i*k + j
     let flat: Vec<(usize, &Task)> = (0..tasks.len() * k)
@@ -77,7 +78,7 @@ pub fn evaluate(
     let mut total_len = 0usize;
     let mut acct = crate::compression::KvAccounting::new();
     for chunk in flat.chunks(r) {
-        let seqs = rollout.rollout_chunk(params, chunk, &mut rng)?;
+        let seqs = rollout.rollout_chunk(params, chunk, rollout_seed)?;
         for seq in seqs {
             let item = seq.task_idx / k;
             if tasks[item].reward(&seq.response_ids) > 0.5 {

@@ -109,6 +109,35 @@ impl KvMemoryManager {
         self.seqs.len()
     }
 
+    /// Structural invariants the property tests hold at every step:
+    /// reserved tokens equal the sum over live reservations, never exceed
+    /// capacity, and the high-water mark is monotone-consistent (at least
+    /// the current residency, never above the wall).
+    pub fn check_invariants(&self) -> Result<()> {
+        let sum: usize = self.seqs.values().sum();
+        if self.reserved != sum {
+            bail!("reserved {} != sum of live reservations {}", self.reserved, sum);
+        }
+        if self.reserved > self.capacity {
+            bail!("reserved {} exceeds capacity {}", self.reserved, self.capacity);
+        }
+        if self.peak_reserved < self.reserved {
+            bail!(
+                "peak_reserved {} below current reserved {}",
+                self.peak_reserved,
+                self.reserved
+            );
+        }
+        if self.peak_reserved > self.capacity {
+            bail!(
+                "peak_reserved {} exceeds capacity {} (wall was breached)",
+                self.peak_reserved,
+                self.capacity
+            );
+        }
+        Ok(())
+    }
+
     /// Utilization in [0, 1].
     pub fn utilization(&self) -> f64 {
         if self.capacity == 0 {
@@ -189,6 +218,7 @@ mod tests {
                 if m.live_sequences() != live.len() {
                     return Err("live count mismatch".into());
                 }
+                m.check_invariants().map_err(|e| e.to_string())?;
             }
             Ok(())
         });

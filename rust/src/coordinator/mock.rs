@@ -1,0 +1,299 @@
+//! Deterministic in-process model backend — the heart of the
+//! determinism/equivalence test harness.
+//!
+//! `MockModelBackend` implements `RolloutBackend` with a pure-Rust "model"
+//! whose log-probs are a deterministic hash of the slot's own retained
+//! cache contents. That gives it exactly the properties the engine
+//! equivalence tests need, with no artifacts and no PJRT runtime:
+//!
+//! * **Batch-row independence** — a slot's logits depend only on its own
+//!   cache, so recycling neighbour slots cannot perturb a sequence. Any
+//!   cross-slot leak in an engine implementation breaks token equality.
+//! * **Exact `prefill_slot` = batched-prefill row** — both write the same
+//!   per-slot cache, so static and continuous engines must agree
+//!   bit-for-bit on tokens and `sampler_logp`.
+//! * **Compression-sensitivity** — logits hash the retained tokens at
+//!   their retained positions, so sparse eviction changes the sampling
+//!   distribution (as real compression does) while staying deterministic.
+//! * **Bounds enforcement** — any cache write at or past `capacity` is an
+//!   error, so an engine that misses a compression trigger fails loudly.
+//!
+//! Response lengths vary task-to-task (an EOS pull grows with resident
+//! length plus content hash), producing the skewed long-tail length
+//! distributions the continuous engine exists to exploit.
+
+use anyhow::{bail, Result};
+
+use crate::data::tokenizer::{BOS, EOS, PAD};
+
+use super::backend::RolloutBackend;
+
+/// Pure-Rust deterministic model backend (see module docs).
+#[derive(Debug, Clone)]
+pub struct MockModelBackend {
+    slots: usize,
+    prompt_len: usize,
+    max_seq: usize,
+    vocab: usize,
+    capacity: usize,
+    budget: usize,
+    sparse: bool,
+    /// StreamingLLM-style compression: retained prefix ("sinks") size.
+    pub sinks: usize,
+    /// How strongly EOS is favored as resident length grows (controls the
+    /// response-length distribution's skew).
+    pub eos_pull: f32,
+    /// Per-slot cache: the token written at each occupied cache position.
+    cache: Vec<Vec<i32>>,
+    /// Writes dropped for landing at/after `capacity`. The artifacts'
+    /// scatter drops out-of-bounds writes the same way; live sequences
+    /// never produce them (compression fires first) — only frozen
+    /// (finished) slots in the static engine do, feeding dead PAD tokens.
+    pub oob_writes: u64,
+}
+
+impl MockModelBackend {
+    /// `capacity` is the per-sequence cache bound for the chosen path:
+    /// dense engines pass `max_seq` (and `budget == capacity`), sparse
+    /// ones pass `budget + buffer`.
+    pub fn new(
+        slots: usize,
+        prompt_len: usize,
+        max_seq: usize,
+        vocab: usize,
+        capacity: usize,
+        budget: usize,
+        sparse: bool,
+    ) -> Self {
+        assert!(vocab > EOS as usize, "vocab must contain the special tokens");
+        assert!(capacity >= prompt_len, "cache must fit a full prompt");
+        assert!(budget <= capacity);
+        MockModelBackend {
+            slots,
+            prompt_len,
+            max_seq,
+            vocab,
+            capacity,
+            budget,
+            sparse,
+            sinks: 2,
+            eos_pull: 0.25,
+            cache: vec![Vec::new(); slots],
+            oob_writes: 0,
+        }
+    }
+
+    /// Dense-path mock: cache bound = max_seq, no compression.
+    pub fn dense(slots: usize, prompt_len: usize, max_seq: usize, vocab: usize) -> Self {
+        Self::new(slots, prompt_len, max_seq, vocab, max_seq, max_seq, false)
+    }
+
+    /// Sparse-path mock: cache bound = budget + buffer, compression live.
+    pub fn sparse(
+        slots: usize,
+        prompt_len: usize,
+        max_seq: usize,
+        vocab: usize,
+        budget: usize,
+        buffer: usize,
+    ) -> Self {
+        Self::new(slots, prompt_len, max_seq, vocab, budget + buffer, budget, true)
+    }
+
+    /// Deterministic log-softmax over the vocab from one slot's retained
+    /// cache prefix. Pure function of the content — bitwise reproducible.
+    fn row_logp(&self, content: &[i32]) -> Vec<f32> {
+        let mut h: u64 = 0x9E37_79B9_7F4A_7C15;
+        for (i, &t) in content.iter().enumerate() {
+            h ^= ((t as u64).wrapping_add(1))
+                .wrapping_mul(0xA24B_AED4_963E_E407)
+                .rotate_left((i % 61) as u32);
+            h = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        let mut logits: Vec<f32> = (0..self.vocab)
+            .map(|v| {
+                let hv = (h ^ (v as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93))
+                    .wrapping_mul(0x2545_F491_4F6C_DD1D);
+                // uniform in [-3, 3)
+                ((hv >> 11) as f64 / (1u64 << 53) as f64 * 6.0 - 3.0) as f32
+            })
+            .collect();
+        // structural tokens are never generated; EOS gets likelier as the
+        // resident sequence grows (skewed, but bounded, lengths)
+        logits[PAD as usize] = -30.0;
+        logits[BOS as usize] = -30.0;
+        logits[EOS as usize] += self.eos_pull * content.len() as f32 - 3.0;
+        // log-softmax
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = logits.iter().map(|&l| (l - mx).exp()).sum();
+        let lz = z.ln();
+        logits.iter().map(|&l| l - mx - lz).collect()
+    }
+}
+
+impl RolloutBackend for MockModelBackend {
+    fn slots(&self) -> usize {
+        self.slots
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn budget(&self) -> usize {
+        self.budget
+    }
+
+    fn prefill(&mut self, ids: &[i32], plens: &[i32]) -> Result<Vec<f32>> {
+        if ids.len() != self.slots * self.prompt_len || plens.len() != self.slots {
+            bail!("prefill: bad batch shape");
+        }
+        let mut logp = Vec::with_capacity(self.slots * self.vocab);
+        for s in 0..self.slots {
+            let plen = plens[s] as usize;
+            if plen == 0 || plen > self.prompt_len {
+                bail!("prefill: slot {s} prompt length {plen} out of range");
+            }
+            self.cache[s] = ids[s * self.prompt_len..s * self.prompt_len + plen].to_vec();
+            logp.extend(self.row_logp(&self.cache[s]));
+        }
+        Ok(logp)
+    }
+
+    fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
+        if slot >= self.slots {
+            bail!("prefill_slot: slot {slot} out of range");
+        }
+        if prompt.is_empty() || prompt.len() > self.prompt_len {
+            bail!("prefill_slot: prompt length {} out of range", prompt.len());
+        }
+        self.cache[slot] = prompt.to_vec();
+        Ok(self.row_logp(&self.cache[slot]))
+    }
+
+    fn decode(&mut self, lens: &[i32], pos: &[i32], tokens: &[i32]) -> Result<Vec<f32>> {
+        if lens.len() != self.slots || pos.len() != self.slots || tokens.len() != self.slots {
+            bail!("decode: bad control vector length");
+        }
+        let mut logp = Vec::with_capacity(self.slots * self.vocab);
+        for s in 0..self.slots {
+            let l = lens[s] as usize;
+            if l >= self.capacity {
+                // out-of-bounds scatter: dropped, like the artifacts do.
+                // Reachable only for frozen slots; their logits are dead.
+                self.oob_writes += 1;
+                logp.extend(self.row_logp(&self.cache[s]));
+                continue;
+            }
+            match l.cmp(&self.cache[s].len()) {
+                std::cmp::Ordering::Less => self.cache[s][l] = tokens[s],
+                std::cmp::Ordering::Equal => self.cache[s].push(tokens[s]),
+                std::cmp::Ordering::Greater => {
+                    bail!("decode: slot {s} write at {l} leaves a gap (cache len {})",
+                        self.cache[s].len())
+                }
+            }
+            logp.extend(self.row_logp(&self.cache[s][..l + 1]));
+        }
+        Ok(logp)
+    }
+
+    fn compress(&mut self, do_mask: &[f32]) -> Result<()> {
+        if !self.sparse {
+            bail!("compress called on a dense mock");
+        }
+        for (s, &m) in do_mask.iter().enumerate() {
+            if m <= 0.0 {
+                continue;
+            }
+            let c = &mut self.cache[s];
+            if c.len() <= self.budget {
+                continue; // nothing to evict
+            }
+            // StreamingLLM-style retention: sink prefix + recency window
+            let sinks = self.sinks.min(self.budget);
+            let tail = self.budget - sinks;
+            let mut kept: Vec<i32> = c[..sinks].to_vec();
+            kept.extend_from_slice(&c[c.len() - tail..]);
+            *c = kept;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logits_are_deterministic_and_normalized() {
+        let m = MockModelBackend::dense(2, 8, 32, 32);
+        let a = m.row_logp(&[1, 5, 9]);
+        let b = m.row_logp(&[1, 5, 9]);
+        assert_eq!(a, b);
+        let mass: f64 = a.iter().map(|&l| (l as f64).exp()).sum();
+        assert!((mass - 1.0).abs() < 1e-4, "mass {mass}");
+        // content-sensitive
+        let c = m.row_logp(&[1, 5, 10]);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn prefill_slot_matches_batched_row() {
+        let mut a = MockModelBackend::dense(3, 6, 32, 32);
+        let mut b = a.clone();
+        let mut ids = vec![PAD; 3 * 6];
+        ids[6..10].copy_from_slice(&[1, 7, 8, 9]); // slot 1 prompt
+        ids[0] = BOS;
+        ids[12] = BOS;
+        let mut plens = vec![1; 3];
+        plens[1] = 4;
+        let full = a.prefill(&ids, &plens).unwrap();
+        // other-slot contents must not matter
+        b.prefill(&[5i32; 18], &[6, 6, 6]).unwrap();
+        let row = b.prefill_slot(1, &[1, 7, 8, 9]).unwrap();
+        assert_eq!(&full[32..64], &row[..]);
+    }
+
+    #[test]
+    fn overflow_write_is_dropped() {
+        let mut m = MockModelBackend::sparse(1, 4, 64, 32, 6, 2);
+        m.prefill(&[1, 3, 4, 5], &[4]).unwrap();
+        for l in 4..8 {
+            m.decode(&[l], &[l], &[9]).unwrap();
+        }
+        // capacity 8 reached: the write is dropped (scatter OOB), counted
+        assert_eq!(m.oob_writes, 0);
+        m.decode(&[8], &[8], &[9]).unwrap();
+        assert_eq!(m.oob_writes, 1);
+        m.compress(&[1.0]).unwrap();
+        // after compaction to budget 6 the write goes through again
+        m.decode(&[6], &[9], &[9]).unwrap();
+        assert_eq!(m.oob_writes, 1);
+    }
+
+    #[test]
+    fn compression_changes_distribution() {
+        let mut m = MockModelBackend::sparse(1, 4, 64, 32, 6, 2);
+        m.prefill(&[1, 3, 4, 5], &[4]).unwrap();
+        for l in 4..8 {
+            m.decode(&[l], &[l], &[(3 + l) as i32]).unwrap();
+        }
+        let before = m.decode(&[7], &[7], &[9]).unwrap();
+        m.compress(&[1.0]).unwrap();
+        let after = m.decode(&[5], &[8], &[9]).unwrap();
+        assert_ne!(before, after);
+    }
+}

@@ -1,7 +1,12 @@
 //! L3 coordinator: the paper's system contribution.
 //!
-//! * `rollout`    — batched dense/sparse generation over the AOT artifacts
-//! * `scheduler`  — memory-wall admission (the batch-size story of §1)
+//! * `rollout`    — dense/sparse generation, static chunked AND continuous
+//!   batching with slot recycling (token-identical per task)
+//! * `backend`    — the model surface the engines drive (artifacts or mock)
+//! * `mock`       — deterministic pure-Rust backend for the equivalence
+//!   test harness and engine benches
+//! * `scheduler`  — memory-wall admission, chunk- and sequence-level
+//!   (the batch-size story of §1)
 //! * `kv_manager` — the simulated KV memory wall itself
 //! * `group`      — GRPO group advantages (Eq. 10)
 //! * `rejection`  — Sparsity-Aware Rejection Sampling (Eq. 5-6)
@@ -10,19 +15,23 @@
 //! * `eval`       — the 7-benchmark evaluation harness
 //! * `metrics`    — training-dynamics time series (Figs. 1-6)
 
+pub mod backend;
 pub mod eval;
 pub mod group;
 pub mod kv_manager;
 pub mod metrics;
+pub mod mock;
 pub mod rejection;
 pub mod reweight;
 pub mod rollout;
 pub mod scheduler;
 pub mod trainer;
 
+pub use backend::{EngineBackend, RolloutBackend};
 pub use eval::{evaluate, evaluate_suite, EvalResult};
 pub use kv_manager::KvMemoryManager;
 pub use metrics::Metrics;
-pub use rollout::{GenSeq, RolloutEngine};
+pub use mock::MockModelBackend;
+pub use rollout::{task_rng, GenSeq, RolloutEngine, RolloutPolicy, RolloutStats};
 pub use scheduler::Scheduler;
 pub use trainer::{StepReport, Trainer};

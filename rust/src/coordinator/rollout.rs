@@ -1,16 +1,40 @@
-//! Batched autoregressive rollout engine (dense and sparse paths).
+//! Autoregressive rollout engines (dense and sparse paths; static chunked
+//! and continuous batching).
 //!
-//! Drives the AOT prefill/decode/compress executables over a chunk of
-//! sequences occupying the decode batch's slots. The engine owns sampling
-//! (temperature / top-p), EOS handling, per-token sampler log-prob
-//! recording (this *is* log π_sparse — Eq. 2 — the number the corrections
-//! need), KV compression triggering, and KV accounting.
+//! Drives the prefill/decode/compress backend over sequences occupying the
+//! decode batch's slots. The engines own sampling (temperature / top-p),
+//! EOS handling, per-token sampler log-prob recording (this *is*
+//! log π_sparse — Eq. 2 — the number the corrections need), KV compression
+//! triggering, and KV accounting.
+//!
+//! Two data paths share all of that per-sequence logic:
+//!
+//! * **Static chunked** (`rollout_static`): a chunk of ≤ R sequences is
+//!   prefilled together and decodes until the *slowest* sequence finishes.
+//!   Every slot whose sequence hit EOS early burns PAD decode work until
+//!   the chunk drains — the long-tail bubble.
+//! * **Continuous with slot recycling** (`rollout_continuous`): the moment
+//!   a sequence finishes, its KV reservation is released, the next pending
+//!   prompt is admitted, prefilled *into that slot in place*, and the
+//!   mixed batch keeps decoding. Total decode steps drop from
+//!   Σ_chunks max(len) to the list-scheduling makespan of the per-sequence
+//!   decode costs — strictly better whenever response lengths are skewed.
+//!
+//! Token-for-token equivalence between the two paths is guaranteed by
+//! per-TASK RNG streams (`task_rng`): a task's sampling randomness is a
+//! pure function of (rollout seed, task index), never of the slot or chunk
+//! it lands in. Combined with batch-row independence of the model, a given
+//! task emits identical `response_ids` and `sampler_logp` under both
+//! engines — which keeps the Eq. 2/5 correction math bit-reproducible and
+//! is what `tests/engine_equivalence.rs` checks exhaustively.
 //!
 //! The sparse path realizes the paper's rollout: the cache holds at most
 //! `budget + buffer` slots; whenever a sequence fills the buffer, the
 //! compression artifact compacts it back to `budget` retained tokens.
 
-use anyhow::Result;
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
 
 use crate::compression::KvAccounting;
 use crate::config::{RolloutMode, SamplingConfig};
@@ -18,6 +42,10 @@ use crate::data::task::Task;
 use crate::data::tokenizer::{BOS, EOS, PAD};
 use crate::runtime::{ModelEngine, ParamsLit, Variant};
 use crate::util::rng::Rng;
+
+use super::backend::{EngineBackend, RolloutBackend};
+use super::kv_manager::KvMemoryManager;
+use super::scheduler::Scheduler;
 
 /// One finished rollout.
 #[derive(Debug, Clone)]
@@ -36,6 +64,17 @@ pub struct GenSeq {
 }
 
 impl GenSeq {
+    fn new(task_idx: usize, prompt_ids: Vec<i32>) -> GenSeq {
+        GenSeq {
+            task_idx,
+            prompt_ids,
+            response_ids: vec![],
+            sampler_logp: vec![],
+            finished: false,
+            accounting: KvAccounting::new(),
+        }
+    }
+
     /// Full sequence ids: prompt + response.
     pub fn full_ids(&self) -> Vec<i32> {
         let mut v = self.prompt_ids.clone();
@@ -44,12 +83,26 @@ impl GenSeq {
     }
 }
 
+/// Per-task RNG stream: a pure function of (rollout seed, task index).
+/// A given task therefore samples the identical token sequence no matter
+/// which slot, chunk, or engine (static vs continuous) runs it.
+pub fn task_rng(seed: u64, task_idx: usize) -> Rng {
+    Rng::new(seed ^ (task_idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
 /// Sample from log-probs with temperature/top-p; returns the token and the
 /// log-prob of the token under the *modified* (actually sampled)
 /// distribution. With temperature=1, top_p=1 this is exactly `logp[tok]`.
+///
+/// Robustness: non-finite logits (NaN from a diverged model, ±inf) carry
+/// zero mass instead of poisoning the sort/normalization; if *every* logit
+/// is non-finite the sampler falls back to a uniform draw. The top-p
+/// nucleus always keeps at least one token — when the top-1 probability
+/// alone exceeds `top_p`, the cut is exactly {argmax} and its renormalized
+/// mass is 1 (recorded log-prob 0).
 pub fn sample_token(rng: &mut Rng, logp: &[f32], s: &SamplingConfig) -> (usize, f32) {
     if s.temperature < 1e-3 {
-        // greedy decoding: a point mass
+        // greedy decoding: a point mass (NaN never wins a `>` comparison)
         let (mut best, mut bv) = (0usize, f32::NEG_INFINITY);
         for (i, &l) in logp.iter().enumerate() {
             if l > bv {
@@ -59,43 +112,23 @@ pub fn sample_token(rng: &mut Rng, logp: &[f32], s: &SamplingConfig) -> (usize, 
         }
         return (best, 0.0);
     }
-    if (s.temperature - 1.0).abs() < 1e-6 && s.top_p >= 1.0 {
+    if (s.temperature - 1.0).abs() < 1e-6
+        && s.top_p >= 1.0
+        && logp.iter().all(|l| l.is_finite())
+    {
+        // unmodified distribution: record the artifact's own log-prob
+        // bit-exactly (the finite guard keeps NaN inputs on the hardened
+        // path below instead of this shortcut)
         let tok = rng.sample_logits(logp, 1.0, 1.0);
         return (tok, logp[tok]);
     }
-    // general case: materialize the modified distribution
-    let inv_t = 1.0 / s.temperature;
-    let mx = logp.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut probs: Vec<f32> = logp.iter().map(|&l| ((l - mx) * inv_t).exp()).collect();
-    let z: f32 = probs.iter().sum();
-    for p in probs.iter_mut() {
-        *p /= z;
-    }
-    if s.top_p < 1.0 {
-        let mut idx: Vec<usize> = (0..probs.len()).collect();
-        idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
-        let mut acc = 0.0;
-        let mut cut = probs.len();
-        for (rank, &i) in idx.iter().enumerate() {
-            acc += probs[i];
-            if acc >= s.top_p {
-                cut = rank + 1;
-                break;
-            }
-        }
-        let keep: std::collections::HashSet<usize> = idx[..cut].iter().cloned().collect();
-        let mut mass = 0.0;
-        for (i, p) in probs.iter_mut().enumerate() {
-            if keep.contains(&i) {
-                mass += *p;
-            } else {
-                *p = 0.0;
-            }
-        }
-        for p in probs.iter_mut() {
-            *p /= mass;
-        }
-    }
+    // general case: the shared temperature/top-p machinery (single
+    // implementation for both samplers — util::rng::modified_probs)
+    let Some(probs) = crate::util::rng::modified_probs(logp, s.temperature, s.top_p) else {
+        // fully degenerate input: uniform fallback
+        let tok = rng.below(logp.len());
+        return (tok, -(logp.len() as f32).ln());
+    };
     let r = rng.next_f32();
     let mut acc = 0.0;
     for (i, &p) in probs.iter().enumerate() {
@@ -108,59 +141,146 @@ pub fn sample_token(rng: &mut Rng, logp: &[f32], s: &SamplingConfig) -> (usize, 
     (last, probs[last].ln())
 }
 
-/// The rollout engine for one artifact set + mode.
-pub struct RolloutEngine<'a> {
-    pub engine: &'a ModelEngine,
+/// Throughput/occupancy statistics for one rollout (either engine).
+///
+/// `occupied_slot_steps` counts, per decode step, the slots doing live
+/// generation; `idle_slot_steps` counts the complement — PAD work on
+/// finished or never-admitted slots (the long-tail bubble the continuous
+/// engine removes).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RolloutStats {
+    /// Scheduled chunks (continuous: one pass over the whole queue).
+    pub chunks: usize,
+    /// Decode artifact invocations.
+    pub decode_steps: usize,
+    pub occupied_slot_steps: usize,
+    pub idle_slot_steps: usize,
+    /// Mid-flight slot refills (continuous only).
+    pub refills: usize,
+    /// Batched prefill calls.
+    pub prefills: usize,
+    /// Per-slot (recycling) prefill calls.
+    pub slot_prefills: usize,
+    /// Max KV tokens reserved simultaneously (continuous only; the
+    /// invariant tests check this never exceeds the wall).
+    pub max_reserved_kv: usize,
+}
+
+impl RolloutStats {
+    /// Mean decode-step slot occupancy in [0, 1].
+    pub fn occupancy(&self) -> f64 {
+        let total = self.occupied_slot_steps + self.idle_slot_steps;
+        if total == 0 {
+            0.0
+        } else {
+            self.occupied_slot_steps as f64 / total as f64
+        }
+    }
+
+    /// Fraction of decode-slot work wasted on idle (PAD) slots.
+    pub fn idle_frac(&self) -> f64 {
+        let total = self.occupied_slot_steps + self.idle_slot_steps;
+        if total == 0 {
+            0.0
+        } else {
+            self.idle_slot_steps as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &RolloutStats) {
+        self.chunks += o.chunks;
+        self.decode_steps += o.decode_steps;
+        self.occupied_slot_steps += o.occupied_slot_steps;
+        self.idle_slot_steps += o.idle_slot_steps;
+        self.refills += o.refills;
+        self.prefills += o.prefills;
+        self.slot_prefills += o.slot_prefills;
+        self.max_reserved_kv = self.max_reserved_kv.max(o.max_reserved_kv);
+    }
+}
+
+/// The backend-independent rollout policy: mode + sampling. Holds the
+/// whole decode-loop logic for both engines; `RolloutEngine` binds it to
+/// the AOT artifacts, the test harness binds it to the mock backend.
+#[derive(Debug, Clone, Copy)]
+pub struct RolloutPolicy {
     pub mode: RolloutMode,
     pub sampling: SamplingConfig,
 }
 
-impl<'a> RolloutEngine<'a> {
-    pub fn new(engine: &'a ModelEngine, mode: RolloutMode, sampling: SamplingConfig) -> Self {
-        RolloutEngine { engine, mode, sampling }
+/// A sequence live in a decode slot (continuous engine bookkeeping).
+struct LiveSeq {
+    /// Position in the pending task list (== results index).
+    pos: usize,
+    rng: Rng,
+    gen: GenSeq,
+}
+
+impl RolloutPolicy {
+    pub fn new(mode: RolloutMode, sampling: SamplingConfig) -> Self {
+        RolloutPolicy { mode, sampling }
     }
 
-    fn variant(&self) -> Variant {
-        if self.mode.is_sparse() {
-            Variant::Sparse
-        } else {
-            Variant::Dense
+    /// Sample one token into `gen` — recording the sampler log-prob and KV
+    /// accounting — and report `(token, done)` where `done` means the
+    /// sequence just terminated (EOS or a length cap). THE single
+    /// implementation of per-token semantics: the static loop, the
+    /// continuous loop, and the continuous refill path all call this, so
+    /// EOS/cap/accounting rules cannot drift between engines (which would
+    /// silently break the token-equivalence contract).
+    ///
+    /// `len` is the occupied cache length and `abs` the absolute position
+    /// *before* this token's cache write.
+    fn sample_step(
+        &self,
+        rng: &mut Rng,
+        dist: &[f32],
+        gen: &mut GenSeq,
+        len: i32,
+        abs: i32,
+        capacity: usize,
+        max_seq: usize,
+    ) -> (i32, bool) {
+        let (tok, lp) = sample_token(rng, dist, &self.sampling);
+        gen.response_ids.push(tok as i32);
+        gen.sampler_logp.push(lp);
+        gen.accounting
+            .step(((len + 1) as usize).min(capacity), abs as usize + 1);
+        let mut done = false;
+        if tok as i32 == EOS {
+            gen.finished = true;
+            done = true;
         }
+        if gen.response_ids.len() >= self.sampling.max_response
+            || (abs as usize + 1) >= max_seq
+        {
+            done = true;
+        }
+        (tok as i32, done)
     }
 
-    /// Roll out one chunk of tasks (≤ decode_batch sequences; the
-    /// scheduler guarantees admission). `tasks` pairs a caller-side index
-    /// with the task occupying that slot.
-    pub fn rollout_chunk(
+    /// Static chunked rollout of ≤ R sequences (the scheduler guarantees
+    /// admission). `tasks` pairs a caller-side index with the task
+    /// occupying that slot. The chunk decodes until its slowest sequence
+    /// finishes; early-EOS slots stay frozen (PAD-fed) until then.
+    pub fn rollout_static<B: RolloutBackend>(
         &self,
-        params: &[f32],
+        b: &mut B,
         tasks: &[(usize, &Task)],
-        rng: &mut Rng,
-    ) -> Result<Vec<GenSeq>> {
-        // weights are uploaded once per chunk, not once per decode step
-        let params = ParamsLit::new(params);
-        self.rollout_chunk_lit(&params, tasks, rng)
-    }
-
-    /// Same as `rollout_chunk` but with pre-uploaded weights (callers that
-    /// run many chunks per step share one upload).
-    pub fn rollout_chunk_lit(
-        &self,
-        params: &ParamsLit,
-        tasks: &[(usize, &Task)],
-        rng: &mut Rng,
-    ) -> Result<Vec<GenSeq>> {
-        let m = &self.engine.manifest;
-        let r = m.shapes.decode_batch;
-        let p_len = m.config.prompt_len;
-        let max_seq = m.config.max_seq;
-        let variant = self.variant();
-        let capacity = match variant {
-            Variant::Dense => m.shapes.dense_capacity,
-            Variant::Sparse => m.shapes.sparse_capacity,
-        };
-        let budget = m.shapes.budget;
+        seed: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let r = b.slots();
+        let p_len = b.prompt_len();
+        let max_seq = b.max_seq();
+        let vocab = b.vocab();
+        let capacity = b.capacity();
+        let budget = b.budget();
+        let sparse = self.mode.is_sparse();
         assert!(tasks.len() <= r, "chunk of {} > {} slots", tasks.len(), r);
+        let mut stats = RolloutStats { chunks: 1, ..RolloutStats::default() };
+        if tasks.is_empty() {
+            return Ok((vec![], stats));
+        }
 
         // ---- prefill ----------------------------------------------------
         let mut ids = vec![PAD; r * p_len];
@@ -174,26 +294,20 @@ impl<'a> RolloutEngine<'a> {
         for slot in tasks.len()..r {
             ids[slot * p_len] = BOS;
         }
-        let (mut cache, mut logp) = self.engine.prefill(variant, params, &ids, &plens)?;
+        let mut logp = b.prefill(&ids, &plens)?;
+        stats.prefills += 1;
 
         // ---- decode loop -------------------------------------------------
-        let vocab = m.config.vocab;
         let n = tasks.len();
         let mut active: Vec<bool> = (0..r).map(|i| i < n).collect();
         let mut lens: Vec<i32> = plens.clone(); // occupied cache slots
         let mut abs_pos: Vec<i32> = plens.clone(); // absolute next position
         let mut out: Vec<GenSeq> = tasks
             .iter()
-            .map(|(idx, task)| GenSeq {
-                task_idx: *idx,
-                prompt_ids: task.prompt_ids.clone(),
-                response_ids: vec![],
-                sampler_logp: vec![],
-                finished: false,
-                accounting: KvAccounting::new(),
-            })
+            .map(|(idx, task)| GenSeq::new(*idx, task.prompt_ids.clone()))
             .collect();
-        let mut slot_rngs: Vec<Rng> = (0..r).map(|i| rng.fork(i as u64 + 1)).collect();
+        // per-TASK streams: slot/chunk placement never changes the tokens
+        let mut rngs: Vec<Rng> = tasks.iter().map(|(idx, _)| task_rng(seed, *idx)).collect();
 
         let mut tokens = vec![PAD; r];
         let mut do_mask = vec![0.0f32; r];
@@ -206,24 +320,21 @@ impl<'a> RolloutEngine<'a> {
                     continue;
                 }
                 let dist = &logp[slot * vocab..(slot + 1) * vocab];
-                let (tok, lp) = sample_token(&mut slot_rngs[slot], dist, &self.sampling);
-                tokens[slot] = tok as i32;
-                out[slot].response_ids.push(tok as i32);
-                out[slot].sampler_logp.push(lp);
-                let dense_equiv = abs_pos[slot] as usize + 1;
-                out[slot].accounting.step(
-                    ((lens[slot] + 1) as usize).min(capacity),
-                    dense_equiv,
+                let (tok, done) = self.sample_step(
+                    &mut rngs[slot],
+                    dist,
+                    &mut out[slot],
+                    lens[slot],
+                    abs_pos[slot],
+                    capacity,
+                    max_seq,
                 );
-                if tok as i32 == EOS {
-                    active[slot] = false;
-                    out[slot].finished = true;
-                    tokens[slot] = tok as i32; // still fed once below
-                }
-                let gen_len = out[slot].response_ids.len();
-                let cap_hit = gen_len >= self.sampling.max_response
-                    || (abs_pos[slot] as usize + 1) >= max_seq;
-                if cap_hit {
+                tokens[slot] = tok;
+                if done {
+                    // a terminating EOS is still fed to the decode below
+                    // (one final cache write); after that the slot stays
+                    // frozen — lens/pos stop advancing and its logits are
+                    // ignored until the chunk drains.
                     active[slot] = false;
                 }
                 any_active = any_active || active[slot];
@@ -233,7 +344,7 @@ impl<'a> RolloutEngine<'a> {
             }
 
             // compression trigger: a slot whose next write would overflow
-            if variant == Variant::Sparse {
+            if sparse {
                 let mut any = false;
                 for slot in 0..r {
                     let need = active[slot] && lens[slot] as usize >= capacity;
@@ -243,8 +354,7 @@ impl<'a> RolloutEngine<'a> {
                     }
                 }
                 if any {
-                    let method = self.mode.method().expect("sparse mode has a method");
-                    self.engine.compress(method, &mut cache, &do_mask)?;
+                    b.compress(&do_mask)?;
                     for slot in 0..r {
                         if do_mask[slot] > 0.0 {
                             out[slot].accounting.compression(capacity - budget);
@@ -255,28 +365,388 @@ impl<'a> RolloutEngine<'a> {
             }
 
             // one decode step over the whole batch
+            let occupied = active.iter().filter(|&&a| a).count();
             let step_tokens: Vec<i32> = (0..r)
                 .map(|s| if s < n { tokens[s] } else { PAD })
                 .collect();
-            logp = self
-                .engine
-                .decode(params, &mut cache, &lens, &abs_pos, &step_tokens)?;
+            logp = b.decode(&lens, &abs_pos, &step_tokens)?;
+            stats.decode_steps += 1;
+            stats.occupied_slot_steps += occupied;
+            stats.idle_slot_steps += r - occupied;
             for slot in 0..r {
                 // frozen for finished/idle slots: they take no cache writes
-                // we care about, and freezing avoids spurious compressions
+                // we care about, and freezing avoids spurious compressions.
+                // The one EOS feed advances a final time so its write lands.
                 if slot < n && (active[slot] || step_tokens[slot] == EOS) {
                     lens[slot] += 1;
                     abs_pos[slot] += 1;
                 }
             }
-            // EOS has been fed exactly once; fully retire those slots
-            for slot in 0..n {
-                if out[slot].finished {
-                    // no-op: active already false
+        }
+        Ok((out, stats))
+    }
+
+    /// Drive the static chunked engine over a whole pending queue: admit
+    /// a chunk against the wall, roll it out to completion, release, and
+    /// repeat. THE single driver for queue-scale static rollouts — the
+    /// trainer, the equivalence harness, and the benches all call this,
+    /// so they exercise identical admission/ordering semantics.
+    ///
+    /// Results come back in task order (position in `tasks`).
+    pub fn rollout_static_queue<B: RolloutBackend>(
+        &self,
+        b: &mut B,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let n = tasks.len();
+        let mut pending: Vec<usize> = (0..n).collect();
+        let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
+        let mut stats = RolloutStats::default();
+        let mut base = seq_id_base;
+        while !pending.is_empty() {
+            let Some(chunk) = sched.next_chunk(&mut pending, kv, base) else {
+                bail!(
+                    "static rollout stalled: {} pending but nothing admissible \
+                     (static batching drains synchronously)",
+                    pending.len()
+                );
+            };
+            let chunk_tasks: Vec<(usize, &Task)> =
+                chunk.items.iter().map(|&i| tasks[i]).collect();
+            let (seqs, cstats) = self.rollout_static(b, &chunk_tasks, seed)?;
+            stats.merge(&cstats);
+            // rollout_static returns sequences in slot (= chunk) order
+            for (&pos, seq) in chunk.items.iter().zip(seqs) {
+                results[pos] = Some(seq);
+            }
+            sched.finish_chunk(&chunk, kv, base);
+            base += chunk.items.len() as u64;
+        }
+        let out = results
+            .into_iter()
+            .map(|s| s.expect("every queued task completed"))
+            .collect();
+        Ok((out, stats))
+    }
+
+    /// Continuous-batching rollout with slot recycling over an arbitrarily
+    /// long task queue. Admission is per sequence: each admitted sequence
+    /// reserves its worst-case KV with the scheduler/manager, and the
+    /// reservation is released the moment the sequence finishes — not when
+    /// the whole batch drains. Freed slots are immediately re-prefilled
+    /// (in place) with the next pending prompt, so the decode batch stays
+    /// as full as the memory wall allows.
+    ///
+    /// Sequences are returned in task order. Total decode steps equal the
+    /// list-scheduling makespan of per-sequence decode costs, which
+    /// `Scheduler::predicted_decode_steps` computes in closed form.
+    pub fn rollout_continuous<B: RolloutBackend>(
+        &self,
+        b: &mut B,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let r = b.slots();
+        let p_len = b.prompt_len();
+        let max_seq = b.max_seq();
+        let vocab = b.vocab();
+        let capacity = b.capacity();
+        let budget = b.budget();
+        let sparse = self.mode.is_sparse();
+        let n = tasks.len();
+        let mut stats = RolloutStats { chunks: 1, ..RolloutStats::default() };
+        if n == 0 {
+            return Ok((vec![], stats));
+        }
+
+        let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
+        let mut queue: VecDeque<usize> = (0..n).collect();
+        let mut slots: Vec<Option<LiveSeq>> = (0..r).map(|_| None).collect();
+        let mut lens = vec![1i32; r];
+        let mut abs_pos = vec![1i32; r];
+
+        // ---- initial wave: one batched prefill over the admissible head
+        let mut ids = vec![PAD; r * p_len];
+        let mut plens = vec![1i32; r];
+        let mut w = 0usize;
+        while w < r && !queue.is_empty() {
+            let pos = queue[0];
+            if !sched.try_admit(kv, seq_id_base + pos as u64) {
+                break;
+            }
+            queue.pop_front();
+            let (idx, task) = tasks[pos];
+            let pi = &task.prompt_ids;
+            assert!(pi.len() <= p_len, "prompt {} > {}", pi.len(), p_len);
+            ids[w * p_len..w * p_len + pi.len()].copy_from_slice(pi);
+            plens[w] = pi.len() as i32;
+            lens[w] = pi.len() as i32;
+            abs_pos[w] = pi.len() as i32;
+            slots[w] = Some(LiveSeq {
+                pos,
+                rng: task_rng(seed, idx),
+                gen: GenSeq::new(idx, pi.clone()),
+            });
+            w += 1;
+        }
+        if w == 0 {
+            bail!(
+                "continuous rollout deadlock: cannot admit any sequence \
+                 (reserve {} > free KV {} of {})",
+                sched.reserve_per_seq,
+                kv.available(),
+                kv.capacity()
+            );
+        }
+        for slot in w..r {
+            ids[slot * p_len] = BOS;
+        }
+        let mut logp = b.prefill(&ids, &plens)?;
+        stats.prefills += 1;
+        stats.max_reserved_kv = stats.max_reserved_kv.max(kv.reserved());
+
+        let mut tokens = vec![PAD; r];
+        let mut do_mask = vec![0.0f32; r];
+        loop {
+            // ---- sample one token per occupied slot; retire finishers ---
+            for slot in 0..r {
+                let Some(live) = slots[slot].as_mut() else {
+                    tokens[slot] = PAD;
+                    continue;
+                };
+                let dist = &logp[slot * vocab..(slot + 1) * vocab];
+                let (tok, done) = self.sample_step(
+                    &mut live.rng,
+                    dist,
+                    &mut live.gen,
+                    lens[slot],
+                    abs_pos[slot],
+                    capacity,
+                    max_seq,
+                );
+                tokens[slot] = tok;
+                if done {
+                    // per-sequence release: THE difference from the static
+                    // engine — the KV reservation frees now, not when the
+                    // whole batch drains
+                    let live = slots[slot].take().expect("occupied");
+                    sched.release_seq(kv, seq_id_base + live.pos as u64)?;
+                    results[live.pos] = Some(live.gen);
+                    tokens[slot] = PAD;
+                }
+            }
+
+            // ---- slot recycling: refill freed slots from the queue ------
+            for slot in 0..r {
+                if slots[slot].is_some() {
+                    continue;
+                }
+                while let Some(&pos) = queue.front() {
+                    if !sched.try_admit(kv, seq_id_base + pos as u64) {
+                        break; // memory wall: retry after future releases
+                    }
+                    queue.pop_front();
+                    let (idx, task) = tasks[pos];
+                    let pi = &task.prompt_ids;
+                    assert!(pi.len() <= p_len, "prompt {} > {}", pi.len(), p_len);
+                    let row = b.prefill_slot(slot, pi)?;
+                    stats.slot_prefills += 1;
+                    stats.refills += 1;
+                    stats.max_reserved_kv = stats.max_reserved_kv.max(kv.reserved());
+                    let mut live = LiveSeq {
+                        pos,
+                        rng: task_rng(seed, idx),
+                        gen: GenSeq::new(idx, pi.clone()),
+                    };
+                    // first token comes from the slot-prefill logits — the
+                    // same logits (and the same per-token semantics, via
+                    // sample_step) the batched-prefill path would have used
+                    let plen = pi.len() as i32;
+                    let (tok, done) = self.sample_step(
+                        &mut live.rng,
+                        &row,
+                        &mut live.gen,
+                        plen,
+                        plen,
+                        capacity,
+                        max_seq,
+                    );
+                    // prefill_slot replaced this slot's cache, so the
+                    // control vectors must track it even when the sequence
+                    // dies immediately — a stale lens would make the next
+                    // decode write at an out-of-sync position
+                    tokens[slot] = tok;
+                    lens[slot] = plen;
+                    abs_pos[slot] = plen;
+                    if done {
+                        // degenerate single-token sequence: release and try
+                        // the next pending prompt for this same slot
+                        sched.release_seq(kv, seq_id_base + live.pos as u64)?;
+                        results[live.pos] = Some(live.gen);
+                        tokens[slot] = PAD;
+                        continue;
+                    }
+                    slots[slot] = Some(live);
+                    break;
+                }
+            }
+
+            // ---- drained? -----------------------------------------------
+            let occupied = slots.iter().filter(|s| s.is_some()).count();
+            if occupied == 0 {
+                if queue.is_empty() {
+                    break;
+                }
+                bail!(
+                    "continuous rollout stalled: {} pending but nothing \
+                     admissible (reserve {} > free KV {})",
+                    queue.len(),
+                    sched.reserve_per_seq,
+                    kv.available()
+                );
+            }
+
+            // ---- compression trigger (same per-sequence rule as static) -
+            if sparse {
+                let mut any = false;
+                for slot in 0..r {
+                    let need = slots[slot].is_some() && lens[slot] as usize >= capacity;
+                    do_mask[slot] = if need { 1.0 } else { 0.0 };
+                    if need {
+                        any = true;
+                    }
+                }
+                if any {
+                    b.compress(&do_mask)?;
+                    for slot in 0..r {
+                        if do_mask[slot] > 0.0 {
+                            let live = slots[slot].as_mut().expect("masked slot occupied");
+                            live.gen.accounting.compression(capacity - budget);
+                            lens[slot] = budget as i32;
+                        }
+                    }
+                }
+            }
+
+            // ---- one decode step over the mixed batch -------------------
+            logp = b.decode(&lens, &abs_pos, &tokens)?;
+            stats.decode_steps += 1;
+            stats.occupied_slot_steps += occupied;
+            stats.idle_slot_steps += r - occupied;
+            for slot in 0..r {
+                if slots[slot].is_some() {
+                    lens[slot] += 1;
+                    abs_pos[slot] += 1;
                 }
             }
         }
-        Ok(out)
+
+        let out = results
+            .into_iter()
+            .map(|s| s.expect("every queued task completed"))
+            .collect();
+        Ok((out, stats))
+    }
+}
+
+/// The artifact-bound rollout engine for one model + mode.
+pub struct RolloutEngine<'a> {
+    pub engine: &'a ModelEngine,
+    pub mode: RolloutMode,
+    pub sampling: SamplingConfig,
+}
+
+impl<'a> RolloutEngine<'a> {
+    pub fn new(engine: &'a ModelEngine, mode: RolloutMode, sampling: SamplingConfig) -> Self {
+        RolloutEngine { engine, mode, sampling }
+    }
+
+    pub fn policy(&self) -> RolloutPolicy {
+        RolloutPolicy::new(self.mode, self.sampling)
+    }
+
+    pub fn variant(&self) -> Variant {
+        if self.mode.is_sparse() {
+            Variant::Sparse
+        } else {
+            Variant::Dense
+        }
+    }
+
+    /// Roll out one static chunk of tasks (≤ decode_batch sequences; the
+    /// scheduler guarantees admission). `seed` is the rollout seed feeding
+    /// the per-task RNG streams.
+    pub fn rollout_chunk(
+        &self,
+        params: &[f32],
+        tasks: &[(usize, &Task)],
+        seed: u64,
+    ) -> Result<Vec<GenSeq>> {
+        // weights are uploaded once per chunk, not once per decode step
+        let params = ParamsLit::new(params);
+        self.rollout_chunk_lit(&params, tasks, seed)
+    }
+
+    /// Same as `rollout_chunk` but with pre-uploaded weights (callers that
+    /// run many chunks per step share one upload).
+    pub fn rollout_chunk_lit(
+        &self,
+        params: &ParamsLit,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+    ) -> Result<Vec<GenSeq>> {
+        Ok(self.rollout_chunk_stats_lit(params, tasks, seed)?.0)
+    }
+
+    /// Static chunk rollout returning occupancy statistics as well.
+    pub fn rollout_chunk_stats_lit(
+        &self,
+        params: &ParamsLit,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let mut backend = EngineBackend::new(self.engine, params, self.mode);
+        self.policy().rollout_static(&mut backend, tasks, seed)
+    }
+
+    /// Static chunked rollout over the whole pending queue (any length).
+    /// See `RolloutPolicy::rollout_static_queue`.
+    pub fn rollout_static_queue_lit(
+        &self,
+        params: &ParamsLit,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let mut backend = EngineBackend::new(self.engine, params, self.mode);
+        self.policy()
+            .rollout_static_queue(&mut backend, tasks, seed, sched, kv, seq_id_base)
+    }
+
+    /// Continuous-batching rollout over the whole pending queue (any
+    /// length), recycling slots as sequences finish. See
+    /// `RolloutPolicy::rollout_continuous`.
+    pub fn rollout_continuous_lit(
+        &self,
+        params: &ParamsLit,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let mut backend = EngineBackend::new(self.engine, params, self.mode);
+        self.policy()
+            .rollout_continuous(&mut backend, tasks, seed, sched, kv, seq_id_base)
     }
 }
 
@@ -325,5 +795,56 @@ mod tests {
         assert_eq!(total as usize, n);
         // last token should be rarer than first under sharpening
         assert!(mass[0] > mass[3]);
+    }
+
+    #[test]
+    fn nan_logits_do_not_panic_and_carry_no_mass() {
+        let mut rng = Rng::new(4);
+        let logp = [f32::NAN, -1.0, f32::NAN, -2.0];
+        for _ in 0..200 {
+            let (tok, lp) = sample_token(&mut rng, &logp, &cfg(0.8, 0.9));
+            assert!(tok == 1 || tok == 3, "sampled NaN token {tok}");
+            assert!(lp.is_finite() && lp <= 0.0);
+        }
+        // the T=1/top-p=1 default config must be just as hardened (it
+        // normally takes the exact-logp fast path)
+        for _ in 0..200 {
+            let (tok, lp) = sample_token(&mut rng, &logp, &cfg(1.0, 1.0));
+            assert!(tok == 1 || tok == 3, "fast path sampled NaN token {tok}");
+            assert!(lp.is_finite() && lp <= 0.0);
+        }
+        // fully degenerate input: uniform fallback, still no panic
+        let bad = [f32::NAN; 5];
+        for _ in 0..50 {
+            let (tok, lp) = sample_token(&mut rng, &bad, &cfg(0.8, 0.9));
+            assert!(tok < 5);
+            assert!((lp - (-(5f32).ln())).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn top1_exceeding_top_p_keeps_exactly_argmax() {
+        let mut rng = Rng::new(5);
+        // token 1 holds ~99% of the tempered mass, far beyond top_p = 0.5:
+        // the nucleus must be {1} with renormalized mass 1 (log-prob 0)
+        let logp = [-8.0f32, -0.01, -9.0, -10.0];
+        for _ in 0..100 {
+            let (tok, lp) = sample_token(&mut rng, &logp, &cfg(0.9, 0.5));
+            assert_eq!(tok, 1);
+            assert_eq!(lp, 0.0, "renormalized point mass must be exactly 1");
+        }
+    }
+
+    #[test]
+    fn task_rng_is_slot_and_order_independent() {
+        // same (seed, task) => same stream; different task => different
+        let mut a = task_rng(42, 7);
+        let mut b = task_rng(42, 7);
+        let mut c = task_rng(42, 8);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..16).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
     }
 }

@@ -1,16 +1,29 @@
 //! Memory-aware rollout scheduler.
 //!
-//! Packs pending prompts into decode-batch chunks subject to the KV memory
+//! Packs pending prompts into the decode batch subject to the KV memory
 //! wall: every admitted sequence first reserves its worst-case residency
 //! with the `KvMemoryManager` (dense: `max_seq`; sparse: `budget+buffer`).
-//! The decode artifact is compiled for a fixed slot width R, so a chunk is
-//! `min(R, admissible, pending)` sequences wide — the admissible term is
+//! The decode artifact is compiled for a fixed slot width R, so admission
+//! is bounded by `min(R, admissible, pending)` — the admissible term is
 //! exactly where dense rollouts lose throughput (paper §1: "rollout batch
 //! sizes must be constrained" to dodge long-tail OOM).
+//!
+//! Two admission granularities serve the two rollout engines:
+//!
+//! * **Chunk-level** (`next_chunk` / `finish_chunk`, static engine): a
+//!   whole chunk reserves together and releases together when the slowest
+//!   sequence in it finishes. Simple, but every early finisher's KV stays
+//!   reserved (and its decode slot idles) until the chunk drains.
+//! * **Sequence-level** (`try_admit` / `release_seq`, continuous engine):
+//!   each sequence reserves on admission and releases the moment it
+//!   finishes, letting the engine refill the freed slot immediately. The
+//!   closed-form `predicted_decode_steps` models the resulting schedule
+//!   (greedy earliest-free-slot, queue order) so benches and property
+//!   tests can check the engine step-for-step.
 
 use crate::runtime::Manifest;
 
-use super::kv_manager::KvMemoryManager;
+use super::kv_manager::{KvMemoryManager, SeqId};
 
 /// One scheduled chunk: which pending items occupy which decode slots.
 #[derive(Debug, Clone)]
@@ -31,6 +44,13 @@ pub struct SchedulerStats {
     pub slot_utilization_sum: f64,
     /// Σ over chunks of reserved KV / capacity at admission time.
     pub kv_utilization_sum: f64,
+    /// Sequence-level admissions (continuous engine).
+    pub seq_admissions: usize,
+    /// Sequence-level releases (continuous engine).
+    pub seq_releases: usize,
+    /// Admission attempts refused by the memory wall (continuous engine:
+    /// a freed slot had to idle because no KV could be reserved).
+    pub admit_stalls: usize,
 }
 
 impl SchedulerStats {
@@ -49,9 +69,14 @@ impl SchedulerStats {
             self.kv_utilization_sum / self.chunks as f64
         }
     }
+
+    /// Sequences currently admitted and not yet released.
+    pub fn live_seqs(&self) -> usize {
+        self.seq_admissions - self.seq_releases
+    }
 }
 
-/// Plans chunks over a queue of `n_pending` sequences.
+/// Plans admissions over a queue of pending sequences.
 pub struct Scheduler {
     /// Decode slot width (from the manifest).
     pub slots: usize,
@@ -114,11 +139,85 @@ impl Scheduler {
         }
     }
 
+    /// Sequence-level admission (continuous engine): reserve this
+    /// sequence's worst-case KV, or refuse without side effects beyond the
+    /// stall counter when the wall is full. Refusal is not an error — the
+    /// engine keeps decoding and retries after the next release.
+    pub fn try_admit(&mut self, kv: &mut KvMemoryManager, seq: SeqId) -> bool {
+        if kv.admissible(self.reserve_per_seq) == 0 {
+            self.stats.admit_stalls += 1;
+            return false;
+        }
+        kv.reserve(seq, self.reserve_per_seq)
+            .expect("admissible() guaranteed room");
+        self.stats.seq_admissions += 1;
+        true
+    }
+
+    /// Sequence-level release (continuous engine): frees the reservation
+    /// the moment the sequence finishes. Double-release (or releasing a
+    /// never-admitted id) is an error — the invariant tests rely on it.
+    pub fn release_seq(
+        &mut self,
+        kv: &mut KvMemoryManager,
+        seq: SeqId,
+    ) -> anyhow::Result<usize> {
+        let tokens = kv.release(seq)?;
+        self.stats.seq_releases += 1;
+        Ok(tokens)
+    }
+
     /// Number of chunks needed for `n` sequences on an idle manager —
     /// the closed-form the throughput benches check against.
     pub fn predicted_chunks(&self, n: usize, kv_capacity: usize) -> usize {
         let width = self.slots.min(kv_capacity / self.reserve_per_seq.max(1)).max(1);
         n.div_ceil(width)
+    }
+
+    /// Decode steps the continuous engine needs for sequences whose
+    /// response lengths are `response_lens` (queue order), on an idle
+    /// manager of `kv_capacity`: the list-scheduling makespan of the
+    /// per-sequence decode costs over the effective width.
+    ///
+    /// A sequence generating L tokens occupies its slot for L-1 decode
+    /// steps (the first token comes from prefill logits; the last token is
+    /// sampled and the slot is recycled before the next decode). Greedy
+    /// earliest-free-slot assignment in queue order is exactly what slot
+    /// recycling does, so this is step-exact, and the property tests hold
+    /// the engine to it.
+    pub fn predicted_decode_steps(&self, response_lens: &[usize], kv_capacity: usize) -> usize {
+        if response_lens.is_empty() {
+            return 0;
+        }
+        let width = self
+            .slots
+            .min(kv_capacity / self.reserve_per_seq.max(1))
+            .max(1)
+            .min(response_lens.len());
+        let mut busy = vec![0usize; width];
+        for &len in response_lens {
+            let i = (0..width).min_by_key(|&i| busy[i]).expect("width >= 1");
+            busy[i] += len.saturating_sub(1);
+        }
+        busy.into_iter().max().unwrap_or(0)
+    }
+
+    /// Decode steps the static engine needs for the same queue: each chunk
+    /// runs to its slowest member, so the total is Σ over chunks of
+    /// (max chunk length - 1).
+    pub fn predicted_decode_steps_static(
+        &self,
+        response_lens: &[usize],
+        kv_capacity: usize,
+    ) -> usize {
+        let width = self
+            .slots
+            .min(kv_capacity / self.reserve_per_seq.max(1))
+            .max(1);
+        response_lens
+            .chunks(width)
+            .map(|c| c.iter().max().copied().unwrap_or(0).saturating_sub(1))
+            .sum()
     }
 }
 
@@ -206,5 +305,119 @@ mod tests {
         assert_eq!(c.items.len(), 4);
         assert!((s.stats.mean_slot_utilization() - 0.5).abs() < 1e-9);
         assert!((s.stats.mean_kv_utilization() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn seq_admission_respects_wall_and_counts_stalls() {
+        let mut kv = KvMemoryManager::new(100);
+        let mut s = mk(8, 40);
+        assert!(s.try_admit(&mut kv, 1));
+        assert!(s.try_admit(&mut kv, 2));
+        // 80 of 100 reserved: a third does not fit
+        assert!(!s.try_admit(&mut kv, 3));
+        assert_eq!(s.stats.admit_stalls, 1);
+        assert_eq!(s.stats.live_seqs(), 2);
+        assert_eq!(s.release_seq(&mut kv, 1).unwrap(), 40);
+        assert!(s.try_admit(&mut kv, 3));
+        assert_eq!(s.stats.seq_admissions, 3);
+    }
+
+    #[test]
+    fn double_release_is_an_error() {
+        let mut kv = KvMemoryManager::new(100);
+        let mut s = mk(4, 10);
+        assert!(s.try_admit(&mut kv, 7));
+        assert!(s.release_seq(&mut kv, 7).is_ok());
+        assert!(s.release_seq(&mut kv, 7).is_err(), "double release must fail");
+        assert!(s.release_seq(&mut kv, 99).is_err(), "unknown id must fail");
+        assert_eq!(s.stats.seq_releases, 1);
+    }
+
+    #[test]
+    fn prop_seq_admission_never_deadlocks_or_leaks() {
+        // Random interleavings of per-sequence admit/release: admission
+        // must succeed iff the wall has room, reservations must conserve,
+        // and a full drain must always be reachable (no deadlock).
+        propcheck::quick("seq-admit-release", |rng, size| {
+            let reserve = 1 + rng.below(50);
+            let cap = reserve * (1 + rng.below(8)) + rng.below(reserve);
+            let mut s = mk(1 + rng.below(16), reserve);
+            let mut kv = KvMemoryManager::new(cap);
+            let mut live: Vec<SeqId> = vec![];
+            let mut next_id = 0u64;
+            for _ in 0..(20 + size) {
+                if rng.chance(0.55) || live.is_empty() {
+                    next_id += 1;
+                    let fits = kv.available() >= reserve;
+                    let admitted = s.try_admit(&mut kv, next_id);
+                    if admitted != fits {
+                        return Err(format!(
+                            "admit said {admitted}, wall said fits={fits} \
+                             (reserved {} of {cap})",
+                            kv.reserved()
+                        ));
+                    }
+                    if admitted {
+                        live.push(next_id);
+                    }
+                } else {
+                    let k = rng.below(live.len());
+                    let id = live.swap_remove(k);
+                    s.release_seq(&mut kv, id).map_err(|e| e.to_string())?;
+                    // releasing twice must fail, not corrupt the pool
+                    if s.release_seq(&mut kv, id).is_ok() {
+                        return Err("double release accepted".into());
+                    }
+                }
+                if kv.reserved() != live.len() * reserve {
+                    return Err("reservation leak".into());
+                }
+                kv.check_invariants().map_err(|e| e.to_string())?;
+            }
+            // no deadlock: a full drain + one admission always works
+            for id in live.drain(..) {
+                s.release_seq(&mut kv, id).map_err(|e| e.to_string())?;
+            }
+            if !s.try_admit(&mut kv, u64::MAX) {
+                return Err("empty wall refused admission".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn predicted_decode_steps_closed_forms() {
+        // width 2, queue costs (len-1) = [4, 1, 1, 1]:
+        // slot recycling packs the three short ones behind each other
+        let s = mk(2, 10);
+        assert_eq!(s.predicted_decode_steps(&[5, 2, 2, 2], 1000), 4);
+        // static chunks [5,2],[2,2]: (5-1) + (2-1)
+        assert_eq!(s.predicted_decode_steps_static(&[5, 2, 2, 2], 1000), 5);
+        // KV-limited to width 1: both degenerate to the serial sum
+        assert_eq!(s.predicted_decode_steps(&[5, 2, 2, 2], 10), 7);
+        assert_eq!(s.predicted_decode_steps_static(&[5, 2, 2, 2], 10), 7);
+        // uniform lengths: continuous gains nothing
+        assert_eq!(
+            s.predicted_decode_steps(&[4, 4, 4, 4], 1000),
+            s.predicted_decode_steps_static(&[4, 4, 4, 4], 1000)
+        );
+        // single-token sequences cost zero decode steps
+        assert_eq!(s.predicted_decode_steps(&[1, 1, 1], 1000), 0);
+        assert_eq!(s.predicted_decode_steps(&[], 1000), 0);
+    }
+
+    #[test]
+    fn continuous_never_worse_than_static_prediction() {
+        propcheck::quick("continuous-leq-static", |rng, size| {
+            let s = mk(1 + rng.below(8), 1 + rng.below(64));
+            let cap = 1 + rng.below(512);
+            let lens: Vec<usize> = (0..1 + size).map(|_| 1 + rng.below(40)).collect();
+            let c = s.predicted_decode_steps(&lens, cap);
+            let st = s.predicted_decode_steps_static(&lens, cap);
+            if c > st {
+                return Err(format!("continuous {c} > static {st} for {lens:?}"));
+            }
+            Ok(())
+        });
     }
 }

@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::ExperimentConfig;
+use crate::config::{EngineKind, ExperimentConfig};
 use crate::data::task::{looks_repetitive, Task};
 use crate::runtime::{ModelEngine, ParamsLit, TrainState};
 use crate::util::rng::Rng;
@@ -29,7 +29,7 @@ use super::kv_manager::KvMemoryManager;
 use super::metrics::Metrics;
 use super::rejection::{self, RejectionStats};
 use super::reweight::{self, TrainSeq};
-use super::rollout::{GenSeq, RolloutEngine};
+use super::rollout::{GenSeq, RolloutEngine, RolloutStats};
 use super::scheduler::Scheduler;
 
 /// Everything produced by one RL step, for logging/analysis.
@@ -49,6 +49,16 @@ pub struct StepReport {
     pub train_secs: f64,
     pub rollout_chunks: usize,
     pub gen_tokens: usize,
+    /// Decode artifact invocations this step (the continuous engine's
+    /// whole point is minimizing this under skewed response lengths).
+    pub decode_steps: usize,
+    /// Mean decode-step slot occupancy in [0, 1].
+    pub slot_occupancy: f64,
+    /// Fraction of decode-slot work burned on idle (PAD) slots — the
+    /// long-tail bubble.
+    pub idle_token_frac: f64,
+    /// Mid-flight slot refills (continuous engine; 0 under static).
+    pub refills: usize,
 }
 
 /// The trainer: owns learner state, data order, metrics, and the wall.
@@ -88,38 +98,45 @@ impl<'a> Trainer<'a> {
         idx
     }
 
-    /// Run all rollouts for one step through the memory-wall scheduler.
-    /// Returns sequences in prompt-major group order.
-    pub fn rollout_batch(&mut self, task_indices: &[usize]) -> Result<(Vec<GenSeq>, usize)> {
+    /// Run all rollouts for one step through the memory-wall scheduler,
+    /// on the configured engine (static chunked vs continuous batching).
+    /// Returns sequences in prompt-major group order plus rollout stats.
+    ///
+    /// The rollout seed is drawn once per step and per-task RNG streams
+    /// key off (seed, flat sequence id), so both engines generate
+    /// token-identical sequences for the same step.
+    pub fn rollout_batch(
+        &mut self,
+        task_indices: &[usize],
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
         let g = self.cfg.train.group_size;
         let n = task_indices.len() * g;
         let rollout = RolloutEngine::new(self.engine, self.cfg.mode, self.cfg.sampling);
         let mut scheduler = Scheduler::new(&self.engine.manifest, self.cfg.mode.is_sparse());
-        // pending holds flat sequence ids: seq s belongs to prompt s / g
-        let mut pending: Vec<usize> = (0..n).collect();
-        let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
-        let mut chunk_base = 0u64;
-        let mut chunks = 0usize;
+        let seed = self.rng.next_u64();
         let params = ParamsLit::new(&self.state.params);
-        while !pending.is_empty() {
-            let chunk = scheduler
-                .next_chunk(&mut pending, &mut self.kv, chunk_base)
-                .expect("static batching drains synchronously, admission cannot stall");
-            let tasks: Vec<(usize, &Task)> = chunk
-                .items
-                .iter()
-                .map(|&s| (s, &self.tasks[task_indices[s / g]]))
-                .collect();
-            let seqs = rollout.rollout_chunk_lit(&params, &tasks, &mut self.rng)?;
-            for seq in seqs {
-                let s = seq.task_idx;
-                results[s] = Some(seq);
-            }
-            scheduler.finish_chunk(&chunk, &mut self.kv, chunk_base);
-            chunk_base += chunk.items.len() as u64;
-            chunks += 1;
+        // flat sequence ids: seq s belongs to prompt s / g
+        let tasks: Vec<(usize, &Task)> = (0..n)
+            .map(|s| (s, &self.tasks[task_indices[s / g]]))
+            .collect();
+        match self.cfg.engine {
+            EngineKind::Continuous => rollout.rollout_continuous_lit(
+                &params,
+                &tasks,
+                seed,
+                &mut scheduler,
+                &mut self.kv,
+                0,
+            ),
+            EngineKind::Static => rollout.rollout_static_queue_lit(
+                &params,
+                &tasks,
+                seed,
+                &mut scheduler,
+                &mut self.kv,
+                0,
+            ),
         }
-        Ok((results.into_iter().map(|s| s.expect("all slots filled")).collect(), chunks))
     }
 
     /// Dense teacher-forcing scores for a set of sequences under the
@@ -159,7 +176,7 @@ impl<'a> Trainer<'a> {
 
         // ---- rollouts ---------------------------------------------------
         let t0 = Instant::now();
-        let (seqs, chunks) = self.rollout_batch(&task_indices)?;
+        let (seqs, rstats) = self.rollout_batch(&task_indices)?;
         let rollout_secs = t0.elapsed().as_secs_f64();
 
         // ---- dense scoring (π_old) --------------------------------------
@@ -284,8 +301,12 @@ impl<'a> Trainer<'a> {
             toks_saving: acct.toks_saving(),
             rollout_secs,
             train_secs,
-            rollout_chunks: chunks,
+            rollout_chunks: rstats.chunks,
             gen_tokens,
+            decode_steps: rstats.decode_steps,
+            slot_occupancy: rstats.occupancy(),
+            idle_token_frac: rstats.idle_frac(),
+            refills: rstats.refills,
         };
 
         self.metrics.begin_step();
@@ -301,6 +322,10 @@ impl<'a> Trainer<'a> {
         self.metrics.push("toks_saving", report.toks_saving);
         self.metrics.push("rollout_secs", report.rollout_secs);
         self.metrics.push("train_secs", report.train_secs);
+        self.metrics.push("decode_steps", report.decode_steps as f64);
+        self.metrics.push("slot_occupancy", report.slot_occupancy);
+        self.metrics.push("idle_token_frac", report.idle_token_frac);
+        self.metrics.push("refills", report.refills as f64);
         self.metrics.push("informative_groups", summary.informative_groups);
         Ok(report)
     }

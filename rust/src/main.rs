@@ -22,7 +22,6 @@ use sparse_rl::data::{benchmarks, tokenizer};
 use sparse_rl::experiments;
 use sparse_rl::runtime::{params, ModelEngine, TrainState};
 use sparse_rl::util::cli::CliArgs;
-use sparse_rl::util::rng::Rng;
 
 fn main() {
     if let Err(e) = run() {
@@ -171,12 +170,11 @@ fn cmd_rollout(args: &CliArgs) -> Result<()> {
     cfg.apply_cli(args)?;
     let n = args.get("n", 4usize).min(engine.manifest.shapes.decode_batch);
     let seed = args.get("seed", 0u64);
-    let mut rng = Rng::new(seed);
     let tasks = benchmarks::training_split(n, engine.manifest.config.prompt_len, seed);
     let ro = RolloutEngine::new(&engine, mode, cfg.sampling);
     let chunk: Vec<(usize, &sparse_rl::data::Task)> =
         tasks.iter().enumerate().map(|(i, t)| (i, t)).collect();
-    let seqs = ro.rollout_chunk(&state.params, &chunk, &mut rng)?;
+    let seqs = ro.rollout_chunk(&state.params, &chunk, seed)?;
     for (seq, task) in seqs.iter().zip(tasks.iter()) {
         println!(
             "prompt: {}\nanswer: {}  reward: {}  compressions: {}  toks-saved: {:.2}",
@@ -213,7 +211,6 @@ fn cmd_latency(args: &CliArgs) -> Result<()> {
     let mut cfg = ExperimentConfig::new(&engine.manifest.dir);
     cfg.apply_cli(args)?;
     let mode = RolloutMode::parse(&args.get("mode", "sparse-rl:rkv".to_string()))?;
-    let mut rng = Rng::new(0);
     let tasks = benchmarks::training_split(
         engine.manifest.shapes.decode_batch,
         engine.manifest.config.prompt_len,
@@ -222,7 +219,7 @@ fn cmd_latency(args: &CliArgs) -> Result<()> {
     let ro = RolloutEngine::new(&engine, mode, cfg.sampling);
     let chunk: Vec<(usize, &sparse_rl::data::Task)> =
         tasks.iter().enumerate().map(|(i, t)| (i, t)).collect();
-    ro.rollout_chunk(&state.params, &chunk, &mut rng)?;
+    ro.rollout_chunk(&state.params, &chunk, 0)?;
     println!("{:<20} {:>8} {:>12}", "artifact", "calls", "mean");
     for (name, calls, ns) in engine.latency_report() {
         println!(

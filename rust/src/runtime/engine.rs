@@ -249,6 +249,59 @@ impl ModelEngine {
         Ok((CacheState { kv, stats_cum, stats_win, birth, capacity: cap, variant }, logp))
     }
 
+    /// Prefill ONE slot of a live cache in place, leaving every other
+    /// slot's state untouched (continuous batching's slot recycling).
+    /// Returns the slot's last-prompt-token log-probs `[V]`.
+    ///
+    /// The AOT artifact set only ships a full-batch prefill, so this runs
+    /// it on a scratch batch carrying `prompt` in the target slot and
+    /// splices that slot's planes (kv / stats / birth) into `cache` with a
+    /// host round-trip. Correctness rests on batch-row independence: a
+    /// slot's prefill output is bit-identical regardless of what occupies
+    /// the other rows (each row attends only to its own cache), which the
+    /// artifact-gated integration tests assert. The round-trip copies the
+    /// whole cache through host memory — acceptable for correctness-first;
+    /// a fused dynamic-update-slice prefill entry is a ROADMAP follow-up.
+    pub fn prefill_slot(
+        &self,
+        params: &ParamsLit,
+        cache: &mut CacheState,
+        slot: usize,
+        prompt: &[i32],
+    ) -> Result<Vec<f32>> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let (r, p_len, vocab) = (s.decode_batch, c.prompt_len, c.vocab);
+        if slot >= r {
+            bail!("prefill_slot: slot {slot} out of range (R = {r})");
+        }
+        if prompt.is_empty() || prompt.len() > p_len {
+            bail!("prefill_slot: prompt length {} not in 1..={p_len}", prompt.len());
+        }
+        // Scratch batch: the prompt in the target slot; other rows hold a
+        // minimal valid row (their planes are discarded by the splice, and
+        // row independence means their content cannot leak into ours).
+        let mut ids = vec![prompt[0]; r * p_len];
+        let mut plens = vec![1i32; r];
+        ids[slot * p_len..slot * p_len + prompt.len()].copy_from_slice(prompt);
+        plens[slot] = prompt.len() as i32;
+        let (fresh, logp) = self.prefill(cache.variant, params, &ids, &plens)?;
+
+        // Splice the target slot's planes from the fresh cache into the
+        // live one. Layouts (slot axis = R): kv [L,2,R,H,C,Dh],
+        // stats/birth [L,R,H,C].
+        let (l, h, dh, cap) = (c.n_layers, c.n_heads, c.d_head, cache.capacity);
+        splice_f32(&mut cache.kv, &fresh.kv, l * 2, r, h * cap * dh, slot,
+            &[l, 2, r, h, cap, dh])?;
+        splice_f32(&mut cache.stats_cum, &fresh.stats_cum, l, r, h * cap, slot,
+            &[l, r, h, cap])?;
+        splice_f32(&mut cache.stats_win, &fresh.stats_win, l, r, h * cap, slot,
+            &[l, r, h, cap])?;
+        splice_i32(&mut cache.birth, &fresh.birth, l, r, h * cap, slot,
+            &[l, r, h, cap])?;
+        Ok(logp[slot * vocab..(slot + 1) * vocab].to_vec())
+    }
+
     /// One decode step over the batch; returns log-probs [R, V] flattened
     /// and replaces the cache state in place. This is THE hot path: the
     /// cache literals flow straight back in, and only the small control
@@ -428,3 +481,48 @@ impl ModelEngine {
             .collect()
     }
 }
+
+/// Copy slot `slot`'s plane from `src` into `dst` for a tensor whose
+/// row-major layout is [outer.., R, plane..]: `outer` leading blocks, each
+/// holding R slot planes of `plane` elements (the slot axis of every cache
+/// tensor). Host round-trip; see `prefill_slot`. One macro-generated body
+/// per element type so the bounds/copy logic cannot drift between the f32
+/// (kv/stats) and i32 (birth) variants.
+macro_rules! splice_plane {
+    ($name:ident, $ty:ty) => {
+        fn $name(
+            dst: &mut xla::Literal,
+            src: &xla::Literal,
+            outer: usize,
+            r: usize,
+            plane: usize,
+            slot: usize,
+            dims: &[usize],
+        ) -> Result<()> {
+            let mut d = dst
+                .to_vec::<$ty>()
+                .map_err(|e| anyhow::anyhow!("splice dst: {e:?}"))?;
+            let s = src
+                .to_vec::<$ty>()
+                .map_err(|e| anyhow::anyhow!("splice src: {e:?}"))?;
+            if d.len() != s.len() || d.len() != outer * r * plane {
+                bail!(
+                    "splice: layout mismatch (dst {}, src {}, expect {})",
+                    d.len(),
+                    s.len(),
+                    outer * r * plane
+                );
+            }
+            for o in 0..outer {
+                let base = (o * r + slot) * plane;
+                d[base..base + plane].copy_from_slice(&s[base..base + plane]);
+            }
+            let dims_i64: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+            *dst = xla::Literal::vec1(&d).reshape(&dims_i64)?;
+            Ok(())
+        }
+    };
+}
+
+splice_plane!(splice_f32, f32);
+splice_plane!(splice_i32, i32);

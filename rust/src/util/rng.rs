@@ -25,10 +25,8 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
-    /// Derive an independent stream (e.g. per sequence slot).
-    pub fn fork(&mut self, tag: u64) -> Rng {
-        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
-    }
+    // NOTE: stateful per-slot stream forking was removed with the move to
+    // placement-independent per-task streams (`coordinator::rollout::task_rng`).
 
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -88,53 +86,24 @@ impl Rng {
     /// sampler on the rollout hot path.
     ///
     /// With temperature 1.0 and top_p 1.0 this samples the exact softmax of
-    /// `logp` (which the decode artifact already normalized).
+    /// `logp` (which the decode artifact already normalized). Non-finite
+    /// logits carry zero mass; a fully non-finite input falls back to a
+    /// uniform draw (see `modified_probs`).
     pub fn sample_logits(&mut self, logp: &[f32], temperature: f32, top_p: f32) -> usize {
         assert!(!logp.is_empty());
-        let inv_t = 1.0 / temperature.max(1e-6);
-        let mx = logp.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut probs: Vec<f32> = logp.iter().map(|&l| ((l - mx) * inv_t).exp()).collect();
-        let sum: f32 = probs.iter().sum();
-        for p in probs.iter_mut() {
-            *p /= sum;
-        }
-        if top_p < 1.0 {
-            // nucleus truncation: keep the smallest prefix of the sorted
-            // distribution whose mass reaches top_p
-            let mut idx: Vec<usize> = (0..probs.len()).collect();
-            idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
-            let mut acc = 0.0f32;
-            let mut cut = probs.len();
-            for (rank, &i) in idx.iter().enumerate() {
-                acc += probs[i];
-                if acc >= top_p {
-                    cut = rank + 1;
-                    break;
-                }
-            }
-            let keep: std::collections::HashSet<usize> =
-                idx[..cut].iter().cloned().collect();
-            let mut mass = 0.0;
-            for (i, p) in probs.iter_mut().enumerate() {
-                if keep.contains(&i) {
-                    mass += *p;
-                } else {
-                    *p = 0.0;
-                }
-            }
-            for p in probs.iter_mut() {
-                *p /= mass;
-            }
-        }
+        let probs = match modified_probs(logp, temperature, top_p) {
+            Some(p) => p,
+            None => return self.below(logp.len()), // degenerate: uniform
+        };
         let r = self.next_f32();
         let mut acc = 0.0f32;
         for (i, &p) in probs.iter().enumerate() {
             acc += p;
-            if r < acc {
+            if r < acc && p > 0.0 {
                 return i;
             }
         }
-        probs.len() - 1
+        probs.iter().rposition(|&p| p > 0.0).unwrap_or(0)
     }
 
     /// Standard normal via Box–Muller (tests / synthetic data).
@@ -143,6 +112,66 @@ impl Rng {
         let u2 = self.next_f64();
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
+}
+
+/// Materialize the temperature/top-p-modified categorical distribution
+/// from log-probs — THE single implementation both token samplers
+/// (`Rng::sample_logits` and `coordinator::rollout::sample_token`) share,
+/// so robustness fixes cannot diverge between them.
+///
+/// Non-finite logits (NaN from a diverged model, ±inf) carry zero mass.
+/// Returns `None` when every logit is non-finite (caller picks a uniform
+/// fallback). The top-p nucleus always keeps at least one token — when the
+/// top-1 probability alone exceeds `top_p` the cut is exactly {argmax} —
+/// and renormalizes the kept mass to 1.
+pub fn modified_probs(logp: &[f32], temperature: f32, top_p: f32) -> Option<Vec<f32>> {
+    let inv_t = 1.0 / temperature.max(1e-6);
+    let mx = logp
+        .iter()
+        .cloned()
+        .filter(|l| l.is_finite())
+        .fold(f32::NEG_INFINITY, f32::max);
+    if !mx.is_finite() {
+        return None;
+    }
+    let mut probs: Vec<f32> = logp
+        .iter()
+        .map(|&l| if l.is_finite() { ((l - mx) * inv_t).exp() } else { 0.0 })
+        .collect();
+    let z: f32 = probs.iter().sum(); // >= 1: the max contributes exp(0)
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+    if top_p < 1.0 {
+        // nucleus truncation: keep the smallest prefix of the sorted
+        // distribution whose mass reaches top_p
+        let mut idx: Vec<usize> = (0..probs.len()).collect();
+        // total_cmp: never panics (partial_cmp().unwrap() dies on NaN)
+        idx.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]));
+        let mut acc = 0.0f32;
+        let mut cut = probs.len();
+        for (rank, &i) in idx.iter().enumerate() {
+            acc += probs[i];
+            if acc >= top_p {
+                cut = rank + 1;
+                break;
+            }
+        }
+        let keep: std::collections::HashSet<usize> = idx[..cut].iter().cloned().collect();
+        let mut mass = 0.0;
+        for (i, p) in probs.iter_mut().enumerate() {
+            if keep.contains(&i) {
+                mass += *p;
+            } else {
+                *p = 0.0;
+            }
+        }
+        // mass > 0: the kept set contains the argmax, whose prob is >= 1/V
+        for p in probs.iter_mut() {
+            *p /= mass;
+        }
+    }
+    Some(probs)
 }
 
 #[cfg(test)]
@@ -197,6 +226,20 @@ mod tests {
         let logp = [0.0f32, -0.1, -30.0];
         for _ in 0..10_000 {
             assert_ne!(r.sample_logits(&logp, 1.0, 0.9), 2);
+        }
+    }
+
+    #[test]
+    fn sample_logits_survives_nan() {
+        let mut r = Rng::new(17);
+        let logp = [f32::NAN, -0.5, -1.0];
+        for _ in 0..200 {
+            let t = r.sample_logits(&logp, 1.0, 0.9);
+            assert!(t == 1 || t == 2, "sampled the NaN token");
+        }
+        // fully degenerate input: uniform fallback, no panic
+        for _ in 0..50 {
+            assert!(r.sample_logits(&[f32::NAN; 3], 1.0, 1.0) < 3);
         }
     }
 

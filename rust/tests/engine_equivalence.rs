@@ -1,0 +1,375 @@
+//! Determinism/equivalence harness for the two rollout engines.
+//!
+//! Runs entirely on the deterministic mock backend (`coordinator::mock`),
+//! so these properties execute hermetically — no artifacts, no PJRT. The
+//! contract under test is the tentpole guarantee of the continuous-
+//! batching refactor:
+//!
+//! 1. **Token equivalence** — for every task, the static chunked engine
+//!    and the continuous slot-recycling engine emit identical
+//!    `response_ids`, bit-identical `sampler_logp`, the same `finished`
+//!    flag, and the same KV accounting, across random seeds, modes
+//!    (dense / naive / sparse-rl), sampling configs, slot widths, and
+//!    memory walls. This is what keeps the Eq. 2/5 correction math
+//!    bit-reproducible regardless of engine.
+//! 2. **Memory-wall invariants** — reserved KV never exceeds capacity at
+//!    any decode step, everything is released at drain, and the manager's
+//!    `peak_reserved` high-water mark is monotone-consistent.
+//! 3. **Step-exact scheduling** — the continuous engine's decode-step
+//!    count equals the scheduler's closed-form list-scheduling prediction,
+//!    and the static engine's equals the chunked closed form; continuous
+//!    is never worse and strictly better under skewed lengths.
+
+use sparse_rl::config::{RolloutMode, SamplingConfig};
+use sparse_rl::coordinator::scheduler::SchedulerStats;
+use sparse_rl::coordinator::{
+    GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy, RolloutStats,
+    Scheduler,
+};
+use sparse_rl::data::task::Task;
+use sparse_rl::runtime::Method;
+use sparse_rl::util::propcheck::{self, PropConfig};
+use sparse_rl::util::rng::Rng;
+
+fn mk_sched(slots: usize, reserve: usize) -> Scheduler {
+    Scheduler { slots, reserve_per_seq: reserve, stats: SchedulerStats::default() }
+}
+
+/// Drive the static engine exactly the way the trainer does: the shared
+/// `rollout_static_queue` driver (chunk admission against the wall,
+/// synchronous drain, results in task order).
+fn run_static(
+    policy: &RolloutPolicy,
+    backend: &mut MockModelBackend,
+    tasks: &[Task],
+    seed: u64,
+    reserve: usize,
+    kv: &mut KvMemoryManager,
+) -> Result<(Vec<GenSeq>, RolloutStats), String> {
+    let mut sched = mk_sched(backend.slots(), reserve);
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    policy
+        .rollout_static_queue(backend, &flat, seed, &mut sched, kv, 0)
+        .map_err(|e| e.to_string())
+}
+
+fn run_continuous(
+    policy: &RolloutPolicy,
+    backend: &mut MockModelBackend,
+    tasks: &[Task],
+    seed: u64,
+    reserve: usize,
+    kv: &mut KvMemoryManager,
+) -> Result<(Vec<GenSeq>, RolloutStats), String> {
+    let mut sched = mk_sched(backend.slots(), reserve);
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    policy
+        .rollout_continuous(backend, &flat, seed, &mut sched, kv, 0)
+        .map_err(|e| e.to_string())
+}
+
+fn seqs_equal(a: &GenSeq, b: &GenSeq) -> Result<(), String> {
+    if a.task_idx != b.task_idx {
+        return Err(format!("task_idx {} != {}", a.task_idx, b.task_idx));
+    }
+    if a.response_ids != b.response_ids {
+        return Err(format!(
+            "task {}: response_ids diverge\n  static:     {:?}\n  continuous: {:?}",
+            a.task_idx, a.response_ids, b.response_ids
+        ));
+    }
+    if a.sampler_logp != b.sampler_logp {
+        return Err(format!(
+            "task {}: sampler_logp not bit-identical\n  static:     {:?}\n  continuous: {:?}",
+            a.task_idx, a.sampler_logp, b.sampler_logp
+        ));
+    }
+    if a.finished != b.finished {
+        return Err(format!("task {}: finished {} != {}", a.task_idx, a.finished, b.finished));
+    }
+    let (x, y) = (&a.accounting, &b.accounting);
+    if x.integral_actual != y.integral_actual
+        || x.integral_dense != y.integral_dense
+        || x.peak_actual != y.peak_actual
+        || x.peak_dense != y.peak_dense
+        || x.steps != y.steps
+        || x.compressions != y.compressions
+        || x.evicted != y.evicted
+    {
+        return Err(format!("task {}: accounting diverges: {x:?} vs {y:?}", a.task_idx));
+    }
+    Ok(())
+}
+
+/// One random scenario: geometry, mode, sampling, tasks, wall.
+struct Scenario {
+    mode: RolloutMode,
+    sampling: SamplingConfig,
+    tasks: Vec<Task>,
+    slots: usize,
+    prompt_len: usize,
+    max_seq: usize,
+    budget: usize,
+    buffer: usize,
+    reserve: usize,
+    kv_cap: usize,
+    seed: u64,
+    /// Mock EOS pull: small values make long responses (exercising the
+    /// compression path), large ones make short skewed ones.
+    eos_pull: f32,
+}
+
+impl Scenario {
+    fn gen(rng: &mut Rng, size: usize) -> Scenario {
+        let slots = 1 + rng.below(5);
+        let prompt_len = 24;
+        let max_seq = prompt_len + 2 + rng.below(40);
+        let budget = 20 + rng.below(8); // sparse capacity must fit a prompt
+        let buffer = 4 + rng.below(6);
+        let mode = match rng.below(3) {
+            0 => RolloutMode::Dense,
+            1 => RolloutMode::NaiveSparse(Method::RKv),
+            _ => RolloutMode::SparseRl(Method::RKv),
+        };
+        let sampling = SamplingConfig {
+            temperature: *rng.choose(&[1.0f32, 0.85, 0.6]),
+            top_p: *rng.choose(&[1.0f32, 0.92]),
+            max_response: 2 + rng.below(30),
+        };
+        let n = 1 + rng.below(2 * slots + 2 + size / 8);
+        let tasks: Vec<Task> = (0..n)
+            .map(|_| {
+                let ops = 1 + rng.below(2);
+                Task::gen(rng, ops, prompt_len)
+            })
+            .collect();
+        let capacity = if mode.is_sparse() { budget + buffer } else { max_seq };
+        let reserve = capacity;
+        // sometimes slot-limited, sometimes KV-limited (width < slots)
+        let width_target = 1 + rng.below(slots + 2);
+        let kv_cap = reserve * width_target + rng.below(reserve);
+        Scenario {
+            mode,
+            sampling,
+            tasks,
+            slots,
+            prompt_len,
+            max_seq,
+            budget,
+            buffer,
+            reserve,
+            kv_cap,
+            seed: rng.next_u64(),
+            eos_pull: *rng.choose(&[0.25f32, 0.08, 0.02]),
+        }
+    }
+
+    fn backend(&self) -> MockModelBackend {
+        let mut b = if self.mode.is_sparse() {
+            MockModelBackend::sparse(
+                self.slots,
+                self.prompt_len,
+                self.max_seq,
+                32,
+                self.budget,
+                self.buffer,
+            )
+        } else {
+            MockModelBackend::dense(self.slots, self.prompt_len, self.max_seq, 32)
+        };
+        b.eos_pull = self.eos_pull;
+        b
+    }
+
+    fn policy(&self) -> RolloutPolicy {
+        RolloutPolicy::new(self.mode, self.sampling)
+    }
+}
+
+#[test]
+fn prop_static_and_continuous_engines_agree_per_task() {
+    propcheck::check(
+        "static-continuous-equivalence",
+        PropConfig { cases: 96, seed: 0xE9_0001, max_size: 48 },
+        |rng, size| {
+            let sc = Scenario::gen(rng, size);
+            let policy = sc.policy();
+
+            let mut kv_s = KvMemoryManager::new(sc.kv_cap);
+            let (stat_seqs, stat_stats) =
+                run_static(&policy, &mut sc.backend(), &sc.tasks, sc.seed, sc.reserve, &mut kv_s)?;
+
+            let mut kv_c = KvMemoryManager::new(sc.kv_cap);
+            let (cont_seqs, cont_stats) = run_continuous(
+                &policy,
+                &mut sc.backend(),
+                &sc.tasks,
+                sc.seed,
+                sc.reserve,
+                &mut kv_c,
+            )?;
+
+            // 1) token-for-token, logp-bit-for-bit equivalence per task
+            if stat_seqs.len() != cont_seqs.len() {
+                return Err("result count mismatch".into());
+            }
+            for (a, b) in stat_seqs.iter().zip(cont_seqs.iter()) {
+                seqs_equal(a, b)?;
+            }
+
+            // 2) continuous determinism: a second run is identical
+            let mut kv_c2 = KvMemoryManager::new(sc.kv_cap);
+            let (cont2, cont2_stats) = run_continuous(
+                &policy,
+                &mut sc.backend(),
+                &sc.tasks,
+                sc.seed,
+                sc.reserve,
+                &mut kv_c2,
+            )?;
+            for (a, b) in cont_seqs.iter().zip(cont2.iter()) {
+                seqs_equal(a, b)?;
+            }
+            if cont_stats != cont2_stats {
+                return Err("continuous stats not reproducible".into());
+            }
+
+            // 3) memory-wall invariants
+            for kv in [&kv_s, &kv_c] {
+                if kv.reserved() != 0 {
+                    return Err(format!("{} KV tokens leaked", kv.reserved()));
+                }
+                kv.check_invariants().map_err(|e| e.to_string())?;
+            }
+            if cont_stats.max_reserved_kv > kv_c.capacity() {
+                return Err(format!(
+                    "observed residency {} breached the wall {}",
+                    cont_stats.max_reserved_kv,
+                    kv_c.capacity()
+                ));
+            }
+            if kv_c.peak_reserved < cont_stats.max_reserved_kv {
+                return Err("peak_reserved below an observed residency".into());
+            }
+
+            // 4) both engines do the same productive decode work; the
+            //    continuous engine never needs more decode steps
+            if stat_stats.occupied_slot_steps != cont_stats.occupied_slot_steps {
+                return Err(format!(
+                    "productive slot-steps diverge: static {} vs continuous {}",
+                    stat_stats.occupied_slot_steps, cont_stats.occupied_slot_steps
+                ));
+            }
+            if cont_stats.decode_steps > stat_stats.decode_steps {
+                return Err(format!(
+                    "continuous used MORE decode steps ({} > {})",
+                    cont_stats.decode_steps, stat_stats.decode_steps
+                ));
+            }
+
+            // 5) step-exact closed forms (scheduler prediction)
+            let lens: Vec<usize> = cont_seqs.iter().map(|s| s.response_ids.len()).collect();
+            let sched = mk_sched(sc.slots, sc.reserve);
+            let pred_c = sched.predicted_decode_steps(&lens, sc.kv_cap);
+            if cont_stats.decode_steps != pred_c {
+                return Err(format!(
+                    "continuous decode steps {} != predicted {} (lens {:?})",
+                    cont_stats.decode_steps, pred_c, lens
+                ));
+            }
+            let pred_s = sched.predicted_decode_steps_static(&lens, sc.kv_cap);
+            if stat_stats.decode_steps != pred_s {
+                return Err(format!(
+                    "static decode steps {} != predicted {} (lens {:?})",
+                    stat_stats.decode_steps, pred_s, lens
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_static_results_do_not_depend_on_chunking() {
+    // A narrower engine (fewer slots => different chunk boundaries) must
+    // still produce identical sequences: per-task RNG means placement is
+    // irrelevant even within one engine.
+    propcheck::check(
+        "static-chunking-independence",
+        PropConfig { cases: 48, seed: 0xE9_0002, max_size: 32 },
+        |rng, size| {
+            let sc = Scenario::gen(rng, size);
+            let policy = sc.policy();
+            let mut kv_a = KvMemoryManager::new(sc.kv_cap);
+            let (wide, _) =
+                run_static(&policy, &mut sc.backend(), &sc.tasks, sc.seed, sc.reserve, &mut kv_a)?;
+
+            // same scenario, single-slot backend: maximal re-chunking
+            let narrow_backend = || {
+                let mut b = if sc.mode.is_sparse() {
+                    MockModelBackend::sparse(1, sc.prompt_len, sc.max_seq, 32, sc.budget, sc.buffer)
+                } else {
+                    MockModelBackend::dense(1, sc.prompt_len, sc.max_seq, 32)
+                };
+                b.eos_pull = sc.eos_pull;
+                b
+            };
+            let mut kv_b = KvMemoryManager::new(sc.kv_cap);
+            let (serial, _) =
+                run_static(&policy, &mut narrow_backend(), &sc.tasks, sc.seed, sc.reserve, &mut kv_b)?;
+            for (a, b) in wide.iter().zip(serial.iter()) {
+                seqs_equal(a, b)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn continuous_strictly_beats_static_under_skewed_lengths() {
+    // Deterministic scenario with plenty of tasks and naturally skewed
+    // EOS-driven lengths: slot recycling must save decode steps outright.
+    let mode = RolloutMode::SparseRl(Method::RKv);
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 48 };
+    let policy = RolloutPolicy::new(mode, sampling);
+    let (slots, prompt_len, max_seq, budget, buffer) = (4, 24, 96, 28, 8);
+    let mut rng = Rng::new(0xBEEF);
+    let tasks: Vec<Task> = (0..32)
+        .map(|_| {
+            let ops = 1 + rng.below(2);
+            Task::gen(&mut rng, ops, prompt_len)
+        })
+        .collect();
+    let reserve = budget + buffer;
+    let kv_cap = reserve * slots * 4; // slot-limited: pure bubble comparison
+    let backend =
+        || MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer);
+
+    let mut kv_s = KvMemoryManager::new(kv_cap);
+    let (stat_seqs, stat_stats) =
+        run_static(&policy, &mut backend(), &tasks, 7, reserve, &mut kv_s).unwrap();
+    let mut kv_c = KvMemoryManager::new(kv_cap);
+    let (cont_seqs, cont_stats) =
+        run_continuous(&policy, &mut backend(), &tasks, 7, reserve, &mut kv_c).unwrap();
+
+    let lens: Vec<usize> = stat_seqs.iter().map(|s| s.response_ids.len()).collect();
+    let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+    assert!(lo < hi, "lengths unexpectedly uniform: {lens:?}");
+    for (a, b) in stat_seqs.iter().zip(cont_seqs.iter()) {
+        seqs_equal(a, b).unwrap();
+    }
+    assert!(
+        cont_stats.decode_steps < stat_stats.decode_steps,
+        "continuous {} !< static {} (lens {:?})",
+        cont_stats.decode_steps,
+        stat_stats.decode_steps,
+        lens
+    );
+    assert!(
+        cont_stats.occupancy() > stat_stats.occupancy(),
+        "occupancy did not improve: {} vs {}",
+        cont_stats.occupancy(),
+        stat_stats.occupancy()
+    );
+    assert!(cont_stats.refills > 0, "slot recycling never fired");
+}

@@ -96,13 +96,64 @@ fn memory_wall_limits_dense_chunk_width() {
     // tighten the wall: only 2 dense sequences fit at once
     t.cfg.memory.global_kv_tokens = engine.manifest.config.max_seq * 2 + 10;
     t.kv = sparse_rl::coordinator::KvMemoryManager::new(t.cfg.memory.global_kv_tokens);
-    let (seqs, chunks) = t.rollout_batch(&[0, 1]).expect("rollouts");
+    let (seqs, rstats) = t.rollout_batch(&[0, 1]).expect("rollouts");
+    let chunks = rstats.chunks;
     assert_eq!(seqs.len(), 16);
     assert!(
         chunks >= 8,
         "wall of 2 seqs should force >= 8 chunks for 16 seqs, got {chunks}"
     );
     assert_eq!(t.kv.reserved(), 0);
+}
+
+#[test]
+fn continuous_engine_matches_static_on_real_artifacts() {
+    // The real-model counterpart of tests/engine_equivalence.rs: the same
+    // step on both engines must emit identical tokens and sampler logps
+    // per task (batch-row independence + per-task RNG + exact slot
+    // prefill splicing).
+    let Some(dir) = artifacts() else { return };
+    let engine = ModelEngine::load(&dir).unwrap();
+    for mode in [RolloutMode::Dense, RolloutMode::SparseRl(Method::RKv)] {
+        let mut ts = mk_trainer(&engine, mode);
+        let mut tc = mk_trainer(&engine, mode);
+        tc.cfg.engine = sparse_rl::config::EngineKind::Continuous;
+        let (stat_seqs, stat_stats) = ts.rollout_batch(&[0, 1, 2]).expect("static");
+        let (cont_seqs, cont_stats) = tc.rollout_batch(&[0, 1, 2]).expect("continuous");
+        assert_eq!(stat_seqs.len(), cont_seqs.len());
+        for (a, b) in stat_seqs.iter().zip(cont_seqs.iter()) {
+            assert_eq!(a.task_idx, b.task_idx);
+            assert_eq!(
+                a.response_ids, b.response_ids,
+                "engines diverged on task {} ({})",
+                a.task_idx,
+                mode.label()
+            );
+            assert_eq!(a.sampler_logp, b.sampler_logp, "logp diverged on task {}", a.task_idx);
+            assert_eq!(a.finished, b.finished);
+        }
+        assert!(
+            cont_stats.decode_steps <= stat_stats.decode_steps,
+            "continuous used more decode steps ({} > {})",
+            cont_stats.decode_steps,
+            stat_stats.decode_steps
+        );
+        assert_eq!(ts.kv.reserved(), 0);
+        assert_eq!(tc.kv.reserved(), 0);
+    }
+}
+
+#[test]
+fn rl_step_runs_on_continuous_engine() {
+    let Some(dir) = artifacts() else { return };
+    let engine = ModelEngine::load(&dir).unwrap();
+    let mut t = mk_trainer(&engine, RolloutMode::SparseRl(Method::RKv));
+    t.cfg.engine = sparse_rl::config::EngineKind::Continuous;
+    let r = t.rl_step().expect("rl step (continuous)");
+    assert!(r.gen_tokens > 0);
+    assert!(r.slot_occupancy > 0.0 && r.slot_occupancy <= 1.0);
+    assert_eq!(r.rollout_chunks, 1, "continuous drains the queue in one pass");
+    assert_eq!(t.kv.reserved(), 0, "KV reservations leaked");
 }
 
 #[test]

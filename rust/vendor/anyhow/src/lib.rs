@@ -1,0 +1,145 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The registry is unavailable in the build environment, so this vendored
+//! crate provides the small slice of anyhow's API the workspace uses:
+//! `Error` (message-only, with context chaining), `Result`, the `Context`
+//! extension trait for `Result`/`Option`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Like real anyhow, `Error` deliberately does NOT
+//! implement `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` impl coherent.
+
+use std::fmt::{self, Debug, Display};
+
+/// A message-carrying error. Context is prepended, anyhow-style:
+/// `outer context: inner cause`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, mirroring anyhow's.
+pub trait Context<T> {
+    fn context<C: Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{ctx}: {e}") })
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an `Error` from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an `Error` built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file/1f9a").context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert!(f(2).is_ok());
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        let e = anyhow!("v = {}", 7);
+        assert_eq!(e.to_string(), "v = 7");
+    }
+}
