@@ -18,6 +18,7 @@
 use anyhow::Result;
 
 use sparse_rl::config::{ExperimentConfig, RolloutMode};
+use sparse_rl::coordinator::EvalOptions;
 use sparse_rl::experiments;
 use sparse_rl::runtime::ModelEngine;
 use sparse_rl::util::cli::CliArgs;
@@ -49,7 +50,8 @@ fn main() -> Result<()> {
     // base-model eval (the "Base" row of Table 1)
     println!("\nbase model eval (dense):");
     let (_, base_avg) =
-        experiments::eval_checkpoint(&engine, &base.params, RolloutMode::Dense, eval_limit, seed)?;
+        experiments::eval_checkpoint(&engine, &base.params, RolloutMode::Dense, eval_limit, seed,
+                                     &EvalOptions::default())?;
 
     // ---- stage 2: RL post-training -------------------------------------
     let mut cfg = ExperimentConfig::new(&dir);
@@ -77,6 +79,7 @@ fn main() -> Result<()> {
         RolloutMode::Dense,
         eval_limit,
         seed,
+        &EvalOptions::default(),
     )?;
     println!("\npost-RL eval (sparse inference, same compression as training):");
     let sparse_eval_mode = match mode {
@@ -89,6 +92,7 @@ fn main() -> Result<()> {
         sparse_eval_mode,
         eval_limit,
         seed,
+        &EvalOptions::default(),
     )?;
 
     println!("\n== e2e summary ==");

@@ -17,7 +17,7 @@
 use anyhow::Result;
 
 use sparse_rl::config::{ExperimentConfig, RolloutMode};
-use sparse_rl::coordinator::evaluate;
+use sparse_rl::coordinator::{evaluate, EvalOptions};
 use sparse_rl::experiments;
 use sparse_rl::runtime::{Method, ModelEngine};
 use sparse_rl::util::cli::CliArgs;
@@ -80,6 +80,7 @@ fn main() -> Result<()> {
                 b,
                 limit,
                 seed,
+                &EvalOptions::default(),
             )?;
             accs.push(r.accuracy);
         }
@@ -112,6 +113,7 @@ fn main() -> Result<()> {
                 b,
                 limit,
                 seed,
+                &EvalOptions::default(),
             )?;
             accs.push(r.accuracy);
         }

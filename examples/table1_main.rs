@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use sparse_rl::config::{ExperimentConfig, RolloutMode};
-use sparse_rl::coordinator::EvalResult;
+use sparse_rl::coordinator::{EvalOptions, EvalResult};
 use sparse_rl::experiments;
 use sparse_rl::runtime::{Method, ModelEngine, TrainState};
 use sparse_rl::util::cli::CliArgs;
@@ -36,7 +36,8 @@ fn eval_row(
     toks_saving: Option<f64>,
 ) -> Result<Row> {
     let (results, avg): (Vec<EvalResult>, f64) =
-        experiments::eval_checkpoint(engine, params, RolloutMode::Dense, limit, seed)?;
+        experiments::eval_checkpoint(engine, params, RolloutMode::Dense, limit, seed,
+                                     &EvalOptions::default())?;
     Ok(Row {
         label: label.to_string(),
         accs: results.iter().map(|r| r.accuracy).collect(),

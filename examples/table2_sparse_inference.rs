@@ -17,6 +17,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use sparse_rl::config::{ExperimentConfig, RolloutMode};
+use sparse_rl::coordinator::EvalOptions;
 use sparse_rl::experiments;
 use sparse_rl::runtime::{params, Method, ModelEngine, TrainState};
 use sparse_rl::util::cli::CliArgs;
@@ -78,10 +79,12 @@ fn main() -> Result<()> {
     let deploy_mode = RolloutMode::SparseRl(method);
     println!("\nGRPO (Dense)-trained model under sparse inference ({}):", method.name());
     let (dense_rows, dense_avg) =
-        experiments::eval_checkpoint(&engine, &dense_ckpt.params, deploy_mode, limit, seed)?;
+        experiments::eval_checkpoint(&engine, &dense_ckpt.params, deploy_mode, limit, seed,
+                                     &EvalOptions::default())?;
     println!("\nSparse-RL ({})-trained model under sparse inference:", method.name());
     let (ours_rows, ours_avg) =
-        experiments::eval_checkpoint(&engine, &sparse_ckpt.params, deploy_mode, limit, seed)?;
+        experiments::eval_checkpoint(&engine, &sparse_ckpt.params, deploy_mode, limit, seed,
+                                     &EvalOptions::default())?;
 
     println!(
         "\n=== Table 2 ({model}) — sparse inference w/ {} @ budget {} ===",

@@ -58,10 +58,10 @@ fn main() {
     {
         b.bench("scheduler: plan 1024 seqs against the wall", || {
             let mut kv = KvMemoryManager::new(4096);
-            let mut s = Scheduler { slots: 16, reserve_per_seq: 208, stats: Default::default() };
+            let mut s = Scheduler::worst_case(16, 208);
             let mut pending: Vec<usize> = (0..1024).collect();
             let mut base = 0u64;
-            while let Some(c) = s.next_chunk(&mut pending, &mut kv, base) {
+            while let Some(c) = s.next_chunk(&mut pending, &mut kv, base, &[]) {
                 s.finish_chunk(&c, &mut kv, base);
                 base += c.items.len() as u64;
             }

@@ -13,8 +13,9 @@
 //!
 //!     cargo bench --bench bench_rollout [-- --model nano]
 
-use sparse_rl::config::{RolloutMode, SamplingConfig};
-use sparse_rl::coordinator::scheduler::SchedulerStats;
+use std::collections::BTreeMap;
+
+use sparse_rl::config::{AdmissionPolicy, RolloutMode, SamplingConfig};
 use sparse_rl::coordinator::{
     GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy, RolloutStats,
     Scheduler,
@@ -24,10 +25,11 @@ use sparse_rl::experiments;
 use sparse_rl::runtime::{Hyp, Method, ModelEngine, ParamsLit, TrainState, Variant};
 use sparse_rl::util::bench::Bencher;
 use sparse_rl::util::cli::CliArgs;
+use sparse_rl::util::json::Json;
 use sparse_rl::util::rng::Rng;
 
 fn mk_sched(slots: usize, reserve: usize) -> Scheduler {
-    Scheduler { slots, reserve_per_seq: reserve, stats: SchedulerStats::default() }
+    Scheduler::worst_case(slots, reserve)
 }
 
 fn run_static_mock(
@@ -60,6 +62,25 @@ fn run_continuous_mock(
     policy
         .rollout_continuous(backend, &flat, seed, &mut sched, &mut kv, 0)
         .expect("rollout")
+}
+
+fn run_continuous_paged_mock(
+    policy: &RolloutPolicy,
+    backend: &mut MockModelBackend,
+    tasks: &[Task],
+    seed: u64,
+    reserve: usize,
+    kv_cap: usize,
+    page_tokens: usize,
+) -> (Vec<GenSeq>, RolloutStats, KvMemoryManager) {
+    let mut kv = KvMemoryManager::with_pages(kv_cap, page_tokens);
+    let mut sched =
+        mk_sched(backend.slots(), reserve).with_admission(AdmissionPolicy::Paged);
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    let (seqs, stats) = policy
+        .rollout_continuous(backend, &flat, seed, &mut sched, &mut kv, 0)
+        .expect("rollout");
+    (seqs, stats, kv)
 }
 
 /// Static vs continuous on the mock model: the long-tail-bubble numbers.
@@ -146,11 +167,140 @@ fn engine_comparison() {
     println!();
 }
 
+/// Paged vs worst-case admission head-to-head on the continuous engine
+/// (mock model, skewed lengths): the tentpole claim is that admitting by
+/// *actual* residency strictly raises admitted width and lowers decode
+/// steps under the same wall, with identical tokens. Returns the JSON rows
+/// for BENCH_rollout.json (the CI perf trajectory).
+fn paged_comparison() -> Json {
+    let (slots, prompt_len, max_seq, budget, buffer) = (8usize, 16usize, 160usize, 40usize, 16usize);
+    let (n_tasks, seed, page_tokens) = (64usize, 7u64, 4usize);
+    let mut rng = Rng::new(1);
+    let tasks: Vec<Task> = (0..n_tasks)
+        .map(|_| {
+            let ops = 1 + rng.below(2);
+            Task::gen(&mut rng, ops, prompt_len)
+        })
+        .collect();
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 64 };
+
+    println!(
+        "== admission comparison: worst-case vs paged (continuous engine, mock model, \
+         R={slots}, {n_tasks} tasks, page={page_tokens} tok) =="
+    );
+    println!(
+        "{:<16} {:<11} {:>12} {:>10} {:>10} {:>9} {:>8}",
+        "mode", "admission", "decode-steps", "width-peak", "occupancy", "preempts", "pages"
+    );
+
+    let mut out = BTreeMap::new();
+    for mode in [RolloutMode::Dense, RolloutMode::SparseRl(Method::RKv)] {
+        let policy = RolloutPolicy::new(mode, sampling);
+        let capacity = if mode.is_sparse() { budget + buffer } else { max_seq };
+        let reserve = capacity;
+        // memory-limited wall: worst-case admission fits 3 sequences
+        let kv_cap = reserve * 3;
+        let backend = || {
+            let mut b = if mode.is_sparse() {
+                MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer)
+            } else {
+                MockModelBackend::dense(slots, prompt_len, max_seq, 32)
+            };
+            b.eos_pull = 0.15; // long-tailed response lengths
+            b
+        };
+
+        let (wc_seqs, wc) =
+            run_continuous_mock(&policy, &mut backend(), &tasks, seed, reserve, kv_cap);
+        let (pg_seqs, pg, kv) = run_continuous_paged_mock(
+            &policy,
+            &mut backend(),
+            &tasks,
+            seed,
+            reserve,
+            kv_cap,
+            page_tokens,
+        );
+
+        // identical tokens under either admission policy (per-task RNG)
+        let agree = wc_seqs
+            .iter()
+            .zip(pg_seqs.iter())
+            .all(|(a, b)| a.response_ids == b.response_ids && a.sampler_logp == b.sampler_logp);
+        assert!(agree, "admission policy changed tokens (BUG)");
+        kv.check_invariants().expect("wall invariants");
+        assert_eq!(kv.reserved(), 0, "paged run leaked KV");
+
+        let mut obj = BTreeMap::new();
+        for (admission, st) in [("worst_case", &wc), ("paged", &pg)] {
+            println!(
+                "{:<16} {:<11} {:>12} {:>10} {:>10.3} {:>9} {:>8}",
+                mode.label(),
+                admission,
+                st.decode_steps,
+                st.peak_live_slots,
+                st.occupancy(),
+                st.preemptions,
+                st.max_used_pages,
+            );
+            let mut row = BTreeMap::new();
+            row.insert("decode_steps".into(), Json::Num(st.decode_steps as f64));
+            row.insert("peak_live_slots".into(), Json::Num(st.peak_live_slots as f64));
+            row.insert("occupancy".into(), Json::Num(st.occupancy()));
+            row.insert("preemptions".into(), Json::Num(st.preemptions as f64));
+            row.insert("max_used_pages".into(), Json::Num(st.max_used_pages as f64));
+            row.insert("max_reserved_kv".into(), Json::Num(st.max_reserved_kv as f64));
+            obj.insert(admission.to_string(), Json::Obj(row));
+        }
+        let saved = 1.0 - pg.decode_steps as f64 / wc.decode_steps.max(1) as f64;
+        println!(
+            "  -> paged admits {}x wider at peak, saves {:.1}% decode steps \
+             ({} preemptions), token-identical: yes",
+            pg.peak_live_slots as f64 / wc.peak_live_slots.max(1) as f64,
+            100.0 * saved,
+            pg.preemptions,
+        );
+        assert!(
+            pg.peak_live_slots > wc.peak_live_slots,
+            "paged admission must admit strictly wider ({} !> {})",
+            pg.peak_live_slots,
+            wc.peak_live_slots
+        );
+        assert!(
+            pg.decode_steps < wc.decode_steps,
+            "paged admission must need strictly fewer decode steps ({} !< {})",
+            pg.decode_steps,
+            wc.decode_steps
+        );
+        obj.insert("kv_cap_tokens".into(), Json::Num(kv_cap as f64));
+        obj.insert("reserve_per_seq".into(), Json::Num(reserve as f64));
+        out.insert(mode.label(), Json::Obj(obj));
+    }
+    out.insert("page_tokens".into(), Json::Num(page_tokens as f64));
+    out.insert("tasks".into(), Json::Num(n_tasks as f64));
+    println!();
+    Json::Obj(out)
+}
+
 fn main() {
     let args = CliArgs::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
 
     // Part 1: engine comparison on the mock backend (always runs).
     engine_comparison();
+
+    // Part 1b: paged vs worst-case admission (always runs); the numbers
+    // feed BENCH_rollout.json so CI records the perf trajectory.
+    let paged = paged_comparison();
+    {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("rollout".into()));
+        doc.insert("paged_vs_worst_case".to_string(), paged);
+        let path = "BENCH_rollout.json";
+        match std::fs::write(path, sparse_rl::util::json::to_string(&Json::Obj(doc))) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
 
     // Part 2: artifact component latencies.
     let model = args.get("model", "nano".to_string());

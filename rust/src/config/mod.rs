@@ -177,17 +177,60 @@ impl Default for TrainConfig {
     }
 }
 
+/// How sequences are charged against the KV memory wall.
+///
+/// `WorstCase` (the seed policy) reserves every sequence's worst-case
+/// residency at admission — dense `max_seq`, sparse `budget + buffer` —
+/// so admission can never fail mid-decode but width is paid for tokens
+/// that are mostly never resident. `Paged` admits with only the pages the
+/// prompt needs, grows page-by-page during decode (preempting the
+/// lowest-progress sequence when the wall is hit), and shrinks to the
+/// compressed residency after each compression event; width tracks
+/// *actual* residency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    #[default]
+    WorstCase,
+    Paged,
+}
+
+impl AdmissionPolicy {
+    pub fn parse(s: &str) -> Result<AdmissionPolicy> {
+        Ok(match s {
+            "worst-case" | "worstcase" | "reserve" => AdmissionPolicy::WorstCase,
+            "paged" => AdmissionPolicy::Paged,
+            other => bail!("bad admission policy {other:?} (worst-case | paged)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::WorstCase => "worst-case",
+            AdmissionPolicy::Paged => "paged",
+        }
+    }
+}
+
 /// The memory wall: a global KV token budget shared by concurrent
 /// sequences (the simulated HBM capacity the scheduler packs against).
 #[derive(Debug, Clone, Copy)]
 pub struct MemoryConfig {
     /// Total KV tokens that may be resident at once across all slots.
     pub global_kv_tokens: usize,
+    /// Tokens per KV page (1 = token-granular, the seed accounting).
+    pub kv_page_tokens: usize,
+    /// Admission policy: worst-case reservation (seed behavior) or
+    /// page-granular actual-residency admission.
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for MemoryConfig {
     fn default() -> Self {
-        MemoryConfig { global_kv_tokens: 2048 }
+        MemoryConfig {
+            global_kv_tokens: 2048,
+            kv_page_tokens: 1,
+            admission: AdmissionPolicy::WorstCase,
+        }
     }
 }
 
@@ -259,6 +302,14 @@ impl ExperimentConfig {
             "global-kv-tokens" => {
                 self.memory.global_kv_tokens = value.parse().context("global-kv-tokens")?
             }
+            "kv-page-tokens" => {
+                let v: usize = value.parse().context("kv-page-tokens")?;
+                if v == 0 {
+                    bail!("kv-page-tokens must be >= 1");
+                }
+                self.memory.kv_page_tokens = v;
+            }
+            "admission" => self.memory.admission = AdmissionPolicy::parse(value)?,
             "init-checkpoint" => self.init_checkpoint = Some(PathBuf::from(value)),
             "out-dir" => self.out_dir = PathBuf::from(value),
             other => bail!("unknown config key {other:?}"),
@@ -348,6 +399,25 @@ mod tests {
         assert_eq!(c.engine, EngineKind::Static); // default preserves behavior
         c.apply("engine", "continuous").unwrap();
         assert_eq!(c.engine, EngineKind::Continuous);
+    }
+
+    #[test]
+    fn admission_policy_parsing() {
+        assert_eq!(
+            AdmissionPolicy::parse("worst-case").unwrap(),
+            AdmissionPolicy::WorstCase
+        );
+        assert_eq!(AdmissionPolicy::parse("paged").unwrap(), AdmissionPolicy::Paged);
+        assert!(AdmissionPolicy::parse("lazy").is_err());
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        // defaults preserve the seed behavior exactly
+        assert_eq!(c.memory.admission, AdmissionPolicy::WorstCase);
+        assert_eq!(c.memory.kv_page_tokens, 1);
+        c.apply("admission", "paged").unwrap();
+        c.apply("kv-page-tokens", "16").unwrap();
+        assert_eq!(c.memory.admission, AdmissionPolicy::Paged);
+        assert_eq!(c.memory.kv_page_tokens, 16);
+        assert!(c.apply("kv-page-tokens", "0").is_err());
     }
 
     #[test]

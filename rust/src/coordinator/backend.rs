@@ -18,6 +18,13 @@
 //! a slot's logits depend only on that slot's own cache contents (batch
 //! rows are independent), and `prefill_slot` must leave the target slot in
 //! exactly the state a batched `prefill` would have produced.
+//!
+//! KV *allocation* (worst-case vs paged admission, grow/shrink/preempt —
+//! see `kv_manager`/`scheduler`) deliberately lives outside this trait:
+//! the backend stores cache planes per slot, while residency accounting is
+//! the engine's job. That's also what makes preemption free here — a
+//! preempted slot's stale cache is simply overwritten by the next
+//! `prefill_slot`, identical to ordinary slot recycling.
 
 use anyhow::{Context, Result};
 

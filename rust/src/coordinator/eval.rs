@@ -4,16 +4,26 @@
 //! Avg@32) sample k responses at temperature 1.0 and average accuracy per
 //! item. Evaluation can run in dense mode (Table 1) or under the same KV
 //! compression as training (Table 2's "sparse inference" deployment
-//! scenario).
+//! scenario), and — like the trainer — on either rollout engine
+//! (`EvalOptions::engine`): Avg@k benchmarks have exactly the
+//! skewed-length profile slot recycling exploits, so `continuous` shaves
+//! decode steps without changing a single token (per-task RNG).
+//!
+//! The scoring core (`evaluate_with_backend`) is generic over
+//! `RolloutBackend`, so the engine-dispatch and empty-benchmark guards are
+//! exercised hermetically on the mock backend by `tests/paged_kv.rs`.
 
 use anyhow::Result;
 
-use crate::config::{RolloutMode, SamplingConfig};
+use crate::config::{EngineKind, MemoryConfig, RolloutMode, SamplingConfig};
 use crate::data::benchmarks::{Benchmark, Protocol};
 use crate::data::task::Task;
-use crate::runtime::ModelEngine;
+use crate::runtime::{ModelEngine, ParamsLit};
 
-use super::rollout::RolloutEngine;
+use super::backend::{EngineBackend, RolloutBackend};
+use super::kv_manager::KvMemoryManager;
+use super::rollout::RolloutPolicy;
+use super::scheduler::Scheduler;
 
 /// Result of evaluating one benchmark.
 #[derive(Debug, Clone)]
@@ -26,11 +36,96 @@ pub struct EvalResult {
     pub toks_saving: f64,
 }
 
+impl EvalResult {
+    /// The well-defined result for a benchmark with nothing to score:
+    /// zero items, zero accuracy — never NaN (an unguarded mean over an
+    /// empty benchmark used to poison the suite macro-average).
+    pub fn empty(benchmark: &str) -> EvalResult {
+        EvalResult {
+            benchmark: benchmark.to_string(),
+            accuracy: 0.0,
+            items: 0,
+            samples: 0,
+            mean_response_len: 0.0,
+            toks_saving: 0.0,
+        }
+    }
+}
+
+/// Engine/memory knobs for evaluation, mirroring what the trainer reads
+/// from `ExperimentConfig`. Defaults preserve the original behavior:
+/// static chunking, worst-case admission, token-granular wall.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalOptions {
+    pub engine: EngineKind,
+    pub memory: MemoryConfig,
+}
+
+/// Backend-generic evaluation core: roll out `k` samples per task on the
+/// requested engine and fold per-item accuracy. Returns
+/// [`EvalResult::empty`] — not NaN — when there is nothing to score.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_with_backend<B: RolloutBackend>(
+    policy: &RolloutPolicy,
+    backend: &mut B,
+    engine_kind: EngineKind,
+    sched: &mut Scheduler,
+    kv: &mut KvMemoryManager,
+    benchmark: &str,
+    tasks: &[Task],
+    k: usize,
+    rollout_seed: u64,
+) -> Result<EvalResult> {
+    if tasks.is_empty() || k == 0 {
+        return Ok(EvalResult::empty(benchmark));
+    }
+    // flat sample list: item i sample j -> flat i*k + j; per-task RNG
+    // streams key off the flat id, so every Avg@k sample draws an
+    // independent, reproducible stream on either engine
+    let flat: Vec<(usize, &Task)> = (0..tasks.len() * k)
+        .map(|s| (s, &tasks[s / k]))
+        .collect();
+    let (seqs, _stats) = match engine_kind {
+        EngineKind::Static => {
+            policy.rollout_static_queue(backend, &flat, rollout_seed, sched, kv, 0)?
+        }
+        EngineKind::Continuous => {
+            policy.rollout_continuous(backend, &flat, rollout_seed, sched, kv, 0)?
+        }
+    };
+    let mut correct_per_item = vec![0usize; tasks.len()];
+    let mut total_len = 0usize;
+    let mut acct = crate::compression::KvAccounting::new();
+    for seq in seqs {
+        let item = seq.task_idx / k;
+        if tasks[item].reward(&seq.response_ids) > 0.5 {
+            correct_per_item[item] += 1;
+        }
+        total_len += seq.response_ids.len();
+        acct.merge(&seq.accounting);
+    }
+    let accuracy = correct_per_item
+        .iter()
+        .map(|&c| c as f64 / k as f64)
+        .sum::<f64>()
+        / tasks.len() as f64;
+    Ok(EvalResult {
+        benchmark: benchmark.to_string(),
+        accuracy,
+        items: tasks.len(),
+        samples: tasks.len() * k,
+        mean_response_len: total_len as f64 / (tasks.len() * k) as f64,
+        toks_saving: acct.toks_saving(),
+    })
+}
+
 /// Evaluate `params` on a benchmark under the given rollout mode.
 ///
 /// `limit` caps the number of items (0 = full benchmark) so smoke tests
 /// and quick benches stay fast; EXPERIMENTS.md records which limit a run
-/// used.
+/// used. `opts` selects the rollout engine and memory-wall knobs (the
+/// trainer's `engine` / `admission` / `kv-page-tokens` config keys apply
+/// to evaluation too).
 pub fn evaluate(
     engine: &ModelEngine,
     params: &[f32],
@@ -38,6 +133,7 @@ pub fn evaluate(
     bench: &Benchmark,
     limit: usize,
     seed: u64,
+    opts: &EvalOptions,
 ) -> Result<EvalResult> {
     let m = &engine.manifest;
     let mut tasks = bench.tasks(m.config.prompt_len);
@@ -51,7 +147,8 @@ pub fn evaluate(
         bench.samples_per_item().min(4)
     } else {
         bench.samples_per_item()
-    };
+    }
+    .max(1);
     let sampling = match bench.protocol {
         Protocol::Pass1 => SamplingConfig {
             temperature: 0.0, // greedy
@@ -64,46 +161,39 @@ pub fn evaluate(
             max_response: m.config.max_seq - m.config.prompt_len,
         },
     };
-    let rollout = RolloutEngine::new(engine, mode, sampling);
-    // per-task RNG streams key off (rollout seed, flat sample id), so
-    // every Avg@k sample draws an independent, reproducible stream
-    let rollout_seed = seed ^ 0xE7A1_5EED;
-
-    // flat sample list: item i sample j -> flat i*k + j
-    let flat: Vec<(usize, &Task)> = (0..tasks.len() * k)
-        .map(|s| (s, &tasks[s / k]))
-        .collect();
-    let r = m.shapes.decode_batch;
-    let mut correct_per_item = vec![0usize; tasks.len()];
-    let mut total_len = 0usize;
-    let mut acct = crate::compression::KvAccounting::new();
-    for chunk in flat.chunks(r) {
-        let seqs = rollout.rollout_chunk(params, chunk, rollout_seed)?;
-        for seq in seqs {
-            let item = seq.task_idx / k;
-            if tasks[item].reward(&seq.response_ids) > 0.5 {
-                correct_per_item[item] += 1;
-            }
-            total_len += seq.response_ids.len();
-            acct.merge(&seq.accounting);
-        }
-    }
-    let accuracy = correct_per_item
-        .iter()
-        .map(|&c| c as f64 / k as f64)
-        .sum::<f64>()
-        / tasks.len() as f64;
-    Ok(EvalResult {
-        benchmark: bench.name.to_string(),
-        accuracy,
-        items: tasks.len(),
-        samples: tasks.len() * k,
-        mean_response_len: total_len as f64 / (tasks.len() * k) as f64,
-        toks_saving: acct.toks_saving(),
-    })
+    let policy = RolloutPolicy::new(mode, sampling);
+    let params_lit = ParamsLit::new(params);
+    let mut backend = EngineBackend::new(engine, &params_lit, mode);
+    let mut sched = Scheduler::new(m, mode.is_sparse()).with_admission(opts.memory.admission);
+    // The eval wall exists to drive the engines' admission machinery, not
+    // to throttle accuracy measurement (tokens are width-independent). It
+    // is clamped up so a full decode batch always fits — with default
+    // options the static engine therefore chunks by decode_batch exactly
+    // like the pre-wall eval path did, and a small configured wall can
+    // never turn a previously-working eval into a "stalled" error.
+    let page = opts.memory.kv_page_tokens;
+    let per_seq_pages_tokens = sched.reserve_per_seq.div_ceil(page) * page;
+    let wall = opts
+        .memory
+        .global_kv_tokens
+        .max(per_seq_pages_tokens * m.shapes.decode_batch);
+    let mut kv = KvMemoryManager::with_pages(wall, page);
+    evaluate_with_backend(
+        &policy,
+        &mut backend,
+        opts.engine,
+        &mut sched,
+        &mut kv,
+        bench.name,
+        &tasks,
+        k,
+        seed ^ 0xE7A1_5EED,
+    )
 }
 
 /// Evaluate a full suite; returns (per-benchmark results, macro average).
+/// Zero-item benchmarks are reported but excluded from the macro average
+/// (they carry no signal; averaging them in used to produce NaN).
 pub fn evaluate_suite(
     engine: &ModelEngine,
     params: &[f32],
@@ -111,16 +201,26 @@ pub fn evaluate_suite(
     suite: &[Benchmark],
     limit: usize,
     seed: u64,
+    opts: &EvalOptions,
 ) -> Result<(Vec<EvalResult>, f64)> {
     let mut results = Vec::new();
     for b in suite {
-        let r = evaluate(engine, params, mode, b, limit, seed)?;
+        let r = evaluate(engine, params, mode, b, limit, seed, opts)?;
         println!(
             "  {:<10} acc {:>6.3}  ({} items, {} samples, len {:.1})",
             r.benchmark, r.accuracy, r.items, r.samples, r.mean_response_len
         );
         results.push(r);
     }
-    let avg = results.iter().map(|r| r.accuracy).sum::<f64>() / results.len().max(1) as f64;
+    let counted: Vec<f64> = results
+        .iter()
+        .filter(|r| r.items > 0)
+        .map(|r| r.accuracy)
+        .collect();
+    let avg = if counted.is_empty() {
+        0.0
+    } else {
+        counted.iter().sum::<f64>() / counted.len() as f64
+    };
     Ok((results, avg))
 }

@@ -1,12 +1,31 @@
-//! KV memory manager — the "memory wall" (paper §1).
+//! KV memory manager — the "memory wall" (paper §1), now a page pool.
 //!
-//! Simulates the accelerator's KV-cache capacity as a global token pool.
-//! Sequences must *reserve* their worst-case residency before admission
-//! (exactly the OOM-avoidance policy the paper describes: "rollout batch
-//! sizes must be constrained" under dense caches). Dense sequences reserve
-//! `max_seq` tokens (long-tail worst case); sparse sequences reserve only
-//! `budget + buffer`. The resulting admissible width is what drives the
-//! dense-vs-sparse throughput gap in the benches.
+//! Simulates the accelerator's KV-cache capacity as a global pool of
+//! fixed-size pages (`page_tokens` tokens each; `page_tokens = 1` is the
+//! token-granular degenerate case and reproduces the original whole-token
+//! accounting bit-for-bit). Two admission regimes build on it:
+//!
+//! * **Worst-case reservation** (the seed policy, paper §1's OOM-avoidance
+//!   story): every sequence reserves its worst-case residency up front —
+//!   dense `max_seq`, sparse `budget + buffer` — so admissible width is
+//!   `capacity / worst_case` regardless of what sequences actually hold.
+//! * **Paged residency** (this PR): a sequence is admitted with only the
+//!   pages its prompt needs, `grow`s page-by-page as decode writes land,
+//!   and `shrink`s back to its compressed residency after each compression
+//!   event. Admissible width tracks *actual* residency, which is what
+//!   raises effective rollout width under a fixed budget (Sparrow,
+//!   arXiv:2606.08446; Shadow-Mask, arXiv:2605.06850).
+//!
+//! The trade-off: worst-case admission can never fail mid-decode (width is
+//! paid for at admission), while paged admission can hit the wall on a
+//! `grow` — the scheduler/engine resolve that by preempting the
+//! lowest-progress sequence and requeueing it (see `scheduler.rs`), so the
+//! wall is never breached and a drain is always reachable.
+//!
+//! Accounting is dual: `reserved()` counts *logical tokens* (what callers
+//! asked for), `used_pages()` counts pool pages (what the wall charges).
+//! The gap between `used_pages * page_tokens` and `reserved` is internal
+//! fragmentation (`fragmentation()`).
 
 use std::collections::BTreeMap;
 
@@ -17,24 +36,49 @@ pub type SeqId = u64;
 
 #[derive(Debug)]
 pub struct KvMemoryManager {
-    /// Total KV tokens that may be resident simultaneously.
+    /// Total KV tokens that may be resident simultaneously
+    /// (normalized to a whole number of pages).
     capacity: usize,
+    /// Tokens per page (1 = token-granular, the seed behavior).
+    page_tokens: usize,
+    total_pages: usize,
+    used_pages: usize,
+    /// Logical tokens reserved (sum over live sequences).
     reserved: usize,
     seqs: BTreeMap<SeqId, usize>,
     /// High-water mark of reserved tokens.
     pub peak_reserved: usize,
+    /// High-water mark of pool pages in use.
+    pub peak_used_pages: usize,
     /// Count of rejected admission attempts (pressure signal).
     pub rejections: u64,
+    /// Count of rejected mid-decode `grow` attempts (preemption signal).
+    pub grow_rejections: u64,
 }
 
 impl KvMemoryManager {
+    /// Token-granular pool (page size 1): identical admission arithmetic
+    /// to the original whole-token manager.
     pub fn new(capacity: usize) -> Self {
+        Self::with_pages(capacity, 1)
+    }
+
+    /// Page-granular pool: `capacity` tokens split into pages of
+    /// `page_tokens` (capacity is rounded down to whole pages).
+    pub fn with_pages(capacity: usize, page_tokens: usize) -> Self {
+        assert!(page_tokens >= 1, "page_tokens must be >= 1");
+        let total_pages = capacity / page_tokens;
         KvMemoryManager {
-            capacity,
+            capacity: total_pages * page_tokens,
+            page_tokens,
+            total_pages,
+            used_pages: 0,
             reserved: 0,
             seqs: BTreeMap::new(),
             peak_reserved: 0,
+            peak_used_pages: 0,
             rejections: 0,
+            grow_rejections: 0,
         }
     }
 
@@ -42,12 +86,35 @@ impl KvMemoryManager {
         self.capacity
     }
 
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.used_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.total_pages - self.used_pages
+    }
+
+    /// Pages needed to hold `tokens` resident tokens.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Logical tokens reserved.
     pub fn reserved(&self) -> usize {
         self.reserved
     }
 
+    /// Tokens still allocatable (whole free pages).
     pub fn available(&self) -> usize {
-        self.capacity - self.reserved
+        self.free_pages() * self.page_tokens
     }
 
     /// How many sequences each reserving `per_seq` tokens fit right now.
@@ -55,7 +122,7 @@ impl KvMemoryManager {
         if per_seq == 0 {
             return usize::MAX;
         }
-        self.available() / per_seq
+        self.free_pages() / self.pages_for(per_seq)
     }
 
     /// Reserve `tokens` for a sequence; fails when the wall is hit.
@@ -63,7 +130,8 @@ impl KvMemoryManager {
         if self.seqs.contains_key(&seq) {
             bail!("sequence {seq} already holds a reservation");
         }
-        if tokens > self.available() {
+        let pages = self.pages_for(tokens);
+        if pages > self.free_pages() {
             self.rejections += 1;
             bail!(
                 "KV memory wall: need {tokens}, only {} of {} available",
@@ -71,16 +139,45 @@ impl KvMemoryManager {
                 self.capacity
             );
         }
+        self.used_pages += pages;
         self.reserved += tokens;
         self.peak_reserved = self.peak_reserved.max(self.reserved);
+        self.peak_used_pages = self.peak_used_pages.max(self.used_pages);
         self.seqs.insert(seq, tokens);
         Ok(())
     }
 
-    /// Release a sequence's reservation (finished / evicted).
+    /// Grow a live reservation to `new_tokens` (mid-decode residency
+    /// growth, paged admission). Returns `Ok(false)` — without side
+    /// effects beyond the rejection counter — when the extra pages don't
+    /// fit; the caller preempts and retries. `new_tokens <= current` is a
+    /// no-op success.
+    pub fn grow(&mut self, seq: SeqId, new_tokens: usize) -> Result<bool> {
+        let cur = match self.seqs.get(&seq) {
+            Some(&t) => t,
+            None => bail!("sequence {seq} holds no reservation"),
+        };
+        if new_tokens <= cur {
+            return Ok(true);
+        }
+        let delta_pages = self.pages_for(new_tokens) - self.pages_for(cur);
+        if delta_pages > self.free_pages() {
+            self.grow_rejections += 1;
+            return Ok(false);
+        }
+        self.used_pages += delta_pages;
+        self.reserved += new_tokens - cur;
+        self.peak_reserved = self.peak_reserved.max(self.reserved);
+        self.peak_used_pages = self.peak_used_pages.max(self.used_pages);
+        self.seqs.insert(seq, new_tokens);
+        Ok(true)
+    }
+
+    /// Release a sequence's reservation (finished / evicted / preempted).
     pub fn release(&mut self, seq: SeqId) -> Result<usize> {
         match self.seqs.remove(&seq) {
             Some(tokens) => {
+                self.used_pages -= self.pages_for(tokens);
                 self.reserved -= tokens;
                 Ok(tokens)
             }
@@ -89,16 +186,17 @@ impl KvMemoryManager {
     }
 
     /// Shrink a live reservation (e.g. after compression established a
-    /// tighter bound). Growing is rejected — grow-by-release-and-reserve so
+    /// tighter bound). Growing via `shrink` is rejected — use `grow`, so
     /// the wall check always runs.
     pub fn shrink(&mut self, seq: SeqId, new_tokens: usize) -> Result<()> {
-        match self.seqs.get_mut(&seq) {
-            Some(cur) => {
-                if new_tokens > *cur {
+        match self.seqs.get(&seq) {
+            Some(&cur) => {
+                if new_tokens > cur {
                     bail!("shrink({seq}) would grow {} -> {}", cur, new_tokens);
                 }
-                self.reserved -= *cur - new_tokens;
-                *cur = new_tokens;
+                self.used_pages -= self.pages_for(cur) - self.pages_for(new_tokens);
+                self.reserved -= cur - new_tokens;
+                self.seqs.insert(seq, new_tokens);
                 Ok(())
             }
             None => bail!("sequence {seq} holds no reservation"),
@@ -110,16 +208,34 @@ impl KvMemoryManager {
     }
 
     /// Structural invariants the property tests hold at every step:
-    /// reserved tokens equal the sum over live reservations, never exceed
-    /// capacity, and the high-water mark is monotone-consistent (at least
-    /// the current residency, never above the wall).
+    /// token and page accounting both equal the sums over live
+    /// reservations, pages never exceed the pool, reserved tokens fit in
+    /// the pages charged for them, and the high-water marks are
+    /// monotone-consistent (at least current residency, never above the
+    /// wall).
     pub fn check_invariants(&self) -> Result<()> {
         let sum: usize = self.seqs.values().sum();
         if self.reserved != sum {
             bail!("reserved {} != sum of live reservations {}", self.reserved, sum);
         }
-        if self.reserved > self.capacity {
-            bail!("reserved {} exceeds capacity {}", self.reserved, self.capacity);
+        let page_sum: usize = self.seqs.values().map(|&t| self.pages_for(t)).sum();
+        if self.used_pages != page_sum {
+            bail!("used_pages {} != sum of live page counts {}", self.used_pages, page_sum);
+        }
+        if self.used_pages > self.total_pages {
+            bail!(
+                "used_pages {} exceeds pool {} (wall was breached)",
+                self.used_pages,
+                self.total_pages
+            );
+        }
+        if self.reserved > self.used_pages * self.page_tokens {
+            bail!(
+                "reserved {} tokens exceed charged pages {} x {}",
+                self.reserved,
+                self.used_pages,
+                self.page_tokens
+            );
         }
         if self.peak_reserved < self.reserved {
             bail!(
@@ -135,15 +251,50 @@ impl KvMemoryManager {
                 self.capacity
             );
         }
+        if self.peak_used_pages < self.used_pages {
+            bail!(
+                "peak_used_pages {} below current used_pages {}",
+                self.peak_used_pages,
+                self.used_pages
+            );
+        }
+        if self.peak_used_pages > self.total_pages {
+            bail!(
+                "peak_used_pages {} exceeds pool {} (wall was breached)",
+                self.peak_used_pages,
+                self.total_pages
+            );
+        }
         Ok(())
     }
 
-    /// Utilization in [0, 1].
+    /// Token utilization in [0, 1] (logical tokens / capacity).
     pub fn utilization(&self) -> f64 {
         if self.capacity == 0 {
             0.0
         } else {
             self.reserved as f64 / self.capacity as f64
+        }
+    }
+
+    /// Page occupancy in [0, 1] (pages in use / pool pages).
+    pub fn page_occupancy(&self) -> f64 {
+        if self.total_pages == 0 {
+            0.0
+        } else {
+            self.used_pages as f64 / self.total_pages as f64
+        }
+    }
+
+    /// Internal fragmentation in [0, 1): fraction of charged page tokens
+    /// not backing a logical reservation. 0 when nothing is resident and
+    /// always 0 at page size 1.
+    pub fn fragmentation(&self) -> f64 {
+        let charged = self.used_pages * self.page_tokens;
+        if charged == 0 {
+            0.0
+        } else {
+            1.0 - self.reserved as f64 / charged as f64
         }
     }
 }
@@ -190,6 +341,50 @@ mod tests {
     }
 
     #[test]
+    fn pages_round_up_and_grow_page_by_page() {
+        let mut m = KvMemoryManager::with_pages(64, 16);
+        assert_eq!(m.total_pages(), 4);
+        m.reserve(1, 10).unwrap(); // 1 page
+        assert_eq!(m.used_pages(), 1);
+        assert_eq!(m.available(), 48);
+        // growing within the page costs nothing
+        assert!(m.grow(1, 16).unwrap());
+        assert_eq!(m.used_pages(), 1);
+        // crossing the boundary takes a fresh page
+        assert!(m.grow(1, 17).unwrap());
+        assert_eq!(m.used_pages(), 2);
+        // fragmentation: 17 tokens on 32 charged
+        assert!((m.fragmentation() - (1.0 - 17.0 / 32.0)).abs() < 1e-9);
+        // a second sequence can take the remaining 2 pages but not 3
+        m.reserve(2, 32).unwrap();
+        assert!(!m.grow(2, 33).unwrap());
+        assert_eq!(m.grow_rejections, 1);
+        // shrink frees whole pages only
+        m.shrink(1, 16).unwrap();
+        assert_eq!(m.used_pages(), 3);
+        assert!(m.grow(2, 48).unwrap());
+        m.check_invariants().unwrap();
+        assert_eq!(m.release(1).unwrap(), 16);
+        assert_eq!(m.release(2).unwrap(), 48);
+        assert_eq!(m.used_pages(), 0);
+        assert_eq!(m.reserved(), 0);
+    }
+
+    #[test]
+    fn grow_on_unknown_sequence_is_an_error() {
+        let mut m = KvMemoryManager::with_pages(64, 8);
+        assert!(m.grow(42, 10).is_err());
+    }
+
+    #[test]
+    fn capacity_normalized_to_whole_pages() {
+        let m = KvMemoryManager::with_pages(100, 16);
+        assert_eq!(m.total_pages(), 6);
+        assert_eq!(m.capacity(), 96);
+        assert_eq!(m.admissible(17), 3); // 2 pages each, 6 in the pool
+    }
+
+    #[test]
     fn prop_accounting_conserves() {
         propcheck::quick("kv-conservation", |rng, size| {
             let cap = 64 + size * 8;
@@ -219,6 +414,86 @@ mod tests {
                     return Err("live count mismatch".into());
                 }
                 m.check_invariants().map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_paged_pool_conserves_under_grow_shrink() {
+        // Random reserve/grow/shrink/release interleavings at random page
+        // sizes: pages and tokens both conserve, the pool is never
+        // overdrawn, and failed grows leave no trace.
+        propcheck::quick("kv-paged-conservation", |rng, size| {
+            let page = 1 + rng.below(16);
+            let pool_pages = 4 + rng.below(16 + size);
+            let cap = page * pool_pages;
+            let mut m = KvMemoryManager::with_pages(cap, page);
+            let mut live: Vec<(SeqId, usize)> = vec![];
+            let mut next_id = 0u64;
+            for _ in 0..200 {
+                match if live.is_empty() { 0 } else { rng.below(4) } {
+                    0 => {
+                        next_id += 1;
+                        let want = 1 + rng.below(cap / 2 + 1);
+                        let fits = m.pages_for(want) <= m.free_pages();
+                        let got = m.reserve(next_id, want).is_ok();
+                        if got != fits {
+                            return Err(format!("reserve({want}) = {got}, fits = {fits}"));
+                        }
+                        if got {
+                            live.push((next_id, want));
+                        }
+                    }
+                    1 => {
+                        let k = rng.below(live.len());
+                        let (id, cur) = live[k];
+                        let target = cur + rng.below(2 * page + 1);
+                        let delta = m.pages_for(target) - m.pages_for(cur);
+                        let fits = delta <= m.free_pages();
+                        let grown = m.grow(id, target).map_err(|e| e.to_string())?;
+                        if grown != fits {
+                            return Err(format!("grow({cur}->{target}) = {grown}, fits = {fits}"));
+                        }
+                        if grown {
+                            live[k].1 = target;
+                        }
+                    }
+                    2 => {
+                        let k = rng.below(live.len());
+                        let (id, cur) = live[k];
+                        let target = rng.below(cur + 1);
+                        m.shrink(id, target).map_err(|e| e.to_string())?;
+                        live[k].1 = target;
+                    }
+                    _ => {
+                        let k = rng.below(live.len());
+                        let (id, toks) = live.swap_remove(k);
+                        let freed = m.release(id).map_err(|e| e.to_string())?;
+                        if freed != toks {
+                            return Err(format!("released {freed}, reserved {toks}"));
+                        }
+                    }
+                }
+                let tok_sum: usize = live.iter().map(|(_, t)| t).sum();
+                let page_sum: usize = live.iter().map(|(_, t)| m.pages_for(*t)).sum();
+                if m.reserved() != tok_sum || m.used_pages() != page_sum {
+                    return Err(format!(
+                        "pool out of sync: {}/{} vs {}/{}",
+                        m.reserved(),
+                        m.used_pages(),
+                        tok_sum,
+                        page_sum
+                    ));
+                }
+                m.check_invariants().map_err(|e| e.to_string())?;
+            }
+            // a full drain always reaches the empty pool
+            for (id, _) in live.drain(..) {
+                m.release(id).map_err(|e| e.to_string())?;
+            }
+            if m.used_pages() != 0 || m.reserved() != 0 {
+                return Err("drain left residue".into());
             }
             Ok(())
         });

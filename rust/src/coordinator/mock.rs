@@ -21,6 +21,12 @@
 //! Response lengths vary task-to-task (an EOS pull grows with resident
 //! length plus content hash), producing the skewed long-tail length
 //! distributions the continuous engine exists to exploit.
+//!
+//! Freed slots — finished *or preempted* (paged admission) — keep their
+//! stale cache until the next `prefill_slot` overwrites it; the dead PAD
+//! writes the decode loop feeds them land in that stale cache (or drop as
+//! OOB), exactly like the artifacts' scatter. Content determinism is what
+//! makes a preempted-and-requeued task regenerate bit-identical tokens.
 
 use anyhow::{bail, Result};
 

@@ -28,7 +28,7 @@ pub mod scheduler;
 pub mod trainer;
 
 pub use backend::{EngineBackend, RolloutBackend};
-pub use eval::{evaluate, evaluate_suite, EvalResult};
+pub use eval::{evaluate, evaluate_suite, evaluate_with_backend, EvalOptions, EvalResult};
 pub use kv_manager::KvMemoryManager;
 pub use metrics::Metrics;
 pub use mock::MockModelBackend;

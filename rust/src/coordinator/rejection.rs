@@ -33,19 +33,28 @@ pub fn xi_ratios(logp_old: &[f32], logp_sparse: &[f32]) -> Vec<f64> {
 }
 
 /// Sequence-level rejection weight M^RS (Eq. 6).
+///
+/// A non-finite ξ_t (NaN from a non-finite log-prob upstream, or ±inf
+/// from a degenerate difference) is treated as a support mismatch and
+/// rejects the trajectory. NaN in particular compares false against every
+/// threshold, so an unguarded `x < eps` used to silently *accept* exactly
+/// the trajectories whose correction math had already broken down.
 pub fn verdict(xi: &[f64], eps: f64) -> RejectionVerdict {
     let mut min_xi = f64::INFINITY;
     let mut first_bad = None;
     for (t, &x) in xi.iter().enumerate() {
-        if x < min_xi {
+        if x.is_finite() && x < min_xi {
             min_xi = x;
         }
-        if x < eps && first_bad.is_none() {
+        if (!x.is_finite() || x < eps) && first_bad.is_none() {
             first_bad = Some(t);
         }
     }
     if xi.is_empty() {
         min_xi = 1.0;
+    } else if min_xi == f64::INFINITY {
+        // no finite ratio at all: total support failure
+        min_xi = 0.0;
     }
     RejectionVerdict { accept: first_bad.is_none(), min_xi, first_bad }
 }
@@ -101,6 +110,31 @@ mod tests {
     fn empty_response_accepted() {
         let v = verdict(&[], 1e-4);
         assert!(v.accept);
+    }
+
+    #[test]
+    fn non_finite_xi_is_a_support_mismatch() {
+        // regression: NaN compares false against eps AND min_xi, so a NaN
+        // ξ used to be accepted with min_xi untouched
+        let v = verdict(&[1.0, f64::NAN, 0.9], 1e-4);
+        assert!(!v.accept, "NaN ξ must reject");
+        assert_eq!(v.first_bad, Some(1));
+        assert!((v.min_xi - 0.9).abs() < 1e-12, "min over finite entries");
+
+        let v = verdict(&[f64::INFINITY, 1.0], 1e-4);
+        assert!(!v.accept, "infinite ξ must reject");
+        assert_eq!(v.first_bad, Some(0));
+
+        // all non-finite: reject with a well-defined (zero-support) min
+        let v = verdict(&[f64::NAN, f64::NAN], 1e-4);
+        assert!(!v.accept);
+        assert_eq!(v.min_xi, 0.0);
+        assert!(!v.min_xi.is_nan());
+
+        // a NaN log-prob pair produces NaN ξ end to end
+        let xi = xi_ratios(&[f32::NAN, -1.0], &[-1.0, -1.0]);
+        assert!(xi[0].is_nan());
+        assert!(!verdict(&xi, 1e-4).accept);
     }
 
     #[test]

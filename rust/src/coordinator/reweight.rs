@@ -84,7 +84,19 @@ pub fn pack(manifest: &Manifest, seqs: &[&TrainSeq]) -> TrainBatch {
         for r in 0..resp_len {
             let col = seq.prompt_len + r;
             batch.loss_mask[row * t + col] = 1.0;
-            batch.xi[row * t + col] = seq.xi[r].min(XI_CAP).max(0.0) as f32;
+            // Non-finite ξ must not reach the objective: f64::min passes
+            // NaN through to the *other* operand, so an unguarded
+            // `.min(XI_CAP)` used to turn NaN into the full 1e4 weight.
+            // NaN / -inf carry no information -> 0; +inf means the dense
+            // policy overwhelmingly prefers the token -> the cap.
+            let xi = seq.xi[r];
+            batch.xi[row * t + col] = if xi.is_finite() {
+                xi.clamp(0.0, XI_CAP) as f32
+            } else if xi == f64::INFINITY {
+                XI_CAP as f32
+            } else {
+                0.0
+            };
             batch.logp_old[row * t + col] = seq.logp_old[r];
         }
     }
@@ -125,7 +137,37 @@ mod tests {
                 return Some(m);
             }
         }
-        None
+        // Hermetic fallback: pack() only reads shapes.train_batch and
+        // config.max_seq, so an in-memory manifest keeps these regression
+        // tests running with no artifacts built.
+        Some(Manifest {
+            dir: std::path::PathBuf::from("."),
+            config: crate::runtime::manifest::ModelDims {
+                name: "mem".into(),
+                vocab: 32,
+                d_model: 8,
+                n_layers: 1,
+                n_heads: 1,
+                d_ff: 16,
+                d_head: 8,
+                max_seq: 32,
+                prompt_len: 8,
+                n_params: 0,
+            },
+            shapes: crate::runtime::manifest::RolloutDims {
+                decode_batch: 4,
+                train_batch: 4,
+                budget: 12,
+                buffer: 4,
+                alpha: 4,
+                lam: 0.5,
+                sinks: 2,
+                sparse_capacity: 16,
+                dense_capacity: 32,
+            },
+            params: vec![],
+            entries: std::collections::BTreeMap::new(),
+        })
     }
 
     fn mk_seq(prompt: usize, resp: usize, accept: bool) -> TrainSeq {
@@ -183,6 +225,21 @@ mod tests {
         assert_eq!(b.xi[3], 0.5);
         assert_eq!(b.xi[4], 0.0);
         let _ = t;
+    }
+
+    #[test]
+    fn non_finite_xi_clamped_in_pack() {
+        // regression: NaN.min(XI_CAP) == XI_CAP, so a NaN ξ used to enter
+        // the objective with the full 1e4 weight
+        let m = tiny_manifest().unwrap();
+        let mut s = mk_seq(2, 4, true);
+        s.xi = vec![f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 2.0];
+        let b = pack(&m, &[&s]);
+        assert_eq!(b.xi[2], 0.0, "NaN must carry zero weight");
+        assert_eq!(b.xi[3], XI_CAP as f32, "+inf clamps to the cap");
+        assert_eq!(b.xi[4], 0.0, "-inf must carry zero weight");
+        assert_eq!(b.xi[5], 2.0);
+        assert!(b.xi.iter().all(|x| x.is_finite()));
     }
 
     #[test]

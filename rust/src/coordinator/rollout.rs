@@ -164,6 +164,15 @@ pub struct RolloutStats {
     /// Max KV tokens reserved simultaneously (continuous only; the
     /// invariant tests check this never exceeds the wall).
     pub max_reserved_kv: usize,
+    /// Max pool pages in use simultaneously (continuous only; page
+    /// occupancy = this over the manager's `total_pages`).
+    pub max_used_pages: usize,
+    /// Max concurrently occupied decode slots at any step (the admitted
+    /// width the paged-vs-worst-case benches compare).
+    pub peak_live_slots: usize,
+    /// Sequences preempted and requeued by a paged-admission grow stall
+    /// (0 under worst-case admission).
+    pub preemptions: usize,
 }
 
 impl RolloutStats {
@@ -196,6 +205,9 @@ impl RolloutStats {
         self.prefills += o.prefills;
         self.slot_prefills += o.slot_prefills;
         self.max_reserved_kv = self.max_reserved_kv.max(o.max_reserved_kv);
+        self.max_used_pages = self.max_used_pages.max(o.max_used_pages);
+        self.peak_live_slots = self.peak_live_slots.max(o.peak_live_slots);
+        self.preemptions += o.preemptions;
     }
 }
 
@@ -366,6 +378,7 @@ impl RolloutPolicy {
 
             // one decode step over the whole batch
             let occupied = active.iter().filter(|&&a| a).count();
+            stats.peak_live_slots = stats.peak_live_slots.max(occupied);
             let step_tokens: Vec<i32> = (0..r)
                 .map(|s| if s < n { tokens[s] } else { PAD })
                 .collect();
@@ -407,14 +420,29 @@ impl RolloutPolicy {
         let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
         let mut stats = RolloutStats::default();
         let mut base = seq_id_base;
+        // Predicted worst-case residency per task: a chunk member's cache
+        // never holds more than its prompt, max_response generated tokens,
+        // and one trailing frozen-slot PAD write (nor more than the
+        // per-seq capacity bound). Paged admission sizes chunks by this
+        // instead of the global worst case; worst-case admission ignores
+        // it.
+        let residency: Vec<usize> = tasks
+            .iter()
+            .map(|(_, t)| {
+                (t.prompt_ids.len() + self.sampling.max_response + 1)
+                    .min(sched.reserve_per_seq)
+            })
+            .collect();
         while !pending.is_empty() {
-            let Some(chunk) = sched.next_chunk(&mut pending, kv, base) else {
+            let Some(chunk) = sched.next_chunk(&mut pending, kv, base, &residency) else {
                 bail!(
                     "static rollout stalled: {} pending but nothing admissible \
                      (static batching drains synchronously)",
                     pending.len()
                 );
             };
+            stats.max_reserved_kv = stats.max_reserved_kv.max(kv.reserved());
+            stats.max_used_pages = stats.max_used_pages.max(kv.used_pages());
             let chunk_tasks: Vec<(usize, &Task)> =
                 chunk.items.iter().map(|&i| tasks[i]).collect();
             let (seqs, cstats) = self.rollout_static(b, &chunk_tasks, seed)?;
@@ -466,6 +494,18 @@ impl RolloutPolicy {
             return Ok((vec![], stats));
         }
 
+        // Paged admission must be able to grow a lone sequence to its
+        // worst-case residency, or the preempt/requeue path could thrash
+        // forever on a wall that cannot hold even one sequence.
+        if kv.pages_for(sched.reserve_per_seq) > kv.total_pages() {
+            bail!(
+                "continuous rollout deadlock: one sequence may need {} KV tokens \
+                 but the wall holds only {}",
+                sched.reserve_per_seq,
+                kv.capacity()
+            );
+        }
+
         let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
         let mut queue: VecDeque<usize> = (0..n).collect();
         let mut slots: Vec<Option<LiveSeq>> = (0..r).map(|_| None).collect();
@@ -478,7 +518,7 @@ impl RolloutPolicy {
         let mut w = 0usize;
         while w < r && !queue.is_empty() {
             let pos = queue[0];
-            if !sched.try_admit(kv, seq_id_base + pos as u64) {
+            if !sched.try_admit(kv, seq_id_base + pos as u64, tasks[pos].1.prompt_ids.len()) {
                 break;
             }
             queue.pop_front();
@@ -549,7 +589,8 @@ impl RolloutPolicy {
                     continue;
                 }
                 while let Some(&pos) = queue.front() {
-                    if !sched.try_admit(kv, seq_id_base + pos as u64) {
+                    if !sched.try_admit(kv, seq_id_base + pos as u64, tasks[pos].1.prompt_ids.len())
+                    {
                         break; // memory wall: retry after future releases
                     }
                     queue.pop_front();
@@ -630,12 +671,56 @@ impl RolloutPolicy {
                             let live = slots[slot].as_mut().expect("masked slot occupied");
                             live.gen.accounting.compression(capacity - budget);
                             lens[slot] = budget as i32;
+                            // paged admission: the freed residency returns
+                            // to the pool immediately (no-op worst-case)
+                            sched.compressed(kv, seq_id_base + live.pos as u64, budget)?;
                         }
                     }
                 }
             }
 
+            // ---- paged growth: every occupied slot must hold pages for
+            // its next cache write. A grow refused by the wall preempts
+            // the lowest-progress live sequence (possibly the grower
+            // itself) and requeues it — per-task RNG makes the rerun
+            // token-identical, so preemption costs decode steps but never
+            // changes outputs. (Worst-case admission: grow is a no-op.)
+            for slot in 0..r {
+                loop {
+                    let Some(live) = slots[slot].as_ref() else { break };
+                    let pos = live.pos;
+                    let need = lens[slot] as usize + 1;
+                    if sched.grow(kv, seq_id_base + pos as u64, need)? {
+                        break;
+                    }
+                    let victim = (0..r)
+                        .filter_map(|s| {
+                            slots[s]
+                                .as_ref()
+                                .map(|l| (l.gen.response_ids.len(), l.pos, s))
+                        })
+                        .min()
+                        .expect("the grower itself is live")
+                        .2;
+                    let v = slots[victim].take().expect("victim occupied");
+                    sched.preempt(kv, seq_id_base + v.pos as u64)?;
+                    queue.push_front(v.pos);
+                    tokens[victim] = PAD;
+                    stats.preemptions += 1;
+                    if victim == slot {
+                        break; // grower evicted: its slot is free now
+                    }
+                }
+            }
+            debug_assert!(kv.check_invariants().is_ok(), "wall invariants broken mid-rollout");
+            stats.max_reserved_kv = stats.max_reserved_kv.max(kv.reserved());
+            stats.max_used_pages = stats.max_used_pages.max(kv.used_pages());
+
             // ---- one decode step over the mixed batch -------------------
+            // (recount: paged growth may have preempted slots; the guard
+            // above guarantees at least one survivor)
+            let occupied = slots.iter().filter(|s| s.is_some()).count();
+            stats.peak_live_slots = stats.peak_live_slots.max(occupied);
             logp = b.decode(&lens, &abs_pos, &tokens)?;
             stats.decode_steps += 1;
             stats.occupied_slot_steps += occupied;

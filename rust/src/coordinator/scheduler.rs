@@ -1,26 +1,42 @@
 //! Memory-aware rollout scheduler.
 //!
 //! Packs pending prompts into the decode batch subject to the KV memory
-//! wall: every admitted sequence first reserves its worst-case residency
-//! with the `KvMemoryManager` (dense: `max_seq`; sparse: `budget+buffer`).
-//! The decode artifact is compiled for a fixed slot width R, so admission
-//! is bounded by `min(R, admissible, pending)` — the admissible term is
-//! exactly where dense rollouts lose throughput (paper §1: "rollout batch
-//! sizes must be constrained" to dodge long-tail OOM).
+//! wall. Two *admission policies* decide what a sequence is charged
+//! (`config::AdmissionPolicy`):
+//!
+//! * **Worst-case** (seed behavior, default): every admitted sequence
+//!   reserves its worst-case residency up front (dense: `max_seq`; sparse:
+//!   `budget+buffer`). Admission can never fail mid-decode, but width is
+//!   `capacity / worst_case` — exactly where dense rollouts lose
+//!   throughput (paper §1: "rollout batch sizes must be constrained" to
+//!   dodge long-tail OOM).
+//! * **Paged**: a sequence is admitted with only the pages its prompt
+//!   needs, `grow`s page-by-page as decode writes land, and shrinks to the
+//!   compressed residency after each compression event (`compressed`).
+//!   Width tracks *actual* residency — the admissible-batch gain the paper
+//!   attributes to sparse caches applies to both modes. The cost: a `grow`
+//!   can hit the wall mid-decode; the continuous engine resolves it by
+//!   preempting the lowest-progress sequence (`preempt`) and requeueing
+//!   it, so the wall is never breached and a drain is always reachable.
 //!
 //! Two admission granularities serve the two rollout engines:
 //!
 //! * **Chunk-level** (`next_chunk` / `finish_chunk`, static engine): a
 //!   whole chunk reserves together and releases together when the slowest
-//!   sequence in it finishes. Simple, but every early finisher's KV stays
-//!   reserved (and its decode slot idles) until the chunk drains.
-//! * **Sequence-level** (`try_admit` / `release_seq`, continuous engine):
-//!   each sequence reserves on admission and releases the moment it
-//!   finishes, letting the engine refill the freed slot immediately. The
-//!   closed-form `predicted_decode_steps` models the resulting schedule
-//!   (greedy earliest-free-slot, queue order) so benches and property
-//!   tests can check the engine step-for-step.
+//!   sequence in it finishes. Under paged admission the chunk cannot be
+//!   preempted, so each member reserves its *predicted* residency
+//!   (`min(prompt + max_response, worst_case)`, page-rounded) — still a
+//!   safe bound, but per-sequence-tight, so chunks are sized by predicted
+//!   paged residency instead of the global worst case.
+//! * **Sequence-level** (`try_admit` / `grow` / `release_seq`, continuous
+//!   engine): each sequence reserves on admission and releases the moment
+//!   it finishes, letting the engine refill the freed slot immediately.
+//!   The closed-form `predicted_decode_steps` models the worst-case
+//!   schedule (greedy earliest-free-slot, queue order) step-exactly; under
+//!   paged admission the effective width is data-dependent, so the closed
+//!   forms bound it via `predicted_decode_steps_with` (see `width_paged`).
 
+use crate::config::AdmissionPolicy;
 use crate::runtime::Manifest;
 
 use super::kv_manager::{KvMemoryManager, SeqId};
@@ -31,7 +47,8 @@ pub struct Chunk {
     /// Indices into the pending queue, one per occupied slot (slot i of
     /// the decode batch holds pending[task_of_slot[i]]).
     pub items: Vec<usize>,
-    /// Reservation per sequence this chunk was admitted with.
+    /// Worst-case reservation bound the chunk was admitted under (paged
+    /// chunks reserve per-member predicted residency instead).
     pub reserve_per_seq: usize,
 }
 
@@ -46,11 +63,15 @@ pub struct SchedulerStats {
     pub kv_utilization_sum: f64,
     /// Sequence-level admissions (continuous engine).
     pub seq_admissions: usize,
-    /// Sequence-level releases (continuous engine).
+    /// Sequence-level releases (continuous engine; includes preemptions).
     pub seq_releases: usize,
     /// Admission attempts refused by the memory wall (continuous engine:
     /// a freed slot had to idle because no KV could be reserved).
     pub admit_stalls: usize,
+    /// Mid-decode grow attempts refused by the wall (paged admission).
+    pub grow_stalls: usize,
+    /// Sequences preempted and requeued to resolve a grow stall.
+    pub preemptions: usize,
 }
 
 impl SchedulerStats {
@@ -80,50 +101,110 @@ impl SchedulerStats {
 pub struct Scheduler {
     /// Decode slot width (from the manifest).
     pub slots: usize,
-    /// Worst-case KV tokens one sequence may hold.
+    /// Worst-case KV tokens one sequence may hold (dense: `max_seq`;
+    /// sparse: `budget+buffer`). Under paged admission this is the growth
+    /// *ceiling*, not the admission charge.
     pub reserve_per_seq: usize,
+    /// What a sequence is charged at admission (see module docs).
+    pub admission: AdmissionPolicy,
     pub stats: SchedulerStats,
 }
 
 impl Scheduler {
     /// `sparse` selects the reservation bound (the whole memory-wall
     /// story is this one line: capacity-bounded vs length-bounded).
+    /// Defaults to worst-case admission — the seed behavior.
     pub fn new(manifest: &Manifest, sparse: bool) -> Self {
         let reserve = if sparse {
             manifest.shapes.sparse_capacity
         } else {
             manifest.config.max_seq
         };
+        Self::worst_case(manifest.shapes.decode_batch, reserve)
+    }
+
+    /// Bare worst-case scheduler (tests/benches construct these directly).
+    pub fn worst_case(slots: usize, reserve_per_seq: usize) -> Self {
         Scheduler {
-            slots: manifest.shapes.decode_batch,
-            reserve_per_seq: reserve,
+            slots,
+            reserve_per_seq,
+            admission: AdmissionPolicy::WorstCase,
             stats: SchedulerStats::default(),
+        }
+    }
+
+    /// Select the admission policy (builder style).
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> Self {
+        self.admission = admission;
+        self
+    }
+
+    /// Tokens a fresh sequence with `prompt_tokens` of prompt is charged
+    /// at admission. Worst-case: the full bound. Paged: the prompt plus
+    /// the first decode write (page-rounded by the manager).
+    pub fn admit_reserve(&self, prompt_tokens: usize) -> usize {
+        match self.admission {
+            AdmissionPolicy::WorstCase => self.reserve_per_seq,
+            AdmissionPolicy::Paged => (prompt_tokens + 1).min(self.reserve_per_seq),
         }
     }
 
     /// Admit the next chunk from `pending` (indices not yet scheduled).
     /// Reserves KV for every admitted sequence; returns None when nothing
     /// can be admitted (caller should drain running chunks first).
+    ///
+    /// `residency[i]` is the predicted worst-case residency of pending
+    /// item value `i` (task position) — `min(prompt + max_response,
+    /// reserve_per_seq)`. Only paged admission reads it; worst-case
+    /// callers may pass `&[]`.
     pub fn next_chunk(
         &mut self,
         pending: &mut Vec<usize>,
         kv: &mut KvMemoryManager,
         seq_id_base: u64,
+        residency: &[usize],
     ) -> Option<Chunk> {
         if pending.is_empty() {
             return None;
         }
-        let width = self
-            .slots
-            .min(kv.admissible(self.reserve_per_seq))
-            .min(pending.len());
+        let member = |item: usize| -> usize {
+            residency
+                .get(item)
+                .copied()
+                .unwrap_or(self.reserve_per_seq)
+                .min(self.reserve_per_seq)
+        };
+        let width = match self.admission {
+            AdmissionPolicy::WorstCase => self
+                .slots
+                .min(kv.admissible(self.reserve_per_seq))
+                .min(pending.len()),
+            AdmissionPolicy::Paged => {
+                // greedy prefix fill by predicted per-member residency
+                let mut free = kv.free_pages();
+                let mut w = 0usize;
+                for &item in pending.iter().take(self.slots) {
+                    let pages = kv.pages_for(member(item));
+                    if pages > free {
+                        break;
+                    }
+                    free -= pages;
+                    w += 1;
+                }
+                w
+            }
+        };
         if width == 0 {
             return None;
         }
         let items: Vec<usize> = pending.drain(..width).collect();
-        for (slot, _) in items.iter().enumerate() {
-            kv.reserve(seq_id_base + slot as u64, self.reserve_per_seq)
-                .expect("admissible() guaranteed room");
+        for (slot, &item) in items.iter().enumerate() {
+            let reserve = match self.admission {
+                AdmissionPolicy::WorstCase => self.reserve_per_seq,
+                AdmissionPolicy::Paged => member(item),
+            };
+            kv.reserve(seq_id_base + slot as u64, reserve)
+                .expect("admission width guaranteed room");
         }
         self.stats.chunks += 1;
         self.stats.scheduled_seqs += width;
@@ -140,18 +221,80 @@ impl Scheduler {
     }
 
     /// Sequence-level admission (continuous engine): reserve this
-    /// sequence's worst-case KV, or refuse without side effects beyond the
-    /// stall counter when the wall is full. Refusal is not an error — the
-    /// engine keeps decoding and retries after the next release.
-    pub fn try_admit(&mut self, kv: &mut KvMemoryManager, seq: SeqId) -> bool {
-        if kv.admissible(self.reserve_per_seq) == 0 {
+    /// sequence's admission charge (worst-case bound, or prompt pages when
+    /// paged), or refuse without side effects beyond the stall counter
+    /// when the wall is full. Refusal is not an error — the engine keeps
+    /// decoding and retries after the next release.
+    ///
+    /// Paged admission keeps **one page of headroom** whenever other
+    /// sequences are live: admitting flush against the wall guarantees the
+    /// next grow stalls and the newcomer (lowest progress) is immediately
+    /// preempted — a pure admit/preempt thrash cycle. With an empty pool
+    /// the full pool is usable (progress guarantee).
+    pub fn try_admit(
+        &mut self,
+        kv: &mut KvMemoryManager,
+        seq: SeqId,
+        prompt_tokens: usize,
+    ) -> bool {
+        let want = self.admit_reserve(prompt_tokens);
+        let ok = match self.admission {
+            AdmissionPolicy::WorstCase => kv.admissible(want) > 0,
+            AdmissionPolicy::Paged => {
+                let pages = kv.pages_for(want);
+                if kv.live_sequences() == 0 {
+                    pages <= kv.free_pages()
+                } else {
+                    pages < kv.free_pages()
+                }
+            }
+        };
+        if !ok {
             self.stats.admit_stalls += 1;
             return false;
         }
-        kv.reserve(seq, self.reserve_per_seq)
-            .expect("admissible() guaranteed room");
+        kv.reserve(seq, want).expect("admission check guaranteed room");
         self.stats.seq_admissions += 1;
         true
+    }
+
+    /// Grow a live sequence's reservation to cover `need_tokens` resident
+    /// tokens (paged admission only; worst-case reservations already cover
+    /// every reachable residency). Returns false when the wall is full —
+    /// the engine preempts a sequence and retries.
+    pub fn grow(
+        &mut self,
+        kv: &mut KvMemoryManager,
+        seq: SeqId,
+        need_tokens: usize,
+    ) -> anyhow::Result<bool> {
+        debug_assert!(
+            need_tokens <= self.reserve_per_seq,
+            "grow past the per-seq bound: {need_tokens} > {}",
+            self.reserve_per_seq
+        );
+        if self.admission == AdmissionPolicy::WorstCase {
+            return Ok(true);
+        }
+        let grown = kv.grow(seq, need_tokens)?;
+        if !grown {
+            self.stats.grow_stalls += 1;
+        }
+        Ok(grown)
+    }
+
+    /// Shrink a live sequence's reservation to its post-compression
+    /// residency (paged admission; no-op for worst-case).
+    pub fn compressed(
+        &mut self,
+        kv: &mut KvMemoryManager,
+        seq: SeqId,
+        kept_tokens: usize,
+    ) -> anyhow::Result<()> {
+        if self.admission == AdmissionPolicy::WorstCase {
+            return Ok(());
+        }
+        kv.shrink(seq, kept_tokens)
     }
 
     /// Sequence-level release (continuous engine): frees the reservation
@@ -167,17 +310,65 @@ impl Scheduler {
         Ok(tokens)
     }
 
+    /// Preempt a live sequence to resolve a grow stall: release its pages
+    /// and count it. The engine requeues the task; per-task RNG makes the
+    /// rerun token-identical, so preemption costs decode steps but never
+    /// changes outputs.
+    pub fn preempt(&mut self, kv: &mut KvMemoryManager, seq: SeqId) -> anyhow::Result<usize> {
+        let tokens = self.release_seq(kv, seq)?;
+        self.stats.preemptions += 1;
+        Ok(tokens)
+    }
+
     /// Number of chunks needed for `n` sequences on an idle manager —
-    /// the closed-form the throughput benches check against.
+    /// the closed-form the throughput benches check against (worst-case
+    /// admission at page size 1).
     pub fn predicted_chunks(&self, n: usize, kv_capacity: usize) -> usize {
         let width = self.slots.min(kv_capacity / self.reserve_per_seq.max(1)).max(1);
         n.div_ceil(width)
     }
 
+    /// Effective decode width for a given per-sequence reservation on an
+    /// idle token-granular wall of `kv_capacity`.
+    fn width_for(&self, per_seq: usize, kv_capacity: usize) -> usize {
+        self.slots.min(kv_capacity / per_seq.max(1)).max(1)
+    }
+
+    /// Effective width under paged admission at mean residency
+    /// `mean_residency` tokens: the width model the paged benches report
+    /// against. Paged width is data-dependent (residency changes every
+    /// step), so this is an estimate, not a step-exact closed form.
+    pub fn width_paged(&self, kv: &KvMemoryManager, mean_residency: usize) -> usize {
+        self.slots
+            .min(kv.total_pages() / kv.pages_for(mean_residency.max(1)).max(1))
+            .max(1)
+    }
+
     /// Decode steps the continuous engine needs for sequences whose
     /// response lengths are `response_lens` (queue order), on an idle
-    /// manager of `kv_capacity`: the list-scheduling makespan of the
-    /// per-sequence decode costs over the effective width.
+    /// manager of `kv_capacity`, with each sequence reserving `per_seq`
+    /// tokens: the list-scheduling makespan of the per-sequence decode
+    /// costs over the effective width.
+    pub fn predicted_decode_steps_with(
+        &self,
+        response_lens: &[usize],
+        kv_capacity: usize,
+        per_seq: usize,
+    ) -> usize {
+        if response_lens.is_empty() {
+            return 0;
+        }
+        let width = self.width_for(per_seq, kv_capacity).min(response_lens.len());
+        let mut busy = vec![0usize; width];
+        for &len in response_lens {
+            let i = (0..width).min_by_key(|&i| busy[i]).expect("width >= 1");
+            busy[i] += len.saturating_sub(1);
+        }
+        busy.into_iter().max().unwrap_or(0)
+    }
+
+    /// Decode steps the continuous engine needs under worst-case
+    /// admission (step-exact; see `predicted_decode_steps_with`).
     ///
     /// A sequence generating L tokens occupies its slot for L-1 decode
     /// steps (the first token comes from prefill logits; the last token is
@@ -186,20 +377,7 @@ impl Scheduler {
     /// recycling does, so this is step-exact, and the property tests hold
     /// the engine to it.
     pub fn predicted_decode_steps(&self, response_lens: &[usize], kv_capacity: usize) -> usize {
-        if response_lens.is_empty() {
-            return 0;
-        }
-        let width = self
-            .slots
-            .min(kv_capacity / self.reserve_per_seq.max(1))
-            .max(1)
-            .min(response_lens.len());
-        let mut busy = vec![0usize; width];
-        for &len in response_lens {
-            let i = (0..width).min_by_key(|&i| busy[i]).expect("width >= 1");
-            busy[i] += len.saturating_sub(1);
-        }
-        busy.into_iter().max().unwrap_or(0)
+        self.predicted_decode_steps_with(response_lens, kv_capacity, self.reserve_per_seq)
     }
 
     /// Decode steps the static engine needs for the same queue: each chunk
@@ -210,10 +388,7 @@ impl Scheduler {
         response_lens: &[usize],
         kv_capacity: usize,
     ) -> usize {
-        let width = self
-            .slots
-            .min(kv_capacity / self.reserve_per_seq.max(1))
-            .max(1);
+        let width = self.width_for(self.reserve_per_seq, kv_capacity);
         response_lens
             .chunks(width)
             .map(|c| c.iter().max().copied().unwrap_or(0).saturating_sub(1))
@@ -232,7 +407,7 @@ mod tests {
     }
 
     fn mk(slots: usize, reserve: usize) -> Scheduler {
-        Scheduler { slots, reserve_per_seq: reserve, stats: SchedulerStats::default() }
+        Scheduler::worst_case(slots, reserve)
     }
 
     #[test]
@@ -241,16 +416,40 @@ mod tests {
         let mut kv = KvMemoryManager::new(2048);
         let mut dense = mk(slots, max_seq);
         let mut pending: Vec<usize> = (0..16).collect();
-        let c = dense.next_chunk(&mut pending, &mut kv, 0).unwrap();
+        let c = dense.next_chunk(&mut pending, &mut kv, 0, &[]).unwrap();
         assert_eq!(c.items.len(), 9); // 2048 / 208
         dense.finish_chunk(&c, &mut kv, 0);
         assert_eq!(kv.reserved(), 0);
 
         let mut sparse = mk(slots, sparse_cap);
         let mut pending: Vec<usize> = (0..64).collect();
-        let c = sparse.next_chunk(&mut pending, &mut kv, 100).unwrap();
+        let c = sparse.next_chunk(&mut pending, &mut kv, 100, &[]).unwrap();
         assert_eq!(c.items.len(), 16); // slot-limited, not memory-limited
         sparse.finish_chunk(&c, &mut kv, 100);
+    }
+
+    #[test]
+    fn paged_chunks_admit_by_predicted_residency() {
+        // worst case 160/seq on a 480 wall admits 3; predicted residencies
+        // of 80 admit 6 (slot-capped at 8)
+        let mut kv = KvMemoryManager::with_pages(480, 16);
+        let mut s = mk(8, 160).with_admission(AdmissionPolicy::Paged);
+        let residency = vec![80usize; 12];
+        let mut pending: Vec<usize> = (0..12).collect();
+        let c = s.next_chunk(&mut pending, &mut kv, 0, &residency).unwrap();
+        assert_eq!(c.items.len(), 6);
+        assert_eq!(kv.reserved(), 6 * 80);
+        kv.check_invariants().unwrap();
+        s.finish_chunk(&c, &mut kv, 0);
+        assert_eq!(kv.reserved(), 0);
+
+        // mixed residencies: greedy prefix fill stops at the wall
+        let residency = vec![200usize, 200, 200, 200];
+        let mut pending: Vec<usize> = (0..4).collect();
+        let c = s.next_chunk(&mut pending, &mut kv, 0, &residency).unwrap();
+        // 200 tokens = 13 pages; 30 pages in pool -> 2 fit
+        assert_eq!(c.items.len(), 2);
+        s.finish_chunk(&c, &mut kv, 0);
     }
 
     #[test]
@@ -266,7 +465,7 @@ mod tests {
             let mut chunks = 0usize;
             let mut scheduled = 0usize;
             while !pending.is_empty() {
-                match sched.next_chunk(&mut pending, &mut kv, 1000) {
+                match sched.next_chunk(&mut pending, &mut kv, 1000, &[]) {
                     Some(c) => {
                         chunks += 1;
                         scheduled += c.items.len();
@@ -301,7 +500,7 @@ mod tests {
         let mut kv = KvMemoryManager::new(208 * 4);
         let mut s = mk(8, 208);
         let mut pending: Vec<usize> = (0..8).collect();
-        let c = s.next_chunk(&mut pending, &mut kv, 0).unwrap();
+        let c = s.next_chunk(&mut pending, &mut kv, 0, &[]).unwrap();
         assert_eq!(c.items.len(), 4);
         assert!((s.stats.mean_slot_utilization() - 0.5).abs() < 1e-9);
         assert!((s.stats.mean_kv_utilization() - 1.0).abs() < 1e-9);
@@ -311,22 +510,65 @@ mod tests {
     fn seq_admission_respects_wall_and_counts_stalls() {
         let mut kv = KvMemoryManager::new(100);
         let mut s = mk(8, 40);
-        assert!(s.try_admit(&mut kv, 1));
-        assert!(s.try_admit(&mut kv, 2));
+        assert!(s.try_admit(&mut kv, 1, 10));
+        assert!(s.try_admit(&mut kv, 2, 10));
         // 80 of 100 reserved: a third does not fit
-        assert!(!s.try_admit(&mut kv, 3));
+        assert!(!s.try_admit(&mut kv, 3, 10));
         assert_eq!(s.stats.admit_stalls, 1);
         assert_eq!(s.stats.live_seqs(), 2);
         assert_eq!(s.release_seq(&mut kv, 1).unwrap(), 40);
-        assert!(s.try_admit(&mut kv, 3));
+        assert!(s.try_admit(&mut kv, 3, 10));
         assert_eq!(s.stats.seq_admissions, 3);
+    }
+
+    #[test]
+    fn paged_admission_charges_prompt_and_grows() {
+        let mut kv = KvMemoryManager::with_pages(100, 10);
+        let mut s = mk(8, 40).with_admission(AdmissionPolicy::Paged);
+        // worst-case would admit 2 (40 each); paged admits 11-token
+        // prompts (2 pages each) — 4 of them, keeping one page of growth
+        // headroom once sequences are live
+        for id in 1..=4 {
+            assert!(s.try_admit(&mut kv, id, 10), "seq {id} refused");
+        }
+        assert_eq!(kv.used_pages(), 8);
+        // 2 pages free but 2 needed + headroom: refused
+        assert!(!s.try_admit(&mut kv, 5, 10));
+        assert_eq!(s.stats.admit_stalls, 1);
+        // growth can consume the headroom page by page
+        assert!(s.grow(&mut kv, 1, 21).unwrap());
+        assert!(s.grow(&mut kv, 2, 21).unwrap());
+        assert_eq!(kv.free_pages(), 0);
+        // pool exhausted: further growth stalls
+        assert!(!s.grow(&mut kv, 3, 21).unwrap());
+        assert_eq!(s.stats.grow_stalls, 1);
+        // preempting a sequence frees pages for the grower
+        assert_eq!(s.preempt(&mut kv, 4).unwrap(), 11);
+        assert_eq!(s.stats.preemptions, 1);
+        assert!(s.grow(&mut kv, 3, 21).unwrap());
+        // compression shrink releases pages again
+        s.compressed(&mut kv, 1, 5).unwrap();
+        assert_eq!(kv.free_pages(), 3);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn worst_case_grow_and_compressed_are_no_ops() {
+        let mut kv = KvMemoryManager::new(100);
+        let mut s = mk(4, 40);
+        assert!(s.try_admit(&mut kv, 1, 10));
+        assert_eq!(kv.reserved(), 40);
+        assert!(s.grow(&mut kv, 1, 39).unwrap());
+        s.compressed(&mut kv, 1, 5).unwrap();
+        assert_eq!(kv.reserved(), 40, "worst-case reservation must not move");
+        assert_eq!(s.stats.grow_stalls, 0);
     }
 
     #[test]
     fn double_release_is_an_error() {
         let mut kv = KvMemoryManager::new(100);
         let mut s = mk(4, 10);
-        assert!(s.try_admit(&mut kv, 7));
+        assert!(s.try_admit(&mut kv, 7, 10));
         assert!(s.release_seq(&mut kv, 7).is_ok());
         assert!(s.release_seq(&mut kv, 7).is_err(), "double release must fail");
         assert!(s.release_seq(&mut kv, 99).is_err(), "unknown id must fail");
@@ -335,50 +577,93 @@ mod tests {
 
     #[test]
     fn prop_seq_admission_never_deadlocks_or_leaks() {
-        // Random interleavings of per-sequence admit/release: admission
-        // must succeed iff the wall has room, reservations must conserve,
-        // and a full drain must always be reachable (no deadlock).
+        // Random interleavings of per-sequence admit/grow/release/preempt
+        // under BOTH admission policies: admission must succeed iff the
+        // wall has room for the policy's charge, reservations must
+        // conserve (pages and tokens), and a full drain must always be
+        // reachable (no deadlock).
         propcheck::quick("seq-admit-release", |rng, size| {
+            let paged = rng.chance(0.5);
+            let page = if paged { 1 + rng.below(8) } else { 1 };
             let reserve = 1 + rng.below(50);
             let cap = reserve * (1 + rng.below(8)) + rng.below(reserve);
             let mut s = mk(1 + rng.below(16), reserve);
-            let mut kv = KvMemoryManager::new(cap);
-            let mut live: Vec<SeqId> = vec![];
+            if paged {
+                s = s.with_admission(AdmissionPolicy::Paged);
+            }
+            let mut kv = KvMemoryManager::with_pages(cap, page);
+            // (id, reserved tokens)
+            let mut live: Vec<(SeqId, usize)> = vec![];
             let mut next_id = 0u64;
             for _ in 0..(20 + size) {
-                if rng.chance(0.55) || live.is_empty() {
-                    next_id += 1;
-                    let fits = kv.available() >= reserve;
-                    let admitted = s.try_admit(&mut kv, next_id);
-                    if admitted != fits {
-                        return Err(format!(
-                            "admit said {admitted}, wall said fits={fits} \
-                             (reserved {} of {cap})",
-                            kv.reserved()
-                        ));
+                let op = if live.is_empty() { 0 } else { rng.below(4) };
+                match op {
+                    0 | 3 => {
+                        next_id += 1;
+                        let prompt = rng.below(reserve.max(1));
+                        let want = s.admit_reserve(prompt);
+                        // paged keeps one page of growth headroom while
+                        // anything is live; worst-case fills the wall
+                        let fits = if paged && kv.live_sequences() > 0 {
+                            kv.pages_for(want) < kv.free_pages()
+                        } else {
+                            kv.pages_for(want) <= kv.free_pages()
+                        };
+                        let admitted = s.try_admit(&mut kv, next_id, prompt);
+                        if admitted != fits {
+                            return Err(format!(
+                                "admit said {admitted}, wall said fits={fits} \
+                                 (reserved {} of {cap})",
+                                kv.reserved()
+                            ));
+                        }
+                        if admitted {
+                            live.push((next_id, want));
+                        }
                     }
-                    if admitted {
-                        live.push(next_id);
+                    1 => {
+                        // grow a random live sequence toward the bound
+                        let k = rng.below(live.len());
+                        let (id, cur) = live[k];
+                        let target = (cur + 1 + rng.below(page * 2 + 1)).min(reserve);
+                        let grown = s.grow(&mut kv, id, target).map_err(|e| e.to_string())?;
+                        if grown {
+                            live[k].1 = live[k].1.max(target);
+                        } else if !paged {
+                            return Err("worst-case grow stalled".into());
+                        }
                     }
-                } else {
-                    let k = rng.below(live.len());
-                    let id = live.swap_remove(k);
-                    s.release_seq(&mut kv, id).map_err(|e| e.to_string())?;
-                    // releasing twice must fail, not corrupt the pool
-                    if s.release_seq(&mut kv, id).is_ok() {
-                        return Err("double release accepted".into());
+                    _ => {
+                        let k = rng.below(live.len());
+                        let (id, toks) = live.swap_remove(k);
+                        let freed = if rng.chance(0.3) {
+                            s.preempt(&mut kv, id).map_err(|e| e.to_string())?
+                        } else {
+                            s.release_seq(&mut kv, id).map_err(|e| e.to_string())?
+                        };
+                        if freed != toks {
+                            return Err(format!("released {freed}, expected {toks}"));
+                        }
+                        // releasing twice must fail, not corrupt the pool
+                        if s.release_seq(&mut kv, id).is_ok() {
+                            return Err("double release accepted".into());
+                        }
                     }
                 }
-                if kv.reserved() != live.len() * reserve {
-                    return Err("reservation leak".into());
+                let expect: usize = live.iter().map(|(_, t)| t).sum();
+                if kv.reserved() != expect {
+                    return Err(format!("reservation leak: {} != {expect}", kv.reserved()));
+                }
+                if s.stats.live_seqs() != live.len() {
+                    return Err("live_seqs out of sync".into());
                 }
                 kv.check_invariants().map_err(|e| e.to_string())?;
             }
             // no deadlock: a full drain + one admission always works
-            for id in live.drain(..) {
+            for (id, _) in live.drain(..) {
                 s.release_seq(&mut kv, id).map_err(|e| e.to_string())?;
             }
-            if !s.try_admit(&mut kv, u64::MAX) {
+            if !s.try_admit(&mut kv, u64::MAX, 0) {
                 return Err("empty wall refused admission".into());
             }
             Ok(())
@@ -404,6 +689,22 @@ mod tests {
         // single-token sequences cost zero decode steps
         assert_eq!(s.predicted_decode_steps(&[1, 1, 1], 1000), 0);
         assert_eq!(s.predicted_decode_steps(&[], 1000), 0);
+        // the width model: a tighter per-seq reservation widens the batch
+        let wide = mk(8, 100);
+        assert!(
+            wide.predicted_decode_steps_with(&[9; 16], 300, 30)
+                < wide.predicted_decode_steps_with(&[9; 16], 300, 100)
+        );
+    }
+
+    #[test]
+    fn width_paged_tracks_mean_residency() {
+        let s = mk(8, 160);
+        let kv = KvMemoryManager::with_pages(480, 16);
+        // worst case: 480/160 = 3 wide; paged at mean residency 80: 6 wide
+        assert_eq!(s.width_paged(&kv, 160), 3);
+        assert_eq!(s.width_paged(&kv, 80), 6);
+        assert_eq!(s.width_paged(&kv, 10), 8, "slot-capped");
     }
 
     #[test]

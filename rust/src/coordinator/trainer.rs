@@ -59,6 +59,13 @@ pub struct StepReport {
     pub idle_token_frac: f64,
     /// Mid-flight slot refills (continuous engine; 0 under static).
     pub refills: usize,
+    /// Sequences preempted/requeued by a paged-admission grow stall
+    /// (0 under worst-case admission).
+    pub preemptions: usize,
+    /// Peak KV page occupancy in [0, 1] during the step's rollouts.
+    pub kv_page_occupancy: f64,
+    /// Peak concurrently occupied decode slots (admitted width).
+    pub peak_live_slots: usize,
 }
 
 /// The trainer: owns learner state, data order, metrics, and the wall.
@@ -84,7 +91,7 @@ impl<'a> Trainer<'a> {
         let mut rng = Rng::new(cfg.seed);
         let mut order: Vec<usize> = (0..tasks.len()).collect();
         rng.shuffle(&mut order);
-        let kv = KvMemoryManager::new(cfg.memory.global_kv_tokens);
+        let kv = KvMemoryManager::with_pages(cfg.memory.global_kv_tokens, cfg.memory.kv_page_tokens);
         Trainer { engine, cfg, state, tasks, rng, metrics: Metrics::new(), kv, cursor: 0, order }
     }
 
@@ -112,7 +119,8 @@ impl<'a> Trainer<'a> {
         let g = self.cfg.train.group_size;
         let n = task_indices.len() * g;
         let rollout = RolloutEngine::new(self.engine, self.cfg.mode, self.cfg.sampling);
-        let mut scheduler = Scheduler::new(&self.engine.manifest, self.cfg.mode.is_sparse());
+        let mut scheduler = Scheduler::new(&self.engine.manifest, self.cfg.mode.is_sparse())
+            .with_admission(self.cfg.memory.admission);
         let seed = self.rng.next_u64();
         let params = ParamsLit::new(&self.state.params);
         // flat sequence ids: seq s belongs to prompt s / g
@@ -307,6 +315,13 @@ impl<'a> Trainer<'a> {
             slot_occupancy: rstats.occupancy(),
             idle_token_frac: rstats.idle_frac(),
             refills: rstats.refills,
+            preemptions: rstats.preemptions,
+            kv_page_occupancy: if self.kv.total_pages() == 0 {
+                0.0
+            } else {
+                rstats.max_used_pages as f64 / self.kv.total_pages() as f64
+            },
+            peak_live_slots: rstats.peak_live_slots,
         };
 
         self.metrics.begin_step();
@@ -326,6 +341,18 @@ impl<'a> Trainer<'a> {
         self.metrics.push("slot_occupancy", report.slot_occupancy);
         self.metrics.push("idle_token_frac", report.idle_token_frac);
         self.metrics.push("refills", report.refills as f64);
+        self.metrics.push("preemptions", report.preemptions as f64);
+        self.metrics.push("kv_page_occupancy", report.kv_page_occupancy);
+        // page-padding overhead at the rollout's residency peak (0 at
+        // page size 1 or when nothing was resident)
+        let frag = if rstats.max_used_pages == 0 {
+            0.0
+        } else {
+            1.0 - rstats.max_reserved_kv as f64
+                / (rstats.max_used_pages * self.kv.page_tokens()) as f64
+        };
+        self.metrics.push("kv_fragmentation", frag);
+        self.metrics.push("peak_live_slots", report.peak_live_slots as f64);
         self.metrics.push("informative_groups", summary.informative_groups);
         Ok(report)
     }

@@ -11,7 +11,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::config::{ExperimentConfig, RolloutMode};
-use crate::coordinator::{evaluate_suite, EvalResult, Metrics, Trainer};
+use crate::coordinator::{evaluate_suite, EvalOptions, EvalResult, Metrics, Trainer};
 use crate::data::benchmarks::{self, Benchmark};
 use crate::runtime::{ModelEngine, TrainState};
 
@@ -108,15 +108,18 @@ pub fn run_rl<'a>(
 }
 
 /// Evaluate a checkpoint on the full suite (optionally item-limited).
+/// `opts` picks the rollout engine and memory-wall knobs
+/// (`EvalOptions::default()` = static chunking, worst-case admission).
 pub fn eval_checkpoint(
     engine: &ModelEngine,
     params: &[f32],
     mode: RolloutMode,
     limit: usize,
     seed: u64,
+    opts: &EvalOptions,
 ) -> Result<(Vec<EvalResult>, f64)> {
     let suite = benchmarks::suite();
-    evaluate_suite(engine, params, mode, &suite, limit, seed)
+    evaluate_suite(engine, params, mode, &suite, limit, seed, opts)
 }
 
 /// Persist a trainer's metrics + checkpoint under its out_dir.

@@ -38,6 +38,8 @@ fn usage() -> ! {
   train:    --mode <dense|naive:M|sparse-rl:M> --steps N
             --init-checkpoint ckpt --out-dir runs/x  [config keys...]
   eval:     --checkpoint ckpt --mode <...> [--bench name] [--limit N]
+            [--engine static|continuous] [--admission worst-case|paged]
+            [--kv-page-tokens N] [--global-kv-tokens N]
   rollout:  --checkpoint ckpt --mode <...> [--n 4] [--temperature T]"
     );
     std::process::exit(2);
@@ -140,6 +142,18 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
     let mode = RolloutMode::parse(&args.get("mode", "dense".to_string()))?;
     let limit = args.get("limit", 50usize);
     let seed = args.get("seed", 0u64);
+    // the trainer's engine/memory knobs apply to evaluation too
+    // (--engine continuous, --admission paged, --kv-page-tokens N, ...)
+    let mut cfg = ExperimentConfig::new(&engine.manifest.dir);
+    cfg.apply_cli(args)?;
+    // apply_cli tolerates unknown/bad keys (subcommands have extras); the
+    // knobs this subcommand advertises must fail loudly on a bad value
+    for key in ["engine", "admission", "kv-page-tokens", "global-kv-tokens"] {
+        if let Some(v) = args.opt(key) {
+            cfg.apply(key, v).with_context(|| format!("--{key}"))?;
+        }
+    }
+    let opts = sparse_rl::coordinator::EvalOptions { engine: cfg.engine, memory: cfg.memory };
     match args.opt("bench") {
         Some(name) => {
             let suite = benchmarks::suite();
@@ -147,7 +161,15 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
                 .iter()
                 .find(|b| b.name == name)
                 .with_context(|| format!("unknown benchmark {name:?}"))?;
-            let r = sparse_rl::coordinator::evaluate(&engine, &state.params, mode, b, limit, seed)?;
+            let r = sparse_rl::coordinator::evaluate(
+                &engine,
+                &state.params,
+                mode,
+                b,
+                limit,
+                seed,
+                &opts,
+            )?;
             println!(
                 "{}: acc {:.3} over {} items ({} samples), mean len {:.1}, toks saved {:.2}",
                 r.benchmark, r.accuracy, r.items, r.samples, r.mean_response_len, r.toks_saving
@@ -155,7 +177,7 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
         }
         None => {
             let (_results, avg) =
-                experiments::eval_checkpoint(&engine, &state.params, mode, limit, seed)?;
+                experiments::eval_checkpoint(&engine, &state.params, mode, limit, seed, &opts)?;
             println!("suite average: {avg:.3} (mode {}, limit {limit})", mode.label());
         }
     }

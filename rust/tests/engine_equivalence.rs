@@ -21,7 +21,6 @@
 //!    is never worse and strictly better under skewed lengths.
 
 use sparse_rl::config::{RolloutMode, SamplingConfig};
-use sparse_rl::coordinator::scheduler::SchedulerStats;
 use sparse_rl::coordinator::{
     GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy, RolloutStats,
     Scheduler,
@@ -32,7 +31,7 @@ use sparse_rl::util::propcheck::{self, PropConfig};
 use sparse_rl::util::rng::Rng;
 
 fn mk_sched(slots: usize, reserve: usize) -> Scheduler {
-    Scheduler { slots, reserve_per_seq: reserve, stats: SchedulerStats::default() }
+    Scheduler::worst_case(slots, reserve)
 }
 
 /// Drive the static engine exactly the way the trainer does: the shared

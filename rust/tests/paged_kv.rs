@@ -1,0 +1,417 @@
+//! Paged KV allocation harness: the PR-2 tentpole guarantees, plus the
+//! eval-path regressions, all hermetic on the deterministic mock backend.
+//!
+//! 1. **Policy equivalence** — paged admission (page-granular reserve /
+//!    grow / shrink, preempt-and-requeue on grow stalls) emits the exact
+//!    same `response_ids`, bit-identical `sampler_logp`, and identical KV
+//!    accounting as worst-case admission, across random geometries, page
+//!    sizes, modes, and walls. Admission policy is a scheduling concern;
+//!    per-task RNG keeps it invisible in the outputs.
+//! 2. **Wall safety** — pages are conserved, the wall is never breached
+//!    (`check_invariants` runs inside the engine's decode loop via
+//!    debug_assert and here after every run), preempt/requeue always
+//!    drains, and nothing leaks.
+//! 3. **The throughput claim** — on a skewed-length workload, paged
+//!    admission admits strictly wider and finishes in strictly fewer
+//!    decode steps than worst-case reservation, dense AND sparse.
+//! 4. **Eval regressions** — an empty benchmark yields a zero-item result
+//!    (not NaN), and `evaluate_with_backend` is engine-agnostic: static
+//!    and continuous (and paged-continuous) produce identical EvalResults.
+
+use sparse_rl::config::{AdmissionPolicy, EngineKind, RolloutMode, SamplingConfig};
+use sparse_rl::coordinator::{
+    evaluate_with_backend, GenSeq, KvMemoryManager, MockModelBackend, RolloutPolicy,
+    RolloutStats, Scheduler,
+};
+use sparse_rl::data::task::Task;
+use sparse_rl::runtime::Method;
+use sparse_rl::util::propcheck::{self, PropConfig};
+use sparse_rl::util::rng::Rng;
+
+fn worst_case(slots: usize, reserve: usize) -> Scheduler {
+    Scheduler::worst_case(slots, reserve)
+}
+
+fn paged(slots: usize, reserve: usize) -> Scheduler {
+    Scheduler::worst_case(slots, reserve).with_admission(AdmissionPolicy::Paged)
+}
+
+fn seqs_equal(a: &GenSeq, b: &GenSeq) -> Result<(), String> {
+    if a.task_idx != b.task_idx || a.finished != b.finished {
+        return Err(format!("task {} header diverges", a.task_idx));
+    }
+    if a.response_ids != b.response_ids {
+        return Err(format!(
+            "task {}: response_ids diverge under paged admission\n  worst-case: {:?}\n  paged:      {:?}",
+            a.task_idx, a.response_ids, b.response_ids
+        ));
+    }
+    if a.sampler_logp != b.sampler_logp {
+        return Err(format!("task {}: sampler_logp not bit-identical", a.task_idx));
+    }
+    let (x, y) = (&a.accounting, &b.accounting);
+    if x.integral_actual != y.integral_actual
+        || x.peak_actual != y.peak_actual
+        || x.steps != y.steps
+        || x.compressions != y.compressions
+    {
+        return Err(format!("task {}: accounting diverges: {x:?} vs {y:?}", a.task_idx));
+    }
+    Ok(())
+}
+
+/// One random paged scenario: geometry, mode, page size, wall.
+struct Scenario {
+    mode: RolloutMode,
+    sampling: SamplingConfig,
+    tasks: Vec<Task>,
+    slots: usize,
+    prompt_len: usize,
+    max_seq: usize,
+    budget: usize,
+    buffer: usize,
+    reserve: usize,
+    page: usize,
+    kv_cap: usize,
+    seed: u64,
+    eos_pull: f32,
+}
+
+impl Scenario {
+    fn gen(rng: &mut Rng, size: usize) -> Scenario {
+        let slots = 1 + rng.below(5);
+        let prompt_len = 24;
+        let max_seq = prompt_len + 2 + rng.below(40);
+        let budget = 20 + rng.below(8); // sparse capacity must fit a prompt
+        let buffer = 4 + rng.below(6);
+        let mode = match rng.below(3) {
+            0 => RolloutMode::Dense,
+            1 => RolloutMode::NaiveSparse(Method::RKv),
+            _ => RolloutMode::SparseRl(Method::RKv),
+        };
+        let sampling = SamplingConfig {
+            temperature: *rng.choose(&[1.0f32, 0.85]),
+            top_p: *rng.choose(&[1.0f32, 0.92]),
+            max_response: 2 + rng.below(30),
+        };
+        let n = 1 + rng.below(2 * slots + 2 + size / 8);
+        let tasks: Vec<Task> = (0..n)
+            .map(|_| {
+                let ops = 1 + rng.below(2);
+                Task::gen(rng, ops, prompt_len)
+            })
+            .collect();
+        let capacity = if mode.is_sparse() { budget + buffer } else { max_seq };
+        let reserve = capacity;
+        let page = 1 + rng.below(8);
+        // the wall must at least hold one worst-case sequence in whole
+        // pages (the engine's progress guarantee), and is otherwise
+        // anywhere between tight (heavy preemption) and roomy
+        let one = reserve.div_ceil(page) * page;
+        let width_target = 1 + rng.below(slots + 2);
+        let kv_cap = one * width_target + rng.below(one);
+        Scenario {
+            mode,
+            sampling,
+            tasks,
+            slots,
+            prompt_len,
+            max_seq,
+            budget,
+            buffer,
+            reserve,
+            page,
+            kv_cap,
+            seed: rng.next_u64(),
+            eos_pull: *rng.choose(&[0.25f32, 0.08, 0.02]),
+        }
+    }
+
+    fn backend(&self) -> MockModelBackend {
+        let mut b = if self.mode.is_sparse() {
+            MockModelBackend::sparse(
+                self.slots,
+                self.prompt_len,
+                self.max_seq,
+                32,
+                self.budget,
+                self.buffer,
+            )
+        } else {
+            MockModelBackend::dense(self.slots, self.prompt_len, self.max_seq, 32)
+        };
+        b.eos_pull = self.eos_pull;
+        b
+    }
+
+    fn policy(&self) -> RolloutPolicy {
+        RolloutPolicy::new(self.mode, self.sampling)
+    }
+}
+
+fn run(
+    policy: &RolloutPolicy,
+    backend: &mut MockModelBackend,
+    tasks: &[Task],
+    seed: u64,
+    sched: &mut Scheduler,
+    kv: &mut KvMemoryManager,
+) -> Result<(Vec<GenSeq>, RolloutStats), String> {
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    policy
+        .rollout_continuous(backend, &flat, seed, sched, kv, 0)
+        .map_err(|e| e.to_string())
+}
+
+#[test]
+fn prop_paged_admission_token_identical_and_wall_safe() {
+    propcheck::check(
+        "paged-worst-case-equivalence",
+        PropConfig { cases: 96, seed: 0x9A_6ED0, max_size: 48 },
+        |rng, size| {
+            let sc = Scenario::gen(rng, size);
+            let policy = sc.policy();
+
+            // reference: worst-case admission, token-granular wall
+            let mut kv_w = KvMemoryManager::new(sc.kv_cap);
+            let mut sched_w = worst_case(sc.slots, sc.reserve);
+            let (wc, _) =
+                run(&policy, &mut sc.backend(), &sc.tasks, sc.seed, &mut sched_w, &mut kv_w)?;
+
+            // paged admission, page-granular wall
+            let mut kv_p = KvMemoryManager::with_pages(sc.kv_cap, sc.page);
+            let mut sched_p = paged(sc.slots, sc.reserve);
+            let (pg, pg_stats) =
+                run(&policy, &mut sc.backend(), &sc.tasks, sc.seed, &mut sched_p, &mut kv_p)?;
+
+            // 1) token/logp/accounting equivalence per task
+            if wc.len() != pg.len() {
+                return Err("result count mismatch".into());
+            }
+            for (a, b) in wc.iter().zip(pg.iter()) {
+                seqs_equal(a, b)?;
+            }
+
+            // 2) wall safety: nothing leaked, invariants hold, observed
+            //    residency never breached the pool
+            if kv_p.reserved() != 0 || kv_p.used_pages() != 0 {
+                return Err(format!("paged run leaked {} tokens", kv_p.reserved()));
+            }
+            kv_p.check_invariants().map_err(|e| e.to_string())?;
+            if pg_stats.max_used_pages > kv_p.total_pages() {
+                return Err(format!(
+                    "observed {} pages in a pool of {}",
+                    pg_stats.max_used_pages,
+                    kv_p.total_pages()
+                ));
+            }
+            if pg_stats.max_reserved_kv > kv_p.capacity() {
+                return Err("observed token residency breached the wall".into());
+            }
+            if kv_p.peak_used_pages < pg_stats.max_used_pages {
+                return Err("peak_used_pages below an observed residency".into());
+            }
+
+            // 3) scheduler bookkeeping: every admission was balanced by a
+            //    release (finish or preemption), and the engine counted
+            //    the same preemptions the scheduler performed
+            if sched_p.stats.live_seqs() != 0 {
+                return Err("scheduler live_seqs not drained".into());
+            }
+            if sched_p.stats.preemptions != pg_stats.preemptions {
+                return Err(format!(
+                    "preemption counters diverge: sched {} vs stats {}",
+                    sched_p.stats.preemptions, pg_stats.preemptions
+                ));
+            }
+            if sched_p.stats.seq_admissions
+                != sc.tasks.len() + sched_p.stats.preemptions
+            {
+                return Err(format!(
+                    "admissions {} != tasks {} + preemptions {}",
+                    sched_p.stats.seq_admissions,
+                    sc.tasks.len(),
+                    sched_p.stats.preemptions
+                ));
+            }
+
+            // 4) paged determinism: a rerun reproduces stats exactly
+            let mut kv_p2 = KvMemoryManager::with_pages(sc.kv_cap, sc.page);
+            let mut sched_p2 = paged(sc.slots, sc.reserve);
+            let (pg2, pg2_stats) =
+                run(&policy, &mut sc.backend(), &sc.tasks, sc.seed, &mut sched_p2, &mut kv_p2)?;
+            for (a, b) in pg.iter().zip(pg2.iter()) {
+                seqs_equal(a, b)?;
+            }
+            if pg_stats != pg2_stats {
+                return Err("paged stats not reproducible".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn paged_admission_raises_width_and_saves_decode_steps() {
+    // The acceptance scenario: skewed-length workload on a memory-limited
+    // wall. Worst-case admission caps the batch at 3 sequences; paged
+    // admission rides actual residency — strictly wider, strictly fewer
+    // decode steps, dense and sparse, identical tokens.
+    let (slots, prompt_len, max_seq, budget, buffer) = (8usize, 16usize, 160usize, 40usize, 16usize);
+    let (page, seed) = (4usize, 7u64);
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 64 };
+    let mut rng = Rng::new(1);
+    let tasks: Vec<Task> = (0..48)
+        .map(|_| {
+            let ops = 1 + rng.below(2);
+            Task::gen(&mut rng, ops, prompt_len)
+        })
+        .collect();
+
+    for mode in [RolloutMode::Dense, RolloutMode::SparseRl(Method::RKv)] {
+        let policy = RolloutPolicy::new(mode, sampling);
+        let capacity = if mode.is_sparse() { budget + buffer } else { max_seq };
+        let reserve = capacity;
+        let kv_cap = reserve * 3; // worst-case width: exactly 3
+        let backend = || {
+            let mut b = if mode.is_sparse() {
+                MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer)
+            } else {
+                MockModelBackend::dense(slots, prompt_len, max_seq, 32)
+            };
+            b.eos_pull = 0.15;
+            b
+        };
+
+        let mut kv_w = KvMemoryManager::new(kv_cap);
+        let mut sched_w = worst_case(slots, reserve);
+        let (wc, wc_stats) =
+            run(&policy, &mut backend(), &tasks, seed, &mut sched_w, &mut kv_w).unwrap();
+        let mut kv_p = KvMemoryManager::with_pages(kv_cap, page);
+        let mut sched_p = paged(slots, reserve);
+        let (pg, pg_stats) =
+            run(&policy, &mut backend(), &tasks, seed, &mut sched_p, &mut kv_p).unwrap();
+
+        for (a, b) in wc.iter().zip(pg.iter()) {
+            seqs_equal(a, b).unwrap();
+        }
+        kv_p.check_invariants().unwrap();
+        assert_eq!(wc_stats.peak_live_slots, 3, "{}: geometry drifted", mode.label());
+        assert!(
+            pg_stats.peak_live_slots > wc_stats.peak_live_slots,
+            "{}: paged width {} !> worst-case {}",
+            mode.label(),
+            pg_stats.peak_live_slots,
+            wc_stats.peak_live_slots
+        );
+        assert!(
+            pg_stats.decode_steps < wc_stats.decode_steps,
+            "{}: paged decode steps {} !< worst-case {} ({} preemptions)",
+            mode.label(),
+            pg_stats.decode_steps,
+            wc_stats.decode_steps,
+            pg_stats.preemptions
+        );
+    }
+}
+
+#[test]
+fn paged_wall_too_small_for_one_sequence_errors_cleanly() {
+    // a pool that cannot hold even one worst-case sequence must refuse up
+    // front (the preempt/requeue loop could otherwise thrash forever)
+    let policy = RolloutPolicy::new(
+        RolloutMode::Dense,
+        SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 8 },
+    );
+    let mut rng = Rng::new(3);
+    let tasks = vec![Task::gen(&mut rng, 1, 24)];
+    let mut backend = MockModelBackend::dense(2, 24, 64, 32);
+    let mut kv = KvMemoryManager::with_pages(40, 8); // 5 pages < 64 tokens
+    let mut sched = paged(2, 64);
+    let err = run(&policy, &mut backend, &tasks, 0, &mut sched, &mut kv).unwrap_err();
+    assert!(err.contains("deadlock"), "unexpected error: {err}");
+}
+
+// ---------------------------------------------------------------- eval --
+
+fn eval_setup(n_items: usize) -> (RolloutPolicy, Vec<Task>, MockModelBackend, usize, usize) {
+    let (slots, prompt_len, max_seq) = (4usize, 24usize, 96usize);
+    let mut rng = Rng::new(11);
+    let tasks: Vec<Task> = (0..n_items).map(|_| Task::gen(&mut rng, 1, prompt_len)).collect();
+    let policy = RolloutPolicy::new(
+        RolloutMode::Dense,
+        SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 24 },
+    );
+    let backend = MockModelBackend::dense(slots, prompt_len, max_seq, 32);
+    (policy, tasks, backend, slots, max_seq)
+}
+
+#[test]
+fn empty_benchmark_eval_is_zero_items_not_nan() {
+    // regression: dividing by tasks.len() / (tasks.len() * k) unguarded
+    // produced NaN accuracy that silently poisoned the suite macro-average
+    let (policy, _, mut backend, slots, reserve) = eval_setup(0);
+    let mut sched = worst_case(slots, reserve);
+    let mut kv = KvMemoryManager::new(reserve * slots);
+    let r = evaluate_with_backend(
+        &policy,
+        &mut backend,
+        EngineKind::Static,
+        &mut sched,
+        &mut kv,
+        "empty",
+        &[],
+        4,
+        0,
+    )
+    .unwrap();
+    assert_eq!(r.items, 0);
+    assert_eq!(r.samples, 0);
+    assert_eq!(r.accuracy, 0.0);
+    assert!(!r.accuracy.is_nan() && !r.mean_response_len.is_nan());
+}
+
+#[test]
+fn eval_is_engine_agnostic() {
+    // regression: evaluate() always static-chunked regardless of the
+    // `engine = continuous` knob. The continuous path (and the paged
+    // continuous path) must score identically — per-task RNG keys off the
+    // flat sample id, not the engine.
+    let (policy, tasks, _, slots, reserve) = eval_setup(6);
+    let k = 3;
+    let mk_backend = || MockModelBackend::dense(4, 24, 96, 32);
+
+    let mut results = Vec::new();
+    for (kind, admission, page) in [
+        (EngineKind::Static, AdmissionPolicy::WorstCase, 1usize),
+        (EngineKind::Continuous, AdmissionPolicy::WorstCase, 1),
+        (EngineKind::Continuous, AdmissionPolicy::Paged, 4),
+    ] {
+        let mut sched = worst_case(slots, reserve).with_admission(admission);
+        let mut kv = KvMemoryManager::with_pages(reserve * 3, page);
+        let r = evaluate_with_backend(
+            &policy,
+            &mut mk_backend(),
+            kind,
+            &mut sched,
+            &mut kv,
+            "agnostic",
+            &tasks,
+            k,
+            42,
+        )
+        .unwrap();
+        assert_eq!(kv.reserved(), 0, "eval leaked KV");
+        results.push(r);
+    }
+    let base = &results[0];
+    assert_eq!(base.items, 6);
+    assert_eq!(base.samples, 18);
+    for r in &results[1..] {
+        assert_eq!(r.accuracy, base.accuracy, "accuracy diverged across engines");
+        assert_eq!(r.mean_response_len, base.mean_response_len);
+        assert_eq!(r.items, base.items);
+        assert_eq!(r.samples, base.samples);
+        assert_eq!(r.toks_saving, base.toks_saving);
+    }
+}
