@@ -70,13 +70,17 @@ impl RolloutMode {
 /// sequence finishes (long-tail bubble). `Continuous` recycles decode
 /// slots: a finished sequence releases its KV reservation immediately and
 /// the next pending prompt is prefilled into the freed slot mid-flight.
-/// Both paths produce token-identical sequences per task (per-task RNG),
-/// so every mode/baseline can run either engine.
+/// `Pipelined` runs `rollout-workers` continuous lanes on worker threads
+/// against the shared scheduler/wall, with slot prefills deferred to a
+/// dedicated prefill lane so recycling overlaps decode instead of
+/// stalling it. All paths produce token-identical sequences per task
+/// (per-task RNG), so every mode/baseline can run any engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EngineKind {
     #[default]
     Static,
     Continuous,
+    Pipelined,
 }
 
 impl EngineKind {
@@ -84,7 +88,8 @@ impl EngineKind {
         Ok(match s {
             "static" | "chunked" => EngineKind::Static,
             "continuous" | "cb" => EngineKind::Continuous,
-            other => bail!("bad engine {other:?} (static | continuous)"),
+            "pipelined" | "pipeline" => EngineKind::Pipelined,
+            other => bail!("bad engine {other:?} (static | continuous | pipelined)"),
         })
     }
 
@@ -92,6 +97,7 @@ impl EngineKind {
         match self {
             EngineKind::Static => "static",
             EngineKind::Continuous => "continuous",
+            EngineKind::Pipelined => "pipelined",
         }
     }
 }
@@ -222,6 +228,12 @@ pub struct MemoryConfig {
     /// Admission policy: worst-case reservation (seed behavior) or
     /// page-granular actual-residency admission.
     pub admission: AdmissionPolicy,
+    /// Free pages a paged admission must leave as growth headroom while
+    /// other sequences are live (default 1 = original behavior; 0 admits
+    /// flush against the wall and thrashes on preempt/readmit under
+    /// pressure; larger values trade admitted width for fewer
+    /// preemptions). Ignored under worst-case admission.
+    pub kv_admit_headroom_pages: usize,
 }
 
 impl Default for MemoryConfig {
@@ -230,6 +242,7 @@ impl Default for MemoryConfig {
             global_kv_tokens: 2048,
             kv_page_tokens: 1,
             admission: AdmissionPolicy::WorstCase,
+            kv_admit_headroom_pages: 1,
         }
     }
 }
@@ -240,9 +253,13 @@ pub struct ExperimentConfig {
     pub artifact_dir: PathBuf,
     pub seed: u64,
     pub mode: RolloutMode,
-    /// Rollout data path: static chunked batching vs continuous batching
-    /// with slot recycling. Orthogonal to `mode`.
+    /// Rollout data path: static chunked batching, continuous batching
+    /// with slot recycling, or pipelined multi-worker batching.
+    /// Orthogonal to `mode`.
     pub engine: EngineKind,
+    /// Decode lanes (worker threads) for `engine = pipelined`; ignored by
+    /// the single-lane engines.
+    pub rollout_workers: usize,
     pub sampling: SamplingConfig,
     pub train: TrainConfig,
     pub memory: MemoryConfig,
@@ -259,6 +276,7 @@ impl ExperimentConfig {
             seed: 0,
             mode: RolloutMode::Dense,
             engine: EngineKind::default(),
+            rollout_workers: 2,
             sampling: SamplingConfig::default(),
             train: TrainConfig::default(),
             memory: MemoryConfig::default(),
@@ -274,6 +292,13 @@ impl ExperimentConfig {
             "seed" => self.seed = value.parse().context("seed")?,
             "mode" => self.mode = RolloutMode::parse(value)?,
             "engine" => self.engine = EngineKind::parse(value)?,
+            "rollout-workers" => {
+                let v: usize = value.parse().context("rollout-workers")?;
+                if v == 0 {
+                    bail!("rollout-workers must be >= 1");
+                }
+                self.rollout_workers = v;
+            }
             "temperature" => self.sampling.temperature = value.parse().context("temperature")?,
             "top-p" => self.sampling.top_p = value.parse().context("top-p")?,
             "max-response" => self.sampling.max_response = value.parse().context("max-response")?,
@@ -310,6 +335,10 @@ impl ExperimentConfig {
                 self.memory.kv_page_tokens = v;
             }
             "admission" => self.memory.admission = AdmissionPolicy::parse(value)?,
+            "kv-admit-headroom-pages" => {
+                self.memory.kv_admit_headroom_pages =
+                    value.parse().context("kv-admit-headroom-pages")?
+            }
             "init-checkpoint" => self.init_checkpoint = Some(PathBuf::from(value)),
             "out-dir" => self.out_dir = PathBuf::from(value),
             other => bail!("unknown config key {other:?}"),
@@ -394,11 +423,29 @@ mod tests {
         assert_eq!(EngineKind::parse("static").unwrap(), EngineKind::Static);
         assert_eq!(EngineKind::parse("continuous").unwrap(), EngineKind::Continuous);
         assert_eq!(EngineKind::parse("cb").unwrap(), EngineKind::Continuous);
+        assert_eq!(EngineKind::parse("pipelined").unwrap(), EngineKind::Pipelined);
+        assert_eq!(EngineKind::parse("pipeline").unwrap(), EngineKind::Pipelined);
         assert!(EngineKind::parse("batchy").is_err());
         let mut c = ExperimentConfig::new(Path::new("a"));
         assert_eq!(c.engine, EngineKind::Static); // default preserves behavior
         c.apply("engine", "continuous").unwrap();
         assert_eq!(c.engine, EngineKind::Continuous);
+        c.apply("engine", "pipelined").unwrap();
+        assert_eq!(c.engine, EngineKind::Pipelined);
+    }
+
+    #[test]
+    fn rollout_workers_and_headroom_knobs() {
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        assert_eq!(c.rollout_workers, 2);
+        assert_eq!(c.memory.kv_admit_headroom_pages, 1); // seed behavior
+        c.apply("rollout-workers", "4").unwrap();
+        assert_eq!(c.rollout_workers, 4);
+        assert!(c.apply("rollout-workers", "0").is_err());
+        c.apply("kv-admit-headroom-pages", "0").unwrap();
+        assert_eq!(c.memory.kv_admit_headroom_pages, 0);
+        c.apply("kv-admit-headroom-pages", "3").unwrap();
+        assert_eq!(c.memory.kv_admit_headroom_pages, 3);
     }
 
     #[test]

@@ -19,6 +19,15 @@
 //! rows are independent), and `prefill_slot` must leave the target slot in
 //! exactly the state a batched `prefill` would have produced.
 //!
+//! **Threading (pipelined engine):** each pipelined worker owns one
+//! backend value outright — backends are never shared between workers, so
+//! the only bound the worker pool needs is `Send`. `MockModelBackend` is
+//! plain data; `EngineBackend` is `Send` because `ModelEngine` is `Sync`
+//! (executable cache behind a `Mutex`, atomic latency counters) and the
+//! cache state it owns is host-side literals. That is the whole
+//! ownership/handle story: N workers = N `EngineBackend`s over one shared
+//! `&ModelEngine`.
+//!
 //! KV *allocation* (worst-case vs paged admission, grow/shrink/preempt —
 //! see `kv_manager`/`scheduler`) deliberately lives outside this trait:
 //! the backend stores cache planes per slot, while residency accounting is
@@ -30,6 +39,48 @@ use anyhow::{Context, Result};
 
 use crate::config::RolloutMode;
 use crate::runtime::{CacheState, Method, ModelEngine, ParamsLit, Variant};
+
+/// Modeled per-call device latency, in abstract virtual "ticks".
+///
+/// This is the deterministic latency cost model behind the hermetic
+/// pipeline timing harness: the rollout engines charge every backend call
+/// against a virtual clock using these costs, so overlap wins (prefill vs
+/// decode, multiple decode lanes) are *measurable* without artifacts,
+/// devices, or wall-clock noise — `bench_rollout` asserts the pipelined
+/// engine's modeled makespan is strictly below the continuous engine's on
+/// the same cost model. All-zero (the default, and what `EngineBackend`
+/// reports) opts a backend out: modeled times collapse to 0 and real
+/// backends are measured in wall time by the trainer instead.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CostModel {
+    /// One batched prefill over all R slots.
+    pub prefill_ticks: u64,
+    /// One single-slot recycling prefill (`prefill_slot`).
+    pub slot_prefill_ticks: u64,
+    /// One decode step over the batch.
+    pub decode_ticks: u64,
+    /// One masked compression call.
+    pub compress_ticks: u64,
+}
+
+impl CostModel {
+    /// A representative accelerator profile for benches/tests: prefill is
+    /// ~4x a decode step (it processes a whole prompt and, on the real
+    /// path, `prefill_slot` additionally pays a host round-trip), and
+    /// compression is cheaper than a decode step.
+    pub fn representative() -> CostModel {
+        CostModel {
+            prefill_ticks: 40,
+            slot_prefill_ticks: 40,
+            decode_ticks: 10,
+            compress_ticks: 5,
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == CostModel::default()
+    }
+}
 
 /// What a rollout loop needs from the model. All logits returned are
 /// log-probabilities over the vocabulary; batched calls return `[R * V]`
@@ -62,6 +113,13 @@ pub trait RolloutBackend {
     /// Compress the cache of every slot with `do_mask[s] == 1.0` down to
     /// the budget.
     fn compress(&mut self, do_mask: &[f32]) -> Result<()>;
+
+    /// Modeled per-call latencies for the virtual-clock harness. The
+    /// default (all zeros) opts out of modeled timing — appropriate for
+    /// real backends, whose latency is measured, not modeled.
+    fn cost_model(&self) -> CostModel {
+        CostModel::default()
+    }
 }
 
 /// Production backend: drives the AOT artifacts through `ModelEngine`,

@@ -4,16 +4,17 @@
 //! Avg@32) sample k responses at temperature 1.0 and average accuracy per
 //! item. Evaluation can run in dense mode (Table 1) or under the same KV
 //! compression as training (Table 2's "sparse inference" deployment
-//! scenario), and — like the trainer — on either rollout engine
+//! scenario), and — like the trainer — on any rollout engine
 //! (`EvalOptions::engine`): Avg@k benchmarks have exactly the
-//! skewed-length profile slot recycling exploits, so `continuous` shaves
-//! decode steps without changing a single token (per-task RNG).
+//! skewed-length profile slot recycling exploits, so `continuous` (and
+//! `pipelined`, across `rollout_workers` lanes) shaves decode steps
+//! without changing a single token (per-task RNG).
 //!
 //! The scoring core (`evaluate_with_backend`) is generic over
 //! `RolloutBackend`, so the engine-dispatch and empty-benchmark guards are
 //! exercised hermetically on the mock backend by `tests/paged_kv.rs`.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::{EngineKind, MemoryConfig, RolloutMode, SamplingConfig};
 use crate::data::benchmarks::{Benchmark, Protocol};
@@ -54,20 +55,37 @@ impl EvalResult {
 
 /// Engine/memory knobs for evaluation, mirroring what the trainer reads
 /// from `ExperimentConfig`. Defaults preserve the original behavior:
-/// static chunking, worst-case admission, token-granular wall.
-#[derive(Debug, Clone, Copy, Default)]
+/// static chunking, worst-case admission, token-granular wall (and two
+/// decode lanes if `engine = pipelined` is selected).
+#[derive(Debug, Clone, Copy)]
 pub struct EvalOptions {
     pub engine: EngineKind,
     pub memory: MemoryConfig,
+    /// Decode lanes for `engine = pipelined`; ignored otherwise.
+    pub rollout_workers: usize,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions {
+            engine: EngineKind::default(),
+            memory: MemoryConfig::default(),
+            rollout_workers: 2,
+        }
+    }
 }
 
 /// Backend-generic evaluation core: roll out `k` samples per task on the
 /// requested engine and fold per-item accuracy. Returns
 /// [`EvalResult::empty`] — not NaN — when there is nothing to score.
+///
+/// `backends` carries one backend per decode lane: the single-lane
+/// engines use `backends[0]`, the pipelined engine uses them all (which
+/// is why the bound is `Send` — lanes are worker threads).
 #[allow(clippy::too_many_arguments)]
-pub fn evaluate_with_backend<B: RolloutBackend>(
+pub fn evaluate_with_backend<B: RolloutBackend + Send>(
     policy: &RolloutPolicy,
-    backend: &mut B,
+    backends: &mut [B],
     engine_kind: EngineKind,
     sched: &mut Scheduler,
     kv: &mut KvMemoryManager,
@@ -76,21 +94,27 @@ pub fn evaluate_with_backend<B: RolloutBackend>(
     k: usize,
     rollout_seed: u64,
 ) -> Result<EvalResult> {
+    if backends.is_empty() {
+        bail!("evaluate_with_backend needs at least one backend lane");
+    }
     if tasks.is_empty() || k == 0 {
         return Ok(EvalResult::empty(benchmark));
     }
     // flat sample list: item i sample j -> flat i*k + j; per-task RNG
     // streams key off the flat id, so every Avg@k sample draws an
-    // independent, reproducible stream on either engine
+    // independent, reproducible stream on any engine
     let flat: Vec<(usize, &Task)> = (0..tasks.len() * k)
         .map(|s| (s, &tasks[s / k]))
         .collect();
     let (seqs, _stats) = match engine_kind {
         EngineKind::Static => {
-            policy.rollout_static_queue(backend, &flat, rollout_seed, sched, kv, 0)?
+            policy.rollout_static_queue(&mut backends[0], &flat, rollout_seed, sched, kv, 0)?
         }
         EngineKind::Continuous => {
-            policy.rollout_continuous(backend, &flat, rollout_seed, sched, kv, 0)?
+            policy.rollout_continuous(&mut backends[0], &flat, rollout_seed, sched, kv, 0)?
+        }
+        EngineKind::Pipelined => {
+            policy.rollout_pipelined(backends, &flat, rollout_seed, sched, kv, 0)?
         }
     };
     let mut correct_per_item = vec![0usize; tasks.len()];
@@ -163,8 +187,18 @@ pub fn evaluate(
     };
     let policy = RolloutPolicy::new(mode, sampling);
     let params_lit = ParamsLit::new(params);
-    let mut backend = EngineBackend::new(engine, &params_lit, mode);
-    let mut sched = Scheduler::new(m, mode.is_sparse()).with_admission(opts.memory.admission);
+    // one backend per decode lane (single-lane engines use the first)
+    let lanes = if opts.engine == EngineKind::Pipelined {
+        opts.rollout_workers.max(1)
+    } else {
+        1
+    };
+    let mut backends: Vec<EngineBackend> = (0..lanes)
+        .map(|_| EngineBackend::new(engine, &params_lit, mode))
+        .collect();
+    let mut sched = Scheduler::new(m, mode.is_sparse())
+        .with_admission(opts.memory.admission)
+        .with_headroom(opts.memory.kv_admit_headroom_pages);
     // The eval wall exists to drive the engines' admission machinery, not
     // to throttle accuracy measurement (tokens are width-independent). It
     // is clamped up so a full decode batch always fits — with default
@@ -173,14 +207,15 @@ pub fn evaluate(
     // never turn a previously-working eval into a "stalled" error.
     let page = opts.memory.kv_page_tokens;
     let per_seq_pages_tokens = sched.reserve_per_seq.div_ceil(page) * page;
+    // (for pipelined, clamp per lane so every worker can fill its batch)
     let wall = opts
         .memory
         .global_kv_tokens
-        .max(per_seq_pages_tokens * m.shapes.decode_batch);
+        .max(per_seq_pages_tokens * m.shapes.decode_batch * lanes);
     let mut kv = KvMemoryManager::with_pages(wall, page);
     evaluate_with_backend(
         &policy,
-        &mut backend,
+        &mut backends,
         opts.engine,
         &mut sched,
         &mut kv,

@@ -50,6 +50,12 @@ pub struct KvMemoryManager {
     pub peak_reserved: usize,
     /// High-water mark of pool pages in use.
     pub peak_used_pages: usize,
+    /// High-water mark of concurrently live sequences — the globally
+    /// admitted width. With the pipelined engine this is the one counter
+    /// that sees ALL worker lanes at once (each lane only observes its own
+    /// slots), so the multi-worker width claims and the
+    /// `peak <= workers * slots` conservation checks read it.
+    pub peak_live_seqs: usize,
     /// Count of rejected admission attempts (pressure signal).
     pub rejections: u64,
     /// Count of rejected mid-decode `grow` attempts (preemption signal).
@@ -77,6 +83,7 @@ impl KvMemoryManager {
             seqs: BTreeMap::new(),
             peak_reserved: 0,
             peak_used_pages: 0,
+            peak_live_seqs: 0,
             rejections: 0,
             grow_rejections: 0,
         }
@@ -144,6 +151,7 @@ impl KvMemoryManager {
         self.peak_reserved = self.peak_reserved.max(self.reserved);
         self.peak_used_pages = self.peak_used_pages.max(self.used_pages);
         self.seqs.insert(seq, tokens);
+        self.peak_live_seqs = self.peak_live_seqs.max(self.seqs.len());
         Ok(())
     }
 
@@ -265,6 +273,13 @@ impl KvMemoryManager {
                 self.total_pages
             );
         }
+        if self.peak_live_seqs < self.seqs.len() {
+            bail!(
+                "peak_live_seqs {} below current live count {}",
+                self.peak_live_seqs,
+                self.seqs.len()
+            );
+        }
         Ok(())
     }
 
@@ -321,6 +336,20 @@ mod tests {
         assert_eq!(m.rejections, 1);
         m.release(1).unwrap();
         m.reserve(2, 60).unwrap();
+    }
+
+    #[test]
+    fn peak_live_seqs_tracks_admitted_width() {
+        let mut m = KvMemoryManager::new(100);
+        m.reserve(1, 10).unwrap();
+        m.reserve(2, 10).unwrap();
+        assert_eq!(m.peak_live_seqs, 2);
+        m.release(1).unwrap();
+        m.reserve(3, 10).unwrap();
+        assert_eq!(m.peak_live_seqs, 2, "peak is a high-water mark");
+        m.reserve(4, 10).unwrap();
+        assert_eq!(m.peak_live_seqs, 3);
+        m.check_invariants().unwrap();
     }
 
     #[test]

@@ -2,7 +2,13 @@
 //!
 //! Every figure in the paper's §5.3 (reward, response length, entropy,
 //! mismatch KL, rejection rate, clip ratio, grad norm) is a column here;
-//! the figure harnesses replay the CSVs.
+//! the figure harnesses replay the CSVs. The rollout-engine columns
+//! (`decode_steps`, `slot_occupancy`, `refills`, `preemptions`,
+//! `rollout_workers`, and the modeled-time breakdown
+//! `decode_busy_ticks` / `prefill_blocked_ticks` / `sched_stall_ticks` /
+//! `modeled_makespan_ticks`) share one denominator convention — device
+//! work, never engine loop iterations — so static/continuous/pipelined
+//! runs are comparable column-for-column (see `RolloutStats`).
 
 use std::collections::BTreeMap;
 use std::io::Write;

@@ -32,7 +32,7 @@ use anyhow::{bail, Result};
 
 use crate::data::tokenizer::{BOS, EOS, PAD};
 
-use super::backend::RolloutBackend;
+use super::backend::{CostModel, RolloutBackend};
 
 /// Pure-Rust deterministic model backend (see module docs).
 #[derive(Debug, Clone)]
@@ -56,6 +56,11 @@ pub struct MockModelBackend {
     /// never produce them (compression fires first) — only frozen
     /// (finished) slots in the static engine do, feeding dead PAD tokens.
     pub oob_writes: u64,
+    /// Deterministic per-call latency model for the virtual-clock timing
+    /// harness. Zero (the default) keeps all modeled times at 0, so
+    /// pre-existing stats comparisons are untouched; the pipeline benches
+    /// and tests set `CostModel::representative()`.
+    pub costs: CostModel,
 }
 
 impl MockModelBackend {
@@ -86,7 +91,14 @@ impl MockModelBackend {
             eos_pull: 0.25,
             cache: vec![Vec::new(); slots],
             oob_writes: 0,
+            costs: CostModel::default(),
         }
+    }
+
+    /// Attach a latency cost model (builder style).
+    pub fn with_costs(mut self, costs: CostModel) -> Self {
+        self.costs = costs;
+        self
     }
 
     /// Dense-path mock: cache bound = max_seq, no compression.
@@ -160,6 +172,10 @@ impl RolloutBackend for MockModelBackend {
 
     fn budget(&self) -> usize {
         self.budget
+    }
+
+    fn cost_model(&self) -> CostModel {
+        self.costs
     }
 
     fn prefill(&mut self, ids: &[i32], plens: &[i32]) -> Result<Vec<f32>> {

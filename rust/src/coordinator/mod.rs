@@ -1,7 +1,8 @@
 //! L3 coordinator: the paper's system contribution.
 //!
-//! * `rollout`    — dense/sparse generation, static chunked AND continuous
-//!   batching with slot recycling (token-identical per task)
+//! * `rollout`    — dense/sparse generation, static chunked, continuous
+//!   batching with slot recycling, AND pipelined multi-worker batching
+//!   with a dedicated prefill lane (all token-identical per task)
 //! * `backend`    — the model surface the engines drive (artifacts or mock)
 //! * `mock`       — deterministic pure-Rust backend for the equivalence
 //!   test harness and engine benches
@@ -27,7 +28,7 @@ pub mod rollout;
 pub mod scheduler;
 pub mod trainer;
 
-pub use backend::{EngineBackend, RolloutBackend};
+pub use backend::{CostModel, EngineBackend, RolloutBackend};
 pub use eval::{evaluate, evaluate_suite, evaluate_with_backend, EvalOptions, EvalResult};
 pub use kv_manager::KvMemoryManager;
 pub use metrics::Metrics;

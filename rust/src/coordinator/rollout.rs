@@ -7,7 +7,7 @@
 //! log π_sparse — Eq. 2 — the number the corrections need), KV compression
 //! triggering, and KV accounting.
 //!
-//! Two data paths share all of that per-sequence logic:
+//! Three data paths share all of that per-sequence logic:
 //!
 //! * **Static chunked** (`rollout_static`): a chunk of ≤ R sequences is
 //!   prefilled together and decodes until the *slowest* sequence finishes.
@@ -19,20 +19,30 @@
 //!   mixed batch keeps decoding. Total decode steps drop from
 //!   Σ_chunks max(len) to the list-scheduling makespan of the per-sequence
 //!   decode costs — strictly better whenever response lengths are skewed.
+//!   But every slot prefill still stalls the whole decode batch.
+//! * **Pipelined multi-worker** (`rollout_pipelined`): N worker threads
+//!   each drive a continuous-style decode batch against ONE shared
+//!   scheduler/KV wall, and slot prefills are deferred to a dedicated
+//!   prefill lane so recycling overlaps decode instead of stalling it.
+//!   The overlap win is measured hermetically on a virtual clock
+//!   (`CostModel` ticks; see `RolloutStats`' timing breakdown).
 //!
-//! Token-for-token equivalence between the two paths is guaranteed by
+//! Token-for-token equivalence between the paths is guaranteed by
 //! per-TASK RNG streams (`task_rng`): a task's sampling randomness is a
-//! pure function of (rollout seed, task index), never of the slot or chunk
-//! it lands in. Combined with batch-row independence of the model, a given
-//! task emits identical `response_ids` and `sampler_logp` under both
-//! engines — which keeps the Eq. 2/5 correction math bit-reproducible and
-//! is what `tests/engine_equivalence.rs` checks exhaustively.
+//! pure function of (rollout seed, task index), never of the slot, chunk,
+//! worker, or join step it lands in. Combined with batch-row independence
+//! of the model, a given task emits identical `response_ids` and
+//! `sampler_logp` under all engines — which keeps the Eq. 2/5 correction
+//! math bit-reproducible and is what `tests/engine_equivalence.rs` checks
+//! exhaustively.
 //!
 //! The sparse path realizes the paper's rollout: the cache holds at most
 //! `budget + buffer` slots; whenever a sequence fills the buffer, the
 //! compression artifact compacts it back to `budget` retained tokens.
 
 use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -141,12 +151,22 @@ pub fn sample_token(rng: &mut Rng, logp: &[f32], s: &SamplingConfig) -> (usize, 
     (last, probs[last].ln())
 }
 
-/// Throughput/occupancy statistics for one rollout (either engine).
+/// Throughput/occupancy statistics for one rollout (any engine).
 ///
 /// `occupied_slot_steps` counts, per decode step, the slots doing live
 /// generation; `idle_slot_steps` counts the complement — PAD work on
 /// finished or never-admitted slots (the long-tail bubble the continuous
 /// engine removes).
+///
+/// **Denominator contract (cross-engine audit):** every counter here is
+/// denominated in *modeled device work*, never in engine loop iterations.
+/// One `decode` artifact invocation contributes exactly `slots` slot-steps
+/// (`occupied + idle == decode_steps * slots` — the equivalence tests
+/// assert this identity for all three engines), so `occupancy()` and
+/// `idle_frac()` are apples-to-apples across static, continuous, and
+/// pipelined runs, and across worker counts. The `*_ticks` fields are the
+/// virtual-clock breakdown on the backend's `CostModel` (all zero for
+/// real backends, which are wall-timed by the trainer instead).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct RolloutStats {
     /// Scheduled chunks (continuous: one pass over the whole queue).
@@ -173,12 +193,41 @@ pub struct RolloutStats {
     /// Sequences preempted and requeued by a paged-admission grow stall
     /// (0 under worst-case admission).
     pub preemptions: usize,
+    /// Worker lanes that produced these stats (1 for static/continuous;
+    /// the pool size for pipelined).
+    pub workers: usize,
+    /// Modeled ticks spent busy on decode + compression calls, summed
+    /// over lanes.
+    pub decode_busy_ticks: u64,
+    /// Modeled ticks a decode lane sat blocked on prefill work: batched
+    /// prefills, plus slot prefills that could not be hidden behind decode
+    /// (the continuous engine charges *every* slot prefill here — that
+    /// serial stall is exactly what the pipelined engine's dedicated
+    /// prefill lane removes).
+    pub prefill_blocked_ticks: u64,
+    /// Modeled ticks a decode lane idled empty at the memory wall,
+    /// waiting for another lane to release KV (pipelined only; the
+    /// single-lane engines keep decoding or bail instead of waiting).
+    pub sched_stall_ticks: u64,
+    /// Modeled end-to-end makespan. Serial engines: busy + blocked +
+    /// stall. Pipelined: max over worker lanes' finish clocks — which is
+    /// why `merge` (serial composition, e.g. static chunks) SUMS this
+    /// field and the pipelined joiner overwrites it with the lane max.
+    pub modeled_makespan_ticks: u64,
 }
 
 impl RolloutStats {
+    /// Total device slot-steps: the shared denominator of `occupancy` and
+    /// `idle_frac`. Always equals `decode_steps * slots` when the engines
+    /// uphold the denominator contract (asserted by the equivalence
+    /// tests).
+    pub fn device_slot_steps(&self) -> usize {
+        self.occupied_slot_steps + self.idle_slot_steps
+    }
+
     /// Mean decode-step slot occupancy in [0, 1].
     pub fn occupancy(&self) -> f64 {
-        let total = self.occupied_slot_steps + self.idle_slot_steps;
+        let total = self.device_slot_steps();
         if total == 0 {
             0.0
         } else {
@@ -188,7 +237,7 @@ impl RolloutStats {
 
     /// Fraction of decode-slot work wasted on idle (PAD) slots.
     pub fn idle_frac(&self) -> f64 {
-        let total = self.occupied_slot_steps + self.idle_slot_steps;
+        let total = self.device_slot_steps();
         if total == 0 {
             0.0
         } else {
@@ -196,6 +245,13 @@ impl RolloutStats {
         }
     }
 
+    /// Combine stats from two runs. Work counters (steps, slot-steps,
+    /// refills, ticks, makespan) ADD — serial composition, as when the
+    /// static queue driver folds chunk after chunk. Residency peaks take
+    /// the MAX (they are high-water marks, not work). The pipelined
+    /// joiner uses `merge` for the per-lane work sums, then overwrites
+    /// `modeled_makespan_ticks` with the lane max and `peak_live_slots`
+    /// with the globally observed admitted width.
     pub fn merge(&mut self, o: &RolloutStats) {
         self.chunks += o.chunks;
         self.decode_steps += o.decode_steps;
@@ -208,6 +264,11 @@ impl RolloutStats {
         self.max_used_pages = self.max_used_pages.max(o.max_used_pages);
         self.peak_live_slots = self.peak_live_slots.max(o.peak_live_slots);
         self.preemptions += o.preemptions;
+        self.workers = self.workers.max(o.workers);
+        self.decode_busy_ticks += o.decode_busy_ticks;
+        self.prefill_blocked_ticks += o.prefill_blocked_ticks;
+        self.sched_stall_ticks += o.sched_stall_ticks;
+        self.modeled_makespan_ticks += o.modeled_makespan_ticks;
     }
 }
 
@@ -226,6 +287,81 @@ struct LiveSeq {
     pos: usize,
     rng: Rng,
     gen: GenSeq,
+}
+
+/// A slot refill admitted to the wall and issued to the dedicated prefill
+/// lane, but not yet joined into its worker's decode batch (pipelined
+/// engine). The slot idles (PAD) until the lane's virtual clock reaches
+/// `ready_at`; its KV reservation is already held.
+struct PendingRefill {
+    /// Position in the pending task list (== results index).
+    pos: usize,
+    /// Virtual time at which the lane finishes this prefill.
+    ready_at: u64,
+}
+
+/// State the pipelined worker threads coordinate on, behind one mutex:
+/// the shared task queue, the shared scheduler + KV wall, the result
+/// table, and the virtual clocks that tie the lanes' timelines together.
+struct PipeShared<'s> {
+    queue: VecDeque<usize>,
+    sched: &'s mut Scheduler,
+    kv: &'s mut KvMemoryManager,
+    results: Vec<Option<GenSeq>>,
+    /// Virtual clock of the single shared prefill lane.
+    lane_clock: u64,
+    /// Latest virtual time any lane released KV — the earliest honest
+    /// timestamp for an admission that had to wait on the wall.
+    release_floor: u64,
+    /// Sequences currently admitted across all lanes (live + pending).
+    live_now: usize,
+    /// Peak of `live_now`: the globally admitted width.
+    peak_live: usize,
+    /// First worker error, if any — parked peers bail instead of waiting
+    /// for releases that will never come.
+    failed: Option<String>,
+}
+
+impl PipeShared<'_> {
+    /// Admit the queue-front sequence: scheduler charge + global width
+    /// accounting, in one place so the three admission sites (initial
+    /// wave, slot refills, parked retry) cannot drift. Returns the
+    /// admitted task position; `None` means the queue is empty or the
+    /// wall refused (callers that care which must check the queue first).
+    fn admit_front(&mut self, tasks: &[(usize, &Task)], seq_id_base: u64) -> Option<usize> {
+        let &pos = self.queue.front()?;
+        if !self
+            .sched
+            .try_admit(self.kv, seq_id_base + pos as u64, tasks[pos].1.prompt_ids.len())
+        {
+            return None;
+        }
+        self.queue.pop_front();
+        self.live_now += 1;
+        self.peak_live = self.peak_live.max(self.live_now);
+        Some(pos)
+    }
+
+    /// Issue one prefill on the shared lane, starting no earlier than the
+    /// caller's local time `now`; returns its completion time.
+    fn lane_issue(&mut self, now: u64, ticks: u64) -> u64 {
+        self.lane_clock = self.lane_clock.max(now) + ticks;
+        self.lane_clock
+    }
+
+    /// Account a release/preemption happening at the caller's local time
+    /// `now` — the floor a peer's stalled admission jumps its clock to.
+    fn release_at(&mut self, now: u64) {
+        self.live_now -= 1;
+        self.release_floor = self.release_floor.max(now);
+    }
+
+    /// Record the wall's current residency into a lane's stats (exact
+    /// global peaks: every reserve/grow site snapshots under the mutex).
+    fn snap_residency(&self, stats: &mut RolloutStats) {
+        stats.max_reserved_kv = stats.max_reserved_kv.max(self.kv.reserved());
+        stats.max_used_pages = stats.max_used_pages.max(self.kv.used_pages());
+    }
 }
 
 impl RolloutPolicy {
@@ -287,9 +423,10 @@ impl RolloutPolicy {
         let vocab = b.vocab();
         let capacity = b.capacity();
         let budget = b.budget();
+        let costs = b.cost_model();
         let sparse = self.mode.is_sparse();
         assert!(tasks.len() <= r, "chunk of {} > {} slots", tasks.len(), r);
-        let mut stats = RolloutStats { chunks: 1, ..RolloutStats::default() };
+        let mut stats = RolloutStats { chunks: 1, workers: 1, ..RolloutStats::default() };
         if tasks.is_empty() {
             return Ok((vec![], stats));
         }
@@ -308,6 +445,7 @@ impl RolloutPolicy {
         }
         let mut logp = b.prefill(&ids, &plens)?;
         stats.prefills += 1;
+        stats.prefill_blocked_ticks += costs.prefill_ticks;
 
         // ---- decode loop -------------------------------------------------
         let n = tasks.len();
@@ -367,6 +505,7 @@ impl RolloutPolicy {
                 }
                 if any {
                     b.compress(&do_mask)?;
+                    stats.decode_busy_ticks += costs.compress_ticks;
                     for slot in 0..r {
                         if do_mask[slot] > 0.0 {
                             out[slot].accounting.compression(capacity - budget);
@@ -384,6 +523,7 @@ impl RolloutPolicy {
                 .collect();
             logp = b.decode(&lens, &abs_pos, &step_tokens)?;
             stats.decode_steps += 1;
+            stats.decode_busy_ticks += costs.decode_ticks;
             stats.occupied_slot_steps += occupied;
             stats.idle_slot_steps += r - occupied;
             for slot in 0..r {
@@ -396,6 +536,9 @@ impl RolloutPolicy {
                 }
             }
         }
+        // serial engine: the lane's makespan is simply everything it did
+        stats.modeled_makespan_ticks =
+            stats.decode_busy_ticks + stats.prefill_blocked_ticks + stats.sched_stall_ticks;
         Ok((out, stats))
     }
 
@@ -487,9 +630,10 @@ impl RolloutPolicy {
         let vocab = b.vocab();
         let capacity = b.capacity();
         let budget = b.budget();
+        let costs = b.cost_model();
         let sparse = self.mode.is_sparse();
         let n = tasks.len();
-        let mut stats = RolloutStats { chunks: 1, ..RolloutStats::default() };
+        let mut stats = RolloutStats { chunks: 1, workers: 1, ..RolloutStats::default() };
         if n == 0 {
             return Ok((vec![], stats));
         }
@@ -550,6 +694,7 @@ impl RolloutPolicy {
         }
         let mut logp = b.prefill(&ids, &plens)?;
         stats.prefills += 1;
+        stats.prefill_blocked_ticks += costs.prefill_ticks;
         stats.max_reserved_kv = stats.max_reserved_kv.max(kv.reserved());
 
         let mut tokens = vec![PAD; r];
@@ -600,6 +745,9 @@ impl RolloutPolicy {
                     let row = b.prefill_slot(slot, pi)?;
                     stats.slot_prefills += 1;
                     stats.refills += 1;
+                    // serial engine: the whole decode batch stalls for this
+                    // slot prefill — the bubble the pipelined lane removes
+                    stats.prefill_blocked_ticks += costs.slot_prefill_ticks;
                     stats.max_reserved_kv = stats.max_reserved_kv.max(kv.reserved());
                     let mut live = LiveSeq {
                         pos,
@@ -666,6 +814,7 @@ impl RolloutPolicy {
                 }
                 if any {
                     b.compress(&do_mask)?;
+                    stats.decode_busy_ticks += costs.compress_ticks;
                     for slot in 0..r {
                         if do_mask[slot] > 0.0 {
                             let live = slots[slot].as_mut().expect("masked slot occupied");
@@ -723,6 +872,7 @@ impl RolloutPolicy {
             stats.peak_live_slots = stats.peak_live_slots.max(occupied);
             logp = b.decode(&lens, &abs_pos, &tokens)?;
             stats.decode_steps += 1;
+            stats.decode_busy_ticks += costs.decode_ticks;
             stats.occupied_slot_steps += occupied;
             stats.idle_slot_steps += r - occupied;
             for slot in 0..r {
@@ -733,11 +883,524 @@ impl RolloutPolicy {
             }
         }
 
+        // serial engine: makespan is the sum of everything the lane did
+        stats.modeled_makespan_ticks =
+            stats.decode_busy_ticks + stats.prefill_blocked_ticks + stats.sched_stall_ticks;
         let out = results
             .into_iter()
             .map(|s| s.expect("every queued task completed"))
             .collect();
         Ok((out, stats))
+    }
+
+    /// Pipelined rollout: a pool of worker threads drives one in-flight
+    /// decode batch each against a SHARED scheduler/KV wall, with slot
+    /// prefills issued to a dedicated prefill lane so recycling overlaps
+    /// decode instead of stalling it.
+    ///
+    /// The modeled hardware (virtual clock, `CostModel` ticks) is
+    /// disaggregated serving: one decode lane per worker plus a single
+    /// shared prefill lane. The continuous engine on the same cost model
+    /// is the serial baseline — one lane that pays every slot prefill
+    /// inline. `bench_rollout` holds the pipelined makespan strictly below
+    /// it.
+    ///
+    /// Mechanics per worker (each owns `backends[w]`):
+    /// * admissions (`try_admit`), releases, preemptions, and compression
+    ///   shrinks go through the shared `Scheduler`/`KvMemoryManager`
+    ///   behind one mutex; decode/prefill device calls run outside it;
+    /// * a freed slot's next prompt is admitted immediately, but its
+    ///   `prefill_slot` is *deferred* to the prefill lane: the slot idles
+    ///   (PAD) until the lane's virtual clock reaches its ready time,
+    ///   then joins the decode batch — so neighbours never stall;
+    /// * a paged grow stall preempts the lowest-progress sequence of the
+    ///   worker's OWN batch (cross-worker caches are untouchable) and
+    ///   requeues it on the shared queue — any worker may rerun it;
+    /// * a worker whose batch drains while the queue is non-empty parks
+    ///   until a peer releases KV; its virtual clock jumps to the
+    ///   release's timestamp (`sched_stall_ticks`).
+    ///
+    /// Token identity with `continuous` holds by construction: per-task
+    /// RNG plus batch-row independence make a task's tokens a pure
+    /// function of (seed, task) regardless of worker, slot, join step, or
+    /// preemption — `tests/engine_equivalence.rs` enforces it for worker
+    /// counts 1/2/4. Results come back in task order. Work counters in
+    /// the merged stats sum over lanes; `modeled_makespan_ticks` is the
+    /// lane max and `peak_live_slots` the peak globally admitted width.
+    pub fn rollout_pipelined<B: RolloutBackend + Send>(
+        &self,
+        backends: &mut [B],
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let workers = backends.len();
+        if workers == 0 {
+            bail!("pipelined rollout needs at least one worker backend");
+        }
+        let n = tasks.len();
+        if n == 0 {
+            return Ok((vec![], RolloutStats { workers, ..RolloutStats::default() }));
+        }
+        // every worker must see the same model geometry — they share one
+        // task queue and one wall
+        let b0 = &backends[0];
+        let geom = (b0.slots(), b0.prompt_len(), b0.max_seq(), b0.vocab(), b0.capacity(), b0.budget());
+        for b in backends.iter() {
+            let g = (b.slots(), b.prompt_len(), b.max_seq(), b.vocab(), b.capacity(), b.budget());
+            if g != geom {
+                bail!("pipelined worker backends disagree on geometry: {g:?} vs {geom:?}");
+            }
+        }
+        // same progress guarantee as the continuous engine: a lone
+        // sequence must be able to grow to its worst-case residency
+        if kv.pages_for(sched.reserve_per_seq) > kv.total_pages() {
+            bail!(
+                "pipelined rollout deadlock: one sequence may need {} KV tokens \
+                 but the wall holds only {}",
+                sched.reserve_per_seq,
+                kv.capacity()
+            );
+        }
+
+        let shared = Mutex::new(PipeShared {
+            queue: (0..n).collect(),
+            sched,
+            kv,
+            results: (0..n).map(|_| None).collect(),
+            lane_clock: 0,
+            release_floor: 0,
+            live_now: 0,
+            peak_live: 0,
+            failed: None,
+        });
+        let cv = Condvar::new();
+        let (shared, cv) = (&shared, &cv);
+        let policy = *self;
+
+        let joined = std::thread::scope(|scope| {
+            let handles: Vec<_> = backends
+                .iter_mut()
+                .map(|b| {
+                    scope.spawn(move || {
+                        let out =
+                            policy.pipelined_worker(b, tasks, seed, seq_id_base, shared, cv);
+                        if let Err(e) = &out {
+                            // poison the run so parked peers bail out
+                            // instead of waiting on releases that will
+                            // never come
+                            if let Ok(mut sh) = shared.lock() {
+                                if sh.failed.is_none() {
+                                    sh.failed = Some(e.to_string());
+                                }
+                            }
+                            cv.notify_all();
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join())
+                .collect::<Vec<_>>()
+        });
+
+        let mut stats = RolloutStats::default();
+        let mut makespan = 0u64;
+        for res in joined {
+            let (ws, finish) =
+                res.unwrap_or_else(|_| Err(anyhow::anyhow!("pipelined worker panicked")))?;
+            stats.merge(&ws);
+            makespan = makespan.max(finish);
+        }
+        stats.workers = workers;
+        stats.modeled_makespan_ticks = makespan;
+        let mut sh = shared
+            .lock()
+            .map_err(|_| anyhow::anyhow!("pipelined shared state poisoned"))?;
+        stats.peak_live_slots = stats.peak_live_slots.max(sh.peak_live);
+        let mut out = Vec::with_capacity(n);
+        for (pos, seq) in sh.results.iter_mut().enumerate() {
+            match seq.take() {
+                Some(s) => out.push(s),
+                None => bail!("pipelined rollout dropped task at position {pos}"),
+            }
+        }
+        Ok((out, stats))
+    }
+
+    /// One pipelined worker lane: a continuous-style decode loop over its
+    /// own backend, coordinating admission/release/growth through the
+    /// shared state and deferring slot prefills to the shared prefill
+    /// lane. Returns its stats and its final virtual clock.
+    fn pipelined_worker<B: RolloutBackend>(
+        &self,
+        b: &mut B,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        seq_id_base: u64,
+        shared: &Mutex<PipeShared<'_>>,
+        cv: &Condvar,
+    ) -> Result<(RolloutStats, u64)> {
+        let r = b.slots();
+        let p_len = b.prompt_len();
+        let max_seq = b.max_seq();
+        let vocab = b.vocab();
+        let capacity = b.capacity();
+        let budget = b.budget();
+        let costs = b.cost_model();
+        let sparse = self.mode.is_sparse();
+        let lock = || {
+            shared
+                .lock()
+                .map_err(|_| anyhow::anyhow!("pipelined shared state poisoned"))
+        };
+
+        let mut stats = RolloutStats { chunks: 1, workers: 1, ..RolloutStats::default() };
+        // this lane's virtual clock (ticks on the backend's cost model)
+        let mut now = 0u64;
+        let mut slots: Vec<Option<LiveSeq>> = (0..r).map(|_| None).collect();
+        let mut pending: Vec<Option<PendingRefill>> = (0..r).map(|_| None).collect();
+        let mut lens = vec![1i32; r];
+        let mut abs_pos = vec![1i32; r];
+        let mut tokens = vec![PAD; r];
+        let mut do_mask = vec![0.0f32; r];
+        // slots whose row in `logp` is fresh (sampled at the loop top);
+        // freshly joined slots carry an already-sampled token instead
+        let mut decoded = vec![false; r];
+        let mut logp: Vec<f32> = Vec::new();
+
+        // ---- initial wave: admit a batch head, one batched prefill ------
+        let mut ids = vec![PAD; r * p_len];
+        let mut plens = vec![1i32; r];
+        let mut w = 0usize;
+        {
+            let mut guard = lock()?;
+            while w < r {
+                let Some(pos) = guard.admit_front(tasks, seq_id_base) else { break };
+                let (idx, task) = tasks[pos];
+                let pi = &task.prompt_ids;
+                assert!(pi.len() <= p_len, "prompt {} > {}", pi.len(), p_len);
+                ids[w * p_len..w * p_len + pi.len()].copy_from_slice(pi);
+                plens[w] = pi.len() as i32;
+                lens[w] = pi.len() as i32;
+                abs_pos[w] = pi.len() as i32;
+                slots[w] = Some(LiveSeq {
+                    pos,
+                    rng: task_rng(seed, idx),
+                    gen: GenSeq::new(idx, pi.clone()),
+                });
+                w += 1;
+            }
+            guard.snap_residency(&mut stats);
+        }
+        if w > 0 {
+            for slot in w..r {
+                ids[slot * p_len] = BOS;
+            }
+            // the batched prefill shares the single modeled prefill lane
+            // with every other worker's; the decode lane blocks on it
+            // (nothing to decode before the first logits anyway)
+            let ready = lock()?.lane_issue(now, costs.prefill_ticks);
+            logp = b.prefill(&ids, &plens)?;
+            stats.prefills += 1;
+            stats.prefill_blocked_ticks += ready - now;
+            now = ready;
+            for d in decoded.iter_mut().take(w) {
+                *d = true;
+            }
+        }
+
+        loop {
+            // ---- sample from fresh logits; release finishers ------------
+            let mut released = false;
+            for slot in 0..r {
+                if !decoded[slot] {
+                    if slots[slot].is_none() && pending[slot].is_none() {
+                        tokens[slot] = PAD;
+                    }
+                    continue;
+                }
+                decoded[slot] = false;
+                let Some(live) = slots[slot].as_mut() else {
+                    tokens[slot] = PAD;
+                    continue;
+                };
+                let dist = &logp[slot * vocab..(slot + 1) * vocab];
+                let (tok, done) = self.sample_step(
+                    &mut live.rng,
+                    dist,
+                    &mut live.gen,
+                    lens[slot],
+                    abs_pos[slot],
+                    capacity,
+                    max_seq,
+                );
+                tokens[slot] = tok;
+                if done {
+                    let live = slots[slot].take().expect("occupied");
+                    let mut guard = lock()?;
+                    let sh = &mut *guard;
+                    sh.sched.release_seq(sh.kv, seq_id_base + live.pos as u64)?;
+                    sh.release_at(now);
+                    sh.results[live.pos] = Some(live.gen);
+                    tokens[slot] = PAD;
+                    released = true;
+                }
+            }
+            if released {
+                cv.notify_all();
+            }
+
+            // ---- join refills whose lane prefill has completed ----------
+            for slot in 0..r {
+                let ready = matches!(&pending[slot], Some(p) if p.ready_at <= now);
+                if !ready {
+                    continue;
+                }
+                let p = pending[slot].take().expect("checked above");
+                let (idx, task) = tasks[p.pos];
+                let pi = &task.prompt_ids;
+                assert!(pi.len() <= p_len, "prompt {} > {}", pi.len(), p_len);
+                let row = if stats.prefills == 0 {
+                    // this lane's whole first wave was refused at the wall,
+                    // so it has no live cache yet and the real backend's
+                    // prefill_slot would reject: run the batched entry with
+                    // just this prompt instead — batch-row independence
+                    // makes the slot's logits identical either way
+                    let mut jids = vec![PAD; r * p_len];
+                    let mut jplens = vec![1i32; r];
+                    jids[slot * p_len..slot * p_len + pi.len()].copy_from_slice(pi);
+                    jplens[slot] = pi.len() as i32;
+                    for (s, chunk) in jids.chunks_mut(p_len).enumerate() {
+                        if s != slot {
+                            chunk[0] = BOS;
+                        }
+                    }
+                    let all = b.prefill(&jids, &jplens)?;
+                    stats.prefills += 1;
+                    all[slot * vocab..(slot + 1) * vocab].to_vec()
+                } else {
+                    stats.slot_prefills += 1;
+                    b.prefill_slot(slot, pi)?
+                };
+                stats.refills += 1;
+                let mut live = LiveSeq {
+                    pos: p.pos,
+                    rng: task_rng(seed, idx),
+                    gen: GenSeq::new(idx, pi.clone()),
+                };
+                // identical per-token semantics to the continuous refill
+                // path: first token from the slot-prefill logits
+                let plen = pi.len() as i32;
+                let (tok, done) = self.sample_step(
+                    &mut live.rng,
+                    &row,
+                    &mut live.gen,
+                    plen,
+                    plen,
+                    capacity,
+                    max_seq,
+                );
+                tokens[slot] = tok;
+                lens[slot] = plen;
+                abs_pos[slot] = plen;
+                decoded[slot] = false;
+                if done {
+                    // degenerate single-token sequence: release; the slot
+                    // frees for the next admission pass below
+                    let mut guard = lock()?;
+                    let sh = &mut *guard;
+                    sh.sched.release_seq(sh.kv, seq_id_base + live.pos as u64)?;
+                    sh.release_at(now);
+                    sh.results[p.pos] = Some(live.gen);
+                    drop(guard);
+                    cv.notify_all();
+                    tokens[slot] = PAD;
+                    continue;
+                }
+                slots[slot] = Some(live);
+            }
+
+            // ---- issue refills: admit + queue on the prefill lane -------
+            {
+                let mut guard = lock()?;
+                for slot in 0..r {
+                    if slots[slot].is_some() || pending[slot].is_some() {
+                        continue;
+                    }
+                    let Some(pos) = guard.admit_front(tasks, seq_id_base) else {
+                        break; // queue empty, or wall: retry after releases
+                    };
+                    let ready_at = guard.lane_issue(now, costs.slot_prefill_ticks);
+                    pending[slot] = Some(PendingRefill { pos, ready_at });
+                    guard.snap_residency(&mut stats);
+                }
+            }
+
+            // ---- empty lane: wait for a join, a release, or the drain ---
+            let occupied = slots.iter().filter(|s| s.is_some()).count();
+            if occupied == 0 {
+                if let Some(t) = pending.iter().flatten().map(|p| p.ready_at).min() {
+                    // nothing decodable while the lane prefills: the
+                    // decode lane waits for the earliest join
+                    stats.prefill_blocked_ticks += t.saturating_sub(now);
+                    now = now.max(t);
+                    continue;
+                }
+                let mut guard = lock()?;
+                if guard.queue.is_empty() {
+                    break; // worker done (peers drain their own batches)
+                }
+                // the queue has work this lane cannot admit: a peer holds
+                // the wall. Park until a release (releases notify; the
+                // timeout re-checks `failed` and the deadlock predicate,
+                // never aborting a merely-slow run).
+                let stall_start = now;
+                let admitted = loop {
+                    if let Some(e) = &guard.failed {
+                        bail!("pipelined peer failed: {e}");
+                    }
+                    if guard.queue.is_empty() {
+                        break false;
+                    }
+                    if let Some(pos) = guard.admit_front(tasks, seq_id_base) {
+                        // honest virtual time: this admission only became
+                        // possible when a peer released KV
+                        now = now.max(guard.release_floor);
+                        let ready_at = guard.lane_issue(now, costs.slot_prefill_ticks);
+                        pending[0] = Some(PendingRefill { pos, ready_at });
+                        guard.snap_residency(&mut stats);
+                        break true;
+                    }
+                    // state-based deadlock check (NOT wall-clock based — a
+                    // slow real backend may take arbitrarily long between
+                    // releases): with no sequence admitted anywhere, no
+                    // future release can ever free room, so a refusal now
+                    // is a refusal forever.
+                    if guard.live_now == 0 {
+                        bail!(
+                            "pipelined rollout stalled: {} pending but nothing \
+                             admissible on an idle wall (reserve {} > free KV {})",
+                            guard.queue.len(),
+                            guard.sched.reserve_per_seq,
+                            guard.kv.available()
+                        );
+                    }
+                    let (g, _) = cv
+                        .wait_timeout(guard, Duration::from_millis(2))
+                        .map_err(|_| anyhow::anyhow!("pipelined shared state poisoned"))?;
+                    guard = g;
+                };
+                drop(guard);
+                if !admitted {
+                    break; // queue drained while waiting: worker done
+                }
+                stats.sched_stall_ticks += now - stall_start;
+                continue; // the pending refill joins via the lane
+            }
+
+            // ---- compression trigger (same per-sequence rule) -----------
+            if sparse {
+                let mut any = false;
+                for slot in 0..r {
+                    let need = slots[slot].is_some() && lens[slot] as usize >= capacity;
+                    do_mask[slot] = if need { 1.0 } else { 0.0 };
+                    if need {
+                        any = true;
+                    }
+                }
+                if any {
+                    b.compress(&do_mask)?;
+                    now += costs.compress_ticks;
+                    stats.decode_busy_ticks += costs.compress_ticks;
+                    let mut guard = lock()?;
+                    let sh = &mut *guard;
+                    for slot in 0..r {
+                        if do_mask[slot] > 0.0 {
+                            let live = slots[slot].as_mut().expect("masked slot occupied");
+                            live.gen.accounting.compression(capacity - budget);
+                            lens[slot] = budget as i32;
+                            sh.sched.compressed(sh.kv, seq_id_base + live.pos as u64, budget)?;
+                        }
+                    }
+                }
+            }
+
+            // ---- paged growth; stalls preempt from the OWN batch --------
+            {
+                let mut guard = lock()?;
+                let sh = &mut *guard;
+                let mut preempted = false;
+                for slot in 0..r {
+                    loop {
+                        let Some(live) = slots[slot].as_ref() else { break };
+                        let pos = live.pos;
+                        let need = lens[slot] as usize + 1;
+                        if sh.sched.grow(sh.kv, seq_id_base + pos as u64, need)? {
+                            sh.snap_residency(&mut stats);
+                            break;
+                        }
+                        // cross-worker caches are untouchable, so the
+                        // victim comes from this worker's batch; freed
+                        // pages help every lane (notify below)
+                        let victim = (0..r)
+                            .filter_map(|s| {
+                                slots[s]
+                                    .as_ref()
+                                    .map(|l| (l.gen.response_ids.len(), l.pos, s))
+                            })
+                            .min()
+                            .expect("the grower itself is live")
+                            .2;
+                        let v = slots[victim].take().expect("victim occupied");
+                        sh.sched.preempt(sh.kv, seq_id_base + v.pos as u64)?;
+                        sh.release_at(now);
+                        sh.queue.push_front(v.pos);
+                        tokens[victim] = PAD;
+                        decoded[victim] = false;
+                        stats.preemptions += 1;
+                        preempted = true;
+                        if victim == slot {
+                            break; // grower evicted: its slot is free now
+                        }
+                    }
+                }
+                debug_assert!(
+                    sh.kv.check_invariants().is_ok(),
+                    "wall invariants broken mid-rollout"
+                );
+                drop(guard);
+                if preempted {
+                    cv.notify_all();
+                }
+            }
+
+            // ---- one decode step over the mixed batch -------------------
+            let occupied = slots.iter().filter(|s| s.is_some()).count();
+            if occupied == 0 {
+                continue; // growth evicted the whole batch: re-admit/wait
+            }
+            stats.peak_live_slots = stats.peak_live_slots.max(occupied);
+            logp = b.decode(&lens, &abs_pos, &tokens)?;
+            now += costs.decode_ticks;
+            stats.decode_steps += 1;
+            stats.decode_busy_ticks += costs.decode_ticks;
+            stats.occupied_slot_steps += occupied;
+            stats.idle_slot_steps += r - occupied;
+            for slot in 0..r {
+                decoded[slot] = slots[slot].is_some();
+                if slots[slot].is_some() {
+                    lens[slot] += 1;
+                    abs_pos[slot] += 1;
+                }
+            }
+        }
+
+        Ok((stats, now))
     }
 }
 
@@ -833,6 +1496,31 @@ impl<'a> RolloutEngine<'a> {
         self.policy()
             .rollout_continuous(&mut backend, tasks, seed, sched, kv, seq_id_base)
     }
+
+    /// Pipelined rollout over the whole pending queue: `workers` decode
+    /// lanes (one `EngineBackend` each, all over this engine's artifacts)
+    /// against the shared scheduler/wall. See
+    /// `RolloutPolicy::rollout_pipelined`. This is the "handle story" for
+    /// the production path: `ModelEngine` is `Sync` (executable cache
+    /// behind a mutex), so N worker threads may each own an
+    /// `EngineBackend` borrowing the same engine + uploaded weights.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rollout_pipelined_lit(
+        &self,
+        params: &ParamsLit,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+        workers: usize,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let mut backends: Vec<EngineBackend> = (0..workers.max(1))
+            .map(|_| EngineBackend::new(self.engine, params, self.mode))
+            .collect();
+        self.policy()
+            .rollout_pipelined(&mut backends, tasks, seed, sched, kv, seq_id_base)
+    }
 }
 
 #[cfg(test)]
@@ -918,6 +1606,60 @@ mod tests {
             assert_eq!(tok, 1);
             assert_eq!(lp, 0.0, "renormalized point mass must be exactly 1");
         }
+    }
+
+    #[test]
+    fn stats_merge_sums_work_and_maxes_peaks() {
+        let a = RolloutStats {
+            chunks: 1,
+            decode_steps: 10,
+            occupied_slot_steps: 30,
+            idle_slot_steps: 10,
+            refills: 2,
+            prefills: 1,
+            slot_prefills: 2,
+            max_reserved_kv: 100,
+            max_used_pages: 5,
+            peak_live_slots: 4,
+            preemptions: 1,
+            workers: 1,
+            decode_busy_ticks: 100,
+            prefill_blocked_ticks: 40,
+            sched_stall_ticks: 0,
+            modeled_makespan_ticks: 140,
+        };
+        let b = RolloutStats {
+            chunks: 1,
+            decode_steps: 5,
+            occupied_slot_steps: 15,
+            idle_slot_steps: 5,
+            max_reserved_kv: 80,
+            max_used_pages: 9,
+            peak_live_slots: 2,
+            workers: 1,
+            decode_busy_ticks: 50,
+            prefill_blocked_ticks: 40,
+            sched_stall_ticks: 7,
+            modeled_makespan_ticks: 97,
+            ..RolloutStats::default()
+        };
+        let mut m = a;
+        m.merge(&b);
+        // work counters sum (serial composition)...
+        assert_eq!(m.decode_steps, 15);
+        assert_eq!(m.device_slot_steps(), 60);
+        assert_eq!(m.decode_busy_ticks, 150);
+        assert_eq!(m.prefill_blocked_ticks, 80);
+        assert_eq!(m.sched_stall_ticks, 7);
+        assert_eq!(m.modeled_makespan_ticks, 237);
+        // ...high-water marks take the max
+        assert_eq!(m.max_reserved_kv, 100);
+        assert_eq!(m.max_used_pages, 9);
+        assert_eq!(m.peak_live_slots, 4);
+        // denominator contract: slot-steps stay per-device-step, so the
+        // merged occupancy is the slot-step-weighted mean
+        assert!((m.occupancy() - 45.0 / 60.0).abs() < 1e-12);
+        assert!((m.idle_frac() - 15.0 / 60.0).abs() < 1e-12);
     }
 
     #[test]

@@ -107,6 +107,15 @@ pub struct Scheduler {
     pub reserve_per_seq: usize,
     /// What a sequence is charged at admission (see module docs).
     pub admission: AdmissionPolicy,
+    /// Free pages a paged admission must leave behind while other
+    /// sequences are live (`kv-admit-headroom-pages`; default 1 — the
+    /// original hard-coded behavior). Admitting flush against the wall
+    /// (headroom 0) guarantees the next grow stalls and the newcomer is
+    /// immediately preempted — a pure admit/preempt thrash cycle under
+    /// pressure; larger headroom trades admitted width for fewer
+    /// preemptions. Ignored by worst-case admission, and bypassed when
+    /// the pool is empty (progress guarantee).
+    pub admit_headroom_pages: usize,
     pub stats: SchedulerStats,
 }
 
@@ -129,6 +138,7 @@ impl Scheduler {
             slots,
             reserve_per_seq,
             admission: AdmissionPolicy::WorstCase,
+            admit_headroom_pages: 1,
             stats: SchedulerStats::default(),
         }
     }
@@ -136,6 +146,13 @@ impl Scheduler {
     /// Select the admission policy (builder style).
     pub fn with_admission(mut self, admission: AdmissionPolicy) -> Self {
         self.admission = admission;
+        self
+    }
+
+    /// Set the paged-admission headroom (builder style; see
+    /// `admit_headroom_pages`).
+    pub fn with_headroom(mut self, pages: usize) -> Self {
+        self.admit_headroom_pages = pages;
         self
     }
 
@@ -226,11 +243,12 @@ impl Scheduler {
     /// when the wall is full. Refusal is not an error — the engine keeps
     /// decoding and retries after the next release.
     ///
-    /// Paged admission keeps **one page of headroom** whenever other
-    /// sequences are live: admitting flush against the wall guarantees the
-    /// next grow stalls and the newcomer (lowest progress) is immediately
-    /// preempted — a pure admit/preempt thrash cycle. With an empty pool
-    /// the full pool is usable (progress guarantee).
+    /// Paged admission keeps `admit_headroom_pages` pages of growth
+    /// headroom whenever other sequences are live (default 1): admitting
+    /// flush against the wall guarantees the next grow stalls and the
+    /// newcomer (lowest progress) is immediately preempted — a pure
+    /// admit/preempt thrash cycle. With an empty pool the full pool is
+    /// usable (progress guarantee).
     pub fn try_admit(
         &mut self,
         kv: &mut KvMemoryManager,
@@ -245,7 +263,7 @@ impl Scheduler {
                 if kv.live_sequences() == 0 {
                     pages <= kv.free_pages()
                 } else {
-                    pages < kv.free_pages()
+                    pages.saturating_add(self.admit_headroom_pages) <= kv.free_pages()
                 }
             }
         };
@@ -550,6 +568,35 @@ mod tests {
         s.compressed(&mut kv, 1, 5).unwrap();
         assert_eq!(kv.free_pages(), 3);
         kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admit_headroom_gates_paged_admission() {
+        // pool of 10 pages; 10-token prompts charge 11 tokens = 2 pages
+        let mk_kv = || KvMemoryManager::with_pages(100, 10);
+        // headroom 0: admissions pack flush against the wall (5 fit)
+        let mut kv = mk_kv();
+        let mut s0 = mk(8, 40).with_admission(AdmissionPolicy::Paged).with_headroom(0);
+        for id in 1..=5 {
+            assert!(s0.try_admit(&mut kv, id, 10), "seq {id} refused at headroom 0");
+        }
+        assert_eq!(kv.free_pages(), 0);
+        // headroom 4: every admission must leave 4 free pages -> 3 fit
+        let mut kv = mk_kv();
+        let mut s4 = mk(8, 40).with_admission(AdmissionPolicy::Paged).with_headroom(4);
+        for id in 1..=3 {
+            assert!(s4.try_admit(&mut kv, id, 10), "seq {id} refused at headroom 4");
+        }
+        assert!(!s4.try_admit(&mut kv, 4, 10));
+        assert_eq!(kv.free_pages(), 4);
+        // empty-pool bypass: even huge headroom admits a first sequence
+        // (progress guarantee), then gates the second
+        let mut kv = mk_kv();
+        let mut sb = mk(8, 40).with_admission(AdmissionPolicy::Paged).with_headroom(100);
+        assert!(sb.try_admit(&mut kv, 1, 10));
+        assert!(!sb.try_admit(&mut kv, 2, 10));
+        // the default reproduces the original one-page rule
+        assert_eq!(mk(8, 40).admit_headroom_pages, 1);
     }
 
     #[test]

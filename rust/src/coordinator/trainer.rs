@@ -66,6 +66,20 @@ pub struct StepReport {
     pub kv_page_occupancy: f64,
     /// Peak concurrently occupied decode slots (admitted width).
     pub peak_live_slots: usize,
+    /// Worker lanes the rollout ran on (1 unless `engine = pipelined`).
+    pub rollout_workers: usize,
+    /// Modeled-time breakdown on the backend cost model (all zero for the
+    /// real artifact backend, which is wall-timed via `rollout_secs`):
+    /// ticks busy decoding/compressing, summed over lanes.
+    pub decode_busy_ticks: u64,
+    /// Ticks a decode lane sat blocked on prefill work.
+    pub prefill_blocked_ticks: u64,
+    /// Ticks a decode lane idled at the memory wall waiting for a peer
+    /// release (pipelined only).
+    pub sched_stall_ticks: u64,
+    /// Modeled end-to-end makespan (serial sum, or the lane max when
+    /// pipelined).
+    pub modeled_makespan_ticks: u64,
 }
 
 /// The trainer: owns learner state, data order, metrics, and the wall.
@@ -106,7 +120,8 @@ impl<'a> Trainer<'a> {
     }
 
     /// Run all rollouts for one step through the memory-wall scheduler,
-    /// on the configured engine (static chunked vs continuous batching).
+    /// on the configured engine (static chunked, continuous, or pipelined
+    /// multi-worker batching).
     /// Returns sequences in prompt-major group order plus rollout stats.
     ///
     /// The rollout seed is drawn once per step and per-task RNG streams
@@ -120,7 +135,8 @@ impl<'a> Trainer<'a> {
         let n = task_indices.len() * g;
         let rollout = RolloutEngine::new(self.engine, self.cfg.mode, self.cfg.sampling);
         let mut scheduler = Scheduler::new(&self.engine.manifest, self.cfg.mode.is_sparse())
-            .with_admission(self.cfg.memory.admission);
+            .with_admission(self.cfg.memory.admission)
+            .with_headroom(self.cfg.memory.kv_admit_headroom_pages);
         let seed = self.rng.next_u64();
         let params = ParamsLit::new(&self.state.params);
         // flat sequence ids: seq s belongs to prompt s / g
@@ -135,6 +151,15 @@ impl<'a> Trainer<'a> {
                 &mut scheduler,
                 &mut self.kv,
                 0,
+            ),
+            EngineKind::Pipelined => rollout.rollout_pipelined_lit(
+                &params,
+                &tasks,
+                seed,
+                &mut scheduler,
+                &mut self.kv,
+                0,
+                self.cfg.rollout_workers,
             ),
             EngineKind::Static => rollout.rollout_static_queue_lit(
                 &params,
@@ -322,6 +347,11 @@ impl<'a> Trainer<'a> {
                 rstats.max_used_pages as f64 / self.kv.total_pages() as f64
             },
             peak_live_slots: rstats.peak_live_slots,
+            rollout_workers: rstats.workers.max(1),
+            decode_busy_ticks: rstats.decode_busy_ticks,
+            prefill_blocked_ticks: rstats.prefill_blocked_ticks,
+            sched_stall_ticks: rstats.sched_stall_ticks,
+            modeled_makespan_ticks: rstats.modeled_makespan_ticks,
         };
 
         self.metrics.begin_step();
@@ -353,6 +383,14 @@ impl<'a> Trainer<'a> {
         };
         self.metrics.push("kv_fragmentation", frag);
         self.metrics.push("peak_live_slots", report.peak_live_slots as f64);
+        self.metrics.push("rollout_workers", report.rollout_workers as f64);
+        // modeled-time breakdown (all zero on the real backend; the
+        // hermetic mock benches populate it — kept in the CSV so engine
+        // comparisons line up column-for-column either way)
+        self.metrics.push("decode_busy_ticks", report.decode_busy_ticks as f64);
+        self.metrics.push("prefill_blocked_ticks", report.prefill_blocked_ticks as f64);
+        self.metrics.push("sched_stall_ticks", report.sched_stall_ticks as f64);
+        self.metrics.push("modeled_makespan_ticks", report.modeled_makespan_ticks as f64);
         self.metrics.push("informative_groups", summary.informative_groups);
         Ok(report)
     }

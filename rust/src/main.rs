@@ -38,7 +38,8 @@ fn usage() -> ! {
   train:    --mode <dense|naive:M|sparse-rl:M> --steps N
             --init-checkpoint ckpt --out-dir runs/x  [config keys...]
   eval:     --checkpoint ckpt --mode <...> [--bench name] [--limit N]
-            [--engine static|continuous] [--admission worst-case|paged]
+            [--engine static|continuous|pipelined] [--rollout-workers N]
+            [--admission worst-case|paged] [--kv-admit-headroom-pages N]
             [--kv-page-tokens N] [--global-kv-tokens N]
   rollout:  --checkpoint ckpt --mode <...> [--n 4] [--temperature T]"
     );
@@ -148,12 +149,23 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
     cfg.apply_cli(args)?;
     // apply_cli tolerates unknown/bad keys (subcommands have extras); the
     // knobs this subcommand advertises must fail loudly on a bad value
-    for key in ["engine", "admission", "kv-page-tokens", "global-kv-tokens"] {
+    for key in [
+        "engine",
+        "rollout-workers",
+        "admission",
+        "kv-admit-headroom-pages",
+        "kv-page-tokens",
+        "global-kv-tokens",
+    ] {
         if let Some(v) = args.opt(key) {
             cfg.apply(key, v).with_context(|| format!("--{key}"))?;
         }
     }
-    let opts = sparse_rl::coordinator::EvalOptions { engine: cfg.engine, memory: cfg.memory };
+    let opts = sparse_rl::coordinator::EvalOptions {
+        engine: cfg.engine,
+        memory: cfg.memory,
+        rollout_workers: cfg.rollout_workers,
+    };
     match args.opt("bench") {
         Some(name) => {
             let suite = benchmarks::suite();

@@ -6,10 +6,9 @@
 //! shapes come from the manifest; the engine's job is marshalling and
 //! invariant checks, never shape arithmetic.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -150,10 +149,18 @@ impl Hyp {
 }
 
 /// The engine: client + manifest + lazily compiled entry points.
+///
+/// `ModelEngine` is `Sync`: the executable cache sits behind a mutex and
+/// per-entry latency counters are atomics, so the pipelined rollout
+/// engine's worker threads can each drive their own `EngineBackend` over
+/// one shared `&ModelEngine`. (Whether concurrent *execution* actually
+/// parallelizes is the runtime's business — the vendored offline stub
+/// errors on execution either way, and a real PJRT client serializes or
+/// parallelizes internally.)
 pub struct ModelEngine {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
-    exes: RefCell<BTreeMap<String, Rc<Executable>>>,
+    exes: Mutex<BTreeMap<String, Arc<Executable>>>,
 }
 
 impl ModelEngine {
@@ -163,17 +170,23 @@ impl ModelEngine {
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
-        Ok(ModelEngine { client, manifest, exes: RefCell::new(BTreeMap::new()) })
+        Ok(ModelEngine { client, manifest, exes: Mutex::new(BTreeMap::new()) })
     }
 
-    /// Get (compiling on first use) an entry point by name.
-    pub fn exe(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.exes.borrow().get(name) {
+    /// Get (compiling on first use) an entry point by name. The cache
+    /// lock is held across a first-use compile — a deliberate choice:
+    /// racing workers would otherwise compile the same entry twice.
+    pub fn exe(&self, name: &str) -> Result<Arc<Executable>> {
+        let mut exes = self
+            .exes
+            .lock()
+            .map_err(|_| anyhow::anyhow!("executable cache poisoned"))?;
+        if let Some(e) = exes.get(name) {
             return Ok(e.clone());
         }
         let spec = self.manifest.entry(name)?;
-        let exe = Rc::new(Executable::load(&self.client, spec)?);
-        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        let exe = Arc::new(Executable::load(&self.client, spec)?);
+        exes.insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
@@ -475,10 +488,13 @@ impl ModelEngine {
     /// Per-entry mean latency report (perf instrumentation).
     pub fn latency_report(&self) -> Vec<(String, u64, f64)> {
         self.exes
-            .borrow()
-            .iter()
-            .map(|(n, e)| (n.clone(), e.calls.get(), e.mean_latency_ns()))
-            .collect()
+            .lock()
+            .map(|exes| {
+                exes.iter()
+                    .map(|(n, e)| (n.clone(), e.calls(), e.mean_latency_ns()))
+                    .collect()
+            })
+            .unwrap_or_default()
     }
 }
 

@@ -5,6 +5,7 @@
 //! (return_tuple=True) tuple output back into `HostTensor`s. Compilation
 //! happens once at load; execution is the request-path operation.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -13,12 +14,17 @@ use super::manifest::EntrySpec;
 use super::tensor::HostTensor;
 
 /// A compiled AOT entry point bound to its manifest signature.
+///
+/// Thread-safety: execution statistics are relaxed atomics so an
+/// `Executable` can be shared (`Arc`) across the pipelined engine's worker
+/// threads; the counters need no cross-counter consistency, only eventual
+/// totals for the latency report.
 pub struct Executable {
     pub spec: EntrySpec,
     exe: xla::PjRtLoadedExecutable,
-    /// Cumulative execution statistics (lock-free; single-threaded use).
-    pub calls: std::cell::Cell<u64>,
-    pub total_ns: std::cell::Cell<u64>,
+    /// Cumulative execution statistics (relaxed atomics).
+    calls: AtomicU64,
+    total_ns: AtomicU64,
 }
 
 impl Executable {
@@ -42,9 +48,14 @@ impl Executable {
         Ok(Executable {
             spec: spec.clone(),
             exe,
-            calls: std::cell::Cell::new(0),
-            total_ns: std::cell::Cell::new(0),
+            calls: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
         })
+    }
+
+    /// Executions so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
     }
 
     /// Execute with host tensors; returns outputs in manifest order.
@@ -84,11 +95,11 @@ impl Executable {
 
     /// Mean execution latency so far (ns), for the perf report.
     pub fn mean_latency_ns(&self) -> f64 {
-        let c = self.calls.get();
+        let c = self.calls.load(Ordering::Relaxed);
         if c == 0 {
             0.0
         } else {
-            self.total_ns.get() as f64 / c as f64
+            self.total_ns.load(Ordering::Relaxed) as f64 / c as f64
         }
     }
 
@@ -146,9 +157,9 @@ impl Executable {
         let out_lit = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetching {} output: {e:?}", self.spec.name))?;
-        self.calls.set(self.calls.get() + 1);
+        self.calls.fetch_add(1, Ordering::Relaxed);
         self.total_ns
-            .set(self.total_ns.get() + t0.elapsed().as_nanos() as u64);
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         out_lit
             .to_tuple()
             .map_err(|e| anyhow::anyhow!("untupling {} output: {e:?}", self.spec.name))

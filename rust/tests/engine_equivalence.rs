@@ -1,9 +1,9 @@
-//! Determinism/equivalence harness for the two rollout engines.
+//! Determinism/equivalence harness for the three rollout engines.
 //!
 //! Runs entirely on the deterministic mock backend (`coordinator::mock`),
 //! so these properties execute hermetically — no artifacts, no PJRT. The
 //! contract under test is the tentpole guarantee of the continuous-
-//! batching refactor:
+//! batching and pipelined-worker refactors:
 //!
 //! 1. **Token equivalence** — for every task, the static chunked engine
 //!    and the continuous slot-recycling engine emit identical
@@ -19,11 +19,18 @@
 //!    count equals the scheduler's closed-form list-scheduling prediction,
 //!    and the static engine's equals the chunked closed form; continuous
 //!    is never worse and strictly better under skewed lengths.
+//! 4. **Pipelined equivalence** — the pipelined worker-pool engine is
+//!    token-identical to continuous (and static) for every task at worker
+//!    counts 1/2/4 (override with `ROLLOUT_WORKERS=n`), its slot-step
+//!    accounting obeys the shared denominator contract
+//!    (`occupied + idle == decode_steps * slots`), and a
+//!    preemption-heavy multi-worker run on a tiny paged wall neither
+//!    deadlocks nor leaks a page.
 
-use sparse_rl::config::{RolloutMode, SamplingConfig};
+use sparse_rl::config::{AdmissionPolicy, RolloutMode, SamplingConfig};
 use sparse_rl::coordinator::{
-    GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy, RolloutStats,
-    Scheduler,
+    CostModel, GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy,
+    RolloutStats, Scheduler,
 };
 use sparse_rl::data::task::Task;
 use sparse_rl::runtime::Method;
@@ -32,6 +39,17 @@ use sparse_rl::util::rng::Rng;
 
 fn mk_sched(slots: usize, reserve: usize) -> Scheduler {
     Scheduler::worst_case(slots, reserve)
+}
+
+/// Worker counts the pipelined properties run at. CI pins one count per
+/// job via `ROLLOUT_WORKERS` (1 and 4); local runs sweep all three.
+fn worker_counts() -> Vec<usize> {
+    match std::env::var("ROLLOUT_WORKERS") {
+        Ok(v) => vec![v
+            .parse()
+            .expect("ROLLOUT_WORKERS must be a positive integer")],
+        Err(_) => vec![1, 2, 4],
+    }
 }
 
 /// Drive the static engine exactly the way the trainer does: the shared
@@ -64,6 +82,25 @@ fn run_continuous(
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
     policy
         .rollout_continuous(backend, &flat, seed, &mut sched, kv, 0)
+        .map_err(|e| e.to_string())
+}
+
+/// Run the pipelined engine with `workers` lanes (one cloned backend
+/// each) over the shared scheduler/wall.
+#[allow(clippy::too_many_arguments)]
+fn run_pipelined(
+    policy: &RolloutPolicy,
+    proto: &MockModelBackend,
+    tasks: &[Task],
+    seed: u64,
+    sched: &mut Scheduler,
+    kv: &mut KvMemoryManager,
+    workers: usize,
+) -> Result<(Vec<GenSeq>, RolloutStats), String> {
+    let mut backends: Vec<MockModelBackend> = (0..workers).map(|_| proto.clone()).collect();
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    policy
+        .rollout_pipelined(&mut backends, &flat, seed, sched, kv, 0)
         .map_err(|e| e.to_string())
 }
 
@@ -322,6 +359,212 @@ fn prop_static_results_do_not_depend_on_chunking() {
             Ok(())
         },
     );
+}
+
+/// The shared denominator contract: one decode invocation contributes
+/// exactly `slots` slot-steps, on every engine and any worker count.
+fn audit_slot_steps(name: &str, st: &RolloutStats, slots: usize) -> Result<(), String> {
+    if st.occupied_slot_steps + st.idle_slot_steps != st.decode_steps * slots {
+        return Err(format!(
+            "{name}: slot-step denominator broken: {} + {} != {} * {slots}",
+            st.occupied_slot_steps, st.idle_slot_steps, st.decode_steps
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_pipelined_matches_continuous_and_static_for_every_task() {
+    let counts = worker_counts();
+    propcheck::check(
+        "three-way-engine-equivalence",
+        PropConfig { cases: 48, seed: 0xE9_0003, max_size: 40 },
+        |rng, size| {
+            let sc = Scenario::gen(rng, size);
+            let policy = sc.policy();
+            let costs = CostModel::representative();
+
+            let mut kv_s = KvMemoryManager::new(sc.kv_cap);
+            let (stat_seqs, stat_stats) = run_static(
+                &policy,
+                &mut sc.backend().with_costs(costs),
+                &sc.tasks,
+                sc.seed,
+                sc.reserve,
+                &mut kv_s,
+            )?;
+            let mut kv_c = KvMemoryManager::new(sc.kv_cap);
+            let (cont_seqs, cont_stats) = run_continuous(
+                &policy,
+                &mut sc.backend().with_costs(costs),
+                &sc.tasks,
+                sc.seed,
+                sc.reserve,
+                &mut kv_c,
+            )?;
+            audit_slot_steps("static", &stat_stats, sc.slots)?;
+            audit_slot_steps("continuous", &cont_stats, sc.slots)?;
+            // serial-lane identity: makespan is exactly the tick total
+            if cont_stats.modeled_makespan_ticks
+                != cont_stats.decode_busy_ticks
+                    + cont_stats.prefill_blocked_ticks
+                    + cont_stats.sched_stall_ticks
+            {
+                return Err("continuous makespan != sum of its tick components".into());
+            }
+
+            for &workers in &counts {
+                let mut kv_p = KvMemoryManager::new(sc.kv_cap);
+                let mut sched_p = mk_sched(sc.slots, sc.reserve);
+                let proto = sc.backend().with_costs(costs);
+                let (pipe_seqs, pipe_stats) = run_pipelined(
+                    &policy,
+                    &proto,
+                    &sc.tasks,
+                    sc.seed,
+                    &mut sched_p,
+                    &mut kv_p,
+                    workers,
+                )?;
+
+                // token/logp/accounting identity per task, all engines
+                if pipe_seqs.len() != cont_seqs.len() {
+                    return Err(format!("w={workers}: result count mismatch"));
+                }
+                for ((a, b), c) in stat_seqs.iter().zip(cont_seqs.iter()).zip(pipe_seqs.iter()) {
+                    seqs_equal(a, b)?;
+                    seqs_equal(b, c)?;
+                }
+
+                // denominator contract holds after the cross-lane merge
+                audit_slot_steps(&format!("pipelined w={workers}"), &pipe_stats, sc.slots)?;
+                // identical productive work (worst-case admission: no
+                // preemptions, so every engine decodes each token once)
+                if pipe_stats.preemptions != 0 {
+                    return Err(format!("w={workers}: worst-case admission preempted"));
+                }
+                if pipe_stats.occupied_slot_steps != cont_stats.occupied_slot_steps {
+                    return Err(format!(
+                        "w={workers}: productive slot-steps diverge: pipelined {} vs \
+                         continuous {}",
+                        pipe_stats.occupied_slot_steps, cont_stats.occupied_slot_steps
+                    ));
+                }
+                // a lane's finish clock can never exceed the total work
+                // charged across lanes
+                if pipe_stats.modeled_makespan_ticks
+                    > pipe_stats.decode_busy_ticks
+                        + pipe_stats.prefill_blocked_ticks
+                        + pipe_stats.sched_stall_ticks
+                {
+                    return Err(format!(
+                        "w={workers}: makespan {} exceeds summed lane work",
+                        pipe_stats.modeled_makespan_ticks
+                    ));
+                }
+                if pipe_stats.workers != workers {
+                    return Err(format!(
+                        "w={workers}: stats claim {} workers",
+                        pipe_stats.workers
+                    ));
+                }
+
+                // wall hygiene: drained, invariants intact, balanced books
+                if kv_p.reserved() != 0 {
+                    return Err(format!("w={workers}: {} KV tokens leaked", kv_p.reserved()));
+                }
+                kv_p.check_invariants().map_err(|e| e.to_string())?;
+                if sched_p.stats.live_seqs() != 0 {
+                    return Err(format!("w={workers}: scheduler live_seqs not drained"));
+                }
+                if sched_p.stats.seq_admissions != sc.tasks.len() {
+                    return Err(format!(
+                        "w={workers}: admissions {} != tasks {}",
+                        sched_p.stats.seq_admissions,
+                        sc.tasks.len()
+                    ));
+                }
+                // global admitted width observed by the wall is bounded by
+                // the total slot budget of the pool
+                if kv_p.peak_live_seqs > workers * sc.slots {
+                    return Err(format!(
+                        "w={workers}: peak admitted width {} > {} total slots",
+                        kv_p.peak_live_seqs,
+                        workers * sc.slots
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
+    // Paged admission + a wall barely above one worst-case sequence +
+    // several workers + long responses: constant grow stalls, heavy
+    // preempt/requeue traffic, workers parking on the wall. The run must
+    // drain (no deadlock), stay token-identical to continuous, balance
+    // every admission with a release, and leak nothing — at every worker
+    // count.
+    let (slots, prompt_len, max_seq, budget, buffer) = (2usize, 16usize, 96usize, 24usize, 8usize);
+    let (page, seed) = (4usize, 11u64);
+    let mode = RolloutMode::SparseRl(Method::RKv);
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 40 };
+    let policy = RolloutPolicy::new(mode, sampling);
+    let reserve = budget + buffer; // 32 tokens = 8 pages
+    // tiny wall: room for ~1.5 worst-case sequences -> guaranteed stalls
+    let kv_cap = reserve + reserve / 2;
+    let mut rng = Rng::new(5);
+    let tasks: Vec<Task> = (0..24)
+        .map(|_| Task::gen(&mut rng, 1, prompt_len))
+        .collect();
+    let backend = || {
+        let mut b = MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer);
+        b.eos_pull = 0.05; // long responses: lots of growth pressure
+        b
+    };
+
+    // reference tokens from the deterministic continuous engine
+    let mut kv_c = KvMemoryManager::with_pages(kv_cap, page);
+    let mut sched_c = mk_sched(slots, reserve).with_admission(AdmissionPolicy::Paged);
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    let (cont_seqs, _) = policy
+        .rollout_continuous(&mut backend(), &flat, seed, &mut sched_c, &mut kv_c, 0)
+        .expect("continuous reference");
+
+    for workers in worker_counts() {
+        let mut kv = KvMemoryManager::with_pages(kv_cap, page);
+        let mut sched = mk_sched(slots, reserve).with_admission(AdmissionPolicy::Paged);
+        let (seqs, stats) = run_pipelined(
+            &policy, &backend(), &tasks, seed, &mut sched, &mut kv, workers,
+        )
+        .unwrap_or_else(|e| panic!("w={workers}: pipelined stress failed: {e}"));
+
+        assert_eq!(seqs.len(), tasks.len(), "w={workers}: dropped tasks");
+        for (a, b) in cont_seqs.iter().zip(seqs.iter()) {
+            seqs_equal(a, b).unwrap_or_else(|e| panic!("w={workers}: {e}"));
+        }
+        // pool conservation under preemption traffic
+        assert_eq!(kv.reserved(), 0, "w={workers}: KV tokens leaked");
+        assert_eq!(kv.used_pages(), 0, "w={workers}: pages leaked");
+        kv.check_invariants().unwrap();
+        assert_eq!(sched.stats.live_seqs(), 0, "w={workers}: live_seqs not drained");
+        assert_eq!(
+            sched.stats.seq_admissions,
+            tasks.len() + sched.stats.preemptions,
+            "w={workers}: every admission must balance a finish or a preemption"
+        );
+        assert_eq!(
+            stats.preemptions, sched.stats.preemptions,
+            "w={workers}: engine and scheduler disagree on preemptions"
+        );
+        assert!(
+            kv.peak_live_seqs <= workers * slots,
+            "w={workers}: admitted width {} exceeds the pool's slot budget",
+            kv.peak_live_seqs
+        );
+    }
 }
 
 #[test]

@@ -15,8 +15,12 @@
 //!    admission admits strictly wider and finishes in strictly fewer
 //!    decode steps than worst-case reservation, dense AND sparse.
 //! 4. **Eval regressions** — an empty benchmark yields a zero-item result
-//!    (not NaN), and `evaluate_with_backend` is engine-agnostic: static
-//!    and continuous (and paged-continuous) produce identical EvalResults.
+//!    (not NaN), and `evaluate_with_backend` is engine-agnostic: static,
+//!    continuous (worst-case and paged), and pipelined (several worker
+//!    counts) produce identical EvalResults.
+//! 5. **Admission headroom** — `kv-admit-headroom-pages` is
+//!    scheduling-only (token-identical) and damps the admit/preempt
+//!    thrash cycle under extreme pressure.
 
 use sparse_rl::config::{AdmissionPolicy, EngineKind, RolloutMode, SamplingConfig};
 use sparse_rl::coordinator::{
@@ -316,6 +320,56 @@ fn paged_admission_raises_width_and_saves_decode_steps() {
 }
 
 #[test]
+fn admit_headroom_cuts_preemption_thrash() {
+    // Extreme pressure: paged admission on a wall two worst-case
+    // sequences wide, long responses, cheap prompts. With headroom 0 the
+    // scheduler packs admissions flush against the wall, so growth stalls
+    // immediately and newly admitted (lowest-progress) sequences are
+    // preempted right back off — the admit/preempt thrash cycle the
+    // `kv-admit-headroom-pages` knob exists to damp. The knob is
+    // scheduling-only (identical tokens), and in aggregate over several
+    // seeds the extra headroom must cut the preemption count.
+    let (slots, prompt_len, max_seq, budget, buffer) = (6usize, 12usize, 96usize, 24usize, 8usize);
+    let page = 4usize;
+    let mode = RolloutMode::SparseRl(Method::RKv);
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 48 };
+    let policy = RolloutPolicy::new(mode, sampling);
+    let reserve = budget + buffer; // 32 tokens = 8 pages
+    let kv_cap = reserve * 2; // 16 pages: heavy growth pressure
+    let run_at = |headroom: usize, seed: u64| {
+        let mut backend = MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer);
+        backend.eos_pull = 0.05; // long responses -> sustained growth
+        let mut rng = Rng::new(seed);
+        let tasks: Vec<Task> = (0..24).map(|_| Task::gen(&mut rng, 1, prompt_len)).collect();
+        let mut kv = KvMemoryManager::with_pages(kv_cap, page);
+        let mut sched = paged(slots, reserve).with_headroom(headroom);
+        let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+        let (seqs, stats) = policy
+            .rollout_continuous(&mut backend, &flat, seed, &mut sched, &mut kv, 0)
+            .expect("rollout under pressure");
+        assert_eq!(kv.reserved(), 0, "headroom {headroom}: leaked KV");
+        kv.check_invariants().unwrap();
+        (seqs, stats)
+    };
+
+    let (mut thrash0, mut thrash2) = (0usize, 0usize);
+    for seed in [3u64, 7, 13, 29] {
+        let (s0, st0) = run_at(0, seed);
+        let (s2, st2) = run_at(2, seed);
+        for (a, b) in s0.iter().zip(s2.iter()) {
+            seqs_equal(a, b).expect("headroom changed tokens (BUG)");
+        }
+        thrash0 += st0.preemptions;
+        thrash2 += st2.preemptions;
+    }
+    assert!(thrash0 > 0, "pressure scenario produced no thrash at headroom 0");
+    assert!(
+        thrash2 < thrash0,
+        "headroom failed to cut preempt/readmit thrash: {thrash2} !< {thrash0}"
+    );
+}
+
+#[test]
 fn paged_wall_too_small_for_one_sequence_errors_cleanly() {
     // a pool that cannot hold even one worst-case sequence must refuse up
     // front (the preempt/requeue loop could otherwise thrash forever)
@@ -350,12 +404,12 @@ fn eval_setup(n_items: usize) -> (RolloutPolicy, Vec<Task>, MockModelBackend, us
 fn empty_benchmark_eval_is_zero_items_not_nan() {
     // regression: dividing by tasks.len() / (tasks.len() * k) unguarded
     // produced NaN accuracy that silently poisoned the suite macro-average
-    let (policy, _, mut backend, slots, reserve) = eval_setup(0);
+    let (policy, _, backend, slots, reserve) = eval_setup(0);
     let mut sched = worst_case(slots, reserve);
     let mut kv = KvMemoryManager::new(reserve * slots);
     let r = evaluate_with_backend(
         &policy,
-        &mut backend,
+        &mut [backend],
         EngineKind::Static,
         &mut sched,
         &mut kv,
@@ -375,23 +429,28 @@ fn empty_benchmark_eval_is_zero_items_not_nan() {
 fn eval_is_engine_agnostic() {
     // regression: evaluate() always static-chunked regardless of the
     // `engine = continuous` knob. The continuous path (and the paged
-    // continuous path) must score identically — per-task RNG keys off the
-    // flat sample id, not the engine.
+    // continuous path, and the pipelined path at several worker counts)
+    // must score identically — per-task RNG keys off the flat sample id,
+    // not the engine.
     let (policy, tasks, _, slots, reserve) = eval_setup(6);
     let k = 3;
-    let mk_backend = || MockModelBackend::dense(4, 24, 96, 32);
+    let mk_backends = |n: usize| -> Vec<MockModelBackend> {
+        (0..n).map(|_| MockModelBackend::dense(4, 24, 96, 32)).collect()
+    };
 
     let mut results = Vec::new();
-    for (kind, admission, page) in [
-        (EngineKind::Static, AdmissionPolicy::WorstCase, 1usize),
-        (EngineKind::Continuous, AdmissionPolicy::WorstCase, 1),
-        (EngineKind::Continuous, AdmissionPolicy::Paged, 4),
+    for (kind, admission, page, lanes) in [
+        (EngineKind::Static, AdmissionPolicy::WorstCase, 1usize, 1usize),
+        (EngineKind::Continuous, AdmissionPolicy::WorstCase, 1, 1),
+        (EngineKind::Continuous, AdmissionPolicy::Paged, 4, 1),
+        (EngineKind::Pipelined, AdmissionPolicy::WorstCase, 1, 2),
+        (EngineKind::Pipelined, AdmissionPolicy::Paged, 4, 3),
     ] {
         let mut sched = worst_case(slots, reserve).with_admission(admission);
         let mut kv = KvMemoryManager::with_pages(reserve * 3, page);
         let r = evaluate_with_backend(
             &policy,
-            &mut mk_backend(),
+            &mut mk_backends(lanes),
             kind,
             &mut sched,
             &mut kv,
