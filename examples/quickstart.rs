@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use sparse_rl::config::{RolloutMode, SamplingConfig};
-use sparse_rl::coordinator::rollout::RolloutEngine;
+use sparse_rl::coordinator::engine::RolloutEngine;
 use sparse_rl::data::{benchmarks, tokenizer, Task};
 use sparse_rl::experiments;
 use sparse_rl::runtime::{Method, ModelEngine, TrainState};

@@ -13,6 +13,13 @@
 //! engine's — at one worker the win is pure prefill/decode overlap (the
 //! dedicated prefill lane), at 2/4 it compounds with multi-lane decode.
 //!
+//! Part 1d: fifo vs shortest-first admission order on a deterministic
+//! skewed-length workload (pipelined, paged, sparse): one giant-prompt
+//! task planted behind a short one head-of-line-blocks the whole fifo
+//! queue at the memory wall, while shortest-first packs every cheap task
+//! wide first and runs the giant last. Asserts shortest-first's modeled
+//! makespan is STRICTLY below fifo's with token-identical outputs.
+//!
 //! Part 2 (needs `make artifacts`): every artifact on the rollout/training
 //! path — decode step latency (dense vs sparse — the memory-wall compute
 //! story), compression overhead per method, prefill, dense scoring, and
@@ -22,7 +29,7 @@
 
 use std::collections::BTreeMap;
 
-use sparse_rl::config::{AdmissionPolicy, RolloutMode, SamplingConfig};
+use sparse_rl::config::{AdmissionOrder, AdmissionPolicy, RolloutMode, SamplingConfig};
 use sparse_rl::coordinator::{
     CostModel, GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy,
     RolloutStats, Scheduler,
@@ -454,6 +461,145 @@ fn pipelined_comparison() -> Json {
     Json::Obj(out)
 }
 
+/// Build a task whose prompt is exactly `prompt_tokens` long (mock-model
+/// benches only: the deterministic mock hashes prompt CONTENT, rewards are
+/// never read, so padding/truncating the prompt is safe and gives exact
+/// control over predicted residency).
+fn sized_task(rng: &mut Rng, prompt_tokens: usize) -> Task {
+    let mut t = Task::gen(rng, 1, 48);
+    while t.prompt_ids.len() < prompt_tokens {
+        let fill = 3 + (t.prompt_ids.len() % 20) as i32; // in-vocab filler
+        t.prompt_ids.push(fill);
+    }
+    t.prompt_ids.truncate(prompt_tokens.max(1));
+    t
+}
+
+/// Fifo vs shortest-first admission order under pipelined + paged + sparse
+/// on a deterministic skewed-length workload: the makespan-aware-admission
+/// claim. One giant-prompt task (predicted residency = the full per-seq
+/// bound; its prompt alone nearly fills the wall) sits at queue position 1
+/// behind a single short task. Fifo head-of-line-blocks on it: the first
+/// short runs the wall ALONE, then the giant runs alone, and only then do
+/// the remaining shorts pack the batch. Shortest-first pops every short
+/// first (they pair up across both slots) and leaves the giant for the
+/// drained wall at the end — strictly less width-1 decoding, strictly
+/// lower modeled makespan, identical tokens (per-task RNG).
+///
+/// Lengths are made deterministic by suppressing EOS (`eos_pull` very
+/// negative): every response runs to its cap, so response length =
+/// min(max_response, max_seq - prompt) — the giant's huge prompt forces a
+/// SHORT response and the cheap prompts run LONG, the skewed-length
+/// profile Sparrow-style sparse rollouts schedule around. The run is
+/// single-worker, so both traces are fully deterministic.
+fn admission_order_comparison() -> Json {
+    let (slots, prompt_len, max_seq, budget, buffer) = (2usize, 48usize, 56usize, 44usize, 8usize);
+    let (page_tokens, seed) = (4usize, 7u64);
+    let costs = CostModel::representative();
+    let mode = RolloutMode::SparseRl(Method::RKv);
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 16 };
+    let policy = RolloutPolicy::new(mode, sampling);
+    let reserve = budget + buffer; // 52-token bound = 13 pages
+    let kv_cap = 56; // 14 pages: the giant (13 pages) ~owns the wall
+    let mut rng = Rng::new(1);
+    // queue order [short, GIANT, short x5]: the fifo poison placement
+    let tasks: Vec<Task> = (0..7)
+        .map(|i| sized_task(&mut rng, if i == 1 { prompt_len } else { 4 }))
+        .collect();
+    let proto = {
+        let mut b = MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer);
+        b.eos_pull = -30.0; // EOS suppressed: cap-bound deterministic lengths
+        b.with_costs(costs)
+    };
+
+    println!(
+        "== admission-order comparison: fifo vs shortest-first (pipelined w=1, paged, sparse, \
+         R={slots}, giant prompt {prompt_len} behind a short head) =="
+    );
+    println!(
+        "{:<15} {:>12} {:>10} {:>10} {:>9} {:>9}",
+        "order", "decode-steps", "makespan", "blocked", "stalled", "preempts"
+    );
+
+    let mut out = BTreeMap::new();
+    let mut seqs_by_order = Vec::new();
+    let mut makespans = Vec::new();
+    for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
+        let mut kv = KvMemoryManager::with_pages(kv_cap, page_tokens);
+        let mut sched = mk_sched(slots, reserve)
+            .with_admission(AdmissionPolicy::Paged)
+            .with_order(order);
+        let mut backends = vec![proto.clone()];
+        let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+        let (seqs, st) = policy
+            .rollout_pipelined(&mut backends, &flat, seed, &mut sched, &mut kv, 0)
+            .expect("rollout");
+        assert_eq!(kv.reserved(), 0, "{}: run leaked KV", order.label());
+        kv.check_invariants().expect("wall invariants");
+        println!(
+            "{:<15} {:>12} {:>10} {:>10} {:>9} {:>9}",
+            order.label(),
+            st.decode_steps,
+            st.modeled_makespan_ticks,
+            st.prefill_blocked_ticks,
+            st.sched_stall_ticks,
+            st.preemptions,
+        );
+        let mut row = BTreeMap::new();
+        row.insert("decode_steps".into(), Json::Num(st.decode_steps as f64));
+        row.insert("makespan_ticks".into(), Json::Num(st.modeled_makespan_ticks as f64));
+        row.insert(
+            "prefill_blocked_ticks".into(),
+            Json::Num(st.prefill_blocked_ticks as f64),
+        );
+        row.insert("sched_stall_ticks".into(), Json::Num(st.sched_stall_ticks as f64));
+        row.insert("preemptions".into(), Json::Num(st.preemptions as f64));
+        out.insert(order.label().replace('-', "_"), Json::Obj(row));
+        makespans.push(st.modeled_makespan_ticks);
+        seqs_by_order.push(seqs);
+    }
+
+    // ordering is a pure scheduling choice: identical tokens per task
+    let agree = seqs_by_order[0]
+        .iter()
+        .zip(seqs_by_order[1].iter())
+        .all(|(a, b)| a.response_ids == b.response_ids && a.sampler_logp == b.sampler_logp);
+    assert!(agree, "admission order changed tokens (BUG)");
+    // the workload really is length-skewed: the giant's capped response
+    // is half the shorts' (prompt eats the max_seq budget)
+    let mut lens: Vec<usize> = seqs_by_order[0].iter().map(|s| s.response_ids.len()).collect();
+    assert!(
+        lens.iter().min() < lens.iter().max(),
+        "response lengths unexpectedly uniform: {lens:?}"
+    );
+    let (fifo, sjf) = (makespans[0], makespans[1]);
+    println!(
+        "  -> lengths min/max = {}/{}: shortest-first saves {:.1}% modeled makespan, \
+         token-identical: yes\n",
+        lens.iter().min().unwrap(),
+        lens.iter().max().unwrap(),
+        100.0 * (1.0 - sjf as f64 / fifo.max(1) as f64),
+    );
+    assert!(
+        sjf < fifo,
+        "shortest-first modeled makespan {sjf} !< fifo {fifo} (head-of-line blocking \
+         should serialize the fifo run)"
+    );
+    lens.sort_unstable();
+    out.insert(
+        "response_len_min".into(),
+        Json::Num(*lens.first().unwrap() as f64),
+    );
+    out.insert(
+        "response_len_max".into(),
+        Json::Num(*lens.last().unwrap() as f64),
+    );
+    out.insert("tasks".into(), Json::Num(tasks.len() as f64));
+    out.insert("kv_cap_tokens".into(), Json::Num(kv_cap as f64));
+    out.insert("page_tokens".into(), Json::Num(page_tokens as f64));
+    Json::Obj(out)
+}
+
 fn main() {
     let args = CliArgs::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
 
@@ -461,15 +607,19 @@ fn main() {
     engine_comparison();
 
     // Part 1b: paged vs worst-case admission (always runs); Part 1c:
-    // pipelined vs continuous on the modeled latency clock. Both feed
-    // BENCH_rollout.json so CI records the perf trajectory.
+    // pipelined vs continuous on the modeled latency clock; Part 1d:
+    // fifo vs shortest-first admission order on the skewed-length
+    // head-of-line workload. All feed BENCH_rollout.json so CI records
+    // the perf trajectory.
     let paged = paged_comparison();
     let pipelined = pipelined_comparison();
+    let order = admission_order_comparison();
     {
         let mut doc = BTreeMap::new();
         doc.insert("bench".to_string(), Json::Str("rollout".into()));
         doc.insert("paged_vs_worst_case".to_string(), paged);
         doc.insert("pipelined_vs_continuous".to_string(), pipelined);
+        doc.insert("admission_order".to_string(), order);
         let path = "BENCH_rollout.json";
         match std::fs::write(path, sparse_rl::util::json::to_string(&Json::Obj(doc))) {
             Ok(()) => println!("wrote {path}"),

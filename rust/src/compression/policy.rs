@@ -69,11 +69,14 @@ pub fn check_contract(
             ));
         }
     }
-    // alpha most recent must survive
+    // alpha most recent must survive. Membership via a HashSet: the naive
+    // `kept.contains` scan made this contract check O(alpha * budget) —
+    // quadratic at the large budgets the propchecks sweep.
+    let kept_set: std::collections::HashSet<usize> = kept.iter().copied().collect();
     let mut by_recency: Vec<usize> = (0..n).collect();
     by_recency.sort_by_key(|&i| std::cmp::Reverse(birth_before[i]));
     for &slot in by_recency.iter().take(p.alpha.min(expect)) {
-        if !kept.contains(&slot) {
+        if !kept_set.contains(&slot) {
             return Err(format!(
                 "recent slot {} (birth {}) evicted",
                 slot, birth_before[slot]

@@ -217,6 +217,42 @@ impl AdmissionPolicy {
     }
 }
 
+/// Order in which the engines admit pending tasks from the shared queue.
+///
+/// `Fifo` (default) preserves the original behavior: the queue head is
+/// the only admission candidate, so a big task at the head can block the
+/// wall while smaller admissible tasks wait behind it. `ShortestFirst`
+/// pops the pending task with the smallest *predicted residency*
+/// (`Scheduler::admission_cost` — the unclamped prompt+response
+/// prediction, so cap ties break toward cheaper prompts) first — the
+/// makespan-aware order: small tasks pack the wall wide early and a
+/// high-residency task can never head-of-line-block an admissible small
+/// one. Ordering is a pure scheduling choice: per-task RNG keeps every
+/// task's tokens identical under either order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionOrder {
+    #[default]
+    Fifo,
+    ShortestFirst,
+}
+
+impl AdmissionOrder {
+    pub fn parse(s: &str) -> Result<AdmissionOrder> {
+        Ok(match s {
+            "fifo" => AdmissionOrder::Fifo,
+            "shortest-first" | "shortest" | "sjf" => AdmissionOrder::ShortestFirst,
+            other => bail!("bad admission order {other:?} (fifo | shortest-first)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionOrder::Fifo => "fifo",
+            AdmissionOrder::ShortestFirst => "shortest-first",
+        }
+    }
+}
+
 /// The memory wall: a global KV token budget shared by concurrent
 /// sequences (the simulated HBM capacity the scheduler packs against).
 #[derive(Debug, Clone, Copy)]
@@ -260,6 +296,15 @@ pub struct ExperimentConfig {
     /// Decode lanes (worker threads) for `engine = pipelined`; ignored by
     /// the single-lane engines.
     pub rollout_workers: usize,
+    /// Cross-worker work stealing (`engine = pipelined` only): a drained
+    /// lane adopts a not-yet-prefilled refill from the most-loaded peer
+    /// instead of parking on the condvar. Scheduling-only (per-task RNG
+    /// keeps tokens identical); default on.
+    pub steal: bool,
+    /// Order the engines admit pending tasks in: `fifo` (seed behavior)
+    /// or `shortest-first` (makespan-aware; smallest predicted residency
+    /// first).
+    pub admission_order: AdmissionOrder,
     pub sampling: SamplingConfig,
     pub train: TrainConfig,
     pub memory: MemoryConfig,
@@ -277,6 +322,8 @@ impl ExperimentConfig {
             mode: RolloutMode::Dense,
             engine: EngineKind::default(),
             rollout_workers: 2,
+            steal: true,
+            admission_order: AdmissionOrder::default(),
             sampling: SamplingConfig::default(),
             train: TrainConfig::default(),
             memory: MemoryConfig::default(),
@@ -299,6 +346,14 @@ impl ExperimentConfig {
                 }
                 self.rollout_workers = v;
             }
+            "steal" => {
+                self.steal = match value {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => bail!("bad steal value {other:?} (on | off)"),
+                }
+            }
+            "admission-order" => self.admission_order = AdmissionOrder::parse(value)?,
             "temperature" => self.sampling.temperature = value.parse().context("temperature")?,
             "top-p" => self.sampling.top_p = value.parse().context("top-p")?,
             "max-response" => self.sampling.max_response = value.parse().context("max-response")?,
@@ -446,6 +501,26 @@ mod tests {
         assert_eq!(c.memory.kv_admit_headroom_pages, 0);
         c.apply("kv-admit-headroom-pages", "3").unwrap();
         assert_eq!(c.memory.kv_admit_headroom_pages, 3);
+    }
+
+    #[test]
+    fn steal_and_admission_order_knobs() {
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        // defaults: stealing on, fifo order (seed admission behavior)
+        assert!(c.steal);
+        assert_eq!(c.admission_order, AdmissionOrder::Fifo);
+        c.apply("steal", "off").unwrap();
+        assert!(!c.steal);
+        c.apply("steal", "on").unwrap();
+        assert!(c.steal);
+        assert!(c.apply("steal", "maybe").is_err());
+        c.apply("admission-order", "shortest-first").unwrap();
+        assert_eq!(c.admission_order, AdmissionOrder::ShortestFirst);
+        c.apply("admission-order", "fifo").unwrap();
+        assert_eq!(c.admission_order, AdmissionOrder::Fifo);
+        assert_eq!(AdmissionOrder::parse("sjf").unwrap(), AdmissionOrder::ShortestFirst);
+        assert!(AdmissionOrder::parse("random").is_err());
+        assert_eq!(AdmissionOrder::ShortestFirst.label(), "shortest-first");
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Continuous-batching engine shell with slot recycling: the moment a
+//! sequence finishes, its KV reservation is released, the next pending
+//! prompt is admitted and prefilled *into that slot in place*, and the
+//! mixed batch keeps decoding. Total decode steps drop from
+//! Σ_chunks max(len) to the list-scheduling makespan of the per-sequence
+//! decode costs — strictly better whenever response lengths are skewed.
+//! But every slot prefill still stalls the whole decode batch (the bubble
+//! the pipelined engine removes). All per-token semantics live in the
+//! shared decode core.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::data::task::Task;
+
+use super::super::backend::RolloutBackend;
+use super::super::kv_manager::KvMemoryManager;
+use super::super::scheduler::Scheduler;
+use super::core::{
+    admission_costs, admit_next, snap_residency, DecodeCore, GenSeq, Geometry, PrefillWave,
+};
+use super::stats::RolloutStats;
+use super::RolloutPolicy;
+
+impl RolloutPolicy {
+    /// Continuous-batching rollout with slot recycling over an arbitrarily
+    /// long task queue. Admission is per sequence: each admitted sequence
+    /// reserves its admission charge with the scheduler/manager, and the
+    /// reservation is released the moment the sequence finishes — not when
+    /// the whole batch drains. Freed slots are immediately re-prefilled
+    /// (in place) with the scheduler's next pick (`admission-order`:
+    /// fifo, or shortest-predicted-residency-first).
+    ///
+    /// Sequences are returned in task order. Total decode steps equal the
+    /// list-scheduling makespan of per-sequence decode costs over the
+    /// admission order, which `Scheduler::predicted_decode_steps` computes
+    /// in closed form.
+    pub fn rollout_continuous<B: RolloutBackend>(
+        &self,
+        b: &mut B,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let geom = Geometry::of(b);
+        let n = tasks.len();
+        let mut stats = RolloutStats { chunks: 1, workers: 1, ..RolloutStats::default() };
+        if n == 0 {
+            return Ok((vec![], stats));
+        }
+
+        // Paged admission must be able to grow a lone sequence to its
+        // worst-case residency, or the preempt/requeue path could thrash
+        // forever on a wall that cannot hold even one sequence.
+        if kv.pages_for(sched.reserve_per_seq) > kv.total_pages() {
+            bail!(
+                "continuous rollout deadlock: one sequence may need {} KV tokens \
+                 but the wall holds only {}",
+                sched.reserve_per_seq,
+                kv.capacity()
+            );
+        }
+
+        let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
+        let mut queue: VecDeque<usize> = (0..n).collect();
+        let cost = admission_costs(sched, tasks, self.sampling.max_response);
+        let mut core = DecodeCore::new(geom, self.mode.is_sparse());
+
+        // ---- initial wave: one batched prefill over the admissible head
+        let mut wave = PrefillWave::new(&geom);
+        while wave.count() < geom.slots {
+            let Some(pos) = admit_next(sched, kv, &mut queue, &cost, tasks, seq_id_base)
+            else {
+                break;
+            };
+            let (idx, task) = tasks[pos];
+            wave.push(&mut core, pos, idx, &task.prompt_ids, seed);
+        }
+        if wave.count() == 0 {
+            bail!(
+                "continuous rollout deadlock: cannot admit any sequence \
+                 (reserve {} > free KV {} of {})",
+                sched.reserve_per_seq,
+                kv.available(),
+                kv.capacity()
+            );
+        }
+        let mut logp = wave.prefill(&core, b, &mut stats)?;
+        // serial lane: the decode batch blocks on its own prefill
+        stats.prefill_blocked_ticks += geom.costs.prefill_ticks;
+        snap_residency(kv, &mut stats);
+
+        loop {
+            // ---- sample one token per occupied slot; retire finishers ---
+            for slot in 0..geom.slots {
+                let dist = &logp[slot * geom.vocab..(slot + 1) * geom.vocab];
+                if let Some(done) = core.sample(self, slot, dist) {
+                    // per-sequence release: THE difference from the static
+                    // engine — the KV reservation frees now, not when the
+                    // whole batch drains
+                    sched.release_seq(kv, seq_id_base + done.pos as u64)?;
+                    results[done.pos] = Some(done.gen);
+                }
+            }
+
+            // ---- slot recycling: refill freed slots from the queue ------
+            for slot in 0..geom.slots {
+                if core.slots[slot].is_some() {
+                    continue;
+                }
+                // `admit_next` refusal means the memory wall (retry after
+                // future releases) or an empty queue — either way stop
+                while let Some(pos) =
+                    admit_next(sched, kv, &mut queue, &cost, tasks, seq_id_base)
+                {
+                    let (idx, task) = tasks[pos];
+                    let row = b.prefill_slot(slot, &task.prompt_ids)?;
+                    stats.slot_prefills += 1;
+                    stats.refills += 1;
+                    // serial engine: the whole decode batch stalls for this
+                    // slot prefill — the bubble the pipelined lane removes
+                    stats.prefill_blocked_ticks += geom.costs.slot_prefill_ticks;
+                    snap_residency(kv, &mut stats);
+                    if let Some(done) = core.join(self, slot, pos, idx, &task.prompt_ids, &row, seed)
+                    {
+                        // degenerate single-token sequence: release and try
+                        // the next pending prompt for this same slot
+                        sched.release_seq(kv, seq_id_base + done.pos as u64)?;
+                        results[done.pos] = Some(done.gen);
+                        continue;
+                    }
+                    break;
+                }
+            }
+
+            // ---- drained? -----------------------------------------------
+            if core.occupied() == 0 {
+                if queue.is_empty() {
+                    break;
+                }
+                bail!(
+                    "continuous rollout stalled: {} pending but nothing \
+                     admissible (reserve {} > free KV {})",
+                    queue.len(),
+                    sched.reserve_per_seq,
+                    kv.available()
+                );
+            }
+
+            // ---- compression trigger (the shared per-sequence rule); the
+            // freed residency returns to the pool immediately under paged
+            // admission (no-op worst-case) --------------------------------
+            for pos in core.compress_step(b, &mut stats)? {
+                sched.compressed(kv, seq_id_base + pos as u64, geom.budget)?;
+            }
+
+            // ---- paged growth; stalls preempt the lowest-progress
+            // sequence and requeue it (rerun is token-identical) ----------
+            for (_slot, v) in core.grow_step(sched, kv, seq_id_base, &mut stats)? {
+                queue.push_front(v.pos);
+            }
+
+            // ---- one decode step over the mixed batch -------------------
+            // (the deadlock guard above guarantees growth leaves at least
+            // one survivor on a single lane)
+            logp = core.decode_step(b, &mut stats)?;
+        }
+
+        // serial engine: makespan is the sum of everything the lane did
+        stats.modeled_makespan_ticks =
+            stats.decode_busy_ticks + stats.prefill_blocked_ticks + stats.sched_stall_ticks;
+        let out: Vec<GenSeq> = results
+            .into_iter()
+            .map(|s| s.expect("every queued task completed"))
+            .collect();
+        Ok((out, stats))
+    }
+}

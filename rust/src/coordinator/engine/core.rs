@@ -1,0 +1,566 @@
+//! The single decode-step state machine all rollout engines share.
+//!
+//! Everything that decides *what a sequence's next token is* lives here,
+//! exactly once: per-task RNG streams, temperature/top-p sampling with
+//! sampler log-prob recording (this *is* log π_sparse — Eq. 2), EOS and
+//! length-cap handling, KV accounting, the compression trigger, paged
+//! growth with lowest-progress preemption, and the decode invocation with
+//! its slot-step denominator accounting. The engine shells (`static_`,
+//! `continuous`, `pipelined`) only decide *scheduling*: which tasks are
+//! admitted when, where freed capacity goes, and which thread drives which
+//! lane. That split is what makes the token-identity contract a property
+//! of ONE code path: an engine cannot drift on per-token semantics because
+//! it does not implement any.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::compression::KvAccounting;
+use crate::config::SamplingConfig;
+use crate::data::task::Task;
+use crate::data::tokenizer::{BOS, EOS, PAD};
+use crate::util::rng::Rng;
+
+use super::super::backend::{CostModel, RolloutBackend};
+use super::super::kv_manager::KvMemoryManager;
+use super::super::scheduler::Scheduler;
+use super::stats::RolloutStats;
+use super::RolloutPolicy;
+
+/// One finished rollout.
+#[derive(Debug, Clone)]
+pub struct GenSeq {
+    /// Caller-side identifier (index into the step's task list).
+    pub task_idx: usize,
+    pub prompt_ids: Vec<i32>,
+    /// Generated tokens (includes the terminating EOS when finished).
+    pub response_ids: Vec<i32>,
+    /// log π_sparse(o_t | ·) of every generated token (the actual sampling
+    /// distribution, i.e. after temperature/top-p modification).
+    pub sampler_logp: Vec<f32>,
+    /// True iff the model emitted EOS before the length cap.
+    pub finished: bool,
+    pub accounting: KvAccounting,
+}
+
+impl GenSeq {
+    fn new(task_idx: usize, prompt_ids: Vec<i32>) -> GenSeq {
+        GenSeq {
+            task_idx,
+            prompt_ids,
+            response_ids: vec![],
+            sampler_logp: vec![],
+            finished: false,
+            accounting: KvAccounting::new(),
+        }
+    }
+
+    /// Full sequence ids: prompt + response.
+    pub fn full_ids(&self) -> Vec<i32> {
+        let mut v = self.prompt_ids.clone();
+        v.extend_from_slice(&self.response_ids);
+        v
+    }
+}
+
+/// Per-task RNG stream: a pure function of (rollout seed, task index).
+/// A given task therefore samples the identical token sequence no matter
+/// which slot, chunk, worker, or engine runs it — or how often it is
+/// preempted and rerun.
+pub fn task_rng(seed: u64, task_idx: usize) -> Rng {
+    Rng::new(seed ^ (task_idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Sample from log-probs with temperature/top-p; returns the token and the
+/// log-prob of the token under the *modified* (actually sampled)
+/// distribution. With temperature=1, top_p=1 this is exactly `logp[tok]`.
+///
+/// Robustness: non-finite logits (NaN from a diverged model, ±inf) carry
+/// zero mass instead of poisoning the sort/normalization; if *every* logit
+/// is non-finite the sampler falls back to a uniform draw. The top-p
+/// nucleus always keeps at least one token — when the top-1 probability
+/// alone exceeds `top_p`, the cut is exactly {argmax} and its renormalized
+/// mass is 1 (recorded log-prob 0).
+pub fn sample_token(rng: &mut Rng, logp: &[f32], s: &SamplingConfig) -> (usize, f32) {
+    if s.temperature < 1e-3 {
+        // greedy decoding: a point mass (NaN never wins a `>` comparison)
+        let (mut best, mut bv) = (0usize, f32::NEG_INFINITY);
+        for (i, &l) in logp.iter().enumerate() {
+            if l > bv {
+                best = i;
+                bv = l;
+            }
+        }
+        return (best, 0.0);
+    }
+    if (s.temperature - 1.0).abs() < 1e-6
+        && s.top_p >= 1.0
+        && logp.iter().all(|l| l.is_finite())
+    {
+        // unmodified distribution: record the artifact's own log-prob
+        // bit-exactly (the finite guard keeps NaN inputs on the hardened
+        // path below instead of this shortcut)
+        let tok = rng.sample_logits(logp, 1.0, 1.0);
+        return (tok, logp[tok]);
+    }
+    // general case: the shared temperature/top-p machinery (single
+    // implementation for both samplers — util::rng::modified_probs)
+    let Some(probs) = crate::util::rng::modified_probs(logp, s.temperature, s.top_p) else {
+        // fully degenerate input: uniform fallback
+        let tok = rng.below(logp.len());
+        return (tok, -(logp.len() as f32).ln());
+    };
+    let r = rng.next_f32();
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if r < acc && p > 0.0 {
+            return (i, p.ln());
+        }
+    }
+    let last = probs.iter().rposition(|&p| p > 0.0).unwrap_or(0);
+    (last, probs[last].ln())
+}
+
+impl RolloutPolicy {
+    /// Sample one token into `gen` — recording the sampler log-prob and KV
+    /// accounting — and report `(token, done)` where `done` means the
+    /// sequence just terminated (EOS or a length cap). THE single
+    /// implementation of per-token semantics: every engine's decode loop
+    /// and refill path reaches it through `DecodeCore`, so EOS/cap/
+    /// accounting rules cannot drift between engines (which would silently
+    /// break the token-equivalence contract).
+    ///
+    /// `len` is the occupied cache length and `abs` the absolute position
+    /// *before* this token's cache write.
+    fn sample_step(
+        &self,
+        rng: &mut Rng,
+        dist: &[f32],
+        gen: &mut GenSeq,
+        len: i32,
+        abs: i32,
+        capacity: usize,
+        max_seq: usize,
+    ) -> (i32, bool) {
+        let (tok, lp) = sample_token(rng, dist, &self.sampling);
+        gen.response_ids.push(tok as i32);
+        gen.sampler_logp.push(lp);
+        gen.accounting
+            .step(((len + 1) as usize).min(capacity), abs as usize + 1);
+        let mut done = false;
+        if tok as i32 == EOS {
+            gen.finished = true;
+            done = true;
+        }
+        if gen.response_ids.len() >= self.sampling.max_response
+            || (abs as usize + 1) >= max_seq
+        {
+            done = true;
+        }
+        (tok as i32, done)
+    }
+}
+
+/// Geometry + latency snapshot of one backend, read once per rollout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Geometry {
+    pub slots: usize,
+    pub prompt_len: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub capacity: usize,
+    pub budget: usize,
+    pub costs: CostModel,
+}
+
+impl Geometry {
+    pub fn of<B: RolloutBackend>(b: &B) -> Geometry {
+        Geometry {
+            slots: b.slots(),
+            prompt_len: b.prompt_len(),
+            max_seq: b.max_seq(),
+            vocab: b.vocab(),
+            capacity: b.capacity(),
+            budget: b.budget(),
+            costs: b.cost_model(),
+        }
+    }
+
+    /// The model shape alone (pipelined workers must agree on it — they
+    /// share one task queue and one wall; per-lane costs may differ).
+    pub fn shape(&self) -> (usize, usize, usize, usize, usize, usize) {
+        (self.slots, self.prompt_len, self.max_seq, self.vocab, self.capacity, self.budget)
+    }
+}
+
+/// A sequence live in a decode slot.
+pub(crate) struct LiveSeq {
+    /// Position in the pending task list (== results index).
+    pub pos: usize,
+    pub rng: Rng,
+    pub gen: GenSeq,
+}
+
+/// Per-task admission costs — the shortest-first ordering vector,
+/// indexed by task position (the scheduler's single ordering oracle;
+/// unclamped, so cap-tied tasks still order by prompt size).
+pub(crate) fn admission_costs(
+    sched: &Scheduler,
+    tasks: &[(usize, &Task)],
+    max_response: usize,
+) -> Vec<usize> {
+    tasks
+        .iter()
+        .map(|(_, t)| sched.admission_cost(t.prompt_ids.len(), max_response))
+        .collect()
+}
+
+/// Order-aware single admission from a pending queue: ask the scheduler
+/// which element to try (`pick_next` over the `admission_cost` vector),
+/// charge the wall, and dequeue it. `None` means the queue is empty or
+/// the wall refused the scheduler's candidate (callers that care which
+/// must check the queue first). Under shortest-first a refusal means
+/// nothing with a smaller prompt+response prediction is pending (the
+/// unclamped cost key breaks residency-cap ties toward cheaper
+/// prompts, i.e. smaller paged admission charges).
+pub(crate) fn admit_next(
+    sched: &mut Scheduler,
+    kv: &mut KvMemoryManager,
+    queue: &mut VecDeque<usize>,
+    cost: &[usize],
+    tasks: &[(usize, &Task)],
+    seq_id_base: u64,
+) -> Option<usize> {
+    let qi = sched.pick_next(queue, cost)?;
+    let pos = queue[qi];
+    if !sched.try_admit(kv, seq_id_base + pos as u64, tasks[pos].1.prompt_ids.len()) {
+        return None;
+    }
+    queue.remove(qi);
+    Some(pos)
+}
+
+/// Record the wall's current residency high-water into a stats block.
+pub(crate) fn snap_residency(kv: &KvMemoryManager, stats: &mut RolloutStats) {
+    stats.max_reserved_kv = stats.max_reserved_kv.max(kv.reserved());
+    stats.max_used_pages = stats.max_used_pages.max(kv.used_pages());
+}
+
+/// The decode-batch state machine: R slots of live sequences plus the
+/// control vectors (`lens`, `abs_pos`, `tokens`) every backend call reads.
+/// Engines own scheduling; this struct owns every per-token and per-step
+/// semantic shared between them.
+pub(crate) struct DecodeCore {
+    pub geom: Geometry,
+    sparse: bool,
+    pub slots: Vec<Option<LiveSeq>>,
+    /// Occupied cache length per slot (the next write position).
+    pub lens: Vec<i32>,
+    /// Absolute sequence position per slot.
+    pub abs_pos: Vec<i32>,
+    /// Token fed to the next decode step per slot (PAD when idle).
+    pub tokens: Vec<i32>,
+    do_mask: Vec<f32>,
+}
+
+impl DecodeCore {
+    pub fn new(geom: Geometry, sparse: bool) -> DecodeCore {
+        let r = geom.slots;
+        DecodeCore {
+            geom,
+            sparse,
+            slots: (0..r).map(|_| None).collect(),
+            lens: vec![1i32; r],
+            abs_pos: vec![1i32; r],
+            tokens: vec![PAD; r],
+            do_mask: vec![0.0f32; r],
+        }
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// First free slot, if any.
+    pub fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    /// Install an admitted task into `slot`. The slot's cache must be (or
+    /// be about to be) filled with exactly this prompt — by the batched
+    /// prefill (`PrefillWave`) or a slot prefill (`join`).
+    pub fn install(&mut self, slot: usize, pos: usize, task_idx: usize, prompt: &[i32], seed: u64) {
+        assert!(
+            prompt.len() <= self.geom.prompt_len,
+            "prompt {} > {}",
+            prompt.len(),
+            self.geom.prompt_len
+        );
+        self.lens[slot] = prompt.len() as i32;
+        self.abs_pos[slot] = prompt.len() as i32;
+        self.slots[slot] = Some(LiveSeq {
+            pos,
+            rng: task_rng(seed, task_idx),
+            gen: GenSeq::new(task_idx, prompt.to_vec()),
+        });
+    }
+
+    /// Sample one token for `slot` from its fresh logits row `dist`.
+    /// Returns the finished sequence when this token terminated it (EOS or
+    /// a length cap): the slot is vacated and its token PADed — what the
+    /// engine does with the vacancy (release + refill, or leave the chunk
+    /// draining) is scheduling, not semantics. Empty slots are a no-op.
+    pub fn sample(&mut self, policy: &RolloutPolicy, slot: usize, dist: &[f32]) -> Option<LiveSeq> {
+        let Some(live) = self.slots[slot].as_mut() else {
+            self.tokens[slot] = PAD;
+            return None;
+        };
+        let (tok, done) = policy.sample_step(
+            &mut live.rng,
+            dist,
+            &mut live.gen,
+            self.lens[slot],
+            self.abs_pos[slot],
+            self.geom.capacity,
+            self.geom.max_seq,
+        );
+        self.tokens[slot] = tok;
+        if done {
+            let live = self.slots[slot].take().expect("occupied");
+            self.tokens[slot] = PAD;
+            return Some(live);
+        }
+        None
+    }
+
+    /// Join a recycled slot: install the task and sample its first token
+    /// from the slot-prefill logits `row` — the same logits (and the same
+    /// per-token semantics, via `sample_step`) the batched-prefill path
+    /// would have used. Returns the finished sequence for degenerate
+    /// single-token rollouts (the slot is immediately free again).
+    #[allow(clippy::too_many_arguments)]
+    pub fn join(
+        &mut self,
+        policy: &RolloutPolicy,
+        slot: usize,
+        pos: usize,
+        task_idx: usize,
+        prompt: &[i32],
+        row: &[f32],
+        seed: u64,
+    ) -> Option<LiveSeq> {
+        self.install(slot, pos, task_idx, prompt, seed);
+        // the slot's cache was just replaced, so the control vectors track
+        // it even when the sequence dies immediately — a stale `lens`
+        // would put the next decode write at an out-of-sync position
+        self.sample(policy, slot, row)
+    }
+
+    /// Masked compression trigger: every occupied slot whose next write
+    /// would overflow `capacity` is compacted back to `budget` in one
+    /// backend call, with per-sequence accounting. Returns the task
+    /// positions compressed so the engine can shrink their reservations
+    /// (paged admission; chunk-level reservations ignore it). Empty when
+    /// nothing triggered (dense runs never trigger).
+    pub fn compress_step<B: RolloutBackend>(
+        &mut self,
+        b: &mut B,
+        stats: &mut RolloutStats,
+    ) -> Result<Vec<usize>> {
+        if !self.sparse {
+            return Ok(vec![]);
+        }
+        let (capacity, budget) = (self.geom.capacity, self.geom.budget);
+        let mut any = false;
+        for slot in 0..self.geom.slots {
+            let need = self.slots[slot].is_some() && self.lens[slot] as usize >= capacity;
+            self.do_mask[slot] = if need { 1.0 } else { 0.0 };
+            if need {
+                any = true;
+            }
+        }
+        if !any {
+            return Ok(vec![]);
+        }
+        b.compress(&self.do_mask)?;
+        stats.decode_busy_ticks += self.geom.costs.compress_ticks;
+        let mut compressed = Vec::new();
+        for slot in 0..self.geom.slots {
+            if self.do_mask[slot] > 0.0 {
+                let live = self.slots[slot].as_mut().expect("masked slot occupied");
+                live.gen.accounting.compression(capacity - budget);
+                self.lens[slot] = budget as i32;
+                compressed.push(live.pos);
+            }
+        }
+        Ok(compressed)
+    }
+
+    /// Paged-growth pass: every occupied slot must hold pages for its next
+    /// cache write. A grow refused by the wall preempts the
+    /// lowest-progress live sequence of THIS batch (possibly the grower
+    /// itself) — per-task RNG makes the rerun token-identical, so
+    /// preemption costs decode steps but never changes outputs. Returns
+    /// the evicted `(slot, sequence)` pairs for the engine to requeue.
+    /// (Worst-case admission: grow is a no-op and this returns empty.)
+    pub fn grow_step(
+        &mut self,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+        stats: &mut RolloutStats,
+    ) -> Result<Vec<(usize, LiveSeq)>> {
+        let r = self.geom.slots;
+        let mut evicted = Vec::new();
+        for slot in 0..r {
+            loop {
+                let Some(live) = self.slots[slot].as_ref() else { break };
+                let pos = live.pos;
+                let need = self.lens[slot] as usize + 1;
+                if sched.grow(kv, seq_id_base + pos as u64, need)? {
+                    // snapshot after EVERY successful grow, not once per
+                    // pass: a later stall in this same pass may preempt a
+                    // victim and release pages, and an end-of-pass-only
+                    // snapshot would under-record the true intra-pass peak
+                    snap_residency(kv, stats);
+                    break;
+                }
+                let victim = (0..r)
+                    .filter_map(|s| {
+                        self.slots[s]
+                            .as_ref()
+                            .map(|l| (l.gen.response_ids.len(), l.pos, s))
+                    })
+                    .min()
+                    .expect("the grower itself is live")
+                    .2;
+                let v = self.slots[victim].take().expect("victim occupied");
+                sched.preempt(kv, seq_id_base + v.pos as u64)?;
+                self.tokens[victim] = PAD;
+                stats.preemptions += 1;
+                let own = victim == slot;
+                evicted.push((victim, v));
+                if own {
+                    break; // grower evicted: its slot is free now
+                }
+            }
+        }
+        debug_assert!(kv.check_invariants().is_ok(), "wall invariants broken mid-rollout");
+        snap_residency(kv, stats);
+        Ok(evicted)
+    }
+
+    /// One decode invocation over the mixed batch, plus the slot-step
+    /// denominator accounting (`occupied + idle == decode_steps * slots`)
+    /// and the control-vector advance. Callers guarantee at least one
+    /// occupied slot. Returns the fresh logits `[R * V]`.
+    pub fn decode_step<B: RolloutBackend>(
+        &mut self,
+        b: &mut B,
+        stats: &mut RolloutStats,
+    ) -> Result<Vec<f32>> {
+        let r = self.geom.slots;
+        let occupied = self.occupied();
+        debug_assert!(occupied > 0, "decode_step over an empty batch");
+        stats.peak_live_slots = stats.peak_live_slots.max(occupied);
+        let logp = b.decode(&self.lens, &self.abs_pos, &self.tokens)?;
+        stats.decode_steps += 1;
+        stats.decode_busy_ticks += self.geom.costs.decode_ticks;
+        stats.occupied_slot_steps += occupied;
+        stats.idle_slot_steps += r - occupied;
+        for slot in 0..r {
+            if self.slots[slot].is_some() {
+                self.lens[slot] += 1;
+                self.abs_pos[slot] += 1;
+            }
+        }
+        Ok(logp)
+    }
+}
+
+/// Builder for the initial batched prefill: stages admitted prompts into
+/// consecutive slots (installing each in the core), BOS-fills the rest,
+/// and fires the one `prefill` call every engine opens with.
+pub(crate) struct PrefillWave {
+    ids: Vec<i32>,
+    plens: Vec<i32>,
+    w: usize,
+}
+
+impl PrefillWave {
+    pub fn new(geom: &Geometry) -> PrefillWave {
+        PrefillWave {
+            ids: vec![PAD; geom.slots * geom.prompt_len],
+            plens: vec![1i32; geom.slots],
+            w: 0,
+        }
+    }
+
+    /// Slots staged so far (== the slot the next push lands in).
+    pub fn count(&self) -> usize {
+        self.w
+    }
+
+    /// Stage one admitted task into the next slot and install it.
+    pub fn push(&mut self, core: &mut DecodeCore, pos: usize, task_idx: usize, prompt: &[i32], seed: u64) {
+        let p_len = core.geom.prompt_len;
+        core.install(self.w, pos, task_idx, prompt, seed);
+        self.ids[self.w * p_len..self.w * p_len + prompt.len()].copy_from_slice(prompt);
+        self.plens[self.w] = prompt.len() as i32;
+        self.w += 1;
+    }
+
+    /// Fire the batched prefill over the staged head (BOS rows keep the
+    /// unstaged slots well-formed). Returns last-prompt-token logits
+    /// `[R * V]`; tick accounting stays with the engine (serial lanes
+    /// block on it, the pipelined lane schedules it).
+    pub fn prefill<B: RolloutBackend>(
+        mut self,
+        core: &DecodeCore,
+        b: &mut B,
+        stats: &mut RolloutStats,
+    ) -> Result<Vec<f32>> {
+        let p_len = core.geom.prompt_len;
+        for slot in self.w..core.geom.slots {
+            self.ids[slot * p_len] = BOS;
+        }
+        let logp = b.prefill(&self.ids, &self.plens)?;
+        stats.prefills += 1;
+        Ok(logp)
+    }
+}
+
+/// Batched prefill of ONE prompt at a specific slot (BOS rows keep every
+/// other slot well-formed), returning just that slot's logits row. The
+/// pipelined engine's first-wave-refused join fallback uses this: a lane
+/// whose entire initial wave was refused has no live cache, so the real
+/// backend's `prefill_slot` would reject — batch-row independence makes
+/// the slot's logits identical under the batched entry. Lives here so
+/// the BOS idle-row convention exists in exactly one module.
+pub(crate) fn prefill_single_row<B: RolloutBackend>(
+    geom: &Geometry,
+    b: &mut B,
+    slot: usize,
+    prompt: &[i32],
+    stats: &mut RolloutStats,
+) -> Result<Vec<f32>> {
+    let p_len = geom.prompt_len;
+    let mut ids = vec![PAD; geom.slots * p_len];
+    let mut plens = vec![1i32; geom.slots];
+    ids[slot * p_len..slot * p_len + prompt.len()].copy_from_slice(prompt);
+    plens[slot] = prompt.len() as i32;
+    for (s, chunk) in ids.chunks_mut(p_len).enumerate() {
+        if s != slot {
+            chunk[0] = BOS;
+        }
+    }
+    let all = b.prefill(&ids, &plens)?;
+    stats.prefills += 1;
+    Ok(all[slot * geom.vocab..(slot + 1) * geom.vocab].to_vec())
+}
+
+#[cfg(test)]
+#[path = "core_tests.rs"]
+mod tests;

@@ -1,0 +1,101 @@
+//! Unit tests for the shared decode core (child module of
+//! `engine::core`, split out to keep the core source focused; a
+//! child module sees the parent's private items as usual).
+
+use super::*;
+
+
+    fn cfg(t: f32, p: f32) -> SamplingConfig {
+        SamplingConfig { temperature: t, top_p: p, max_response: 16 }
+    }
+
+    #[test]
+    fn sample_token_records_exact_logp_at_unit_temp() {
+        let mut rng = Rng::new(1);
+        let logp = [-0.5f32, -1.5, -3.0];
+        for _ in 0..50 {
+            let (tok, lp) = sample_token(&mut rng, &logp, &cfg(1.0, 1.0));
+            assert_eq!(lp, logp[tok]);
+        }
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Rng::new(2);
+        let logp = [-2.0f32, -0.1, -5.0];
+        for _ in 0..20 {
+            let (tok, _) = sample_token(&mut rng, &logp, &cfg(0.0, 1.0));
+            assert_eq!(tok, 1);
+        }
+    }
+
+    #[test]
+    fn tempered_logp_is_normalized() {
+        let mut rng = Rng::new(3);
+        let logp = [-0.7f32, -1.1, -2.0, -2.5];
+        // collect the modified distribution empirically
+        let mut mass = [0.0f64; 4];
+        let n = 30_000;
+        for _ in 0..n {
+            let (tok, lp) = sample_token(&mut rng, &logp, &cfg(0.7, 0.95));
+            mass[tok] += 1.0;
+            // recorded logp must be a valid log-probability
+            assert!(lp <= 0.0 && lp.is_finite());
+        }
+        let total: f64 = mass.iter().sum();
+        assert_eq!(total as usize, n);
+        // last token should be rarer than first under sharpening
+        assert!(mass[0] > mass[3]);
+    }
+
+    #[test]
+    fn nan_logits_do_not_panic_and_carry_no_mass() {
+        let mut rng = Rng::new(4);
+        let logp = [f32::NAN, -1.0, f32::NAN, -2.0];
+        for _ in 0..200 {
+            let (tok, lp) = sample_token(&mut rng, &logp, &cfg(0.8, 0.9));
+            assert!(tok == 1 || tok == 3, "sampled NaN token {tok}");
+            assert!(lp.is_finite() && lp <= 0.0);
+        }
+        // the T=1/top-p=1 default config must be just as hardened (it
+        // normally takes the exact-logp fast path)
+        for _ in 0..200 {
+            let (tok, lp) = sample_token(&mut rng, &logp, &cfg(1.0, 1.0));
+            assert!(tok == 1 || tok == 3, "fast path sampled NaN token {tok}");
+            assert!(lp.is_finite() && lp <= 0.0);
+        }
+        // fully degenerate input: uniform fallback, still no panic
+        let bad = [f32::NAN; 5];
+        for _ in 0..50 {
+            let (tok, lp) = sample_token(&mut rng, &bad, &cfg(0.8, 0.9));
+            assert!(tok < 5);
+            assert!((lp - (-(5f32).ln())).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn top1_exceeding_top_p_keeps_exactly_argmax() {
+        let mut rng = Rng::new(5);
+        // token 1 holds ~99% of the tempered mass, far beyond top_p = 0.5:
+        // the nucleus must be {1} with renormalized mass 1 (log-prob 0)
+        let logp = [-8.0f32, -0.01, -9.0, -10.0];
+        for _ in 0..100 {
+            let (tok, lp) = sample_token(&mut rng, &logp, &cfg(0.9, 0.5));
+            assert_eq!(tok, 1);
+            assert_eq!(lp, 0.0, "renormalized point mass must be exactly 1");
+        }
+    }
+
+    #[test]
+    fn task_rng_is_slot_and_order_independent() {
+        // same (seed, task) => same stream; different task => different
+        let mut a = task_rng(42, 7);
+        let mut b = task_rng(42, 7);
+        let mut c = task_rng(42, 8);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..16).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+

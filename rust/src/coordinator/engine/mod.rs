@@ -1,0 +1,209 @@
+//! Autoregressive rollout engines (dense and sparse paths): one shared
+//! decode core, three scheduling shells.
+//!
+//! * `core`       — THE decode-step state machine over `LiveSeq`
+//!   (sample/append/grow/compress/finish): per-task RNG, sampling with
+//!   log π_sparse recording (Eq. 2), EOS/cap handling, KV accounting,
+//!   compression triggering, paged growth + preemption, and the decode
+//!   invocation with its slot-step denominator accounting — shared
+//!   verbatim by every engine.
+//! * `static_`    — static chunked shell: a chunk of ≤ R sequences
+//!   decodes until its slowest member finishes (the long-tail bubble).
+//! * `continuous` — continuous batching with slot recycling: finished
+//!   sequences release KV immediately and freed slots re-prefill in
+//!   place; slot prefills still stall the one decode batch.
+//! * `pipelined`  — N worker lanes over ONE shared scheduler/KV wall,
+//!   slot prefills deferred to a dedicated prefill lane, plus
+//!   cross-worker work stealing for drained lanes (`steal`).
+//! * `stats`      — `RolloutStats`: occupancy, residency peaks, and the
+//!   virtual-clock tick accounting behind the hermetic timing benches.
+//!
+//! Scheduling knobs (`steal`, `admission-order`) never change tokens:
+//! per-task RNG streams (`task_rng`) make a task's sampling randomness a
+//! pure function of (rollout seed, task index), never of the slot, chunk,
+//! worker, admission order, or steal/preemption schedule it experiences.
+//! Combined with batch-row independence of the model, a given task emits
+//! identical `response_ids` and `sampler_logp` under all engines — which
+//! keeps the Eq. 2/5 correction math bit-reproducible and is what
+//! `tests/engine_equivalence.rs` checks exhaustively over the full
+//! {engine} × {steal} × {admission-order} grid.
+//!
+//! The sparse path realizes the paper's rollout: the cache holds at most
+//! `budget + buffer` slots; whenever a sequence fills the buffer, the
+//! compression artifact compacts it back to `budget` retained tokens.
+
+pub mod core;
+pub mod stats;
+
+mod continuous;
+mod pipelined;
+mod static_;
+
+pub use self::core::{sample_token, task_rng, GenSeq};
+pub use self::stats::RolloutStats;
+
+use anyhow::Result;
+
+use crate::config::{RolloutMode, SamplingConfig};
+use crate::data::task::Task;
+use crate::runtime::{ModelEngine, ParamsLit, Variant};
+
+use super::backend::EngineBackend;
+use super::kv_manager::KvMemoryManager;
+use super::scheduler::Scheduler;
+
+/// The backend-independent rollout policy: mode + sampling + the
+/// engine-scheduling switches that must never change tokens. Holds every
+/// engine entry point (`rollout_static`, `rollout_static_queue`,
+/// `rollout_continuous`, `rollout_pipelined`) over the shared decode
+/// core; `RolloutEngine` binds it to the AOT artifacts, the test harness
+/// binds it to the mock backend.
+#[derive(Debug, Clone, Copy)]
+pub struct RolloutPolicy {
+    pub mode: RolloutMode,
+    pub sampling: SamplingConfig,
+    /// Cross-worker work stealing (pipelined engine only; `steal` config
+    /// knob, default on): a drained lane adopts a not-yet-prefilled
+    /// refill from the most-loaded peer instead of parking on the
+    /// condvar. Scheduling-only — tokens are steal-invariant.
+    pub steal: bool,
+}
+
+impl RolloutPolicy {
+    pub fn new(mode: RolloutMode, sampling: SamplingConfig) -> Self {
+        RolloutPolicy { mode, sampling, steal: true }
+    }
+
+    /// Toggle pipelined work stealing (builder style; see `steal`).
+    pub fn with_steal(mut self, steal: bool) -> Self {
+        self.steal = steal;
+        self
+    }
+}
+
+/// The artifact-bound rollout engine for one model + mode.
+pub struct RolloutEngine<'a> {
+    pub engine: &'a ModelEngine,
+    pub mode: RolloutMode,
+    pub sampling: SamplingConfig,
+    /// Pipelined work stealing (see `RolloutPolicy::steal`).
+    pub steal: bool,
+}
+
+impl<'a> RolloutEngine<'a> {
+    pub fn new(engine: &'a ModelEngine, mode: RolloutMode, sampling: SamplingConfig) -> Self {
+        RolloutEngine { engine, mode, sampling, steal: true }
+    }
+
+    /// Toggle pipelined work stealing (builder style).
+    pub fn with_steal(mut self, steal: bool) -> Self {
+        self.steal = steal;
+        self
+    }
+
+    pub fn policy(&self) -> RolloutPolicy {
+        RolloutPolicy::new(self.mode, self.sampling).with_steal(self.steal)
+    }
+
+    pub fn variant(&self) -> Variant {
+        if self.mode.is_sparse() {
+            Variant::Sparse
+        } else {
+            Variant::Dense
+        }
+    }
+
+    /// Roll out one static chunk of tasks (≤ decode_batch sequences; the
+    /// scheduler guarantees admission). `seed` is the rollout seed feeding
+    /// the per-task RNG streams.
+    pub fn rollout_chunk(
+        &self,
+        params: &[f32],
+        tasks: &[(usize, &Task)],
+        seed: u64,
+    ) -> Result<Vec<GenSeq>> {
+        // weights are uploaded once per chunk, not once per decode step
+        let params = ParamsLit::new(params);
+        self.rollout_chunk_lit(&params, tasks, seed)
+    }
+
+    /// Same as `rollout_chunk` but with pre-uploaded weights (callers that
+    /// run many chunks per step share one upload).
+    pub fn rollout_chunk_lit(
+        &self,
+        params: &ParamsLit,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+    ) -> Result<Vec<GenSeq>> {
+        Ok(self.rollout_chunk_stats_lit(params, tasks, seed)?.0)
+    }
+
+    /// Static chunk rollout returning occupancy statistics as well.
+    pub fn rollout_chunk_stats_lit(
+        &self,
+        params: &ParamsLit,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let mut backend = EngineBackend::new(self.engine, params, self.mode);
+        self.policy().rollout_static(&mut backend, tasks, seed)
+    }
+
+    /// Static chunked rollout over the whole pending queue (any length).
+    /// See `RolloutPolicy::rollout_static_queue`.
+    pub fn rollout_static_queue_lit(
+        &self,
+        params: &ParamsLit,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let mut backend = EngineBackend::new(self.engine, params, self.mode);
+        self.policy()
+            .rollout_static_queue(&mut backend, tasks, seed, sched, kv, seq_id_base)
+    }
+
+    /// Continuous-batching rollout over the whole pending queue (any
+    /// length), recycling slots as sequences finish. See
+    /// `RolloutPolicy::rollout_continuous`.
+    pub fn rollout_continuous_lit(
+        &self,
+        params: &ParamsLit,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let mut backend = EngineBackend::new(self.engine, params, self.mode);
+        self.policy()
+            .rollout_continuous(&mut backend, tasks, seed, sched, kv, seq_id_base)
+    }
+
+    /// Pipelined rollout over the whole pending queue: `workers` decode
+    /// lanes (one `EngineBackend` each, all over this engine's artifacts)
+    /// against the shared scheduler/wall. See
+    /// `RolloutPolicy::rollout_pipelined`. This is the "handle story" for
+    /// the production path: `ModelEngine` is `Sync` (executable cache
+    /// behind a mutex), so N worker threads may each own an
+    /// `EngineBackend` borrowing the same engine + uploaded weights.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rollout_pipelined_lit(
+        &self,
+        params: &ParamsLit,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+        workers: usize,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let mut backends: Vec<EngineBackend> = (0..workers.max(1))
+            .map(|_| EngineBackend::new(self.engine, params, self.mode))
+            .collect();
+        self.policy()
+            .rollout_pipelined(&mut backends, tasks, seed, sched, kv, seq_id_base)
+    }
+}

@@ -1,0 +1,533 @@
+//! Pipelined multi-worker engine shell: a pool of worker threads drives
+//! one in-flight decode batch each against a SHARED scheduler/KV wall,
+//! with slot prefills issued to a dedicated prefill lane so recycling
+//! overlaps decode instead of stalling it. On top of the shared decode
+//! core it adds two scheduling features the monolith blocked:
+//!
+//! * **Cross-worker work stealing** (`steal = on`, default): a drained
+//!   lane adopts queued tasks from the shared queue *and*, when the queue
+//!   cannot feed it, steals a not-yet-prefilled refill from the
+//!   most-loaded peer instead of parking on the condvar — the Sparrow
+//!   late-binding move. Stolen refills are safe by construction: their KV
+//!   admission is already charged globally, the actual `prefill_slot`
+//!   device call only happens at join time on whichever lane owns the
+//!   refill then, and per-task RNG keeps the tokens identical wherever
+//!   the task lands. A peer is only robbed while it has ≥ 2 pending
+//!   refills (or ≥ 1 while it still decodes a live batch), so a lone
+//!   about-to-join refill can never ping-pong between two drained lanes.
+//! * **Makespan-aware admission order**: the shared queue pops through
+//!   `Scheduler::pick_next` (fifo, or shortest-predicted-residency-first)
+//!   — see `scheduler.rs`.
+//!
+//! The modeled hardware (virtual clock, `CostModel` ticks) is
+//! disaggregated serving: one decode lane per worker plus a single shared
+//! prefill lane. The continuous engine on the same cost model is the
+//! serial baseline — one lane that pays every slot prefill inline.
+//! `bench_rollout` holds the pipelined makespan strictly below it.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::data::task::Task;
+
+use super::super::backend::RolloutBackend;
+use super::super::kv_manager::KvMemoryManager;
+use super::super::scheduler::Scheduler;
+use super::core::{
+    self, admission_costs, admit_next, prefill_single_row, DecodeCore, GenSeq, Geometry,
+    PrefillWave,
+};
+use super::stats::RolloutStats;
+use super::RolloutPolicy;
+
+/// A slot refill admitted to the wall and issued to the dedicated prefill
+/// lane, but not yet joined into a worker's decode batch. Its KV
+/// reservation is already held; the owning lane joins it (or a drained
+/// peer steals it) once that lane's virtual clock reaches `ready_at`.
+struct PendingRefill {
+    /// Position in the pending task list (== results index).
+    pos: usize,
+    /// Virtual time at which the prefill lane finishes this prefill.
+    ready_at: u64,
+}
+
+/// State the pipelined worker threads coordinate on, behind one mutex:
+/// the shared task queue, the shared scheduler + KV wall, the result
+/// table, the per-lane pending-refill registries (the steal surface), and
+/// the virtual clocks that tie the lanes' timelines together.
+struct PipeShared<'s> {
+    queue: VecDeque<usize>,
+    /// Admission cost per task position (the shortest-first oracle).
+    cost: Vec<usize>,
+    sched: &'s mut Scheduler,
+    kv: &'s mut KvMemoryManager,
+    results: Vec<Option<GenSeq>>,
+    /// Admitted-but-not-yet-joined refills, one registry per lane, each
+    /// ascending in `ready_at` (the shared lane clock is monotone). A
+    /// drained lane pops its own front to join; `steal` lets it pop a
+    /// loaded peer's back instead of parking.
+    refills: Vec<VecDeque<PendingRefill>>,
+    /// Live decode-batch occupancy per lane (steal victim selection: a
+    /// lane that still decodes will not join its refills for a while).
+    lane_live: Vec<usize>,
+    /// Virtual clock of the single shared prefill lane.
+    lane_clock: u64,
+    /// Latest virtual time any lane released KV — the earliest honest
+    /// timestamp for an admission that had to wait on the wall.
+    release_floor: u64,
+    /// Sequences currently admitted across all lanes (live + pending).
+    live_now: usize,
+    /// Peak of `live_now`: the globally admitted width.
+    peak_live: usize,
+    /// First worker error, if any — parked peers bail instead of waiting
+    /// for releases that will never come.
+    failed: Option<String>,
+}
+
+impl PipeShared<'_> {
+    /// Admit the scheduler's next queue pick: wall charge + global width
+    /// accounting, in one place so the admission sites (initial wave,
+    /// slot refills, parked retry) cannot drift. `None` means the queue
+    /// is empty or the wall refused.
+    fn admit_next(&mut self, tasks: &[(usize, &Task)], seq_id_base: u64) -> Option<usize> {
+        let pos = admit_next(
+            self.sched,
+            self.kv,
+            &mut self.queue,
+            &self.cost,
+            tasks,
+            seq_id_base,
+        )?;
+        self.live_now += 1;
+        self.peak_live = self.peak_live.max(self.live_now);
+        Some(pos)
+    }
+
+    /// Issue one prefill on the shared lane, starting no earlier than the
+    /// caller's local time `now`; returns its completion time.
+    fn lane_issue(&mut self, now: u64, ticks: u64) -> u64 {
+        self.lane_clock = self.lane_clock.max(now) + ticks;
+        self.lane_clock
+    }
+
+    /// Account a release/preemption happening at the caller's local time
+    /// `now` — the floor a peer's stalled admission jumps its clock to.
+    fn release_at(&mut self, now: u64) {
+        self.live_now -= 1;
+        self.release_floor = self.release_floor.max(now);
+    }
+
+    /// Record the wall's current residency into a lane's stats (exact
+    /// global peaks: every admission/grow site snapshots under the mutex).
+    fn snap_residency(&self, stats: &mut RolloutStats) {
+        core::snap_residency(self.kv, stats);
+    }
+
+    /// Steal one pending refill for drained lane `me`: rob the back of
+    /// the most-loaded peer registry (latest `ready_at` — the entry its
+    /// owner would reach last). A peer qualifies with ≥ 2 pending
+    /// refills, or ≥ 1 while its decode batch is still live — so a lone
+    /// refill on an otherwise-drained peer stays put (it is that lane's
+    /// only way forward, and robbing it back and forth could livelock
+    /// two idle lanes).
+    fn steal_for(&mut self, me: usize) -> Option<PendingRefill> {
+        let victim = (0..self.refills.len())
+            .filter(|&w| {
+                w != me
+                    && (self.refills[w].len() >= 2
+                        || (self.refills[w].len() == 1 && self.lane_live[w] > 0))
+            })
+            .max_by_key(|&w| self.refills[w].len())?;
+        self.refills[victim].pop_back()
+    }
+}
+
+impl RolloutPolicy {
+    /// Pipelined rollout: `backends.len()` worker threads, each driving a
+    /// continuous-style decode batch over its own backend against the
+    /// shared scheduler/KV wall; slot prefills are deferred to the shared
+    /// prefill lane; drained lanes adopt queued work and (with `steal`)
+    /// rob loaded peers instead of parking.
+    ///
+    /// Token identity with `continuous` holds by construction: per-task
+    /// RNG plus batch-row independence make a task's tokens a pure
+    /// function of (seed, task) regardless of worker, slot, join step,
+    /// steal, admission order, or preemption —
+    /// `tests/engine_equivalence.rs` enforces it for worker counts 1/2/4
+    /// across the {steal} × {admission-order} grid. Results come back in
+    /// task order. Work counters in the merged stats sum over lanes;
+    /// `modeled_makespan_ticks` is the lane max and `peak_live_slots` the
+    /// peak globally admitted width.
+    pub fn rollout_pipelined<B: RolloutBackend + Send>(
+        &self,
+        backends: &mut [B],
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let workers = backends.len();
+        if workers == 0 {
+            bail!("pipelined rollout needs at least one worker backend");
+        }
+        let n = tasks.len();
+        if n == 0 {
+            return Ok((vec![], RolloutStats { workers, ..RolloutStats::default() }));
+        }
+        // every worker must see the same model geometry — they share one
+        // task queue and one wall
+        let shape = Geometry::of(&backends[0]).shape();
+        for b in backends.iter() {
+            let g = Geometry::of(b).shape();
+            if g != shape {
+                bail!("pipelined worker backends disagree on geometry: {g:?} vs {shape:?}");
+            }
+        }
+        // same progress guarantee as the continuous engine: a lone
+        // sequence must be able to grow to its worst-case residency
+        if kv.pages_for(sched.reserve_per_seq) > kv.total_pages() {
+            bail!(
+                "pipelined rollout deadlock: one sequence may need {} KV tokens \
+                 but the wall holds only {}",
+                sched.reserve_per_seq,
+                kv.capacity()
+            );
+        }
+
+        let cost = admission_costs(sched, tasks, self.sampling.max_response);
+        let shared = Mutex::new(PipeShared {
+            queue: (0..n).collect(),
+            cost,
+            sched,
+            kv,
+            results: (0..n).map(|_| None).collect(),
+            refills: (0..workers).map(|_| VecDeque::new()).collect(),
+            lane_live: vec![0; workers],
+            lane_clock: 0,
+            release_floor: 0,
+            live_now: 0,
+            peak_live: 0,
+            failed: None,
+        });
+        let cv = Condvar::new();
+        let (shared, cv) = (&shared, &cv);
+        let policy = *self;
+
+        let joined = std::thread::scope(|scope| {
+            let handles: Vec<_> = backends
+                .iter_mut()
+                .enumerate()
+                .map(|(me, b)| {
+                    scope.spawn(move || {
+                        let out = policy
+                            .pipelined_worker(b, tasks, seed, seq_id_base, me, shared, cv);
+                        if let Err(e) = &out {
+                            // poison the run so parked peers bail out
+                            // instead of waiting on releases that will
+                            // never come
+                            if let Ok(mut sh) = shared.lock() {
+                                if sh.failed.is_none() {
+                                    sh.failed = Some(e.to_string());
+                                }
+                            }
+                            cv.notify_all();
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join())
+                .collect::<Vec<_>>()
+        });
+
+        let mut stats = RolloutStats::default();
+        let mut makespan = 0u64;
+        for res in joined {
+            let (ws, finish) =
+                res.unwrap_or_else(|_| Err(anyhow::anyhow!("pipelined worker panicked")))?;
+            stats.merge(&ws);
+            makespan = makespan.max(finish);
+        }
+        stats.workers = workers;
+        stats.modeled_makespan_ticks = makespan;
+        let mut sh = shared
+            .lock()
+            .map_err(|_| anyhow::anyhow!("pipelined shared state poisoned"))?;
+        stats.peak_live_slots = stats.peak_live_slots.max(sh.peak_live);
+        let mut out = Vec::with_capacity(n);
+        for (pos, seq) in sh.results.iter_mut().enumerate() {
+            match seq.take() {
+                Some(s) => out.push(s),
+                None => bail!("pipelined rollout dropped task at position {pos}"),
+            }
+        }
+        Ok((out, stats))
+    }
+
+    /// One pipelined worker lane: a continuous-style decode loop over its
+    /// own backend, coordinating admission/release/growth/stealing
+    /// through the shared state and deferring slot prefills to the shared
+    /// prefill lane. Returns its stats and its final virtual clock.
+    #[allow(clippy::too_many_arguments)]
+    fn pipelined_worker<B: RolloutBackend>(
+        &self,
+        b: &mut B,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        seq_id_base: u64,
+        me: usize,
+        shared: &Mutex<PipeShared<'_>>,
+        cv: &Condvar,
+    ) -> Result<(RolloutStats, u64)> {
+        let geom = Geometry::of(b);
+        let r = geom.slots;
+        let lock = || {
+            shared
+                .lock()
+                .map_err(|_| anyhow::anyhow!("pipelined shared state poisoned"))
+        };
+
+        let mut stats = RolloutStats { chunks: 1, workers: 1, ..RolloutStats::default() };
+        // this lane's virtual clock (ticks on the backend's cost model)
+        let mut now = 0u64;
+        let mut core = DecodeCore::new(geom, self.mode.is_sparse());
+        // slots whose row in `logp` is fresh (sampled at the loop top);
+        // freshly joined slots carry an already-sampled token instead
+        let mut decoded = vec![false; r];
+        let mut logp: Vec<f32> = Vec::new();
+
+        // ---- initial wave: admit a batch head, one batched prefill ------
+        let mut wave = PrefillWave::new(&geom);
+        {
+            let mut guard = lock()?;
+            while wave.count() < r {
+                let Some(pos) = guard.admit_next(tasks, seq_id_base) else { break };
+                let (idx, task) = tasks[pos];
+                wave.push(&mut core, pos, idx, &task.prompt_ids, seed);
+            }
+            guard.lane_live[me] = wave.count();
+            guard.snap_residency(&mut stats);
+        }
+        let w0 = wave.count();
+        if w0 > 0 {
+            // the batched prefill shares the single modeled prefill lane
+            // with every other worker's; the decode lane blocks on it
+            // (nothing to decode before the first logits anyway)
+            let ready = lock()?.lane_issue(now, geom.costs.prefill_ticks);
+            logp = wave.prefill(&core, b, &mut stats)?;
+            stats.prefill_blocked_ticks += ready - now;
+            now = ready;
+            for d in decoded.iter_mut().take(w0) {
+                *d = true;
+            }
+        }
+
+        loop {
+            // ---- sample from fresh logits; release finishers ------------
+            let mut released = false;
+            for slot in 0..r {
+                if !decoded[slot] {
+                    continue;
+                }
+                decoded[slot] = false;
+                let dist = &logp[slot * geom.vocab..(slot + 1) * geom.vocab];
+                if let Some(done) = core.sample(self, slot, dist) {
+                    let mut guard = lock()?;
+                    let sh = &mut *guard;
+                    sh.sched.release_seq(sh.kv, seq_id_base + done.pos as u64)?;
+                    sh.release_at(now);
+                    sh.lane_live[me] = core.occupied();
+                    sh.results[done.pos] = Some(done.gen);
+                    released = true;
+                }
+            }
+            if released {
+                cv.notify_all();
+            }
+
+            // ---- join refills whose lane prefill has completed ----------
+            let mut joins: Vec<PendingRefill> = Vec::new();
+            {
+                let mut guard = lock()?;
+                while guard.refills[me].front().is_some_and(|p| p.ready_at <= now) {
+                    joins.push(guard.refills[me].pop_front().expect("checked front"));
+                }
+            }
+            let mut joined_any = false;
+            for p in joins {
+                let slot = core
+                    .free_slot()
+                    .expect("a free slot exists per pending refill (registry invariant)");
+                let (idx, task) = tasks[p.pos];
+                let pi = &task.prompt_ids;
+                let row = if stats.prefills == 0 {
+                    // this lane's whole first wave was refused at the wall,
+                    // so it has no live cache yet and the real backend's
+                    // prefill_slot would reject: run the batched entry with
+                    // just this prompt instead — batch-row independence
+                    // makes the slot's logits identical either way
+                    prefill_single_row(&geom, b, slot, pi, &mut stats)?
+                } else {
+                    stats.slot_prefills += 1;
+                    b.prefill_slot(slot, pi)?
+                };
+                stats.refills += 1;
+                // identical per-token semantics to the continuous refill
+                // path: first token from the slot-prefill logits
+                if let Some(done) = core.join(self, slot, p.pos, idx, pi, &row, seed) {
+                    // degenerate single-token sequence: release; the slot
+                    // frees for the next admission pass below
+                    let mut guard = lock()?;
+                    let sh = &mut *guard;
+                    sh.sched.release_seq(sh.kv, seq_id_base + done.pos as u64)?;
+                    sh.release_at(now);
+                    sh.results[done.pos] = Some(done.gen);
+                    drop(guard);
+                    cv.notify_all();
+                    continue;
+                }
+                decoded[slot] = false;
+                joined_any = true;
+            }
+            if joined_any {
+                lock()?.lane_live[me] = core.occupied();
+            }
+
+            // ---- issue refills: admit + queue on the prefill lane -------
+            {
+                let mut guard = lock()?;
+                while core.occupied() + guard.refills[me].len() < r {
+                    let Some(pos) = guard.admit_next(tasks, seq_id_base) else {
+                        break; // queue empty, or wall: retry after releases
+                    };
+                    let ready_at = guard.lane_issue(now, geom.costs.slot_prefill_ticks);
+                    guard.refills[me].push_back(PendingRefill { pos, ready_at });
+                    guard.snap_residency(&mut stats);
+                }
+            }
+
+            // ---- empty lane: wait, steal, or drain ----------------------
+            if core.occupied() == 0 {
+                let mut guard = lock()?;
+                if let Some(t) = guard.refills[me].front().map(|p| p.ready_at) {
+                    // nothing decodable while the lane prefills: the
+                    // decode lane waits for the earliest join
+                    drop(guard);
+                    stats.prefill_blocked_ticks += t.saturating_sub(now);
+                    now = now.max(t);
+                    continue;
+                }
+                // The queue has work this lane cannot admit (a peer holds
+                // the wall), or is empty while peers still hold pending
+                // refills. Adopt queue work when it fits, steal a pending
+                // refill from the most-loaded peer, or park until a
+                // release (releases notify; the timeout re-checks
+                // `failed` and the deadlock predicate, never aborting a
+                // merely-slow run).
+                let stall_start = now;
+                let got_work = loop {
+                    if let Some(e) = &guard.failed {
+                        bail!("pipelined peer failed: {e}");
+                    }
+                    if let Some(pos) = guard.admit_next(tasks, seq_id_base) {
+                        // honest virtual time: this admission only became
+                        // possible when a peer released KV
+                        now = now.max(guard.release_floor);
+                        let ready_at = guard.lane_issue(now, geom.costs.slot_prefill_ticks);
+                        guard.refills[me].push_back(PendingRefill { pos, ready_at });
+                        guard.snap_residency(&mut stats);
+                        break true;
+                    }
+                    if self.steal {
+                        if let Some(p) = guard.steal_for(me) {
+                            // adopt the refill: its admission charge and
+                            // its prefill-lane slot travel with it, so the
+                            // thief just inherits the wait for `ready_at`
+                            guard.refills[me].push_back(p);
+                            stats.steals += 1;
+                            break true;
+                        }
+                    }
+                    if guard.queue.is_empty() {
+                        break false; // drained: worker done
+                    }
+                    // state-based deadlock check (NOT wall-clock based — a
+                    // slow real backend may take arbitrarily long between
+                    // releases): with no sequence admitted anywhere, no
+                    // future release can ever free room, so a refusal now
+                    // is a refusal forever.
+                    if guard.live_now == 0 {
+                        bail!(
+                            "pipelined rollout stalled: {} pending but nothing \
+                             admissible on an idle wall (reserve {} > free KV {})",
+                            guard.queue.len(),
+                            guard.sched.reserve_per_seq,
+                            guard.kv.available()
+                        );
+                    }
+                    let (g, _) = cv
+                        .wait_timeout(guard, Duration::from_millis(2))
+                        .map_err(|_| anyhow::anyhow!("pipelined shared state poisoned"))?;
+                    guard = g;
+                };
+                drop(guard);
+                if !got_work {
+                    break; // queue drained: worker done (peers drain their own)
+                }
+                stats.sched_stall_ticks += now - stall_start;
+                continue; // the pending refill joins via the lane
+            }
+
+            // ---- compression trigger (the shared per-sequence rule) -----
+            {
+                let compressed = core.compress_step(b, &mut stats)?;
+                if !compressed.is_empty() {
+                    now += geom.costs.compress_ticks;
+                    let mut guard = lock()?;
+                    let sh = &mut *guard;
+                    for pos in compressed {
+                        sh.sched.compressed(sh.kv, seq_id_base + pos as u64, geom.budget)?;
+                    }
+                }
+            }
+
+            // ---- paged growth; stalls preempt from the OWN batch --------
+            // (cross-worker caches are untouchable; freed pages help every
+            // lane, so preemptions notify the pool)
+            {
+                let mut guard = lock()?;
+                let sh = &mut *guard;
+                let evicted = core.grow_step(sh.sched, sh.kv, seq_id_base, &mut stats)?;
+                let preempted = !evicted.is_empty();
+                for (slot, v) in evicted {
+                    sh.release_at(now);
+                    sh.queue.push_front(v.pos);
+                    decoded[slot] = false;
+                }
+                sh.lane_live[me] = core.occupied();
+                drop(guard);
+                if preempted {
+                    cv.notify_all();
+                }
+            }
+
+            // ---- one decode step over the mixed batch -------------------
+            if core.occupied() == 0 {
+                continue; // growth evicted the whole batch: re-admit/wait
+            }
+            logp = core.decode_step(b, &mut stats)?;
+            now += geom.costs.decode_ticks;
+            for slot in 0..r {
+                decoded[slot] = core.slots[slot].is_some();
+            }
+        }
+
+        Ok((stats, now))
+    }
+}

@@ -1,0 +1,144 @@
+//! Static chunked engine shell: a chunk of ≤ R sequences is prefilled
+//! together and decodes until the *slowest* sequence finishes. Every slot
+//! whose sequence terminates early sits idle (PAD-fed) until the chunk
+//! drains — the long-tail bubble the continuous engine removes. All
+//! per-token semantics live in the shared decode core.
+
+use anyhow::{bail, Result};
+
+use crate::config::AdmissionOrder;
+use crate::data::task::Task;
+
+use super::super::backend::RolloutBackend;
+use super::super::kv_manager::KvMemoryManager;
+use super::super::scheduler::Scheduler;
+use super::core::{admission_costs, DecodeCore, GenSeq, Geometry, PrefillWave};
+use super::stats::RolloutStats;
+use super::RolloutPolicy;
+
+impl RolloutPolicy {
+    /// Static chunked rollout of ≤ R sequences (the scheduler guarantees
+    /// admission). `tasks` pairs a caller-side index with the task
+    /// occupying that slot. The chunk decodes until its slowest sequence
+    /// finishes; early finishers vacate their slot but the chunk's KV
+    /// reservations are only released by the caller when the whole chunk
+    /// drains.
+    pub fn rollout_static<B: RolloutBackend>(
+        &self,
+        b: &mut B,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let geom = Geometry::of(b);
+        let n = tasks.len();
+        assert!(n <= geom.slots, "chunk of {} > {} slots", n, geom.slots);
+        let mut stats = RolloutStats { chunks: 1, workers: 1, ..RolloutStats::default() };
+        if n == 0 {
+            return Ok((vec![], stats));
+        }
+
+        // ---- prefill: the whole chunk in one batched call ---------------
+        let mut core = DecodeCore::new(geom, self.mode.is_sparse());
+        let mut wave = PrefillWave::new(&geom);
+        for (slot, (idx, task)) in tasks.iter().enumerate() {
+            wave.push(&mut core, slot, *idx, &task.prompt_ids, seed);
+        }
+        let mut logp = wave.prefill(&core, b, &mut stats)?;
+        // serial lane: the decode batch blocks on its own prefill
+        stats.prefill_blocked_ticks += geom.costs.prefill_ticks;
+
+        // ---- decode loop: run until the slowest sequence finishes -------
+        let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
+        loop {
+            for slot in 0..geom.slots {
+                let dist = &logp[slot * geom.vocab..(slot + 1) * geom.vocab];
+                if let Some(done) = core.sample(self, slot, dist) {
+                    // no per-sequence release: the chunk's reservation
+                    // drains as a unit (finish_chunk) — THE static-engine
+                    // bubble. The freed slot just idles.
+                    results[done.pos] = Some(done.gen);
+                }
+            }
+            if core.occupied() == 0 {
+                break; // chunk drained; trailing logits are never needed
+            }
+            // chunk reservations are worst-case/predicted bounds, so
+            // compression never needs a scheduler shrink here
+            core.compress_step(b, &mut stats)?;
+            logp = core.decode_step(b, &mut stats)?;
+        }
+        // serial engine: the lane's makespan is simply everything it did
+        stats.modeled_makespan_ticks =
+            stats.decode_busy_ticks + stats.prefill_blocked_ticks + stats.sched_stall_ticks;
+        let out = results
+            .into_iter()
+            .map(|s| s.expect("every chunk member completed"))
+            .collect();
+        Ok((out, stats))
+    }
+
+    /// Drive the static chunked engine over a whole pending queue: admit
+    /// a chunk against the wall, roll it out to completion, release, and
+    /// repeat. THE single driver for queue-scale static rollouts — the
+    /// trainer, the equivalence harness, and the benches all call this,
+    /// so they exercise identical admission/ordering semantics. Under
+    /// `admission-order = shortest-first` the pending queue is stably
+    /// sorted by predicted residency before chunking, so chunks fill with
+    /// the cheapest tasks first (the same order the dynamic engines pop
+    /// in); results still come back in task order.
+    pub fn rollout_static_queue<B: RolloutBackend>(
+        &self,
+        b: &mut B,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let n = tasks.len();
+        let mut pending: Vec<usize> = (0..n).collect();
+        let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
+        let mut stats = RolloutStats::default();
+        let mut base = seq_id_base;
+        // Two views of the same oracle: the clamped predicted residency
+        // sizes paged chunk reservations; the unclamped admission cost
+        // orders shortest-first (cap ties break toward cheaper prompts,
+        // exactly like the dynamic engines' queue picks). Worst-case
+        // fifo ignores both.
+        let residency: Vec<usize> = tasks
+            .iter()
+            .map(|(_, t)| sched.predicted_residency(t.prompt_ids.len(), self.sampling.max_response))
+            .collect();
+        if sched.order == AdmissionOrder::ShortestFirst {
+            let cost = admission_costs(sched, tasks, self.sampling.max_response);
+            // stable: equal-cost tasks keep their queue order
+            pending.sort_by_key(|&i| cost[i]);
+        }
+        while !pending.is_empty() {
+            let Some(chunk) = sched.next_chunk(&mut pending, kv, base, &residency) else {
+                bail!(
+                    "static rollout stalled: {} pending but nothing admissible \
+                     (static batching drains synchronously)",
+                    pending.len()
+                );
+            };
+            stats.max_reserved_kv = stats.max_reserved_kv.max(kv.reserved());
+            stats.max_used_pages = stats.max_used_pages.max(kv.used_pages());
+            let chunk_tasks: Vec<(usize, &Task)> =
+                chunk.items.iter().map(|&i| tasks[i]).collect();
+            let (seqs, cstats) = self.rollout_static(b, &chunk_tasks, seed)?;
+            stats.merge(&cstats);
+            // rollout_static returns sequences in slot (= chunk) order
+            for (&pos, seq) in chunk.items.iter().zip(seqs) {
+                results[pos] = Some(seq);
+            }
+            sched.finish_chunk(&chunk, kv, base);
+            base += chunk.items.len() as u64;
+        }
+        let out = results
+            .into_iter()
+            .map(|s| s.expect("every queued task completed"))
+            .collect();
+        Ok((out, stats))
+    }
+}

@@ -1,0 +1,280 @@
+//! Rollout throughput/occupancy statistics + virtual-clock tick
+//! accounting, shared by every engine shell over the decode core.
+
+/// Throughput/occupancy statistics for one rollout (any engine).
+///
+/// `occupied_slot_steps` counts, per decode step, the slots doing live
+/// generation; `idle_slot_steps` counts the complement — PAD work on
+/// finished or never-admitted slots (the long-tail bubble the continuous
+/// engine removes).
+///
+/// **Denominator contract (cross-engine audit):** every counter here is
+/// denominated in *modeled device work*, never in engine loop iterations.
+/// One `decode` artifact invocation contributes exactly `slots` slot-steps
+/// (`occupied + idle == decode_steps * slots` — the equivalence tests
+/// assert this identity for all three engines), so `occupancy()` and
+/// `idle_frac()` are apples-to-apples across static, continuous, and
+/// pipelined runs, and across worker counts. The `*_ticks` fields are the
+/// virtual-clock breakdown on the backend's `CostModel` (all zero for
+/// real backends, which are wall-timed by the trainer instead).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RolloutStats {
+    /// Scheduled chunks (continuous: one pass over the whole queue).
+    pub chunks: usize,
+    /// Decode artifact invocations.
+    pub decode_steps: usize,
+    pub occupied_slot_steps: usize,
+    pub idle_slot_steps: usize,
+    /// Mid-flight slot refills (continuous only).
+    pub refills: usize,
+    /// Batched prefill calls.
+    pub prefills: usize,
+    /// Per-slot (recycling) prefill calls.
+    pub slot_prefills: usize,
+    /// Max KV tokens reserved simultaneously (continuous only; the
+    /// invariant tests check this never exceeds the wall).
+    pub max_reserved_kv: usize,
+    /// Max pool pages in use simultaneously (continuous only; page
+    /// occupancy = this over the manager's `total_pages`).
+    pub max_used_pages: usize,
+    /// Max concurrently occupied decode slots at any step (the admitted
+    /// width the paged-vs-worst-case benches compare).
+    pub peak_live_slots: usize,
+    /// Sequences preempted and requeued by a paged-admission grow stall
+    /// (0 under worst-case admission).
+    pub preemptions: usize,
+    /// Pending refills adopted from a peer lane by a drained worker
+    /// (pipelined with `steal = on` only; scheduling-only — never changes
+    /// tokens).
+    pub steals: usize,
+    /// Worker lanes that produced these stats (1 for static/continuous;
+    /// the pool size for pipelined).
+    pub workers: usize,
+    /// Modeled ticks spent busy on decode + compression calls, summed
+    /// over lanes.
+    pub decode_busy_ticks: u64,
+    /// Modeled ticks a decode lane sat blocked on prefill work: batched
+    /// prefills, plus slot prefills that could not be hidden behind decode
+    /// (the continuous engine charges *every* slot prefill here — that
+    /// serial stall is exactly what the pipelined engine's dedicated
+    /// prefill lane removes).
+    pub prefill_blocked_ticks: u64,
+    /// Modeled ticks a decode lane idled empty at the memory wall,
+    /// waiting for another lane to release KV (pipelined only; the
+    /// single-lane engines keep decoding or bail instead of waiting).
+    pub sched_stall_ticks: u64,
+    /// Modeled end-to-end makespan. Serial engines: busy + blocked +
+    /// stall. Pipelined: max over worker lanes' finish clocks — which is
+    /// why `merge` (serial composition, e.g. static chunks) SUMS this
+    /// field and the pipelined joiner overwrites it with the lane max.
+    pub modeled_makespan_ticks: u64,
+}
+
+impl RolloutStats {
+    /// Total device slot-steps: the shared denominator of `occupancy` and
+    /// `idle_frac`. Always equals `decode_steps * slots` when the engines
+    /// uphold the denominator contract (asserted by the equivalence
+    /// tests).
+    pub fn device_slot_steps(&self) -> usize {
+        self.occupied_slot_steps + self.idle_slot_steps
+    }
+
+    /// Mean decode-step slot occupancy in [0, 1].
+    pub fn occupancy(&self) -> f64 {
+        let total = self.device_slot_steps();
+        if total == 0 {
+            0.0
+        } else {
+            self.occupied_slot_steps as f64 / total as f64
+        }
+    }
+
+    /// Fraction of decode-slot work wasted on idle (PAD) slots.
+    pub fn idle_frac(&self) -> f64 {
+        let total = self.device_slot_steps();
+        if total == 0 {
+            0.0
+        } else {
+            self.idle_slot_steps as f64 / total as f64
+        }
+    }
+
+    /// Combine stats from two runs. Work counters (steps, slot-steps,
+    /// refills, preemptions, steals, ticks, makespan) ADD — serial
+    /// composition, as when the static queue driver folds chunk after
+    /// chunk. Residency peaks take the MAX (they are high-water marks,
+    /// not work). The pipelined joiner uses `merge` for the per-lane work
+    /// sums, then overwrites `modeled_makespan_ticks` with the lane max
+    /// and `peak_live_slots` with the globally observed admitted width.
+    pub fn merge(&mut self, o: &RolloutStats) {
+        self.chunks += o.chunks;
+        self.decode_steps += o.decode_steps;
+        self.occupied_slot_steps += o.occupied_slot_steps;
+        self.idle_slot_steps += o.idle_slot_steps;
+        self.refills += o.refills;
+        self.prefills += o.prefills;
+        self.slot_prefills += o.slot_prefills;
+        self.max_reserved_kv = self.max_reserved_kv.max(o.max_reserved_kv);
+        self.max_used_pages = self.max_used_pages.max(o.max_used_pages);
+        self.peak_live_slots = self.peak_live_slots.max(o.peak_live_slots);
+        self.preemptions += o.preemptions;
+        self.steals += o.steals;
+        self.workers = self.workers.max(o.workers);
+        self.decode_busy_ticks += o.decode_busy_ticks;
+        self.prefill_blocked_ticks += o.prefill_blocked_ticks;
+        self.sched_stall_ticks += o.sched_stall_ticks;
+        self.modeled_makespan_ticks += o.modeled_makespan_ticks;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+
+    #[test]
+    fn stats_merge_sums_work_and_maxes_peaks() {
+        let a = RolloutStats {
+            chunks: 1,
+            decode_steps: 10,
+            occupied_slot_steps: 30,
+            idle_slot_steps: 10,
+            refills: 2,
+            prefills: 1,
+            slot_prefills: 2,
+            max_reserved_kv: 100,
+            max_used_pages: 5,
+            peak_live_slots: 4,
+            preemptions: 1,
+            steals: 1,
+            workers: 1,
+            decode_busy_ticks: 100,
+            prefill_blocked_ticks: 40,
+            sched_stall_ticks: 0,
+            modeled_makespan_ticks: 140,
+        };
+        let b = RolloutStats {
+            chunks: 1,
+            decode_steps: 5,
+            occupied_slot_steps: 15,
+            idle_slot_steps: 5,
+            max_reserved_kv: 80,
+            max_used_pages: 9,
+            peak_live_slots: 2,
+            workers: 1,
+            decode_busy_ticks: 50,
+            prefill_blocked_ticks: 40,
+            sched_stall_ticks: 7,
+            modeled_makespan_ticks: 97,
+            ..RolloutStats::default()
+        };
+        let mut m = a;
+        m.merge(&b);
+        // work counters sum (serial composition)...
+        assert_eq!(m.decode_steps, 15);
+        assert_eq!(m.device_slot_steps(), 60);
+        assert_eq!(m.decode_busy_ticks, 150);
+        assert_eq!(m.prefill_blocked_ticks, 80);
+        assert_eq!(m.sched_stall_ticks, 7);
+        assert_eq!(m.modeled_makespan_ticks, 237);
+        assert_eq!(m.steals, 1);
+        // ...high-water marks take the max
+        assert_eq!(m.max_reserved_kv, 100);
+        assert_eq!(m.max_used_pages, 9);
+        assert_eq!(m.peak_live_slots, 4);
+        // denominator contract: slot-steps stay per-device-step, so the
+        // merged occupancy is the slot-step-weighted mean
+        assert!((m.occupancy() - 45.0 / 60.0).abs() < 1e-12);
+        assert!((m.idle_frac() - 15.0 / 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_merge_preserves_denominator_contract_and_sums_exactly() {
+        // Merging N per-lane stats — each individually satisfying the
+        // audited invariant `occupied + idle == decode_steps * slots` —
+        // must preserve it exactly, sum every work counter exactly
+        // (preemptions, steals, refills, admission-side prefill counts),
+        // and take exact maxima of the high-water marks. This is the
+        // documented serial-composition contract the pipelined joiner and
+        // the static queue driver both lean on.
+        propcheck::quick("stats-merge-invariants", |rng, size| {
+            let slots = 1 + rng.below(16);
+            let n = 1 + rng.below(2 + size / 4);
+            let mut lanes = Vec::with_capacity(n);
+            for _ in 0..n {
+                let decode_steps = rng.below(200);
+                let occupied = if decode_steps == 0 {
+                    0
+                } else {
+                    rng.below(decode_steps * slots + 1)
+                };
+                lanes.push(RolloutStats {
+                    chunks: 1,
+                    decode_steps,
+                    occupied_slot_steps: occupied,
+                    idle_slot_steps: decode_steps * slots - occupied,
+                    refills: rng.below(20),
+                    prefills: rng.below(4),
+                    slot_prefills: rng.below(20),
+                    max_reserved_kv: rng.below(4096),
+                    max_used_pages: rng.below(256),
+                    peak_live_slots: rng.below(slots + 1),
+                    preemptions: rng.below(16),
+                    steals: rng.below(8),
+                    workers: 1,
+                    decode_busy_ticks: rng.below(10_000) as u64,
+                    prefill_blocked_ticks: rng.below(10_000) as u64,
+                    sched_stall_ticks: rng.below(10_000) as u64,
+                    modeled_makespan_ticks: rng.below(30_000) as u64,
+                });
+            }
+            let mut merged = RolloutStats::default();
+            for lane in &lanes {
+                merged.merge(lane);
+            }
+            let steps: usize = lanes.iter().map(|l| l.decode_steps).sum();
+            if merged.device_slot_steps() != steps * slots {
+                return Err(format!(
+                    "denominator broken after merge: {} + {} != {} * {slots}",
+                    merged.occupied_slot_steps, merged.idle_slot_steps, steps
+                ));
+            }
+            let sum = |f: fn(&RolloutStats) -> usize| lanes.iter().map(f).sum::<usize>();
+            if merged.decode_steps != steps
+                || merged.preemptions != sum(|l| l.preemptions)
+                || merged.steals != sum(|l| l.steals)
+                || merged.refills != sum(|l| l.refills)
+                || merged.prefills != sum(|l| l.prefills)
+                || merged.slot_prefills != sum(|l| l.slot_prefills)
+                || merged.chunks != n
+            {
+                return Err("a work counter did not sum exactly".into());
+            }
+            let ticks = |f: fn(&RolloutStats) -> u64| lanes.iter().map(f).sum::<u64>();
+            if merged.decode_busy_ticks != ticks(|l| l.decode_busy_ticks)
+                || merged.prefill_blocked_ticks != ticks(|l| l.prefill_blocked_ticks)
+                || merged.sched_stall_ticks != ticks(|l| l.sched_stall_ticks)
+                || merged.modeled_makespan_ticks != ticks(|l| l.modeled_makespan_ticks)
+            {
+                return Err("a tick counter did not sum exactly".into());
+            }
+            let max = |f: fn(&RolloutStats) -> usize| lanes.iter().map(f).max().unwrap_or(0);
+            if merged.max_reserved_kv != max(|l| l.max_reserved_kv)
+                || merged.max_used_pages != max(|l| l.max_used_pages)
+                || merged.peak_live_slots != max(|l| l.peak_live_slots)
+                || merged.workers != max(|l| l.workers)
+            {
+                return Err("a high-water mark is not the exact max".into());
+            }
+            // merge is order-independent for every audited field
+            let mut rev = RolloutStats::default();
+            for lane in lanes.iter().rev() {
+                rev.merge(lane);
+            }
+            if rev != merged {
+                return Err("merge is not order-independent".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -16,14 +16,14 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::{EngineKind, MemoryConfig, RolloutMode, SamplingConfig};
+use crate::config::{AdmissionOrder, EngineKind, MemoryConfig, RolloutMode, SamplingConfig};
 use crate::data::benchmarks::{Benchmark, Protocol};
 use crate::data::task::Task;
 use crate::runtime::{ModelEngine, ParamsLit};
 
 use super::backend::{EngineBackend, RolloutBackend};
+use super::engine::RolloutPolicy;
 use super::kv_manager::KvMemoryManager;
-use super::rollout::RolloutPolicy;
 use super::scheduler::Scheduler;
 
 /// Result of evaluating one benchmark.
@@ -63,6 +63,11 @@ pub struct EvalOptions {
     pub memory: MemoryConfig,
     /// Decode lanes for `engine = pipelined`; ignored otherwise.
     pub rollout_workers: usize,
+    /// Cross-worker work stealing for `engine = pipelined` (default on).
+    pub steal: bool,
+    /// Admission order for the pending queue (fifo preserves the
+    /// original behavior).
+    pub admission_order: AdmissionOrder,
 }
 
 impl Default for EvalOptions {
@@ -71,6 +76,8 @@ impl Default for EvalOptions {
             engine: EngineKind::default(),
             memory: MemoryConfig::default(),
             rollout_workers: 2,
+            steal: true,
+            admission_order: AdmissionOrder::default(),
         }
     }
 }
@@ -185,7 +192,7 @@ pub fn evaluate(
             max_response: m.config.max_seq - m.config.prompt_len,
         },
     };
-    let policy = RolloutPolicy::new(mode, sampling);
+    let policy = RolloutPolicy::new(mode, sampling).with_steal(opts.steal);
     let params_lit = ParamsLit::new(params);
     // one backend per decode lane (single-lane engines use the first)
     let lanes = if opts.engine == EngineKind::Pipelined {
@@ -198,7 +205,8 @@ pub fn evaluate(
         .collect();
     let mut sched = Scheduler::new(m, mode.is_sparse())
         .with_admission(opts.memory.admission)
-        .with_headroom(opts.memory.kv_admit_headroom_pages);
+        .with_headroom(opts.memory.kv_admit_headroom_pages)
+        .with_order(opts.admission_order);
     // The eval wall exists to drive the engines' admission machinery, not
     // to throttle accuracy measurement (tokens are width-independent). It
     // is clamped up so a full decode batch always fits — with default

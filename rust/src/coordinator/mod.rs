@@ -1,8 +1,10 @@
 //! L3 coordinator: the paper's system contribution.
 //!
-//! * `rollout`    — dense/sparse generation, static chunked, continuous
-//!   batching with slot recycling, AND pipelined multi-worker batching
-//!   with a dedicated prefill lane (all token-identical per task)
+//! * `engine`     — dense/sparse generation: ONE shared decode-step core
+//!   (`engine::core`) under three scheduling shells — static chunked,
+//!   continuous batching with slot recycling, and pipelined multi-worker
+//!   batching with a dedicated prefill lane + cross-worker work stealing
+//!   (all token-identical per task)
 //! * `backend`    — the model surface the engines drive (artifacts or mock)
 //! * `mock`       — deterministic pure-Rust backend for the equivalence
 //!   test harness and engine benches
@@ -17,6 +19,7 @@
 //! * `metrics`    — training-dynamics time series (Figs. 1-6)
 
 pub mod backend;
+pub mod engine;
 pub mod eval;
 pub mod group;
 pub mod kv_manager;
@@ -24,15 +27,14 @@ pub mod metrics;
 pub mod mock;
 pub mod rejection;
 pub mod reweight;
-pub mod rollout;
 pub mod scheduler;
 pub mod trainer;
 
 pub use backend::{CostModel, EngineBackend, RolloutBackend};
+pub use engine::{task_rng, GenSeq, RolloutEngine, RolloutPolicy, RolloutStats};
 pub use eval::{evaluate, evaluate_suite, evaluate_with_backend, EvalOptions, EvalResult};
 pub use kv_manager::KvMemoryManager;
 pub use metrics::Metrics;
 pub use mock::MockModelBackend;
-pub use rollout::{task_rng, GenSeq, RolloutEngine, RolloutPolicy, RolloutStats};
 pub use scheduler::Scheduler;
 pub use trainer::{StepReport, Trainer};

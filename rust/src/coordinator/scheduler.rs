@@ -36,7 +36,9 @@
 //!   paged admission the effective width is data-dependent, so the closed
 //!   forms bound it via `predicted_decode_steps_with` (see `width_paged`).
 
-use crate::config::AdmissionPolicy;
+use std::collections::VecDeque;
+
+use crate::config::{AdmissionOrder, AdmissionPolicy};
 use crate::runtime::Manifest;
 
 use super::kv_manager::{KvMemoryManager, SeqId};
@@ -116,6 +118,12 @@ pub struct Scheduler {
     /// preemptions. Ignored by worst-case admission, and bypassed when
     /// the pool is empty (progress guarantee).
     pub admit_headroom_pages: usize,
+    /// Order pending tasks are admitted in (`admission-order`): `fifo`
+    /// (seed behavior — the queue head is the only candidate) or
+    /// `shortest-first` (makespan-aware — smallest predicted residency
+    /// first, so a big task never head-of-line-blocks a small admissible
+    /// one). Pure scheduling: per-task RNG keeps tokens order-invariant.
+    pub order: AdmissionOrder,
     pub stats: SchedulerStats,
 }
 
@@ -139,6 +147,7 @@ impl Scheduler {
             reserve_per_seq,
             admission: AdmissionPolicy::WorstCase,
             admit_headroom_pages: 1,
+            order: AdmissionOrder::Fifo,
             stats: SchedulerStats::default(),
         }
     }
@@ -156,6 +165,59 @@ impl Scheduler {
         self
     }
 
+    /// Select the admission order (builder style; see `order`).
+    pub fn with_order(mut self, order: AdmissionOrder) -> Self {
+        self.order = order;
+        self
+    }
+
+    /// Predicted worst-case residency of one task: its cache never holds
+    /// more than prompt + `max_response` generated tokens + one trailing
+    /// write, nor more than the per-seq bound. THE reservation oracle:
+    /// static paged chunk sizing reads this clamped form.
+    pub fn predicted_residency(&self, prompt_tokens: usize, max_response: usize) -> usize {
+        self.admission_cost(prompt_tokens, max_response).min(self.reserve_per_seq)
+    }
+
+    /// The shortest-first ORDERING key: the unclamped residency
+    /// prediction. Deliberately not capped at `reserve_per_seq` — two
+    /// tasks both clamped to the bound can still differ wildly in their
+    /// paged admission charge (prompt pages), and ordering by the
+    /// unclamped value breaks those ties toward the cheaper prompt, so a
+    /// cap-tied giant cannot head-of-line-block an admissible smaller
+    /// task. On unclamped values it orders identically to
+    /// `predicted_residency`. The engines and the equivalence tests'
+    /// order replays all read this one formula.
+    pub fn admission_cost(&self, prompt_tokens: usize, max_response: usize) -> usize {
+        prompt_tokens + max_response + 1
+    }
+
+    /// Which queue element the engine should try to admit next, as an
+    /// index into `queue` (`None` iff empty). Fifo: the head.
+    /// Shortest-first: the first element with the smallest admission
+    /// cost (`cost[task]`, from `admission_cost`; stable — ties keep
+    /// queue order, so uniform-cost queues degrade to exact fifo
+    /// behavior).
+    ///
+    /// Shortest-first scans the queue per pick — O(n²) over a full
+    /// drain, fine at this repo's queue scales (≲ a few hundred) but a
+    /// sorted index would be the upgrade if queues grow by orders of
+    /// magnitude (it must preserve the stable first-min tie-break the
+    /// equivalence tests replay).
+    pub fn pick_next(&self, queue: &VecDeque<usize>, cost: &[usize]) -> Option<usize> {
+        match self.order {
+            AdmissionOrder::Fifo => {
+                if queue.is_empty() {
+                    None
+                } else {
+                    Some(0)
+                }
+            }
+            AdmissionOrder::ShortestFirst => (0..queue.len())
+                .min_by_key(|&qi| cost.get(queue[qi]).copied().unwrap_or(usize::MAX)),
+        }
+    }
+
     /// Tokens a fresh sequence with `prompt_tokens` of prompt is charged
     /// at admission. Worst-case: the full bound. Paged: the prompt plus
     /// the first decode write (page-rounded by the manager).
@@ -171,9 +233,9 @@ impl Scheduler {
     /// can be admitted (caller should drain running chunks first).
     ///
     /// `residency[i]` is the predicted worst-case residency of pending
-    /// item value `i` (task position) — `min(prompt + max_response,
-    /// reserve_per_seq)`. Only paged admission reads it; worst-case
-    /// callers may pass `&[]`.
+    /// item value `i` (task position) — `predicted_residency`, i.e.
+    /// `min(prompt + max_response + 1, reserve_per_seq)`. Only paged
+    /// admission reads it; worst-case callers may pass `&[]`.
     pub fn next_chunk(
         &mut self,
         pending: &mut Vec<usize>,
@@ -742,6 +804,31 @@ mod tests {
             wide.predicted_decode_steps_with(&[9; 16], 300, 30)
                 < wide.predicted_decode_steps_with(&[9; 16], 300, 100)
         );
+    }
+
+    #[test]
+    fn pick_next_orders_by_admission_cost() {
+        let fifo = mk(4, 100);
+        let sjf = mk(4, 100).with_order(AdmissionOrder::ShortestFirst);
+        // cost indexed by TASK position; queue holds task positions
+        let cost = vec![80usize, 20, 50, 20];
+        let queue: VecDeque<usize> = vec![0, 1, 2, 3].into();
+        assert_eq!(fifo.pick_next(&queue, &cost), Some(0));
+        // shortest-first: task 1 (cost 20) wins; the tie with task 3
+        // breaks toward the earlier queue position (stable)
+        assert_eq!(sjf.pick_next(&queue, &cost), Some(1));
+        let queue: VecDeque<usize> = vec![3, 0, 1].into();
+        assert_eq!(sjf.pick_next(&queue, &cost), Some(0), "task 3 at qi 0");
+        let empty: VecDeque<usize> = VecDeque::new();
+        assert_eq!(fifo.pick_next(&empty, &cost), None);
+        assert_eq!(sjf.pick_next(&empty, &cost), None);
+        // reservation oracle caps at the per-seq bound; the ordering key
+        // does not, so cap-tied tasks still order by prompt size
+        assert_eq!(sjf.predicted_residency(10, 20), 31);
+        assert_eq!(sjf.predicted_residency(90, 20), 100);
+        assert_eq!(sjf.admission_cost(10, 20), 31);
+        assert_eq!(sjf.admission_cost(90, 20), 111);
+        assert!(sjf.admission_cost(80, 20) < sjf.admission_cost(90, 20));
     }
 
     #[test]

@@ -29,7 +29,7 @@ use super::kv_manager::KvMemoryManager;
 use super::metrics::Metrics;
 use super::rejection::{self, RejectionStats};
 use super::reweight::{self, TrainSeq};
-use super::rollout::{GenSeq, RolloutEngine, RolloutStats};
+use super::engine::{GenSeq, RolloutEngine, RolloutStats};
 use super::scheduler::Scheduler;
 
 /// Everything produced by one RL step, for logging/analysis.
@@ -62,6 +62,9 @@ pub struct StepReport {
     /// Sequences preempted/requeued by a paged-admission grow stall
     /// (0 under worst-case admission).
     pub preemptions: usize,
+    /// Pending refills adopted from a peer lane by a drained worker
+    /// (pipelined engine with `steal = on`; 0 otherwise).
+    pub steals: usize,
     /// Peak KV page occupancy in [0, 1] during the step's rollouts.
     pub kv_page_occupancy: f64,
     /// Peak concurrently occupied decode slots (admitted width).
@@ -133,10 +136,12 @@ impl<'a> Trainer<'a> {
     ) -> Result<(Vec<GenSeq>, RolloutStats)> {
         let g = self.cfg.train.group_size;
         let n = task_indices.len() * g;
-        let rollout = RolloutEngine::new(self.engine, self.cfg.mode, self.cfg.sampling);
+        let rollout = RolloutEngine::new(self.engine, self.cfg.mode, self.cfg.sampling)
+            .with_steal(self.cfg.steal);
         let mut scheduler = Scheduler::new(&self.engine.manifest, self.cfg.mode.is_sparse())
             .with_admission(self.cfg.memory.admission)
-            .with_headroom(self.cfg.memory.kv_admit_headroom_pages);
+            .with_headroom(self.cfg.memory.kv_admit_headroom_pages)
+            .with_order(self.cfg.admission_order);
         let seed = self.rng.next_u64();
         let params = ParamsLit::new(&self.state.params);
         // flat sequence ids: seq s belongs to prompt s / g
@@ -341,6 +346,7 @@ impl<'a> Trainer<'a> {
             idle_token_frac: rstats.idle_frac(),
             refills: rstats.refills,
             preemptions: rstats.preemptions,
+            steals: rstats.steals,
             kv_page_occupancy: if self.kv.total_pages() == 0 {
                 0.0
             } else {
@@ -372,6 +378,7 @@ impl<'a> Trainer<'a> {
         self.metrics.push("idle_token_frac", report.idle_token_frac);
         self.metrics.push("refills", report.refills as f64);
         self.metrics.push("preemptions", report.preemptions as f64);
+        self.metrics.push("steals", report.steals as f64);
         self.metrics.push("kv_page_occupancy", report.kv_page_occupancy);
         // page-padding overhead at the rollout's residency peak (0 at
         // page size 1 or when nothing was resident)

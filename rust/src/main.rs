@@ -17,7 +17,7 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use sparse_rl::config::{ExperimentConfig, RolloutMode};
-use sparse_rl::coordinator::rollout::RolloutEngine;
+use sparse_rl::coordinator::engine::RolloutEngine;
 use sparse_rl::data::{benchmarks, tokenizer};
 use sparse_rl::experiments;
 use sparse_rl::runtime::{params, ModelEngine, TrainState};
@@ -39,6 +39,7 @@ fn usage() -> ! {
             --init-checkpoint ckpt --out-dir runs/x  [config keys...]
   eval:     --checkpoint ckpt --mode <...> [--bench name] [--limit N]
             [--engine static|continuous|pipelined] [--rollout-workers N]
+            [--steal on|off] [--admission-order fifo|shortest-first]
             [--admission worst-case|paged] [--kv-admit-headroom-pages N]
             [--kv-page-tokens N] [--global-kv-tokens N]
   rollout:  --checkpoint ckpt --mode <...> [--n 4] [--temperature T]"
@@ -152,6 +153,8 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
     for key in [
         "engine",
         "rollout-workers",
+        "steal",
+        "admission-order",
         "admission",
         "kv-admit-headroom-pages",
         "kv-page-tokens",
@@ -165,6 +168,8 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
         engine: cfg.engine,
         memory: cfg.memory,
         rollout_workers: cfg.rollout_workers,
+        steal: cfg.steal,
+        admission_order: cfg.admission_order,
     };
     match args.opt("bench") {
         Some(name) => {

@@ -26,7 +26,7 @@ impl Rng {
     }
 
     // NOTE: stateful per-slot stream forking was removed with the move to
-    // placement-independent per-task streams (`coordinator::rollout::task_rng`).
+    // placement-independent per-task streams (`coordinator::engine::task_rng`).
 
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -116,7 +116,7 @@ impl Rng {
 
 /// Materialize the temperature/top-p-modified categorical distribution
 /// from log-probs — THE single implementation both token samplers
-/// (`Rng::sample_logits` and `coordinator::rollout::sample_token`) share,
+/// (`Rng::sample_logits` and `coordinator::engine::sample_token`) share,
 /// so robustness fixes cannot diverge between them.
 ///
 /// Non-finite logits (NaN from a diverged model, ±inf) carry zero mass.

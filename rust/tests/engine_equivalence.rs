@@ -2,32 +2,35 @@
 //!
 //! Runs entirely on the deterministic mock backend (`coordinator::mock`),
 //! so these properties execute hermetically — no artifacts, no PJRT. The
-//! contract under test is the tentpole guarantee of the continuous-
-//! batching and pipelined-worker refactors:
+//! contract under test is the tentpole guarantee of the engine-layer
+//! refactor (one decode core, three scheduling shells):
 //!
 //! 1. **Token equivalence** — for every task, the static chunked engine
 //!    and the continuous slot-recycling engine emit identical
 //!    `response_ids`, bit-identical `sampler_logp`, the same `finished`
 //!    flag, and the same KV accounting, across random seeds, modes
-//!    (dense / naive / sparse-rl), sampling configs, slot widths, and
-//!    memory walls. This is what keeps the Eq. 2/5 correction math
-//!    bit-reproducible regardless of engine.
+//!    (dense / naive / sparse-rl), sampling configs, slot widths, memory
+//!    walls, AND admission orders (fifo vs shortest-first). This is what
+//!    keeps the Eq. 2/5 correction math bit-reproducible regardless of
+//!    engine or scheduling knob.
 //! 2. **Memory-wall invariants** — reserved KV never exceeds capacity at
 //!    any decode step, everything is released at drain, and the manager's
 //!    `peak_reserved` high-water mark is monotone-consistent.
 //! 3. **Step-exact scheduling** — the continuous engine's decode-step
-//!    count equals the scheduler's closed-form list-scheduling prediction,
-//!    and the static engine's equals the chunked closed form; continuous
-//!    is never worse and strictly better under skewed lengths.
+//!    count equals the scheduler's closed-form list-scheduling prediction
+//!    *over the admission order*, and the static engine's equals the
+//!    chunked closed form; continuous is never worse and strictly better
+//!    under skewed lengths.
 //! 4. **Pipelined equivalence** — the pipelined worker-pool engine is
-//!    token-identical to continuous (and static) for every task at worker
-//!    counts 1/2/4 (override with `ROLLOUT_WORKERS=n`), its slot-step
-//!    accounting obeys the shared denominator contract
+//!    token-identical to continuous (and static) for every task over the
+//!    full grid {workers 1/2/4} × {steal on/off} × {fifo,
+//!    shortest-first} (override the counts with `ROLLOUT_WORKERS=n`),
+//!    its slot-step accounting obeys the shared denominator contract
 //!    (`occupied + idle == decode_steps * slots`), and a
-//!    preemption-heavy multi-worker run on a tiny paged wall neither
-//!    deadlocks nor leaks a page.
+//!    preemption-heavy multi-worker run on a tiny paged wall — with and
+//!    without stealing — neither deadlocks nor leaks a page.
 
-use sparse_rl::config::{AdmissionPolicy, RolloutMode, SamplingConfig};
+use sparse_rl::config::{AdmissionOrder, AdmissionPolicy, RolloutMode, SamplingConfig};
 use sparse_rl::coordinator::{
     CostModel, GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy,
     RolloutStats, Scheduler,
@@ -52,9 +55,29 @@ fn worker_counts() -> Vec<usize> {
     }
 }
 
+/// The sequence the engines admit tasks in: task order under fifo, stable
+/// ascending admission cost (`Scheduler::admission_cost`, the unclamped
+/// residency prediction) under shortest-first — repeatedly popping the
+/// first queue element with minimal cost, with no mid-run arrivals, is
+/// exactly a stable sort: the order replay the step-exact closed forms
+/// need.
+fn admission_order_indices(
+    sched: &Scheduler,
+    tasks: &[Task],
+    max_response: usize,
+    order: AdmissionOrder,
+) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..tasks.len()).collect();
+    if order == AdmissionOrder::ShortestFirst {
+        idx.sort_by_key(|&i| sched.admission_cost(tasks[i].prompt_ids.len(), max_response));
+    }
+    idx
+}
+
 /// Drive the static engine exactly the way the trainer does: the shared
 /// `rollout_static_queue` driver (chunk admission against the wall,
 /// synchronous drain, results in task order).
+#[allow(clippy::too_many_arguments)]
 fn run_static(
     policy: &RolloutPolicy,
     backend: &mut MockModelBackend,
@@ -62,14 +85,16 @@ fn run_static(
     seed: u64,
     reserve: usize,
     kv: &mut KvMemoryManager,
+    order: AdmissionOrder,
 ) -> Result<(Vec<GenSeq>, RolloutStats), String> {
-    let mut sched = mk_sched(backend.slots(), reserve);
+    let mut sched = mk_sched(backend.slots(), reserve).with_order(order);
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
     policy
         .rollout_static_queue(backend, &flat, seed, &mut sched, kv, 0)
         .map_err(|e| e.to_string())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_continuous(
     policy: &RolloutPolicy,
     backend: &mut MockModelBackend,
@@ -77,8 +102,9 @@ fn run_continuous(
     seed: u64,
     reserve: usize,
     kv: &mut KvMemoryManager,
+    order: AdmissionOrder,
 ) -> Result<(Vec<GenSeq>, RolloutStats), String> {
-    let mut sched = mk_sched(backend.slots(), reserve);
+    let mut sched = mk_sched(backend.slots(), reserve).with_order(order);
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
     policy
         .rollout_continuous(backend, &flat, seed, &mut sched, kv, 0)
@@ -110,13 +136,13 @@ fn seqs_equal(a: &GenSeq, b: &GenSeq) -> Result<(), String> {
     }
     if a.response_ids != b.response_ids {
         return Err(format!(
-            "task {}: response_ids diverge\n  static:     {:?}\n  continuous: {:?}",
+            "task {}: response_ids diverge\n  a: {:?}\n  b: {:?}",
             a.task_idx, a.response_ids, b.response_ids
         ));
     }
     if a.sampler_logp != b.sampler_logp {
         return Err(format!(
-            "task {}: sampler_logp not bit-identical\n  static:     {:?}\n  continuous: {:?}",
+            "task {}: sampler_logp not bit-identical\n  a: {:?}\n  b: {:?}",
             a.task_idx, a.sampler_logp, b.sampler_logp
         ));
     }
@@ -230,95 +256,137 @@ fn prop_static_and_continuous_engines_agree_per_task() {
         |rng, size| {
             let sc = Scenario::gen(rng, size);
             let policy = sc.policy();
+            let mut fifo_reference: Option<Vec<GenSeq>> = None;
 
-            let mut kv_s = KvMemoryManager::new(sc.kv_cap);
-            let (stat_seqs, stat_stats) =
-                run_static(&policy, &mut sc.backend(), &sc.tasks, sc.seed, sc.reserve, &mut kv_s)?;
+            for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
+                let mut kv_s = KvMemoryManager::new(sc.kv_cap);
+                let (stat_seqs, stat_stats) = run_static(
+                    &policy,
+                    &mut sc.backend(),
+                    &sc.tasks,
+                    sc.seed,
+                    sc.reserve,
+                    &mut kv_s,
+                    order,
+                )?;
 
-            let mut kv_c = KvMemoryManager::new(sc.kv_cap);
-            let (cont_seqs, cont_stats) = run_continuous(
-                &policy,
-                &mut sc.backend(),
-                &sc.tasks,
-                sc.seed,
-                sc.reserve,
-                &mut kv_c,
-            )?;
+                let mut kv_c = KvMemoryManager::new(sc.kv_cap);
+                let (cont_seqs, cont_stats) = run_continuous(
+                    &policy,
+                    &mut sc.backend(),
+                    &sc.tasks,
+                    sc.seed,
+                    sc.reserve,
+                    &mut kv_c,
+                    order,
+                )?;
 
-            // 1) token-for-token, logp-bit-for-bit equivalence per task
-            if stat_seqs.len() != cont_seqs.len() {
-                return Err("result count mismatch".into());
-            }
-            for (a, b) in stat_seqs.iter().zip(cont_seqs.iter()) {
-                seqs_equal(a, b)?;
-            }
-
-            // 2) continuous determinism: a second run is identical
-            let mut kv_c2 = KvMemoryManager::new(sc.kv_cap);
-            let (cont2, cont2_stats) = run_continuous(
-                &policy,
-                &mut sc.backend(),
-                &sc.tasks,
-                sc.seed,
-                sc.reserve,
-                &mut kv_c2,
-            )?;
-            for (a, b) in cont_seqs.iter().zip(cont2.iter()) {
-                seqs_equal(a, b)?;
-            }
-            if cont_stats != cont2_stats {
-                return Err("continuous stats not reproducible".into());
-            }
-
-            // 3) memory-wall invariants
-            for kv in [&kv_s, &kv_c] {
-                if kv.reserved() != 0 {
-                    return Err(format!("{} KV tokens leaked", kv.reserved()));
+                // 1) token-for-token, logp-bit-for-bit equivalence per
+                //    task — between engines AND across admission orders
+                if stat_seqs.len() != cont_seqs.len() {
+                    return Err("result count mismatch".into());
                 }
-                kv.check_invariants().map_err(|e| e.to_string())?;
-            }
-            if cont_stats.max_reserved_kv > kv_c.capacity() {
-                return Err(format!(
-                    "observed residency {} breached the wall {}",
-                    cont_stats.max_reserved_kv,
-                    kv_c.capacity()
-                ));
-            }
-            if kv_c.peak_reserved < cont_stats.max_reserved_kv {
-                return Err("peak_reserved below an observed residency".into());
-            }
+                for (a, b) in stat_seqs.iter().zip(cont_seqs.iter()) {
+                    seqs_equal(a, b)?;
+                }
+                if fifo_reference.is_none() {
+                    fifo_reference = Some(stat_seqs.clone());
+                } else {
+                    let reference = fifo_reference.as_ref().expect("set on the fifo pass");
+                    for (a, b) in reference.iter().zip(stat_seqs.iter()) {
+                        seqs_equal(a, b)
+                            .map_err(|e| format!("admission order changed tokens: {e}"))?;
+                    }
+                }
 
-            // 4) both engines do the same productive decode work; the
-            //    continuous engine never needs more decode steps
-            if stat_stats.occupied_slot_steps != cont_stats.occupied_slot_steps {
-                return Err(format!(
-                    "productive slot-steps diverge: static {} vs continuous {}",
-                    stat_stats.occupied_slot_steps, cont_stats.occupied_slot_steps
-                ));
-            }
-            if cont_stats.decode_steps > stat_stats.decode_steps {
-                return Err(format!(
-                    "continuous used MORE decode steps ({} > {})",
-                    cont_stats.decode_steps, stat_stats.decode_steps
-                ));
-            }
+                // 2) continuous determinism: a second run is identical
+                //    (fifo only — one rerun bounds the property's cost)
+                if order == AdmissionOrder::Fifo {
+                    let mut kv_c2 = KvMemoryManager::new(sc.kv_cap);
+                    let (cont2, cont2_stats) = run_continuous(
+                        &policy,
+                        &mut sc.backend(),
+                        &sc.tasks,
+                        sc.seed,
+                        sc.reserve,
+                        &mut kv_c2,
+                        order,
+                    )?;
+                    for (a, b) in cont_seqs.iter().zip(cont2.iter()) {
+                        seqs_equal(a, b)?;
+                    }
+                    if cont_stats != cont2_stats {
+                        return Err("continuous stats not reproducible".into());
+                    }
+                }
 
-            // 5) step-exact closed forms (scheduler prediction)
-            let lens: Vec<usize> = cont_seqs.iter().map(|s| s.response_ids.len()).collect();
-            let sched = mk_sched(sc.slots, sc.reserve);
-            let pred_c = sched.predicted_decode_steps(&lens, sc.kv_cap);
-            if cont_stats.decode_steps != pred_c {
-                return Err(format!(
-                    "continuous decode steps {} != predicted {} (lens {:?})",
-                    cont_stats.decode_steps, pred_c, lens
-                ));
-            }
-            let pred_s = sched.predicted_decode_steps_static(&lens, sc.kv_cap);
-            if stat_stats.decode_steps != pred_s {
-                return Err(format!(
-                    "static decode steps {} != predicted {} (lens {:?})",
-                    stat_stats.decode_steps, pred_s, lens
-                ));
+                // 3) memory-wall invariants
+                for kv in [&kv_s, &kv_c] {
+                    if kv.reserved() != 0 {
+                        return Err(format!("{} KV tokens leaked", kv.reserved()));
+                    }
+                    kv.check_invariants().map_err(|e| e.to_string())?;
+                }
+                if cont_stats.max_reserved_kv > kv_c.capacity() {
+                    return Err(format!(
+                        "observed residency {} breached the wall {}",
+                        cont_stats.max_reserved_kv,
+                        kv_c.capacity()
+                    ));
+                }
+                if kv_c.peak_reserved < cont_stats.max_reserved_kv {
+                    return Err("peak_reserved below an observed residency".into());
+                }
+
+                // 4) both engines do the same productive decode work; the
+                //    continuous engine never needs more decode steps
+                if stat_stats.occupied_slot_steps != cont_stats.occupied_slot_steps {
+                    return Err(format!(
+                        "productive slot-steps diverge: static {} vs continuous {}",
+                        stat_stats.occupied_slot_steps, cont_stats.occupied_slot_steps
+                    ));
+                }
+                if cont_stats.decode_steps > stat_stats.decode_steps {
+                    return Err(format!(
+                        "continuous used MORE decode steps ({} > {})",
+                        cont_stats.decode_steps, stat_stats.decode_steps
+                    ));
+                }
+
+                // 5) step-exact closed forms (scheduler prediction over
+                //    the admission order — fifo replays task order,
+                //    shortest-first the stable residency sort)
+                let sched = mk_sched(sc.slots, sc.reserve).with_order(order);
+                let idx = admission_order_indices(
+                    &sched,
+                    &sc.tasks,
+                    sc.sampling.max_response,
+                    order,
+                );
+                let lens: Vec<usize> = idx
+                    .iter()
+                    .map(|&i| cont_seqs[i].response_ids.len())
+                    .collect();
+                let pred_c = sched.predicted_decode_steps(&lens, sc.kv_cap);
+                if cont_stats.decode_steps != pred_c {
+                    return Err(format!(
+                        "{}: continuous decode steps {} != predicted {} (lens {:?})",
+                        order.label(),
+                        cont_stats.decode_steps,
+                        pred_c,
+                        lens
+                    ));
+                }
+                let pred_s = sched.predicted_decode_steps_static(&lens, sc.kv_cap);
+                if stat_stats.decode_steps != pred_s {
+                    return Err(format!(
+                        "{}: static decode steps {} != predicted {} (lens {:?})",
+                        order.label(),
+                        stat_stats.decode_steps,
+                        pred_s,
+                        lens
+                    ));
+                }
             }
             Ok(())
         },
@@ -337,8 +405,15 @@ fn prop_static_results_do_not_depend_on_chunking() {
             let sc = Scenario::gen(rng, size);
             let policy = sc.policy();
             let mut kv_a = KvMemoryManager::new(sc.kv_cap);
-            let (wide, _) =
-                run_static(&policy, &mut sc.backend(), &sc.tasks, sc.seed, sc.reserve, &mut kv_a)?;
+            let (wide, _) = run_static(
+                &policy,
+                &mut sc.backend(),
+                &sc.tasks,
+                sc.seed,
+                sc.reserve,
+                &mut kv_a,
+                AdmissionOrder::Fifo,
+            )?;
 
             // same scenario, single-slot backend: maximal re-chunking
             let narrow_backend = || {
@@ -351,8 +426,15 @@ fn prop_static_results_do_not_depend_on_chunking() {
                 b
             };
             let mut kv_b = KvMemoryManager::new(sc.kv_cap);
-            let (serial, _) =
-                run_static(&policy, &mut narrow_backend(), &sc.tasks, sc.seed, sc.reserve, &mut kv_b)?;
+            let (serial, _) = run_static(
+                &policy,
+                &mut narrow_backend(),
+                &sc.tasks,
+                sc.seed,
+                sc.reserve,
+                &mut kv_b,
+                AdmissionOrder::Fifo,
+            )?;
             for (a, b) in wide.iter().zip(serial.iter()) {
                 seqs_equal(a, b)?;
             }
@@ -392,6 +474,7 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
                 sc.seed,
                 sc.reserve,
                 &mut kv_s,
+                AdmissionOrder::Fifo,
             )?;
             let mut kv_c = KvMemoryManager::new(sc.kv_cap);
             let (cont_seqs, cont_stats) = run_continuous(
@@ -401,6 +484,7 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
                 sc.seed,
                 sc.reserve,
                 &mut kv_c,
+                AdmissionOrder::Fifo,
             )?;
             audit_slot_steps("static", &stat_stats, sc.slots)?;
             audit_slot_steps("continuous", &cont_stats, sc.slots)?;
@@ -413,85 +497,111 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
                 return Err("continuous makespan != sum of its tick components".into());
             }
 
+            // the full pipelined grid: every worker count, stealing on and
+            // off, both admission orders — tokens must never move
             for &workers in &counts {
-                let mut kv_p = KvMemoryManager::new(sc.kv_cap);
-                let mut sched_p = mk_sched(sc.slots, sc.reserve);
-                let proto = sc.backend().with_costs(costs);
-                let (pipe_seqs, pipe_stats) = run_pipelined(
-                    &policy,
-                    &proto,
-                    &sc.tasks,
-                    sc.seed,
-                    &mut sched_p,
-                    &mut kv_p,
-                    workers,
-                )?;
+                for steal in [true, false] {
+                    for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
+                        let grid = format!(
+                            "w={workers} steal={steal} order={}",
+                            order.label()
+                        );
+                        let mut kv_p = KvMemoryManager::new(sc.kv_cap);
+                        let mut sched_p =
+                            mk_sched(sc.slots, sc.reserve).with_order(order);
+                        let proto = sc.backend().with_costs(costs);
+                        let (pipe_seqs, pipe_stats) = run_pipelined(
+                            &policy.with_steal(steal),
+                            &proto,
+                            &sc.tasks,
+                            sc.seed,
+                            &mut sched_p,
+                            &mut kv_p,
+                            workers,
+                        )?;
 
-                // token/logp/accounting identity per task, all engines
-                if pipe_seqs.len() != cont_seqs.len() {
-                    return Err(format!("w={workers}: result count mismatch"));
-                }
-                for ((a, b), c) in stat_seqs.iter().zip(cont_seqs.iter()).zip(pipe_seqs.iter()) {
-                    seqs_equal(a, b)?;
-                    seqs_equal(b, c)?;
-                }
+                        // token/logp/accounting identity per task, all
+                        // engines, every grid point
+                        if pipe_seqs.len() != cont_seqs.len() {
+                            return Err(format!("{grid}: result count mismatch"));
+                        }
+                        for ((a, b), c) in
+                            stat_seqs.iter().zip(cont_seqs.iter()).zip(pipe_seqs.iter())
+                        {
+                            seqs_equal(a, b)?;
+                            seqs_equal(b, c).map_err(|e| format!("{grid}: {e}"))?;
+                        }
 
-                // denominator contract holds after the cross-lane merge
-                audit_slot_steps(&format!("pipelined w={workers}"), &pipe_stats, sc.slots)?;
-                // identical productive work (worst-case admission: no
-                // preemptions, so every engine decodes each token once)
-                if pipe_stats.preemptions != 0 {
-                    return Err(format!("w={workers}: worst-case admission preempted"));
-                }
-                if pipe_stats.occupied_slot_steps != cont_stats.occupied_slot_steps {
-                    return Err(format!(
-                        "w={workers}: productive slot-steps diverge: pipelined {} vs \
-                         continuous {}",
-                        pipe_stats.occupied_slot_steps, cont_stats.occupied_slot_steps
-                    ));
-                }
-                // a lane's finish clock can never exceed the total work
-                // charged across lanes
-                if pipe_stats.modeled_makespan_ticks
-                    > pipe_stats.decode_busy_ticks
-                        + pipe_stats.prefill_blocked_ticks
-                        + pipe_stats.sched_stall_ticks
-                {
-                    return Err(format!(
-                        "w={workers}: makespan {} exceeds summed lane work",
-                        pipe_stats.modeled_makespan_ticks
-                    ));
-                }
-                if pipe_stats.workers != workers {
-                    return Err(format!(
-                        "w={workers}: stats claim {} workers",
-                        pipe_stats.workers
-                    ));
-                }
+                        // denominator contract holds after the cross-lane
+                        // merge
+                        audit_slot_steps(&format!("pipelined {grid}"), &pipe_stats, sc.slots)?;
+                        // identical productive work (worst-case admission:
+                        // no preemptions, so every engine decodes each
+                        // token exactly once, steal or not)
+                        if pipe_stats.preemptions != 0 {
+                            return Err(format!("{grid}: worst-case admission preempted"));
+                        }
+                        if !steal && pipe_stats.steals != 0 {
+                            return Err(format!(
+                                "{grid}: stole {} refills with stealing off",
+                                pipe_stats.steals
+                            ));
+                        }
+                        if pipe_stats.occupied_slot_steps != cont_stats.occupied_slot_steps {
+                            return Err(format!(
+                                "{grid}: productive slot-steps diverge: pipelined {} vs \
+                                 continuous {}",
+                                pipe_stats.occupied_slot_steps, cont_stats.occupied_slot_steps
+                            ));
+                        }
+                        // a lane's finish clock can never exceed the total
+                        // work charged across lanes
+                        if pipe_stats.modeled_makespan_ticks
+                            > pipe_stats.decode_busy_ticks
+                                + pipe_stats.prefill_blocked_ticks
+                                + pipe_stats.sched_stall_ticks
+                        {
+                            return Err(format!(
+                                "{grid}: makespan {} exceeds summed lane work",
+                                pipe_stats.modeled_makespan_ticks
+                            ));
+                        }
+                        if pipe_stats.workers != workers {
+                            return Err(format!(
+                                "{grid}: stats claim {} workers",
+                                pipe_stats.workers
+                            ));
+                        }
 
-                // wall hygiene: drained, invariants intact, balanced books
-                if kv_p.reserved() != 0 {
-                    return Err(format!("w={workers}: {} KV tokens leaked", kv_p.reserved()));
-                }
-                kv_p.check_invariants().map_err(|e| e.to_string())?;
-                if sched_p.stats.live_seqs() != 0 {
-                    return Err(format!("w={workers}: scheduler live_seqs not drained"));
-                }
-                if sched_p.stats.seq_admissions != sc.tasks.len() {
-                    return Err(format!(
-                        "w={workers}: admissions {} != tasks {}",
-                        sched_p.stats.seq_admissions,
-                        sc.tasks.len()
-                    ));
-                }
-                // global admitted width observed by the wall is bounded by
-                // the total slot budget of the pool
-                if kv_p.peak_live_seqs > workers * sc.slots {
-                    return Err(format!(
-                        "w={workers}: peak admitted width {} > {} total slots",
-                        kv_p.peak_live_seqs,
-                        workers * sc.slots
-                    ));
+                        // wall hygiene: drained, invariants intact,
+                        // balanced books
+                        if kv_p.reserved() != 0 {
+                            return Err(format!(
+                                "{grid}: {} KV tokens leaked",
+                                kv_p.reserved()
+                            ));
+                        }
+                        kv_p.check_invariants().map_err(|e| e.to_string())?;
+                        if sched_p.stats.live_seqs() != 0 {
+                            return Err(format!("{grid}: scheduler live_seqs not drained"));
+                        }
+                        if sched_p.stats.seq_admissions != sc.tasks.len() {
+                            return Err(format!(
+                                "{grid}: admissions {} != tasks {}",
+                                sched_p.stats.seq_admissions,
+                                sc.tasks.len()
+                            ));
+                        }
+                        // global admitted width observed by the wall is
+                        // bounded by the total slot budget of the pool
+                        if kv_p.peak_live_seqs > workers * sc.slots {
+                            return Err(format!(
+                                "{grid}: peak admitted width {} > {} total slots",
+                                kv_p.peak_live_seqs,
+                                workers * sc.slots
+                            ));
+                        }
+                    }
                 }
             }
             Ok(())
@@ -503,10 +613,11 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
 fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
     // Paged admission + a wall barely above one worst-case sequence +
     // several workers + long responses: constant grow stalls, heavy
-    // preempt/requeue traffic, workers parking on the wall. The run must
-    // drain (no deadlock), stay token-identical to continuous, balance
-    // every admission with a release, and leak nothing — at every worker
-    // count.
+    // preempt/requeue traffic, workers parking on the wall — now ALSO
+    // with drained lanes stealing pending refills from loaded peers, and
+    // under both admission orders. The run must drain (no deadlock), stay
+    // token-identical to continuous, balance every admission with a
+    // release, and leak nothing — at every grid point.
     let (slots, prompt_len, max_seq, budget, buffer) = (2usize, 16usize, 96usize, 24usize, 8usize);
     let (page, seed) = (4usize, 11u64);
     let mode = RolloutMode::SparseRl(Method::RKv);
@@ -534,36 +645,52 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
         .expect("continuous reference");
 
     for workers in worker_counts() {
-        let mut kv = KvMemoryManager::with_pages(kv_cap, page);
-        let mut sched = mk_sched(slots, reserve).with_admission(AdmissionPolicy::Paged);
-        let (seqs, stats) = run_pipelined(
-            &policy, &backend(), &tasks, seed, &mut sched, &mut kv, workers,
-        )
-        .unwrap_or_else(|e| panic!("w={workers}: pipelined stress failed: {e}"));
+        for steal in [true, false] {
+            for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
+                let grid = format!("w={workers} steal={steal} order={}", order.label());
+                let mut kv = KvMemoryManager::with_pages(kv_cap, page);
+                let mut sched = mk_sched(slots, reserve)
+                    .with_admission(AdmissionPolicy::Paged)
+                    .with_order(order);
+                let (seqs, stats) = run_pipelined(
+                    &policy.with_steal(steal),
+                    &backend(),
+                    &tasks,
+                    seed,
+                    &mut sched,
+                    &mut kv,
+                    workers,
+                )
+                .unwrap_or_else(|e| panic!("{grid}: pipelined stress failed: {e}"));
 
-        assert_eq!(seqs.len(), tasks.len(), "w={workers}: dropped tasks");
-        for (a, b) in cont_seqs.iter().zip(seqs.iter()) {
-            seqs_equal(a, b).unwrap_or_else(|e| panic!("w={workers}: {e}"));
+                assert_eq!(seqs.len(), tasks.len(), "{grid}: dropped tasks");
+                for (a, b) in cont_seqs.iter().zip(seqs.iter()) {
+                    seqs_equal(a, b).unwrap_or_else(|e| panic!("{grid}: {e}"));
+                }
+                // pool conservation under preemption + steal traffic
+                assert_eq!(kv.reserved(), 0, "{grid}: KV tokens leaked");
+                assert_eq!(kv.used_pages(), 0, "{grid}: pages leaked");
+                kv.check_invariants().unwrap();
+                assert_eq!(sched.stats.live_seqs(), 0, "{grid}: live_seqs not drained");
+                assert_eq!(
+                    sched.stats.seq_admissions,
+                    tasks.len() + sched.stats.preemptions,
+                    "{grid}: every admission must balance a finish or a preemption"
+                );
+                assert_eq!(
+                    stats.preemptions, sched.stats.preemptions,
+                    "{grid}: engine and scheduler disagree on preemptions"
+                );
+                if !steal || workers == 1 {
+                    assert_eq!(stats.steals, 0, "{grid}: steal fired when impossible");
+                }
+                assert!(
+                    kv.peak_live_seqs <= workers * slots,
+                    "{grid}: admitted width {} exceeds the pool's slot budget",
+                    kv.peak_live_seqs
+                );
+            }
         }
-        // pool conservation under preemption traffic
-        assert_eq!(kv.reserved(), 0, "w={workers}: KV tokens leaked");
-        assert_eq!(kv.used_pages(), 0, "w={workers}: pages leaked");
-        kv.check_invariants().unwrap();
-        assert_eq!(sched.stats.live_seqs(), 0, "w={workers}: live_seqs not drained");
-        assert_eq!(
-            sched.stats.seq_admissions,
-            tasks.len() + sched.stats.preemptions,
-            "w={workers}: every admission must balance a finish or a preemption"
-        );
-        assert_eq!(
-            stats.preemptions, sched.stats.preemptions,
-            "w={workers}: engine and scheduler disagree on preemptions"
-        );
-        assert!(
-            kv.peak_live_seqs <= workers * slots,
-            "w={workers}: admitted width {} exceeds the pool's slot budget",
-            kv.peak_live_seqs
-        );
     }
 }
 
@@ -588,11 +715,27 @@ fn continuous_strictly_beats_static_under_skewed_lengths() {
         || MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer);
 
     let mut kv_s = KvMemoryManager::new(kv_cap);
-    let (stat_seqs, stat_stats) =
-        run_static(&policy, &mut backend(), &tasks, 7, reserve, &mut kv_s).unwrap();
+    let (stat_seqs, stat_stats) = run_static(
+        &policy,
+        &mut backend(),
+        &tasks,
+        7,
+        reserve,
+        &mut kv_s,
+        AdmissionOrder::Fifo,
+    )
+    .unwrap();
     let mut kv_c = KvMemoryManager::new(kv_cap);
-    let (cont_seqs, cont_stats) =
-        run_continuous(&policy, &mut backend(), &tasks, 7, reserve, &mut kv_c).unwrap();
+    let (cont_seqs, cont_stats) = run_continuous(
+        &policy,
+        &mut backend(),
+        &tasks,
+        7,
+        reserve,
+        &mut kv_c,
+        AdmissionOrder::Fifo,
+    )
+    .unwrap();
 
     let lens: Vec<usize> = stat_seqs.iter().map(|s| s.response_ids.len()).collect();
     let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
