@@ -142,6 +142,35 @@ def build(cfg: ModelConfig, shapes: RolloutShapes, out_dir: str,
             ["logp"] + cache_outs,
         )
 
+        # Fused slot-masked prefill: slot recycling as ONE device call —
+        # the live cache flows in, the masked slots' planes are rewritten
+        # in-graph, no host round-trip. The Rust engine feature-gates on
+        # this entry's presence and falls back to a scratch-batch splice
+        # for older artifact sets.
+        def prefill_slot_fn(params, kv, sc, sw, birth, ids, lens, slot_mask, C=C):
+            p = model.ParamLayout(cfg).unflatten(params)
+            return model.prefill_slot(
+                cfg, p, kv, sc, sw, birth, ids, lens, slot_mask, capacity=C
+            )
+
+        b.add(
+            f"prefill_slot_{variant}",
+            prefill_slot_fn,
+            [
+                _spec(F32, N),
+                _spec(F32, L, 2, R, H, C, Dh),
+                _spec(F32, L, R, H, C),
+                _spec(F32, L, R, H, C),
+                _spec(I32, L, R, H, C),
+                _spec(I32, R, P),
+                _spec(I32, R),
+                _spec(F32, R),
+            ],
+            ["params", "kv", "stats_cum", "stats_win", "birth", "ids", "lens",
+             "slot_mask"],
+            cache_outs + ["logp_last"],
+        )
+
     for method in methods:
         b.add(
             f"compress_{method}",

@@ -306,6 +306,42 @@ def decode_step(cfg: ModelConfig, p, kv, stats_cum, stats_win, birth, lens, pos,
     return jax.nn.log_softmax(logits, axis=-1), kv, stats_cum, stats_win, birth
 
 
+def prefill_slot(cfg: ModelConfig, p, kv, stats_cum, stats_win, birth, ids,
+                 lens, slot_mask, capacity: int):
+    """Fused slot-masked prefill: recycle decode slots in one device call.
+
+    Runs the batched prefill over the scratch prompt batch `ids`/`lens`
+    and writes ONLY the masked slots' cache planes into the live cache —
+    the in-graph slot write (XLA lowers the batch-axis select into a
+    masked dynamic-update-slice over the slot planes), so continuous
+    batching's slot recycling costs one device call and zero host copies
+    of cache state (vs. the Rust fallback's full-cache host round-trip).
+
+    Args:
+      kv/stats_cum/stats_win/birth: the LIVE cache state (see the module
+        comment for layouts; slot axis is B everywhere).
+      ids:  [B, P] scratch prompt batch — the new prompt in the target
+        slot's row; other rows need only be valid (their fresh planes are
+        discarded by the mask, and batch rows are independent).
+      lens: [B] scratch prompt lengths.
+      slot_mask: [B] f32, 1.0 for slots to (re)prefill, 0.0 to preserve.
+      capacity: cache capacity C (must match the live cache).
+
+    Returns:
+      (kv', stats_cum', stats_win', birth', logp_last [B, V]) — unmasked
+      slots' planes bit-identical to the inputs; logp_last rows are only
+      meaningful for masked slots.
+    """
+    fkv, fsc, fsw, fb, logp_last = prefill(cfg, p, ids, lens, capacity=capacity)
+    sel6 = slot_mask[None, None, :, None, None, None] > 0
+    sel4 = slot_mask[None, :, None, None] > 0
+    kv = jnp.where(sel6, fkv, kv)
+    stats_cum = jnp.where(sel4, fsc, stats_cum)
+    stats_win = jnp.where(sel4, fsw, stats_win)
+    birth = jnp.where(sel4, fb, birth)
+    return kv, stats_cum, stats_win, birth, logp_last
+
+
 def compress_step(
     kv, stats_cum, stats_win, birth, do, method: str, shapes: RolloutShapes
 ):

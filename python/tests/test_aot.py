@@ -22,6 +22,8 @@ EXPECTED_ENTRIES = {
     "init_params",
     "prefill_dense",
     "prefill_sparse",
+    "prefill_slot_dense",
+    "prefill_slot_sparse",
     "decode_dense",
     "decode_sparse",
     "compress_rkv",

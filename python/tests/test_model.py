@@ -96,6 +96,58 @@ class TestDecodeEquivalence:
         np.testing.assert_array_equal(logp[:, 0], 0.0)
 
 
+class TestFusedSlotPrefill:
+    """The fused slot-masked prefill must equal a batched prefill on the
+    masked row (the contract Rust's fused `prefill_slot` relies on) and
+    preserve every unmasked slot's planes bit-for-bit."""
+
+    def test_masked_slot_matches_batched_row_others_untouched(self, params):
+        _, p = params
+        B, P, C = 3, 8, 16
+        live_ids = mk_ids(7, B, P)
+        live_lens = jnp.asarray([8, 5, 7], jnp.int32)
+        kv, sc, sw, birth, _ = model.prefill(CFG, p, live_ids, live_lens, C)
+
+        # new prompt for slot 1; scratch rows elsewhere (content must not
+        # matter — batch rows are independent)
+        new_ids = mk_ids(9, B, P)
+        new_lens = jnp.asarray([1, 6, 1], jnp.int32)
+        mask = jnp.asarray([0.0, 1.0, 0.0], jnp.float32)
+        kv2, sc2, sw2, b2, logp = model.prefill_slot(
+            CFG, p, kv, sc, sw, birth, new_ids, new_lens, mask, capacity=C
+        )
+
+        # reference: a plain batched prefill of the same scratch batch
+        fkv, fsc, fsw, fb, flogp = model.prefill(CFG, p, new_ids, new_lens, C)
+        np.testing.assert_array_equal(kv2[:, :, 1], fkv[:, :, 1])
+        np.testing.assert_array_equal(sc2[:, 1], fsc[:, 1])
+        np.testing.assert_array_equal(sw2[:, 1], fsw[:, 1])
+        np.testing.assert_array_equal(b2[:, 1], fb[:, 1])
+        np.testing.assert_array_equal(logp[1], flogp[1])
+
+        # unmasked slots keep their live planes bit-for-bit
+        for s in (0, 2):
+            np.testing.assert_array_equal(kv2[:, :, s], kv[:, :, s])
+            np.testing.assert_array_equal(sc2[:, s], sc[:, s])
+            np.testing.assert_array_equal(sw2[:, s], sw[:, s])
+            np.testing.assert_array_equal(b2[:, s], birth[:, s])
+
+    def test_all_zero_mask_is_identity(self, params):
+        _, p = params
+        B, P, C = 2, 8, 12
+        ids = mk_ids(11, B, P)
+        lens = jnp.full((B,), P, jnp.int32)
+        kv, sc, sw, birth, _ = model.prefill(CFG, p, ids, lens, C)
+        kv2, sc2, sw2, b2, _ = model.prefill_slot(
+            CFG, p, kv, sc, sw, birth, ids, lens, jnp.zeros((B,), jnp.float32),
+            capacity=C
+        )
+        np.testing.assert_array_equal(kv2, kv)
+        np.testing.assert_array_equal(sc2, sc)
+        np.testing.assert_array_equal(sw2, sw)
+        np.testing.assert_array_equal(b2, birth)
+
+
 class TestCompression:
     def setup_cache(self, p, capacity=16, plen=8, extra=6):
         B = 2

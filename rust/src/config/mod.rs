@@ -217,6 +217,48 @@ impl AdmissionPolicy {
     }
 }
 
+/// How the pipelined engine performs slot (recycling) prefills.
+///
+/// `Sync` (default) is the original behavior on real hardware: the decode
+/// worker that joins a refill makes the backend prefill call itself,
+/// blocking its lane for the call's duration (the virtual clock charges
+/// `slot_prefill_ticks` to that lane — honest accounting for a blocking
+/// call). `Async` runs a dedicated prefill-executor thread that prepares
+/// the cache-independent half of each slot prefill off the decode
+/// workers and delivers completions back through the shared state, so
+/// recycling overlaps decode for real — the virtual clock models it as
+/// the single shared prefill lane. Pure scheduling: per-task RNG keeps
+/// tokens bit-identical under either mode (`tests/engine_equivalence.rs`
+/// covers the {sync, async} axis of the grid). Single-lane engines
+/// ignore the knob (their slot prefills are inherently synchronous).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrefillMode {
+    #[default]
+    Sync,
+    Async,
+}
+
+impl PrefillMode {
+    pub fn parse(s: &str) -> Result<PrefillMode> {
+        Ok(match s {
+            "sync" | "blocking" => PrefillMode::Sync,
+            "async" | "executor" => PrefillMode::Async,
+            other => bail!("bad prefill mode {other:?} (sync | async)"),
+        })
+    }
+
+    pub fn is_async(&self) -> bool {
+        matches!(self, PrefillMode::Async)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PrefillMode::Sync => "sync",
+            PrefillMode::Async => "async",
+        }
+    }
+}
+
 /// Order in which the engines admit pending tasks from the shared queue.
 ///
 /// `Fifo` (default) preserves the original behavior: the queue head is
@@ -305,6 +347,12 @@ pub struct ExperimentConfig {
     /// or `shortest-first` (makespan-aware; smallest predicted residency
     /// first).
     pub admission_order: AdmissionOrder,
+    /// Slot-prefill execution for `engine = pipelined`: `sync` (decode
+    /// workers make the prefill calls themselves, blocking their lane —
+    /// the original behavior) or `async` (a dedicated prefill-executor
+    /// thread overlaps them with decode). Scheduling-only: tokens are
+    /// identical either way.
+    pub prefill: PrefillMode,
     pub sampling: SamplingConfig,
     pub train: TrainConfig,
     pub memory: MemoryConfig,
@@ -324,6 +372,7 @@ impl ExperimentConfig {
             rollout_workers: 2,
             steal: true,
             admission_order: AdmissionOrder::default(),
+            prefill: PrefillMode::default(),
             sampling: SamplingConfig::default(),
             train: TrainConfig::default(),
             memory: MemoryConfig::default(),
@@ -354,6 +403,7 @@ impl ExperimentConfig {
                 }
             }
             "admission-order" => self.admission_order = AdmissionOrder::parse(value)?,
+            "prefill" => self.prefill = PrefillMode::parse(value)?,
             "temperature" => self.sampling.temperature = value.parse().context("temperature")?,
             "top-p" => self.sampling.top_p = value.parse().context("top-p")?,
             "max-response" => self.sampling.max_response = value.parse().context("max-response")?,
@@ -521,6 +571,22 @@ mod tests {
         assert_eq!(AdmissionOrder::parse("sjf").unwrap(), AdmissionOrder::ShortestFirst);
         assert!(AdmissionOrder::parse("random").is_err());
         assert_eq!(AdmissionOrder::ShortestFirst.label(), "shortest-first");
+    }
+
+    #[test]
+    fn prefill_mode_knob() {
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        // default sync preserves the original (blocking) behavior
+        assert_eq!(c.prefill, PrefillMode::Sync);
+        assert!(!c.prefill.is_async());
+        c.apply("prefill", "async").unwrap();
+        assert_eq!(c.prefill, PrefillMode::Async);
+        assert!(c.prefill.is_async());
+        c.apply("prefill", "sync").unwrap();
+        assert_eq!(c.prefill, PrefillMode::Sync);
+        assert!(c.apply("prefill", "eager").is_err());
+        assert_eq!(PrefillMode::parse("executor").unwrap(), PrefillMode::Async);
+        assert_eq!(PrefillMode::Async.label(), "async");
     }
 
     #[test]

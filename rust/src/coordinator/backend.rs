@@ -35,10 +35,10 @@
 //! preempted slot's stale cache is simply overwritten by the next
 //! `prefill_slot`, identical to ordinary slot recycling.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::RolloutMode;
-use crate::runtime::{CacheState, Method, ModelEngine, ParamsLit, Variant};
+use crate::runtime::{CacheState, Method, ModelEngine, ParamsLit, SlotPlanes, Variant};
 
 /// Modeled per-call device latency, in abstract virtual "ticks".
 ///
@@ -85,7 +85,21 @@ impl CostModel {
 /// What a rollout loop needs from the model. All logits returned are
 /// log-probabilities over the vocabulary; batched calls return `[R * V]`
 /// flattened, `prefill_slot` returns one `[V]` row.
+///
+/// **Async prefill (`prefill = async`):** `prepare_prefill` /
+/// `apply_prefill` split a slot prefill into its expensive,
+/// cache-independent half (runnable on a *different* backend value of the
+/// same model — the pipelined engine's prefill-executor lane) and the
+/// cheap slot write into the owning worker's cache. The contract:
+/// `apply_prefill(slot, prepare_prefill(prompt)?)` must leave the target
+/// slot in exactly the state `prefill_slot(slot, prompt)` would — same
+/// planes, same returned logits row — so sync and async modes are
+/// token-identical by construction.
 pub trait RolloutBackend {
+    /// Cache-independent product of `prepare_prefill`, transferable
+    /// between backend values of the same model (the executor prepares on
+    /// its own backend; the owning worker applies it to a slot).
+    type Prepared: Send;
     /// Decode batch width R.
     fn slots(&self) -> usize;
     /// Maximum prompt tokens per sequence.
@@ -105,6 +119,17 @@ pub trait RolloutBackend {
     /// Prefill one slot in place without disturbing the others (slot
     /// recycling). Returns that slot's last-prompt-token log-probs `[V]`.
     fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>>;
+
+    /// Expensive, cache-independent half of a slot prefill: run the
+    /// prompt through the model without touching any live rollout state.
+    /// The async executor calls this on its own backend, concurrently
+    /// with the decode workers.
+    fn prepare_prefill(&mut self, prompt: &[i32]) -> Result<Self::Prepared>;
+
+    /// Apply a prepared prefill to `slot` of THIS backend's cache and
+    /// return the slot's last-prompt-token log-probs `[V]` — must be
+    /// bit-identical to what `prefill_slot` would have produced.
+    fn apply_prefill(&mut self, slot: usize, prepared: Self::Prepared) -> Result<Vec<f32>>;
 
     /// One decode step over the whole batch. `lens[s]` is the occupied
     /// cache length (the write position), `pos[s]` the absolute position.
@@ -132,6 +157,17 @@ pub struct EngineBackend<'a> {
     cache: Option<CacheState>,
 }
 
+/// A prepared (cache-independent) slot prefill on the artifact path: the
+/// prompt's COMPACT cache planes (extracted from row 0 of the scratch
+/// prefill — 1/R-th of a full cache, so in-flight async prefills stay
+/// cheap) plus that row's logits. `apply_prefill` implants the planes
+/// into the target slot — batch-row independence makes them
+/// slot-position-invariant.
+pub struct PreparedSlotPrefill {
+    planes: SlotPlanes,
+    logp: Vec<f32>,
+}
+
 impl<'a> EngineBackend<'a> {
     pub fn new(engine: &'a ModelEngine, params: &'a ParamsLit, mode: RolloutMode) -> Self {
         let variant = if mode.is_sparse() { Variant::Sparse } else { Variant::Dense };
@@ -140,6 +176,8 @@ impl<'a> EngineBackend<'a> {
 }
 
 impl RolloutBackend for EngineBackend<'_> {
+    type Prepared = PreparedSlotPrefill;
+
     fn slots(&self) -> usize {
         self.engine.manifest.shapes.decode_batch
     }
@@ -182,6 +220,28 @@ impl RolloutBackend for EngineBackend<'_> {
             .as_mut()
             .context("prefill_slot before the initial batched prefill")?;
         self.engine.prefill_slot(self.params, cache, slot, prompt)
+    }
+
+    fn prepare_prefill(&mut self, prompt: &[i32]) -> Result<Self::Prepared> {
+        let (fresh, logp) = self
+            .engine
+            .prepare_slot_prefill(self.params, self.variant, prompt)?;
+        // ship only row 0's planes: the other R-1 scratch rows are
+        // discarded here, on the executor, instead of sitting in every
+        // in-flight payload
+        let planes = self.engine.extract_slot(&fresh, 0)?;
+        Ok(PreparedSlotPrefill { planes, logp })
+    }
+
+    fn apply_prefill(&mut self, slot: usize, prepared: Self::Prepared) -> Result<Vec<f32>> {
+        let Some(cache) = self.cache.as_mut() else {
+            // the pipelined engine routes a lane with no live cache (its
+            // whole first wave was refused at the wall) through the
+            // batched single-row entry instead — see prefill_single_row
+            bail!("apply_prefill before the initial batched prefill");
+        };
+        self.engine.implant_slot(cache, slot, &prepared.planes)?;
+        Ok(prepared.logp)
     }
 
     fn decode(&mut self, lens: &[i32], pos: &[i32], tokens: &[i32]) -> Result<Vec<f32>> {

@@ -8,15 +8,13 @@
 //! the pipelined engine removes). All per-token semantics live in the
 //! shared decode core.
 
-use std::collections::VecDeque;
-
 use anyhow::{bail, Result};
 
 use crate::data::task::Task;
 
 use super::super::backend::RolloutBackend;
 use super::super::kv_manager::KvMemoryManager;
-use super::super::scheduler::Scheduler;
+use super::super::scheduler::{AdmissionQueue, Scheduler};
 use super::core::{
     admission_costs, admit_next, snap_residency, DecodeCore, GenSeq, Geometry, PrefillWave,
 };
@@ -65,14 +63,16 @@ impl RolloutPolicy {
         }
 
         let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
-        let mut queue: VecDeque<usize> = (0..n).collect();
-        let cost = admission_costs(sched, tasks, self.sampling.max_response);
+        let mut queue = AdmissionQueue::new(
+            sched.order,
+            admission_costs(sched, tasks, self.sampling.max_response),
+        );
         let mut core = DecodeCore::new(geom, self.mode.is_sparse());
 
         // ---- initial wave: one batched prefill over the admissible head
         let mut wave = PrefillWave::new(&geom);
         while wave.count() < geom.slots {
-            let Some(pos) = admit_next(sched, kv, &mut queue, &cost, tasks, seq_id_base)
+            let Some(pos) = admit_next(sched, kv, &mut queue, tasks, seq_id_base)
             else {
                 break;
             };
@@ -114,7 +114,7 @@ impl RolloutPolicy {
                 // `admit_next` refusal means the memory wall (retry after
                 // future releases) or an empty queue — either way stop
                 while let Some(pos) =
-                    admit_next(sched, kv, &mut queue, &cost, tasks, seq_id_base)
+                    admit_next(sched, kv, &mut queue, tasks, seq_id_base)
                 {
                     let (idx, task) = tasks[pos];
                     let row = b.prefill_slot(slot, &task.prompt_ids)?;

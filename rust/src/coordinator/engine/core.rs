@@ -12,8 +12,6 @@
 //! of ONE code path: an engine cannot drift on per-token semantics because
 //! it does not implement any.
 
-use std::collections::VecDeque;
-
 use anyhow::Result;
 
 use crate::compression::KvAccounting;
@@ -24,7 +22,7 @@ use crate::util::rng::Rng;
 
 use super::super::backend::{CostModel, RolloutBackend};
 use super::super::kv_manager::KvMemoryManager;
-use super::super::scheduler::Scheduler;
+use super::super::scheduler::{AdmissionQueue, Scheduler};
 use super::stats::RolloutStats;
 use super::RolloutPolicy;
 
@@ -217,28 +215,26 @@ pub(crate) fn admission_costs(
         .collect()
 }
 
-/// Order-aware single admission from a pending queue: ask the scheduler
-/// which element to try (`pick_next` over the `admission_cost` vector),
-/// charge the wall, and dequeue it. `None` means the queue is empty or
-/// the wall refused the scheduler's candidate (callers that care which
-/// must check the queue first). Under shortest-first a refusal means
-/// nothing with a smaller prompt+response prediction is pending (the
-/// unclamped cost key breaks residency-cap ties toward cheaper
-/// prompts, i.e. smaller paged admission charges).
+/// Order-aware single admission from a pending queue: peek the
+/// [`AdmissionQueue`]'s next pick (fifo head, or stable first-min by
+/// `admission_cost` through the sorted index), charge the wall, and
+/// dequeue it. `None` means the queue is empty or the wall refused the
+/// candidate (callers that care which must check the queue first). Under
+/// shortest-first a refusal means nothing with a smaller prompt+response
+/// prediction is pending (the unclamped cost key breaks residency-cap
+/// ties toward cheaper prompts, i.e. smaller paged admission charges).
 pub(crate) fn admit_next(
     sched: &mut Scheduler,
     kv: &mut KvMemoryManager,
-    queue: &mut VecDeque<usize>,
-    cost: &[usize],
+    queue: &mut AdmissionQueue,
     tasks: &[(usize, &Task)],
     seq_id_base: u64,
 ) -> Option<usize> {
-    let qi = sched.pick_next(queue, cost)?;
-    let pos = queue[qi];
+    let pos = queue.peek()?;
     if !sched.try_admit(kv, seq_id_base + pos as u64, tasks[pos].1.prompt_ids.len()) {
         return None;
     }
-    queue.remove(qi);
+    queue.pop();
     Some(pos)
 }
 

@@ -13,20 +13,23 @@
 //!   sequences release KV immediately and freed slots re-prefill in
 //!   place; slot prefills still stall the one decode batch.
 //! * `pipelined`  — N worker lanes over ONE shared scheduler/KV wall,
-//!   slot prefills deferred to a dedicated prefill lane, plus
-//!   cross-worker work stealing for drained lanes (`steal`).
+//!   with cross-worker work stealing for drained lanes (`steal`) and
+//!   slot prefills either paid by the joining worker (`prefill = sync`)
+//!   or run by a dedicated prefill-executor THREAD (`prefill = async`)
+//!   so recycling overlaps decode for real.
 //! * `stats`      — `RolloutStats`: occupancy, residency peaks, and the
 //!   virtual-clock tick accounting behind the hermetic timing benches.
 //!
-//! Scheduling knobs (`steal`, `admission-order`) never change tokens:
-//! per-task RNG streams (`task_rng`) make a task's sampling randomness a
-//! pure function of (rollout seed, task index), never of the slot, chunk,
-//! worker, admission order, or steal/preemption schedule it experiences.
-//! Combined with batch-row independence of the model, a given task emits
-//! identical `response_ids` and `sampler_logp` under all engines — which
-//! keeps the Eq. 2/5 correction math bit-reproducible and is what
+//! Scheduling knobs (`steal`, `admission-order`, `prefill`) never change
+//! tokens: per-task RNG streams (`task_rng`) make a task's sampling
+//! randomness a pure function of (rollout seed, task index), never of
+//! the slot, chunk, worker, admission order, prefill mode, or
+//! steal/preemption schedule it experiences. Combined with batch-row
+//! independence of the model, a given task emits identical
+//! `response_ids` and `sampler_logp` under all engines — which keeps the
+//! Eq. 2/5 correction math bit-reproducible and is what
 //! `tests/engine_equivalence.rs` checks exhaustively over the full
-//! {engine} × {steal} × {admission-order} grid.
+//! {engine} × {steal} × {admission-order} × {prefill sync/async} grid.
 //!
 //! The sparse path realizes the paper's rollout: the cache holds at most
 //! `budget + buffer` slots; whenever a sequence fills the buffer, the
@@ -44,7 +47,7 @@ pub use self::stats::RolloutStats;
 
 use anyhow::Result;
 
-use crate::config::{RolloutMode, SamplingConfig};
+use crate::config::{PrefillMode, RolloutMode, SamplingConfig};
 use crate::data::task::Task;
 use crate::runtime::{ModelEngine, ParamsLit, Variant};
 
@@ -67,16 +70,29 @@ pub struct RolloutPolicy {
     /// refill from the most-loaded peer instead of parking on the
     /// condvar. Scheduling-only — tokens are steal-invariant.
     pub steal: bool,
+    /// Slot-prefill execution for the pipelined engine (`prefill` config
+    /// knob, default sync = the original blocking behavior): sync makes
+    /// the joining worker pay the device call on its own lane; async
+    /// runs a dedicated prefill-executor thread so the call overlaps
+    /// decode. Scheduling-only — tokens are mode-invariant.
+    pub prefill: PrefillMode,
 }
 
 impl RolloutPolicy {
     pub fn new(mode: RolloutMode, sampling: SamplingConfig) -> Self {
-        RolloutPolicy { mode, sampling, steal: true }
+        RolloutPolicy { mode, sampling, steal: true, prefill: PrefillMode::Sync }
     }
 
     /// Toggle pipelined work stealing (builder style; see `steal`).
     pub fn with_steal(mut self, steal: bool) -> Self {
         self.steal = steal;
+        self
+    }
+
+    /// Select the pipelined slot-prefill mode (builder style; see
+    /// `prefill`).
+    pub fn with_prefill(mut self, prefill: PrefillMode) -> Self {
+        self.prefill = prefill;
         self
     }
 }
@@ -88,11 +104,13 @@ pub struct RolloutEngine<'a> {
     pub sampling: SamplingConfig,
     /// Pipelined work stealing (see `RolloutPolicy::steal`).
     pub steal: bool,
+    /// Pipelined slot-prefill mode (see `RolloutPolicy::prefill`).
+    pub prefill: PrefillMode,
 }
 
 impl<'a> RolloutEngine<'a> {
     pub fn new(engine: &'a ModelEngine, mode: RolloutMode, sampling: SamplingConfig) -> Self {
-        RolloutEngine { engine, mode, sampling, steal: true }
+        RolloutEngine { engine, mode, sampling, steal: true, prefill: PrefillMode::Sync }
     }
 
     /// Toggle pipelined work stealing (builder style).
@@ -101,8 +119,16 @@ impl<'a> RolloutEngine<'a> {
         self
     }
 
+    /// Select the pipelined slot-prefill mode (builder style).
+    pub fn with_prefill(mut self, prefill: PrefillMode) -> Self {
+        self.prefill = prefill;
+        self
+    }
+
     pub fn policy(&self) -> RolloutPolicy {
-        RolloutPolicy::new(self.mode, self.sampling).with_steal(self.steal)
+        RolloutPolicy::new(self.mode, self.sampling)
+            .with_steal(self.steal)
+            .with_prefill(self.prefill)
     }
 
     pub fn variant(&self) -> Variant {
@@ -184,11 +210,13 @@ impl<'a> RolloutEngine<'a> {
 
     /// Pipelined rollout over the whole pending queue: `workers` decode
     /// lanes (one `EngineBackend` each, all over this engine's artifacts)
-    /// against the shared scheduler/wall. See
-    /// `RolloutPolicy::rollout_pipelined`. This is the "handle story" for
-    /// the production path: `ModelEngine` is `Sync` (executable cache
-    /// behind a mutex), so N worker threads may each own an
-    /// `EngineBackend` borrowing the same engine + uploaded weights.
+    /// against the shared scheduler/wall — plus, under `prefill = async`,
+    /// one extra `EngineBackend` for the dedicated prefill-executor
+    /// thread. See `RolloutPolicy::rollout_pipelined`. This is the
+    /// "handle story" for the production path: `ModelEngine` is `Sync`
+    /// (executable cache behind a mutex), so N worker threads — and the
+    /// executor — may each own an `EngineBackend` borrowing the same
+    /// engine + uploaded weights.
     #[allow(clippy::too_many_arguments)]
     pub fn rollout_pipelined_lit(
         &self,
@@ -203,7 +231,13 @@ impl<'a> RolloutEngine<'a> {
         let mut backends: Vec<EngineBackend> = (0..workers.max(1))
             .map(|_| EngineBackend::new(self.engine, params, self.mode))
             .collect();
-        self.policy()
-            .rollout_pipelined(&mut backends, tasks, seed, sched, kv, seq_id_base)
+        if self.prefill.is_async() {
+            let mut exec = EngineBackend::new(self.engine, params, self.mode);
+            self.policy()
+                .rollout_pipelined(&mut backends, Some(&mut exec), tasks, seed, sched, kv, seq_id_base)
+        } else {
+            self.policy()
+                .rollout_pipelined(&mut backends, None, tasks, seed, sched, kv, seq_id_base)
+        }
     }
 }

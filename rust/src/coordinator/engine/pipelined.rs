@@ -1,31 +1,42 @@
 //! Pipelined multi-worker engine shell: a pool of worker threads drives
 //! one in-flight decode batch each against a SHARED scheduler/KV wall,
-//! with slot prefills issued to a dedicated prefill lane so recycling
-//! overlaps decode instead of stalling it. On top of the shared decode
-//! core it adds two scheduling features the monolith blocked:
+//! with slot prefills either performed by the joining worker (`prefill =
+//! sync`, the default) or issued to a dedicated prefill-executor THREAD
+//! (`prefill = async`) so recycling overlaps decode for real. On top of
+//! the shared decode core it adds two scheduling features the monolith
+//! blocked:
 //!
 //! * **Cross-worker work stealing** (`steal = on`, default): a drained
 //!   lane adopts queued tasks from the shared queue *and*, when the queue
-//!   cannot feed it, steals a not-yet-prefilled refill from the
-//!   most-loaded peer instead of parking on the condvar — the Sparrow
-//!   late-binding move. Stolen refills are safe by construction: their KV
-//!   admission is already charged globally, the actual `prefill_slot`
-//!   device call only happens at join time on whichever lane owns the
-//!   refill then, and per-task RNG keeps the tokens identical wherever
-//!   the task lands. A peer is only robbed while it has ≥ 2 pending
-//!   refills (or ≥ 1 while it still decodes a live batch), so a lone
-//!   about-to-join refill can never ping-pong between two drained lanes.
-//! * **Makespan-aware admission order**: the shared queue pops through
-//!   `Scheduler::pick_next` (fifo, or shortest-predicted-residency-first)
-//!   — see `scheduler.rs`.
+//!   cannot feed it, steals a not-yet-joined refill from the most-loaded
+//!   peer instead of parking on the condvar — the Sparrow late-binding
+//!   move. Stolen refills are safe by construction: their KV admission is
+//!   already charged globally, the slot write only happens at join time
+//!   on whichever lane owns the refill then (and an async-prepared result
+//!   is keyed by task, not lane), and per-task RNG keeps the tokens
+//!   identical wherever the task lands. A peer is only robbed while it
+//!   has ≥ 2 pending refills (or ≥ 1 while it still decodes a live
+//!   batch), so a lone about-to-join refill can never ping-pong between
+//!   two drained lanes.
+//! * **Makespan-aware admission order**: the shared queue is an
+//!   [`AdmissionQueue`] (fifo, or shortest-predicted-residency-first via
+//!   a sorted index with the stable first-min tie-break) — see
+//!   `scheduler.rs`.
 //!
-//! The modeled hardware (virtual clock, `CostModel` ticks) is
-//! disaggregated serving: one decode lane per worker plus a single shared
-//! prefill lane. The continuous engine on the same cost model is the
-//! serial baseline — one lane that pays every slot prefill inline.
-//! `bench_rollout` holds the pipelined makespan strictly below it.
+//! **Prefill modes and the virtual clock.** The modeled hardware is
+//! disaggregated serving. Under `async`, slot prefills run on the single
+//! shared prefill lane (`lane_clock`) — and, matching the model, a real
+//! executor thread makes the backend `prepare_prefill` calls off the
+//! decode workers, delivering completions through `PipeShared`; the
+//! worker's `apply_prefill` at join time is the cheap slot write. Under
+//! `sync` (the original behavior) the joining worker makes the backend
+//! call itself, so the virtual clock honestly charges
+//! `slot_prefill_ticks` to that worker's decode lane — the blocking cost
+//! `bench_rollout`'s sync-vs-async scenario holds strictly above the
+//! async makespan. Tokens are identical in both modes (per-task RNG);
+//! only the timing model and the threading differ.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -35,7 +46,7 @@ use crate::data::task::Task;
 
 use super::super::backend::RolloutBackend;
 use super::super::kv_manager::KvMemoryManager;
-use super::super::scheduler::Scheduler;
+use super::super::scheduler::{AdmissionQueue, Scheduler};
 use super::core::{
     self, admission_costs, admit_next, prefill_single_row, DecodeCore, GenSeq, Geometry,
     PrefillWave,
@@ -43,37 +54,39 @@ use super::core::{
 use super::stats::RolloutStats;
 use super::RolloutPolicy;
 
-/// A slot refill admitted to the wall and issued to the dedicated prefill
-/// lane, but not yet joined into a worker's decode batch. Its KV
-/// reservation is already held; the owning lane joins it (or a drained
-/// peer steals it) once that lane's virtual clock reaches `ready_at`.
+/// A slot refill admitted to the wall but not yet joined into a worker's
+/// decode batch. Its KV reservation is already held; the owning lane
+/// joins it (or a drained peer steals it) once that lane's virtual clock
+/// reaches `ready_at`.
 struct PendingRefill {
     /// Position in the pending task list (== results index).
     pos: usize,
-    /// Virtual time at which the prefill lane finishes this prefill.
+    /// Virtual time the refill becomes joinable: the shared prefill
+    /// lane's completion (async), or the issue time (sync — the joining
+    /// worker pays the call itself at join).
     ready_at: u64,
 }
 
-/// State the pipelined worker threads coordinate on, behind one mutex:
-/// the shared task queue, the shared scheduler + KV wall, the result
-/// table, the per-lane pending-refill registries (the steal surface), and
-/// the virtual clocks that tie the lanes' timelines together.
-struct PipeShared<'s> {
-    queue: VecDeque<usize>,
-    /// Admission cost per task position (the shortest-first oracle).
-    cost: Vec<usize>,
+/// State the pipelined worker threads (and the async prefill executor)
+/// coordinate on, behind one mutex: the shared task queue, the shared
+/// scheduler + KV wall, the result table, the per-lane pending-refill
+/// registries (the steal surface), the executor's request/completion
+/// hand-off, and the virtual clocks that tie the lanes' timelines
+/// together. `P` is the backend's prepared-prefill payload.
+struct PipeShared<'s, P> {
+    queue: AdmissionQueue,
     sched: &'s mut Scheduler,
     kv: &'s mut KvMemoryManager,
     results: Vec<Option<GenSeq>>,
     /// Admitted-but-not-yet-joined refills, one registry per lane, each
-    /// ascending in `ready_at` (the shared lane clock is monotone). A
-    /// drained lane pops its own front to join; `steal` lets it pop a
-    /// loaded peer's back instead of parking.
+    /// ascending in `ready_at`. A lane pops its own front to join;
+    /// `steal` lets a drained lane pop a loaded peer's back instead of
+    /// parking.
     refills: Vec<VecDeque<PendingRefill>>,
     /// Live decode-batch occupancy per lane (steal victim selection: a
     /// lane that still decodes will not join its refills for a while).
     lane_live: Vec<usize>,
-    /// Virtual clock of the single shared prefill lane.
+    /// Virtual clock of the single shared prefill lane (async mode).
     lane_clock: u64,
     /// Latest virtual time any lane released KV — the earliest honest
     /// timestamp for an admission that had to wait on the wall.
@@ -82,25 +95,34 @@ struct PipeShared<'s> {
     live_now: usize,
     /// Peak of `live_now`: the globally admitted width.
     peak_live: usize,
-    /// First worker error, if any — parked peers bail instead of waiting
-    /// for releases that will never come.
+    /// Async executor hand-off: submitted task positions awaiting
+    /// preparation, and prepared payloads awaiting their join (keyed by
+    /// task position so stolen refills find theirs).
+    prefill_queue: VecDeque<usize>,
+    prepared: BTreeMap<usize, P>,
+    /// Executor counters (all 0 in sync mode). `joined` is the in-flight
+    /// denominator: peak in-flight = max over submits of
+    /// `submitted - joined`, which advances on virtual-clock events only
+    /// and is therefore deterministic at one worker.
+    prefill_submitted: usize,
+    prefill_completed: usize,
+    prefill_joined: usize,
+    prefill_inflight_peak: usize,
+    /// Workers that finished their drain (the executor's shutdown gate).
+    workers_done: usize,
+    workers_total: usize,
+    /// First worker/executor error, if any — parked peers bail instead
+    /// of waiting for releases that will never come.
     failed: Option<String>,
 }
 
-impl PipeShared<'_> {
+impl<P> PipeShared<'_, P> {
     /// Admit the scheduler's next queue pick: wall charge + global width
     /// accounting, in one place so the admission sites (initial wave,
     /// slot refills, parked retry) cannot drift. `None` means the queue
     /// is empty or the wall refused.
     fn admit_next(&mut self, tasks: &[(usize, &Task)], seq_id_base: u64) -> Option<usize> {
-        let pos = admit_next(
-            self.sched,
-            self.kv,
-            &mut self.queue,
-            &self.cost,
-            tasks,
-            seq_id_base,
-        )?;
+        let pos = admit_next(self.sched, self.kv, &mut self.queue, tasks, seq_id_base)?;
         self.live_now += 1;
         self.peak_live = self.peak_live.max(self.live_now);
         Some(pos)
@@ -111,6 +133,22 @@ impl PipeShared<'_> {
     fn lane_issue(&mut self, now: u64, ticks: u64) -> u64 {
         self.lane_clock = self.lane_clock.max(now) + ticks;
         self.lane_clock
+    }
+
+    /// Register one admitted refill for lane `me` at local time `now`:
+    /// compute its virtual ready time (async: the shared prefill lane;
+    /// sync: immediately — the worker pays the device call at join) and,
+    /// in async mode, hand the prompt to the executor. Callers notify the
+    /// condvar after dropping the lock when `asynch`.
+    fn issue_refill(&mut self, me: usize, pos: usize, now: u64, ticks: u64, asynch: bool) {
+        let ready_at = if asynch { self.lane_issue(now, ticks) } else { now };
+        self.refills[me].push_back(PendingRefill { pos, ready_at });
+        if asynch {
+            self.prefill_queue.push_back(pos);
+            self.prefill_submitted += 1;
+            let inflight = self.prefill_submitted - self.prefill_joined;
+            self.prefill_inflight_peak = self.prefill_inflight_peak.max(inflight);
+        }
     }
 
     /// Account a release/preemption happening at the caller's local time
@@ -145,25 +183,107 @@ impl PipeShared<'_> {
     }
 }
 
+/// Poisons the run if a pipelined thread UNWINDS: the normal error
+/// wrapper only sees returned `Err`s, but a panic (e.g. a violated
+/// `expect` invariant outside the lock, which leaves the mutex
+/// unpoisoned) would otherwise strand parked peers — and the async
+/// executor's shutdown gate (`workers_done`) — waiting forever. Disarm
+/// after a normal return; on drop-while-armed, set `failed` and wake
+/// everyone.
+struct PanicFence<'m, 's, P> {
+    shared: &'m Mutex<PipeShared<'s, P>>,
+    cv: &'m Condvar,
+    disarmed: bool,
+}
+
+impl<P> Drop for PanicFence<'_, '_, P> {
+    fn drop(&mut self) {
+        if self.disarmed {
+            return;
+        }
+        if let Ok(mut sh) = self.shared.lock() {
+            if sh.failed.is_none() {
+                sh.failed = Some("a pipelined thread panicked".into());
+            }
+        }
+        // (a panic while holding the lock poisons the mutex instead;
+        // peers' lock() calls already bail on that)
+        self.cv.notify_all();
+    }
+}
+
+/// The dedicated async prefill executor: drains submitted requests off
+/// the shared queue, runs the expensive cache-independent
+/// `prepare_prefill` on ITS OWN backend — concurrently with every decode
+/// worker — and delivers the payloads back through `PipeShared`. Exits
+/// when all workers have drained (or any thread failed). This thread is
+/// what turns the modeled prefill lane into real overlap on the artifact
+/// path.
+fn prefill_executor<B: RolloutBackend>(
+    b: &mut B,
+    tasks: &[(usize, &Task)],
+    shared: &Mutex<PipeShared<'_, B::Prepared>>,
+    cv: &Condvar,
+) -> Result<()> {
+    let lock = || {
+        shared
+            .lock()
+            .map_err(|_| anyhow::anyhow!("pipelined shared state poisoned"))
+    };
+    loop {
+        let pos = {
+            let mut guard = lock()?;
+            loop {
+                if guard.failed.is_some() {
+                    return Ok(()); // a peer already poisoned the run
+                }
+                if let Some(pos) = guard.prefill_queue.pop_front() {
+                    break pos;
+                }
+                if guard.workers_done == guard.workers_total {
+                    return Ok(()); // drained: no more submissions can come
+                }
+                let (g, _) = cv
+                    .wait_timeout(guard, Duration::from_millis(2))
+                    .map_err(|_| anyhow::anyhow!("pipelined shared state poisoned"))?;
+                guard = g;
+            }
+        };
+        // the expensive half runs OFF the lock and OFF the decode workers
+        let prepared = b.prepare_prefill(&tasks[pos].1.prompt_ids)?;
+        let mut guard = lock()?;
+        guard.prefill_completed += 1;
+        guard.prepared.insert(pos, prepared);
+        drop(guard);
+        cv.notify_all();
+    }
+}
+
 impl RolloutPolicy {
     /// Pipelined rollout: `backends.len()` worker threads, each driving a
     /// continuous-style decode batch over its own backend against the
-    /// shared scheduler/KV wall; slot prefills are deferred to the shared
-    /// prefill lane; drained lanes adopt queued work and (with `steal`)
-    /// rob loaded peers instead of parking.
+    /// shared scheduler/KV wall; slot prefills are performed by the
+    /// joining worker (`prefill = sync`) or prepared by the dedicated
+    /// executor thread on `prefill_backend` (`prefill = async` — the
+    /// executor backend is required then and ignored otherwise); drained
+    /// lanes adopt queued work and (with `steal`) rob loaded peers
+    /// instead of parking.
     ///
     /// Token identity with `continuous` holds by construction: per-task
     /// RNG plus batch-row independence make a task's tokens a pure
     /// function of (seed, task) regardless of worker, slot, join step,
-    /// steal, admission order, or preemption —
+    /// steal, admission order, prefill mode, or preemption —
     /// `tests/engine_equivalence.rs` enforces it for worker counts 1/2/4
-    /// across the {steal} × {admission-order} grid. Results come back in
-    /// task order. Work counters in the merged stats sum over lanes;
-    /// `modeled_makespan_ticks` is the lane max and `peak_live_slots` the
-    /// peak globally admitted width.
+    /// across the {steal} × {admission-order} × {sync, async} grid.
+    /// Results come back in task order. Work counters in the merged stats
+    /// sum over lanes; `modeled_makespan_ticks` is the lane max,
+    /// `peak_live_slots` the peak globally admitted width, and the
+    /// `async_prefills_*` counters the executor's global totals.
+    #[allow(clippy::too_many_arguments)]
     pub fn rollout_pipelined<B: RolloutBackend + Send>(
         &self,
         backends: &mut [B],
+        prefill_backend: Option<&mut B>,
         tasks: &[(usize, &Task)],
         seed: u64,
         sched: &mut Scheduler,
@@ -174,17 +294,28 @@ impl RolloutPolicy {
         if workers == 0 {
             bail!("pipelined rollout needs at least one worker backend");
         }
+        let asynch = self.prefill.is_async();
+        if asynch && prefill_backend.is_none() {
+            bail!("prefill = async needs a dedicated prefill-executor backend");
+        }
+        let prefill_backend = if asynch { prefill_backend } else { None };
         let n = tasks.len();
         if n == 0 {
             return Ok((vec![], RolloutStats { workers, ..RolloutStats::default() }));
         }
-        // every worker must see the same model geometry — they share one
-        // task queue and one wall
+        // every worker (and the executor) must see the same model
+        // geometry — they share one task queue and one wall
         let shape = Geometry::of(&backends[0]).shape();
         for b in backends.iter() {
             let g = Geometry::of(b).shape();
             if g != shape {
                 bail!("pipelined worker backends disagree on geometry: {g:?} vs {shape:?}");
+            }
+        }
+        if let Some(eb) = prefill_backend.as_deref() {
+            let g = Geometry::of(eb).shape();
+            if g != shape {
+                bail!("prefill-executor backend disagrees on geometry: {g:?} vs {shape:?}");
             }
         }
         // same progress guarantee as the continuous engine: a lone
@@ -198,10 +329,12 @@ impl RolloutPolicy {
             );
         }
 
-        let cost = admission_costs(sched, tasks, self.sampling.max_response);
+        let queue = AdmissionQueue::new(
+            sched.order,
+            admission_costs(sched, tasks, self.sampling.max_response),
+        );
         let shared = Mutex::new(PipeShared {
-            queue: (0..n).collect(),
-            cost,
+            queue,
             sched,
             kv,
             results: (0..n).map(|_| None).collect(),
@@ -211,24 +344,52 @@ impl RolloutPolicy {
             release_floor: 0,
             live_now: 0,
             peak_live: 0,
+            prefill_queue: VecDeque::new(),
+            prepared: BTreeMap::new(),
+            prefill_submitted: 0,
+            prefill_completed: 0,
+            prefill_joined: 0,
+            prefill_inflight_peak: 0,
+            workers_done: 0,
+            workers_total: workers,
             failed: None,
         });
         let cv = Condvar::new();
         let (shared, cv) = (&shared, &cv);
         let policy = *self;
 
-        let joined = std::thread::scope(|scope| {
+        let (joined, exec_joined) = std::thread::scope(|scope| {
+            let exec_handle = prefill_backend.map(|eb| {
+                scope.spawn(move || {
+                    let mut fence = PanicFence { shared, cv, disarmed: false };
+                    let out = prefill_executor(eb, tasks, shared, cv);
+                    fence.disarmed = true;
+                    drop(fence);
+                    if let Err(e) = &out {
+                        if let Ok(mut sh) = shared.lock() {
+                            if sh.failed.is_none() {
+                                sh.failed = Some(e.to_string());
+                            }
+                        }
+                        cv.notify_all();
+                    }
+                    out
+                })
+            });
             let handles: Vec<_> = backends
                 .iter_mut()
                 .enumerate()
                 .map(|(me, b)| {
                     scope.spawn(move || {
+                        let mut fence = PanicFence { shared, cv, disarmed: false };
                         let out = policy
                             .pipelined_worker(b, tasks, seed, seq_id_base, me, shared, cv);
+                        fence.disarmed = true;
+                        drop(fence);
                         if let Err(e) = &out {
-                            // poison the run so parked peers bail out
-                            // instead of waiting on releases that will
-                            // never come
+                            // poison the run so parked peers (and the
+                            // executor) bail out instead of waiting on
+                            // work that will never come
                             if let Ok(mut sh) = shared.lock() {
                                 if sh.failed.is_none() {
                                     sh.failed = Some(e.to_string());
@@ -240,10 +401,13 @@ impl RolloutPolicy {
                     })
                 })
                 .collect();
-            handles
+            let joined = handles
                 .into_iter()
                 .map(|h| h.join())
-                .collect::<Vec<_>>()
+                .collect::<Vec<_>>();
+            // workers are all done (workers_done == total or failed), so
+            // the executor's shutdown gate is open
+            (joined, exec_handle.map(|h| h.join()))
         });
 
         let mut stats = RolloutStats::default();
@@ -254,12 +418,22 @@ impl RolloutPolicy {
             stats.merge(&ws);
             makespan = makespan.max(finish);
         }
+        if let Some(res) = exec_joined {
+            res.unwrap_or_else(|_| Err(anyhow::anyhow!("prefill executor panicked")))?;
+        }
         stats.workers = workers;
         stats.modeled_makespan_ticks = makespan;
         let mut sh = shared
             .lock()
             .map_err(|_| anyhow::anyhow!("pipelined shared state poisoned"))?;
         stats.peak_live_slots = stats.peak_live_slots.max(sh.peak_live);
+        stats.async_prefills_submitted = sh.prefill_submitted;
+        stats.async_prefills_completed = sh.prefill_completed;
+        stats.async_prefill_inflight_peak = sh.prefill_inflight_peak;
+        debug_assert!(
+            sh.prepared.is_empty() && sh.prefill_queue.is_empty(),
+            "async prefills leaked past the drain"
+        );
         let mut out = Vec::with_capacity(n);
         for (pos, seq) in sh.results.iter_mut().enumerate() {
             match seq.take() {
@@ -272,8 +446,11 @@ impl RolloutPolicy {
 
     /// One pipelined worker lane: a continuous-style decode loop over its
     /// own backend, coordinating admission/release/growth/stealing
-    /// through the shared state and deferring slot prefills to the shared
-    /// prefill lane. Returns its stats and its final virtual clock.
+    /// through the shared state. Slot prefills: performed here at join
+    /// time (sync — charged to this lane's clock) or awaited from the
+    /// executor thread and applied (async — already charged to the shared
+    /// prefill lane at issue). Returns its stats and its final virtual
+    /// clock.
     #[allow(clippy::too_many_arguments)]
     fn pipelined_worker<B: RolloutBackend>(
         &self,
@@ -282,15 +459,36 @@ impl RolloutPolicy {
         seed: u64,
         seq_id_base: u64,
         me: usize,
-        shared: &Mutex<PipeShared<'_>>,
+        shared: &Mutex<PipeShared<'_, B::Prepared>>,
         cv: &Condvar,
     ) -> Result<(RolloutStats, u64)> {
         let geom = Geometry::of(b);
         let r = geom.slots;
+        let asynch = self.prefill.is_async();
         let lock = || {
             shared
                 .lock()
                 .map_err(|_| anyhow::anyhow!("pipelined shared state poisoned"))
+        };
+        // block until the executor delivers `pos` (async joins only): a
+        // PHYSICAL wait with no virtual charge — the virtual lane already
+        // accounted the prefill at issue time, so modeled stats stay
+        // independent of real thread scheduling
+        let wait_prepared = |pos: usize| -> Result<B::Prepared> {
+            let mut guard = lock()?;
+            loop {
+                if let Some(p) = guard.prepared.remove(&pos) {
+                    guard.prefill_joined += 1;
+                    return Ok(p);
+                }
+                if let Some(e) = &guard.failed {
+                    bail!("pipelined peer failed: {e}");
+                }
+                let (g, _) = cv
+                    .wait_timeout(guard, Duration::from_millis(2))
+                    .map_err(|_| anyhow::anyhow!("pipelined shared state poisoned"))?;
+                guard = g;
+            }
         };
 
         let mut stats = RolloutStats { chunks: 1, workers: 1, ..RolloutStats::default() };
@@ -316,13 +514,21 @@ impl RolloutPolicy {
         }
         let w0 = wave.count();
         if w0 > 0 {
-            // the batched prefill shares the single modeled prefill lane
-            // with every other worker's; the decode lane blocks on it
-            // (nothing to decode before the first logits anyway)
-            let ready = lock()?.lane_issue(now, geom.costs.prefill_ticks);
-            logp = wave.prefill(&core, b, &mut stats)?;
-            stats.prefill_blocked_ticks += ready - now;
-            now = ready;
+            if asynch {
+                // the batched prefill shares the single modeled prefill
+                // lane with every other worker's; the decode lane blocks
+                // on it (nothing to decode before the first logits anyway)
+                let ready = lock()?.lane_issue(now, geom.costs.prefill_ticks);
+                logp = wave.prefill(&core, b, &mut stats)?;
+                stats.prefill_blocked_ticks += ready - now;
+                now = ready;
+            } else {
+                // sync: this worker makes the call and its lane blocks
+                // for the full cost
+                logp = wave.prefill(&core, b, &mut stats)?;
+                stats.prefill_blocked_ticks += geom.costs.prefill_ticks;
+                now += geom.costs.prefill_ticks;
+            }
             for d in decoded.iter_mut().take(w0) {
                 *d = true;
             }
@@ -351,7 +557,7 @@ impl RolloutPolicy {
                 cv.notify_all();
             }
 
-            // ---- join refills whose lane prefill has completed ----------
+            // ---- join refills whose virtual ready time has arrived ------
             let mut joins: Vec<PendingRefill> = Vec::new();
             {
                 let mut guard = lock()?;
@@ -366,16 +572,32 @@ impl RolloutPolicy {
                     .expect("a free slot exists per pending refill (registry invariant)");
                 let (idx, task) = tasks[p.pos];
                 let pi = &task.prompt_ids;
-                let row = if stats.prefills == 0 {
-                    // this lane's whole first wave was refused at the wall,
-                    // so it has no live cache yet and the real backend's
-                    // prefill_slot would reject: run the batched entry with
-                    // just this prompt instead — batch-row independence
-                    // makes the slot's logits identical either way
-                    prefill_single_row(&geom, b, slot, pi, &mut stats)?
+                let row = if asynch {
+                    let prepared = wait_prepared(p.pos)?;
+                    if stats.prefills == 0 {
+                        // this lane's whole first wave was refused at the
+                        // wall, so it has no live cache yet and the real
+                        // backend's apply would reject: run the batched
+                        // entry with just this prompt instead (batch-row
+                        // independence makes the slot's logits identical)
+                        // and drop the prepared payload
+                        prefill_single_row(&geom, b, slot, pi, &mut stats)?
+                    } else {
+                        stats.slot_prefills += 1;
+                        b.apply_prefill(slot, prepared)?
+                    }
                 } else {
-                    stats.slot_prefills += 1;
-                    b.prefill_slot(slot, pi)?
+                    // sync: the device call happens here, on this worker,
+                    // so the honest virtual charge lands on this lane
+                    let row = if stats.prefills == 0 {
+                        prefill_single_row(&geom, b, slot, pi, &mut stats)?
+                    } else {
+                        stats.slot_prefills += 1;
+                        b.prefill_slot(slot, pi)?
+                    };
+                    stats.prefill_blocked_ticks += geom.costs.slot_prefill_ticks;
+                    now += geom.costs.slot_prefill_ticks;
+                    row
                 };
                 stats.refills += 1;
                 // identical per-token semantics to the continuous refill
@@ -399,16 +621,21 @@ impl RolloutPolicy {
                 lock()?.lane_live[me] = core.occupied();
             }
 
-            // ---- issue refills: admit + queue on the prefill lane -------
+            // ---- issue refills: admit + register (async: submit) --------
             {
                 let mut guard = lock()?;
+                let mut submitted = false;
                 while core.occupied() + guard.refills[me].len() < r {
                     let Some(pos) = guard.admit_next(tasks, seq_id_base) else {
                         break; // queue empty, or wall: retry after releases
                     };
-                    let ready_at = guard.lane_issue(now, geom.costs.slot_prefill_ticks);
-                    guard.refills[me].push_back(PendingRefill { pos, ready_at });
+                    guard.issue_refill(me, pos, now, geom.costs.slot_prefill_ticks, asynch);
                     guard.snap_residency(&mut stats);
+                    submitted = true;
+                }
+                drop(guard);
+                if submitted && asynch {
+                    cv.notify_all(); // wake the executor
                 }
             }
 
@@ -417,7 +644,9 @@ impl RolloutPolicy {
                 let mut guard = lock()?;
                 if let Some(t) = guard.refills[me].front().map(|p| p.ready_at) {
                     // nothing decodable while the lane prefills: the
-                    // decode lane waits for the earliest join
+                    // decode lane waits for the earliest join (sync
+                    // refills are ready immediately; stolen ones may
+                    // carry a later ready_at)
                     drop(guard);
                     stats.prefill_blocked_ticks += t.saturating_sub(now);
                     now = now.max(t);
@@ -431,6 +660,7 @@ impl RolloutPolicy {
                 // `failed` and the deadlock predicate, never aborting a
                 // merely-slow run).
                 let stall_start = now;
+                let mut submitted = false;
                 let got_work = loop {
                     if let Some(e) = &guard.failed {
                         bail!("pipelined peer failed: {e}");
@@ -439,16 +669,17 @@ impl RolloutPolicy {
                         // honest virtual time: this admission only became
                         // possible when a peer released KV
                         now = now.max(guard.release_floor);
-                        let ready_at = guard.lane_issue(now, geom.costs.slot_prefill_ticks);
-                        guard.refills[me].push_back(PendingRefill { pos, ready_at });
+                        guard.issue_refill(me, pos, now, geom.costs.slot_prefill_ticks, asynch);
                         guard.snap_residency(&mut stats);
+                        submitted = asynch;
                         break true;
                     }
                     if self.steal {
                         if let Some(p) = guard.steal_for(me) {
-                            // adopt the refill: its admission charge and
-                            // its prefill-lane slot travel with it, so the
-                            // thief just inherits the wait for `ready_at`
+                            // adopt the refill: its admission charge, its
+                            // prefill-lane slot, and (async) its prepared
+                            // payload travel with it — the thief just
+                            // inherits the wait for `ready_at`
                             guard.refills[me].push_back(p);
                             stats.steals += 1;
                             break true;
@@ -477,11 +708,14 @@ impl RolloutPolicy {
                     guard = g;
                 };
                 drop(guard);
+                if submitted {
+                    cv.notify_all(); // wake the executor, off the lock
+                }
                 if !got_work {
                     break; // queue drained: worker done (peers drain their own)
                 }
                 stats.sched_stall_ticks += now - stall_start;
-                continue; // the pending refill joins via the lane
+                continue; // the pending refill joins at the loop top
             }
 
             // ---- compression trigger (the shared per-sequence rule) -----
@@ -528,6 +762,13 @@ impl RolloutPolicy {
             }
         }
 
+        // open the executor's shutdown gate (async: it exits once every
+        // worker has drained and the request queue is empty)
+        {
+            let mut guard = lock()?;
+            guard.workers_done += 1;
+        }
+        cv.notify_all();
         Ok((stats, now))
     }
 }

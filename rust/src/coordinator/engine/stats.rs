@@ -47,6 +47,21 @@ pub struct RolloutStats {
     /// (pipelined with `steal = on` only; scheduling-only — never changes
     /// tokens).
     pub steals: usize,
+    /// Slot prefills handed to the dedicated prefill-executor thread
+    /// (pipelined with `prefill = async` only; 0 in sync mode, where the
+    /// decode workers make the calls themselves).
+    pub async_prefills_submitted: usize,
+    /// Async prefills the executor finished preparing. Every submission
+    /// is prepared exactly once, so this equals `submitted` at drain —
+    /// the propcheck and the stress test assert it.
+    pub async_prefills_completed: usize,
+    /// Peak count of submitted-but-not-yet-joined async prefills — the
+    /// prefill pipeline's occupancy high-water. Deterministic at one
+    /// worker: it advances on virtual-clock events (submits/joins), not
+    /// on physical executor timing. A peak: `merge` takes the max, and
+    /// the pipelined joiner overwrites it with the globally observed
+    /// value.
+    pub async_prefill_inflight_peak: usize,
     /// Worker lanes that produced these stats (1 for static/continuous;
     /// the pool size for pipelined).
     pub workers: usize,
@@ -54,10 +69,11 @@ pub struct RolloutStats {
     /// over lanes.
     pub decode_busy_ticks: u64,
     /// Modeled ticks a decode lane sat blocked on prefill work: batched
-    /// prefills, plus slot prefills that could not be hidden behind decode
-    /// (the continuous engine charges *every* slot prefill here — that
-    /// serial stall is exactly what the pipelined engine's dedicated
-    /// prefill lane removes).
+    /// prefills, plus slot prefills that could not be hidden behind
+    /// decode. The continuous engine — and the pipelined engine under
+    /// `prefill = sync`, where the joining worker makes the call itself —
+    /// charges *every* slot prefill here; that serial stall is exactly
+    /// what `prefill = async`'s dedicated executor lane removes.
     pub prefill_blocked_ticks: u64,
     /// Modeled ticks a decode lane idled empty at the memory wall,
     /// waiting for another lane to release KV (pipelined only; the
@@ -119,6 +135,10 @@ impl RolloutStats {
         self.peak_live_slots = self.peak_live_slots.max(o.peak_live_slots);
         self.preemptions += o.preemptions;
         self.steals += o.steals;
+        self.async_prefills_submitted += o.async_prefills_submitted;
+        self.async_prefills_completed += o.async_prefills_completed;
+        self.async_prefill_inflight_peak =
+            self.async_prefill_inflight_peak.max(o.async_prefill_inflight_peak);
         self.workers = self.workers.max(o.workers);
         self.decode_busy_ticks += o.decode_busy_ticks;
         self.prefill_blocked_ticks += o.prefill_blocked_ticks;
@@ -147,6 +167,9 @@ mod tests {
             peak_live_slots: 4,
             preemptions: 1,
             steals: 1,
+            async_prefills_submitted: 3,
+            async_prefills_completed: 3,
+            async_prefill_inflight_peak: 2,
             workers: 1,
             decode_busy_ticks: 100,
             prefill_blocked_ticks: 40,
@@ -161,6 +184,9 @@ mod tests {
             max_reserved_kv: 80,
             max_used_pages: 9,
             peak_live_slots: 2,
+            async_prefills_submitted: 1,
+            async_prefills_completed: 1,
+            async_prefill_inflight_peak: 1,
             workers: 1,
             decode_busy_ticks: 50,
             prefill_blocked_ticks: 40,
@@ -178,7 +204,11 @@ mod tests {
         assert_eq!(m.sched_stall_ticks, 7);
         assert_eq!(m.modeled_makespan_ticks, 237);
         assert_eq!(m.steals, 1);
+        // prefill-executor counters: submitted/completed sum...
+        assert_eq!(m.async_prefills_submitted, 4);
+        assert_eq!(m.async_prefills_completed, 4);
         // ...high-water marks take the max
+        assert_eq!(m.async_prefill_inflight_peak, 2);
         assert_eq!(m.max_reserved_kv, 100);
         assert_eq!(m.max_used_pages, 9);
         assert_eq!(m.peak_live_slots, 4);
@@ -221,6 +251,9 @@ mod tests {
                     peak_live_slots: rng.below(slots + 1),
                     preemptions: rng.below(16),
                     steals: rng.below(8),
+                    async_prefills_submitted: rng.below(24),
+                    async_prefills_completed: rng.below(24),
+                    async_prefill_inflight_peak: rng.below(12),
                     workers: 1,
                     decode_busy_ticks: rng.below(10_000) as u64,
                     prefill_blocked_ticks: rng.below(10_000) as u64,
@@ -246,6 +279,8 @@ mod tests {
                 || merged.refills != sum(|l| l.refills)
                 || merged.prefills != sum(|l| l.prefills)
                 || merged.slot_prefills != sum(|l| l.slot_prefills)
+                || merged.async_prefills_submitted != sum(|l| l.async_prefills_submitted)
+                || merged.async_prefills_completed != sum(|l| l.async_prefills_completed)
                 || merged.chunks != n
             {
                 return Err("a work counter did not sum exactly".into());
@@ -262,6 +297,7 @@ mod tests {
             if merged.max_reserved_kv != max(|l| l.max_reserved_kv)
                 || merged.max_used_pages != max(|l| l.max_used_pages)
                 || merged.peak_live_slots != max(|l| l.peak_live_slots)
+                || merged.async_prefill_inflight_peak != max(|l| l.async_prefill_inflight_peak)
                 || merged.workers != max(|l| l.workers)
             {
                 return Err("a high-water mark is not the exact max".into());

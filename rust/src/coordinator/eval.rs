@@ -16,7 +16,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::{AdmissionOrder, EngineKind, MemoryConfig, RolloutMode, SamplingConfig};
+use crate::config::{
+    AdmissionOrder, EngineKind, MemoryConfig, PrefillMode, RolloutMode, SamplingConfig,
+};
 use crate::data::benchmarks::{Benchmark, Protocol};
 use crate::data::task::Task;
 use crate::runtime::{ModelEngine, ParamsLit};
@@ -68,6 +70,10 @@ pub struct EvalOptions {
     /// Admission order for the pending queue (fifo preserves the
     /// original behavior).
     pub admission_order: AdmissionOrder,
+    /// Slot-prefill execution for `engine = pipelined` (sync preserves
+    /// the original blocking behavior; async runs the dedicated
+    /// prefill-executor thread).
+    pub prefill: PrefillMode,
 }
 
 impl Default for EvalOptions {
@@ -78,6 +84,7 @@ impl Default for EvalOptions {
             rollout_workers: 2,
             steal: true,
             admission_order: AdmissionOrder::default(),
+            prefill: PrefillMode::default(),
         }
     }
 }
@@ -88,7 +95,10 @@ impl Default for EvalOptions {
 ///
 /// `backends` carries one backend per decode lane: the single-lane
 /// engines use `backends[0]`, the pipelined engine uses them all (which
-/// is why the bound is `Send` — lanes are worker threads).
+/// is why the bound is `Send` — lanes are worker threads). When the
+/// policy selects `prefill = async`, the LAST backend is the dedicated
+/// prefill-executor lane (so pipelined callers pass `workers + 1`
+/// backends).
 #[allow(clippy::too_many_arguments)]
 pub fn evaluate_with_backend<B: RolloutBackend + Send>(
     policy: &RolloutPolicy,
@@ -121,7 +131,23 @@ pub fn evaluate_with_backend<B: RolloutBackend + Send>(
             policy.rollout_continuous(&mut backends[0], &flat, rollout_seed, sched, kv, 0)?
         }
         EngineKind::Pipelined => {
-            policy.rollout_pipelined(backends, &flat, rollout_seed, sched, kv, 0)?
+            if policy.prefill.is_async() {
+                if backends.len() < 2 {
+                    bail!("pipelined async eval needs worker lanes + one executor backend");
+                }
+                let (workers, exec) = backends.split_at_mut(backends.len() - 1);
+                policy.rollout_pipelined(
+                    workers,
+                    Some(&mut exec[0]),
+                    &flat,
+                    rollout_seed,
+                    sched,
+                    kv,
+                    0,
+                )?
+            } else {
+                policy.rollout_pipelined(backends, None, &flat, rollout_seed, sched, kv, 0)?
+            }
         }
     };
     let mut correct_per_item = vec![0usize; tasks.len()];
@@ -192,13 +218,21 @@ pub fn evaluate(
             max_response: m.config.max_seq - m.config.prompt_len,
         },
     };
-    let policy = RolloutPolicy::new(mode, sampling).with_steal(opts.steal);
+    let policy = RolloutPolicy::new(mode, sampling)
+        .with_steal(opts.steal)
+        .with_prefill(opts.prefill);
     let params_lit = ParamsLit::new(params);
-    // one backend per decode lane (single-lane engines use the first)
-    let lanes = if opts.engine == EngineKind::Pipelined {
+    // one backend per decode lane (single-lane engines use the first);
+    // pipelined async adds one more for the prefill-executor thread
+    let decode_lanes = if opts.engine == EngineKind::Pipelined {
         opts.rollout_workers.max(1)
     } else {
         1
+    };
+    let lanes = if opts.engine == EngineKind::Pipelined && opts.prefill.is_async() {
+        decode_lanes + 1
+    } else {
+        decode_lanes
     };
     let mut backends: Vec<EngineBackend> = (0..lanes)
         .map(|_| EngineBackend::new(engine, &params_lit, mode))
@@ -215,11 +249,12 @@ pub fn evaluate(
     // never turn a previously-working eval into a "stalled" error.
     let page = opts.memory.kv_page_tokens;
     let per_seq_pages_tokens = sched.reserve_per_seq.div_ceil(page) * page;
-    // (for pipelined, clamp per lane so every worker can fill its batch)
+    // (for pipelined, clamp per DECODE lane so every worker can fill its
+    // batch — the executor lane holds no admissions)
     let wall = opts
         .memory
         .global_kv_tokens
-        .max(per_seq_pages_tokens * m.shapes.decode_batch * lanes);
+        .max(per_seq_pages_tokens * m.shapes.decode_batch * decode_lanes);
     let mut kv = KvMemoryManager::with_pages(wall, page);
     evaluate_with_backend(
         &policy,

@@ -150,6 +150,12 @@ impl MockModelBackend {
 }
 
 impl RolloutBackend for MockModelBackend {
+    /// The mock's prepared prefill: the prompt plus its (purely
+    /// content-determined) logits row, both computable with no access to
+    /// any live cache — exactly the property that lets the async executor
+    /// run it on its own backend clone.
+    type Prepared = (Vec<i32>, Vec<f32>);
+
     fn slots(&self) -> usize {
         self.slots
     }
@@ -203,6 +209,22 @@ impl RolloutBackend for MockModelBackend {
         }
         self.cache[slot] = prompt.to_vec();
         Ok(self.row_logp(&self.cache[slot]))
+    }
+
+    fn prepare_prefill(&mut self, prompt: &[i32]) -> Result<Self::Prepared> {
+        if prompt.is_empty() || prompt.len() > self.prompt_len {
+            bail!("prepare_prefill: prompt length {} out of range", prompt.len());
+        }
+        Ok((prompt.to_vec(), self.row_logp(prompt)))
+    }
+
+    fn apply_prefill(&mut self, slot: usize, prepared: Self::Prepared) -> Result<Vec<f32>> {
+        if slot >= self.slots {
+            bail!("apply_prefill: slot {slot} out of range");
+        }
+        let (prompt, logp) = prepared;
+        self.cache[slot] = prompt;
+        Ok(logp)
     }
 
     fn decode(&mut self, lens: &[i32], pos: &[i32], tokens: &[i32]) -> Result<Vec<f32>> {
@@ -287,6 +309,30 @@ mod tests {
         b.prefill(&[5i32; 18], &[6, 6, 6]).unwrap();
         let row = b.prefill_slot(1, &[1, 7, 8, 9]).unwrap();
         assert_eq!(&full[32..64], &row[..]);
+    }
+
+    #[test]
+    fn prepare_apply_matches_prefill_slot() {
+        // The async-prefill contract: prepare on ONE backend, apply on
+        // ANOTHER, and the target slot must end up exactly as a direct
+        // prefill_slot would leave it — same cache row, same logits.
+        let mut executor = MockModelBackend::dense(3, 6, 32, 32);
+        let mut worker = MockModelBackend::dense(3, 6, 32, 32);
+        let mut reference = MockModelBackend::dense(3, 6, 32, 32);
+        worker.prefill(&[5i32; 18], &[6, 6, 6]).unwrap();
+        reference.prefill(&[5i32; 18], &[6, 6, 6]).unwrap();
+        let prompt = [1, 7, 8, 9];
+        let prepared = executor.prepare_prefill(&prompt).unwrap();
+        let applied = worker.apply_prefill(2, prepared).unwrap();
+        let direct = reference.prefill_slot(2, &prompt).unwrap();
+        assert_eq!(applied, direct, "prepared row diverges from prefill_slot");
+        assert_eq!(worker.cache[2], reference.cache[2]);
+        // neighbour slots untouched
+        assert_eq!(worker.cache[0], reference.cache[0]);
+        // subsequent decode sees identical state
+        let a = worker.decode(&[4, 6, 4], &[6, 6, 4], &[3, 3, 3]).unwrap();
+        let b = reference.decode(&[4, 6, 4], &[6, 6, 4], &[3, 3, 3]).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -30,11 +30,11 @@ pub mod reweight;
 pub mod scheduler;
 pub mod trainer;
 
-pub use backend::{CostModel, EngineBackend, RolloutBackend};
+pub use backend::{CostModel, EngineBackend, PreparedSlotPrefill, RolloutBackend};
 pub use engine::{task_rng, GenSeq, RolloutEngine, RolloutPolicy, RolloutStats};
 pub use eval::{evaluate, evaluate_suite, evaluate_with_backend, EvalOptions, EvalResult};
 pub use kv_manager::KvMemoryManager;
 pub use metrics::Metrics;
 pub use mock::MockModelBackend;
-pub use scheduler::Scheduler;
+pub use scheduler::{AdmissionQueue, Scheduler};
 pub use trainer::{StepReport, Trainer};

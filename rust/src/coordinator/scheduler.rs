@@ -36,12 +36,115 @@
 //!   paged admission the effective width is data-dependent, so the closed
 //!   forms bound it via `predicted_decode_steps_with` (see `width_paged`).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 use crate::config::{AdmissionOrder, AdmissionPolicy};
 use crate::runtime::Manifest;
 
 use super::kv_manager::{KvMemoryManager, SeqId};
+
+/// The dynamic engines' pending-task queue with an order-aware pop.
+///
+/// Fifo keeps a plain deque. Shortest-first keeps a sorted index — a
+/// `BTreeSet` keyed by `(cost, stamp)` — replacing the old
+/// scan-the-whole-queue-per-pick (O(n²) over a full drain; the PR-4
+/// follow-up). Stamps encode deque order: `push_back` stamps increase,
+/// `push_front` stamps decrease, so the set's minimum `(cost, stamp)` is
+/// exactly the FIRST queue element with minimal cost — the stable
+/// first-min tie-break `Scheduler::pick_next` specifies. `pick_next`
+/// stays as the executable reference semantics; the propcheck replays
+/// random push-front/pop traffic against it to pin the tie-break.
+///
+/// Costs are per task position and fixed for the queue's lifetime
+/// (`Scheduler::admission_cost` of every task, computed once per
+/// rollout), so requeued (preempted) tasks re-enter with their original
+/// cost — only their stamp (queue position) changes.
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    order: AdmissionOrder,
+    cost: Vec<usize>,
+    fifo: VecDeque<usize>,
+    sorted: BTreeSet<(usize, i64, usize)>,
+    front_stamp: i64,
+    back_stamp: i64,
+}
+
+impl AdmissionQueue {
+    /// Build a queue holding task positions `0..cost.len()` in order,
+    /// popped according to `order` over the per-position `cost` vector.
+    pub fn new(order: AdmissionOrder, cost: Vec<usize>) -> AdmissionQueue {
+        let n = cost.len();
+        let mut q = AdmissionQueue {
+            order,
+            cost,
+            fifo: VecDeque::with_capacity(n),
+            sorted: BTreeSet::new(),
+            front_stamp: -1,
+            back_stamp: 0,
+        };
+        for pos in 0..n {
+            q.push_back(pos);
+        }
+        q
+    }
+
+    pub fn len(&self) -> usize {
+        match self.order {
+            AdmissionOrder::Fifo => self.fifo.len(),
+            AdmissionOrder::ShortestFirst => self.sorted.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn cost_of(&self, pos: usize) -> usize {
+        self.cost.get(pos).copied().unwrap_or(usize::MAX)
+    }
+
+    fn push_back(&mut self, pos: usize) {
+        match self.order {
+            AdmissionOrder::Fifo => self.fifo.push_back(pos),
+            AdmissionOrder::ShortestFirst => {
+                let stamp = self.back_stamp;
+                self.back_stamp += 1;
+                self.sorted.insert((self.cost_of(pos), stamp, pos));
+            }
+        }
+    }
+
+    /// Requeue a task at the queue head (preemption path): among equal
+    /// costs it now wins the next pick, exactly like the old
+    /// `VecDeque::push_front` + first-min scan.
+    pub fn push_front(&mut self, pos: usize) {
+        match self.order {
+            AdmissionOrder::Fifo => self.fifo.push_front(pos),
+            AdmissionOrder::ShortestFirst => {
+                let stamp = self.front_stamp;
+                self.front_stamp -= 1;
+                self.sorted.insert((self.cost_of(pos), stamp, pos));
+            }
+        }
+    }
+
+    /// The task position the engine should try to admit next (`None` iff
+    /// empty); `pop` removes exactly this element.
+    pub fn peek(&self) -> Option<usize> {
+        match self.order {
+            AdmissionOrder::Fifo => self.fifo.front().copied(),
+            AdmissionOrder::ShortestFirst => self.sorted.first().map(|&(_, _, pos)| pos),
+        }
+    }
+
+    /// Remove and return the element `peek` reported.
+    pub fn pop(&mut self) -> Option<usize> {
+        match self.order {
+            AdmissionOrder::Fifo => self.fifo.pop_front(),
+            AdmissionOrder::ShortestFirst => self.sorted.pop_first().map(|(_, _, pos)| pos),
+        }
+    }
+}
 
 /// One scheduled chunk: which pending items occupy which decode slots.
 #[derive(Debug, Clone)]
@@ -199,11 +302,11 @@ impl Scheduler {
     /// queue order, so uniform-cost queues degrade to exact fifo
     /// behavior).
     ///
-    /// Shortest-first scans the queue per pick — O(n²) over a full
-    /// drain, fine at this repo's queue scales (≲ a few hundred) but a
-    /// sorted index would be the upgrade if queues grow by orders of
-    /// magnitude (it must preserve the stable first-min tie-break the
-    /// equivalence tests replay).
+    /// This linear scan is the executable REFERENCE semantics. The
+    /// production engines pop through [`AdmissionQueue`], whose sorted
+    /// index gives the same stable first-min order in O(log n) per
+    /// operation — the propcheck below replays random queue traffic
+    /// through both and requires identical pick sequences.
     pub fn pick_next(&self, queue: &VecDeque<usize>, cost: &[usize]) -> Option<usize> {
         match self.order {
             AdmissionOrder::Fifo => {
@@ -829,6 +932,101 @@ mod tests {
         assert_eq!(sjf.admission_cost(10, 20), 31);
         assert_eq!(sjf.admission_cost(90, 20), 111);
         assert!(sjf.admission_cost(80, 20) < sjf.admission_cost(90, 20));
+    }
+
+    /// The reference pop: `pick_next` over a plain deque (the pre-index
+    /// semantics the sorted AdmissionQueue must reproduce exactly).
+    fn reference_pop(sched: &Scheduler, q: &mut VecDeque<usize>, cost: &[usize]) -> Option<usize> {
+        let qi = sched.pick_next(q, cost)?;
+        let pos = q[qi];
+        q.remove(qi);
+        Some(pos)
+    }
+
+    #[test]
+    fn admission_queue_pins_stable_first_min_tie_break() {
+        // costs by task position: three cost-3 ties (tasks 1, 2, 3)
+        let cost = vec![5usize, 3, 3, 3, 5, 1];
+        let mut q = AdmissionQueue::new(AdmissionOrder::ShortestFirst, cost.clone());
+        assert_eq!(q.len(), 6);
+        // global min first, then the tie group in queue order
+        assert_eq!(q.peek(), Some(5));
+        assert_eq!(q.pop(), Some(5));
+        assert_eq!(q.pop(), Some(1), "first of the cost-3 tie group");
+        // a preempted task requeued at the head wins its tie group again
+        q.push_front(1);
+        assert_eq!(q.pop(), Some(1), "push_front must win equal-cost ties");
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(0), "cost-5 ties keep original queue order");
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+
+        // fifo mode ignores costs entirely
+        let mut f = AdmissionQueue::new(AdmissionOrder::Fifo, cost);
+        f.push_front(4);
+        assert_eq!(f.pop(), Some(4));
+        assert_eq!(f.pop(), Some(0));
+        assert_eq!(f.pop(), Some(1));
+    }
+
+    #[test]
+    fn prop_admission_queue_matches_pick_next_reference() {
+        // Random pop / push_front traffic (the only operations the
+        // engines perform) over heavily tied cost vectors: the sorted
+        // index must emit exactly the reference scan's pick sequence, in
+        // both admission orders.
+        propcheck::quick("admission-queue-oracle", |rng, size| {
+            let n = 1 + rng.below(4 + size);
+            // few distinct costs -> many ties -> the tie-break is what's
+            // actually under test
+            let cost: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+            for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
+                let sched = mk(4, 100).with_order(order);
+                let mut q = AdmissionQueue::new(order, cost.clone());
+                let mut reference: VecDeque<usize> = (0..n).collect();
+                let mut popped: Vec<usize> = Vec::new();
+                for _ in 0..(2 * n + 10) {
+                    if !popped.is_empty() && rng.chance(0.3) {
+                        // requeue a random previously-popped task (the
+                        // preemption path)
+                        let pos = popped.swap_remove(rng.below(popped.len()));
+                        q.push_front(pos);
+                        reference.push_front(pos);
+                    } else {
+                        let got = q.pop();
+                        let want = reference_pop(&sched, &mut reference, &cost);
+                        if got != want {
+                            return Err(format!(
+                                "{}: index popped {got:?}, reference {want:?} (cost {cost:?})",
+                                order.label()
+                            ));
+                        }
+                        if let Some(pos) = got {
+                            popped.push(pos);
+                        }
+                    }
+                    if q.len() != reference.len() {
+                        return Err(format!(
+                            "len diverged: index {} vs reference {}",
+                            q.len(),
+                            reference.len()
+                        ));
+                    }
+                }
+                // full drain must also agree
+                while let Some(want) = reference_pop(&sched, &mut reference, &cost) {
+                    if q.pop() != Some(want) {
+                        return Err("drain order diverged".into());
+                    }
+                }
+                if q.pop().is_some() {
+                    return Err("index longer than reference".into());
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

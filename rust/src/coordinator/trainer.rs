@@ -65,6 +65,12 @@ pub struct StepReport {
     /// Pending refills adopted from a peer lane by a drained worker
     /// (pipelined engine with `steal = on`; 0 otherwise).
     pub steals: usize,
+    /// Slot prefills handed to the dedicated prefill-executor thread
+    /// (pipelined engine with `prefill = async`; 0 otherwise).
+    pub async_prefills: usize,
+    /// Peak submitted-but-not-yet-joined async prefills (the executor
+    /// pipeline's occupancy high-water; 0 under sync).
+    pub async_prefill_inflight_peak: usize,
     /// Peak KV page occupancy in [0, 1] during the step's rollouts.
     pub kv_page_occupancy: f64,
     /// Peak concurrently occupied decode slots (admitted width).
@@ -137,7 +143,8 @@ impl<'a> Trainer<'a> {
         let g = self.cfg.train.group_size;
         let n = task_indices.len() * g;
         let rollout = RolloutEngine::new(self.engine, self.cfg.mode, self.cfg.sampling)
-            .with_steal(self.cfg.steal);
+            .with_steal(self.cfg.steal)
+            .with_prefill(self.cfg.prefill);
         let mut scheduler = Scheduler::new(&self.engine.manifest, self.cfg.mode.is_sparse())
             .with_admission(self.cfg.memory.admission)
             .with_headroom(self.cfg.memory.kv_admit_headroom_pages)
@@ -347,6 +354,8 @@ impl<'a> Trainer<'a> {
             refills: rstats.refills,
             preemptions: rstats.preemptions,
             steals: rstats.steals,
+            async_prefills: rstats.async_prefills_submitted,
+            async_prefill_inflight_peak: rstats.async_prefill_inflight_peak,
             kv_page_occupancy: if self.kv.total_pages() == 0 {
                 0.0
             } else {
@@ -379,6 +388,11 @@ impl<'a> Trainer<'a> {
         self.metrics.push("refills", report.refills as f64);
         self.metrics.push("preemptions", report.preemptions as f64);
         self.metrics.push("steals", report.steals as f64);
+        self.metrics.push("async_prefills", report.async_prefills as f64);
+        self.metrics.push(
+            "async_prefill_inflight_peak",
+            report.async_prefill_inflight_peak as f64,
+        );
         self.metrics.push("kv_page_occupancy", report.kv_page_occupancy);
         // page-padding overhead at the rollout's residency peak (0 at
         // page size 1 or when nothing was resident)

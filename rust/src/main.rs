@@ -40,6 +40,7 @@ fn usage() -> ! {
   eval:     --checkpoint ckpt --mode <...> [--bench name] [--limit N]
             [--engine static|continuous|pipelined] [--rollout-workers N]
             [--steal on|off] [--admission-order fifo|shortest-first]
+            [--prefill sync|async]
             [--admission worst-case|paged] [--kv-admit-headroom-pages N]
             [--kv-page-tokens N] [--global-kv-tokens N]
   rollout:  --checkpoint ckpt --mode <...> [--n 4] [--temperature T]"
@@ -155,6 +156,7 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
         "rollout-workers",
         "steal",
         "admission-order",
+        "prefill",
         "admission",
         "kv-admit-headroom-pages",
         "kv-page-tokens",
@@ -170,6 +172,7 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
         rollout_workers: cfg.rollout_workers,
         steal: cfg.steal,
         admission_order: cfg.admission_order,
+        prefill: cfg.prefill,
     };
     match args.opt("bench") {
         Some(name) => {

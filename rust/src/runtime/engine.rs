@@ -266,15 +266,19 @@ impl ModelEngine {
     /// slot's state untouched (continuous batching's slot recycling).
     /// Returns the slot's last-prompt-token log-probs `[V]`.
     ///
-    /// The AOT artifact set only ships a full-batch prefill, so this runs
-    /// it on a scratch batch carrying `prompt` in the target slot and
-    /// splices that slot's planes (kv / stats / birth) into `cache` with a
-    /// host round-trip. Correctness rests on batch-row independence: a
-    /// slot's prefill output is bit-identical regardless of what occupies
-    /// the other rows (each row attends only to its own cache), which the
-    /// artifact-gated integration tests assert. The round-trip copies the
-    /// whole cache through host memory — acceptable for correctness-first;
-    /// a fused dynamic-update-slice prefill entry is a ROADMAP follow-up.
+    /// Two implementations, selected by the manifest:
+    ///
+    /// * **Fused** (`prefill_slot_<variant>` entry present): one device
+    ///   call takes the live cache, a slot mask, and the scratch prompt
+    ///   batch, and writes the slot's planes in-graph (a masked
+    ///   dynamic-update-slice-style select on the slot axis) — no host
+    ///   round-trip at all.
+    /// * **Fallback** (older artifact sets): a scratch-batch prefill plus
+    ///   a host-side plane splice (`prepare_slot_prefill` +
+    ///   `splice_slot`). Correctness rests on batch-row independence: a
+    ///   slot's prefill output is bit-identical regardless of what
+    ///   occupies the other rows (each row attends only to its own
+    ///   cache), which the artifact-gated integration tests assert.
     pub fn prefill_slot(
         &self,
         params: &ParamsLit,
@@ -284,35 +288,195 @@ impl ModelEngine {
     ) -> Result<Vec<f32>> {
         let s = &self.manifest.shapes;
         let c = &self.manifest.config;
-        let (r, p_len, vocab) = (s.decode_batch, c.prompt_len, c.vocab);
+        let (r, p_len) = (s.decode_batch, c.prompt_len);
         if slot >= r {
             bail!("prefill_slot: slot {slot} out of range (R = {r})");
         }
         if prompt.is_empty() || prompt.len() > p_len {
             bail!("prefill_slot: prompt length {} not in 1..={p_len}", prompt.len());
         }
-        // Scratch batch: the prompt in the target slot; other rows hold a
-        // minimal valid row (their planes are discarded by the splice, and
-        // row independence means their content cannot leak into ours).
-        let mut ids = vec![prompt[0]; r * p_len];
-        let mut plens = vec![1i32; r];
-        ids[slot * p_len..slot * p_len + prompt.len()].copy_from_slice(prompt);
-        plens[slot] = prompt.len() as i32;
-        let (fresh, logp) = self.prefill(cache.variant, params, &ids, &plens)?;
+        let entry = fused_prefill_entry(cache.variant);
+        if self.manifest.has_entry(&entry) {
+            return self.prefill_slot_fused(&entry, params, cache, slot, prompt);
+        }
+        let (fresh, logp) = self.prepare_slot_prefill(params, cache.variant, prompt)?;
+        self.splice_slot(cache, &fresh, 0, slot)?;
+        Ok(logp)
+    }
 
-        // Splice the target slot's planes from the fresh cache into the
-        // live one. Layouts (slot axis = R): kv [L,2,R,H,C,Dh],
-        // stats/birth [L,R,H,C].
-        let (l, h, dh, cap) = (c.n_layers, c.n_heads, c.d_head, cache.capacity);
-        splice_f32(&mut cache.kv, &fresh.kv, l * 2, r, h * cap * dh, slot,
-            &[l, 2, r, h, cap, dh])?;
-        splice_f32(&mut cache.stats_cum, &fresh.stats_cum, l, r, h * cap, slot,
-            &[l, r, h, cap])?;
-        splice_f32(&mut cache.stats_win, &fresh.stats_win, l, r, h * cap, slot,
-            &[l, r, h, cap])?;
-        splice_i32(&mut cache.birth, &fresh.birth, l, r, h * cap, slot,
-            &[l, r, h, cap])?;
+    /// Fused slot-masked prefill: the whole recycling write is one device
+    /// call on the `prefill_slot_<variant>` entry — the live cache flows
+    /// in as literals, the entry prefills the scratch prompt batch and
+    /// selects the masked slot's fresh planes in-graph, and the updated
+    /// cache flows straight back out. No host copies of any cache plane.
+    fn prefill_slot_fused(
+        &self,
+        entry: &str,
+        params: &ParamsLit,
+        cache: &mut CacheState,
+        slot: usize,
+        prompt: &[i32],
+    ) -> Result<Vec<f32>> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let (r, p_len, vocab) = (s.decode_batch, c.prompt_len, c.vocab);
+        let (ids, plens) = scratch_prompt_batch(r, p_len, slot, prompt);
+        let mut mask = vec![0.0f32; r];
+        mask[slot] = 1.0;
+        let exe = self.exe(entry)?;
+        let ids_l = HostTensor::i32(ids, &[r, p_len]).to_literal()?;
+        let lens_l = HostTensor::i32(plens, &[r]).to_literal()?;
+        let mask_l = HostTensor::f32(mask, &[r]).to_literal()?;
+        let out = exe.run_literals(&[
+            &params.0,
+            &cache.kv,
+            &cache.stats_cum,
+            &cache.stats_win,
+            &cache.birth,
+            &ids_l,
+            &lens_l,
+            &mask_l,
+        ])?;
+        let mut it = out.into_iter();
+        cache.kv = it.next().unwrap();
+        cache.stats_cum = it.next().unwrap();
+        cache.stats_win = it.next().unwrap();
+        cache.birth = it.next().unwrap();
+        let logp = it
+            .next()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("prefill_slot_fused logp: {e:?}"))?;
         Ok(logp[slot * vocab..(slot + 1) * vocab].to_vec())
+    }
+
+    /// Cache-independent half of a slot prefill: run the batched prefill
+    /// on a scratch batch carrying `prompt` in ROW 0 and return the fresh
+    /// cache plus row 0's last-prompt-token log-probs `[V]`.
+    ///
+    /// Batch-row independence makes row 0's planes identical to what the
+    /// prompt would produce in any slot, so `splice_slot` can land them
+    /// anywhere. Crucially, this touches no live rollout state — it is
+    /// what the async prefill executor runs on its own backend, off the
+    /// decode workers, while they keep decoding.
+    pub fn prepare_slot_prefill(
+        &self,
+        params: &ParamsLit,
+        variant: Variant,
+        prompt: &[i32],
+    ) -> Result<(CacheState, Vec<f32>)> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let (r, p_len, vocab) = (s.decode_batch, c.prompt_len, c.vocab);
+        if prompt.is_empty() || prompt.len() > p_len {
+            bail!(
+                "prepare_slot_prefill: prompt length {} not in 1..={p_len}",
+                prompt.len()
+            );
+        }
+        let (ids, plens) = scratch_prompt_batch(r, p_len, 0, prompt);
+        let (fresh, logp) = self.prefill(variant, params, &ids, &plens)?;
+        Ok((fresh, logp[..vocab].to_vec()))
+    }
+
+    /// Extract `slot`'s cache planes from `cache` into a compact
+    /// [`SlotPlanes`] (host round-trip). Together with `implant_slot`
+    /// this is the transferable form of one slot's state: the async
+    /// prefill executor ships exactly one slot's planes to the owning
+    /// worker instead of a whole R-slot scratch cache (1/R-th of the
+    /// bytes held per in-flight prefill).
+    pub fn extract_slot(&self, cache: &CacheState, slot: usize) -> Result<SlotPlanes> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let (l, r, h, dh) = (c.n_layers, s.decode_batch, c.n_heads, c.d_head);
+        let cap = cache.capacity;
+        if slot >= r {
+            bail!("extract_slot: slot {slot} out of range (R = {r})");
+        }
+        Ok(SlotPlanes {
+            kv: extract_f32(&cache.kv, l * 2, r, h * cap * dh, slot)?,
+            stats_cum: extract_f32(&cache.stats_cum, l, r, h * cap, slot)?,
+            stats_win: extract_f32(&cache.stats_win, l, r, h * cap, slot)?,
+            birth: extract_i32(&cache.birth, l, r, h * cap, slot)?,
+            capacity: cap,
+            variant: cache.variant,
+        })
+    }
+
+    /// Write compact `planes` into `slot` of `cache` (host round-trip) —
+    /// the adjoint of `extract_slot`: implanting what `extract_slot`
+    /// read leaves the slot exactly as a `splice_slot` from the source
+    /// cache would (unit-tested below; the async apply path relies on
+    /// it).
+    pub fn implant_slot(
+        &self,
+        cache: &mut CacheState,
+        slot: usize,
+        planes: &SlotPlanes,
+    ) -> Result<()> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let (l, r, h, dh) = (c.n_layers, s.decode_batch, c.n_heads, c.d_head);
+        let cap = cache.capacity;
+        if planes.capacity != cap || planes.variant != cache.variant {
+            bail!(
+                "implant_slot: plane mismatch ({:?}/{} vs {:?}/{})",
+                planes.variant,
+                planes.capacity,
+                cache.variant,
+                cap
+            );
+        }
+        if slot >= r {
+            bail!("implant_slot: slot {slot} out of range (R = {r})");
+        }
+        implant_f32(&mut cache.kv, &planes.kv, l * 2, r, h * cap * dh, slot,
+            &[l, 2, r, h, cap, dh])?;
+        implant_f32(&mut cache.stats_cum, &planes.stats_cum, l, r, h * cap, slot,
+            &[l, r, h, cap])?;
+        implant_f32(&mut cache.stats_win, &planes.stats_win, l, r, h * cap, slot,
+            &[l, r, h, cap])?;
+        implant_i32(&mut cache.birth, &planes.birth, l, r, h * cap, slot,
+            &[l, r, h, cap])?;
+        Ok(())
+    }
+
+    /// Copy `src_slot`'s cache planes (kv / stats / birth) from `src`
+    /// into `dst_slot` of `dst` through a host round-trip — the portable
+    /// slot write behind the non-fused `prefill_slot` fallback. Layouts
+    /// (slot axis = R): kv [L,2,R,H,C,Dh], stats/birth [L,R,H,C].
+    pub fn splice_slot(
+        &self,
+        dst: &mut CacheState,
+        src: &CacheState,
+        src_slot: usize,
+        dst_slot: usize,
+    ) -> Result<()> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let (l, r, h, dh) = (c.n_layers, s.decode_batch, c.n_heads, c.d_head);
+        let cap = dst.capacity;
+        if src.capacity != cap || src.variant != dst.variant {
+            bail!(
+                "splice_slot: cache mismatch ({:?}/{} vs {:?}/{})",
+                src.variant,
+                src.capacity,
+                dst.variant,
+                cap
+            );
+        }
+        if src_slot >= r || dst_slot >= r {
+            bail!("splice_slot: slot {src_slot}->{dst_slot} out of range (R = {r})");
+        }
+        splice_f32(&mut dst.kv, &src.kv, l * 2, r, h * cap * dh, src_slot, dst_slot,
+            &[l, 2, r, h, cap, dh])?;
+        splice_f32(&mut dst.stats_cum, &src.stats_cum, l, r, h * cap, src_slot, dst_slot,
+            &[l, r, h, cap])?;
+        splice_f32(&mut dst.stats_win, &src.stats_win, l, r, h * cap, src_slot, dst_slot,
+            &[l, r, h, cap])?;
+        splice_i32(&mut dst.birth, &src.birth, l, r, h * cap, src_slot, dst_slot,
+            &[l, r, h, cap])?;
+        Ok(())
     }
 
     /// One decode step over the batch; returns log-probs [R, V] flattened
@@ -498,21 +662,65 @@ impl ModelEngine {
     }
 }
 
-/// Copy slot `slot`'s plane from `src` into `dst` for a tensor whose
-/// row-major layout is [outer.., R, plane..]: `outer` leading blocks, each
-/// holding R slot planes of `plane` elements (the slot axis of every cache
-/// tensor). Host round-trip; see `prefill_slot`. One macro-generated body
-/// per element type so the bounds/copy logic cannot drift between the f32
-/// (kv/stats) and i32 (birth) variants.
+/// THE scratch prompt batch of the artifact-path slot prefills (fused
+/// entry and prepare-for-splice alike): `prompt` in row `slot`, every
+/// other row a minimal valid single-token row (`prompt[0]` filler — its
+/// planes are discarded by the mask/splice, and batch-row independence
+/// keeps its content out of the target row). One implementation so the
+/// two call sites cannot drift.
+fn scratch_prompt_batch(
+    r: usize,
+    p_len: usize,
+    slot: usize,
+    prompt: &[i32],
+) -> (Vec<i32>, Vec<i32>) {
+    let mut ids = vec![prompt[0]; r * p_len];
+    let mut plens = vec![1i32; r];
+    ids[slot * p_len..slot * p_len + prompt.len()].copy_from_slice(prompt);
+    plens[slot] = prompt.len() as i32;
+    (ids, plens)
+}
+
+/// One decode slot's cache planes, host-side and compact ([outer, plane]
+/// row-major per tensor — the R axis removed). The unit a slot's state
+/// travels in between backends: `ModelEngine::extract_slot` produces it,
+/// `implant_slot` lands it, and the async prefill executor's prepared
+/// payload carries exactly one of these instead of a full R-slot cache.
+pub struct SlotPlanes {
+    kv: Vec<f32>,
+    stats_cum: Vec<f32>,
+    stats_win: Vec<f32>,
+    birth: Vec<i32>,
+    capacity: usize,
+    variant: Variant,
+}
+
+/// Manifest entry name of the fused slot-masked prefill for `variant`
+/// (`prefill_slot_dense` / `prefill_slot_sparse`). `prefill_slot`
+/// dispatches on `Manifest::has_entry` of this name: artifact sets built
+/// before the entry existed simply lack it and fall back to the
+/// scratch-batch host splice.
+pub fn fused_prefill_entry(variant: Variant) -> String {
+    format!("prefill_slot_{}", variant.name())
+}
+
+/// Copy slot `src_slot`'s plane from `src` into slot `dst_slot` of `dst`
+/// for a tensor whose row-major layout is [outer.., R, plane..]: `outer`
+/// leading blocks, each holding R slot planes of `plane` elements (the
+/// slot axis of every cache tensor). Host round-trip; see `splice_slot`.
+/// One macro-generated body per element type so the bounds/copy logic
+/// cannot drift between the f32 (kv/stats) and i32 (birth) variants.
 macro_rules! splice_plane {
     ($name:ident, $ty:ty) => {
+        #[allow(clippy::too_many_arguments)]
         fn $name(
             dst: &mut xla::Literal,
             src: &xla::Literal,
             outer: usize,
             r: usize,
             plane: usize,
-            slot: usize,
+            src_slot: usize,
+            dst_slot: usize,
             dims: &[usize],
         ) -> Result<()> {
             let mut d = dst
@@ -530,8 +738,9 @@ macro_rules! splice_plane {
                 );
             }
             for o in 0..outer {
-                let base = (o * r + slot) * plane;
-                d[base..base + plane].copy_from_slice(&s[base..base + plane]);
+                let sbase = (o * r + src_slot) * plane;
+                let dbase = (o * r + dst_slot) * plane;
+                d[dbase..dbase + plane].copy_from_slice(&s[sbase..sbase + plane]);
             }
             let dims_i64: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
             *dst = xla::Literal::vec1(&d).reshape(&dims_i64)?;
@@ -542,3 +751,193 @@ macro_rules! splice_plane {
 
 splice_plane!(splice_f32, f32);
 splice_plane!(splice_i32, i32);
+
+/// Extract/implant one slot's plane as a compact [outer, plane] buffer
+/// for a tensor laid out [outer.., R, plane..] — the splice split into
+/// its read and write halves, so a single slot's state can travel
+/// without the other R-1 slots (see `SlotPlanes`). Same macro discipline
+/// as `splice_plane`: one body per element type.
+macro_rules! slot_plane_ops {
+    ($ext:ident, $imp:ident, $ty:ty) => {
+        fn $ext(
+            src: &xla::Literal,
+            outer: usize,
+            r: usize,
+            plane: usize,
+            slot: usize,
+        ) -> Result<Vec<$ty>> {
+            let s = src
+                .to_vec::<$ty>()
+                .map_err(|e| anyhow::anyhow!("extract src: {e:?}"))?;
+            if s.len() != outer * r * plane {
+                bail!("extract: layout mismatch ({} != {})", s.len(), outer * r * plane);
+            }
+            let mut out = Vec::with_capacity(outer * plane);
+            for o in 0..outer {
+                let base = (o * r + slot) * plane;
+                out.extend_from_slice(&s[base..base + plane]);
+            }
+            Ok(out)
+        }
+
+        fn $imp(
+            dst: &mut xla::Literal,
+            compact: &[$ty],
+            outer: usize,
+            r: usize,
+            plane: usize,
+            slot: usize,
+            dims: &[usize],
+        ) -> Result<()> {
+            let mut d = dst
+                .to_vec::<$ty>()
+                .map_err(|e| anyhow::anyhow!("implant dst: {e:?}"))?;
+            if d.len() != outer * r * plane || compact.len() != outer * plane {
+                bail!(
+                    "implant: layout mismatch (dst {}, compact {}, expect {}/{})",
+                    d.len(),
+                    compact.len(),
+                    outer * r * plane,
+                    outer * plane
+                );
+            }
+            for o in 0..outer {
+                let base = (o * r + slot) * plane;
+                d[base..base + plane].copy_from_slice(&compact[o * plane..(o + 1) * plane]);
+            }
+            let dims_i64: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+            *dst = xla::Literal::vec1(&d).reshape(&dims_i64)?;
+            Ok(())
+        }
+    };
+}
+
+slot_plane_ops!(extract_f32, implant_f32, f32);
+slot_plane_ops!(extract_i32, implant_i32, i32);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Manifest, ModelDims, RolloutDims};
+    use std::path::PathBuf;
+
+    fn bare_manifest(entries: &[&str]) -> Manifest {
+        // Only `entries` matters for the fused-prefill dispatch; the rest
+        // is a minimal well-formed shell (tests never execute anything).
+        let mut map = BTreeMap::new();
+        for name in entries {
+            map.insert(
+                name.to_string(),
+                crate::runtime::manifest::EntrySpec {
+                    name: name.to_string(),
+                    file: PathBuf::from(format!("{name}.hlo.txt")),
+                    inputs: vec![],
+                    outputs: vec![],
+                },
+            );
+        }
+        Manifest {
+            dir: PathBuf::from("test-artifacts"),
+            config: ModelDims {
+                name: "unit".into(),
+                vocab: 32,
+                d_model: 8,
+                n_layers: 1,
+                n_heads: 1,
+                d_ff: 16,
+                d_head: 8,
+                max_seq: 32,
+                prompt_len: 8,
+                n_params: 0,
+            },
+            shapes: RolloutDims {
+                decode_batch: 2,
+                train_batch: 2,
+                budget: 8,
+                buffer: 4,
+                alpha: 2,
+                lam: 0.1,
+                sinks: 2,
+                sparse_capacity: 12,
+                dense_capacity: 32,
+            },
+            params: vec![],
+            entries: map,
+        }
+    }
+
+    #[test]
+    fn fused_prefill_dispatch_is_manifest_gated() {
+        // the dispatch rule `prefill_slot` implements: fused entry when
+        // the manifest carries it, scratch-batch splice fallback when not
+        assert_eq!(fused_prefill_entry(Variant::Dense), "prefill_slot_dense");
+        assert_eq!(fused_prefill_entry(Variant::Sparse), "prefill_slot_sparse");
+        let old = bare_manifest(&["prefill_dense", "decode_dense"]);
+        assert!(!old.has_entry(&fused_prefill_entry(Variant::Dense)));
+        assert!(!old.has_entry(&fused_prefill_entry(Variant::Sparse)));
+        let new = bare_manifest(&[
+            "prefill_dense",
+            "decode_dense",
+            "prefill_slot_dense",
+            "prefill_slot_sparse",
+        ]);
+        assert!(new.has_entry(&fused_prefill_entry(Variant::Dense)));
+        assert!(new.has_entry(&fused_prefill_entry(Variant::Sparse)));
+    }
+
+    #[test]
+    fn splice_plane_copies_across_slots() {
+        // layout [outer=2, R=3, plane=2]: slot planes must move between
+        // slot positions without touching any other slot
+        let dims = [2usize, 3, 2];
+        let src_data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let dst_data = vec![-1.0f32; 12];
+        let dims_i64: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+        let src = xla::Literal::vec1(&src_data).reshape(&dims_i64).unwrap();
+        let mut dst = xla::Literal::vec1(&dst_data).reshape(&dims_i64).unwrap();
+        splice_f32(&mut dst, &src, 2, 3, 2, 0, 2, &dims).unwrap();
+        let out = dst.to_vec::<f32>().unwrap();
+        // outer 0: src slot 0 = [0,1] lands in dst slot 2; outer 1: src
+        // slot 0 = [6,7] lands in dst slot 2; everything else untouched
+        assert_eq!(
+            out,
+            vec![-1.0, -1.0, -1.0, -1.0, 0.0, 1.0, -1.0, -1.0, -1.0, -1.0, 6.0, 7.0]
+        );
+        // same-slot splice reproduces the original behavior
+        let mut dst2 = xla::Literal::vec1(&dst_data).reshape(&dims_i64).unwrap();
+        splice_f32(&mut dst2, &src, 2, 3, 2, 1, 1, &dims).unwrap();
+        let out2 = dst2.to_vec::<f32>().unwrap();
+        assert_eq!(
+            out2,
+            vec![-1.0, -1.0, 2.0, 3.0, -1.0, -1.0, -1.0, -1.0, 8.0, 9.0, -1.0, -1.0]
+        );
+    }
+
+    #[test]
+    fn extract_then_implant_equals_splice() {
+        // the async payload path (extract a slot's compact planes, implant
+        // them elsewhere) must land exactly what a direct cross-slot
+        // splice would — the contract apply_prefill rests on
+        let dims = [2usize, 3, 2];
+        let dims_i64: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+        let src_data: Vec<f32> = (0..12).map(|x| x as f32 + 0.5).collect();
+        let dst_data = vec![-7.0f32; 12];
+        let src = xla::Literal::vec1(&src_data).reshape(&dims_i64).unwrap();
+
+        // compact planes of slot 1: [outer, plane] = [[2.5,3.5],[8.5,9.5]]
+        let compact = extract_f32(&src, 2, 3, 2, 1).unwrap();
+        assert_eq!(compact, vec![2.5, 3.5, 8.5, 9.5]);
+
+        let mut via_implant = xla::Literal::vec1(&dst_data).reshape(&dims_i64).unwrap();
+        implant_f32(&mut via_implant, &compact, 2, 3, 2, 0, &dims).unwrap();
+        let mut via_splice = xla::Literal::vec1(&dst_data).reshape(&dims_i64).unwrap();
+        splice_f32(&mut via_splice, &src, 2, 3, 2, 1, 0, &dims).unwrap();
+        assert_eq!(
+            via_implant.to_vec::<f32>().unwrap(),
+            via_splice.to_vec::<f32>().unwrap()
+        );
+        // shape mismatches are loud, not silent
+        assert!(implant_f32(&mut via_implant, &compact[..2], 2, 3, 2, 0, &dims).is_err());
+        assert!(extract_f32(&src, 2, 4, 2, 1).is_err());
+    }
+}

@@ -227,6 +227,14 @@ impl Manifest {
         Ok(())
     }
 
+    /// Whether the artifact set ships entry point `name`. Optional entries
+    /// (e.g. the fused slot-masked prefill, `prefill_slot_<variant>`) are
+    /// feature-gated on this: artifacts built before an entry existed
+    /// simply lack it and the engine falls back to the portable path.
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
     pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
         self.entries
             .get(name)

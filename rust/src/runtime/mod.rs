@@ -11,6 +11,9 @@ pub mod manifest;
 pub mod params;
 pub mod tensor;
 
-pub use engine::{CacheState, Hyp, Method, ModelEngine, ParamsLit, TrainState, TrainStats, Variant};
+pub use engine::{
+    fused_prefill_entry, CacheState, Hyp, Method, ModelEngine, ParamsLit, SlotPlanes, TrainState,
+    TrainStats, Variant,
+};
 pub use manifest::Manifest;
 pub use tensor::HostTensor;

@@ -24,13 +24,17 @@
 //! 4. **Pipelined equivalence** — the pipelined worker-pool engine is
 //!    token-identical to continuous (and static) for every task over the
 //!    full grid {workers 1/2/4} × {steal on/off} × {fifo,
-//!    shortest-first} (override the counts with `ROLLOUT_WORKERS=n`),
-//!    its slot-step accounting obeys the shared denominator contract
-//!    (`occupied + idle == decode_steps * slots`), and a
-//!    preemption-heavy multi-worker run on a tiny paged wall — with and
-//!    without stealing — neither deadlocks nor leaks a page.
+//!    shortest-first} × {prefill sync/async} (override the counts with
+//!    `ROLLOUT_WORKERS=n`; async runs a REAL prefill-executor thread
+//!    against the mock), its slot-step accounting obeys the shared
+//!    denominator contract (`occupied + idle == decode_steps * slots`),
+//!    and a preemption-heavy multi-worker run on a tiny paged wall —
+//!    with and without stealing, in both prefill modes — neither
+//!    deadlocks nor leaks a page.
 
-use sparse_rl::config::{AdmissionOrder, AdmissionPolicy, RolloutMode, SamplingConfig};
+use sparse_rl::config::{
+    AdmissionOrder, AdmissionPolicy, PrefillMode, RolloutMode, SamplingConfig,
+};
 use sparse_rl::coordinator::{
     CostModel, GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy,
     RolloutStats, Scheduler,
@@ -112,7 +116,9 @@ fn run_continuous(
 }
 
 /// Run the pipelined engine with `workers` lanes (one cloned backend
-/// each) over the shared scheduler/wall.
+/// each) over the shared scheduler/wall. When the policy selects
+/// `prefill = async`, a real executor thread runs on one extra backend
+/// clone — the physical delivery path is under test, not simulated.
 #[allow(clippy::too_many_arguments)]
 fn run_pipelined(
     policy: &RolloutPolicy,
@@ -125,9 +131,16 @@ fn run_pipelined(
 ) -> Result<(Vec<GenSeq>, RolloutStats), String> {
     let mut backends: Vec<MockModelBackend> = (0..workers).map(|_| proto.clone()).collect();
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
-    policy
-        .rollout_pipelined(&mut backends, &flat, seed, sched, kv, 0)
-        .map_err(|e| e.to_string())
+    if policy.prefill.is_async() {
+        let mut exec = proto.clone();
+        policy
+            .rollout_pipelined(&mut backends, Some(&mut exec), &flat, seed, sched, kv, 0)
+            .map_err(|e| e.to_string())
+    } else {
+        policy
+            .rollout_pipelined(&mut backends, None, &flat, seed, sched, kv, 0)
+            .map_err(|e| e.to_string())
+    }
 }
 
 fn seqs_equal(a: &GenSeq, b: &GenSeq) -> Result<(), String> {
@@ -498,20 +511,23 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
             }
 
             // the full pipelined grid: every worker count, stealing on and
-            // off, both admission orders — tokens must never move
+            // off, both admission orders, both prefill modes (async runs a
+            // real executor thread) — tokens must never move
             for &workers in &counts {
                 for steal in [true, false] {
                     for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
+                    for prefill in [PrefillMode::Sync, PrefillMode::Async] {
                         let grid = format!(
-                            "w={workers} steal={steal} order={}",
-                            order.label()
+                            "w={workers} steal={steal} order={} prefill={}",
+                            order.label(),
+                            prefill.label()
                         );
                         let mut kv_p = KvMemoryManager::new(sc.kv_cap);
                         let mut sched_p =
                             mk_sched(sc.slots, sc.reserve).with_order(order);
                         let proto = sc.backend().with_costs(costs);
                         let (pipe_seqs, pipe_stats) = run_pipelined(
-                            &policy.with_steal(steal),
+                            &policy.with_steal(steal).with_prefill(prefill),
                             &proto,
                             &sc.tasks,
                             sc.seed,
@@ -601,6 +617,47 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
                                 workers * sc.slots
                             ));
                         }
+                        // prefill-executor bookkeeping: sync leaves the
+                        // counters untouched; async prepares every
+                        // submission exactly once (== total refills) and
+                        // the in-flight peak is bounded by submissions
+                        if prefill == PrefillMode::Sync {
+                            if pipe_stats.async_prefills_submitted != 0
+                                || pipe_stats.async_prefills_completed != 0
+                                || pipe_stats.async_prefill_inflight_peak != 0
+                            {
+                                return Err(format!(
+                                    "{grid}: sync mode touched executor counters"
+                                ));
+                            }
+                        } else {
+                            if pipe_stats.async_prefills_submitted
+                                != pipe_stats.async_prefills_completed
+                            {
+                                return Err(format!(
+                                    "{grid}: {} submitted but {} completed",
+                                    pipe_stats.async_prefills_submitted,
+                                    pipe_stats.async_prefills_completed
+                                ));
+                            }
+                            if pipe_stats.async_prefills_submitted != pipe_stats.refills {
+                                return Err(format!(
+                                    "{grid}: {} submissions != {} refills",
+                                    pipe_stats.async_prefills_submitted, pipe_stats.refills
+                                ));
+                            }
+                            if pipe_stats.async_prefill_inflight_peak
+                                > pipe_stats.async_prefills_submitted
+                                || (pipe_stats.refills > 0
+                                    && pipe_stats.async_prefill_inflight_peak == 0)
+                            {
+                                return Err(format!(
+                                    "{grid}: implausible in-flight peak {}",
+                                    pipe_stats.async_prefill_inflight_peak
+                                ));
+                            }
+                        }
+                    }
                     }
                 }
             }
@@ -647,13 +704,18 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
     for workers in worker_counts() {
         for steal in [true, false] {
             for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
-                let grid = format!("w={workers} steal={steal} order={}", order.label());
+            for prefill in [PrefillMode::Sync, PrefillMode::Async] {
+                let grid = format!(
+                    "w={workers} steal={steal} order={} prefill={}",
+                    order.label(),
+                    prefill.label()
+                );
                 let mut kv = KvMemoryManager::with_pages(kv_cap, page);
                 let mut sched = mk_sched(slots, reserve)
                     .with_admission(AdmissionPolicy::Paged)
                     .with_order(order);
                 let (seqs, stats) = run_pipelined(
-                    &policy.with_steal(steal),
+                    &policy.with_steal(steal).with_prefill(prefill),
                     &backend(),
                     &tasks,
                     seed,
@@ -684,11 +746,31 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
                 if !steal || workers == 1 {
                     assert_eq!(stats.steals, 0, "{grid}: steal fired when impossible");
                 }
+                // executor bookkeeping survives preempt/steal traffic:
+                // every async submission is prepared exactly once, and a
+                // preempted-then-requeued task resubmits (so submissions
+                // can exceed task count but always equal joins = refills)
+                if prefill == PrefillMode::Sync {
+                    assert_eq!(
+                        stats.async_prefills_submitted, 0,
+                        "{grid}: sync mode submitted to the executor"
+                    );
+                } else {
+                    assert_eq!(
+                        stats.async_prefills_submitted, stats.async_prefills_completed,
+                        "{grid}: executor lost a submission"
+                    );
+                    assert_eq!(
+                        stats.async_prefills_submitted, stats.refills,
+                        "{grid}: submissions must equal joined refills"
+                    );
+                }
                 assert!(
                     kv.peak_live_seqs <= workers * slots,
                     "{grid}: admitted width {} exceeds the pool's slot budget",
                     kv.peak_live_seqs
                 );
+            }
             }
         }
     }

@@ -144,6 +144,42 @@ fn continuous_engine_matches_static_on_real_artifacts() {
 }
 
 #[test]
+fn pipelined_async_prefill_matches_static_on_real_artifacts() {
+    // The real-model counterpart of the equivalence grid's prefill axis:
+    // the pipelined engine with the REAL async prefill-executor thread
+    // (prepare on the executor's EngineBackend, splice-apply on the
+    // worker's) must emit identical tokens to the static engine.
+    let Some(dir) = artifacts() else { return };
+    let engine = ModelEngine::load(&dir).unwrap();
+    for mode in [RolloutMode::Dense, RolloutMode::SparseRl(Method::RKv)] {
+        let mut ts = mk_trainer(&engine, mode);
+        let mut tp = mk_trainer(&engine, mode);
+        tp.cfg.engine = sparse_rl::config::EngineKind::Pipelined;
+        tp.cfg.rollout_workers = 2;
+        tp.cfg.prefill = sparse_rl::config::PrefillMode::Async;
+        let (stat_seqs, _) = ts.rollout_batch(&[0, 1, 2]).expect("static");
+        let (pipe_seqs, pstats) = tp.rollout_batch(&[0, 1, 2]).expect("pipelined async");
+        assert_eq!(stat_seqs.len(), pipe_seqs.len());
+        for (a, b) in stat_seqs.iter().zip(pipe_seqs.iter()) {
+            assert_eq!(
+                a.response_ids, b.response_ids,
+                "async pipelined diverged on task {} ({})",
+                a.task_idx,
+                mode.label()
+            );
+            assert_eq!(a.sampler_logp, b.sampler_logp, "logp diverged on task {}", a.task_idx);
+        }
+        assert_eq!(
+            pstats.async_prefills_submitted, pstats.async_prefills_completed,
+            "executor lost a submission ({})",
+            mode.label()
+        );
+        assert_eq!(ts.kv.reserved(), 0);
+        assert_eq!(tp.kv.reserved(), 0);
+    }
+}
+
+#[test]
 fn rl_step_runs_on_continuous_engine() {
     let Some(dir) = artifacts() else { return };
     let engine = ModelEngine::load(&dir).unwrap();

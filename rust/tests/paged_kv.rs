@@ -17,12 +17,12 @@
 //! 4. **Eval regressions** — an empty benchmark yields a zero-item result
 //!    (not NaN), and `evaluate_with_backend` is engine-agnostic: static,
 //!    continuous (worst-case and paged), and pipelined (several worker
-//!    counts) produce identical EvalResults.
+//!    counts, sync and async prefill) produce identical EvalResults.
 //! 5. **Admission headroom** — `kv-admit-headroom-pages` is
 //!    scheduling-only (token-identical) and damps the admit/preempt
 //!    thrash cycle under extreme pressure.
 
-use sparse_rl::config::{AdmissionPolicy, EngineKind, RolloutMode, SamplingConfig};
+use sparse_rl::config::{AdmissionPolicy, EngineKind, PrefillMode, RolloutMode, SamplingConfig};
 use sparse_rl::coordinator::{
     evaluate_with_backend, GenSeq, KvMemoryManager, MockModelBackend, RolloutPolicy,
     RolloutStats, Scheduler,
@@ -439,17 +439,23 @@ fn eval_is_engine_agnostic() {
     };
 
     let mut results = Vec::new();
-    for (kind, admission, page, lanes) in [
-        (EngineKind::Static, AdmissionPolicy::WorstCase, 1usize, 1usize),
-        (EngineKind::Continuous, AdmissionPolicy::WorstCase, 1, 1),
-        (EngineKind::Continuous, AdmissionPolicy::Paged, 4, 1),
-        (EngineKind::Pipelined, AdmissionPolicy::WorstCase, 1, 2),
-        (EngineKind::Pipelined, AdmissionPolicy::Paged, 4, 3),
+    // (engine, admission, page, backend lanes, prefill mode) — for the
+    // async-pipelined rows the LAST backend is the prefill-executor lane
+    // (the evaluate_with_backend convention), so worker counts are
+    // lanes - 1 there
+    for (kind, admission, page, lanes, prefill) in [
+        (EngineKind::Static, AdmissionPolicy::WorstCase, 1usize, 1usize, PrefillMode::Sync),
+        (EngineKind::Continuous, AdmissionPolicy::WorstCase, 1, 1, PrefillMode::Sync),
+        (EngineKind::Continuous, AdmissionPolicy::Paged, 4, 1, PrefillMode::Sync),
+        (EngineKind::Pipelined, AdmissionPolicy::WorstCase, 1, 2, PrefillMode::Sync),
+        (EngineKind::Pipelined, AdmissionPolicy::Paged, 4, 3, PrefillMode::Sync),
+        (EngineKind::Pipelined, AdmissionPolicy::WorstCase, 1, 3, PrefillMode::Async),
+        (EngineKind::Pipelined, AdmissionPolicy::Paged, 4, 3, PrefillMode::Async),
     ] {
         let mut sched = worst_case(slots, reserve).with_admission(admission);
         let mut kv = KvMemoryManager::with_pages(reserve * 3, page);
         let r = evaluate_with_backend(
-            &policy,
+            &policy.with_prefill(prefill),
             &mut mk_backends(lanes),
             kind,
             &mut sched,

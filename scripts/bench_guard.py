@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Bench-trajectory regression guard for BENCH_rollout.json.
+
+Compares a freshly produced bench file against the committed trajectory
+(recorded by the CI commit-back step on main pushes) and fails when any
+DETERMINISTIC modeled makespan regressed by more than the threshold.
+
+Rules:
+  * Only dicts carrying a "makespan_ticks" key are compared, and only
+    when their "deterministic" flag is absent or true (multi-worker rows
+    race on the mutex run-to-run and are recorded for context only).
+  * Scenarios present in the baseline but no longer emitted are noted,
+    not failed (scenarios evolve; the recorder refreshes the baseline on
+    the next main push).
+  * An unpopulated baseline (the "pending" placeholder committed before
+    the first record step ran) skips the guard entirely.
+
+Usage: bench_guard.py <committed-baseline.json> <fresh.json> [threshold]
+Threshold is a fraction; default 0.10 (= fail on >10% regression).
+"""
+
+import json
+import sys
+
+
+def walk(node, path=()):
+    """Yield (path, makespan) for every comparable deterministic row."""
+    if not isinstance(node, dict):
+        return
+    if "makespan_ticks" in node and node.get("deterministic", True) is not False:
+        yield path, float(node["makespan_ticks"])
+    for key, value in node.items():
+        yield from walk(value, path + (key,))
+
+
+def main():
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        baseline = json.load(f)
+    with open(sys.argv[2]) as f:
+        fresh = json.load(f)
+    threshold = float(sys.argv[3]) if len(sys.argv) > 3 else 0.10
+
+    base_rows = dict(walk(baseline))
+    if not base_rows:
+        print(
+            "bench guard: baseline has no recorded makespans yet "
+            "(pending the first main-push record step); skipping"
+        )
+        return 0
+    fresh_rows = dict(walk(fresh))
+
+    failures = []
+    compared = 0
+    for path, base in sorted(base_rows.items()):
+        name = "/".join(path)
+        got = fresh_rows.get(path)
+        if got is None:
+            print(f"bench guard: note: scenario {name} no longer emitted; skipping")
+            continue
+        compared += 1
+        if base > 0 and got > base * (1.0 + threshold):
+            failures.append(
+                f"  {name}: {got:.0f} ticks vs baseline {base:.0f} "
+                f"(+{100.0 * (got / base - 1.0):.1f}%)"
+            )
+        else:
+            delta = 100.0 * (got / base - 1.0) if base > 0 else 0.0
+            print(f"bench guard: {name}: {got:.0f} vs {base:.0f} ({delta:+.1f}%) ok")
+
+    if failures:
+        print(
+            f"bench guard: FAIL — modeled makespan regressed >"
+            f"{100.0 * threshold:.0f}% on {len(failures)} scenario(s):"
+        )
+        print("\n".join(failures))
+        return 1
+    print(f"bench guard: {compared} deterministic makespans within +{100.0 * threshold:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
