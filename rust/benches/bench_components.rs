@@ -42,7 +42,7 @@ fn main() {
     {
         let rewards: Vec<f64> = (0..64).map(|i| (i % 3 == 0) as u8 as f64).collect();
         b.bench("group advantages (64 seqs, G=8)", || {
-            std::hint::black_box(group::batched_group_advantages(&rewards, 8));
+            std::hint::black_box(group::batched_group_advantages(&rewards, 8).unwrap());
         });
     }
 

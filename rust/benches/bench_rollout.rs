@@ -30,7 +30,7 @@
 use std::collections::BTreeMap;
 
 use sparse_rl::config::{
-    AdmissionOrder, AdmissionPolicy, PrefillMode, RolloutMode, SamplingConfig,
+    AdmissionOrder, AdmissionPolicy, PrefillMode, PrefixSharing, RolloutMode, SamplingConfig,
 };
 use sparse_rl::coordinator::{
     CostModel, GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy,
@@ -651,6 +651,7 @@ fn prefill_mode_comparison() -> Json {
         slot_prefill_ticks: 40,
         decode_ticks: 80,
         compress_ticks: 5,
+        attach_ticks: 4,
     };
     let mode = RolloutMode::Dense; // no compression traffic: isolate prefill
     let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 64 };
@@ -761,6 +762,139 @@ fn prefill_mode_comparison() -> Json {
     Json::Obj(out)
 }
 
+/// Prefix sharing on a GRPO-style grouped workload (part 1f): the PR-6
+/// tentpole claim. G sequences of a group carry identical prompts; under
+/// `prefix-sharing = group` + paged admission the page-aligned prompt
+/// prefix is charged ONCE through the refcounted pool (siblings pay one
+/// private page), and refills of a cached prompt attach a prepared
+/// prefill (`attach_ticks`) instead of re-running the full slot prefill.
+/// Continuous engine, single lane — fully deterministic.
+///
+/// Geometry: 24-token prompts on 4-token pages admit at 7 pages unshared
+/// (24 prefix + 1 private), so a 24-page wall fits 3 sequences. Shared,
+/// each sibling after the first costs 1 page, so two whole groups (8
+/// sequences — the slot cap) sit on 20 pages. Responses are cap-bound
+/// and uniform (EOS suppressed), so the comparison isolates admission
+/// width and prefill traffic: strictly wider peak width AND strictly
+/// fewer prefill-blocked ticks, token-identical outputs.
+fn prefix_sharing_comparison() -> Json {
+    let (slots, prompt_len, max_seq, budget, buffer) = (8usize, 24usize, 32usize, 28usize, 8usize);
+    let (page_tokens, seed) = (4usize, 7u64);
+    let costs = CostModel::representative();
+    let mode = RolloutMode::SparseRl(Method::RKv);
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 4 };
+    let policy = RolloutPolicy::new(mode, sampling);
+    let reserve = budget + buffer; // 36-token bound; paged admits 25 tok = 7 pages
+    let kv_cap = 96; // 24 pages: unshared width 3, shared width 8 (slot-capped)
+    let mut rng = Rng::new(1);
+    // 6 GRPO groups x 4 siblings, identical prompts within a group
+    let leads: Vec<Task> = (0..6).map(|_| sized_task(&mut rng, prompt_len)).collect();
+    let tasks: Vec<Task> = (0..24).map(|i| leads[i / 4].clone()).collect();
+    let backend = || {
+        let mut b = MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer);
+        b.eos_pull = -30.0; // EOS suppressed: cap-bound deterministic lengths
+        b.with_costs(costs)
+    };
+
+    println!(
+        "== prefix-sharing comparison: off vs group (continuous, paged, sparse, R={slots}, \
+         6 groups x 4 siblings, page={page_tokens} tok, slot-prefill={}t attach={}t) ==",
+        costs.slot_prefill_ticks, costs.attach_ticks
+    );
+    println!(
+        "{:<8} {:>12} {:>10} {:>10} {:>10} {:>9} {:>9}",
+        "sharing", "decode-steps", "makespan", "blocked", "width-peak", "attaches", "shared"
+    );
+
+    let mut out = BTreeMap::new();
+    let mut seqs_by_sharing = Vec::new();
+    let mut stats_by_sharing = Vec::new();
+    for sharing in [PrefixSharing::Off, PrefixSharing::Group] {
+        let mut kv = KvMemoryManager::with_pages(kv_cap, page_tokens);
+        let mut sched = mk_sched(slots, reserve)
+            .with_admission(AdmissionPolicy::Paged)
+            .with_sharing(sharing);
+        let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+        let (seqs, st) = policy
+            .with_sharing(sharing)
+            .rollout_continuous(&mut backend(), &flat, seed, &mut sched, &mut kv, 0)
+            .expect("rollout");
+        assert_eq!(kv.reserved(), 0, "{}: run leaked KV", sharing.label());
+        assert_eq!(kv.live_prefixes(), 0, "{}: prefix entries leaked", sharing.label());
+        kv.check_invariants().expect("wall invariants");
+        println!(
+            "{:<8} {:>12} {:>10} {:>10} {:>10} {:>9} {:>9}",
+            sharing.label(),
+            st.decode_steps,
+            st.modeled_makespan_ticks,
+            st.prefill_blocked_ticks,
+            st.peak_live_slots,
+            st.shared_prefill_attaches,
+            sched.stats.shared_admissions,
+        );
+        let mut row = BTreeMap::new();
+        row.insert("decode_steps".into(), Json::Num(st.decode_steps as f64));
+        row.insert("makespan_ticks".into(), Json::Num(st.modeled_makespan_ticks as f64));
+        row.insert(
+            "prefill_blocked_ticks".into(),
+            Json::Num(st.prefill_blocked_ticks as f64),
+        );
+        row.insert("peak_live_slots".into(), Json::Num(st.peak_live_slots as f64));
+        row.insert(
+            "shared_prefill_attaches".into(),
+            Json::Num(st.shared_prefill_attaches as f64),
+        );
+        row.insert(
+            "shared_admissions".into(),
+            Json::Num(sched.stats.shared_admissions as f64),
+        );
+        // single-lane continuous on the virtual clock: fully deterministic
+        row.insert("deterministic".into(), Json::Bool(true));
+        out.insert(sharing.label().to_string(), Json::Obj(row));
+        seqs_by_sharing.push(seqs);
+        stats_by_sharing.push(st);
+    }
+
+    // sharing is a pure accounting/caching choice: identical tokens
+    let agree = seqs_by_sharing[0]
+        .iter()
+        .zip(seqs_by_sharing[1].iter())
+        .all(|(a, b)| a.response_ids == b.response_ids && a.sampler_logp == b.sampler_logp);
+    assert!(agree, "prefix sharing changed tokens (BUG)");
+    let (off, shared) = (&stats_by_sharing[0], &stats_by_sharing[1]);
+    assert_eq!(off.shared_prefill_attaches, 0, "sharing=off attached a prefill");
+    assert!(
+        shared.shared_prefill_attaches > 0,
+        "grouped workload never attached a shared prefill"
+    );
+    assert!(
+        shared.peak_live_slots > off.peak_live_slots,
+        "sharing must admit strictly wider ({} !> {})",
+        shared.peak_live_slots,
+        off.peak_live_slots
+    );
+    assert!(
+        shared.prefill_blocked_ticks < off.prefill_blocked_ticks,
+        "sharing must spend strictly fewer prefill ticks ({} !< {})",
+        shared.prefill_blocked_ticks,
+        off.prefill_blocked_ticks
+    );
+    println!(
+        "  -> sharing admits {:.2}x wider at peak, cuts prefill-blocked ticks {:.1}% \
+         ({} attaches), token-identical: yes\n",
+        shared.peak_live_slots as f64 / off.peak_live_slots.max(1) as f64,
+        100.0 * (1.0 - shared.prefill_blocked_ticks as f64
+            / off.prefill_blocked_ticks.max(1) as f64),
+        shared.shared_prefill_attaches,
+    );
+    out.insert("tasks".into(), Json::Num(tasks.len() as f64));
+    out.insert("group_size".into(), Json::Num(4.0));
+    out.insert("kv_cap_tokens".into(), Json::Num(kv_cap as f64));
+    out.insert("page_tokens".into(), Json::Num(page_tokens as f64));
+    out.insert("attach_ticks".into(), Json::Num(costs.attach_ticks as f64));
+    Json::Obj(out)
+}
+
 fn main() {
     let args = CliArgs::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
 
@@ -770,13 +904,15 @@ fn main() {
     // Part 1b: paged vs worst-case admission (always runs); Part 1c:
     // pipelined vs continuous on the modeled latency clock; Part 1d:
     // fifo vs shortest-first admission order on the skewed-length
-    // head-of-line workload; Part 1e: sync vs async slot prefill. All
+    // head-of-line workload; Part 1e: sync vs async slot prefill; Part
+    // 1f: prefix sharing off vs group on a GRPO-grouped workload. All
     // feed BENCH_rollout.json so CI records the perf trajectory (and the
     // bench guard compares deterministic makespans against it).
     let paged = paged_comparison();
     let pipelined = pipelined_comparison();
     let order = admission_order_comparison();
     let prefill = prefill_mode_comparison();
+    let sharing = prefix_sharing_comparison();
     {
         let mut doc = BTreeMap::new();
         doc.insert("bench".to_string(), Json::Str("rollout".into()));
@@ -784,6 +920,7 @@ fn main() {
         doc.insert("pipelined_vs_continuous".to_string(), pipelined);
         doc.insert("admission_order".to_string(), order);
         doc.insert("prefill_mode".to_string(), prefill);
+        doc.insert("prefix_sharing".to_string(), sharing);
         let path = "BENCH_rollout.json";
         match std::fs::write(path, sparse_rl::util::json::to_string(&Json::Obj(doc))) {
             Ok(()) => println!("wrote {path}"),

@@ -295,6 +295,50 @@ impl AdmissionOrder {
     }
 }
 
+/// Whether identical prompts share their KV prefix pages.
+///
+/// `Off` (default) is the seed behavior: every sequence prefills and
+/// reserves its own copy of the prompt KV. `Group` exploits the GRPO
+/// fan-out shape — G rollouts of the same prompt (and eval's K samples
+/// per task) — by registering each distinct prompt in a prefix registry:
+/// the first sequence of a group charges the page-aligned prompt prefix
+/// once, later siblings attach to the resident prefix read-only and
+/// charge only their private (decode + prompt tail) pages, and a shared
+/// prefix forks copy-on-write the moment compression rewrites that
+/// sequence's retained pages. Accounting-wise the knob only changes
+/// behavior under `admission = paged` (worst-case reservation prices
+/// the wall per sequence by definition); the prefill-once-attach-G
+/// execution saving applies to the synchronous engine paths. Pure
+/// scheduling: per-task RNG keeps tokens bit-identical with sharing on
+/// or off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrefixSharing {
+    #[default]
+    Off,
+    Group,
+}
+
+impl PrefixSharing {
+    pub fn parse(s: &str) -> Result<PrefixSharing> {
+        Ok(match s {
+            "off" | "none" => PrefixSharing::Off,
+            "group" | "on" => PrefixSharing::Group,
+            other => bail!("bad prefix-sharing value {other:?} (off | group)"),
+        })
+    }
+
+    pub fn is_group(&self) -> bool {
+        matches!(self, PrefixSharing::Group)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PrefixSharing::Off => "off",
+            PrefixSharing::Group => "group",
+        }
+    }
+}
+
 /// The memory wall: a global KV token budget shared by concurrent
 /// sequences (the simulated HBM capacity the scheduler packs against).
 #[derive(Debug, Clone, Copy)]
@@ -312,6 +356,9 @@ pub struct MemoryConfig {
     /// pressure; larger values trade admitted width for fewer
     /// preemptions). Ignored under worst-case admission.
     pub kv_admit_headroom_pages: usize,
+    /// Prompt-prefix KV sharing across identical prompts (GRPO groups /
+    /// eval samples). Default off preserves seed accounting bit-exactly.
+    pub prefix_sharing: PrefixSharing,
 }
 
 impl Default for MemoryConfig {
@@ -321,6 +368,7 @@ impl Default for MemoryConfig {
             kv_page_tokens: 1,
             admission: AdmissionPolicy::WorstCase,
             kv_admit_headroom_pages: 1,
+            prefix_sharing: PrefixSharing::Off,
         }
     }
 }
@@ -440,6 +488,9 @@ impl ExperimentConfig {
                 self.memory.kv_page_tokens = v;
             }
             "admission" => self.memory.admission = AdmissionPolicy::parse(value)?,
+            "prefix-sharing" => {
+                self.memory.prefix_sharing = PrefixSharing::parse(value)?
+            }
             "kv-admit-headroom-pages" => {
                 self.memory.kv_admit_headroom_pages =
                     value.parse().context("kv-admit-headroom-pages")?
@@ -606,6 +657,23 @@ mod tests {
         assert_eq!(c.memory.admission, AdmissionPolicy::Paged);
         assert_eq!(c.memory.kv_page_tokens, 16);
         assert!(c.apply("kv-page-tokens", "0").is_err());
+    }
+
+    #[test]
+    fn prefix_sharing_knob() {
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        // default off preserves the seed accounting bit-exactly
+        assert_eq!(c.memory.prefix_sharing, PrefixSharing::Off);
+        assert!(!c.memory.prefix_sharing.is_group());
+        c.apply("prefix-sharing", "group").unwrap();
+        assert_eq!(c.memory.prefix_sharing, PrefixSharing::Group);
+        assert!(c.memory.prefix_sharing.is_group());
+        c.apply("prefix-sharing", "off").unwrap();
+        assert_eq!(c.memory.prefix_sharing, PrefixSharing::Off);
+        assert!(c.apply("prefix-sharing", "radix").is_err());
+        assert_eq!(PrefixSharing::parse("on").unwrap(), PrefixSharing::Group);
+        assert_eq!(PrefixSharing::Group.label(), "group");
+        assert_eq!(PrefixSharing::Off.label(), "off");
     }
 
     #[test]

@@ -61,6 +61,11 @@ pub struct CostModel {
     pub decode_ticks: u64,
     /// One masked compression call.
     pub compress_ticks: u64,
+    /// Attaching an already-prepared prompt prefill to a slot
+    /// (`apply_prefill` of a cached payload — prefix sharing's
+    /// prefill-once-attach-G path). A slot write, not a model run, so it
+    /// is far cheaper than `slot_prefill_ticks`.
+    pub attach_ticks: u64,
 }
 
 impl CostModel {
@@ -74,6 +79,7 @@ impl CostModel {
             slot_prefill_ticks: 40,
             decode_ticks: 10,
             compress_ticks: 5,
+            attach_ticks: 4,
         }
     }
 
@@ -99,7 +105,11 @@ pub trait RolloutBackend {
     /// Cache-independent product of `prepare_prefill`, transferable
     /// between backend values of the same model (the executor prepares on
     /// its own backend; the owning worker applies it to a slot).
-    type Prepared: Send;
+    /// `Clone` because prefix sharing applies ONE prepared prompt to G
+    /// sibling slots (prefill-once-attach-G): batch-row independence
+    /// makes the payload slot-position-invariant, so a clone applied to
+    /// any slot reproduces `prefill_slot` there bit-exactly.
+    type Prepared: Send + Clone;
     /// Decode batch width R.
     fn slots(&self) -> usize;
     /// Maximum prompt tokens per sequence.
@@ -162,7 +172,9 @@ pub struct EngineBackend<'a> {
 /// prefill — 1/R-th of a full cache, so in-flight async prefills stay
 /// cheap) plus that row's logits. `apply_prefill` implants the planes
 /// into the target slot — batch-row independence makes them
-/// slot-position-invariant.
+/// slot-position-invariant (and clonable across a sharing group's
+/// sibling slots).
+#[derive(Clone)]
 pub struct PreparedSlotPrefill {
     planes: SlotPlanes,
     logp: Vec<f32>,

@@ -16,7 +16,8 @@ use super::super::backend::RolloutBackend;
 use super::super::kv_manager::KvMemoryManager;
 use super::super::scheduler::{AdmissionQueue, Scheduler};
 use super::core::{
-    admission_costs, admit_next, snap_residency, DecodeCore, GenSeq, Geometry, PrefillWave,
+    admission_costs, admit_next, snap_residency, DecodeCore, GenSeq, Geometry, PrefillCache,
+    PrefillWave,
 };
 use super::stats::RolloutStats;
 use super::RolloutPolicy;
@@ -68,6 +69,11 @@ impl RolloutPolicy {
             admission_costs(sched, tasks, self.sampling.max_response),
         );
         let mut core = DecodeCore::new(geom, self.mode.is_sparse());
+        // prefill-once-attach-G: under `prefix-sharing = group`, refills of
+        // an already-prepared prompt attach the cached payload instead of
+        // re-running the model (token-identical by the prepare/apply
+        // contract; only the modeled latency differs)
+        let mut pcache: PrefillCache<B> = PrefillCache::new(self.sharing.is_group());
 
         // ---- initial wave: one batched prefill over the admissible head
         let mut wave = PrefillWave::new(&geom);
@@ -117,12 +123,18 @@ impl RolloutPolicy {
                     admit_next(sched, kv, &mut queue, tasks, seq_id_base)
                 {
                     let (idx, task) = tasks[pos];
-                    let row = b.prefill_slot(slot, &task.prompt_ids)?;
-                    stats.slot_prefills += 1;
+                    let (row, attached) =
+                        pcache.slot_prefill(b, slot, &task.prompt_ids, &mut stats)?;
                     stats.refills += 1;
                     // serial engine: the whole decode batch stalls for this
-                    // slot prefill — the bubble the pipelined lane removes
-                    stats.prefill_blocked_ticks += geom.costs.slot_prefill_ticks;
+                    // slot prefill — the bubble the pipelined lane removes.
+                    // A shared attach is a slot write, not a model run, so
+                    // it stalls for attach_ticks only.
+                    stats.prefill_blocked_ticks += if attached {
+                        geom.costs.attach_ticks
+                    } else {
+                        geom.costs.slot_prefill_ticks
+                    };
                     snap_residency(kv, &mut stats);
                     if let Some(done) = core.join(self, slot, pos, idx, &task.prompt_ids, &row, seed)
                     {
@@ -152,9 +164,14 @@ impl RolloutPolicy {
 
             // ---- compression trigger (the shared per-sequence rule); the
             // freed residency returns to the pool immediately under paged
-            // admission (no-op worst-case) --------------------------------
-            for pos in core.compress_step(b, &mut stats)? {
-                sched.compressed(kv, seq_id_base + pos as u64, geom.budget)?;
+            // admission (no-op worst-case). A sequence still attached to a
+            // shared prefix forks copy-on-write instead — which can stall
+            // at the wall and preempt, exactly like growth ----------------
+            let compressed = core.compress_step(b, &mut stats)?;
+            for (_slot, v) in
+                core.compress_finish(sched, kv, seq_id_base, &compressed, &mut stats)?
+            {
+                queue.push_front(v.pos);
             }
 
             // ---- paged growth; stalls preempt the lowest-progress

@@ -12,6 +12,8 @@
 //! of ONE code path: an engine cannot drift on per-token semantics because
 //! it does not implement any.
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
 use crate::compression::KvAccounting;
@@ -231,11 +233,69 @@ pub(crate) fn admit_next(
     seq_id_base: u64,
 ) -> Option<usize> {
     let pos = queue.peek()?;
-    if !sched.try_admit(kv, seq_id_base + pos as u64, tasks[pos].1.prompt_ids.len()) {
+    // Prompt-aware admission: under `prefix-sharing = group` + paged
+    // admission, identical prompts (a GRPO group) share their
+    // page-aligned prompt prefix through the refcounted pool; in every
+    // other configuration this is exactly the plain length-based admit.
+    if !sched.try_admit_prompt(kv, seq_id_base + pos as u64, &tasks[pos].1.prompt_ids) {
         return None;
     }
     queue.pop();
     Some(pos)
+}
+
+/// Slot-refill prefill dispatch with prefix sharing's
+/// prefill-once-attach-G optimization.
+///
+/// Disabled (`prefix-sharing = off`, and the async executor path, which
+/// always full-prepares): every refill is a plain `prefill_slot`. Enabled
+/// (sync engine paths under `prefix-sharing = group`): the FIRST refill
+/// of a prompt prepares it once (`prepare_prefill`) and caches the
+/// prepared payload; each later refill of the same prompt — a group
+/// sibling — just clones and attaches it (`apply_prefill`), skipping the
+/// model run entirely. Token-identical by the backend contract
+/// (`apply_prefill(slot, prepare_prefill(p)) == prefill_slot(slot, p)`
+/// bit-for-bit, slot-position-invariant); only the virtual-clock charge
+/// differs, which is the hit flag the caller books (`slot_prefill_ticks`
+/// on a miss, `attach_ticks` on a hit). Cached payloads live for one
+/// rollout and are bounded by the number of distinct prompts.
+pub(crate) struct PrefillCache<B: RolloutBackend> {
+    enabled: bool,
+    prepared: BTreeMap<Vec<i32>, B::Prepared>,
+}
+
+impl<B: RolloutBackend> PrefillCache<B> {
+    pub fn new(enabled: bool) -> PrefillCache<B> {
+        PrefillCache { enabled, prepared: BTreeMap::new() }
+    }
+
+    /// Prefill `slot` with `prompt`, through the share cache when
+    /// enabled. Returns the slot's logits row and whether the refill was
+    /// served by an attach (true) or a full prefill (false); counts it
+    /// into `slot_prefills` or `shared_prefill_attaches` accordingly.
+    pub fn slot_prefill(
+        &mut self,
+        b: &mut B,
+        slot: usize,
+        prompt: &[i32],
+        stats: &mut RolloutStats,
+    ) -> Result<(Vec<f32>, bool)> {
+        if !self.enabled {
+            let row = b.prefill_slot(slot, prompt)?;
+            stats.slot_prefills += 1;
+            return Ok((row, false));
+        }
+        if let Some(p) = self.prepared.get(prompt) {
+            let row = b.apply_prefill(slot, p.clone())?;
+            stats.shared_prefill_attaches += 1;
+            return Ok((row, true));
+        }
+        let prep = b.prepare_prefill(prompt)?;
+        self.prepared.insert(prompt.to_vec(), prep.clone());
+        let row = b.apply_prefill(slot, prep)?;
+        stats.slot_prefills += 1;
+        Ok((row, false))
+    }
 }
 
 /// Record the wall's current residency high-water into a stats block.
@@ -392,6 +452,62 @@ impl DecodeCore {
             }
         }
         Ok(compressed)
+    }
+
+    /// Settle the reservations of just-compressed sequences with the wall.
+    /// Unshared (or worst-case) this is a plain shrink and can never fail.
+    /// A sequence still ATTACHED to a shared prompt prefix instead forks
+    /// copy-on-write — compression is about to rewrite pages its group
+    /// siblings still read — which must ALLOCATE private pages and so can
+    /// stall at the wall exactly like a grow. A stalled fork preempts the
+    /// lowest-progress live sequence of this batch (possibly the forker
+    /// itself) and retries; per-task RNG makes every rerun
+    /// token-identical. Returns the evicted `(slot, sequence)` pairs for
+    /// the engine to requeue, exactly like [`DecodeCore::grow_step`].
+    pub fn compress_finish(
+        &mut self,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+        compressed: &[usize],
+        stats: &mut RolloutStats,
+    ) -> Result<Vec<(usize, LiveSeq)>> {
+        let r = self.geom.slots;
+        let mut evicted = Vec::new();
+        'next: for &pos in compressed {
+            loop {
+                // an earlier stalled fork in this same pass may have
+                // preempted this sequence as its victim — nothing to settle
+                if !self.slots.iter().flatten().any(|l| l.pos == pos) {
+                    continue 'next;
+                }
+                if sched.compressed(kv, seq_id_base + pos as u64, self.geom.budget)? {
+                    snap_residency(kv, stats);
+                    continue 'next;
+                }
+                let victim = (0..r)
+                    .filter_map(|s| {
+                        self.slots[s]
+                            .as_ref()
+                            .map(|l| (l.gen.response_ids.len(), l.pos, s))
+                    })
+                    .min()
+                    .expect("the forker itself is live")
+                    .2;
+                let v = self.slots[victim].take().expect("victim occupied");
+                sched.preempt(kv, seq_id_base + v.pos as u64)?;
+                self.tokens[victim] = PAD;
+                stats.preemptions += 1;
+                let own = v.pos == pos;
+                evicted.push((victim, v));
+                if own {
+                    continue 'next; // forker evicted: requeued, nothing to settle
+                }
+            }
+        }
+        debug_assert!(kv.check_invariants().is_ok(), "wall invariants broken mid-rollout");
+        snap_residency(kv, stats);
+        Ok(evicted)
     }
 
     /// Paged-growth pass: every occupied slot must hold pages for its next

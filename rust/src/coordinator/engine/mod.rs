@@ -47,7 +47,7 @@ pub use self::stats::RolloutStats;
 
 use anyhow::Result;
 
-use crate::config::{PrefillMode, RolloutMode, SamplingConfig};
+use crate::config::{PrefillMode, PrefixSharing, RolloutMode, SamplingConfig};
 use crate::data::task::Task;
 use crate::runtime::{ModelEngine, ParamsLit, Variant};
 
@@ -76,11 +76,25 @@ pub struct RolloutPolicy {
     /// runs a dedicated prefill-executor thread so the call overlaps
     /// decode. Scheduling-only — tokens are mode-invariant.
     pub prefill: PrefillMode,
+    /// Prompt-prefix sharing (`prefix-sharing` config knob, default off):
+    /// under `group`, refills of an already-seen prompt attach a cached
+    /// prepared prefill instead of re-running the model
+    /// (prefill-once-attach-G on the sync paths), and — together with
+    /// `admission = paged` — the scheduler charges a GRPO group's shared
+    /// prompt pages once via the refcounted pool. Scheduling/memory-only —
+    /// tokens are sharing-invariant.
+    pub sharing: PrefixSharing,
 }
 
 impl RolloutPolicy {
     pub fn new(mode: RolloutMode, sampling: SamplingConfig) -> Self {
-        RolloutPolicy { mode, sampling, steal: true, prefill: PrefillMode::Sync }
+        RolloutPolicy {
+            mode,
+            sampling,
+            steal: true,
+            prefill: PrefillMode::Sync,
+            sharing: PrefixSharing::Off,
+        }
     }
 
     /// Toggle pipelined work stealing (builder style; see `steal`).
@@ -95,6 +109,12 @@ impl RolloutPolicy {
         self.prefill = prefill;
         self
     }
+
+    /// Select prompt-prefix sharing (builder style; see `sharing`).
+    pub fn with_sharing(mut self, sharing: PrefixSharing) -> Self {
+        self.sharing = sharing;
+        self
+    }
 }
 
 /// The artifact-bound rollout engine for one model + mode.
@@ -106,11 +126,20 @@ pub struct RolloutEngine<'a> {
     pub steal: bool,
     /// Pipelined slot-prefill mode (see `RolloutPolicy::prefill`).
     pub prefill: PrefillMode,
+    /// Prompt-prefix sharing (see `RolloutPolicy::sharing`).
+    pub sharing: PrefixSharing,
 }
 
 impl<'a> RolloutEngine<'a> {
     pub fn new(engine: &'a ModelEngine, mode: RolloutMode, sampling: SamplingConfig) -> Self {
-        RolloutEngine { engine, mode, sampling, steal: true, prefill: PrefillMode::Sync }
+        RolloutEngine {
+            engine,
+            mode,
+            sampling,
+            steal: true,
+            prefill: PrefillMode::Sync,
+            sharing: PrefixSharing::Off,
+        }
     }
 
     /// Toggle pipelined work stealing (builder style).
@@ -125,10 +154,17 @@ impl<'a> RolloutEngine<'a> {
         self
     }
 
+    /// Select prompt-prefix sharing (builder style).
+    pub fn with_sharing(mut self, sharing: PrefixSharing) -> Self {
+        self.sharing = sharing;
+        self
+    }
+
     pub fn policy(&self) -> RolloutPolicy {
         RolloutPolicy::new(self.mode, self.sampling)
             .with_steal(self.steal)
             .with_prefill(self.prefill)
+            .with_sharing(self.sharing)
     }
 
     pub fn variant(&self) -> Variant {

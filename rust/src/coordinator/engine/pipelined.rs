@@ -49,7 +49,7 @@ use super::super::kv_manager::KvMemoryManager;
 use super::super::scheduler::{AdmissionQueue, Scheduler};
 use super::core::{
     self, admission_costs, admit_next, prefill_single_row, DecodeCore, GenSeq, Geometry,
-    PrefillWave,
+    PrefillCache, PrefillWave,
 };
 use super::stats::RolloutStats;
 use super::RolloutPolicy;
@@ -495,6 +495,12 @@ impl RolloutPolicy {
         // this lane's virtual clock (ticks on the backend's cost model)
         let mut now = 0u64;
         let mut core = DecodeCore::new(geom, self.mode.is_sparse());
+        // prefill-once-attach-G, per lane (sync joins only: the async
+        // executor's pipeline already overlaps prepares with decode, and
+        // its payloads are keyed by task — attach-sharing there would
+        // complicate the hand-off for a lane that never blocks anyway)
+        let mut pcache: PrefillCache<B> =
+            PrefillCache::new(!asynch && self.sharing.is_group());
         // slots whose row in `logp` is fresh (sampled at the loop top);
         // freshly joined slots carry an already-sampled token instead
         let mut decoded = vec![false; r];
@@ -589,14 +595,22 @@ impl RolloutPolicy {
                 } else {
                     // sync: the device call happens here, on this worker,
                     // so the honest virtual charge lands on this lane
-                    let row = if stats.prefills == 0 {
-                        prefill_single_row(&geom, b, slot, pi, &mut stats)?
+                    // (a shared attach is a slot write — attach_ticks)
+                    let (row, attached) = if stats.prefills == 0 {
+                        // no live cache yet on this lane (first wave was
+                        // refused): the batched entry bypasses — and does
+                        // not seed — the share cache
+                        (prefill_single_row(&geom, b, slot, pi, &mut stats)?, false)
                     } else {
-                        stats.slot_prefills += 1;
-                        b.prefill_slot(slot, pi)?
+                        pcache.slot_prefill(b, slot, pi, &mut stats)?
                     };
-                    stats.prefill_blocked_ticks += geom.costs.slot_prefill_ticks;
-                    now += geom.costs.slot_prefill_ticks;
+                    let ticks = if attached {
+                        geom.costs.attach_ticks
+                    } else {
+                        geom.costs.slot_prefill_ticks
+                    };
+                    stats.prefill_blocked_ticks += ticks;
+                    now += ticks;
                     row
                 };
                 stats.refills += 1;
@@ -718,15 +732,33 @@ impl RolloutPolicy {
                 continue; // the pending refill joins at the loop top
             }
 
-            // ---- compression trigger (the shared per-sequence rule) -----
+            // ---- compression trigger (the shared per-sequence rule). A
+            // sequence still attached to a shared prefix forks
+            // copy-on-write — an allocation that can stall at the wall
+            // and preempt from the OWN batch, exactly like growth -------
             {
                 let compressed = core.compress_step(b, &mut stats)?;
                 if !compressed.is_empty() {
                     now += geom.costs.compress_ticks;
                     let mut guard = lock()?;
                     let sh = &mut *guard;
-                    for pos in compressed {
-                        sh.sched.compressed(sh.kv, seq_id_base + pos as u64, geom.budget)?;
+                    let evicted = core.compress_finish(
+                        sh.sched,
+                        sh.kv,
+                        seq_id_base,
+                        &compressed,
+                        &mut stats,
+                    )?;
+                    let preempted = !evicted.is_empty();
+                    for (slot, v) in evicted {
+                        sh.release_at(now);
+                        sh.queue.push_front(v.pos);
+                        decoded[slot] = false;
+                    }
+                    sh.lane_live[me] = core.occupied();
+                    drop(guard);
+                    if preempted {
+                        cv.notify_all();
                     }
                 }
             }

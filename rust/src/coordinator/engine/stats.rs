@@ -31,6 +31,11 @@ pub struct RolloutStats {
     pub prefills: usize,
     /// Per-slot (recycling) prefill calls.
     pub slot_prefills: usize,
+    /// Slot refills served by attaching a cached prepared prompt instead
+    /// of running a fresh prefill (prefix sharing's prefill-once-attach-G
+    /// path; 0 with `prefix-sharing = off`). Disjoint from
+    /// `slot_prefills`: a refill is counted in exactly one of the two.
+    pub shared_prefill_attaches: usize,
     /// Max KV tokens reserved simultaneously (continuous only; the
     /// invariant tests check this never exceeds the wall).
     pub max_reserved_kv: usize,
@@ -130,6 +135,7 @@ impl RolloutStats {
         self.refills += o.refills;
         self.prefills += o.prefills;
         self.slot_prefills += o.slot_prefills;
+        self.shared_prefill_attaches += o.shared_prefill_attaches;
         self.max_reserved_kv = self.max_reserved_kv.max(o.max_reserved_kv);
         self.max_used_pages = self.max_used_pages.max(o.max_used_pages);
         self.peak_live_slots = self.peak_live_slots.max(o.peak_live_slots);
@@ -162,6 +168,7 @@ mod tests {
             refills: 2,
             prefills: 1,
             slot_prefills: 2,
+            shared_prefill_attaches: 3,
             max_reserved_kv: 100,
             max_used_pages: 5,
             peak_live_slots: 4,
@@ -207,6 +214,7 @@ mod tests {
         // prefill-executor counters: submitted/completed sum...
         assert_eq!(m.async_prefills_submitted, 4);
         assert_eq!(m.async_prefills_completed, 4);
+        assert_eq!(m.shared_prefill_attaches, 3);
         // ...high-water marks take the max
         assert_eq!(m.async_prefill_inflight_peak, 2);
         assert_eq!(m.max_reserved_kv, 100);
@@ -246,6 +254,7 @@ mod tests {
                     refills: rng.below(20),
                     prefills: rng.below(4),
                     slot_prefills: rng.below(20),
+                    shared_prefill_attaches: rng.below(20),
                     max_reserved_kv: rng.below(4096),
                     max_used_pages: rng.below(256),
                     peak_live_slots: rng.below(slots + 1),
@@ -279,6 +288,7 @@ mod tests {
                 || merged.refills != sum(|l| l.refills)
                 || merged.prefills != sum(|l| l.prefills)
                 || merged.slot_prefills != sum(|l| l.slot_prefills)
+                || merged.shared_prefill_attaches != sum(|l| l.shared_prefill_attaches)
                 || merged.async_prefills_submitted != sum(|l| l.async_prefills_submitted)
                 || merged.async_prefills_completed != sum(|l| l.async_prefills_completed)
                 || merged.chunks != n

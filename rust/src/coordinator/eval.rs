@@ -220,7 +220,8 @@ pub fn evaluate(
     };
     let policy = RolloutPolicy::new(mode, sampling)
         .with_steal(opts.steal)
-        .with_prefill(opts.prefill);
+        .with_prefill(opts.prefill)
+        .with_sharing(opts.memory.prefix_sharing);
     let params_lit = ParamsLit::new(params);
     // one backend per decode lane (single-lane engines use the first);
     // pipelined async adds one more for the prefill-executor thread
@@ -240,7 +241,8 @@ pub fn evaluate(
     let mut sched = Scheduler::new(m, mode.is_sparse())
         .with_admission(opts.memory.admission)
         .with_headroom(opts.memory.kv_admit_headroom_pages)
-        .with_order(opts.admission_order);
+        .with_order(opts.admission_order)
+        .with_sharing(opts.memory.prefix_sharing);
     // The eval wall exists to drive the engines' admission machinery, not
     // to throttle accuracy measurement (tokens are width-independent). It
     // is clamped up so a full decode batch always fits — with default

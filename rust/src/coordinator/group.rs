@@ -5,6 +5,30 @@
 //!   Â_i = (r_i - mean(r)) / std(r)
 //! Degenerate groups (all rewards equal, std = 0) yield zero advantages —
 //! no gradient signal, exactly as in GRPO implementations.
+//!
+//! Flat-batch layout contract (one rule for the whole module): a batch is
+//! consecutive groups of exactly `g` rewards. An empty batch is fine
+//! (empty output); `g = 0` with a non-empty batch, or a trailing partial
+//! group, is a caller bug reported as `Err` — never a panic
+//! (`chunks(0)`), and never silently averaged over a miscounted group
+//! total (`div_ceil` on a partial tail).
+
+use anyhow::{bail, Result};
+
+/// The shared layout check: number of groups in a flat batch of `n`
+/// rewards with group size `g`.
+fn check_groups(n: usize, g: usize) -> Result<usize> {
+    if n == 0 {
+        return Ok(0);
+    }
+    if g == 0 {
+        bail!("group size 0 with {n} rewards");
+    }
+    if n % g != 0 {
+        bail!("batch of {n} rewards has a trailing partial group (group size {g})");
+    }
+    Ok(n / g)
+}
 
 /// Rewards for one group -> advantages.
 pub fn group_advantages(rewards: &[f64]) -> Vec<f64> {
@@ -21,13 +45,13 @@ pub fn group_advantages(rewards: &[f64]) -> Vec<f64> {
     rewards.iter().map(|r| (r - mean) / std).collect()
 }
 
-/// Advantages for a flat batch laid out as consecutive groups of size `g`.
-pub fn batched_group_advantages(rewards: &[f64], g: usize) -> Vec<f64> {
-    assert!(g > 0 && rewards.len() % g == 0, "batch not divisible into groups");
-    rewards
-        .chunks(g)
-        .flat_map(|grp| group_advantages(grp))
-        .collect()
+/// Advantages for a flat batch laid out as consecutive groups of size `g`
+/// (see the module-level layout contract).
+pub fn batched_group_advantages(rewards: &[f64], g: usize) -> Result<Vec<f64>> {
+    if check_groups(rewards.len(), g)? == 0 {
+        return Ok(vec![]);
+    }
+    Ok(rewards.chunks(g).flat_map(group_advantages).collect())
 }
 
 /// Summary statistics of one rollout batch's rewards.
@@ -38,20 +62,24 @@ pub struct RewardSummary {
     pub informative_groups: f64,
 }
 
-pub fn summarize(rewards: &[f64], g: usize) -> RewardSummary {
-    if rewards.is_empty() {
-        return RewardSummary::default();
+/// Summarize a flat batch under the same layout contract as
+/// [`batched_group_advantages`]: the two can never disagree on what a
+/// valid batch is (this one used to panic on `g = 0` via `chunks(0)` and
+/// to miscount a trailing partial group via `div_ceil`).
+pub fn summarize(rewards: &[f64], g: usize) -> Result<RewardSummary> {
+    let n_groups = check_groups(rewards.len(), g)?;
+    if n_groups == 0 {
+        return Ok(RewardSummary::default());
     }
     let mean = rewards.iter().sum::<f64>() / rewards.len() as f64;
-    let groups = rewards.chunks(g);
-    let n_groups = rewards.len().div_ceil(g);
-    let informative = groups
+    let informative = rewards
+        .chunks(g)
         .filter(|grp| {
             let first = grp[0];
             grp.iter().any(|&r| (r - first).abs() > 1e-9)
         })
         .count();
-    RewardSummary { mean, informative_groups: informative as f64 / n_groups as f64 }
+    Ok(RewardSummary { mean, informative_groups: informative as f64 / n_groups as f64 })
 }
 
 #[cfg(test)]
@@ -100,7 +128,7 @@ mod tests {
 
     #[test]
     fn batched_layout() {
-        let adv = batched_group_advantages(&[1.0, 0.0, 0.0, 0.0, 1.0, 1.0], 2);
+        let adv = batched_group_advantages(&[1.0, 0.0, 0.0, 0.0, 1.0, 1.0], 2).unwrap();
         assert_eq!(adv.len(), 6);
         assert!(adv[0] > 0.0 && adv[1] < 0.0);
         assert_eq!(&adv[4..], &[0.0, 0.0]);
@@ -108,8 +136,34 @@ mod tests {
 
     #[test]
     fn summary_counts_informative() {
-        let s = summarize(&[1.0, 0.0, 1.0, 1.0], 2);
+        let s = summarize(&[1.0, 0.0, 1.0, 1.0], 2).unwrap();
         assert!((s.mean - 0.75).abs() < 1e-9);
         assert!((s.informative_groups - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_group_size_is_an_error_not_a_panic() {
+        // summarize used to reach `chunks(0)` here and panic
+        assert!(summarize(&[1.0, 0.0], 0).is_err());
+        assert!(batched_group_advantages(&[1.0, 0.0], 0).is_err());
+    }
+
+    #[test]
+    fn partial_trailing_group_rejected_by_both() {
+        // one contract: summarize used to average a 5-reward batch over
+        // div_ceil(5, 2) = 3 "groups" while batched_group_advantages
+        // asserted — now both report the layout bug the same way
+        assert!(summarize(&[1.0; 5], 2).is_err());
+        assert!(batched_group_advantages(&[1.0; 5], 2).is_err());
+    }
+
+    #[test]
+    fn empty_batch_is_fine_for_any_group_size() {
+        for g in [0usize, 1, 7] {
+            let s = summarize(&[], g).unwrap();
+            assert_eq!(s.mean, 0.0);
+            assert_eq!(s.informative_groups, 0.0);
+            assert!(batched_group_advantages(&[], g).unwrap().is_empty());
+        }
     }
 }

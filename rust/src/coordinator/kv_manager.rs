@@ -1,4 +1,5 @@
-//! KV memory manager — the "memory wall" (paper §1), now a page pool.
+//! KV memory manager — the "memory wall" (paper §1), now a refcounting
+//! page pool with prefix sharing.
 //!
 //! Simulates the accelerator's KV-cache capacity as a global pool of
 //! fixed-size pages (`page_tokens` tokens each; `page_tokens = 1` is the
@@ -9,21 +10,37 @@
 //!   story): every sequence reserves its worst-case residency up front —
 //!   dense `max_seq`, sparse `budget + buffer` — so admissible width is
 //!   `capacity / worst_case` regardless of what sequences actually hold.
-//! * **Paged residency** (this PR): a sequence is admitted with only the
+//! * **Paged residency** (PR 2): a sequence is admitted with only the
 //!   pages its prompt needs, `grow`s page-by-page as decode writes land,
 //!   and `shrink`s back to its compressed residency after each compression
 //!   event. Admissible width tracks *actual* residency, which is what
 //!   raises effective rollout width under a fixed budget (Sparrow,
 //!   arXiv:2606.08446; Shadow-Mask, arXiv:2605.06850).
 //!
+//! On top of paged residency this pool supports **refcounted prefix
+//! sharing** (SGLang's RadixAttention idea specialized to the GRPO group
+//! shape): G sequences generated from one prompt map the same page-aligned
+//! prompt prefix read-only. The prefix's pages are charged against the
+//! wall ONCE and carry a refcount; each sharer additionally owns its
+//! private pages (prompt tail past the page boundary + decode growth).
+//! Because the sparse path *rewrites* retained KV planes at compression, a
+//! sharer must fork to a fully private reservation (`fork_to_private`,
+//! copy-on-write) before its first compression event — detaching from the
+//! prefix (freeing it when the last sharer leaves) and charging its full
+//! compressed residency privately. A denied fork behaves exactly like a
+//! denied `grow`: no state change, `grow_rejections` bumped, caller
+//! preempts someone and retries.
+//!
 //! The trade-off: worst-case admission can never fail mid-decode (width is
 //! paid for at admission), while paged admission can hit the wall on a
-//! `grow` — the scheduler/engine resolve that by preempting the
-//! lowest-progress sequence and requeueing it (see `scheduler.rs`), so the
-//! wall is never breached and a drain is always reachable.
+//! `grow` (or a CoW fork) — the scheduler/engine resolve that by
+//! preempting the lowest-progress sequence and requeueing it (see
+//! `scheduler.rs`), so the wall is never breached and a drain is always
+//! reachable.
 //!
 //! Accounting is dual: `reserved()` counts *logical tokens* (what callers
-//! asked for), `used_pages()` counts pool pages (what the wall charges).
+//! asked for; a shared prefix's tokens count once), `used_pages()` counts
+//! pool pages (what the wall charges; a shared prefix's pages count once).
 //! The gap between `used_pages * page_tokens` and `reserved` is internal
 //! fragmentation (`fragmentation()`).
 
@@ -34,6 +51,25 @@ use anyhow::{bail, Result};
 /// Sequence handle for reservations.
 pub type SeqId = u64;
 
+/// One live sequence's holdings: its private tokens plus an optional
+/// attachment to a refcounted shared prefix.
+#[derive(Debug, Clone, Copy)]
+struct SeqEntry {
+    /// Tokens this sequence owns exclusively (prompt tail past the shared
+    /// page boundary + decode growth), or its whole residency when
+    /// `prefix` is `None`.
+    private: usize,
+    /// Shared prefix this sequence reads, if any.
+    prefix: Option<u64>,
+}
+
+/// A resident shared prompt prefix (page-aligned token run charged once).
+#[derive(Debug, Clone, Copy)]
+struct PrefixEntry {
+    tokens: usize,
+    refs: usize,
+}
+
 #[derive(Debug)]
 pub struct KvMemoryManager {
     /// Total KV tokens that may be resident simultaneously
@@ -43,9 +79,13 @@ pub struct KvMemoryManager {
     page_tokens: usize,
     total_pages: usize,
     used_pages: usize,
-    /// Logical tokens reserved (sum over live sequences).
+    /// Logical tokens reserved (sum over live sequences' private tokens
+    /// plus each resident shared prefix once).
     reserved: usize,
-    seqs: BTreeMap<SeqId, usize>,
+    seqs: BTreeMap<SeqId, SeqEntry>,
+    /// Resident shared prefixes by caller-chosen id (the scheduler keys
+    /// them by prompt identity), each refcounted by its live sharers.
+    prefixes: BTreeMap<u64, PrefixEntry>,
     /// High-water mark of reserved tokens.
     pub peak_reserved: usize,
     /// High-water mark of pool pages in use.
@@ -58,7 +98,8 @@ pub struct KvMemoryManager {
     pub peak_live_seqs: usize,
     /// Count of rejected admission attempts (pressure signal).
     pub rejections: u64,
-    /// Count of rejected mid-decode `grow` attempts (preemption signal).
+    /// Count of rejected mid-decode `grow` / CoW-fork attempts
+    /// (preemption signal).
     pub grow_rejections: u64,
 }
 
@@ -81,6 +122,7 @@ impl KvMemoryManager {
             used_pages: 0,
             reserved: 0,
             seqs: BTreeMap::new(),
+            prefixes: BTreeMap::new(),
             peak_reserved: 0,
             peak_used_pages: 0,
             peak_live_seqs: 0,
@@ -132,6 +174,12 @@ impl KvMemoryManager {
         self.free_pages() / self.pages_for(per_seq)
     }
 
+    fn bump_peaks(&mut self) {
+        self.peak_reserved = self.peak_reserved.max(self.reserved);
+        self.peak_used_pages = self.peak_used_pages.max(self.used_pages);
+        self.peak_live_seqs = self.peak_live_seqs.max(self.seqs.len());
+    }
+
     /// Reserve `tokens` for a sequence; fails when the wall is hit.
     pub fn reserve(&mut self, seq: SeqId, tokens: usize) -> Result<()> {
         if self.seqs.contains_key(&seq) {
@@ -148,46 +196,212 @@ impl KvMemoryManager {
         }
         self.used_pages += pages;
         self.reserved += tokens;
-        self.peak_reserved = self.peak_reserved.max(self.reserved);
-        self.peak_used_pages = self.peak_used_pages.max(self.used_pages);
-        self.seqs.insert(seq, tokens);
-        self.peak_live_seqs = self.peak_live_seqs.max(self.seqs.len());
+        self.seqs.insert(seq, SeqEntry { private: tokens, prefix: None });
+        self.bump_peaks();
         Ok(())
     }
 
-    /// Grow a live reservation to `new_tokens` (mid-decode residency
-    /// growth, paged admission). Returns `Ok(false)` — without side
-    /// effects beyond the rejection counter — when the extra pages don't
-    /// fit; the caller preempts and retries. `new_tokens <= current` is a
-    /// no-op success.
+    /// Pages a `reserve_shared` with these arguments would charge right
+    /// now: the private pages, plus the prefix pages only when the prefix
+    /// is not already resident. The scheduler's headroom predicate prices
+    /// admission with this.
+    pub fn shared_admit_pages(
+        &self,
+        prefix_id: u64,
+        prefix_tokens: usize,
+        private_tokens: usize,
+    ) -> usize {
+        let prefix_pages = if self.prefixes.contains_key(&prefix_id) {
+            0
+        } else {
+            self.pages_for(prefix_tokens)
+        };
+        prefix_pages + self.pages_for(private_tokens)
+    }
+
+    /// Reserve a sequence that shares a page-aligned prompt prefix.
+    ///
+    /// The first sharer of `prefix_id` charges `prefix_tokens` (which
+    /// must be a whole number of pages) plus its private tokens; later
+    /// sharers attach to the resident prefix (refcount + 1) and charge
+    /// only their private tokens. Returns `Ok(true)` when the call
+    /// attached to an already-resident prefix, `Ok(false)` when it paid
+    /// for the prefix itself. All-or-nothing: a wall rejection leaves no
+    /// trace beyond the `rejections` counter.
+    pub fn reserve_shared(
+        &mut self,
+        seq: SeqId,
+        prefix_id: u64,
+        prefix_tokens: usize,
+        private_tokens: usize,
+    ) -> Result<bool> {
+        if self.seqs.contains_key(&seq) {
+            bail!("sequence {seq} already holds a reservation");
+        }
+        if prefix_tokens == 0 || prefix_tokens % self.page_tokens != 0 {
+            bail!(
+                "shared prefix must be a whole number of pages, got {} tokens at page size {}",
+                prefix_tokens,
+                self.page_tokens
+            );
+        }
+        if let Some(p) = self.prefixes.get(&prefix_id) {
+            if p.tokens != prefix_tokens {
+                bail!(
+                    "prefix {prefix_id} is resident with {} tokens, caller claims {}",
+                    p.tokens,
+                    prefix_tokens
+                );
+            }
+        }
+        let need = self.shared_admit_pages(prefix_id, prefix_tokens, private_tokens);
+        if need > self.free_pages() {
+            self.rejections += 1;
+            bail!(
+                "KV memory wall: shared admit needs {} pages, only {} free",
+                need,
+                self.free_pages()
+            );
+        }
+        let attached = match self.prefixes.get_mut(&prefix_id) {
+            Some(p) => {
+                p.refs += 1;
+                true
+            }
+            None => {
+                self.prefixes
+                    .insert(prefix_id, PrefixEntry { tokens: prefix_tokens, refs: 1 });
+                self.used_pages += self.pages_for(prefix_tokens);
+                self.reserved += prefix_tokens;
+                false
+            }
+        };
+        self.used_pages += self.pages_for(private_tokens);
+        self.reserved += private_tokens;
+        self.seqs
+            .insert(seq, SeqEntry { private: private_tokens, prefix: Some(prefix_id) });
+        self.bump_peaks();
+        Ok(attached)
+    }
+
+    /// The shared prefix a live sequence reads, if any.
+    pub fn seq_prefix(&self, seq: SeqId) -> Option<u64> {
+        self.seqs.get(&seq).and_then(|e| e.prefix)
+    }
+
+    /// Live sharers of a prefix (0 when the prefix is not resident).
+    pub fn prefix_refs(&self, prefix_id: u64) -> usize {
+        self.prefixes.get(&prefix_id).map_or(0, |p| p.refs)
+    }
+
+    /// Number of resident shared prefixes.
+    pub fn live_prefixes(&self) -> usize {
+        self.prefixes.len()
+    }
+
+    /// Grow a live reservation to a total residency of `new_tokens`
+    /// (mid-decode growth, paged admission). For a prefix-sharing
+    /// sequence the total includes the shared prefix, but only the
+    /// private portion past it is (re)charged. Returns `Ok(false)` —
+    /// without side effects beyond the rejection counter — when the extra
+    /// pages don't fit; the caller preempts and retries. `new_tokens <=
+    /// current total` is a no-op success.
     pub fn grow(&mut self, seq: SeqId, new_tokens: usize) -> Result<bool> {
-        let cur = match self.seqs.get(&seq) {
-            Some(&t) => t,
+        let entry = match self.seqs.get(&seq) {
+            Some(&e) => e,
             None => bail!("sequence {seq} holds no reservation"),
         };
-        if new_tokens <= cur {
+        let prefix_tokens = entry
+            .prefix
+            .map(|pid| self.prefixes[&pid].tokens)
+            .unwrap_or(0);
+        let cur_total = entry.private + prefix_tokens;
+        if new_tokens <= cur_total {
             return Ok(true);
         }
-        let delta_pages = self.pages_for(new_tokens) - self.pages_for(cur);
+        let new_private = new_tokens - prefix_tokens;
+        let delta_pages = self.pages_for(new_private) - self.pages_for(entry.private);
         if delta_pages > self.free_pages() {
             self.grow_rejections += 1;
             return Ok(false);
         }
         self.used_pages += delta_pages;
-        self.reserved += new_tokens - cur;
-        self.peak_reserved = self.peak_reserved.max(self.reserved);
-        self.peak_used_pages = self.peak_used_pages.max(self.used_pages);
-        self.seqs.insert(seq, new_tokens);
+        self.reserved += new_tokens - cur_total;
+        self.seqs
+            .insert(seq, SeqEntry { private: new_private, prefix: entry.prefix });
+        self.bump_peaks();
+        Ok(true)
+    }
+
+    /// Copy-on-write fork: detach `seq` from its shared prefix and make
+    /// its entire residency (`new_tokens`, typically the compressed
+    /// retained set) private. Compression rewrites retained planes, so
+    /// the engine calls this the moment a sharer's pages would be
+    /// mutated. The pages freed by detaching (this sequence's private
+    /// pages, plus the prefix pages when it is the last sharer) are
+    /// available to the fork itself. Returns `Ok(false)` with NO state
+    /// change (beyond `grow_rejections`) when the fork doesn't fit — the
+    /// caller preempts a victim and retries, exactly like a denied
+    /// `grow`.
+    pub fn fork_to_private(&mut self, seq: SeqId, new_tokens: usize) -> Result<bool> {
+        let entry = match self.seqs.get(&seq) {
+            Some(&e) => e,
+            None => bail!("sequence {seq} holds no reservation"),
+        };
+        let pid = match entry.prefix {
+            Some(pid) => pid,
+            None => bail!("sequence {seq} shares no prefix; nothing to fork"),
+        };
+        let prefix = self.prefixes[&pid];
+        let last = prefix.refs == 1;
+        let freed_pages = self.pages_for(entry.private)
+            + if last { self.pages_for(prefix.tokens) } else { 0 };
+        let need = self.pages_for(new_tokens);
+        if need > self.free_pages() + freed_pages {
+            self.grow_rejections += 1;
+            return Ok(false);
+        }
+        // Detach from the prefix (free it when we were the last reader)…
+        if last {
+            self.prefixes.remove(&pid);
+            self.used_pages -= self.pages_for(prefix.tokens);
+            self.reserved -= prefix.tokens;
+        } else {
+            self.prefixes.get_mut(&pid).unwrap().refs -= 1;
+        }
+        // …and swap the private holding for the full forked residency.
+        self.used_pages -= self.pages_for(entry.private);
+        self.reserved -= entry.private;
+        self.used_pages += need;
+        self.reserved += new_tokens;
+        self.seqs.insert(seq, SeqEntry { private: new_tokens, prefix: None });
+        self.bump_peaks();
         Ok(true)
     }
 
     /// Release a sequence's reservation (finished / evicted / preempted).
+    /// Returns the tokens this release removed from `reserved()` — the
+    /// sequence's private tokens, plus its shared prefix's tokens when it
+    /// was the last sharer.
     pub fn release(&mut self, seq: SeqId) -> Result<usize> {
         match self.seqs.remove(&seq) {
-            Some(tokens) => {
-                self.used_pages -= self.pages_for(tokens);
-                self.reserved -= tokens;
-                Ok(tokens)
+            Some(entry) => {
+                self.used_pages -= self.pages_for(entry.private);
+                self.reserved -= entry.private;
+                let mut freed = entry.private;
+                if let Some(pid) = entry.prefix {
+                    let p = self.prefixes.get_mut(&pid).expect("dangling prefix ref");
+                    if p.refs == 1 {
+                        let tokens = p.tokens;
+                        self.prefixes.remove(&pid);
+                        self.used_pages -= self.pages_for(tokens);
+                        self.reserved -= tokens;
+                        freed += tokens;
+                    } else {
+                        p.refs -= 1;
+                    }
+                }
+                Ok(freed)
             }
             None => bail!("sequence {seq} holds no reservation"),
         }
@@ -195,16 +409,24 @@ impl KvMemoryManager {
 
     /// Shrink a live reservation (e.g. after compression established a
     /// tighter bound). Growing via `shrink` is rejected — use `grow`, so
-    /// the wall check always runs.
+    /// the wall check always runs. A prefix-sharing sequence cannot
+    /// shrink in place: compression rewrites shared pages, so the caller
+    /// must `fork_to_private` first (the scheduler routes this).
     pub fn shrink(&mut self, seq: SeqId, new_tokens: usize) -> Result<()> {
         match self.seqs.get(&seq) {
-            Some(&cur) => {
+            Some(&entry) => {
+                if entry.prefix.is_some() {
+                    bail!(
+                        "shrink({seq}) on a prefix-sharing sequence; fork_to_private first"
+                    );
+                }
+                let cur = entry.private;
                 if new_tokens > cur {
                     bail!("shrink({seq}) would grow {} -> {}", cur, new_tokens);
                 }
                 self.used_pages -= self.pages_for(cur) - self.pages_for(new_tokens);
                 self.reserved -= cur - new_tokens;
-                self.seqs.insert(seq, new_tokens);
+                self.seqs.insert(seq, SeqEntry { private: new_tokens, prefix: None });
                 Ok(())
             }
             None => bail!("sequence {seq} holds no reservation"),
@@ -216,19 +438,63 @@ impl KvMemoryManager {
     }
 
     /// Structural invariants the property tests hold at every step:
-    /// token and page accounting both equal the sums over live
-    /// reservations, pages never exceed the pool, reserved tokens fit in
+    /// token and page accounting both equal the sums over live private
+    /// holdings plus each resident shared prefix ONCE, every prefix's
+    /// refcount equals the number of live sequences attached to it (and
+    /// is never 0 — the last release/fork frees the prefix), prefixes are
+    /// whole pages, pages never exceed the pool, reserved tokens fit in
     /// the pages charged for them, and the high-water marks are
     /// monotone-consistent (at least current residency, never above the
     /// wall).
     pub fn check_invariants(&self) -> Result<()> {
-        let sum: usize = self.seqs.values().sum();
+        let prefix_tok: usize = self.prefixes.values().map(|p| p.tokens).sum();
+        let sum: usize = self.seqs.values().map(|e| e.private).sum::<usize>() + prefix_tok;
         if self.reserved != sum {
             bail!("reserved {} != sum of live reservations {}", self.reserved, sum);
         }
-        let page_sum: usize = self.seqs.values().map(|&t| self.pages_for(t)).sum();
+        let page_sum: usize = self
+            .seqs
+            .values()
+            .map(|e| self.pages_for(e.private))
+            .sum::<usize>()
+            + self
+                .prefixes
+                .values()
+                .map(|p| self.pages_for(p.tokens))
+                .sum::<usize>();
         if self.used_pages != page_sum {
             bail!("used_pages {} != sum of live page counts {}", self.used_pages, page_sum);
+        }
+        for (pid, p) in &self.prefixes {
+            if p.refs == 0 {
+                bail!("prefix {pid} is resident with refcount 0");
+            }
+            if p.tokens == 0 || p.tokens % self.page_tokens != 0 {
+                bail!(
+                    "prefix {pid} holds {} tokens, not a whole number of pages ({})",
+                    p.tokens,
+                    self.page_tokens
+                );
+            }
+            let readers = self
+                .seqs
+                .values()
+                .filter(|e| e.prefix == Some(*pid))
+                .count();
+            if readers != p.refs {
+                bail!(
+                    "prefix {pid} refcount {} != {} live sequences attached to it",
+                    p.refs,
+                    readers
+                );
+            }
+        }
+        for (seq, e) in &self.seqs {
+            if let Some(pid) = e.prefix {
+                if !self.prefixes.contains_key(&pid) {
+                    bail!("sequence {seq} references missing prefix {pid}");
+                }
+            }
         }
         if self.used_pages > self.total_pages {
             bail!(
@@ -414,6 +680,113 @@ mod tests {
     }
 
     #[test]
+    fn shared_prefix_charges_once_and_refcounts() {
+        let mut m = KvMemoryManager::with_pages(64, 8); // 8 pages
+        // first sharer pays the 2-page prefix + 1 private page
+        assert!(!m.reserve_shared(1, 7, 16, 4).unwrap());
+        assert_eq!(m.used_pages(), 3);
+        assert_eq!(m.reserved(), 20);
+        assert_eq!(m.prefix_refs(7), 1);
+        // second sharer attaches: only its private page is charged
+        assert!(m.reserve_shared(2, 7, 16, 4).unwrap());
+        assert_eq!(m.used_pages(), 4);
+        assert_eq!(m.reserved(), 24);
+        assert_eq!(m.prefix_refs(7), 2);
+        assert_eq!(m.seq_prefix(2), Some(7));
+        m.check_invariants().unwrap();
+        // shared admit pricing: resident prefix costs nothing, a fresh
+        // prefix costs its pages
+        assert_eq!(m.shared_admit_pages(7, 16, 4), 1);
+        assert_eq!(m.shared_admit_pages(8, 16, 4), 3);
+        // releasing a non-last sharer keeps the prefix resident
+        assert_eq!(m.release(1).unwrap(), 4);
+        assert_eq!(m.used_pages(), 3);
+        assert_eq!(m.prefix_refs(7), 1);
+        m.check_invariants().unwrap();
+        // the last sharer's release frees the prefix pages too
+        assert_eq!(m.release(2).unwrap(), 20);
+        assert_eq!(m.used_pages(), 0);
+        assert_eq!(m.reserved(), 0);
+        assert_eq!(m.live_prefixes(), 0);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_validates_shape() {
+        let mut m = KvMemoryManager::with_pages(64, 8);
+        // prefix must be whole pages and non-empty
+        assert!(m.reserve_shared(1, 7, 12, 4).is_err());
+        assert!(m.reserve_shared(1, 7, 0, 4).is_err());
+        m.reserve_shared(1, 7, 16, 4).unwrap();
+        // token-count mismatch against the resident prefix is a bug
+        assert!(m.reserve_shared(2, 7, 24, 4).is_err());
+        // duplicate sequence id is rejected before any accounting
+        assert!(m.reserve_shared(1, 7, 16, 4).is_err());
+        // in-place shrink on a sharer is refused (CoW fork required)
+        assert!(m.shrink(1, 2).is_err());
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_to_private_detaches_and_cow_copies() {
+        let mut m = KvMemoryManager::with_pages(64, 8); // 8 pages
+        m.reserve_shared(1, 7, 16, 4).unwrap();
+        m.reserve_shared(2, 7, 16, 4).unwrap();
+        assert_eq!(m.used_pages(), 4);
+        // fork seq 1 to a 24-token private residency (the CoW copy):
+        // its 1 private page frees, 3 fresh pages charge, prefix stays
+        assert!(m.fork_to_private(1, 24).unwrap());
+        assert_eq!(m.seq_prefix(1), None);
+        assert_eq!(m.prefix_refs(7), 1);
+        assert_eq!(m.used_pages(), 6); // 3 (seq1) + 2 (prefix) + 1 (seq2)
+        assert_eq!(m.reserved(), 44); // 24 + 16 + 4
+        m.check_invariants().unwrap();
+        // forking the LAST sharer frees the prefix pages into the fork
+        assert!(m.fork_to_private(2, 24).unwrap());
+        assert_eq!(m.live_prefixes(), 0);
+        assert_eq!(m.used_pages(), 6); // 3 + 3
+        assert_eq!(m.reserved(), 48);
+        m.check_invariants().unwrap();
+        // forked sequences release like plain ones
+        assert_eq!(m.release(1).unwrap(), 24);
+        assert_eq!(m.release(2).unwrap(), 24);
+        assert_eq!(m.used_pages(), 0);
+    }
+
+    #[test]
+    fn denied_fork_leaves_no_trace() {
+        let mut m = KvMemoryManager::with_pages(40, 8); // 5 pages
+        m.reserve_shared(1, 7, 16, 4).unwrap(); // 3 pages
+        m.reserve_shared(2, 7, 16, 4).unwrap(); // +1 page
+        m.reserve(3, 8).unwrap(); // +1 page; pool full
+        // seq 2 forking to 32 tokens needs 4 pages; free(0) + its own
+        // private page = 1 available -> denied, untouched
+        let before = (m.used_pages(), m.reserved(), m.prefix_refs(7));
+        assert!(!m.fork_to_private(2, 32).unwrap());
+        assert_eq!(m.grow_rejections, 1);
+        assert_eq!((m.used_pages(), m.reserved(), m.prefix_refs(7)), before);
+        assert_eq!(m.seq_prefix(2), Some(7));
+        m.check_invariants().unwrap();
+        // fork on a non-sharing or unknown sequence is an error
+        assert!(m.fork_to_private(3, 8).is_err());
+        assert!(m.fork_to_private(99, 8).is_err());
+    }
+
+    #[test]
+    fn grow_charges_only_private_pages_for_sharers() {
+        let mut m = KvMemoryManager::with_pages(64, 8);
+        m.reserve_shared(1, 7, 16, 4).unwrap(); // 2 prefix pages + 1 private
+        // total residency 20 -> 24 stays inside the private page
+        assert!(m.grow(1, 24).unwrap());
+        assert_eq!(m.used_pages(), 3);
+        // 25 crosses into a second private page
+        assert!(m.grow(1, 25).unwrap());
+        assert_eq!(m.used_pages(), 4);
+        assert_eq!(m.reserved(), 25);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
     fn prop_accounting_conserves() {
         propcheck::quick("kv-conservation", |rng, size| {
             let cap = 64 + size * 8;
@@ -450,18 +823,25 @@ mod tests {
 
     #[test]
     fn prop_paged_pool_conserves_under_grow_shrink() {
-        // Random reserve/grow/shrink/release interleavings at random page
-        // sizes: pages and tokens both conserve, the pool is never
-        // overdrawn, and failed grows leave no trace.
+        // Random reserve/reserve_shared/grow/fork/shrink/release
+        // interleavings at random page sizes, checked against a shadow
+        // model: pages and tokens both conserve with every shared prefix
+        // counted ONCE, refcounts match the shadow sharer counts, a
+        // denied grow or fork leaves no trace, releasing the last sharer
+        // frees the prefix, and a full drain always reaches the empty
+        // pool.
         propcheck::quick("kv-paged-conservation", |rng, size| {
             let page = 1 + rng.below(16);
             let pool_pages = 4 + rng.below(16 + size);
             let cap = page * pool_pages;
             let mut m = KvMemoryManager::with_pages(cap, page);
-            let mut live: Vec<(SeqId, usize)> = vec![];
+            // shadow: (id, private tokens, Some((prefix id, prefix tokens)))
+            let mut live: Vec<(SeqId, usize, Option<(u64, usize)>)> = vec![];
             let mut next_id = 0u64;
+            // a small universe of prefix identities with fixed shapes
+            let prefix_shape = |pid: u64| page * (1 + pid as usize % 3);
             for _ in 0..200 {
-                match if live.is_empty() { 0 } else { rng.below(4) } {
+                match if live.is_empty() { rng.below(2) * 4 } else { rng.below(6) } {
                     0 => {
                         next_id += 1;
                         let want = 1 + rng.below(cap / 2 + 1);
@@ -471,41 +851,111 @@ mod tests {
                             return Err(format!("reserve({want}) = {got}, fits = {fits}"));
                         }
                         if got {
-                            live.push((next_id, want));
+                            live.push((next_id, want, None));
                         }
                     }
                     1 => {
                         let k = rng.below(live.len());
-                        let (id, cur) = live[k];
-                        let target = cur + rng.below(2 * page + 1);
-                        let delta = m.pages_for(target) - m.pages_for(cur);
+                        let (id, cur, pfx) = live[k];
+                        let ptoks = pfx.map(|(_, t)| t).unwrap_or(0);
+                        let target = ptoks + cur + rng.below(2 * page + 1);
+                        let delta = m.pages_for(target - ptoks) - m.pages_for(cur);
                         let fits = delta <= m.free_pages();
                         let grown = m.grow(id, target).map_err(|e| e.to_string())?;
                         if grown != fits {
-                            return Err(format!("grow({cur}->{target}) = {grown}, fits = {fits}"));
+                            return Err(format!("grow(->{target}) = {grown}, fits = {fits}"));
                         }
                         if grown {
-                            live[k].1 = target;
+                            live[k].1 = target - ptoks;
                         }
                     }
                     2 => {
                         let k = rng.below(live.len());
-                        let (id, cur) = live[k];
-                        let target = rng.below(cur + 1);
-                        m.shrink(id, target).map_err(|e| e.to_string())?;
-                        live[k].1 = target;
+                        let (id, cur, pfx) = live[k];
+                        if pfx.is_some() {
+                            // sharers may not shrink in place
+                            if m.shrink(id, 0).is_ok() {
+                                return Err("shrink succeeded on a sharer".into());
+                            }
+                        } else {
+                            let target = rng.below(cur + 1);
+                            m.shrink(id, target).map_err(|e| e.to_string())?;
+                            live[k].1 = target;
+                        }
+                    }
+                    3 => {
+                        let k = rng.below(live.len());
+                        let (id, toks, pfx) = live.swap_remove(k);
+                        let last = pfx.map_or(false, |(pid, _)| {
+                            !live.iter().any(|(_, _, p)| p.map(|(q, _)| q) == Some(pid))
+                        });
+                        let expect = toks + if last { pfx.unwrap().1 } else { 0 };
+                        let freed = m.release(id).map_err(|e| e.to_string())?;
+                        if freed != expect {
+                            return Err(format!("released {freed}, expected {expect}"));
+                        }
+                    }
+                    4 => {
+                        // shared admission against one of 3 prefix ids
+                        let pid = rng.below(3) as u64;
+                        let ptoks = prefix_shape(pid);
+                        let private = rng.below(2 * page + 1);
+                        next_id += 1;
+                        let need = m.shared_admit_pages(pid, ptoks, private);
+                        let fits = need <= m.free_pages();
+                        let got = m.reserve_shared(next_id, pid, ptoks, private).is_ok();
+                        if got != fits {
+                            return Err(format!(
+                                "reserve_shared(pid {pid}) = {got}, fits = {fits}"
+                            ));
+                        }
+                        if got {
+                            live.push((next_id, private, Some((pid, ptoks))));
+                        }
                     }
                     _ => {
-                        let k = rng.below(live.len());
-                        let (id, toks) = live.swap_remove(k);
-                        let freed = m.release(id).map_err(|e| e.to_string())?;
-                        if freed != toks {
-                            return Err(format!("released {freed}, reserved {toks}"));
+                        // CoW fork of a random sharer (no-op pick if none)
+                        let sharers: Vec<usize> = (0..live.len())
+                            .filter(|&k| live[k].2.is_some())
+                            .collect();
+                        if let Some(&k) = sharers.get(rng.below(sharers.len().max(1))) {
+                            let (id, cur, pfx) = live[k];
+                            let (pid, ptoks) = pfx.unwrap();
+                            let target = rng.below(ptoks + cur + page) + 1;
+                            let last = live
+                                .iter()
+                                .filter(|(_, _, p)| p.map(|(q, _)| q) == Some(pid))
+                                .count()
+                                == 1;
+                            let avail = m.free_pages()
+                                + m.pages_for(cur)
+                                + if last { m.pages_for(ptoks) } else { 0 };
+                            let fits = m.pages_for(target) <= avail;
+                            let forked =
+                                m.fork_to_private(id, target).map_err(|e| e.to_string())?;
+                            if forked != fits {
+                                return Err(format!(
+                                    "fork(->{target}) = {forked}, fits = {fits}"
+                                ));
+                            }
+                            if forked {
+                                live[k] = (id, target, None);
+                            }
                         }
                     }
                 }
-                let tok_sum: usize = live.iter().map(|(_, t)| t).sum();
-                let page_sum: usize = live.iter().map(|(_, t)| m.pages_for(*t)).sum();
+                // shadow-model totals: every distinct live prefix once
+                let mut shadow_prefixes: BTreeMap<u64, usize> = BTreeMap::new();
+                for (_, _, p) in &live {
+                    if let Some((pid, t)) = p {
+                        shadow_prefixes.insert(*pid, *t);
+                    }
+                }
+                let tok_sum: usize = live.iter().map(|(_, t, _)| t).sum::<usize>()
+                    + shadow_prefixes.values().sum::<usize>();
+                let page_sum: usize =
+                    live.iter().map(|(_, t, _)| m.pages_for(*t)).sum::<usize>()
+                        + shadow_prefixes.values().map(|&t| m.pages_for(t)).sum::<usize>();
                 if m.reserved() != tok_sum || m.used_pages() != page_sum {
                     return Err(format!(
                         "pool out of sync: {}/{} vs {}/{}",
@@ -515,13 +965,33 @@ mod tests {
                         page_sum
                     ));
                 }
+                if m.live_prefixes() != shadow_prefixes.len() {
+                    return Err(format!(
+                        "{} resident prefixes, shadow has {}",
+                        m.live_prefixes(),
+                        shadow_prefixes.len()
+                    ));
+                }
+                for (&pid, _) in &shadow_prefixes {
+                    let refs = live
+                        .iter()
+                        .filter(|(_, _, p)| p.map(|(q, _)| q) == Some(pid))
+                        .count();
+                    if m.prefix_refs(pid) != refs {
+                        return Err(format!(
+                            "prefix {pid} refcount {} != shadow {}",
+                            m.prefix_refs(pid),
+                            refs
+                        ));
+                    }
+                }
                 m.check_invariants().map_err(|e| e.to_string())?;
             }
             // a full drain always reaches the empty pool
-            for (id, _) in live.drain(..) {
+            for (id, _, _) in live.drain(..) {
                 m.release(id).map_err(|e| e.to_string())?;
             }
-            if m.used_pages() != 0 || m.reserved() != 0 {
+            if m.used_pages() != 0 || m.reserved() != 0 || m.live_prefixes() != 0 {
                 return Err("drain left residue".into());
             }
             Ok(())

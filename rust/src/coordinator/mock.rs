@@ -336,6 +336,31 @@ mod tests {
     }
 
     #[test]
+    fn one_prepared_prefill_attaches_to_many_slots() {
+        // The prefix-sharing contract: ONE prepared prompt payload,
+        // cloned and applied to each sibling slot of a group, must leave
+        // every slot exactly as its own direct prefill_slot would —
+        // that's what lets the engines prefill a GRPO group's prompt once
+        // and attach it G times.
+        let mut worker = MockModelBackend::dense(3, 6, 32, 32);
+        let mut reference = MockModelBackend::dense(3, 6, 32, 32);
+        worker.prefill(&[5i32; 18], &[6, 6, 6]).unwrap();
+        reference.prefill(&[5i32; 18], &[6, 6, 6]).unwrap();
+        let prompt = [1, 7, 8, 9];
+        let prepared = worker.prepare_prefill(&prompt).unwrap();
+        for slot in 0..3 {
+            let attached = worker.apply_prefill(slot, prepared.clone()).unwrap();
+            let direct = reference.prefill_slot(slot, &prompt).unwrap();
+            assert_eq!(attached, direct, "slot {slot} attach diverges");
+            assert_eq!(worker.cache[slot], reference.cache[slot]);
+        }
+        // subsequent decode sees identical state on every sibling
+        let a = worker.decode(&[4, 4, 4], &[4, 4, 4], &[3, 3, 3]).unwrap();
+        let b = reference.decode(&[4, 4, 4], &[4, 4, 4], &[3, 3, 3]).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn overflow_write_is_dropped() {
         let mut m = MockModelBackend::sparse(1, 4, 64, 32, 6, 2);
         m.prefill(&[1, 3, 4, 5], &[4]).unwrap();

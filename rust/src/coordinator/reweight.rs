@@ -7,6 +7,8 @@
 //! packs ragged rollout results into the fixed [Btr, T] tensors and
 //! computes the mismatch-KL diagnostic (Fig. 3).
 
+use anyhow::{bail, Result};
+
 use crate::runtime::manifest::Manifest;
 
 /// One finished rollout sequence, ready for training.
@@ -54,10 +56,17 @@ pub const XI_CAP: f64 = 1e4;
 /// Rows beyond `seqs.len()` are padding: mrs = 0 so they contribute
 /// nothing to the objective (the artifact multiplies per-sequence terms by
 /// M^RS).
-pub fn pack(manifest: &Manifest, seqs: &[&TrainSeq]) -> TrainBatch {
+///
+/// A sequence whose `xi` or `logp_old` is shorter than its response is a
+/// producer bug and is reported as `Err` — these used to be
+/// `debug_assert!`s only, so a release build would panic on the raw
+/// `seq.xi[r]` index below instead of failing cleanly.
+pub fn pack(manifest: &Manifest, seqs: &[&TrainSeq]) -> Result<TrainBatch> {
     let b = manifest.shapes.train_batch;
     let t = manifest.config.max_seq;
-    assert!(seqs.len() <= b, "{} seqs > train_batch {}", seqs.len(), b);
+    if seqs.len() > b {
+        bail!("{} seqs > train_batch {}", seqs.len(), b);
+    }
 
     let mut batch = TrainBatch {
         ids: vec![0; b * t],
@@ -73,8 +82,15 @@ pub fn pack(manifest: &Manifest, seqs: &[&TrainSeq]) -> TrainBatch {
     for (row, seq) in seqs.iter().enumerate() {
         let n = seq.ids.len().min(t);
         let resp_len = n.saturating_sub(seq.prompt_len);
-        debug_assert!(seq.xi.len() >= resp_len, "xi shorter than response");
-        debug_assert!(seq.logp_old.len() >= resp_len);
+        if seq.xi.len() < resp_len {
+            bail!("seq {row}: xi has {} entries for a {resp_len}-token response", seq.xi.len());
+        }
+        if seq.logp_old.len() < resp_len {
+            bail!(
+                "seq {row}: logp_old has {} entries for a {resp_len}-token response",
+                seq.logp_old.len()
+            );
+        }
         batch.lens[row] = n as i32;
         batch.adv[row] = seq.advantage as f32;
         batch.mrs[row] = if seq.accept { 1.0 } else { 0.0 };
@@ -100,28 +116,35 @@ pub fn pack(manifest: &Manifest, seqs: &[&TrainSeq]) -> TrainBatch {
             batch.logp_old[row * t + col] = seq.logp_old[r];
         }
     }
-    batch
+    Ok(batch)
 }
 
 /// Mismatch KL estimate KL(π_sparse ‖ π_old) over a set of sequences
 /// (Fig. 3): mean over response tokens of (log π_sparse - log π_old)
 /// under samples from π_sparse.
-pub fn mismatch_kl(seqs: &[(&[f32], &[f32])]) -> f64 {
+///
+/// The two log-prob vectors of a pair must cover the same response
+/// tokens; a length mismatch is reported as `Err` (the old
+/// `debug_assert_eq!` let a release build silently `zip`-truncate to the
+/// shorter vector, skewing the diagnostic the trainer logs).
+pub fn mismatch_kl(seqs: &[(&[f32], &[f32])]) -> Result<f64> {
     // seqs: (logp_sparse, logp_old) pairs per sequence
     let mut sum = 0.0f64;
     let mut n = 0usize;
-    for (sp, old) in seqs {
-        debug_assert_eq!(sp.len(), old.len());
+    for (i, (sp, old)) in seqs.iter().enumerate() {
+        if sp.len() != old.len() {
+            bail!(
+                "seq {i}: {} sparse log-probs vs {} old-policy log-probs",
+                sp.len(),
+                old.len()
+            );
+        }
         for (s, o) in sp.iter().zip(old.iter()) {
             sum += (*s as f64) - (*o as f64);
             n += 1;
         }
     }
-    if n == 0 {
-        0.0
-    } else {
-        sum / n as f64
-    }
+    Ok(if n == 0 { 0.0 } else { sum / n as f64 })
 }
 
 #[cfg(test)]
@@ -190,7 +213,7 @@ mod tests {
         let t = m.config.max_seq;
         let s1 = mk_seq(5, 7, true);
         let s2 = mk_seq(3, 2, false);
-        let b = pack(&m, &[&s1, &s2]);
+        let b = pack(&m, &[&s1, &s2]).unwrap();
         assert_eq!(b.rows, 2);
         assert_eq!(b.lens[0], 12);
         assert_eq!(b.mrs[0], 1.0);
@@ -219,7 +242,7 @@ mod tests {
         };
         let mut s = mk_seq(2, 3, true);
         s.xi = vec![1e9, 0.5, -1.0]; // -1 can't happen but must clamp safely
-        let b = pack(&m, &[&s]);
+        let b = pack(&m, &[&s]).unwrap();
         let t = m.config.max_seq;
         assert_eq!(b.xi[2], XI_CAP as f32);
         assert_eq!(b.xi[3], 0.5);
@@ -234,7 +257,7 @@ mod tests {
         let m = tiny_manifest().unwrap();
         let mut s = mk_seq(2, 4, true);
         s.xi = vec![f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 2.0];
-        let b = pack(&m, &[&s]);
+        let b = pack(&m, &[&s]).unwrap();
         assert_eq!(b.xi[2], 0.0, "NaN must carry zero weight");
         assert_eq!(b.xi[3], XI_CAP as f32, "+inf clamps to the cap");
         assert_eq!(b.xi[4], 0.0, "-inf must carry zero weight");
@@ -247,10 +270,32 @@ mod tests {
         // sparse assigns higher prob to its own samples -> positive KL
         let sp = [-0.5f32, -0.6];
         let old = [-1.0f32, -1.2];
-        let kl = mismatch_kl(&[(&sp, &old)]);
+        let kl = mismatch_kl(&[(&sp, &old)]).unwrap();
         assert!(kl > 0.0);
         // identical policies -> zero
-        assert_eq!(mismatch_kl(&[(&sp, &sp)]), 0.0);
-        assert_eq!(mismatch_kl(&[]), 0.0);
+        assert_eq!(mismatch_kl(&[(&sp, &sp)]).unwrap(), 0.0);
+        assert_eq!(mismatch_kl(&[]).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn length_mismatches_are_errors_without_debug_assertions() {
+        // regression for the debug_assert-only guards: these inputs used
+        // to panic (pack: raw index past xi/logp_old) or silently
+        // zip-truncate (mismatch_kl) in a release build, where the old
+        // debug_assert!s compile away. The checks must hold as real
+        // errors regardless of cfg(debug_assertions).
+        let m = tiny_manifest().unwrap();
+
+        let mut s = mk_seq(2, 4, true);
+        s.xi = vec![1.0; 3]; // one short for a 4-token response
+        assert!(pack(&m, &[&s]).is_err());
+
+        let mut s = mk_seq(2, 4, true);
+        s.logp_old = vec![-0.7; 2]; // two short
+        assert!(pack(&m, &[&s]).is_err());
+
+        let sp = [-0.5f32, -0.6, -0.7];
+        let old = [-1.0f32, -1.2];
+        assert!(mismatch_kl(&[(&sp, &old)]).is_err());
     }
 }

@@ -36,9 +36,9 @@
 //!   paged admission the effective width is data-dependent, so the closed
 //!   forms bound it via `predicted_decode_steps_with` (see `width_paged`).
 
-use std::collections::{BTreeSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
-use crate::config::{AdmissionOrder, AdmissionPolicy};
+use crate::config::{AdmissionOrder, AdmissionPolicy, PrefixSharing};
 use crate::runtime::Manifest;
 
 use super::kv_manager::{KvMemoryManager, SeqId};
@@ -173,10 +173,17 @@ pub struct SchedulerStats {
     /// Admission attempts refused by the memory wall (continuous engine:
     /// a freed slot had to idle because no KV could be reserved).
     pub admit_stalls: usize,
-    /// Mid-decode grow attempts refused by the wall (paged admission).
+    /// Mid-decode grow attempts refused by the wall (paged admission;
+    /// includes denied copy-on-write forks under prefix sharing).
     pub grow_stalls: usize,
     /// Sequences preempted and requeued to resolve a grow stall.
     pub preemptions: usize,
+    /// Admissions that attached to an already-resident shared prompt
+    /// prefix instead of paying for it (prefix sharing).
+    pub shared_admissions: usize,
+    /// Copy-on-write forks: sharers detached from their prefix at their
+    /// first compression event (prefix sharing).
+    pub cow_forks: usize,
 }
 
 impl SchedulerStats {
@@ -227,7 +234,21 @@ pub struct Scheduler {
     /// first, so a big task never head-of-line-blocks a small admissible
     /// one). Pure scheduling: per-task RNG keeps tokens order-invariant.
     pub order: AdmissionOrder,
+    /// Prompt-prefix KV sharing (`prefix-sharing`): `Group` lets
+    /// sequences with identical prompts (a GRPO group / eval's K samples)
+    /// share their page-aligned prompt prefix through the refcounted
+    /// pool, charging it once. Accounting only changes under paged
+    /// admission (worst-case prices per sequence by definition). Default
+    /// off — the seed accounting, bit-exact.
+    pub sharing: PrefixSharing,
     pub stats: SchedulerStats,
+    /// Prompt identity -> prefix id for the refcounted pool. Keyed by the
+    /// exact prompt token run; ids are stable for the scheduler's
+    /// lifetime, and a dead prefix (all sharers released) is simply
+    /// re-charged fresh on its next use (`shared_admit_pages` checks
+    /// residency, not this registry).
+    prefix_ids: BTreeMap<Vec<i32>, u64>,
+    next_prefix_id: u64,
 }
 
 impl Scheduler {
@@ -251,7 +272,10 @@ impl Scheduler {
             admission: AdmissionPolicy::WorstCase,
             admit_headroom_pages: 1,
             order: AdmissionOrder::Fifo,
+            sharing: PrefixSharing::Off,
             stats: SchedulerStats::default(),
+            prefix_ids: BTreeMap::new(),
+            next_prefix_id: 0,
         }
     }
 
@@ -271,6 +295,12 @@ impl Scheduler {
     /// Select the admission order (builder style; see `order`).
     pub fn with_order(mut self, order: AdmissionOrder) -> Self {
         self.order = order;
+        self
+    }
+
+    /// Select prompt-prefix sharing (builder style; see `sharing`).
+    pub fn with_sharing(mut self, sharing: PrefixSharing) -> Self {
+        self.sharing = sharing;
         self
     }
 
@@ -441,6 +471,62 @@ impl Scheduler {
         true
     }
 
+    /// Prompt-aware sequence admission: like `try_admit`, but under
+    /// `prefix-sharing = group` + paged admission the sequence shares its
+    /// page-aligned prompt prefix through the refcounted pool. The FIRST
+    /// sequence of a prompt charges exactly what `try_admit` would (the
+    /// prefix is page-aligned, so `pages(prefix) + pages(private) ==
+    /// pages(total)`); siblings attach to the resident prefix and charge
+    /// only their private pages — which is where G-way groups get their
+    /// admission-width win. Falls back to `try_admit` whenever sharing is
+    /// off, admission is worst-case, or the prompt is too short to span a
+    /// page.
+    pub fn try_admit_prompt(
+        &mut self,
+        kv: &mut KvMemoryManager,
+        seq: SeqId,
+        prompt: &[i32],
+    ) -> bool {
+        let want = self.admit_reserve(prompt.len());
+        let page = kv.page_tokens();
+        let shared = (prompt.len() / page) * page;
+        if !self.sharing.is_group()
+            || self.admission != AdmissionPolicy::Paged
+            || shared == 0
+            || want <= shared
+        {
+            return self.try_admit(kv, seq, prompt.len());
+        }
+        let pid = match self.prefix_ids.get(prompt) {
+            Some(&pid) => pid,
+            None => {
+                let pid = self.next_prefix_id;
+                self.next_prefix_id += 1;
+                self.prefix_ids.insert(prompt.to_vec(), pid);
+                pid
+            }
+        };
+        let private = want - shared;
+        let pages = kv.shared_admit_pages(pid, shared, private);
+        let ok = if kv.live_sequences() == 0 {
+            pages <= kv.free_pages()
+        } else {
+            pages.saturating_add(self.admit_headroom_pages) <= kv.free_pages()
+        };
+        if !ok {
+            self.stats.admit_stalls += 1;
+            return false;
+        }
+        let attached = kv
+            .reserve_shared(seq, pid, shared, private)
+            .expect("admission check guaranteed room");
+        self.stats.seq_admissions += 1;
+        if attached {
+            self.stats.shared_admissions += 1;
+        }
+        true
+    }
+
     /// Grow a live sequence's reservation to cover `need_tokens` resident
     /// tokens (paged admission only; worst-case reservations already cover
     /// every reachable residency). Returns false when the wall is full —
@@ -466,18 +552,36 @@ impl Scheduler {
         Ok(grown)
     }
 
-    /// Shrink a live sequence's reservation to its post-compression
-    /// residency (paged admission; no-op for worst-case).
+    /// Adjust a live sequence's reservation to its post-compression
+    /// residency (paged admission; no-op for worst-case). A
+    /// prefix-sharing sequence cannot shrink in place — compression
+    /// rewrites retained KV planes, so the sequence must own its whole
+    /// residency first: this is the copy-on-write trigger. The fork can
+    /// need net-new pages (the retained set becomes private while the
+    /// prefix stays resident for its siblings), so like `grow` it can
+    /// stall on the wall: `Ok(false)` means the caller must preempt a
+    /// victim and retry. Non-sharing sequences shrink in place and always
+    /// return `Ok(true)`.
     pub fn compressed(
         &mut self,
         kv: &mut KvMemoryManager,
         seq: SeqId,
         kept_tokens: usize,
-    ) -> anyhow::Result<()> {
+    ) -> anyhow::Result<bool> {
         if self.admission == AdmissionPolicy::WorstCase {
-            return Ok(());
+            return Ok(true);
         }
-        kv.shrink(seq, kept_tokens)
+        if kv.seq_prefix(seq).is_some() {
+            let forked = kv.fork_to_private(seq, kept_tokens)?;
+            if forked {
+                self.stats.cow_forks += 1;
+            } else {
+                self.stats.grow_stalls += 1;
+            }
+            return Ok(forked);
+        }
+        kv.shrink(seq, kept_tokens)?;
+        Ok(true)
     }
 
     /// Sequence-level release (continuous engine): frees the reservation
@@ -730,7 +834,7 @@ mod tests {
         assert_eq!(s.stats.preemptions, 1);
         assert!(s.grow(&mut kv, 3, 21).unwrap());
         // compression shrink releases pages again
-        s.compressed(&mut kv, 1, 5).unwrap();
+        assert!(s.compressed(&mut kv, 1, 5).unwrap());
         assert_eq!(kv.free_pages(), 3);
         kv.check_invariants().unwrap();
     }
@@ -771,7 +875,7 @@ mod tests {
         assert!(s.try_admit(&mut kv, 1, 10));
         assert_eq!(kv.reserved(), 40);
         assert!(s.grow(&mut kv, 1, 39).unwrap());
-        s.compressed(&mut kv, 1, 5).unwrap();
+        assert!(s.compressed(&mut kv, 1, 5).unwrap());
         assert_eq!(kv.reserved(), 40, "worst-case reservation must not move");
         assert_eq!(s.stats.grow_stalls, 0);
     }
@@ -880,6 +984,106 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn shared_admission_charges_prefix_once() {
+        // page 4; 10-token prompts share an 8-token page-aligned prefix
+        let mut kv = KvMemoryManager::with_pages(100, 4); // 25 pages
+        let mut s = mk(8, 40)
+            .with_admission(AdmissionPolicy::Paged)
+            .with_sharing(PrefixSharing::Group);
+        let prompt: Vec<i32> = (0..10).collect();
+        // first sharer charges exactly the unshared admission: 11 tokens
+        // = 8 prefix (2 pages) + 3 private (1 page)
+        assert!(s.try_admit_prompt(&mut kv, 1, &prompt));
+        assert_eq!(kv.used_pages(), 3);
+        assert_eq!(s.stats.shared_admissions, 0);
+        // siblings charge only their private page
+        assert!(s.try_admit_prompt(&mut kv, 2, &prompt));
+        assert!(s.try_admit_prompt(&mut kv, 3, &prompt));
+        assert_eq!(kv.used_pages(), 5);
+        assert_eq!(s.stats.shared_admissions, 2);
+        assert_eq!(s.stats.seq_admissions, 3);
+        // a different prompt gets its own prefix
+        let other: Vec<i32> = (100..110).collect();
+        assert!(s.try_admit_prompt(&mut kv, 4, &other));
+        assert_eq!(kv.used_pages(), 8);
+        assert_eq!(kv.live_prefixes(), 2);
+        kv.check_invariants().unwrap();
+        // releases drop the prefix with its last sharer
+        for id in 1..=3 {
+            s.release_seq(&mut kv, id).unwrap();
+        }
+        assert_eq!(kv.live_prefixes(), 1);
+        s.release_seq(&mut kv, 4).unwrap();
+        assert_eq!(kv.used_pages(), 0);
+        // a drained prefix is simply re-charged fresh on its next use
+        assert!(s.try_admit_prompt(&mut kv, 5, &prompt));
+        assert_eq!(kv.used_pages(), 3);
+        assert!(s.try_admit_prompt(&mut kv, 6, &prompt));
+        assert_eq!(s.stats.shared_admissions, 3);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharing_off_or_worst_case_falls_back_to_plain_admission() {
+        let prompt: Vec<i32> = (0..10).collect();
+        // sharing off: try_admit_prompt IS try_admit
+        let mut kv = KvMemoryManager::with_pages(100, 4);
+        let mut s = mk(8, 40).with_admission(AdmissionPolicy::Paged);
+        assert!(s.try_admit_prompt(&mut kv, 1, &prompt));
+        assert!(s.try_admit_prompt(&mut kv, 2, &prompt));
+        assert_eq!(kv.live_prefixes(), 0);
+        assert_eq!(kv.used_pages(), 6, "both sequences pay full freight");
+        // worst-case admission prices per sequence even with sharing on
+        let mut kv = KvMemoryManager::new(100);
+        let mut w = mk(8, 40).with_sharing(PrefixSharing::Group);
+        assert!(w.try_admit_prompt(&mut kv, 1, &prompt));
+        assert!(w.try_admit_prompt(&mut kv, 2, &prompt));
+        assert_eq!(kv.live_prefixes(), 0);
+        assert_eq!(kv.reserved(), 80);
+        // sub-page prompts have no page-aligned prefix to share
+        let mut kv = KvMemoryManager::with_pages(160, 16);
+        let mut t = mk(8, 40)
+            .with_admission(AdmissionPolicy::Paged)
+            .with_sharing(PrefixSharing::Group);
+        assert!(t.try_admit_prompt(&mut kv, 1, &prompt));
+        assert_eq!(kv.live_prefixes(), 0);
+    }
+
+    #[test]
+    fn compressed_forks_sharers_and_shrinks_loners() {
+        let mut kv = KvMemoryManager::with_pages(100, 4); // 25 pages
+        let mut s = mk(8, 40)
+            .with_admission(AdmissionPolicy::Paged)
+            .with_sharing(PrefixSharing::Group);
+        let prompt: Vec<i32> = (0..10).collect();
+        assert!(s.try_admit_prompt(&mut kv, 1, &prompt));
+        assert!(s.try_admit_prompt(&mut kv, 2, &prompt));
+        // compression on a sharer is a CoW fork to a private residency
+        assert!(s.compressed(&mut kv, 1, 6).unwrap());
+        assert_eq!(s.stats.cow_forks, 1);
+        assert_eq!(kv.seq_prefix(1), None);
+        assert_eq!(kv.prefix_refs(0), 1, "sibling still reads the prefix");
+        kv.check_invariants().unwrap();
+        // …after which compression shrinks in place like any loner
+        assert!(s.compressed(&mut kv, 1, 4).unwrap());
+        assert_eq!(s.stats.cow_forks, 1);
+        kv.check_invariants().unwrap();
+        // a fork that cannot fit reports a grow stall, not an error
+        let mut kv = KvMemoryManager::with_pages(20, 4); // 5 pages
+        let mut s = mk(8, 40)
+            .with_admission(AdmissionPolicy::Paged)
+            .with_sharing(PrefixSharing::Group);
+        assert!(s.try_admit_prompt(&mut kv, 1, &prompt)); // 3 pages
+        assert!(s.try_admit_prompt(&mut kv, 2, &prompt)); // +1 page
+        // forking seq 2 to 16 tokens needs 4 pages; 1 free + 1 own = 2
+        assert!(!s.compressed(&mut kv, 2, 16).unwrap());
+        assert_eq!(s.stats.grow_stalls, 1);
+        assert_eq!(s.stats.cow_forks, 0);
+        assert_eq!(kv.seq_prefix(2), Some(0), "denied fork left state alone");
+        kv.check_invariants().unwrap();
     }
 
     #[test]

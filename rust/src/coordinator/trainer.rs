@@ -59,6 +59,9 @@ pub struct StepReport {
     pub idle_token_frac: f64,
     /// Mid-flight slot refills (continuous engine; 0 under static).
     pub refills: usize,
+    /// Refills served by attaching a cached prepared prompt instead of a
+    /// model prefill (`prefix-sharing = group`; 0 otherwise).
+    pub shared_prefill_attaches: usize,
     /// Sequences preempted/requeued by a paged-admission grow stall
     /// (0 under worst-case admission).
     pub preemptions: usize,
@@ -144,11 +147,13 @@ impl<'a> Trainer<'a> {
         let n = task_indices.len() * g;
         let rollout = RolloutEngine::new(self.engine, self.cfg.mode, self.cfg.sampling)
             .with_steal(self.cfg.steal)
-            .with_prefill(self.cfg.prefill);
+            .with_prefill(self.cfg.prefill)
+            .with_sharing(self.cfg.memory.prefix_sharing);
         let mut scheduler = Scheduler::new(&self.engine.manifest, self.cfg.mode.is_sparse())
             .with_admission(self.cfg.memory.admission)
             .with_headroom(self.cfg.memory.kv_admit_headroom_pages)
-            .with_order(self.cfg.admission_order);
+            .with_order(self.cfg.admission_order)
+            .with_sharing(self.cfg.memory.prefix_sharing);
         let seed = self.rng.next_u64();
         let params = ParamsLit::new(&self.state.params);
         // flat sequence ids: seq s belongs to prompt s / g
@@ -232,8 +237,8 @@ impl<'a> Trainer<'a> {
             .iter()
             .map(|s| self.tasks[task_indices[s.task_idx / g]].reward(&s.response_ids))
             .collect();
-        let advantages = batched_group_advantages(&rewards, g);
-        let summary = summarize(&rewards, g);
+        let advantages = batched_group_advantages(&rewards, g)?;
+        let summary = summarize(&rewards, g)?;
 
         // ---- corrections -------------------------------------------------
         let corrections = cfg.mode.corrections();
@@ -282,7 +287,7 @@ impl<'a> Trainer<'a> {
             });
             kl_pairs.push((sampler, &logp_old[..]));
         }
-        let mismatch_kl = reweight::mismatch_kl(&kl_pairs);
+        let mismatch_kl = reweight::mismatch_kl(&kl_pairs)?;
 
         // ---- policy updates ----------------------------------------------
         let t1 = Instant::now();
@@ -297,7 +302,7 @@ impl<'a> Trainer<'a> {
             self.rng.shuffle(&mut order);
             for mb in order.chunks(btr) {
                 let refs: Vec<&TrainSeq> = mb.iter().map(|&i| &train_seqs[i]).collect();
-                let batch = reweight::pack(&self.engine.manifest, &refs);
+                let batch = reweight::pack(&self.engine.manifest, &refs)?;
                 let stats = self.engine.train(
                     &mut self.state,
                     &batch.ids,
@@ -352,6 +357,7 @@ impl<'a> Trainer<'a> {
             slot_occupancy: rstats.occupancy(),
             idle_token_frac: rstats.idle_frac(),
             refills: rstats.refills,
+            shared_prefill_attaches: rstats.shared_prefill_attaches,
             preemptions: rstats.preemptions,
             steals: rstats.steals,
             async_prefills: rstats.async_prefills_submitted,
@@ -386,6 +392,8 @@ impl<'a> Trainer<'a> {
         self.metrics.push("slot_occupancy", report.slot_occupancy);
         self.metrics.push("idle_token_frac", report.idle_token_frac);
         self.metrics.push("refills", report.refills as f64);
+        self.metrics
+            .push("shared_prefill_attaches", report.shared_prefill_attaches as f64);
         self.metrics.push("preemptions", report.preemptions as f64);
         self.metrics.push("steals", report.steals as f64);
         self.metrics.push("async_prefills", report.async_prefills as f64);

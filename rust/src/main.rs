@@ -40,7 +40,7 @@ fn usage() -> ! {
   eval:     --checkpoint ckpt --mode <...> [--bench name] [--limit N]
             [--engine static|continuous|pipelined] [--rollout-workers N]
             [--steal on|off] [--admission-order fifo|shortest-first]
-            [--prefill sync|async]
+            [--prefill sync|async] [--prefix-sharing off|group]
             [--admission worst-case|paged] [--kv-admit-headroom-pages N]
             [--kv-page-tokens N] [--global-kv-tokens N]
   rollout:  --checkpoint ckpt --mode <...> [--n 4] [--temperature T]"
@@ -157,6 +157,7 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
         "steal",
         "admission-order",
         "prefill",
+        "prefix-sharing",
         "admission",
         "kv-admit-headroom-pages",
         "kv-page-tokens",

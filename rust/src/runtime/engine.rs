@@ -686,6 +686,7 @@ fn scratch_prompt_batch(
 /// travels in between backends: `ModelEngine::extract_slot` produces it,
 /// `implant_slot` lands it, and the async prefill executor's prepared
 /// payload carries exactly one of these instead of a full R-slot cache.
+#[derive(Clone)]
 pub struct SlotPlanes {
     kv: Vec<f32>,
     stats_cum: Vec<f32>,

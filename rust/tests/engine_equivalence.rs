@@ -33,7 +33,7 @@
 //!    deadlocks nor leaks a page.
 
 use sparse_rl::config::{
-    AdmissionOrder, AdmissionPolicy, PrefillMode, RolloutMode, SamplingConfig,
+    AdmissionOrder, AdmissionPolicy, PrefillMode, PrefixSharing, RolloutMode, SamplingConfig,
 };
 use sparse_rl::coordinator::{
     CostModel, GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy,
@@ -212,12 +212,22 @@ impl Scenario {
             max_response: 2 + rng.below(30),
         };
         let n = 1 + rng.below(2 * slots + 2 + size / 8);
-        let tasks: Vec<Task> = (0..n)
+        let mut tasks: Vec<Task> = (0..n)
             .map(|_| {
                 let ops = 1 + rng.below(2);
                 Task::gen(rng, ops, prompt_len)
             })
             .collect();
+        // GRPO-shaped workload about half the time: consecutive runs of g
+        // tasks share one prompt — the duplicate-prompt shape prefix
+        // sharing targets (per-task RNG still keys on the flat index, so
+        // group siblings sample distinct tokens)
+        if rng.below(2) == 1 {
+            let g = 2 + rng.below(3);
+            for i in 0..n {
+                tasks[i] = tasks[(i / g) * g].clone();
+            }
+        }
         let capacity = if mode.is_sparse() { budget + buffer } else { max_seq };
         let reserve = capacity;
         // sometimes slot-limited, sometimes KV-limited (width < slots)
@@ -501,6 +511,43 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
             )?;
             audit_slot_steps("static", &stat_stats, sc.slots)?;
             audit_slot_steps("continuous", &cont_stats, sc.slots)?;
+
+            // sharing axis, serial lane: refills served by attaching a
+            // cached prepared prompt must be token-identical to full
+            // prefills, and every refill lands in exactly one of the two
+            // disjoint counters
+            let mut kv_sh = KvMemoryManager::new(sc.kv_cap);
+            let (share_seqs, share_stats) = run_continuous(
+                &policy.with_sharing(PrefixSharing::Group),
+                &mut sc.backend().with_costs(costs),
+                &sc.tasks,
+                sc.seed,
+                sc.reserve,
+                &mut kv_sh,
+                AdmissionOrder::Fifo,
+            )?;
+            for (a, b) in cont_seqs.iter().zip(share_seqs.iter()) {
+                seqs_equal(a, b).map_err(|e| format!("sharing=group changed tokens: {e}"))?;
+            }
+            if share_stats.refills != cont_stats.refills {
+                return Err(format!(
+                    "sharing=group changed the refill schedule: {} vs {}",
+                    share_stats.refills, cont_stats.refills
+                ));
+            }
+            if share_stats.slot_prefills + share_stats.shared_prefill_attaches
+                != share_stats.refills
+            {
+                return Err(format!(
+                    "sharing=group: {} prefills + {} attaches != {} refills",
+                    share_stats.slot_prefills,
+                    share_stats.shared_prefill_attaches,
+                    share_stats.refills
+                ));
+            }
+            if cont_stats.shared_prefill_attaches != 0 {
+                return Err("sharing=off recorded shared attaches".into());
+            }
             // serial-lane identity: makespan is exactly the tick total
             if cont_stats.modeled_makespan_ticks
                 != cont_stats.decode_busy_ticks
@@ -517,17 +564,23 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
                 for steal in [true, false] {
                     for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
                     for prefill in [PrefillMode::Sync, PrefillMode::Async] {
+                    for sharing in [PrefixSharing::Off, PrefixSharing::Group] {
                         let grid = format!(
-                            "w={workers} steal={steal} order={} prefill={}",
+                            "w={workers} steal={steal} order={} prefill={} share={}",
                             order.label(),
-                            prefill.label()
+                            prefill.label(),
+                            sharing.label()
                         );
                         let mut kv_p = KvMemoryManager::new(sc.kv_cap);
-                        let mut sched_p =
-                            mk_sched(sc.slots, sc.reserve).with_order(order);
+                        let mut sched_p = mk_sched(sc.slots, sc.reserve)
+                            .with_order(order)
+                            .with_sharing(sharing);
                         let proto = sc.backend().with_costs(costs);
                         let (pipe_seqs, pipe_stats) = run_pipelined(
-                            &policy.with_steal(steal).with_prefill(prefill),
+                            &policy
+                                .with_steal(steal)
+                                .with_prefill(prefill)
+                                .with_sharing(sharing),
                             &proto,
                             &sc.tasks,
                             sc.seed,
@@ -657,6 +710,26 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
                                 ));
                             }
                         }
+                        // sharing hygiene: off never attaches; a refill
+                        // is served by a slot prefill, an attach, or (a
+                        // cache-less lane's fallback) a batched
+                        // single-row prefill — never more than one
+                        if sharing == PrefixSharing::Off
+                            && pipe_stats.shared_prefill_attaches != 0
+                        {
+                            return Err(format!("{grid}: sharing=off attached"));
+                        }
+                        if pipe_stats.slot_prefills + pipe_stats.shared_prefill_attaches
+                            > pipe_stats.refills
+                        {
+                            return Err(format!(
+                                "{grid}: {} prefills + {} attaches > {} refills",
+                                pipe_stats.slot_prefills,
+                                pipe_stats.shared_prefill_attaches,
+                                pipe_stats.refills
+                            ));
+                        }
+                    }
                     }
                     }
                 }
@@ -684,9 +757,11 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
     // tiny wall: room for ~1.5 worst-case sequences -> guaranteed stalls
     let kv_cap = reserve + reserve / 2;
     let mut rng = Rng::new(5);
-    let tasks: Vec<Task> = (0..24)
-        .map(|_| Task::gen(&mut rng, 1, prompt_len))
-        .collect();
+    // GRPO-shaped: 6 groups x 4 siblings sharing one prompt, so the
+    // sharing=group grid points drive real prefix refcounts and
+    // copy-on-write forks through the preemption storm
+    let leads: Vec<Task> = (0..6).map(|_| Task::gen(&mut rng, 1, prompt_len)).collect();
+    let tasks: Vec<Task> = (0..24).map(|i| leads[i / 4].clone()).collect();
     let backend = || {
         let mut b = MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer);
         b.eos_pull = 0.05; // long responses: lots of growth pressure
@@ -705,17 +780,23 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
         for steal in [true, false] {
             for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
             for prefill in [PrefillMode::Sync, PrefillMode::Async] {
+            for sharing in [PrefixSharing::Off, PrefixSharing::Group] {
                 let grid = format!(
-                    "w={workers} steal={steal} order={} prefill={}",
+                    "w={workers} steal={steal} order={} prefill={} share={}",
                     order.label(),
-                    prefill.label()
+                    prefill.label(),
+                    sharing.label()
                 );
                 let mut kv = KvMemoryManager::with_pages(kv_cap, page);
                 let mut sched = mk_sched(slots, reserve)
                     .with_admission(AdmissionPolicy::Paged)
-                    .with_order(order);
+                    .with_order(order)
+                    .with_sharing(sharing);
                 let (seqs, stats) = run_pipelined(
-                    &policy.with_steal(steal).with_prefill(prefill),
+                    &policy
+                        .with_steal(steal)
+                        .with_prefill(prefill)
+                        .with_sharing(sharing),
                     &backend(),
                     &tasks,
                     seed,
@@ -770,6 +851,23 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
                     "{grid}: admitted width {} exceeds the pool's slot budget",
                     kv.peak_live_seqs
                 );
+                // prefix-pool hygiene: every shared prefix drained with
+                // its last sharer; sharing actually engaged on the
+                // grouped workload (sibling prompts co-admitted)
+                assert_eq!(kv.live_prefixes(), 0, "{grid}: prefix entries leaked");
+                if sharing == PrefixSharing::Group {
+                    assert!(
+                        sched.stats.shared_admissions > 0,
+                        "{grid}: grouped workload never shared a prefix"
+                    );
+                } else {
+                    assert_eq!(
+                        sched.stats.shared_admissions, 0,
+                        "{grid}: sharing=off admitted a shared prefix"
+                    );
+                    assert_eq!(sched.stats.cow_forks, 0, "{grid}: sharing=off forked");
+                }
+            }
             }
             }
         }

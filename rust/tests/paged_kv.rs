@@ -21,8 +21,14 @@
 //! 5. **Admission headroom** — `kv-admit-headroom-pages` is
 //!    scheduling-only (token-identical) and damps the admit/preempt
 //!    thrash cycle under extreme pressure.
+//! 6. **Prefix sharing** — `prefix-sharing = group` (refcounted prompt
+//!    pages + copy-on-write forks at compression) is token-identical to
+//!    the unshared run on grouped workloads, never leaks a prefix, and
+//!    scores identically through the eval path.
 
-use sparse_rl::config::{AdmissionPolicy, EngineKind, PrefillMode, RolloutMode, SamplingConfig};
+use sparse_rl::config::{
+    AdmissionPolicy, EngineKind, PrefillMode, PrefixSharing, RolloutMode, SamplingConfig,
+};
 use sparse_rl::coordinator::{
     evaluate_with_backend, GenSeq, KvMemoryManager, MockModelBackend, RolloutPolicy,
     RolloutStats, Scheduler,
@@ -256,6 +262,88 @@ fn prop_paged_admission_token_identical_and_wall_safe() {
 }
 
 #[test]
+fn prop_prefix_sharing_token_identical_and_pool_safe() {
+    // Grouped workloads (GRPO-style duplicated prompts) under paged
+    // admission: `prefix-sharing = group` must be a pure accounting
+    // change. Tokens, logp, and KV accounting match the unshared run
+    // bit-for-bit across random geometries/modes/walls, the refcounted
+    // pool drains completely (no prefix outlives its last sharer), and
+    // the engine's prefill-attach counters stay self-consistent.
+    propcheck::check(
+        "prefix-sharing-equivalence",
+        PropConfig { cases: 72, seed: 0x5AAE_D0, max_size: 48 },
+        |rng, size| {
+            let mut sc = Scenario::gen(rng, size);
+            let g = 2 + rng.below(3);
+            let n = sc.tasks.len();
+            for i in 0..n {
+                sc.tasks[i] = sc.tasks[(i / g) * g].clone();
+            }
+
+            // reference: paged admission, sharing off
+            let policy = sc.policy();
+            let mut kv_off = KvMemoryManager::with_pages(sc.kv_cap, sc.page);
+            let mut sched_off = paged(sc.slots, sc.reserve);
+            let (off, off_stats) =
+                run(&policy, &mut sc.backend(), &sc.tasks, sc.seed, &mut sched_off, &mut kv_off)?;
+
+            // sharing on: siblings attach to the refcounted prompt prefix
+            let shared_policy = sc.policy().with_sharing(PrefixSharing::Group);
+            let mut kv_s = KvMemoryManager::with_pages(sc.kv_cap, sc.page);
+            let mut sched_s = paged(sc.slots, sc.reserve).with_sharing(PrefixSharing::Group);
+            let (sh, sh_stats) = run(
+                &shared_policy,
+                &mut sc.backend(),
+                &sc.tasks,
+                sc.seed,
+                &mut sched_s,
+                &mut kv_s,
+            )?;
+
+            // 1) token/logp/accounting equivalence per task
+            if off.len() != sh.len() {
+                return Err("result count mismatch".into());
+            }
+            for (a, b) in off.iter().zip(sh.iter()) {
+                seqs_equal(a, b)?;
+            }
+
+            // 2) the refcounted pool drains: no pages, no prefixes, no
+            //    reservations survive the run
+            if kv_s.reserved() != 0 || kv_s.used_pages() != 0 {
+                return Err(format!("shared run leaked {} tokens", kv_s.reserved()));
+            }
+            if kv_s.live_prefixes() != 0 {
+                return Err(format!("{} prefix entries leaked", kv_s.live_prefixes()));
+            }
+            kv_s.check_invariants().map_err(|e| e.to_string())?;
+            if sched_s.stats.live_seqs() != 0 {
+                return Err("shared scheduler live_seqs not drained".into());
+            }
+
+            // 3) counter hygiene: every continuous refill is exactly one
+            //    slot prefill OR one shared attach (refill counts CAN
+            //    differ from the off run — sharing widens admission, which
+            //    shifts the preempt/requeue pattern); the off run must not
+            //    touch the sharing machinery at all
+            if sh_stats.slot_prefills + sh_stats.shared_prefill_attaches != sh_stats.refills {
+                return Err(format!(
+                    "prefill counters leak: {} slot + {} attach != {} refills",
+                    sh_stats.slot_prefills, sh_stats.shared_prefill_attaches, sh_stats.refills
+                ));
+            }
+            if off_stats.shared_prefill_attaches != 0
+                || sched_off.stats.shared_admissions != 0
+                || sched_off.stats.cow_forks != 0
+            {
+                return Err("sharing=off run touched the sharing machinery".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn paged_admission_raises_width_and_saves_decode_steps() {
     // The acceptance scenario: skewed-length workload on a memory-limited
     // wall. Worst-case admission caps the batch at 3 sequences; paged
@@ -479,4 +567,32 @@ fn eval_is_engine_agnostic() {
         assert_eq!(r.samples, base.samples);
         assert_eq!(r.toks_saving, base.toks_saving);
     }
+
+    // prefix sharing must not change a single score either: eval fans k
+    // identical prompts per item — exactly the sharing workload
+    let mut sched = worst_case(slots, reserve)
+        .with_admission(AdmissionPolicy::Paged)
+        .with_sharing(PrefixSharing::Group);
+    let mut kv = KvMemoryManager::with_pages(reserve * 3, 4);
+    let r = evaluate_with_backend(
+        &policy.with_sharing(PrefixSharing::Group),
+        &mut mk_backends(1),
+        EngineKind::Continuous,
+        &mut sched,
+        &mut kv,
+        "agnostic",
+        &tasks,
+        k,
+        42,
+    )
+    .unwrap();
+    assert_eq!(kv.reserved(), 0, "shared eval leaked KV");
+    assert_eq!(kv.live_prefixes(), 0, "shared eval leaked a prefix");
+    assert!(
+        sched.stats.shared_admissions > 0,
+        "k identical prompts per item never shared a prefix"
+    );
+    assert_eq!(r.accuracy, base.accuracy, "prefix sharing changed a score");
+    assert_eq!(r.mean_response_len, base.mean_response_len);
+    assert_eq!(r.toks_saving, base.toks_saving);
 }
