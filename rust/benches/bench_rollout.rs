@@ -30,11 +30,12 @@
 use std::collections::BTreeMap;
 
 use sparse_rl::config::{
-    AdmissionOrder, AdmissionPolicy, PrefillMode, PrefixSharing, RolloutMode, SamplingConfig,
+    AdmissionOrder, AdmissionPolicy, EngineKind, PrefillMode, PrefixSharing, RolloutMode,
+    SamplingConfig,
 };
 use sparse_rl::coordinator::{
-    CostModel, GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy,
-    RolloutStats, Scheduler,
+    rollout_fleet, CostModel, GenSeq, KvMemoryManager, MockModelBackend, Replica, RolloutBackend,
+    RolloutPolicy, RolloutStats, Scheduler,
 };
 use sparse_rl::data::task::Task;
 use sparse_rl::experiments;
@@ -895,6 +896,166 @@ fn prefix_sharing_comparison() -> Json {
     Json::Obj(out)
 }
 
+/// Replica-tier fleet on a straggler-skewed workload (part 1g): the
+/// PR-7 tentpole claim. Sixteen tasks — two giant-prompt stragglers
+/// buried among cheap short-prompt tasks — run on fleets of 1/2/4 full
+/// engine replicas (each a private scheduler + KV wall + continuous
+/// lane). The load-modeled router balances by predicted residency ×
+/// admission cost, so each giant lands on a different replica and the
+/// fleet makespan (slowest replica, `merge_parallel`) must drop
+/// STRICTLY below the single-replica serial makespan at N=2 and N=4,
+/// with token-identical outputs per task (per-task RNG makes tokens
+/// placement-invariant).
+///
+/// Stealing is OFF for the recorded rows: each replica then drains its
+/// routed queue in exactly one engine pass, so the whole fleet trace is
+/// deterministic (EOS suppressed → cap-bound lengths; continuous,
+/// single lane per replica). A steal-ON N=4 row is recorded for context
+/// only — batch composition there depends on thread timing, so it is
+/// marked non-deterministic and the guard skips it.
+fn fleet_comparison() -> Json {
+    let (slots, prompt_len, max_seq, budget, buffer) = (2usize, 48usize, 56usize, 44usize, 8usize);
+    let seed = 7u64;
+    let costs = CostModel::representative();
+    let mode = RolloutMode::SparseRl(Method::RKv);
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 16 };
+    let policy = RolloutPolicy::new(mode, sampling);
+    let reserve = budget + buffer;
+    // slot-limited wall per replica: isolate the routing/makespan story
+    let kv_cap = reserve * slots * 4;
+    let mut rng = Rng::new(1);
+    // 16 tasks; positions 0 and 8 are the giant-prompt stragglers (their
+    // prompt eats the max_seq budget, so they decode SHORT but occupy a
+    // large modeled load — the router must not stack them)
+    let tasks: Vec<Task> = (0..16)
+        .map(|i| sized_task(&mut rng, if i % 8 == 0 { prompt_len } else { 4 }))
+        .collect();
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    let proto = {
+        let mut b = MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer);
+        b.eos_pull = -30.0; // EOS suppressed: cap-bound deterministic lengths
+        b.with_costs(costs)
+    };
+    let mk_fleet = |n: usize| -> Vec<Replica<MockModelBackend>> {
+        (0..n)
+            .map(|_| {
+                Replica::new(
+                    mk_sched(slots, reserve),
+                    KvMemoryManager::new(kv_cap),
+                    vec![proto.clone()],
+                )
+            })
+            .collect()
+    };
+
+    println!(
+        "== fleet comparison: 1 vs 2 vs 4 replicas (continuous, sparse, R={slots}/replica, \
+         {} tasks, 2 giant-prompt stragglers, steal=off) ==",
+        tasks.len()
+    );
+    println!(
+        "{:<14} {:>12} {:>10} {:>7} {:>8} {:>9}",
+        "fleet", "decode-steps", "makespan", "lanes", "steals", "speedup"
+    );
+
+    let mut out = BTreeMap::new();
+    let mut base: Option<(Vec<GenSeq>, u64)> = None;
+    for n in [1usize, 2, 4] {
+        let mut replicas = mk_fleet(n);
+        let (seqs, st, report) =
+            rollout_fleet(&policy, EngineKind::Continuous, &mut replicas, &flat, seed, false)
+                .expect("fleet rollout");
+        for (r, rep) in replicas.iter().enumerate() {
+            assert_eq!(rep.kv.reserved(), 0, "N={n}: replica {r} leaked KV");
+            rep.kv.check_invariants().expect("wall invariants");
+        }
+        assert_eq!(report.replica_steals, 0, "N={n}: steal=off run stole");
+        if n > 1 {
+            for r in 0..n {
+                assert!(
+                    report.routed.iter().any(|&x| x == r),
+                    "N={n}: router left replica {r} idle"
+                );
+            }
+        }
+        let speedup = match &base {
+            Some((base_seqs, base_makespan)) => {
+                // replica placement is a pure scheduling choice:
+                // identical tokens per task at any fleet size
+                let agree = base_seqs.iter().zip(seqs.iter()).all(|(a, b)| {
+                    a.response_ids == b.response_ids && a.sampler_logp == b.sampler_logp
+                });
+                assert!(agree, "N={n}: fleet size changed tokens (BUG)");
+                assert!(
+                    st.modeled_makespan_ticks < *base_makespan,
+                    "N={n}: fleet makespan {} !< single-replica {}",
+                    st.modeled_makespan_ticks,
+                    base_makespan
+                );
+                *base_makespan as f64 / st.modeled_makespan_ticks.max(1) as f64
+            }
+            None => 1.0,
+        };
+        println!(
+            "{:<14} {:>12} {:>10} {:>7} {:>8} {:>8.2}x",
+            format!("replicas={n}"),
+            st.decode_steps,
+            st.modeled_makespan_ticks,
+            st.workers,
+            report.replica_steals,
+            speedup
+        );
+        let mut row = BTreeMap::new();
+        row.insert("decode_steps".into(), Json::Num(st.decode_steps as f64));
+        row.insert("makespan_ticks".into(), Json::Num(st.modeled_makespan_ticks as f64));
+        row.insert("fleet_lanes".into(), Json::Num(st.workers as f64));
+        row.insert("speedup".into(), Json::Num(speedup));
+        // steal=off: one engine pass per replica, fully deterministic
+        row.insert("deterministic".into(), Json::Bool(true));
+        out.insert(format!("replicas_{n}"), Json::Obj(row));
+        if base.is_none() {
+            base = Some((seqs, st.modeled_makespan_ticks));
+        }
+    }
+
+    // context row: stealing ON at N=4 — tokens still identical (the
+    // invariant), but batch composition races on the fleet mutex, so
+    // tick stats are not trajectory-comparable
+    {
+        let mut replicas = mk_fleet(4);
+        let (seqs, st, report) =
+            rollout_fleet(&policy, EngineKind::Continuous, &mut replicas, &flat, seed, true)
+                .expect("fleet rollout");
+        let (base_seqs, _) = base.as_ref().unwrap();
+        let agree = base_seqs
+            .iter()
+            .zip(seqs.iter())
+            .all(|(a, b)| a.response_ids == b.response_ids && a.sampler_logp == b.sampler_logp);
+        assert!(agree, "steal=on: fleet stealing changed tokens (BUG)");
+        println!(
+            "{:<14} {:>12} {:>10} {:>7} {:>8} {:>9}",
+            "n=4 steal=on",
+            st.decode_steps,
+            st.modeled_makespan_ticks,
+            st.workers,
+            report.replica_steals,
+            "-"
+        );
+        let mut row = BTreeMap::new();
+        row.insert("decode_steps".into(), Json::Num(st.decode_steps as f64));
+        row.insert("makespan_ticks".into(), Json::Num(st.modeled_makespan_ticks as f64));
+        row.insert("replica_steals".into(), Json::Num(report.replica_steals as f64));
+        row.insert("deterministic".into(), Json::Bool(false));
+        out.insert("replicas_4_steal_on".into(), Json::Obj(row));
+    }
+
+    println!("  -> token-identical across every fleet size: yes\n");
+    out.insert("tasks".into(), Json::Num(tasks.len() as f64));
+    out.insert("giant_prompt_tokens".into(), Json::Num(prompt_len as f64));
+    out.insert("slots_per_replica".into(), Json::Num(slots as f64));
+    Json::Obj(out)
+}
+
 fn main() {
     let args = CliArgs::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
 
@@ -905,7 +1066,8 @@ fn main() {
     // pipelined vs continuous on the modeled latency clock; Part 1d:
     // fifo vs shortest-first admission order on the skewed-length
     // head-of-line workload; Part 1e: sync vs async slot prefill; Part
-    // 1f: prefix sharing off vs group on a GRPO-grouped workload. All
+    // 1f: prefix sharing off vs group on a GRPO-grouped workload; Part
+    // 1g: replica fleet 1/2/4 on the straggler-skewed workload. All
     // feed BENCH_rollout.json so CI records the perf trajectory (and the
     // bench guard compares deterministic makespans against it).
     let paged = paged_comparison();
@@ -913,6 +1075,7 @@ fn main() {
     let order = admission_order_comparison();
     let prefill = prefill_mode_comparison();
     let sharing = prefix_sharing_comparison();
+    let fleet = fleet_comparison();
     {
         let mut doc = BTreeMap::new();
         doc.insert("bench".to_string(), Json::Str("rollout".into()));
@@ -921,6 +1084,7 @@ fn main() {
         doc.insert("admission_order".to_string(), order);
         doc.insert("prefill_mode".to_string(), prefill);
         doc.insert("prefix_sharing".to_string(), sharing);
+        doc.insert("fleet".to_string(), fleet);
         let path = "BENCH_rollout.json";
         match std::fs::write(path, sparse_rl::util::json::to_string(&Json::Obj(doc))) {
             Ok(()) => println!("wrote {path}"),

@@ -395,6 +395,18 @@ pub struct ExperimentConfig {
     /// or `shortest-first` (makespan-aware; smallest predicted residency
     /// first).
     pub admission_order: AdmissionOrder,
+    /// Data-parallel rollout replicas. Each replica is a full engine
+    /// instance — its own `Scheduler`, `KvMemoryManager` (private memory
+    /// wall) and lane pool — and a global router assigns tasks to the
+    /// replica with the least modeled load (predicted residency ×
+    /// admission cost, not queue length). Default 1 = the single-engine
+    /// path, bit-exact with prior behavior. Scheduling-only: per-task RNG
+    /// keeps every task's tokens identical for any replica count.
+    pub replicas: usize,
+    /// Cross-replica work stealing (`replicas > 1` only): a drained
+    /// replica adopts a not-yet-admitted task from the most-loaded peer
+    /// (cost-weighted victim selection). Scheduling-only; default on.
+    pub replica_steal: bool,
     /// Slot-prefill execution for `engine = pipelined`: `sync` (decode
     /// workers make the prefill calls themselves, blocking their lane —
     /// the original behavior) or `async` (a dedicated prefill-executor
@@ -420,6 +432,8 @@ impl ExperimentConfig {
             rollout_workers: 2,
             steal: true,
             admission_order: AdmissionOrder::default(),
+            replicas: 1,
+            replica_steal: true,
             prefill: PrefillMode::default(),
             sampling: SamplingConfig::default(),
             train: TrainConfig::default(),
@@ -451,6 +465,20 @@ impl ExperimentConfig {
                 }
             }
             "admission-order" => self.admission_order = AdmissionOrder::parse(value)?,
+            "replicas" => {
+                let v: usize = value.parse().context("replicas")?;
+                if v == 0 {
+                    bail!("replicas must be >= 1");
+                }
+                self.replicas = v;
+            }
+            "replica-steal" => {
+                self.replica_steal = match value {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => bail!("bad replica-steal value {other:?} (on | off)"),
+                }
+            }
             "prefill" => self.prefill = PrefillMode::parse(value)?,
             "temperature" => self.sampling.temperature = value.parse().context("temperature")?,
             "top-p" => self.sampling.top_p = value.parse().context("top-p")?,
@@ -622,6 +650,23 @@ mod tests {
         assert_eq!(AdmissionOrder::parse("sjf").unwrap(), AdmissionOrder::ShortestFirst);
         assert!(AdmissionOrder::parse("random").is_err());
         assert_eq!(AdmissionOrder::ShortestFirst.label(), "shortest-first");
+    }
+
+    #[test]
+    fn replicas_and_replica_steal_knobs() {
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        // defaults: one replica (the single-engine path), stealing on
+        assert_eq!(c.replicas, 1);
+        assert!(c.replica_steal);
+        c.apply("replicas", "4").unwrap();
+        assert_eq!(c.replicas, 4);
+        assert!(c.apply("replicas", "0").is_err());
+        assert!(c.apply("replicas", "two").is_err());
+        c.apply("replica-steal", "off").unwrap();
+        assert!(!c.replica_steal);
+        c.apply("replica-steal", "on").unwrap();
+        assert!(c.replica_steal);
+        assert!(c.apply("replica-steal", "maybe").is_err());
     }
 
     #[test]

@@ -151,6 +151,34 @@ impl RolloutStats {
         self.sched_stall_ticks += o.sched_stall_ticks;
         self.modeled_makespan_ticks += o.modeled_makespan_ticks;
     }
+
+    /// Combine stats from runs that executed CONCURRENTLY on separate
+    /// devices — the fleet's per-replica composition, distinct from the
+    /// serial `merge` above. Work counters and tick totals still ADD
+    /// (they are device work, wherever it ran), and the denominator
+    /// contract survives: with equal slot widths, summed
+    /// `occupied + idle` still equals summed `decode_steps * slots`. The
+    /// differences are the parallel-time fields:
+    ///
+    /// * `modeled_makespan_ticks` takes the MAX — the fleet finishes when
+    ///   its slowest replica does (serial `merge` sums, because one lane
+    ///   ran the pieces back-to-back);
+    /// * `workers` SUMS — the fleet's total lane count (serial `merge`
+    ///   maxes, because the same lanes ran every piece);
+    /// * residency peaks (`max_reserved_kv`, `max_used_pages`,
+    ///   `peak_live_slots`, `async_prefill_inflight_peak`) stay MAX: each
+    ///   replica owns a private wall, so the meaningful fleet number is
+    ///   the worst single-device high-water, never a cross-device sum.
+    ///
+    /// Every field combine is commutative and associative with
+    /// `RolloutStats::default()` as identity, so fleet folds are
+    /// order-independent — the parallel-merge propcheck pins this.
+    pub fn merge_parallel(&mut self, o: &RolloutStats) {
+        let (workers, makespan) = (self.workers + o.workers, self.modeled_makespan_ticks);
+        self.merge(o);
+        self.workers = workers;
+        self.modeled_makespan_ticks = makespan.max(o.modeled_makespan_ticks);
+    }
 }
 
 #[cfg(test)]
@@ -319,6 +347,141 @@ mod tests {
             }
             if rev != merged {
                 return Err("merge is not order-independent".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stats_merge_parallel_maxes_makespan_and_sums_lanes() {
+        let a = RolloutStats {
+            chunks: 2,
+            decode_steps: 10,
+            occupied_slot_steps: 30,
+            idle_slot_steps: 10,
+            max_reserved_kv: 100,
+            peak_live_slots: 4,
+            workers: 2,
+            decode_busy_ticks: 100,
+            prefill_blocked_ticks: 40,
+            modeled_makespan_ticks: 140,
+            ..RolloutStats::default()
+        };
+        let b = RolloutStats {
+            chunks: 1,
+            decode_steps: 5,
+            occupied_slot_steps: 15,
+            idle_slot_steps: 5,
+            max_reserved_kv: 80,
+            peak_live_slots: 2,
+            workers: 1,
+            decode_busy_ticks: 50,
+            sched_stall_ticks: 7,
+            modeled_makespan_ticks: 97,
+            ..RolloutStats::default()
+        };
+        let mut p = a;
+        p.merge_parallel(&b);
+        // work and tick totals still sum (device work, wherever it ran)
+        assert_eq!(p.decode_steps, 15);
+        assert_eq!(p.device_slot_steps(), 60);
+        assert_eq!(p.decode_busy_ticks, 150);
+        assert_eq!(p.sched_stall_ticks, 7);
+        // the parallel-time fields differ from serial merge: the fleet
+        // finishes with its slowest replica, and its lanes add up
+        assert_eq!(p.modeled_makespan_ticks, 140, "makespan is the replica max");
+        assert_eq!(p.workers, 3, "fleet lanes sum across replicas");
+        // per-device residency peaks never sum across private walls
+        assert_eq!(p.max_reserved_kv, 100);
+        assert_eq!(p.peak_live_slots, 4);
+    }
+
+    #[test]
+    fn prop_merge_parallel_is_order_independent_and_keeps_denominators() {
+        // The fleet composition contract (satellite of the replica tier):
+        // per-replica stats — each satisfying the audited denominator
+        // invariant `occupied + idle == decode_steps * slots` — compose
+        // ORDER-INDEPENDENTLY under `merge_parallel`, the invariant holds
+        // fleet-wide (equal slot widths), the makespan is the exact
+        // replica max, lanes sum, and per-device peaks are exact maxima.
+        propcheck::quick("stats-merge-parallel-invariants", |rng, size| {
+            let slots = 1 + rng.below(16);
+            let n = 1 + rng.below(2 + size / 4);
+            let mut reps = Vec::with_capacity(n);
+            for _ in 0..n {
+                let decode_steps = rng.below(200);
+                let occupied = if decode_steps == 0 {
+                    0
+                } else {
+                    rng.below(decode_steps * slots + 1)
+                };
+                reps.push(RolloutStats {
+                    chunks: 1 + rng.below(4),
+                    decode_steps,
+                    occupied_slot_steps: occupied,
+                    idle_slot_steps: decode_steps * slots - occupied,
+                    refills: rng.below(20),
+                    prefills: rng.below(4),
+                    slot_prefills: rng.below(20),
+                    shared_prefill_attaches: rng.below(20),
+                    max_reserved_kv: rng.below(4096),
+                    max_used_pages: rng.below(256),
+                    peak_live_slots: rng.below(slots + 1),
+                    preemptions: rng.below(16),
+                    steals: rng.below(8),
+                    async_prefills_submitted: rng.below(24),
+                    async_prefills_completed: rng.below(24),
+                    async_prefill_inflight_peak: rng.below(12),
+                    workers: 1 + rng.below(4),
+                    decode_busy_ticks: rng.below(10_000) as u64,
+                    prefill_blocked_ticks: rng.below(10_000) as u64,
+                    sched_stall_ticks: rng.below(10_000) as u64,
+                    modeled_makespan_ticks: rng.below(30_000) as u64,
+                });
+            }
+            // every replica individually upholds the denominator contract;
+            // the fleet-wide fold must too (equal slots per replica)
+            let mut fleet = RolloutStats::default();
+            for rep in &reps {
+                fleet.merge_parallel(rep);
+            }
+            let steps: usize = reps.iter().map(|r| r.decode_steps).sum();
+            if fleet.device_slot_steps() != steps * slots {
+                return Err(format!(
+                    "fleet denominator broken: {} + {} != {} * {slots}",
+                    fleet.occupied_slot_steps, fleet.idle_slot_steps, steps
+                ));
+            }
+            if fleet.decode_steps != steps {
+                return Err("decode steps did not sum".into());
+            }
+            let makespan = reps.iter().map(|r| r.modeled_makespan_ticks).max().unwrap_or(0);
+            if fleet.modeled_makespan_ticks != makespan {
+                return Err(format!(
+                    "fleet makespan {} != replica max {makespan}",
+                    fleet.modeled_makespan_ticks
+                ));
+            }
+            let lanes: usize = reps.iter().map(|r| r.workers).sum();
+            if fleet.workers != lanes {
+                return Err(format!("fleet lanes {} != summed {lanes}", fleet.workers));
+            }
+            let max = |f: fn(&RolloutStats) -> usize| reps.iter().map(f).max().unwrap_or(0);
+            if fleet.max_reserved_kv != max(|r| r.max_reserved_kv)
+                || fleet.max_used_pages != max(|r| r.max_used_pages)
+                || fleet.peak_live_slots != max(|r| r.peak_live_slots)
+                || fleet.async_prefill_inflight_peak != max(|r| r.async_prefill_inflight_peak)
+            {
+                return Err("a per-device peak is not the exact max".into());
+            }
+            // order independence: every field combine is commutative +
+            // associative with the default as identity
+            let mut rev = RolloutStats::default();
+            for rep in reps.iter().rev() {
+                rev.merge_parallel(rep);
+            }
+            if rev != fleet {
+                return Err("merge_parallel is not order-independent".into());
             }
             Ok(())
         });

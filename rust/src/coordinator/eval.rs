@@ -24,7 +24,8 @@ use crate::data::task::Task;
 use crate::runtime::{ModelEngine, ParamsLit};
 
 use super::backend::{EngineBackend, RolloutBackend};
-use super::engine::RolloutPolicy;
+use super::engine::{GenSeq, RolloutPolicy};
+use super::fleet::{rollout_fleet, Replica};
 use super::kv_manager::KvMemoryManager;
 use super::scheduler::Scheduler;
 
@@ -74,6 +75,13 @@ pub struct EvalOptions {
     /// the original blocking behavior; async runs the dedicated
     /// prefill-executor thread).
     pub prefill: PrefillMode,
+    /// Data-parallel rollout replicas (the `replicas` knob): each
+    /// replica gets its own scheduler + KV wall + lane pool and a global
+    /// router splits the sample list by modeled load. Default 1 = the
+    /// single-engine path. Tokens are replica-count-invariant.
+    pub replicas: usize,
+    /// Cross-replica work stealing for `replicas > 1` (default on).
+    pub replica_steal: bool,
 }
 
 impl Default for EvalOptions {
@@ -85,7 +93,40 @@ impl Default for EvalOptions {
             steal: true,
             admission_order: AdmissionOrder::default(),
             prefill: PrefillMode::default(),
+            replicas: 1,
+            replica_steal: true,
         }
+    }
+}
+
+/// Fold rolled-out samples into the per-item accuracy / length /
+/// savings summary. `seqs` carry flat sample ids (item `i` sample `j`
+/// at `i*k + j`), in any order — the fold keys off `task_idx`, so the
+/// single-engine and fleet paths score identically.
+fn score_rollouts(benchmark: &str, tasks: &[Task], k: usize, seqs: Vec<GenSeq>) -> EvalResult {
+    let mut correct_per_item = vec![0usize; tasks.len()];
+    let mut total_len = 0usize;
+    let mut acct = crate::compression::KvAccounting::new();
+    for seq in seqs {
+        let item = seq.task_idx / k;
+        if tasks[item].reward(&seq.response_ids) > 0.5 {
+            correct_per_item[item] += 1;
+        }
+        total_len += seq.response_ids.len();
+        acct.merge(&seq.accounting);
+    }
+    let accuracy = correct_per_item
+        .iter()
+        .map(|&c| c as f64 / k as f64)
+        .sum::<f64>()
+        / tasks.len() as f64;
+    EvalResult {
+        benchmark: benchmark.to_string(),
+        accuracy,
+        items: tasks.len(),
+        samples: tasks.len() * k,
+        mean_response_len: total_len as f64 / (tasks.len() * k) as f64,
+        toks_saving: acct.toks_saving(),
     }
 }
 
@@ -150,30 +191,34 @@ pub fn evaluate_with_backend<B: RolloutBackend + Send>(
             }
         }
     };
-    let mut correct_per_item = vec![0usize; tasks.len()];
-    let mut total_len = 0usize;
-    let mut acct = crate::compression::KvAccounting::new();
-    for seq in seqs {
-        let item = seq.task_idx / k;
-        if tasks[item].reward(&seq.response_ids) > 0.5 {
-            correct_per_item[item] += 1;
-        }
-        total_len += seq.response_ids.len();
-        acct.merge(&seq.accounting);
+    Ok(score_rollouts(benchmark, tasks, k, seqs))
+}
+
+/// Fleet-path evaluation core: roll the flat sample list out across a
+/// replica fleet (`rollout_fleet` routes by modeled load and, when
+/// `replica_steal`, rebalances stragglers) and fold accuracy with the
+/// same scorer as `evaluate_with_backend` — per-task RNG makes the two
+/// paths sample-for-sample identical.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_with_fleet<B: RolloutBackend + Send>(
+    policy: &RolloutPolicy,
+    replicas: &mut [Replica<B>],
+    engine_kind: EngineKind,
+    replica_steal: bool,
+    benchmark: &str,
+    tasks: &[Task],
+    k: usize,
+    rollout_seed: u64,
+) -> Result<EvalResult> {
+    if tasks.is_empty() || k == 0 {
+        return Ok(EvalResult::empty(benchmark));
     }
-    let accuracy = correct_per_item
-        .iter()
-        .map(|&c| c as f64 / k as f64)
-        .sum::<f64>()
-        / tasks.len() as f64;
-    Ok(EvalResult {
-        benchmark: benchmark.to_string(),
-        accuracy,
-        items: tasks.len(),
-        samples: tasks.len() * k,
-        mean_response_len: total_len as f64 / (tasks.len() * k) as f64,
-        toks_saving: acct.toks_saving(),
-    })
+    let flat: Vec<(usize, &Task)> = (0..tasks.len() * k)
+        .map(|s| (s, &tasks[s / k]))
+        .collect();
+    let (seqs, _stats, _report) =
+        rollout_fleet(policy, engine_kind, replicas, &flat, rollout_seed, replica_steal)?;
+    Ok(score_rollouts(benchmark, tasks, k, seqs))
 }
 
 /// Evaluate `params` on a benchmark under the given rollout mode.
@@ -235,14 +280,13 @@ pub fn evaluate(
     } else {
         decode_lanes
     };
-    let mut backends: Vec<EngineBackend> = (0..lanes)
-        .map(|_| EngineBackend::new(engine, &params_lit, mode))
-        .collect();
-    let mut sched = Scheduler::new(m, mode.is_sparse())
-        .with_admission(opts.memory.admission)
-        .with_headroom(opts.memory.kv_admit_headroom_pages)
-        .with_order(opts.admission_order)
-        .with_sharing(opts.memory.prefix_sharing);
+    let mk_sched = || {
+        Scheduler::new(m, mode.is_sparse())
+            .with_admission(opts.memory.admission)
+            .with_headroom(opts.memory.kv_admit_headroom_pages)
+            .with_order(opts.admission_order)
+            .with_sharing(opts.memory.prefix_sharing)
+    };
     // The eval wall exists to drive the engines' admission machinery, not
     // to throttle accuracy measurement (tokens are width-independent). It
     // is clamped up so a full decode batch always fits — with default
@@ -250,13 +294,38 @@ pub fn evaluate(
     // like the pre-wall eval path did, and a small configured wall can
     // never turn a previously-working eval into a "stalled" error.
     let page = opts.memory.kv_page_tokens;
-    let per_seq_pages_tokens = sched.reserve_per_seq.div_ceil(page) * page;
+    let per_seq_pages_tokens = mk_sched().reserve_per_seq.div_ceil(page) * page;
     // (for pipelined, clamp per DECODE lane so every worker can fill its
-    // batch — the executor lane holds no admissions)
+    // batch — the executor lane holds no admissions; replica walls are
+    // private, so the clamp applies per replica, not to their sum)
     let wall = opts
         .memory
         .global_kv_tokens
         .max(per_seq_pages_tokens * m.shapes.decode_batch * decode_lanes);
+    if opts.replicas > 1 {
+        let mut replicas: Vec<Replica<EngineBackend>> = (0..opts.replicas)
+            .map(|_| {
+                let backends = (0..lanes)
+                    .map(|_| EngineBackend::new(engine, &params_lit, mode))
+                    .collect();
+                Replica::new(mk_sched(), KvMemoryManager::with_pages(wall, page), backends)
+            })
+            .collect();
+        return evaluate_with_fleet(
+            &policy,
+            &mut replicas,
+            opts.engine,
+            opts.replica_steal,
+            bench.name,
+            &tasks,
+            k,
+            seed ^ 0xE7A1_5EED,
+        );
+    }
+    let mut backends: Vec<EngineBackend> = (0..lanes)
+        .map(|_| EngineBackend::new(engine, &params_lit, mode))
+        .collect();
+    let mut sched = mk_sched();
     let mut kv = KvMemoryManager::with_pages(wall, page);
     evaluate_with_backend(
         &policy,

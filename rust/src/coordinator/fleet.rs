@@ -1,0 +1,342 @@
+//! The replica tier: a data-parallel rollout fleet.
+//!
+//! Every layer below this one — `Scheduler`, `KvMemoryManager`, the
+//! engine shells — manages ONE engine behind one KV wall. A `Replica`
+//! bundles a full instance of that stack (scheduler + private memory
+//! wall + backend lane pool), and `rollout_fleet` drives N of them as a
+//! unit:
+//!
+//! * a **global router** assigns each task to the least-loaded replica,
+//!   where load is the *modeled* cost of the work already routed there —
+//!   predicted residency × admission cost (the same virtual-clock oracle
+//!   the schedulers use) — not queue length, so one giant prompt counts
+//!   for what it will actually occupy;
+//! * each replica drains its queue on its own thread with whichever
+//!   engine shell the config selects (static / continuous / pipelined —
+//!   the pipelined shell still runs its own worker lanes *inside* the
+//!   replica);
+//! * with `replica-steal = on`, a drained replica robs the highest-load
+//!   not-yet-admitted task from the most-loaded peer (cost-weighted
+//!   victim selection, lifting the per-lane steal heuristic across
+//!   replica boundaries). Stolen tasks were never admitted to the
+//!   victim's scheduler — they sit in the fleet queue — so each
+//!   replica's pool conservation invariants hold untouched; the thief
+//!   admits against its own wall.
+//!
+//! Determinism stays the load-bearing invariant: per-task RNG
+//! (`task_rng`) keys sampling on the (rollout seed, task index) pair the
+//! caller supplies, so tokens are identical for any replica count, any
+//! routing, and any steal schedule — `tests/engine_equivalence.rs`
+//! extends its propcheck grid with a `{replicas 1, 2, 4}` axis to prove
+//! it. With stealing OFF the fleet is fully deterministic (each replica
+//! runs exactly one engine pass over its routed queue), which is what
+//! the fleet bench part records; with stealing ON, batch composition
+//! depends on thread timing, so only tokens — not tick stats — are
+//! reproducible.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::config::EngineKind;
+use crate::data::task::Task;
+
+use super::backend::RolloutBackend;
+use super::engine::{GenSeq, RolloutPolicy, RolloutStats};
+use super::kv_manager::KvMemoryManager;
+use super::scheduler::Scheduler;
+
+/// One member of the rollout fleet: a full engine instance. `backends`
+/// is the replica's lane pool — the single-lane engines use
+/// `backends[0]`; the pipelined engine uses every lane, with the LAST
+/// one acting as the dedicated prefill-executor lane when the policy
+/// runs `prefill = async` and at least two lanes exist (the same
+/// convention the eval harness uses).
+pub struct Replica<B: RolloutBackend> {
+    pub sched: Scheduler,
+    pub kv: KvMemoryManager,
+    pub backends: Vec<B>,
+}
+
+impl<B: RolloutBackend> Replica<B> {
+    pub fn new(sched: Scheduler, kv: KvMemoryManager, backends: Vec<B>) -> Self {
+        Replica { sched, kv, backends }
+    }
+}
+
+/// What the fleet did, for tests, benches, and metrics: the routing
+/// decision per task, the router's modeled per-replica load, each
+/// replica's own (serially merged) stats, and how many cross-replica
+/// steals happened.
+#[derive(Debug, Clone, Default)]
+pub struct FleetReport {
+    pub replicas: usize,
+    /// `routed[i]` = replica index task `i` (input-slice order) was
+    /// routed to by the load model (before any stealing).
+    pub routed: Vec<usize>,
+    /// Router's total modeled load per replica after routing.
+    pub modeled_load: Vec<u64>,
+    /// Per-replica rollout stats (serial merge of that replica's runs).
+    pub per_replica: Vec<RolloutStats>,
+    /// Tasks that actually moved across replica boundaries.
+    pub replica_steals: usize,
+}
+
+/// The modeled cost of one task on one replica: predicted residency ×
+/// admission cost. Residency is how much of the wall the task occupies
+/// while live; admission cost is the unclamped prompt+response length —
+/// a ready-time proxy. The product is the "area" the task sweeps
+/// through the replica's memory wall over time, which is the quantity
+/// a makespan-aware router should balance (two short prompts and one
+/// long one are NOT the same load even when the queue lengths match).
+fn task_load(sched: &Scheduler, task: &Task, max_response: usize) -> u64 {
+    let prompt = task.prompt_ids.len();
+    let residency = sched.predicted_residency(prompt, max_response) as u64;
+    let cost = sched.admission_cost(prompt, max_response) as u64;
+    residency * cost
+}
+
+/// Greedy least-loaded routing: tasks are considered in input order and
+/// each goes to the replica with the smallest accumulated modeled load
+/// (stable tie-break: lowest replica index). Returns the assignment per
+/// task, the per-task modeled load (under its assigned replica's
+/// scheduler), and the final per-replica totals. Deterministic — pure
+/// arithmetic over the task list.
+pub fn route_tasks<B: RolloutBackend>(
+    replicas: &[Replica<B>],
+    tasks: &[(usize, &Task)],
+    max_response: usize,
+) -> (Vec<usize>, Vec<u64>, Vec<u64>) {
+    let n_reps = replicas.len();
+    let mut load = vec![0u64; n_reps];
+    let mut routed = Vec::with_capacity(tasks.len());
+    let mut per_task = Vec::with_capacity(tasks.len());
+    for (_, task) in tasks {
+        // least-loaded first; min_by_key keeps the FIRST minimum, so
+        // ties stably break to the lowest replica index
+        let pick = (0..n_reps).min_by_key(|&r| load[r]).unwrap_or(0);
+        let cost = task_load(&replicas[pick].sched, task, max_response);
+        load[pick] += cost;
+        routed.push(pick);
+        per_task.push(cost);
+    }
+    (routed, per_task, load)
+}
+
+/// Shared fleet state the replica threads coordinate through. Queues
+/// hold input-slice positions (not `Task`s) so a steal moves only an
+/// index; `pending_load` mirrors the modeled load still queued per
+/// replica so victim selection stays cost-weighted as queues drain.
+struct FleetShared {
+    queues: Vec<VecDeque<usize>>,
+    pending_load: Vec<u64>,
+    results: Vec<Option<GenSeq>>,
+    per_replica: Vec<RolloutStats>,
+    steals: usize,
+    failed: Option<String>,
+}
+
+/// Run one batch of tasks on one replica with the configured engine
+/// shell. `base` namespaces sequence ids within the replica's own KV
+/// wall (walls are private, so bases only need to be distinct across a
+/// single replica's successive runs).
+fn run_batch<B: RolloutBackend + Send>(
+    policy: &RolloutPolicy,
+    engine: EngineKind,
+    rep: &mut Replica<B>,
+    batch: &[(usize, &Task)],
+    seed: u64,
+    base: u64,
+) -> Result<(Vec<GenSeq>, RolloutStats)> {
+    let Replica { sched, kv, backends } = rep;
+    match engine {
+        EngineKind::Static => {
+            policy.rollout_static_queue(&mut backends[0], batch, seed, sched, kv, base)
+        }
+        EngineKind::Continuous => {
+            policy.rollout_continuous(&mut backends[0], batch, seed, sched, kv, base)
+        }
+        EngineKind::Pipelined => {
+            if policy.prefill.is_async() && backends.len() >= 2 {
+                let split = backends.len() - 1;
+                let (lanes, exec) = backends.split_at_mut(split);
+                policy.rollout_pipelined(lanes, Some(&mut exec[0]), batch, seed, sched, kv, base)
+            } else {
+                policy.rollout_pipelined(backends, None, batch, seed, sched, kv, base)
+            }
+        }
+    }
+}
+
+/// Roll out `tasks` across a fleet of replicas. Results come back in
+/// input-slice order; the fleet-level `RolloutStats` is the PARALLEL
+/// composition (`merge_parallel`) of the per-replica stats — makespan
+/// is the slowest replica, lanes sum — and `FleetReport` carries the
+/// routing/steal detail. A single-replica fleet short-circuits to one
+/// direct engine pass on the calling thread (no router, no threads):
+/// bit-exact with calling the engine shell yourself.
+pub fn rollout_fleet<B: RolloutBackend + Send>(
+    policy: &RolloutPolicy,
+    engine: EngineKind,
+    replicas: &mut [Replica<B>],
+    tasks: &[(usize, &Task)],
+    seed: u64,
+    replica_steal: bool,
+) -> Result<(Vec<GenSeq>, RolloutStats, FleetReport)> {
+    let n_reps = replicas.len();
+    if n_reps == 0 {
+        bail!("rollout_fleet needs at least one replica");
+    }
+    for (r, rep) in replicas.iter().enumerate() {
+        if rep.backends.is_empty() {
+            bail!("replica {r} has no backend lanes");
+        }
+    }
+    let n = tasks.len();
+    let max_response = policy.sampling.max_response;
+    let (routed, per_task_load, modeled_load) = route_tasks(replicas, tasks, max_response);
+
+    if n_reps == 1 {
+        // Single replica: the fleet tier vanishes — one engine pass,
+        // calling thread, seq ids from 0. This is the `replicas = 1`
+        // bit-exactness guarantee.
+        let (seqs, stats) = run_batch(policy, engine, &mut replicas[0], tasks, seed, 0)?;
+        let mut fleet = RolloutStats::default();
+        fleet.merge_parallel(&stats);
+        let report = FleetReport {
+            replicas: 1,
+            routed,
+            modeled_load,
+            per_replica: vec![stats],
+            replica_steals: 0,
+        };
+        return Ok((seqs, fleet, report));
+    }
+
+    let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_reps];
+    for (pos, &r) in routed.iter().enumerate() {
+        queues[r].push_back(pos);
+    }
+    let mut pending_load = vec![0u64; n_reps];
+    for (pos, &r) in routed.iter().enumerate() {
+        pending_load[r] += per_task_load[pos];
+    }
+    let shared = Mutex::new(FleetShared {
+        queues,
+        pending_load,
+        results: (0..n).map(|_| None).collect(),
+        per_replica: vec![RolloutStats::default(); n_reps],
+        steals: 0,
+        failed: None,
+    });
+
+    std::thread::scope(|scope| {
+        for (r, rep) in replicas.iter_mut().enumerate() {
+            let shared = &shared;
+            let per_task_load = &per_task_load;
+            scope.spawn(move || {
+                // With stealing off each replica drains its whole queue
+                // in ONE engine pass (deterministic: batch composition
+                // is the router's, independent of thread timing). With
+                // stealing on it takes modest chunks so tail work stays
+                // visible to drained peers.
+                let chunk = (rep.sched.slots * 2).max(1);
+                let mut stats = RolloutStats::default();
+                let mut runs = 0u64;
+                loop {
+                    let mut batch_pos: Vec<usize> = Vec::new();
+                    {
+                        let mut sh = shared.lock().unwrap();
+                        if sh.failed.is_some() {
+                            break;
+                        }
+                        if !sh.queues[r].is_empty() {
+                            let take = if replica_steal { chunk } else { sh.queues[r].len() };
+                            for _ in 0..take.min(sh.queues[r].len()) {
+                                let pos = sh.queues[r].pop_front().unwrap();
+                                sh.pending_load[r] =
+                                    sh.pending_load[r].saturating_sub(per_task_load[pos]);
+                                batch_pos.push(pos);
+                            }
+                        } else if replica_steal {
+                            // Drained: rob the most-loaded peer of its
+                            // single highest-load queued task. Both picks
+                            // are cost-weighted (modeled load, not queue
+                            // length), stable ties to the lowest index /
+                            // earliest queue position.
+                            let victim = (0..sh.queues.len())
+                                .filter(|&v| v != r && !sh.queues[v].is_empty())
+                                .max_by_key(|&v| (sh.pending_load[v], std::cmp::Reverse(v)));
+                            let Some(v) = victim else { break };
+                            let at = sh.queues[v]
+                                .iter()
+                                .enumerate()
+                                .max_by_key(|&(i, &pos)| {
+                                    (per_task_load[pos], std::cmp::Reverse(i))
+                                })
+                                .map(|(i, _)| i)
+                                .unwrap();
+                            let pos = sh.queues[v].remove(at).unwrap();
+                            sh.pending_load[v] =
+                                sh.pending_load[v].saturating_sub(per_task_load[pos]);
+                            sh.steals += 1;
+                            batch_pos.push(pos);
+                        } else {
+                            break;
+                        }
+                    }
+                    if batch_pos.is_empty() {
+                        break;
+                    }
+                    let batch: Vec<(usize, &Task)> =
+                        batch_pos.iter().map(|&p| tasks[p]).collect();
+                    // seq ids: private wall, so runs of THIS replica just
+                    // need disjoint id ranges; spacing by the global task
+                    // count over-provisions safely.
+                    let base = runs * n as u64;
+                    runs += 1;
+                    match run_batch(policy, engine, rep, &batch, seed, base) {
+                        Ok((seqs, rstats)) => {
+                            stats.merge(&rstats);
+                            let mut sh = shared.lock().unwrap();
+                            for (&pos, seq) in batch_pos.iter().zip(seqs) {
+                                sh.results[pos] = Some(seq);
+                            }
+                        }
+                        Err(e) => {
+                            let mut sh = shared.lock().unwrap();
+                            sh.failed.get_or_insert(format!("replica {r}: {e:#}"));
+                            break;
+                        }
+                    }
+                }
+                shared.lock().unwrap().per_replica[r] = stats;
+            });
+        }
+    });
+
+    let sh = shared.into_inner().unwrap();
+    if let Some(msg) = sh.failed {
+        bail!("fleet rollout failed: {msg}");
+    }
+    let mut fleet = RolloutStats::default();
+    for rstats in &sh.per_replica {
+        fleet.merge_parallel(rstats);
+    }
+    let mut out = Vec::with_capacity(n);
+    for (pos, seq) in sh.results.into_iter().enumerate() {
+        match seq {
+            Some(s) => out.push(s),
+            None => bail!("fleet rollout lost task at position {pos}"),
+        }
+    }
+    let report = FleetReport {
+        replicas: n_reps,
+        routed,
+        modeled_load,
+        per_replica: sh.per_replica,
+        replica_steals: sh.steals,
+    };
+    Ok((out, fleet, report))
+}

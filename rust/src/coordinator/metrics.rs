@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 /// Column-oriented step metrics.
 #[derive(Debug, Default, Clone)]
@@ -80,18 +80,47 @@ impl Metrics {
         tail.iter().sum::<f64>() / tail.len() as f64
     }
 
-    /// Write all series as CSV (step column first).
+    /// The CSV header line this metrics object would write.
+    fn header(&self) -> String {
+        let mut h = String::from("step");
+        for n in &self.names {
+            h.push(',');
+            h.push_str(n);
+        }
+        h
+    }
+
+    /// Write all series as CSV (step column first). A fresh file gets
+    /// the header; overwriting an EXISTING csv whose header doesn't
+    /// match this run's schema is an ERROR, not a silent replace —
+    /// metrics columns grow across versions (engine counters, fleet
+    /// counters, ...) and the figure harnesses replay old CSVs, so
+    /// schema drift must surface at write time instead of corrupting a
+    /// trajectory two tools downstream. The mismatching file is left
+    /// untouched; move it aside or pick a fresh out-dir.
     pub fn write_csv(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir).ok();
         }
+        let header = self.header();
+        if let Ok(existing) = std::fs::read_to_string(path) {
+            if let Some(old) = existing.lines().next() {
+                if old != header {
+                    bail!(
+                        "refusing to overwrite {}: existing header\n  {}\n\
+                         does not match this run's schema\n  {}\n\
+                         (metrics schema drift — move the old csv aside or \
+                         write to a fresh out-dir)",
+                        path.display(),
+                        old,
+                        header
+                    );
+                }
+            }
+        }
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
-        write!(f, "step")?;
-        for n in &self.names {
-            write!(f, ",{n}")?;
-        }
-        writeln!(f)?;
+        writeln!(f, "{header}")?;
         for (i, row) in self.rows.iter().enumerate() {
             write!(f, "{i}")?;
             for n in &self.names {
@@ -175,6 +204,7 @@ mod tests {
         }
         let dir = std::env::temp_dir().join("srl_metrics_test");
         let p = dir.join("rt.csv");
+        std::fs::remove_file(&p).ok(); // stale schemas persist across runs
         m.write_csv(&p).unwrap();
         let m2 = Metrics::read_csv(&p).unwrap();
         assert_eq!(m2.len(), 4);
@@ -194,11 +224,39 @@ mod tests {
         m.push("b", 3.0);
         let dir = std::env::temp_dir().join("srl_metrics_test");
         let p = dir.join("m.csv");
+        std::fs::remove_file(&p).ok(); // stale schemas persist across runs
         m.write_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines[0], "step,a,b");
         assert_eq!(lines[1], "0,1,");
         assert_eq!(lines[2], "1,2,3");
+    }
+
+    #[test]
+    fn csv_header_mismatch_is_an_error_and_preserves_the_file() {
+        let dir = std::env::temp_dir().join("srl_metrics_test");
+        let p = dir.join("drift.csv");
+        // the temp dir persists across test runs: start from a known file
+        std::fs::remove_file(&p).ok();
+        let mut old = Metrics::new();
+        old.begin_step();
+        old.push("reward", 1.0);
+        old.write_csv(&p).unwrap();
+        // a newer build grows the schema — overwriting must fail loudly
+        let mut new = Metrics::new();
+        new.begin_step();
+        new.push("reward", 2.0);
+        new.push("replica_steals", 0.0);
+        let err = new.write_csv(&p).unwrap_err().to_string();
+        assert!(err.contains("schema"), "unhelpful error: {err}");
+        // ... and leave the existing trajectory untouched
+        let kept = Metrics::read_csv(&p).unwrap();
+        assert_eq!(kept.series("reward"), vec![1.0]);
+        // a matching schema still rewrites in place (checkpoint refresh)
+        old.begin_step();
+        old.push("reward", 3.0);
+        old.write_csv(&p).unwrap();
+        assert_eq!(Metrics::read_csv(&p).unwrap().len(), 2);
     }
 }

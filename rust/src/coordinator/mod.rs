@@ -8,6 +8,9 @@
 //! * `backend`    — the model surface the engines drive (artifacts or mock)
 //! * `mock`       — deterministic pure-Rust backend for the equivalence
 //!   test harness and engine benches
+//! * `fleet`      — the replica tier: N full engine instances (scheduler
+//!   + private KV wall + lane pool each) under a global load-modeled
+//!   router with cross-replica work stealing
 //! * `scheduler`  — memory-wall admission, chunk- and sequence-level
 //!   (the batch-size story of §1)
 //! * `kv_manager` — the simulated KV memory wall itself
@@ -21,6 +24,7 @@
 pub mod backend;
 pub mod engine;
 pub mod eval;
+pub mod fleet;
 pub mod group;
 pub mod kv_manager;
 pub mod metrics;
@@ -32,7 +36,10 @@ pub mod trainer;
 
 pub use backend::{CostModel, EngineBackend, PreparedSlotPrefill, RolloutBackend};
 pub use engine::{task_rng, GenSeq, RolloutEngine, RolloutPolicy, RolloutStats};
-pub use eval::{evaluate, evaluate_suite, evaluate_with_backend, EvalOptions, EvalResult};
+pub use eval::{
+    evaluate, evaluate_suite, evaluate_with_backend, evaluate_with_fleet, EvalOptions, EvalResult,
+};
+pub use fleet::{rollout_fleet, route_tasks, FleetReport, Replica};
 pub use kv_manager::KvMemoryManager;
 pub use metrics::Metrics;
 pub use mock::MockModelBackend;

@@ -684,577 +684,5 @@ impl Scheduler {
 }
 
 #[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::util::propcheck;
-
-    fn fake_manifest(slots: usize, max_seq: usize, sparse_cap: usize) -> (usize, usize, usize) {
-        // Scheduler only reads three numbers; tests construct it directly.
-        (slots, max_seq, sparse_cap)
-    }
-
-    fn mk(slots: usize, reserve: usize) -> Scheduler {
-        Scheduler::worst_case(slots, reserve)
-    }
-
-    #[test]
-    fn dense_is_memory_limited_sparse_is_slot_limited() {
-        let (slots, max_seq, sparse_cap) = fake_manifest(16, 208, 48);
-        let mut kv = KvMemoryManager::new(2048);
-        let mut dense = mk(slots, max_seq);
-        let mut pending: Vec<usize> = (0..16).collect();
-        let c = dense.next_chunk(&mut pending, &mut kv, 0, &[]).unwrap();
-        assert_eq!(c.items.len(), 9); // 2048 / 208
-        dense.finish_chunk(&c, &mut kv, 0);
-        assert_eq!(kv.reserved(), 0);
-
-        let mut sparse = mk(slots, sparse_cap);
-        let mut pending: Vec<usize> = (0..64).collect();
-        let c = sparse.next_chunk(&mut pending, &mut kv, 100, &[]).unwrap();
-        assert_eq!(c.items.len(), 16); // slot-limited, not memory-limited
-        sparse.finish_chunk(&c, &mut kv, 100);
-    }
-
-    #[test]
-    fn paged_chunks_admit_by_predicted_residency() {
-        // worst case 160/seq on a 480 wall admits 3; predicted residencies
-        // of 80 admit 6 (slot-capped at 8)
-        let mut kv = KvMemoryManager::with_pages(480, 16);
-        let mut s = mk(8, 160).with_admission(AdmissionPolicy::Paged);
-        let residency = vec![80usize; 12];
-        let mut pending: Vec<usize> = (0..12).collect();
-        let c = s.next_chunk(&mut pending, &mut kv, 0, &residency).unwrap();
-        assert_eq!(c.items.len(), 6);
-        assert_eq!(kv.reserved(), 6 * 80);
-        kv.check_invariants().unwrap();
-        s.finish_chunk(&c, &mut kv, 0);
-        assert_eq!(kv.reserved(), 0);
-
-        // mixed residencies: greedy prefix fill stops at the wall
-        let residency = vec![200usize, 200, 200, 200];
-        let mut pending: Vec<usize> = (0..4).collect();
-        let c = s.next_chunk(&mut pending, &mut kv, 0, &residency).unwrap();
-        // 200 tokens = 13 pages; 30 pages in pool -> 2 fit
-        assert_eq!(c.items.len(), 2);
-        s.finish_chunk(&c, &mut kv, 0);
-    }
-
-    #[test]
-    fn predicted_chunks_match_actual() {
-        propcheck::quick("sched-prediction", |rng, size| {
-            let slots = 1 + rng.below(32);
-            let reserve = 1 + rng.below(300);
-            let cap = reserve + rng.below(4096);
-            let n = 1 + size;
-            let mut sched = mk(slots, reserve);
-            let mut kv = KvMemoryManager::new(cap);
-            let mut pending: Vec<usize> = (0..n).collect();
-            let mut chunks = 0usize;
-            let mut scheduled = 0usize;
-            while !pending.is_empty() {
-                match sched.next_chunk(&mut pending, &mut kv, 1000, &[]) {
-                    Some(c) => {
-                        chunks += 1;
-                        scheduled += c.items.len();
-                        // synchronous drain (static batching)
-                        sched.finish_chunk(&c, &mut kv, 1000);
-                    }
-                    None => return Err("deadlock: nothing admissible".into()),
-                }
-                if chunks > n {
-                    return Err("more chunks than sequences".into());
-                }
-            }
-            if scheduled != n {
-                return Err(format!("scheduled {scheduled} of {n}"));
-            }
-            if chunks != sched.predicted_chunks(n, cap) {
-                return Err(format!(
-                    "chunks {} != predicted {}",
-                    chunks,
-                    sched.predicted_chunks(n, cap)
-                ));
-            }
-            if kv.reserved() != 0 {
-                return Err("kv not fully released".into());
-            }
-            Ok(())
-        });
-    }
-
-    #[test]
-    fn stats_track_utilization() {
-        let mut kv = KvMemoryManager::new(208 * 4);
-        let mut s = mk(8, 208);
-        let mut pending: Vec<usize> = (0..8).collect();
-        let c = s.next_chunk(&mut pending, &mut kv, 0, &[]).unwrap();
-        assert_eq!(c.items.len(), 4);
-        assert!((s.stats.mean_slot_utilization() - 0.5).abs() < 1e-9);
-        assert!((s.stats.mean_kv_utilization() - 1.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn seq_admission_respects_wall_and_counts_stalls() {
-        let mut kv = KvMemoryManager::new(100);
-        let mut s = mk(8, 40);
-        assert!(s.try_admit(&mut kv, 1, 10));
-        assert!(s.try_admit(&mut kv, 2, 10));
-        // 80 of 100 reserved: a third does not fit
-        assert!(!s.try_admit(&mut kv, 3, 10));
-        assert_eq!(s.stats.admit_stalls, 1);
-        assert_eq!(s.stats.live_seqs(), 2);
-        assert_eq!(s.release_seq(&mut kv, 1).unwrap(), 40);
-        assert!(s.try_admit(&mut kv, 3, 10));
-        assert_eq!(s.stats.seq_admissions, 3);
-    }
-
-    #[test]
-    fn paged_admission_charges_prompt_and_grows() {
-        let mut kv = KvMemoryManager::with_pages(100, 10);
-        let mut s = mk(8, 40).with_admission(AdmissionPolicy::Paged);
-        // worst-case would admit 2 (40 each); paged admits 11-token
-        // prompts (2 pages each) — 4 of them, keeping one page of growth
-        // headroom once sequences are live
-        for id in 1..=4 {
-            assert!(s.try_admit(&mut kv, id, 10), "seq {id} refused");
-        }
-        assert_eq!(kv.used_pages(), 8);
-        // 2 pages free but 2 needed + headroom: refused
-        assert!(!s.try_admit(&mut kv, 5, 10));
-        assert_eq!(s.stats.admit_stalls, 1);
-        // growth can consume the headroom page by page
-        assert!(s.grow(&mut kv, 1, 21).unwrap());
-        assert!(s.grow(&mut kv, 2, 21).unwrap());
-        assert_eq!(kv.free_pages(), 0);
-        // pool exhausted: further growth stalls
-        assert!(!s.grow(&mut kv, 3, 21).unwrap());
-        assert_eq!(s.stats.grow_stalls, 1);
-        // preempting a sequence frees pages for the grower
-        assert_eq!(s.preempt(&mut kv, 4).unwrap(), 11);
-        assert_eq!(s.stats.preemptions, 1);
-        assert!(s.grow(&mut kv, 3, 21).unwrap());
-        // compression shrink releases pages again
-        assert!(s.compressed(&mut kv, 1, 5).unwrap());
-        assert_eq!(kv.free_pages(), 3);
-        kv.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn admit_headroom_gates_paged_admission() {
-        // pool of 10 pages; 10-token prompts charge 11 tokens = 2 pages
-        let mk_kv = || KvMemoryManager::with_pages(100, 10);
-        // headroom 0: admissions pack flush against the wall (5 fit)
-        let mut kv = mk_kv();
-        let mut s0 = mk(8, 40).with_admission(AdmissionPolicy::Paged).with_headroom(0);
-        for id in 1..=5 {
-            assert!(s0.try_admit(&mut kv, id, 10), "seq {id} refused at headroom 0");
-        }
-        assert_eq!(kv.free_pages(), 0);
-        // headroom 4: every admission must leave 4 free pages -> 3 fit
-        let mut kv = mk_kv();
-        let mut s4 = mk(8, 40).with_admission(AdmissionPolicy::Paged).with_headroom(4);
-        for id in 1..=3 {
-            assert!(s4.try_admit(&mut kv, id, 10), "seq {id} refused at headroom 4");
-        }
-        assert!(!s4.try_admit(&mut kv, 4, 10));
-        assert_eq!(kv.free_pages(), 4);
-        // empty-pool bypass: even huge headroom admits a first sequence
-        // (progress guarantee), then gates the second
-        let mut kv = mk_kv();
-        let mut sb = mk(8, 40).with_admission(AdmissionPolicy::Paged).with_headroom(100);
-        assert!(sb.try_admit(&mut kv, 1, 10));
-        assert!(!sb.try_admit(&mut kv, 2, 10));
-        // the default reproduces the original one-page rule
-        assert_eq!(mk(8, 40).admit_headroom_pages, 1);
-    }
-
-    #[test]
-    fn worst_case_grow_and_compressed_are_no_ops() {
-        let mut kv = KvMemoryManager::new(100);
-        let mut s = mk(4, 40);
-        assert!(s.try_admit(&mut kv, 1, 10));
-        assert_eq!(kv.reserved(), 40);
-        assert!(s.grow(&mut kv, 1, 39).unwrap());
-        assert!(s.compressed(&mut kv, 1, 5).unwrap());
-        assert_eq!(kv.reserved(), 40, "worst-case reservation must not move");
-        assert_eq!(s.stats.grow_stalls, 0);
-    }
-
-    #[test]
-    fn double_release_is_an_error() {
-        let mut kv = KvMemoryManager::new(100);
-        let mut s = mk(4, 10);
-        assert!(s.try_admit(&mut kv, 7, 10));
-        assert!(s.release_seq(&mut kv, 7).is_ok());
-        assert!(s.release_seq(&mut kv, 7).is_err(), "double release must fail");
-        assert!(s.release_seq(&mut kv, 99).is_err(), "unknown id must fail");
-        assert_eq!(s.stats.seq_releases, 1);
-    }
-
-    #[test]
-    fn prop_seq_admission_never_deadlocks_or_leaks() {
-        // Random interleavings of per-sequence admit/grow/release/preempt
-        // under BOTH admission policies: admission must succeed iff the
-        // wall has room for the policy's charge, reservations must
-        // conserve (pages and tokens), and a full drain must always be
-        // reachable (no deadlock).
-        propcheck::quick("seq-admit-release", |rng, size| {
-            let paged = rng.chance(0.5);
-            let page = if paged { 1 + rng.below(8) } else { 1 };
-            let reserve = 1 + rng.below(50);
-            let cap = reserve * (1 + rng.below(8)) + rng.below(reserve);
-            let mut s = mk(1 + rng.below(16), reserve);
-            if paged {
-                s = s.with_admission(AdmissionPolicy::Paged);
-            }
-            let mut kv = KvMemoryManager::with_pages(cap, page);
-            // (id, reserved tokens)
-            let mut live: Vec<(SeqId, usize)> = vec![];
-            let mut next_id = 0u64;
-            for _ in 0..(20 + size) {
-                let op = if live.is_empty() { 0 } else { rng.below(4) };
-                match op {
-                    0 | 3 => {
-                        next_id += 1;
-                        let prompt = rng.below(reserve.max(1));
-                        let want = s.admit_reserve(prompt);
-                        // paged keeps one page of growth headroom while
-                        // anything is live; worst-case fills the wall
-                        let fits = if paged && kv.live_sequences() > 0 {
-                            kv.pages_for(want) < kv.free_pages()
-                        } else {
-                            kv.pages_for(want) <= kv.free_pages()
-                        };
-                        let admitted = s.try_admit(&mut kv, next_id, prompt);
-                        if admitted != fits {
-                            return Err(format!(
-                                "admit said {admitted}, wall said fits={fits} \
-                                 (reserved {} of {cap})",
-                                kv.reserved()
-                            ));
-                        }
-                        if admitted {
-                            live.push((next_id, want));
-                        }
-                    }
-                    1 => {
-                        // grow a random live sequence toward the bound
-                        let k = rng.below(live.len());
-                        let (id, cur) = live[k];
-                        let target = (cur + 1 + rng.below(page * 2 + 1)).min(reserve);
-                        let grown = s.grow(&mut kv, id, target).map_err(|e| e.to_string())?;
-                        if grown {
-                            live[k].1 = live[k].1.max(target);
-                        } else if !paged {
-                            return Err("worst-case grow stalled".into());
-                        }
-                    }
-                    _ => {
-                        let k = rng.below(live.len());
-                        let (id, toks) = live.swap_remove(k);
-                        let freed = if rng.chance(0.3) {
-                            s.preempt(&mut kv, id).map_err(|e| e.to_string())?
-                        } else {
-                            s.release_seq(&mut kv, id).map_err(|e| e.to_string())?
-                        };
-                        if freed != toks {
-                            return Err(format!("released {freed}, expected {toks}"));
-                        }
-                        // releasing twice must fail, not corrupt the pool
-                        if s.release_seq(&mut kv, id).is_ok() {
-                            return Err("double release accepted".into());
-                        }
-                    }
-                }
-                let expect: usize = live.iter().map(|(_, t)| t).sum();
-                if kv.reserved() != expect {
-                    return Err(format!("reservation leak: {} != {expect}", kv.reserved()));
-                }
-                if s.stats.live_seqs() != live.len() {
-                    return Err("live_seqs out of sync".into());
-                }
-                kv.check_invariants().map_err(|e| e.to_string())?;
-            }
-            // no deadlock: a full drain + one admission always works
-            for (id, _) in live.drain(..) {
-                s.release_seq(&mut kv, id).map_err(|e| e.to_string())?;
-            }
-            if !s.try_admit(&mut kv, u64::MAX, 0) {
-                return Err("empty wall refused admission".into());
-            }
-            Ok(())
-        });
-    }
-
-    #[test]
-    fn shared_admission_charges_prefix_once() {
-        // page 4; 10-token prompts share an 8-token page-aligned prefix
-        let mut kv = KvMemoryManager::with_pages(100, 4); // 25 pages
-        let mut s = mk(8, 40)
-            .with_admission(AdmissionPolicy::Paged)
-            .with_sharing(PrefixSharing::Group);
-        let prompt: Vec<i32> = (0..10).collect();
-        // first sharer charges exactly the unshared admission: 11 tokens
-        // = 8 prefix (2 pages) + 3 private (1 page)
-        assert!(s.try_admit_prompt(&mut kv, 1, &prompt));
-        assert_eq!(kv.used_pages(), 3);
-        assert_eq!(s.stats.shared_admissions, 0);
-        // siblings charge only their private page
-        assert!(s.try_admit_prompt(&mut kv, 2, &prompt));
-        assert!(s.try_admit_prompt(&mut kv, 3, &prompt));
-        assert_eq!(kv.used_pages(), 5);
-        assert_eq!(s.stats.shared_admissions, 2);
-        assert_eq!(s.stats.seq_admissions, 3);
-        // a different prompt gets its own prefix
-        let other: Vec<i32> = (100..110).collect();
-        assert!(s.try_admit_prompt(&mut kv, 4, &other));
-        assert_eq!(kv.used_pages(), 8);
-        assert_eq!(kv.live_prefixes(), 2);
-        kv.check_invariants().unwrap();
-        // releases drop the prefix with its last sharer
-        for id in 1..=3 {
-            s.release_seq(&mut kv, id).unwrap();
-        }
-        assert_eq!(kv.live_prefixes(), 1);
-        s.release_seq(&mut kv, 4).unwrap();
-        assert_eq!(kv.used_pages(), 0);
-        // a drained prefix is simply re-charged fresh on its next use
-        assert!(s.try_admit_prompt(&mut kv, 5, &prompt));
-        assert_eq!(kv.used_pages(), 3);
-        assert!(s.try_admit_prompt(&mut kv, 6, &prompt));
-        assert_eq!(s.stats.shared_admissions, 3);
-        kv.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn sharing_off_or_worst_case_falls_back_to_plain_admission() {
-        let prompt: Vec<i32> = (0..10).collect();
-        // sharing off: try_admit_prompt IS try_admit
-        let mut kv = KvMemoryManager::with_pages(100, 4);
-        let mut s = mk(8, 40).with_admission(AdmissionPolicy::Paged);
-        assert!(s.try_admit_prompt(&mut kv, 1, &prompt));
-        assert!(s.try_admit_prompt(&mut kv, 2, &prompt));
-        assert_eq!(kv.live_prefixes(), 0);
-        assert_eq!(kv.used_pages(), 6, "both sequences pay full freight");
-        // worst-case admission prices per sequence even with sharing on
-        let mut kv = KvMemoryManager::new(100);
-        let mut w = mk(8, 40).with_sharing(PrefixSharing::Group);
-        assert!(w.try_admit_prompt(&mut kv, 1, &prompt));
-        assert!(w.try_admit_prompt(&mut kv, 2, &prompt));
-        assert_eq!(kv.live_prefixes(), 0);
-        assert_eq!(kv.reserved(), 80);
-        // sub-page prompts have no page-aligned prefix to share
-        let mut kv = KvMemoryManager::with_pages(160, 16);
-        let mut t = mk(8, 40)
-            .with_admission(AdmissionPolicy::Paged)
-            .with_sharing(PrefixSharing::Group);
-        assert!(t.try_admit_prompt(&mut kv, 1, &prompt));
-        assert_eq!(kv.live_prefixes(), 0);
-    }
-
-    #[test]
-    fn compressed_forks_sharers_and_shrinks_loners() {
-        let mut kv = KvMemoryManager::with_pages(100, 4); // 25 pages
-        let mut s = mk(8, 40)
-            .with_admission(AdmissionPolicy::Paged)
-            .with_sharing(PrefixSharing::Group);
-        let prompt: Vec<i32> = (0..10).collect();
-        assert!(s.try_admit_prompt(&mut kv, 1, &prompt));
-        assert!(s.try_admit_prompt(&mut kv, 2, &prompt));
-        // compression on a sharer is a CoW fork to a private residency
-        assert!(s.compressed(&mut kv, 1, 6).unwrap());
-        assert_eq!(s.stats.cow_forks, 1);
-        assert_eq!(kv.seq_prefix(1), None);
-        assert_eq!(kv.prefix_refs(0), 1, "sibling still reads the prefix");
-        kv.check_invariants().unwrap();
-        // …after which compression shrinks in place like any loner
-        assert!(s.compressed(&mut kv, 1, 4).unwrap());
-        assert_eq!(s.stats.cow_forks, 1);
-        kv.check_invariants().unwrap();
-        // a fork that cannot fit reports a grow stall, not an error
-        let mut kv = KvMemoryManager::with_pages(20, 4); // 5 pages
-        let mut s = mk(8, 40)
-            .with_admission(AdmissionPolicy::Paged)
-            .with_sharing(PrefixSharing::Group);
-        assert!(s.try_admit_prompt(&mut kv, 1, &prompt)); // 3 pages
-        assert!(s.try_admit_prompt(&mut kv, 2, &prompt)); // +1 page
-        // forking seq 2 to 16 tokens needs 4 pages; 1 free + 1 own = 2
-        assert!(!s.compressed(&mut kv, 2, 16).unwrap());
-        assert_eq!(s.stats.grow_stalls, 1);
-        assert_eq!(s.stats.cow_forks, 0);
-        assert_eq!(kv.seq_prefix(2), Some(0), "denied fork left state alone");
-        kv.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn predicted_decode_steps_closed_forms() {
-        // width 2, queue costs (len-1) = [4, 1, 1, 1]:
-        // slot recycling packs the three short ones behind each other
-        let s = mk(2, 10);
-        assert_eq!(s.predicted_decode_steps(&[5, 2, 2, 2], 1000), 4);
-        // static chunks [5,2],[2,2]: (5-1) + (2-1)
-        assert_eq!(s.predicted_decode_steps_static(&[5, 2, 2, 2], 1000), 5);
-        // KV-limited to width 1: both degenerate to the serial sum
-        assert_eq!(s.predicted_decode_steps(&[5, 2, 2, 2], 10), 7);
-        assert_eq!(s.predicted_decode_steps_static(&[5, 2, 2, 2], 10), 7);
-        // uniform lengths: continuous gains nothing
-        assert_eq!(
-            s.predicted_decode_steps(&[4, 4, 4, 4], 1000),
-            s.predicted_decode_steps_static(&[4, 4, 4, 4], 1000)
-        );
-        // single-token sequences cost zero decode steps
-        assert_eq!(s.predicted_decode_steps(&[1, 1, 1], 1000), 0);
-        assert_eq!(s.predicted_decode_steps(&[], 1000), 0);
-        // the width model: a tighter per-seq reservation widens the batch
-        let wide = mk(8, 100);
-        assert!(
-            wide.predicted_decode_steps_with(&[9; 16], 300, 30)
-                < wide.predicted_decode_steps_with(&[9; 16], 300, 100)
-        );
-    }
-
-    #[test]
-    fn pick_next_orders_by_admission_cost() {
-        let fifo = mk(4, 100);
-        let sjf = mk(4, 100).with_order(AdmissionOrder::ShortestFirst);
-        // cost indexed by TASK position; queue holds task positions
-        let cost = vec![80usize, 20, 50, 20];
-        let queue: VecDeque<usize> = vec![0, 1, 2, 3].into();
-        assert_eq!(fifo.pick_next(&queue, &cost), Some(0));
-        // shortest-first: task 1 (cost 20) wins; the tie with task 3
-        // breaks toward the earlier queue position (stable)
-        assert_eq!(sjf.pick_next(&queue, &cost), Some(1));
-        let queue: VecDeque<usize> = vec![3, 0, 1].into();
-        assert_eq!(sjf.pick_next(&queue, &cost), Some(0), "task 3 at qi 0");
-        let empty: VecDeque<usize> = VecDeque::new();
-        assert_eq!(fifo.pick_next(&empty, &cost), None);
-        assert_eq!(sjf.pick_next(&empty, &cost), None);
-        // reservation oracle caps at the per-seq bound; the ordering key
-        // does not, so cap-tied tasks still order by prompt size
-        assert_eq!(sjf.predicted_residency(10, 20), 31);
-        assert_eq!(sjf.predicted_residency(90, 20), 100);
-        assert_eq!(sjf.admission_cost(10, 20), 31);
-        assert_eq!(sjf.admission_cost(90, 20), 111);
-        assert!(sjf.admission_cost(80, 20) < sjf.admission_cost(90, 20));
-    }
-
-    /// The reference pop: `pick_next` over a plain deque (the pre-index
-    /// semantics the sorted AdmissionQueue must reproduce exactly).
-    fn reference_pop(sched: &Scheduler, q: &mut VecDeque<usize>, cost: &[usize]) -> Option<usize> {
-        let qi = sched.pick_next(q, cost)?;
-        let pos = q[qi];
-        q.remove(qi);
-        Some(pos)
-    }
-
-    #[test]
-    fn admission_queue_pins_stable_first_min_tie_break() {
-        // costs by task position: three cost-3 ties (tasks 1, 2, 3)
-        let cost = vec![5usize, 3, 3, 3, 5, 1];
-        let mut q = AdmissionQueue::new(AdmissionOrder::ShortestFirst, cost.clone());
-        assert_eq!(q.len(), 6);
-        // global min first, then the tie group in queue order
-        assert_eq!(q.peek(), Some(5));
-        assert_eq!(q.pop(), Some(5));
-        assert_eq!(q.pop(), Some(1), "first of the cost-3 tie group");
-        // a preempted task requeued at the head wins its tie group again
-        q.push_front(1);
-        assert_eq!(q.pop(), Some(1), "push_front must win equal-cost ties");
-        assert_eq!(q.pop(), Some(2));
-        assert_eq!(q.pop(), Some(3));
-        assert_eq!(q.pop(), Some(0), "cost-5 ties keep original queue order");
-        assert_eq!(q.pop(), Some(4));
-        assert_eq!(q.pop(), None);
-        assert!(q.is_empty());
-
-        // fifo mode ignores costs entirely
-        let mut f = AdmissionQueue::new(AdmissionOrder::Fifo, cost);
-        f.push_front(4);
-        assert_eq!(f.pop(), Some(4));
-        assert_eq!(f.pop(), Some(0));
-        assert_eq!(f.pop(), Some(1));
-    }
-
-    #[test]
-    fn prop_admission_queue_matches_pick_next_reference() {
-        // Random pop / push_front traffic (the only operations the
-        // engines perform) over heavily tied cost vectors: the sorted
-        // index must emit exactly the reference scan's pick sequence, in
-        // both admission orders.
-        propcheck::quick("admission-queue-oracle", |rng, size| {
-            let n = 1 + rng.below(4 + size);
-            // few distinct costs -> many ties -> the tie-break is what's
-            // actually under test
-            let cost: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
-            for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
-                let sched = mk(4, 100).with_order(order);
-                let mut q = AdmissionQueue::new(order, cost.clone());
-                let mut reference: VecDeque<usize> = (0..n).collect();
-                let mut popped: Vec<usize> = Vec::new();
-                for _ in 0..(2 * n + 10) {
-                    if !popped.is_empty() && rng.chance(0.3) {
-                        // requeue a random previously-popped task (the
-                        // preemption path)
-                        let pos = popped.swap_remove(rng.below(popped.len()));
-                        q.push_front(pos);
-                        reference.push_front(pos);
-                    } else {
-                        let got = q.pop();
-                        let want = reference_pop(&sched, &mut reference, &cost);
-                        if got != want {
-                            return Err(format!(
-                                "{}: index popped {got:?}, reference {want:?} (cost {cost:?})",
-                                order.label()
-                            ));
-                        }
-                        if let Some(pos) = got {
-                            popped.push(pos);
-                        }
-                    }
-                    if q.len() != reference.len() {
-                        return Err(format!(
-                            "len diverged: index {} vs reference {}",
-                            q.len(),
-                            reference.len()
-                        ));
-                    }
-                }
-                // full drain must also agree
-                while let Some(want) = reference_pop(&sched, &mut reference, &cost) {
-                    if q.pop() != Some(want) {
-                        return Err("drain order diverged".into());
-                    }
-                }
-                if q.pop().is_some() {
-                    return Err("index longer than reference".into());
-                }
-            }
-            Ok(())
-        });
-    }
-
-    #[test]
-    fn width_paged_tracks_mean_residency() {
-        let s = mk(8, 160);
-        let kv = KvMemoryManager::with_pages(480, 16);
-        // worst case: 480/160 = 3 wide; paged at mean residency 80: 6 wide
-        assert_eq!(s.width_paged(&kv, 160), 3);
-        assert_eq!(s.width_paged(&kv, 80), 6);
-        assert_eq!(s.width_paged(&kv, 10), 8, "slot-capped");
-    }
-
-    #[test]
-    fn continuous_never_worse_than_static_prediction() {
-        propcheck::quick("continuous-leq-static", |rng, size| {
-            let s = mk(1 + rng.below(8), 1 + rng.below(64));
-            let cap = 1 + rng.below(512);
-            let lens: Vec<usize> = (0..1 + size).map(|_| 1 + rng.below(40)).collect();
-            let c = s.predicted_decode_steps(&lens, cap);
-            let st = s.predicted_decode_steps_static(&lens, cap);
-            if c > st {
-                return Err(format!("continuous {c} > static {st} for {lens:?}"));
-            }
-            Ok(())
-        });
-    }
-}
+#[path = "scheduler_tests.rs"]
+mod tests;

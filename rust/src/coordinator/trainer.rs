@@ -24,12 +24,14 @@ use crate::data::task::{looks_repetitive, Task};
 use crate::runtime::{ModelEngine, ParamsLit, TrainState};
 use crate::util::rng::Rng;
 
+use super::backend::EngineBackend;
+use super::engine::{GenSeq, RolloutEngine, RolloutStats};
+use super::fleet::{rollout_fleet, FleetReport, Replica};
 use super::group::{batched_group_advantages, summarize};
 use super::kv_manager::KvMemoryManager;
 use super::metrics::Metrics;
 use super::rejection::{self, RejectionStats};
 use super::reweight::{self, TrainSeq};
-use super::engine::{GenSeq, RolloutEngine, RolloutStats};
 use super::scheduler::Scheduler;
 
 /// Everything produced by one RL step, for logging/analysis.
@@ -78,8 +80,15 @@ pub struct StepReport {
     pub kv_page_occupancy: f64,
     /// Peak concurrently occupied decode slots (admitted width).
     pub peak_live_slots: usize,
-    /// Worker lanes the rollout ran on (1 unless `engine = pipelined`).
+    /// Worker lanes the rollout ran on (1 unless `engine = pipelined`);
+    /// under a fleet this sums lanes across replicas.
     pub rollout_workers: usize,
+    /// Data-parallel rollout replicas the step ran on (the `replicas`
+    /// knob; 1 = the single-engine path).
+    pub replicas: usize,
+    /// Tasks that moved across replica boundaries via cross-replica work
+    /// stealing (`replicas > 1` with `replica-steal = on`; 0 otherwise).
+    pub replica_steals: usize,
     /// Modeled-time breakdown on the backend cost model (all zero for the
     /// real artifact backend, which is wall-timed via `rollout_secs`):
     /// ticks busy decoding/compressing, summed over lanes.
@@ -103,6 +112,9 @@ pub struct Trainer<'a> {
     pub rng: Rng,
     pub metrics: Metrics,
     pub kv: KvMemoryManager,
+    /// Routing/steal detail of the most recent fleet rollout (`replicas >
+    /// 1` only; `None` after a single-engine rollout).
+    pub last_fleet: Option<FleetReport>,
     cursor: usize,
     order: Vec<usize>,
 }
@@ -118,7 +130,18 @@ impl<'a> Trainer<'a> {
         let mut order: Vec<usize> = (0..tasks.len()).collect();
         rng.shuffle(&mut order);
         let kv = KvMemoryManager::with_pages(cfg.memory.global_kv_tokens, cfg.memory.kv_page_tokens);
-        Trainer { engine, cfg, state, tasks, rng, metrics: Metrics::new(), kv, cursor: 0, order }
+        Trainer {
+            engine,
+            cfg,
+            state,
+            tasks,
+            rng,
+            metrics: Metrics::new(),
+            kv,
+            last_fleet: None,
+            cursor: 0,
+            order,
+        }
     }
 
     fn next_task_idx(&mut self) -> usize {
@@ -149,17 +172,62 @@ impl<'a> Trainer<'a> {
             .with_steal(self.cfg.steal)
             .with_prefill(self.cfg.prefill)
             .with_sharing(self.cfg.memory.prefix_sharing);
-        let mut scheduler = Scheduler::new(&self.engine.manifest, self.cfg.mode.is_sparse())
-            .with_admission(self.cfg.memory.admission)
-            .with_headroom(self.cfg.memory.kv_admit_headroom_pages)
-            .with_order(self.cfg.admission_order)
-            .with_sharing(self.cfg.memory.prefix_sharing);
         let seed = self.rng.next_u64();
         let params = ParamsLit::new(&self.state.params);
         // flat sequence ids: seq s belongs to prompt s / g
         let tasks: Vec<(usize, &Task)> = (0..n)
             .map(|s| (s, &self.tasks[task_indices[s / g]]))
             .collect();
+        if self.cfg.replicas > 1 {
+            // Fleet path: N full engine instances — fresh scheduler +
+            // private KV wall + lane pool each (KV managers are cheap
+            // accounting objects and every rollout drains its wall, so
+            // building them per step costs nothing) — under the global
+            // load-modeled router. Tokens are identical to the single-
+            // engine path below: per-task RNG keys off (seed, flat id),
+            // never off placement.
+            let policy = rollout.policy();
+            let lanes = match self.cfg.engine {
+                EngineKind::Pipelined => {
+                    let w = self.cfg.rollout_workers.max(1);
+                    if self.cfg.prefill.is_async() { w + 1 } else { w }
+                }
+                _ => 1,
+            };
+            let mut replicas: Vec<Replica<EngineBackend>> = (0..self.cfg.replicas)
+                .map(|_| {
+                    let sched = Scheduler::new(&self.engine.manifest, self.cfg.mode.is_sparse())
+                        .with_admission(self.cfg.memory.admission)
+                        .with_headroom(self.cfg.memory.kv_admit_headroom_pages)
+                        .with_order(self.cfg.admission_order)
+                        .with_sharing(self.cfg.memory.prefix_sharing);
+                    let kv = KvMemoryManager::with_pages(
+                        self.cfg.memory.global_kv_tokens,
+                        self.cfg.memory.kv_page_tokens,
+                    );
+                    let backends = (0..lanes)
+                        .map(|_| EngineBackend::new(self.engine, &params, self.cfg.mode))
+                        .collect();
+                    Replica::new(sched, kv, backends)
+                })
+                .collect();
+            let (seqs, stats, report) = rollout_fleet(
+                &policy,
+                self.cfg.engine,
+                &mut replicas,
+                &tasks,
+                seed,
+                self.cfg.replica_steal,
+            )?;
+            self.last_fleet = Some(report);
+            return Ok((seqs, stats));
+        }
+        self.last_fleet = None;
+        let mut scheduler = Scheduler::new(&self.engine.manifest, self.cfg.mode.is_sparse())
+            .with_admission(self.cfg.memory.admission)
+            .with_headroom(self.cfg.memory.kv_admit_headroom_pages)
+            .with_order(self.cfg.admission_order)
+            .with_sharing(self.cfg.memory.prefix_sharing);
         match self.cfg.engine {
             EngineKind::Continuous => rollout.rollout_continuous_lit(
                 &params,
@@ -369,6 +437,8 @@ impl<'a> Trainer<'a> {
             },
             peak_live_slots: rstats.peak_live_slots,
             rollout_workers: rstats.workers.max(1),
+            replicas: cfg.replicas.max(1),
+            replica_steals: self.last_fleet.as_ref().map_or(0, |f| f.replica_steals),
             decode_busy_ticks: rstats.decode_busy_ticks,
             prefill_blocked_ticks: rstats.prefill_blocked_ticks,
             sched_stall_ticks: rstats.sched_stall_ticks,
@@ -413,6 +483,8 @@ impl<'a> Trainer<'a> {
         self.metrics.push("kv_fragmentation", frag);
         self.metrics.push("peak_live_slots", report.peak_live_slots as f64);
         self.metrics.push("rollout_workers", report.rollout_workers as f64);
+        self.metrics.push("replicas", report.replicas as f64);
+        self.metrics.push("replica_steals", report.replica_steals as f64);
         // modeled-time breakdown (all zero on the real backend; the
         // hermetic mock benches populate it — kept in the CSV so engine
         // comparisons line up column-for-column either way)

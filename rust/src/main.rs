@@ -41,6 +41,7 @@ fn usage() -> ! {
             [--engine static|continuous|pipelined] [--rollout-workers N]
             [--steal on|off] [--admission-order fifo|shortest-first]
             [--prefill sync|async] [--prefix-sharing off|group]
+            [--replicas N] [--replica-steal on|off]
             [--admission worst-case|paged] [--kv-admit-headroom-pages N]
             [--kv-page-tokens N] [--global-kv-tokens N]
   rollout:  --checkpoint ckpt --mode <...> [--n 4] [--temperature T]"
@@ -158,6 +159,8 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
         "admission-order",
         "prefill",
         "prefix-sharing",
+        "replicas",
+        "replica-steal",
         "admission",
         "kv-admit-headroom-pages",
         "kv-page-tokens",
@@ -174,6 +177,8 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
         steal: cfg.steal,
         admission_order: cfg.admission_order,
         prefill: cfg.prefill,
+        replicas: cfg.replicas,
+        replica_steal: cfg.replica_steal,
     };
     match args.opt("bench") {
         Some(name) => {

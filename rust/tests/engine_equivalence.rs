@@ -31,13 +31,21 @@
 //!    and a preemption-heavy multi-worker run on a tiny paged wall —
 //!    with and without stealing, in both prefill modes — neither
 //!    deadlocks nor leaks a page.
+//! 5. **Fleet equivalence** — the replica tier (`rollout_fleet`) is
+//!    token-identical to the single-engine paths over the {replicas 1,
+//!    2, 4} × {engine} × {replica-steal on/off} grid, each replica's
+//!    private pool conserves (drained wall, balanced admissions), zero
+//!    cross-replica steals happen when stealing is off or impossible,
+//!    and the fleet-level stats compose by parallel merge (makespan =
+//!    slowest replica, lanes sum).
 
 use sparse_rl::config::{
-    AdmissionOrder, AdmissionPolicy, PrefillMode, PrefixSharing, RolloutMode, SamplingConfig,
+    AdmissionOrder, AdmissionPolicy, EngineKind, PrefillMode, PrefixSharing, RolloutMode,
+    SamplingConfig,
 };
 use sparse_rl::coordinator::{
-    CostModel, GenSeq, KvMemoryManager, MockModelBackend, RolloutBackend, RolloutPolicy,
-    RolloutStats, Scheduler,
+    rollout_fleet, CostModel, GenSeq, KvMemoryManager, MockModelBackend, Replica, RolloutBackend,
+    RolloutPolicy, RolloutStats, Scheduler,
 };
 use sparse_rl::data::task::Task;
 use sparse_rl::runtime::Method;
@@ -872,6 +880,186 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
             }
         }
     }
+}
+
+#[test]
+fn prop_fleet_is_token_identical_and_conserves_every_replica_pool() {
+    // The replicas axis of the grid: for every engine shell, replica
+    // count, and replica-steal setting, the fleet must emit exactly the
+    // single-engine reference tokens (routing and stealing are pure
+    // scheduling), every replica's PRIVATE pool must balance its books,
+    // and the fleet-level stats must be the parallel composition of the
+    // per-replica stats.
+    propcheck::check(
+        "fleet-replica-equivalence",
+        PropConfig { cases: 32, seed: 0xE9_0004, max_size: 32 },
+        |rng, size| {
+            let sc = Scenario::gen(rng, size);
+            let policy = sc.policy();
+            let costs = CostModel::representative();
+
+            // single-engine reference tokens
+            let mut kv_c = KvMemoryManager::new(sc.kv_cap);
+            let (cont_seqs, _) = run_continuous(
+                &policy,
+                &mut sc.backend().with_costs(costs),
+                &sc.tasks,
+                sc.seed,
+                sc.reserve,
+                &mut kv_c,
+                AdmissionOrder::Fifo,
+            )?;
+
+            let flat: Vec<(usize, &Task)> = sc.tasks.iter().enumerate().collect();
+            for engine in [EngineKind::Static, EngineKind::Continuous, EngineKind::Pipelined] {
+                let lanes = if engine == EngineKind::Pipelined { 2 } else { 1 };
+                for replicas_n in [1usize, 2, 4] {
+                    for replica_steal in [false, true] {
+                        let grid = format!(
+                            "engine={} replicas={replicas_n} rsteal={replica_steal}",
+                            engine.label()
+                        );
+                        let mut reps: Vec<Replica<MockModelBackend>> = (0..replicas_n)
+                            .map(|_| {
+                                Replica::new(
+                                    mk_sched(sc.slots, sc.reserve),
+                                    KvMemoryManager::new(sc.kv_cap),
+                                    (0..lanes).map(|_| sc.backend().with_costs(costs)).collect(),
+                                )
+                            })
+                            .collect();
+                        let (seqs, stats, report) = rollout_fleet(
+                            &policy,
+                            engine,
+                            &mut reps,
+                            &flat,
+                            sc.seed,
+                            replica_steal,
+                        )
+                        .map_err(|e| format!("{grid}: {e}"))?;
+
+                        // token/logp/accounting identity, in task order
+                        if seqs.len() != cont_seqs.len() {
+                            return Err(format!("{grid}: result count mismatch"));
+                        }
+                        for (a, b) in cont_seqs.iter().zip(seqs.iter()) {
+                            seqs_equal(a, b).map_err(|e| format!("{grid}: {e}"))?;
+                        }
+
+                        // steal hygiene: zero when off or impossible
+                        if (!replica_steal || replicas_n == 1) && report.replica_steals != 0 {
+                            return Err(format!(
+                                "{grid}: {} cross-replica steals when impossible",
+                                report.replica_steals
+                            ));
+                        }
+                        // routing covers every task, in range
+                        if report.routed.len() != sc.tasks.len()
+                            || report.routed.iter().any(|&r| r >= replicas_n)
+                        {
+                            return Err(format!("{grid}: bad routing table"));
+                        }
+
+                        // per-replica pool conservation: each PRIVATE wall
+                        // drained with intact invariants, each scheduler's
+                        // admissions balanced
+                        let mut fin = 0usize;
+                        for (r, rep) in reps.iter().enumerate() {
+                            if rep.kv.reserved() != 0 {
+                                return Err(format!(
+                                    "{grid}: replica {r} leaked {} KV tokens",
+                                    rep.kv.reserved()
+                                ));
+                            }
+                            rep.kv.check_invariants().map_err(|e| e.to_string())?;
+                            if rep.sched.stats.live_seqs() != 0 {
+                                return Err(format!(
+                                    "{grid}: replica {r} live_seqs not drained"
+                                ));
+                            }
+                            fin += rep.sched.stats.seq_admissions;
+                        }
+                        // worst-case admission never preempts, so fleet-wide
+                        // admissions == tasks, each on exactly one replica
+                        if fin != sc.tasks.len() {
+                            return Err(format!(
+                                "{grid}: fleet admissions {fin} != tasks {}",
+                                sc.tasks.len()
+                            ));
+                        }
+
+                        // fleet stats = parallel composition of per-replica
+                        // stats: denominator fleet-wide, makespan = slowest
+                        // replica, lanes sum
+                        audit_slot_steps(&grid, &stats, sc.slots)?;
+                        if report.per_replica.len() != replicas_n {
+                            return Err(format!("{grid}: per-replica stats missing"));
+                        }
+                        let span = report
+                            .per_replica
+                            .iter()
+                            .map(|s| s.modeled_makespan_ticks)
+                            .max()
+                            .unwrap_or(0);
+                        if stats.modeled_makespan_ticks != span {
+                            return Err(format!(
+                                "{grid}: fleet makespan {} != replica max {span}",
+                                stats.modeled_makespan_ticks
+                            ));
+                        }
+                        let lanes_sum: usize =
+                            report.per_replica.iter().map(|s| s.workers).sum();
+                        if stats.workers != lanes_sum {
+                            return Err(format!(
+                                "{grid}: fleet lanes {} != summed {lanes_sum}",
+                                stats.workers
+                            ));
+                        }
+                        let steps: usize =
+                            report.per_replica.iter().map(|s| s.decode_steps).sum();
+                        if stats.decode_steps != steps {
+                            return Err(format!("{grid}: decode steps did not sum"));
+                        }
+
+                        // steal-off fleets are fully deterministic: a rerun
+                        // reproduces stats bit-for-bit (continuous only —
+                        // one rerun bounds the property's cost)
+                        if !replica_steal && engine == EngineKind::Continuous {
+                            let mut reps2: Vec<Replica<MockModelBackend>> = (0..replicas_n)
+                                .map(|_| {
+                                    Replica::new(
+                                        mk_sched(sc.slots, sc.reserve),
+                                        KvMemoryManager::new(sc.kv_cap),
+                                        (0..lanes)
+                                            .map(|_| sc.backend().with_costs(costs))
+                                            .collect(),
+                                    )
+                                })
+                                .collect();
+                            let (seqs2, stats2, _) = rollout_fleet(
+                                &policy,
+                                engine,
+                                &mut reps2,
+                                &flat,
+                                sc.seed,
+                                false,
+                            )
+                            .map_err(|e| e.to_string())?;
+                            for (a, b) in seqs.iter().zip(seqs2.iter()) {
+                                seqs_equal(a, b)?;
+                            }
+                            if stats != stats2 {
+                                return Err(format!(
+                                    "{grid}: steal-off fleet stats not reproducible"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -12,6 +12,11 @@ Rules:
   * Scenarios present in the baseline but no longer emitted are noted,
     not failed (scenarios evolve; the recorder refreshes the baseline on
     the next main push).
+  * Scenarios only in the FRESH file (a newly added bench part, e.g. a
+    new comparison landing in the same PR) are listed as new and pass —
+    comparison iterates baseline keys only, so growing the bench never
+    trips the guard; the recorder picks the new rows up on the next
+    main push.
   * An unpopulated baseline (the "pending" placeholder committed before
     the first record step ran) skips the guard entirely.
 
@@ -69,6 +74,13 @@ def main():
         else:
             delta = 100.0 * (got / base - 1.0) if base > 0 else 0.0
             print(f"bench guard: {name}: {got:.0f} vs {base:.0f} ({delta:+.1f}%) ok")
+
+    for path in sorted(set(fresh_rows) - set(base_rows)):
+        name = "/".join(path)
+        print(
+            f"bench guard: new scenario {name}: {fresh_rows[path]:.0f} ticks "
+            "(not in baseline yet; recorded on the next main push)"
+        )
 
     if failures:
         print(
