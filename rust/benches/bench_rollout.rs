@@ -30,12 +30,12 @@
 use std::collections::BTreeMap;
 
 use sparse_rl::config::{
-    AdmissionOrder, AdmissionPolicy, EngineKind, PrefillMode, PrefixSharing, RolloutMode,
-    SamplingConfig,
+    AdmissionOrder, AdmissionPolicy, EngineKind, FaultPolicy, PrefillMode, PrefixSharing,
+    RolloutMode, SamplingConfig,
 };
 use sparse_rl::coordinator::{
-    rollout_fleet, CostModel, GenSeq, KvMemoryManager, MockModelBackend, Replica, RolloutBackend,
-    RolloutPolicy, RolloutStats, Scheduler,
+    rollout_fleet, CostModel, FaultKind, FaultOp, FaultPlan, GenSeq, KvMemoryManager,
+    MockModelBackend, Replica, RolloutBackend, RolloutPolicy, RolloutStats, Scheduler,
 };
 use sparse_rl::data::task::Task;
 use sparse_rl::experiments;
@@ -1056,6 +1056,171 @@ fn fleet_comparison() -> Json {
     Json::Obj(out)
 }
 
+/// Fault-tolerance overhead (part 1h): the robustness-PR claim, on the
+/// virtual clock. Four passes over the same deterministic continuous
+/// workload:
+///
+/// * `baseline` — seed behavior (retries 0, abort), no faults;
+/// * `armed_fault_free` — `fault-retries = 3` + `fault-policy =
+///   quarantine` with NO faults injected: arming the knobs must be
+///   free — bit-identical tokens, decode steps, AND modeled makespan
+///   (the zero-overhead-when-healthy guarantee the config docs state);
+/// * `retry_burst_absorbed` — a scripted 3-deep decode error burst
+///   inside the budget: tokens stay identical, `retries` counts exactly
+///   the injected errors, and the makespan grows by exactly the
+///   virtual-clock backoff the retry loop charges;
+/// * `quarantine_one_task` — a prompt-keyed fault no budget can absorb:
+///   one task quarantined, every survivor token-identical, pool
+///   conserved — the recorded makespan is the price of a lost task.
+///
+/// Single-lane continuous on the virtual clock: every row is fully
+/// deterministic, so the bench guard can hold the trajectory to it.
+fn fault_tolerance_comparison() -> Json {
+    let (slots, prompt_len, max_seq) = (8usize, 24usize, 160usize);
+    let (n_tasks, seed) = (64usize, 7u64);
+    let costs = CostModel::representative();
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 64 };
+    let reserve = max_seq;
+    // slot-limited wall: isolate the fault accounting from admission effects
+    let kv_cap = reserve * slots * 4;
+    let mut rng = Rng::new(1);
+    let tasks: Vec<Task> = (0..n_tasks)
+        .map(|_| {
+            let ops = 1 + rng.below(2);
+            Task::gen(&mut rng, ops, prompt_len)
+        })
+        .collect();
+    // a refill task (index > slots): its slot prefill carries the prompt
+    // a prompt-keyed fault is pinned to
+    let doomed = 12usize;
+    assert!(
+        tasks
+            .iter()
+            .enumerate()
+            .all(|(i, t)| i == doomed || t.prompt_ids != tasks[doomed].prompt_ids),
+        "doomed task's prompt must be unique for a one-task quarantine"
+    );
+    let backend = |plan: Option<FaultPlan>| {
+        let mut b = MockModelBackend::dense(slots, prompt_len, max_seq, 32);
+        b.eos_pull = 0.12; // long-tailed response lengths
+        let b = b.with_costs(costs);
+        match plan {
+            Some(p) => b.with_faults(p),
+            None => b,
+        }
+    };
+    let run = |policy: &RolloutPolicy, plan: Option<FaultPlan>| {
+        let mut kv = KvMemoryManager::new(kv_cap);
+        let mut sched = mk_sched(slots, reserve);
+        let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+        let (seqs, st) = policy
+            .rollout_continuous(&mut backend(plan), &flat, seed, &mut sched, &mut kv, 0)
+            .expect("rollout");
+        assert_eq!(kv.reserved(), 0, "fault bench run leaked KV");
+        kv.check_invariants().expect("wall invariants");
+        (seqs, st)
+    };
+
+    println!(
+        "== fault-tolerance overhead: retries + quarantine (continuous, dense, R={slots}, \
+         {n_tasks} tasks, retries=3) =="
+    );
+    println!(
+        "{:<22} {:>12} {:>10} {:>8} {:>7} {:>9}",
+        "scenario", "decode-steps", "makespan", "retries", "failed", "overhead"
+    );
+
+    let baseline = RolloutPolicy::new(RolloutMode::Dense, sampling);
+    let armed = baseline.with_fault_retries(3).with_fault_policy(FaultPolicy::Quarantine);
+    let burst = FaultPlan::new()
+        .scripted(FaultOp::Decode, 40, FaultKind::Err)
+        .scripted(FaultOp::Decode, 41, FaultKind::Err)
+        .scripted(FaultOp::Decode, 42, FaultKind::Err);
+    let poison =
+        FaultPlan::new().scripted_prompt(tasks[doomed].prompt_ids.clone(), FaultKind::Err);
+    let scenarios: [(&str, &RolloutPolicy, Option<FaultPlan>); 4] = [
+        ("baseline", &baseline, None),
+        ("armed_fault_free", &armed, None),
+        ("retry_burst_absorbed", &armed, Some(burst)),
+        ("quarantine_one_task", &armed, Some(poison)),
+    ];
+
+    let mut out = BTreeMap::new();
+    let mut base: Option<(Vec<GenSeq>, u64)> = None;
+    for (name, policy, plan) in scenarios {
+        let (seqs, st) = run(policy, plan);
+        if let Some((base_seqs, _)) = &base {
+            // tokens are fault-knob- and retry-invariant; a quarantined
+            // task is the one allowed divergence (it has no tokens)
+            let agree = base_seqs
+                .iter()
+                .zip(seqs.iter())
+                .all(|(a, b)| {
+                    b.failed
+                        || (a.response_ids == b.response_ids && a.sampler_logp == b.sampler_logp)
+                });
+            assert!(agree, "{name}: fault handling changed surviving tokens (BUG)");
+        }
+        let overhead = match &base {
+            Some((_, base_makespan)) => {
+                st.modeled_makespan_ticks as f64 / (*base_makespan).max(1) as f64 - 1.0
+            }
+            None => 0.0,
+        };
+        println!(
+            "{:<22} {:>12} {:>10} {:>8} {:>7} {:>8.2}%",
+            name,
+            st.decode_steps,
+            st.modeled_makespan_ticks,
+            st.retries,
+            st.failed_tasks,
+            100.0 * overhead,
+        );
+        match name {
+            "armed_fault_free" => {
+                let (_, base_makespan) = base.as_ref().unwrap();
+                assert_eq!(
+                    st.modeled_makespan_ticks, *base_makespan,
+                    "arming fault knobs must be free on a healthy run"
+                );
+                assert_eq!(st.retries, 0);
+                assert_eq!(st.failed_tasks, 0);
+            }
+            "retry_burst_absorbed" => {
+                let (_, base_makespan) = base.as_ref().unwrap();
+                assert_eq!(st.retries, 3, "one retry per injected error");
+                assert_eq!(st.failed_tasks, 0, "the burst is inside the budget");
+                assert!(
+                    st.modeled_makespan_ticks > *base_makespan,
+                    "retry backoff must show up on the virtual clock"
+                );
+            }
+            "quarantine_one_task" => {
+                assert_eq!(st.failed_tasks, 1, "exactly the poisoned task fails");
+                assert!(seqs[doomed].failed, "the poisoned task must carry the flag");
+            }
+            _ => {}
+        }
+        let mut row = BTreeMap::new();
+        row.insert("decode_steps".into(), Json::Num(st.decode_steps as f64));
+        row.insert("makespan_ticks".into(), Json::Num(st.modeled_makespan_ticks as f64));
+        row.insert("retries".into(), Json::Num(st.retries as f64));
+        row.insert("failed_tasks".into(), Json::Num(st.failed_tasks as f64));
+        // single-lane continuous, scripted plan: fully deterministic
+        row.insert("deterministic".into(), Json::Bool(true));
+        out.insert(name.to_string(), Json::Obj(row));
+        if base.is_none() {
+            base = Some((seqs, st.modeled_makespan_ticks));
+        }
+    }
+
+    println!("  -> healthy-run overhead of arming retries+quarantine: 0 ticks (bit-exact)\n");
+    out.insert("tasks".into(), Json::Num(n_tasks as f64));
+    out.insert("fault_retries".into(), Json::Num(3.0));
+    out.insert("injected_errors".into(), Json::Num(3.0));
+    Json::Obj(out)
+}
+
 fn main() {
     let args = CliArgs::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
 
@@ -1067,7 +1232,8 @@ fn main() {
     // fifo vs shortest-first admission order on the skewed-length
     // head-of-line workload; Part 1e: sync vs async slot prefill; Part
     // 1f: prefix sharing off vs group on a GRPO-grouped workload; Part
-    // 1g: replica fleet 1/2/4 on the straggler-skewed workload. All
+    // 1g: replica fleet 1/2/4 on the straggler-skewed workload; Part
+    // 1h: fault-tolerance overhead (retry backoff + quarantine). All
     // feed BENCH_rollout.json so CI records the perf trajectory (and the
     // bench guard compares deterministic makespans against it).
     let paged = paged_comparison();
@@ -1076,6 +1242,7 @@ fn main() {
     let prefill = prefill_mode_comparison();
     let sharing = prefix_sharing_comparison();
     let fleet = fleet_comparison();
+    let faults = fault_tolerance_comparison();
     {
         let mut doc = BTreeMap::new();
         doc.insert("bench".to_string(), Json::Str("rollout".into()));
@@ -1085,6 +1252,7 @@ fn main() {
         doc.insert("prefill_mode".to_string(), prefill);
         doc.insert("prefix_sharing".to_string(), sharing);
         doc.insert("fleet".to_string(), fleet);
+        doc.insert("fault_tolerance".to_string(), faults);
         let path = "BENCH_rollout.json";
         match std::fs::write(path, sparse_rl::util::json::to_string(&Json::Obj(doc))) {
             Ok(()) => println!("wrote {path}"),

@@ -339,6 +339,46 @@ impl PrefixSharing {
     }
 }
 
+/// What the engines do with a task whose backend call has exhausted its
+/// retry budget (`fault-retries`).
+///
+/// `Abort` (default) is the seed behavior bit-exactly: the error
+/// propagates and kills the whole rollout batch. `Quarantine` releases
+/// the failed task instead — KV pages, decode slot, and scheduler
+/// admission all returned, so pool conservation holds — records it as
+/// failed (`GenSeq.failed`, counted in `RolloutStats::failed_tasks`),
+/// and lets the batch finish; the trainer then drops the failed task's
+/// whole GRPO group and trains on the survivors (partial-batch
+/// delivery). With no faults injected the knob is unobservable: both
+/// policies run the identical fault-free path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultPolicy {
+    #[default]
+    Abort,
+    Quarantine,
+}
+
+impl FaultPolicy {
+    pub fn parse(s: &str) -> Result<FaultPolicy> {
+        Ok(match s {
+            "abort" => FaultPolicy::Abort,
+            "quarantine" => FaultPolicy::Quarantine,
+            other => bail!("bad fault policy {other:?} (abort | quarantine)"),
+        })
+    }
+
+    pub fn is_quarantine(&self) -> bool {
+        matches!(self, FaultPolicy::Quarantine)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultPolicy::Abort => "abort",
+            FaultPolicy::Quarantine => "quarantine",
+        }
+    }
+}
+
 /// The memory wall: a global KV token budget shared by concurrent
 /// sequences (the simulated HBM capacity the scheduler packs against).
 #[derive(Debug, Clone, Copy)]
@@ -413,6 +453,15 @@ pub struct ExperimentConfig {
     /// thread overlaps them with decode). Scheduling-only: tokens are
     /// identical either way.
     pub prefill: PrefillMode,
+    /// Bounded retry budget for failed backend calls: a call that errors
+    /// is retried up to this many times (with virtual-clock backoff
+    /// charged to the calling lane) before the fault policy applies.
+    /// Default 0 = no retries, the seed behavior.
+    pub fault_retries: usize,
+    /// What happens when a backend call exhausts its retries: `abort`
+    /// (seed behavior — the error kills the batch) or `quarantine` (the
+    /// failed task is released and recorded; the batch survives).
+    pub fault_policy: FaultPolicy,
     pub sampling: SamplingConfig,
     pub train: TrainConfig,
     pub memory: MemoryConfig,
@@ -423,6 +472,53 @@ pub struct ExperimentConfig {
 }
 
 impl ExperimentConfig {
+    /// Every key `apply` recognizes, in the order the match lists them.
+    /// The CLI uses this to reject typo'd `--flag`s loudly instead of
+    /// dropping them; a unit test pins the list against `apply` itself.
+    pub const KNOWN_KEYS: &'static [&'static str] = &[
+        "artifacts",
+        "seed",
+        "mode",
+        "engine",
+        "rollout-workers",
+        "steal",
+        "admission-order",
+        "replicas",
+        "replica-steal",
+        "prefill",
+        "fault-retries",
+        "fault-policy",
+        "temperature",
+        "top-p",
+        "max-response",
+        "steps",
+        "prompts-per-step",
+        "group-size",
+        "lr",
+        "clip-eps",
+        "kl-coef",
+        "max-grad-norm",
+        "rejection-eps",
+        "rejection",
+        "reweight",
+        "correction-mode",
+        "updates-per-step",
+        "ops-lo",
+        "ops-hi",
+        "global-kv-tokens",
+        "kv-page-tokens",
+        "admission",
+        "prefix-sharing",
+        "kv-admit-headroom-pages",
+        "init-checkpoint",
+        "out-dir",
+    ];
+
+    /// Is `key` one `apply` recognizes (whatever its value)?
+    pub fn is_known_key(key: &str) -> bool {
+        Self::KNOWN_KEYS.contains(&key)
+    }
+
     pub fn new(artifact_dir: &Path) -> Self {
         ExperimentConfig {
             artifact_dir: artifact_dir.to_path_buf(),
@@ -435,6 +531,8 @@ impl ExperimentConfig {
             replicas: 1,
             replica_steal: true,
             prefill: PrefillMode::default(),
+            fault_retries: 0,
+            fault_policy: FaultPolicy::default(),
             sampling: SamplingConfig::default(),
             train: TrainConfig::default(),
             memory: MemoryConfig::default(),
@@ -480,6 +578,10 @@ impl ExperimentConfig {
                 }
             }
             "prefill" => self.prefill = PrefillMode::parse(value)?,
+            "fault-retries" => {
+                self.fault_retries = value.parse().context("fault-retries")?
+            }
+            "fault-policy" => self.fault_policy = FaultPolicy::parse(value)?,
             "temperature" => self.sampling.temperature = value.parse().context("temperature")?,
             "top-p" => self.sampling.top_p = value.parse().context("top-p")?,
             "max-response" => self.sampling.max_response = value.parse().context("max-response")?,
@@ -719,6 +821,45 @@ mod tests {
         assert_eq!(PrefixSharing::parse("on").unwrap(), PrefixSharing::Group);
         assert_eq!(PrefixSharing::Group.label(), "group");
         assert_eq!(PrefixSharing::Off.label(), "off");
+    }
+
+    #[test]
+    fn fault_retries_and_fault_policy_knobs() {
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        // defaults: no retries, abort — the seed failure behavior exactly
+        assert_eq!(c.fault_retries, 0);
+        assert_eq!(c.fault_policy, FaultPolicy::Abort);
+        assert!(!c.fault_policy.is_quarantine());
+        c.apply("fault-retries", "3").unwrap();
+        assert_eq!(c.fault_retries, 3);
+        assert!(c.apply("fault-retries", "many").is_err());
+        c.apply("fault-policy", "quarantine").unwrap();
+        assert_eq!(c.fault_policy, FaultPolicy::Quarantine);
+        assert!(c.fault_policy.is_quarantine());
+        c.apply("fault-policy", "abort").unwrap();
+        assert_eq!(c.fault_policy, FaultPolicy::Abort);
+        assert!(c.apply("fault-policy", "retry-forever").is_err());
+        assert_eq!(FaultPolicy::Quarantine.label(), "quarantine");
+        assert_eq!(FaultPolicy::Abort.label(), "abort");
+    }
+
+    #[test]
+    fn known_keys_list_matches_apply() {
+        // Every advertised key must be recognized by `apply` — i.e. never
+        // die with its "unknown config key" arm (bad-VALUE errors are
+        // fine). This pins KNOWN_KEYS against the match so the CLI's
+        // typo rejection can trust the list.
+        for key in ExperimentConfig::KNOWN_KEYS {
+            let mut c = ExperimentConfig::new(Path::new("a"));
+            if let Err(e) = c.apply(key, "zzz-not-a-value") {
+                assert!(
+                    !e.to_string().contains("unknown config key"),
+                    "KNOWN_KEYS lists {key:?} but apply does not recognize it"
+                );
+            }
+        }
+        assert!(ExperimentConfig::is_known_key("fault-policy"));
+        assert!(!ExperimentConfig::is_known_key("replica")); // the typo
     }
 
     #[test]

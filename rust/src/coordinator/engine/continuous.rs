@@ -68,38 +68,68 @@ impl RolloutPolicy {
             sched.order,
             admission_costs(sched, tasks, self.sampling.max_response),
         );
-        let mut core = DecodeCore::new(geom, self.mode.is_sparse());
+        let mut core =
+            DecodeCore::new(geom, self.mode.is_sparse()).with_retries(self.fault_retries);
         // prefill-once-attach-G: under `prefix-sharing = group`, refills of
         // an already-prepared prompt attach the cached payload instead of
         // re-running the model (token-identical by the prepare/apply
         // contract; only the modeled latency differs)
-        let mut pcache: PrefillCache<B> = PrefillCache::new(self.sharing.is_group());
+        let mut pcache: PrefillCache<B> =
+            PrefillCache::new(self.sharing.is_group()).with_retries(self.fault_retries);
 
-        // ---- initial wave: one batched prefill over the admissible head
-        let mut wave = PrefillWave::new(&geom);
-        while wave.count() < geom.slots {
-            let Some(pos) = admit_next(sched, kv, &mut queue, tasks, seq_id_base)
-            else {
-                break;
-            };
-            let (idx, task) = tasks[pos];
-            wave.push(&mut core, pos, idx, &task.prompt_ids, seed);
+        // ---- initial wave: one batched prefill over the admissible head.
+        // A wave prefill that exhausts its retries under `fault-policy =
+        // quarantine` fails the whole staged wave (every member shared the
+        // failed call) and the loop stages the next admissible wave; with
+        // the default abort policy the error propagates unchanged.
+        let mut logp: Vec<f32> = Vec::new();
+        loop {
+            let mut wave = PrefillWave::new(&geom);
+            while wave.count() < geom.slots {
+                let Some(pos) = admit_next(sched, kv, &mut queue, tasks, seq_id_base)
+                else {
+                    break;
+                };
+                let (idx, task) = tasks[pos];
+                wave.push(&mut core, pos, idx, &task.prompt_ids, seed);
+            }
+            if wave.count() == 0 {
+                bail!(
+                    "continuous rollout deadlock: cannot admit any sequence \
+                     (reserve {} > free KV {} of {})",
+                    sched.reserve_per_seq,
+                    kv.available(),
+                    kv.capacity()
+                );
+            }
+            match wave.prefill(&core, b, &mut stats) {
+                Ok(l) => {
+                    logp = l;
+                    // serial lane: the decode batch blocks on its own prefill
+                    stats.prefill_blocked_ticks += geom.costs.prefill_ticks;
+                    snap_residency(kv, &mut stats);
+                    break;
+                }
+                Err(e) if self.fault_policy.is_quarantine() => {
+                    let _ = e;
+                    for live in core.quarantine_live(sched, kv, seq_id_base, &mut stats)? {
+                        results[live.pos] = Some(live.gen);
+                    }
+                    if queue.is_empty() {
+                        break; // every task quarantined: nothing to decode
+                    }
+                }
+                Err(e) => return Err(e),
+            }
         }
-        if wave.count() == 0 {
-            bail!(
-                "continuous rollout deadlock: cannot admit any sequence \
-                 (reserve {} > free KV {} of {})",
-                sched.reserve_per_seq,
-                kv.available(),
-                kv.capacity()
-            );
-        }
-        let mut logp = wave.prefill(&core, b, &mut stats)?;
-        // serial lane: the decode batch blocks on its own prefill
-        stats.prefill_blocked_ticks += geom.costs.prefill_ticks;
-        snap_residency(kv, &mut stats);
 
         loop {
+            // fully drained (or the whole initial wave quarantined):
+            // nothing live and nothing pending — `logp` may be empty on
+            // the quarantined path, so check before slicing it
+            if core.occupied() == 0 && queue.is_empty() {
+                break;
+            }
             // ---- sample one token per occupied slot; retire finishers ---
             for slot in 0..geom.slots {
                 let dist = &logp[slot * geom.vocab..(slot + 1) * geom.vocab];
@@ -124,7 +154,21 @@ impl RolloutPolicy {
                 {
                     let (idx, task) = tasks[pos];
                     let (row, attached) =
-                        pcache.slot_prefill(b, slot, &task.prompt_ids, &mut stats)?;
+                        match pcache.slot_prefill(b, slot, &task.prompt_ids, &mut stats) {
+                            Ok(ra) => ra,
+                            Err(e) if self.fault_policy.is_quarantine() => {
+                                // per-task fault: only THIS admission is
+                                // poisoned — release it, record the failure,
+                                // and try the next pending task for the slot
+                                let _ = e;
+                                sched.quarantine_seq(kv, seq_id_base + pos as u64)?;
+                                stats.failed_tasks += 1;
+                                results[pos] =
+                                    Some(GenSeq::failed_seq(idx, task.prompt_ids.clone()));
+                                continue;
+                            }
+                            Err(e) => return Err(e),
+                        };
                     stats.refills += 1;
                     // serial engine: the whole decode batch stalls for this
                     // slot prefill — the bubble the pipelined lane removes.
@@ -167,7 +211,18 @@ impl RolloutPolicy {
             // admission (no-op worst-case). A sequence still attached to a
             // shared prefix forks copy-on-write instead — which can stall
             // at the wall and preempt, exactly like growth ----------------
-            let compressed = core.compress_step(b, &mut stats)?;
+            let compressed = match core.compress_step(b, &mut stats) {
+                Ok(c) => c,
+                Err(e) if self.fault_policy.is_quarantine() => {
+                    // batch fault: every live member shared the failed call
+                    let _ = e;
+                    for live in core.quarantine_live(sched, kv, seq_id_base, &mut stats)? {
+                        results[live.pos] = Some(live.gen);
+                    }
+                    continue; // refill from the queue on the next pass
+                }
+                Err(e) => return Err(e),
+            };
             for (_slot, v) in
                 core.compress_finish(sched, kv, seq_id_base, &compressed, &mut stats)?
             {
@@ -183,7 +238,17 @@ impl RolloutPolicy {
             // ---- one decode step over the mixed batch -------------------
             // (the deadlock guard above guarantees growth leaves at least
             // one survivor on a single lane)
-            logp = core.decode_step(b, &mut stats)?;
+            logp = match core.decode_step(b, &mut stats) {
+                Ok(l) => l,
+                Err(e) if self.fault_policy.is_quarantine() => {
+                    let _ = e;
+                    for live in core.quarantine_live(sched, kv, seq_id_base, &mut stats)? {
+                        results[live.pos] = Some(live.gen);
+                    }
+                    continue; // stale logits sample over empty slots: no-op
+                }
+                Err(e) => return Err(e),
+            };
         }
 
         // serial engine: makespan is the sum of everything the lane did

@@ -42,6 +42,12 @@ pub struct GenSeq {
     /// True iff the model emitted EOS before the length cap.
     pub finished: bool,
     pub accounting: KvAccounting,
+    /// True iff the task was quarantined after a backend call exhausted
+    /// its retry budget (`fault-policy = quarantine`). The response holds
+    /// whatever was generated before the fault — diagnostic only, never
+    /// trainable: the trainer drops the whole GRPO group of any failed
+    /// member. Always false on the fault-free path.
+    pub failed: bool,
 }
 
 impl GenSeq {
@@ -53,7 +59,18 @@ impl GenSeq {
             sampler_logp: vec![],
             finished: false,
             accounting: KvAccounting::new(),
+            failed: false,
         }
+    }
+
+    /// A quarantined task that never produced a token (the fault hit its
+    /// prefill): an empty, unfinished, `failed` rollout. Quarantines of
+    /// already-decoding tasks instead mark the live `GenSeq` so the
+    /// partial response survives for diagnostics.
+    pub(crate) fn failed_seq(task_idx: usize, prompt_ids: Vec<i32>) -> GenSeq {
+        let mut g = GenSeq::new(task_idx, prompt_ids);
+        g.failed = true;
+        g
     }
 
     /// Full sequence ids: prompt + response.
@@ -61,6 +78,64 @@ impl GenSeq {
         let mut v = self.prompt_ids.clone();
         v.extend_from_slice(&self.response_ids);
         v
+    }
+}
+
+/// Best-effort human-readable panic payload: `panic!("...")` carries a
+/// `String` (or `&'static str` for literal-only messages); anything else
+/// is opaque. Used wherever a joined thread's panic is folded into an
+/// error so injected-fault messages survive into the surfaced `Err`.
+pub(crate) fn panic_msg(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "opaque panic payload"
+    }
+}
+
+/// Which virtual-clock bucket a retried backend call's backoff is charged
+/// to (the lane doing the retrying is busy for that time either way).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum TickBucket {
+    Decode,
+    Prefill,
+}
+
+/// Bounded retry around one backend call. Attempt k's failure charges a
+/// linear backoff of `op_ticks * k` into `bucket` (the failed call plus
+/// an increasing settle wait) and counts one `stats.retries`; after
+/// `retries` failed re-attempts the last error surfaces to the caller,
+/// which applies the fault policy (abort or quarantine). With
+/// `retries = 0` this is exactly the bare call — the fault-free path adds
+/// zero work and zero ticks, keeping default runs bit-exact with the
+/// seed. Backend calls are fault-checked BEFORE any state mutation, so a
+/// failed attempt has no side effects and the re-attempt is bit-identical
+/// to a first try.
+pub(crate) fn with_retries<T>(
+    retries: usize,
+    op_ticks: u64,
+    bucket: TickBucket,
+    stats: &mut RolloutStats,
+    mut call: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let mut attempt = 0usize;
+    loop {
+        match call() {
+            Ok(v) => return Ok(v),
+            Err(e) if attempt < retries => {
+                attempt += 1;
+                stats.retries += 1;
+                let backoff = op_ticks.saturating_mul(attempt as u64);
+                match bucket {
+                    TickBucket::Decode => stats.decode_busy_ticks += backoff,
+                    TickBucket::Prefill => stats.prefill_blocked_ticks += backoff,
+                }
+                let _ = e;
+            }
+            Err(e) => return Err(e),
+        }
     }
 }
 
@@ -261,12 +336,20 @@ pub(crate) fn admit_next(
 /// rollout and are bounded by the number of distinct prompts.
 pub(crate) struct PrefillCache<B: RolloutBackend> {
     enabled: bool,
+    retries: usize,
     prepared: BTreeMap<Vec<i32>, B::Prepared>,
 }
 
 impl<B: RolloutBackend> PrefillCache<B> {
     pub fn new(enabled: bool) -> PrefillCache<B> {
-        PrefillCache { enabled, prepared: BTreeMap::new() }
+        PrefillCache { enabled, retries: 0, prepared: BTreeMap::new() }
+    }
+
+    /// Bounded-retry budget for every refill backend call (see
+    /// [`with_retries`]); 0 (the default) is the bare-call fault path.
+    pub fn with_retries(mut self, retries: usize) -> Self {
+        self.retries = retries;
+        self
     }
 
     /// Prefill `slot` with `prompt`, through the share cache when
@@ -280,19 +363,28 @@ impl<B: RolloutBackend> PrefillCache<B> {
         prompt: &[i32],
         stats: &mut RolloutStats,
     ) -> Result<(Vec<f32>, bool)> {
+        let (retries, ticks) = (self.retries, b.cost_model().slot_prefill_ticks);
         if !self.enabled {
-            let row = b.prefill_slot(slot, prompt)?;
+            let row = with_retries(retries, ticks, TickBucket::Prefill, stats, || {
+                b.prefill_slot(slot, prompt)
+            })?;
             stats.slot_prefills += 1;
             return Ok((row, false));
         }
         if let Some(p) = self.prepared.get(prompt) {
-            let row = b.apply_prefill(slot, p.clone())?;
+            let row = with_retries(retries, ticks, TickBucket::Prefill, stats, || {
+                b.apply_prefill(slot, p.clone())
+            })?;
             stats.shared_prefill_attaches += 1;
             return Ok((row, true));
         }
-        let prep = b.prepare_prefill(prompt)?;
+        let prep = with_retries(retries, ticks, TickBucket::Prefill, stats, || {
+            b.prepare_prefill(prompt)
+        })?;
         self.prepared.insert(prompt.to_vec(), prep.clone());
-        let row = b.apply_prefill(slot, prep)?;
+        let row = with_retries(retries, ticks, TickBucket::Prefill, stats, || {
+            b.apply_prefill(slot, prep.clone())
+        })?;
         stats.slot_prefills += 1;
         Ok((row, false))
     }
@@ -311,6 +403,9 @@ pub(crate) fn snap_residency(kv: &KvMemoryManager, stats: &mut RolloutStats) {
 pub(crate) struct DecodeCore {
     pub geom: Geometry,
     sparse: bool,
+    /// Bounded-retry budget for decode/compress/wave-prefill backend calls
+    /// (see [`with_retries`]); 0 keeps the bare-call fault path.
+    pub retries: usize,
     pub slots: Vec<Option<LiveSeq>>,
     /// Occupied cache length per slot (the next write position).
     pub lens: Vec<i32>,
@@ -327,12 +422,18 @@ impl DecodeCore {
         DecodeCore {
             geom,
             sparse,
+            retries: 0,
             slots: (0..r).map(|_| None).collect(),
             lens: vec![1i32; r],
             abs_pos: vec![1i32; r],
             tokens: vec![PAD; r],
             do_mask: vec![0.0f32; r],
         }
+    }
+
+    pub fn with_retries(mut self, retries: usize) -> Self {
+        self.retries = retries;
+        self
     }
 
     pub fn occupied(&self) -> usize {
@@ -440,7 +541,11 @@ impl DecodeCore {
         if !any {
             return Ok(vec![]);
         }
-        b.compress(&self.do_mask)?;
+        // `do_mask` is recomputed from `lens` on entry, so a retried (or
+        // quarantine-released) compress re-derives identical inputs.
+        let (do_mask, retries, ticks) =
+            (&self.do_mask, self.retries, self.geom.costs.compress_ticks);
+        with_retries(retries, ticks, TickBucket::Decode, stats, || b.compress(do_mask))?;
         stats.decode_busy_ticks += self.geom.costs.compress_ticks;
         let mut compressed = Vec::new();
         for slot in 0..self.geom.slots {
@@ -577,7 +682,13 @@ impl DecodeCore {
         let occupied = self.occupied();
         debug_assert!(occupied > 0, "decode_step over an empty batch");
         stats.peak_live_slots = stats.peak_live_slots.max(occupied);
-        let logp = b.decode(&self.lens, &self.abs_pos, &self.tokens)?;
+        // control vectors only advance AFTER a successful call, so a
+        // retried decode re-runs with bit-identical inputs
+        let (lens, abs_pos, tokens) = (&self.lens, &self.abs_pos, &self.tokens);
+        let (retries, ticks) = (self.retries, self.geom.costs.decode_ticks);
+        let logp = with_retries(retries, ticks, TickBucket::Decode, stats, || {
+            b.decode(lens, abs_pos, tokens)
+        })?;
         stats.decode_steps += 1;
         stats.decode_busy_ticks += self.geom.costs.decode_ticks;
         stats.occupied_slot_steps += occupied;
@@ -589,6 +700,34 @@ impl DecodeCore {
             }
         }
         Ok(logp)
+    }
+
+    /// Quarantine every live sequence of this core after a BATCH backend
+    /// call (decode / compress / wave prefill) exhausted its retry budget:
+    /// the whole batch shared the failed call, so no member's next token
+    /// is trustworthy. Each sequence's KV reservation is released through
+    /// the scheduler's quarantine ledger (conservation:
+    /// `admissions == finishes + preemptions + quarantined` still holds),
+    /// its slot vacated and PADed, and its partial `GenSeq` returned
+    /// marked `failed` for the engine to record in place of a result.
+    pub fn quarantine_live(
+        &mut self,
+        sched: &mut Scheduler,
+        kv: &mut KvMemoryManager,
+        seq_id_base: u64,
+        stats: &mut RolloutStats,
+    ) -> Result<Vec<LiveSeq>> {
+        let mut out = Vec::new();
+        for slot in 0..self.geom.slots {
+            let Some(mut live) = self.slots[slot].take() else { continue };
+            sched.quarantine_seq(kv, seq_id_base + live.pos as u64)?;
+            self.tokens[slot] = PAD;
+            live.gen.failed = true;
+            stats.failed_tasks += 1;
+            out.push(live);
+        }
+        snap_residency(kv, stats);
+        Ok(out)
     }
 }
 
@@ -638,7 +777,11 @@ impl PrefillWave {
         for slot in self.w..core.geom.slots {
             self.ids[slot * p_len] = BOS;
         }
-        let logp = b.prefill(&self.ids, &self.plens)?;
+        let (ids, plens) = (&self.ids, &self.plens);
+        let (retries, ticks) = (core.retries, core.geom.costs.prefill_ticks);
+        let logp = with_retries(retries, ticks, TickBucket::Prefill, stats, || {
+            b.prefill(ids, plens)
+        })?;
         stats.prefills += 1;
         Ok(logp)
     }
@@ -656,6 +799,7 @@ pub(crate) fn prefill_single_row<B: RolloutBackend>(
     b: &mut B,
     slot: usize,
     prompt: &[i32],
+    retries: usize,
     stats: &mut RolloutStats,
 ) -> Result<Vec<f32>> {
     let p_len = geom.prompt_len;
@@ -668,7 +812,10 @@ pub(crate) fn prefill_single_row<B: RolloutBackend>(
             chunk[0] = BOS;
         }
     }
-    let all = b.prefill(&ids, &plens)?;
+    let (ids_r, plens_r) = (&ids, &plens);
+    let all = with_retries(retries, geom.costs.prefill_ticks, TickBucket::Prefill, stats, || {
+        b.prefill(ids_r, plens_r)
+    })?;
     stats.prefills += 1;
     Ok(all[slot * geom.vocab..(slot + 1) * geom.vocab].to_vec())
 }

@@ -47,7 +47,7 @@ pub use self::stats::RolloutStats;
 
 use anyhow::Result;
 
-use crate::config::{PrefillMode, PrefixSharing, RolloutMode, SamplingConfig};
+use crate::config::{FaultPolicy, PrefillMode, PrefixSharing, RolloutMode, SamplingConfig};
 use crate::data::task::Task;
 use crate::runtime::{ModelEngine, ParamsLit, Variant};
 
@@ -84,6 +84,19 @@ pub struct RolloutPolicy {
     /// prompt pages once via the refcounted pool. Scheduling/memory-only —
     /// tokens are sharing-invariant.
     pub sharing: PrefixSharing,
+    /// Bounded retry budget for failed backend calls (`fault-retries`
+    /// config knob, default 0 = seed behavior: first error is final).
+    /// Retries re-execute the identical call — backends fail before any
+    /// side effect — so tokens are retry-invariant; each retried attempt
+    /// charges virtual-clock backoff to the calling lane and counts in
+    /// `RolloutStats::retries`.
+    pub fault_retries: usize,
+    /// What exhausted retries do (`fault-policy` config knob, default
+    /// abort = seed behavior): abort kills the batch with the error;
+    /// quarantine releases the failed task (slot, KV pages, scheduler
+    /// admission — conservation holds), marks its `GenSeq.failed`, and
+    /// finishes the batch.
+    pub fault_policy: FaultPolicy,
 }
 
 impl RolloutPolicy {
@@ -94,6 +107,8 @@ impl RolloutPolicy {
             steal: true,
             prefill: PrefillMode::Sync,
             sharing: PrefixSharing::Off,
+            fault_retries: 0,
+            fault_policy: FaultPolicy::Abort,
         }
     }
 
@@ -115,6 +130,19 @@ impl RolloutPolicy {
         self.sharing = sharing;
         self
     }
+
+    /// Set the bounded retry budget (builder style; see `fault_retries`).
+    pub fn with_fault_retries(mut self, retries: usize) -> Self {
+        self.fault_retries = retries;
+        self
+    }
+
+    /// Select the exhausted-retries policy (builder style; see
+    /// `fault_policy`).
+    pub fn with_fault_policy(mut self, policy: FaultPolicy) -> Self {
+        self.fault_policy = policy;
+        self
+    }
 }
 
 /// The artifact-bound rollout engine for one model + mode.
@@ -128,6 +156,10 @@ pub struct RolloutEngine<'a> {
     pub prefill: PrefillMode,
     /// Prompt-prefix sharing (see `RolloutPolicy::sharing`).
     pub sharing: PrefixSharing,
+    /// Bounded retry budget (see `RolloutPolicy::fault_retries`).
+    pub fault_retries: usize,
+    /// Exhausted-retries policy (see `RolloutPolicy::fault_policy`).
+    pub fault_policy: FaultPolicy,
 }
 
 impl<'a> RolloutEngine<'a> {
@@ -139,6 +171,8 @@ impl<'a> RolloutEngine<'a> {
             steal: true,
             prefill: PrefillMode::Sync,
             sharing: PrefixSharing::Off,
+            fault_retries: 0,
+            fault_policy: FaultPolicy::Abort,
         }
     }
 
@@ -160,11 +194,25 @@ impl<'a> RolloutEngine<'a> {
         self
     }
 
+    /// Set the bounded retry budget (builder style).
+    pub fn with_fault_retries(mut self, retries: usize) -> Self {
+        self.fault_retries = retries;
+        self
+    }
+
+    /// Select the exhausted-retries policy (builder style).
+    pub fn with_fault_policy(mut self, policy: FaultPolicy) -> Self {
+        self.fault_policy = policy;
+        self
+    }
+
     pub fn policy(&self) -> RolloutPolicy {
         RolloutPolicy::new(self.mode, self.sampling)
             .with_steal(self.steal)
             .with_prefill(self.prefill)
             .with_sharing(self.sharing)
+            .with_fault_retries(self.fault_retries)
+            .with_fault_policy(self.fault_policy)
     }
 
     pub fn variant(&self) -> Variant {

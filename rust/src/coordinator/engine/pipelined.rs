@@ -36,7 +36,7 @@
 //! async makespan. Tokens are identical in both modes (per-task RNG);
 //! only the timing model and the threading differ.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -108,6 +108,14 @@ struct PipeShared<'s, P> {
     prefill_completed: usize,
     prefill_joined: usize,
     prefill_inflight_peak: usize,
+    /// Executor-side bounded retries (async mode; merged into the final
+    /// stats' `retries` — the workers count their own inline).
+    exec_retries: usize,
+    /// Task positions whose async `prepare_prefill` exhausted its retry
+    /// budget under `fault-policy = quarantine`: the joining worker
+    /// consumes the marker and quarantines the task instead of waiting
+    /// forever for a payload that will never arrive.
+    failed_prepares: BTreeSet<usize>,
     /// Workers that finished their drain (the executor's shutdown gate).
     workers_done: usize,
     workers_total: usize,
@@ -222,6 +230,8 @@ impl<P> Drop for PanicFence<'_, '_, P> {
 fn prefill_executor<B: RolloutBackend>(
     b: &mut B,
     tasks: &[(usize, &Task)],
+    retries: usize,
+    quarantine: bool,
     shared: &Mutex<PipeShared<'_, B::Prepared>>,
     cv: &Condvar,
 ) -> Result<()> {
@@ -249,11 +259,38 @@ fn prefill_executor<B: RolloutBackend>(
                 guard = g;
             }
         };
-        // the expensive half runs OFF the lock and OFF the decode workers
-        let prepared = b.prepare_prefill(&tasks[pos].1.prompt_ids)?;
+        // the expensive half runs OFF the lock and OFF the decode workers;
+        // its modeled latency was charged to the shared prefill lane at
+        // issue time, so executor retries only count — they add no ticks
+        let mut attempt = 0usize;
+        let prepared = loop {
+            match b.prepare_prefill(&tasks[pos].1.prompt_ids) {
+                Ok(p) => break Some(p),
+                Err(e) if attempt < retries => {
+                    attempt += 1;
+                    lock()?.exec_retries += 1;
+                    let _ = e;
+                }
+                Err(e) if quarantine => {
+                    // deliver a failure marker instead of a payload: the
+                    // joining worker quarantines the task (abort policy
+                    // instead fails the run, below)
+                    let _ = e;
+                    break None;
+                }
+                Err(e) => return Err(e),
+            }
+        };
         let mut guard = lock()?;
-        guard.prefill_completed += 1;
-        guard.prepared.insert(pos, prepared);
+        match prepared {
+            Some(p) => {
+                guard.prefill_completed += 1;
+                guard.prepared.insert(pos, p);
+            }
+            None => {
+                guard.failed_prepares.insert(pos);
+            }
+        }
         drop(guard);
         cv.notify_all();
     }
@@ -350,6 +387,8 @@ impl RolloutPolicy {
             prefill_completed: 0,
             prefill_joined: 0,
             prefill_inflight_peak: 0,
+            exec_retries: 0,
+            failed_prepares: BTreeSet::new(),
             workers_done: 0,
             workers_total: workers,
             failed: None,
@@ -358,22 +397,52 @@ impl RolloutPolicy {
         let (shared, cv) = (&shared, &cv);
         let policy = *self;
 
+        // Fold any outcome — returned `Err` OR caught panic (with its
+        // actual payload: injected-fault messages, violated `expect`s) —
+        // into `PipeShared.failed` so parked peers and the executor bail
+        // with the real cause instead of a generic note, then surface the
+        // same message through the thread's own return value.
+        fn settle<P, T>(
+            shared: &Mutex<PipeShared<'_, P>>,
+            cv: &Condvar,
+            what: &str,
+            out: std::thread::Result<Result<T>>,
+        ) -> Result<T> {
+            let out = match out {
+                Ok(out) => out,
+                Err(payload) => {
+                    Err(anyhow::anyhow!("{what} panicked: {}", core::panic_msg(&*payload)))
+                }
+            };
+            if let Err(e) = &out {
+                // poison the run so parked peers (and the executor) bail
+                // out instead of waiting on work that will never come
+                if let Ok(mut sh) = shared.lock() {
+                    if sh.failed.is_none() {
+                        sh.failed = Some(format!("{e:#}"));
+                    }
+                }
+                cv.notify_all();
+            }
+            out
+        }
         let (joined, exec_joined) = std::thread::scope(|scope| {
             let exec_handle = prefill_backend.map(|eb| {
                 scope.spawn(move || {
                     let mut fence = PanicFence { shared, cv, disarmed: false };
-                    let out = prefill_executor(eb, tasks, shared, cv);
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        prefill_executor(
+                            eb,
+                            tasks,
+                            policy.fault_retries,
+                            policy.fault_policy.is_quarantine(),
+                            shared,
+                            cv,
+                        )
+                    }));
                     fence.disarmed = true;
                     drop(fence);
-                    if let Err(e) = &out {
-                        if let Ok(mut sh) = shared.lock() {
-                            if sh.failed.is_none() {
-                                sh.failed = Some(e.to_string());
-                            }
-                        }
-                        cv.notify_all();
-                    }
-                    out
+                    settle(shared, cv, "prefill executor", out)
                 })
             });
             let handles: Vec<_> = backends
@@ -382,22 +451,12 @@ impl RolloutPolicy {
                 .map(|(me, b)| {
                     scope.spawn(move || {
                         let mut fence = PanicFence { shared, cv, disarmed: false };
-                        let out = policy
-                            .pipelined_worker(b, tasks, seed, seq_id_base, me, shared, cv);
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            policy.pipelined_worker(b, tasks, seed, seq_id_base, me, shared, cv)
+                        }));
                         fence.disarmed = true;
                         drop(fence);
-                        if let Err(e) = &out {
-                            // poison the run so parked peers (and the
-                            // executor) bail out instead of waiting on
-                            // work that will never come
-                            if let Ok(mut sh) = shared.lock() {
-                                if sh.failed.is_none() {
-                                    sh.failed = Some(e.to_string());
-                                }
-                            }
-                            cv.notify_all();
-                        }
-                        out
+                        settle(shared, cv, "pipelined worker", out)
                     })
                 })
                 .collect();
@@ -413,13 +472,19 @@ impl RolloutPolicy {
         let mut stats = RolloutStats::default();
         let mut makespan = 0u64;
         for res in joined {
-            let (ws, finish) =
-                res.unwrap_or_else(|_| Err(anyhow::anyhow!("pipelined worker panicked")))?;
+            // catch_unwind already folded in-thread panics into Err; this
+            // fallback only fires if the harness itself unwound, and still
+            // surfaces the payload
+            let (ws, finish) = res.unwrap_or_else(|p| {
+                Err(anyhow::anyhow!("pipelined worker panicked: {}", core::panic_msg(&*p)))
+            })?;
             stats.merge(&ws);
             makespan = makespan.max(finish);
         }
         if let Some(res) = exec_joined {
-            res.unwrap_or_else(|_| Err(anyhow::anyhow!("prefill executor panicked")))?;
+            res.unwrap_or_else(|p| {
+                Err(anyhow::anyhow!("prefill executor panicked: {}", core::panic_msg(&*p)))
+            })?;
         }
         stats.workers = workers;
         stats.modeled_makespan_ticks = makespan;
@@ -430,8 +495,9 @@ impl RolloutPolicy {
         stats.async_prefills_submitted = sh.prefill_submitted;
         stats.async_prefills_completed = sh.prefill_completed;
         stats.async_prefill_inflight_peak = sh.prefill_inflight_peak;
+        stats.retries += sh.exec_retries;
         debug_assert!(
-            sh.prepared.is_empty() && sh.prefill_queue.is_empty(),
+            sh.prepared.is_empty() && sh.prefill_queue.is_empty() && sh.failed_prepares.is_empty(),
             "async prefills leaked past the drain"
         );
         let mut out = Vec::with_capacity(n);
@@ -473,13 +539,19 @@ impl RolloutPolicy {
         // block until the executor delivers `pos` (async joins only): a
         // PHYSICAL wait with no virtual charge — the virtual lane already
         // accounted the prefill at issue time, so modeled stats stay
-        // independent of real thread scheduling
-        let wait_prepared = |pos: usize| -> Result<B::Prepared> {
+        // independent of real thread scheduling. `Ok(None)` means the
+        // executor exhausted its retries on this prepare under
+        // `fault-policy = quarantine`: the caller quarantines the task.
+        let wait_prepared = |pos: usize| -> Result<Option<B::Prepared>> {
             let mut guard = lock()?;
             loop {
                 if let Some(p) = guard.prepared.remove(&pos) {
                     guard.prefill_joined += 1;
-                    return Ok(p);
+                    return Ok(Some(p));
+                }
+                if guard.failed_prepares.remove(&pos) {
+                    guard.prefill_joined += 1;
+                    return Ok(None);
                 }
                 if let Some(e) = &guard.failed {
                     bail!("pipelined peer failed: {e}");
@@ -494,13 +566,14 @@ impl RolloutPolicy {
         let mut stats = RolloutStats { chunks: 1, workers: 1, ..RolloutStats::default() };
         // this lane's virtual clock (ticks on the backend's cost model)
         let mut now = 0u64;
-        let mut core = DecodeCore::new(geom, self.mode.is_sparse());
+        let mut core =
+            DecodeCore::new(geom, self.mode.is_sparse()).with_retries(self.fault_retries);
         // prefill-once-attach-G, per lane (sync joins only: the async
         // executor's pipeline already overlaps prepares with decode, and
         // its payloads are keyed by task — attach-sharing there would
         // complicate the hand-off for a lane that never blocks anyway)
         let mut pcache: PrefillCache<B> =
-            PrefillCache::new(!asynch && self.sharing.is_group());
+            PrefillCache::new(!asynch && self.sharing.is_group()).with_retries(self.fault_retries);
         // slots whose row in `logp` is fresh (sampled at the loop top);
         // freshly joined slots carry an already-sampled token instead
         let mut decoded = vec![false; r];
@@ -520,23 +593,46 @@ impl RolloutPolicy {
         }
         let w0 = wave.count();
         if w0 > 0 {
-            if asynch {
-                // the batched prefill shares the single modeled prefill
-                // lane with every other worker's; the decode lane blocks
-                // on it (nothing to decode before the first logits anyway)
-                let ready = lock()?.lane_issue(now, geom.costs.prefill_ticks);
-                logp = wave.prefill(&core, b, &mut stats)?;
-                stats.prefill_blocked_ticks += ready - now;
-                now = ready;
+            // async: the batched prefill shares the single modeled prefill
+            // lane with every other worker's; the decode lane blocks on it
+            // (nothing to decode before the first logits anyway).
+            // sync: this worker makes the call and its lane blocks for the
+            // full cost.
+            let ready = if asynch {
+                Some(lock()?.lane_issue(now, geom.costs.prefill_ticks))
             } else {
-                // sync: this worker makes the call and its lane blocks
-                // for the full cost
-                logp = wave.prefill(&core, b, &mut stats)?;
-                stats.prefill_blocked_ticks += geom.costs.prefill_ticks;
-                now += geom.costs.prefill_ticks;
-            }
-            for d in decoded.iter_mut().take(w0) {
-                *d = true;
+                None
+            };
+            match wave.prefill(&core, b, &mut stats) {
+                Ok(l) => {
+                    logp = l;
+                    if let Some(ready) = ready {
+                        stats.prefill_blocked_ticks += ready - now;
+                        now = ready;
+                    } else {
+                        stats.prefill_blocked_ticks += geom.costs.prefill_ticks;
+                        now += geom.costs.prefill_ticks;
+                    }
+                    for d in decoded.iter_mut().take(w0) {
+                        *d = true;
+                    }
+                }
+                Err(e) if self.fault_policy.is_quarantine() => {
+                    // the whole staged wave shared the failed call: release
+                    // every member's admission, record the failures, and
+                    // fall through to the main loop's empty-lane path
+                    let _ = e;
+                    let mut guard = lock()?;
+                    let sh = &mut *guard;
+                    for live in core.quarantine_live(sh.sched, sh.kv, seq_id_base, &mut stats)? {
+                        sh.release_at(now);
+                        sh.results[live.pos] = Some(live.gen);
+                    }
+                    sh.lane_live[me] = 0;
+                    drop(guard);
+                    cv.notify_all();
+                }
+                Err(e) => return Err(e),
             }
         }
 
@@ -578,40 +674,98 @@ impl RolloutPolicy {
                     .expect("a free slot exists per pending refill (registry invariant)");
                 let (idx, task) = tasks[p.pos];
                 let pi = &task.prompt_ids;
-                let row = if asynch {
-                    let prepared = wait_prepared(p.pos)?;
-                    if stats.prefills == 0 {
-                        // this lane's whole first wave was refused at the
-                        // wall, so it has no live cache yet and the real
-                        // backend's apply would reject: run the batched
-                        // entry with just this prompt instead (batch-row
-                        // independence makes the slot's logits identical)
-                        // and drop the prepared payload
-                        prefill_single_row(&geom, b, slot, pi, &mut stats)?
-                    } else {
-                        stats.slot_prefills += 1;
-                        b.apply_prefill(slot, prepared)?
+                // `None` = this refill's prefill is unrecoverable under
+                // `fault-policy = quarantine` (executor marker, or an
+                // exhausted inline call): quarantine the task below.
+                let row: Option<Vec<f32>> = if asynch {
+                    match wait_prepared(p.pos)? {
+                        None => None, // executor-side exhaustion marker
+                        Some(prepared) => {
+                            let res = if stats.prefills == 0 {
+                                // this lane's whole first wave was refused
+                                // at the wall, so it has no live cache yet
+                                // and the real backend's apply would
+                                // reject: run the batched entry with just
+                                // this prompt instead (batch-row
+                                // independence makes the slot's logits
+                                // identical) and drop the prepared payload
+                                prefill_single_row(
+                                    &geom,
+                                    b,
+                                    slot,
+                                    pi,
+                                    self.fault_retries,
+                                    &mut stats,
+                                )
+                            } else {
+                                match core::with_retries(
+                                    self.fault_retries,
+                                    geom.costs.slot_prefill_ticks,
+                                    core::TickBucket::Prefill,
+                                    &mut stats,
+                                    || b.apply_prefill(slot, prepared.clone()),
+                                ) {
+                                    Ok(r) => {
+                                        stats.slot_prefills += 1;
+                                        Ok(r)
+                                    }
+                                    Err(e) => Err(e),
+                                }
+                            };
+                            match res {
+                                Ok(r) => Some(r),
+                                Err(e) if self.fault_policy.is_quarantine() => {
+                                    let _ = e;
+                                    None
+                                }
+                                Err(e) => return Err(e),
+                            }
+                        }
                     }
                 } else {
                     // sync: the device call happens here, on this worker,
                     // so the honest virtual charge lands on this lane
                     // (a shared attach is a slot write — attach_ticks)
-                    let (row, attached) = if stats.prefills == 0 {
+                    let res = if stats.prefills == 0 {
                         // no live cache yet on this lane (first wave was
                         // refused): the batched entry bypasses — and does
                         // not seed — the share cache
-                        (prefill_single_row(&geom, b, slot, pi, &mut stats)?, false)
+                        prefill_single_row(&geom, b, slot, pi, self.fault_retries, &mut stats)
+                            .map(|r| (r, false))
                     } else {
-                        pcache.slot_prefill(b, slot, pi, &mut stats)?
+                        pcache.slot_prefill(b, slot, pi, &mut stats)
                     };
-                    let ticks = if attached {
-                        geom.costs.attach_ticks
-                    } else {
-                        geom.costs.slot_prefill_ticks
-                    };
-                    stats.prefill_blocked_ticks += ticks;
-                    now += ticks;
-                    row
+                    match res {
+                        Ok((row, attached)) => {
+                            let ticks = if attached {
+                                geom.costs.attach_ticks
+                            } else {
+                                geom.costs.slot_prefill_ticks
+                            };
+                            stats.prefill_blocked_ticks += ticks;
+                            now += ticks;
+                            Some(row)
+                        }
+                        Err(e) if self.fault_policy.is_quarantine() => {
+                            let _ = e;
+                            None
+                        }
+                        Err(e) => return Err(e),
+                    }
+                };
+                let Some(row) = row else {
+                    // quarantine this refill: its admission is released,
+                    // its result recorded failed, and the freed room wakes
+                    // parked peers
+                    let mut guard = lock()?;
+                    let sh = &mut *guard;
+                    sh.sched.quarantine_seq(sh.kv, seq_id_base + p.pos as u64)?;
+                    sh.release_at(now);
+                    sh.results[p.pos] = Some(GenSeq::failed_seq(idx, pi.clone()));
+                    drop(guard);
+                    stats.failed_tasks += 1;
+                    cv.notify_all();
+                    continue;
                 };
                 stats.refills += 1;
                 // identical per-token semantics to the continuous refill
@@ -737,7 +891,28 @@ impl RolloutPolicy {
             // copy-on-write — an allocation that can stall at the wall
             // and preempt from the OWN batch, exactly like growth -------
             {
-                let compressed = core.compress_step(b, &mut stats)?;
+                let compressed = match core.compress_step(b, &mut stats) {
+                    Ok(c) => c,
+                    Err(e) if self.fault_policy.is_quarantine() => {
+                        // batch fault: every live member of THIS lane
+                        // shared the failed call; quarantine them all and
+                        // fall through to the empty-lane path
+                        let _ = e;
+                        let mut guard = lock()?;
+                        let sh = &mut *guard;
+                        for live in
+                            core.quarantine_live(sh.sched, sh.kv, seq_id_base, &mut stats)?
+                        {
+                            sh.release_at(now);
+                            sh.results[live.pos] = Some(live.gen);
+                        }
+                        sh.lane_live[me] = 0;
+                        drop(guard);
+                        cv.notify_all();
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                };
                 if !compressed.is_empty() {
                     now += geom.costs.compress_ticks;
                     let mut guard = lock()?;
@@ -787,7 +962,23 @@ impl RolloutPolicy {
             if core.occupied() == 0 {
                 continue; // growth evicted the whole batch: re-admit/wait
             }
-            logp = core.decode_step(b, &mut stats)?;
+            logp = match core.decode_step(b, &mut stats) {
+                Ok(l) => l,
+                Err(e) if self.fault_policy.is_quarantine() => {
+                    let _ = e;
+                    let mut guard = lock()?;
+                    let sh = &mut *guard;
+                    for live in core.quarantine_live(sh.sched, sh.kv, seq_id_base, &mut stats)? {
+                        sh.release_at(now);
+                        sh.results[live.pos] = Some(live.gen);
+                    }
+                    sh.lane_live[me] = 0;
+                    drop(guard);
+                    cv.notify_all();
+                    continue; // empty lane: re-admit, steal, or drain
+                }
+                Err(e) => return Err(e),
+            };
             now += geom.costs.decode_ticks;
             for slot in 0..r {
                 decoded[slot] = core.slots[slot].is_some();

@@ -8,6 +8,7 @@ use anyhow::{bail, Result};
 
 use crate::config::AdmissionOrder;
 use crate::data::task::Task;
+use crate::data::tokenizer::PAD;
 
 use super::super::backend::RolloutBackend;
 use super::super::kv_manager::KvMemoryManager;
@@ -15,6 +16,26 @@ use super::super::scheduler::Scheduler;
 use super::core::{admission_costs, DecodeCore, GenSeq, Geometry, PrefillWave};
 use super::stats::RolloutStats;
 use super::RolloutPolicy;
+
+/// Quarantine every live member of a static chunk after a batch backend
+/// call (wave prefill / compress / decode) exhausted its retry budget:
+/// all members shared the failed call, so all are recorded failed. No
+/// scheduler release happens here — static reservations are chunk-scoped
+/// and `finish_chunk` returns them as a unit, so the chunk ledger stays
+/// balanced without touching the sequence-level conservation counters.
+fn quarantine_chunk(
+    core: &mut DecodeCore,
+    results: &mut [Option<GenSeq>],
+    stats: &mut RolloutStats,
+) {
+    for slot in 0..core.geom.slots {
+        let Some(mut live) = core.slots[slot].take() else { continue };
+        core.tokens[slot] = PAD;
+        live.gen.failed = true;
+        stats.failed_tasks += 1;
+        results[live.pos] = Some(live.gen);
+    }
+}
 
 impl RolloutPolicy {
     /// Static chunked rollout of ≤ R sequences (the scheduler guarantees
@@ -38,18 +59,27 @@ impl RolloutPolicy {
         }
 
         // ---- prefill: the whole chunk in one batched call ---------------
-        let mut core = DecodeCore::new(geom, self.mode.is_sparse());
+        let mut core =
+            DecodeCore::new(geom, self.mode.is_sparse()).with_retries(self.fault_retries);
+        let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
         let mut wave = PrefillWave::new(&geom);
         for (slot, (idx, task)) in tasks.iter().enumerate() {
             wave.push(&mut core, slot, *idx, &task.prompt_ids, seed);
         }
-        let mut logp = wave.prefill(&core, b, &mut stats)?;
+        let mut logp = match wave.prefill(&core, b, &mut stats) {
+            Ok(l) => l,
+            Err(e) if self.fault_policy.is_quarantine() => {
+                let _ = e;
+                quarantine_chunk(&mut core, &mut results, &mut stats);
+                Vec::new() // no live slot remains; the decode loop is skipped
+            }
+            Err(e) => return Err(e),
+        };
         // serial lane: the decode batch blocks on its own prefill
         stats.prefill_blocked_ticks += geom.costs.prefill_ticks;
 
         // ---- decode loop: run until the slowest sequence finishes -------
-        let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
-        loop {
+        while core.occupied() > 0 {
             for slot in 0..geom.slots {
                 let dist = &logp[slot * geom.vocab..(slot + 1) * geom.vocab];
                 if let Some(done) = core.sample(self, slot, dist) {
@@ -64,8 +94,22 @@ impl RolloutPolicy {
             }
             // chunk reservations are worst-case/predicted bounds, so
             // compression never needs a scheduler shrink here
-            core.compress_step(b, &mut stats)?;
-            logp = core.decode_step(b, &mut stats)?;
+            if let Err(e) = core.compress_step(b, &mut stats) {
+                if !self.fault_policy.is_quarantine() {
+                    return Err(e);
+                }
+                quarantine_chunk(&mut core, &mut results, &mut stats);
+                break;
+            }
+            logp = match core.decode_step(b, &mut stats) {
+                Ok(l) => l,
+                Err(e) if self.fault_policy.is_quarantine() => {
+                    let _ = e;
+                    quarantine_chunk(&mut core, &mut results, &mut stats);
+                    break;
+                }
+                Err(e) => return Err(e),
+            };
         }
         // serial engine: the lane's makespan is simply everything it did
         stats.modeled_makespan_ticks =

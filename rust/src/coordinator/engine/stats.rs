@@ -67,6 +67,20 @@ pub struct RolloutStats {
     /// the pipelined joiner overwrites it with the globally observed
     /// value.
     pub async_prefill_inflight_peak: usize,
+    /// Backend calls that failed and were retried under the bounded-retry
+    /// policy (`fault-retries`). Each retried attempt counts once; a call
+    /// that succeeds first try contributes 0.
+    pub retries: usize,
+    /// Tasks requeued from a dead replica to a survivor by fleet failover
+    /// (0 outside the fleet tier).
+    pub requeues: usize,
+    /// Tasks quarantined after exhausting their retry budget
+    /// (`fault-policy = quarantine` only; their `GenSeq.failed` is set and
+    /// the trainer drops their whole GRPO group).
+    pub failed_tasks: usize,
+    /// Replica threads declared dead (error or panic) and failed over
+    /// (0 outside the fleet tier).
+    pub replica_deaths: usize,
     /// Worker lanes that produced these stats (1 for static/continuous;
     /// the pool size for pipelined).
     pub workers: usize,
@@ -145,6 +159,10 @@ impl RolloutStats {
         self.async_prefills_completed += o.async_prefills_completed;
         self.async_prefill_inflight_peak =
             self.async_prefill_inflight_peak.max(o.async_prefill_inflight_peak);
+        self.retries += o.retries;
+        self.requeues += o.requeues;
+        self.failed_tasks += o.failed_tasks;
+        self.replica_deaths += o.replica_deaths;
         self.workers = self.workers.max(o.workers);
         self.decode_busy_ticks += o.decode_busy_ticks;
         self.prefill_blocked_ticks += o.prefill_blocked_ticks;
@@ -205,6 +223,10 @@ mod tests {
             async_prefills_submitted: 3,
             async_prefills_completed: 3,
             async_prefill_inflight_peak: 2,
+            retries: 2,
+            requeues: 1,
+            failed_tasks: 1,
+            replica_deaths: 0,
             workers: 1,
             decode_busy_ticks: 100,
             prefill_blocked_ticks: 40,
@@ -222,6 +244,8 @@ mod tests {
             async_prefills_submitted: 1,
             async_prefills_completed: 1,
             async_prefill_inflight_peak: 1,
+            retries: 1,
+            replica_deaths: 1,
             workers: 1,
             decode_busy_ticks: 50,
             prefill_blocked_ticks: 40,
@@ -243,6 +267,11 @@ mod tests {
         assert_eq!(m.async_prefills_submitted, 4);
         assert_eq!(m.async_prefills_completed, 4);
         assert_eq!(m.shared_prefill_attaches, 3);
+        // fault-tolerance counters are work: they sum in both compositions
+        assert_eq!(m.retries, 3);
+        assert_eq!(m.requeues, 1);
+        assert_eq!(m.failed_tasks, 1);
+        assert_eq!(m.replica_deaths, 1);
         // ...high-water marks take the max
         assert_eq!(m.async_prefill_inflight_peak, 2);
         assert_eq!(m.max_reserved_kv, 100);
@@ -291,6 +320,10 @@ mod tests {
                     async_prefills_submitted: rng.below(24),
                     async_prefills_completed: rng.below(24),
                     async_prefill_inflight_peak: rng.below(12),
+                    retries: rng.below(10),
+                    requeues: rng.below(6),
+                    failed_tasks: rng.below(6),
+                    replica_deaths: rng.below(3),
                     workers: 1,
                     decode_busy_ticks: rng.below(10_000) as u64,
                     prefill_blocked_ticks: rng.below(10_000) as u64,
@@ -319,6 +352,10 @@ mod tests {
                 || merged.shared_prefill_attaches != sum(|l| l.shared_prefill_attaches)
                 || merged.async_prefills_submitted != sum(|l| l.async_prefills_submitted)
                 || merged.async_prefills_completed != sum(|l| l.async_prefills_completed)
+                || merged.retries != sum(|l| l.retries)
+                || merged.requeues != sum(|l| l.requeues)
+                || merged.failed_tasks != sum(|l| l.failed_tasks)
+                || merged.replica_deaths != sum(|l| l.replica_deaths)
                 || merged.chunks != n
             {
                 return Err("a work counter did not sum exactly".into());
@@ -432,6 +469,10 @@ mod tests {
                     async_prefills_submitted: rng.below(24),
                     async_prefills_completed: rng.below(24),
                     async_prefill_inflight_peak: rng.below(12),
+                    retries: rng.below(10),
+                    requeues: rng.below(6),
+                    failed_tasks: rng.below(6),
+                    replica_deaths: rng.below(3),
                     workers: 1 + rng.below(4),
                     decode_busy_ticks: rng.below(10_000) as u64,
                     prefill_blocked_ticks: rng.below(10_000) as u64,
@@ -454,6 +495,14 @@ mod tests {
             }
             if fleet.decode_steps != steps {
                 return Err("decode steps did not sum".into());
+            }
+            let sum = |f: fn(&RolloutStats) -> usize| reps.iter().map(f).sum::<usize>();
+            if fleet.retries != sum(|r| r.retries)
+                || fleet.requeues != sum(|r| r.requeues)
+                || fleet.failed_tasks != sum(|r| r.failed_tasks)
+                || fleet.replica_deaths != sum(|r| r.replica_deaths)
+            {
+                return Err("a fault counter did not sum fleet-wide".into());
             }
             let makespan = reps.iter().map(|r| r.modeled_makespan_ticks).max().unwrap_or(0);
             if fleet.modeled_makespan_ticks != makespan {

@@ -17,7 +17,8 @@
 use anyhow::{bail, Result};
 
 use crate::config::{
-    AdmissionOrder, EngineKind, MemoryConfig, PrefillMode, RolloutMode, SamplingConfig,
+    AdmissionOrder, EngineKind, FaultPolicy, MemoryConfig, PrefillMode, RolloutMode,
+    SamplingConfig,
 };
 use crate::data::benchmarks::{Benchmark, Protocol};
 use crate::data::task::Task;
@@ -82,6 +83,13 @@ pub struct EvalOptions {
     pub replicas: usize,
     /// Cross-replica work stealing for `replicas > 1` (default on).
     pub replica_steal: bool,
+    /// Bounded-retry budget for failing backend calls (`fault-retries`;
+    /// default 0 = the bare-call seed behavior).
+    pub fault_retries: usize,
+    /// What happens when a call exhausts its retries: `abort` (default —
+    /// the error kills the eval) or `quarantine` (the sample is recorded
+    /// failed; with fleets, dead replicas fail over to survivors).
+    pub fault_policy: FaultPolicy,
 }
 
 impl Default for EvalOptions {
@@ -95,6 +103,8 @@ impl Default for EvalOptions {
             prefill: PrefillMode::default(),
             replicas: 1,
             replica_steal: true,
+            fault_retries: 0,
+            fault_policy: FaultPolicy::default(),
         }
     }
 }
@@ -102,7 +112,10 @@ impl Default for EvalOptions {
 /// Fold rolled-out samples into the per-item accuracy / length /
 /// savings summary. `seqs` carry flat sample ids (item `i` sample `j`
 /// at `i*k + j`), in any order — the fold keys off `task_idx`, so the
-/// single-engine and fleet paths score identically.
+/// single-engine and fleet paths score identically. A quarantined sample
+/// (`fault-policy = quarantine`) simply scores incorrect — eval has no
+/// group structure to drop, so partial delivery degrades accuracy
+/// instead of erroring.
 fn score_rollouts(benchmark: &str, tasks: &[Task], k: usize, seqs: Vec<GenSeq>) -> EvalResult {
     let mut correct_per_item = vec![0usize; tasks.len()];
     let mut total_len = 0usize;
@@ -266,7 +279,9 @@ pub fn evaluate(
     let policy = RolloutPolicy::new(mode, sampling)
         .with_steal(opts.steal)
         .with_prefill(opts.prefill)
-        .with_sharing(opts.memory.prefix_sharing);
+        .with_sharing(opts.memory.prefix_sharing)
+        .with_fault_retries(opts.fault_retries)
+        .with_fault_policy(opts.fault_policy);
     let params_lit = ParamsLit::new(params);
     // one backend per decode lane (single-lane engines use the first);
     // pipelined async adds one more for the prefill-executor thread

@@ -35,7 +35,8 @@
 //! reproducible.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -43,6 +44,7 @@ use crate::config::EngineKind;
 use crate::data::task::Task;
 
 use super::backend::RolloutBackend;
+use super::engine::core::panic_msg;
 use super::engine::{GenSeq, RolloutPolicy, RolloutStats};
 use super::kv_manager::KvMemoryManager;
 use super::scheduler::Scheduler;
@@ -81,6 +83,12 @@ pub struct FleetReport {
     pub per_replica: Vec<RolloutStats>,
     /// Tasks that actually moved across replica boundaries.
     pub replica_steals: usize,
+    /// Tasks requeued from a dead replica to a survivor (`fault-policy =
+    /// quarantine`); reruns are token-identical by per-task RNG.
+    pub requeues: usize,
+    /// Replicas whose engine pass failed (returned error or panicked) and
+    /// were retired from the fleet, their work requeued to survivors.
+    pub replica_deaths: usize,
 }
 
 /// The modeled cost of one task on one replica: predicted residency ×
@@ -134,6 +142,16 @@ struct FleetShared {
     results: Vec<Option<GenSeq>>,
     per_replica: Vec<RolloutStats>,
     steals: usize,
+    /// Which replicas are still serving (`fault-policy = quarantine`
+    /// failover: a dead replica flips its flag, requeues its work, and
+    /// exits; its pool is never reused).
+    alive: Vec<bool>,
+    /// Tasks not yet delivered to `results`. Failover parks drained
+    /// replicas on the condvar until this hits zero — a dying peer may
+    /// still requeue work into their queues.
+    outstanding: usize,
+    deaths: usize,
+    requeues: usize,
     failed: Option<String>,
 }
 
@@ -210,6 +228,8 @@ pub fn rollout_fleet<B: RolloutBackend + Send>(
             modeled_load,
             per_replica: vec![stats],
             replica_steals: 0,
+            requeues: 0,
+            replica_deaths: 0,
         };
         return Ok((seqs, fleet, report));
     }
@@ -228,12 +248,21 @@ pub fn rollout_fleet<B: RolloutBackend + Send>(
         results: (0..n).map(|_| None).collect(),
         per_replica: vec![RolloutStats::default(); n_reps],
         steals: 0,
+        alive: vec![true; n_reps],
+        outstanding: n,
+        deaths: 0,
+        requeues: 0,
         failed: None,
     });
+    let cv = Condvar::new();
+    // Replica failover only under `fault-policy = quarantine`: the
+    // default abort policy keeps the seed behavior bit-exact (first
+    // replica error fails the whole fleet, nothing waits or requeues).
+    let failover = policy.fault_policy.is_quarantine();
 
     std::thread::scope(|scope| {
         for (r, rep) in replicas.iter_mut().enumerate() {
-            let shared = &shared;
+            let (shared, cv) = (&shared, &cv);
             let per_task_load = &per_task_load;
             scope.spawn(move || {
                 // With stealing off each replica drains its whole queue
@@ -244,46 +273,64 @@ pub fn rollout_fleet<B: RolloutBackend + Send>(
                 let chunk = (rep.sched.slots * 2).max(1);
                 let mut stats = RolloutStats::default();
                 let mut runs = 0u64;
-                loop {
+                'serve: loop {
                     let mut batch_pos: Vec<usize> = Vec::new();
                     {
                         let mut sh = shared.lock().unwrap();
-                        if sh.failed.is_some() {
-                            break;
-                        }
-                        if !sh.queues[r].is_empty() {
-                            let take = if replica_steal { chunk } else { sh.queues[r].len() };
-                            for _ in 0..take.min(sh.queues[r].len()) {
-                                let pos = sh.queues[r].pop_front().unwrap();
-                                sh.pending_load[r] =
-                                    sh.pending_load[r].saturating_sub(per_task_load[pos]);
-                                batch_pos.push(pos);
+                        loop {
+                            if sh.failed.is_some() {
+                                break;
                             }
-                        } else if replica_steal {
-                            // Drained: rob the most-loaded peer of its
-                            // single highest-load queued task. Both picks
-                            // are cost-weighted (modeled load, not queue
-                            // length), stable ties to the lowest index /
-                            // earliest queue position.
-                            let victim = (0..sh.queues.len())
-                                .filter(|&v| v != r && !sh.queues[v].is_empty())
-                                .max_by_key(|&v| (sh.pending_load[v], std::cmp::Reverse(v)));
-                            let Some(v) = victim else { break };
-                            let at = sh.queues[v]
-                                .iter()
-                                .enumerate()
-                                .max_by_key(|&(i, &pos)| {
-                                    (per_task_load[pos], std::cmp::Reverse(i))
-                                })
-                                .map(|(i, _)| i)
-                                .unwrap();
-                            let pos = sh.queues[v].remove(at).unwrap();
-                            sh.pending_load[v] =
-                                sh.pending_load[v].saturating_sub(per_task_load[pos]);
-                            sh.steals += 1;
-                            batch_pos.push(pos);
-                        } else {
-                            break;
+                            if !sh.queues[r].is_empty() {
+                                let take =
+                                    if replica_steal { chunk } else { sh.queues[r].len() };
+                                for _ in 0..take.min(sh.queues[r].len()) {
+                                    let pos = sh.queues[r].pop_front().unwrap();
+                                    sh.pending_load[r] =
+                                        sh.pending_load[r].saturating_sub(per_task_load[pos]);
+                                    batch_pos.push(pos);
+                                }
+                                break;
+                            }
+                            if replica_steal {
+                                // Drained: rob the most-loaded peer of its
+                                // single highest-load queued task. Both picks
+                                // are cost-weighted (modeled load, not queue
+                                // length), stable ties to the lowest index /
+                                // earliest queue position.
+                                let victim = (0..sh.queues.len())
+                                    .filter(|&v| v != r && !sh.queues[v].is_empty())
+                                    .max_by_key(|&v| {
+                                        (sh.pending_load[v], std::cmp::Reverse(v))
+                                    });
+                                if let Some(v) = victim {
+                                    let at = sh.queues[v]
+                                        .iter()
+                                        .enumerate()
+                                        .max_by_key(|&(i, &pos)| {
+                                            (per_task_load[pos], std::cmp::Reverse(i))
+                                        })
+                                        .map(|(i, _)| i)
+                                        .unwrap();
+                                    let pos = sh.queues[v].remove(at).unwrap();
+                                    sh.pending_load[v] =
+                                        sh.pending_load[v].saturating_sub(per_task_load[pos]);
+                                    sh.steals += 1;
+                                    batch_pos.push(pos);
+                                    break;
+                                }
+                            }
+                            // Own queue empty, nothing stealable. Without
+                            // failover that means done (the seed behavior).
+                            // With failover a dying peer may yet requeue
+                            // work here, so park until every task is
+                            // delivered (or something fails).
+                            if !failover || sh.outstanding == 0 {
+                                break;
+                            }
+                            let (g, _) =
+                                cv.wait_timeout(sh, Duration::from_millis(2)).unwrap();
+                            sh = g;
                         }
                     }
                     if batch_pos.is_empty() {
@@ -296,22 +343,74 @@ pub fn rollout_fleet<B: RolloutBackend + Send>(
                     // count over-provisions safely.
                     let base = runs * n as u64;
                     runs += 1;
-                    match run_batch(policy, engine, rep, &batch, seed, base) {
-                        Ok((seqs, rstats)) => {
+                    // A panicking engine pass (e.g. an injected backend
+                    // panic past the retry budget) is caught here so the
+                    // replica can die IN BAND: flag itself dead, requeue
+                    // its work, and let survivors finish the step.
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || run_batch(policy, engine, rep, &batch, seed, base),
+                    ));
+                    let note = match outcome {
+                        Ok(Ok((seqs, rstats))) => {
                             stats.merge(&rstats);
                             let mut sh = shared.lock().unwrap();
                             for (&pos, seq) in batch_pos.iter().zip(seqs) {
                                 sh.results[pos] = Some(seq);
                             }
+                            sh.outstanding -= batch_pos.len();
+                            drop(sh);
+                            cv.notify_all();
+                            continue 'serve;
                         }
-                        Err(e) => {
-                            let mut sh = shared.lock().unwrap();
-                            sh.failed.get_or_insert(format!("replica {r}: {e:#}"));
-                            break;
+                        Ok(Err(e)) => format!("{e:#}"),
+                        Err(payload) => format!("panicked: {}", panic_msg(&*payload)),
+                    };
+                    // ---- this replica is dead -----------------------------
+                    let mut sh = shared.lock().unwrap();
+                    if !failover {
+                        sh.failed.get_or_insert(format!("replica {r}: {note}"));
+                    } else {
+                        sh.alive[r] = false;
+                        sh.deaths += 1;
+                        // requeue the in-flight batch plus everything still
+                        // queued here to the least-loaded survivors; reruns
+                        // are token-identical by per-task RNG. The dead
+                        // replica's pool is never reused (its wall may hold
+                        // stranded reservations), so conservation claims
+                        // apply to survivors only.
+                        let mut orphans = batch_pos.clone();
+                        orphans.extend(sh.queues[r].drain(..));
+                        sh.pending_load[r] = 0;
+                        let survivors: Vec<usize> =
+                            (0..n_reps).filter(|&t| sh.alive[t]).collect();
+                        if survivors.is_empty() {
+                            sh.failed.get_or_insert(format!(
+                                "replica {r} died with no survivors to adopt its {} tasks: \
+                                 {note}",
+                                orphans.len()
+                            ));
+                        } else {
+                            for pos in orphans {
+                                let &tgt = survivors
+                                    .iter()
+                                    .min_by_key(|&&t| sh.pending_load[t])
+                                    .unwrap();
+                                sh.queues[tgt].push_back(pos);
+                                sh.pending_load[tgt] += per_task_load[pos];
+                                sh.requeues += 1;
+                            }
                         }
                     }
+                    drop(sh);
+                    cv.notify_all();
+                    break;
                 }
-                shared.lock().unwrap().per_replica[r] = stats;
+                let mut sh = shared.lock().unwrap();
+                sh.per_replica[r] = stats;
+                drop(sh);
+                // a replica exiting for any reason must wake parked peers
+                // so they re-check the drain predicate
+                cv.notify_all();
             });
         }
     });
@@ -324,6 +423,10 @@ pub fn rollout_fleet<B: RolloutBackend + Send>(
     for rstats in &sh.per_replica {
         fleet.merge_parallel(rstats);
     }
+    // fleet-level fault counters live in the shared state, not in any
+    // replica's own stats (a dead replica cannot report its own death)
+    fleet.requeues += sh.requeues;
+    fleet.replica_deaths += sh.deaths;
     let mut out = Vec::with_capacity(n);
     for (pos, seq) in sh.results.into_iter().enumerate() {
         match seq {
@@ -337,6 +440,8 @@ pub fn rollout_fleet<B: RolloutBackend + Send>(
         modeled_load,
         per_replica: sh.per_replica,
         replica_steals: sh.steals,
+        requeues: sh.requeues,
+        replica_deaths: sh.deaths,
     };
     Ok((out, fleet, report))
 }

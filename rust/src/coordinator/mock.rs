@@ -31,8 +31,158 @@
 use anyhow::{bail, Result};
 
 use crate::data::tokenizer::{BOS, EOS, PAD};
+use crate::util::rng::Rng;
 
 use super::backend::{CostModel, RolloutBackend};
+
+/// Which backend call a [`FaultPlan`] entry targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultOp {
+    Prefill,
+    PrefillSlot,
+    PreparePrefill,
+    ApplyPrefill,
+    Decode,
+    Compress,
+}
+
+impl FaultOp {
+    const COUNT: usize = 6;
+
+    fn index(self) -> usize {
+        match self {
+            FaultOp::Prefill => 0,
+            FaultOp::PrefillSlot => 1,
+            FaultOp::PreparePrefill => 2,
+            FaultOp::ApplyPrefill => 3,
+            FaultOp::Decode => 4,
+            FaultOp::Compress => 5,
+        }
+    }
+
+    /// Stable name used in injected error/panic messages (tests match on it).
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultOp::Prefill => "prefill",
+            FaultOp::PrefillSlot => "prefill_slot",
+            FaultOp::PreparePrefill => "prepare_prefill",
+            FaultOp::ApplyPrefill => "apply_prefill",
+            FaultOp::Decode => "decode",
+            FaultOp::Compress => "compress",
+        }
+    }
+}
+
+/// What an injected fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The backend call returns an `Err` (transient fault: retryable).
+    Err,
+    /// The backend call panics with a distinctive payload string
+    /// (crash fault: kills the calling worker/replica thread).
+    Panic,
+}
+
+/// Deterministic, seeded fault plan for [`MockModelBackend`].
+///
+/// Faults fire at the TOP of a backend call, before any cache mutation
+/// or validation, so a failed call has zero side effects and a retry
+/// re-executes it bit-identically. Two addressing modes compose:
+///
+/// * **Scripted by call count** — `(op, zero-based per-op call index)`
+///   entries. Note the failing call still advances the op's counter, so
+///   a burst of K consecutive faults is entries at indices `i..i+K`.
+/// * **Scripted by task** — a prompt-keyed entry fires every time a
+///   per-task prefill op (`prefill_slot` / `prepare_prefill`) is called
+///   with exactly that prompt, which pins a fault to one task no matter
+///   where scheduling places it.
+/// * **Probabilistic** — a seeded per-call error rate (`Rng::chance`);
+///   the stream is a pure function of the plan seed and the call
+///   sequence, so reruns replay the same faults.
+///
+/// The plan travels with the backend through `Clone`, counters and all:
+/// each engine lane / replica clone counts its own calls independently,
+/// which is what makes per-lane fault schedules deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    scripted: Vec<(FaultOp, u64, FaultKind)>,
+    prompt_faults: Vec<(Vec<i32>, FaultKind)>,
+    error_rate: f64,
+    rng: Option<Rng>,
+    calls: [u64; FaultOp::COUNT],
+    /// Total injected `Err` faults fired so far (tests check exactness).
+    pub injected_errs: u64,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Script a fault at the `call`-th (zero-based) invocation of `op`.
+    pub fn scripted(mut self, op: FaultOp, call: u64, kind: FaultKind) -> Self {
+        self.scripted.push((op, call, kind));
+        self
+    }
+
+    /// Script a fault that fires on EVERY `prefill_slot` /
+    /// `prepare_prefill` call carrying exactly this prompt — a
+    /// task-keyed fault (a task's prompt is its identity to the
+    /// backend), independent of slot placement or admission order.
+    pub fn scripted_prompt(mut self, prompt: Vec<i32>, kind: FaultKind) -> Self {
+        self.prompt_faults.push((prompt, kind));
+        self
+    }
+
+    /// Add a seeded probabilistic `Err` fault: each call fails with
+    /// probability `rate`, drawn from a private deterministic stream.
+    pub fn with_error_rate(mut self, rate: f64, seed: u64) -> Self {
+        self.error_rate = rate;
+        self.rng = Some(Rng::new(seed));
+        self
+    }
+
+    /// Calls seen so far for `op` (on THIS clone of the plan).
+    pub fn calls(&self, op: FaultOp) -> u64 {
+        self.calls[op.index()]
+    }
+
+    fn fire(&mut self, op: FaultOp, prompt: Option<&[i32]>) -> Result<()> {
+        let idx = self.calls[op.index()];
+        self.calls[op.index()] += 1;
+        let mut kind = self
+            .scripted
+            .iter()
+            .find(|&&(o, c, _)| o == op && c == idx)
+            .map(|&(_, _, k)| k);
+        if kind.is_none() {
+            if let Some(p) = prompt {
+                kind = self
+                    .prompt_faults
+                    .iter()
+                    .find(|(fp, _)| fp == p)
+                    .map(|&(_, k)| k);
+            }
+        }
+        if kind.is_none() && self.error_rate > 0.0 {
+            if let Some(rng) = &mut self.rng {
+                if rng.chance(self.error_rate) {
+                    kind = Some(FaultKind::Err);
+                }
+            }
+        }
+        match kind {
+            Some(FaultKind::Err) => {
+                self.injected_errs += 1;
+                bail!("injected fault: {} call {idx} failed", op.label())
+            }
+            Some(FaultKind::Panic) => {
+                panic!("injected fault: {} call {idx} panicked", op.label())
+            }
+            None => Ok(()),
+        }
+    }
+}
 
 /// Pure-Rust deterministic model backend (see module docs).
 #[derive(Debug, Clone)]
@@ -61,6 +211,9 @@ pub struct MockModelBackend {
     /// pre-existing stats comparisons are untouched; the pipeline benches
     /// and tests set `CostModel::representative()`.
     pub costs: CostModel,
+    /// Seeded fault-injection plan (None = no faults, bit-exact seed
+    /// behavior). Consulted at the top of every backend call.
+    pub faults: Option<FaultPlan>,
 }
 
 impl MockModelBackend {
@@ -92,6 +245,7 @@ impl MockModelBackend {
             cache: vec![Vec::new(); slots],
             oob_writes: 0,
             costs: CostModel::default(),
+            faults: None,
         }
     }
 
@@ -99,6 +253,20 @@ impl MockModelBackend {
     pub fn with_costs(mut self, costs: CostModel) -> Self {
         self.costs = costs;
         self
+    }
+
+    /// Attach a fault-injection plan (builder style).
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Consult the fault plan (if any) at the top of a backend call.
+    fn fault(&mut self, op: FaultOp, prompt: Option<&[i32]>) -> Result<()> {
+        match &mut self.faults {
+            Some(plan) => plan.fire(op, prompt),
+            None => Ok(()),
+        }
     }
 
     /// Dense-path mock: cache bound = max_seq, no compression.
@@ -185,6 +353,7 @@ impl RolloutBackend for MockModelBackend {
     }
 
     fn prefill(&mut self, ids: &[i32], plens: &[i32]) -> Result<Vec<f32>> {
+        self.fault(FaultOp::Prefill, None)?;
         if ids.len() != self.slots * self.prompt_len || plens.len() != self.slots {
             bail!("prefill: bad batch shape");
         }
@@ -201,6 +370,7 @@ impl RolloutBackend for MockModelBackend {
     }
 
     fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
+        self.fault(FaultOp::PrefillSlot, Some(prompt))?;
         if slot >= self.slots {
             bail!("prefill_slot: slot {slot} out of range");
         }
@@ -212,6 +382,7 @@ impl RolloutBackend for MockModelBackend {
     }
 
     fn prepare_prefill(&mut self, prompt: &[i32]) -> Result<Self::Prepared> {
+        self.fault(FaultOp::PreparePrefill, Some(prompt))?;
         if prompt.is_empty() || prompt.len() > self.prompt_len {
             bail!("prepare_prefill: prompt length {} out of range", prompt.len());
         }
@@ -219,6 +390,7 @@ impl RolloutBackend for MockModelBackend {
     }
 
     fn apply_prefill(&mut self, slot: usize, prepared: Self::Prepared) -> Result<Vec<f32>> {
+        self.fault(FaultOp::ApplyPrefill, None)?;
         if slot >= self.slots {
             bail!("apply_prefill: slot {slot} out of range");
         }
@@ -228,6 +400,7 @@ impl RolloutBackend for MockModelBackend {
     }
 
     fn decode(&mut self, lens: &[i32], pos: &[i32], tokens: &[i32]) -> Result<Vec<f32>> {
+        self.fault(FaultOp::Decode, None)?;
         if lens.len() != self.slots || pos.len() != self.slots || tokens.len() != self.slots {
             bail!("decode: bad control vector length");
         }
@@ -255,6 +428,7 @@ impl RolloutBackend for MockModelBackend {
     }
 
     fn compress(&mut self, do_mask: &[f32]) -> Result<()> {
+        self.fault(FaultOp::Compress, None)?;
         if !self.sparse {
             bail!("compress called on a dense mock");
         }
@@ -375,6 +549,80 @@ mod tests {
         // after compaction to budget 6 the write goes through again
         m.decode(&[6], &[9], &[9]).unwrap();
         assert_eq!(m.oob_writes, 1);
+    }
+
+    #[test]
+    fn fault_plan_scripted_calls_fire_exactly_and_replay_on_clones() {
+        let plan = FaultPlan::new()
+            .scripted(FaultOp::Decode, 1, FaultKind::Err)
+            .scripted(FaultOp::Decode, 2, FaultKind::Err);
+        let mut m = MockModelBackend::dense(1, 4, 32, 32).with_faults(plan);
+        let twin = m.clone();
+        m.prefill(&[1, 3, 4, 5], &[4]).unwrap();
+        assert!(m.decode(&[4], &[4], &[9]).is_ok(), "call 0 is clean");
+        let e = m.decode(&[5], &[5], &[9]).unwrap_err();
+        assert!(e.to_string().contains("injected fault: decode call 1"), "{e}");
+        let e = m.decode(&[5], &[5], &[9]).unwrap_err();
+        assert!(e.to_string().contains("injected fault: decode call 2"), "{e}");
+        // the failed calls had no side effects: the retry (call 3) extends
+        // the cache exactly as call 1 would have
+        assert!(m.decode(&[5], &[5], &[9]).is_ok());
+        assert_eq!(m.faults.as_ref().unwrap().injected_errs, 2);
+        assert_eq!(m.faults.as_ref().unwrap().calls(FaultOp::Decode), 4);
+        // a clone replays the identical schedule from its own counters
+        let mut t = twin;
+        t.prefill(&[1, 3, 4, 5], &[4]).unwrap();
+        assert!(t.decode(&[4], &[4], &[9]).is_ok());
+        assert!(t.decode(&[5], &[5], &[9]).is_err());
+    }
+
+    #[test]
+    fn fault_plan_prompt_keyed_faults_follow_the_task() {
+        let plan = FaultPlan::new().scripted_prompt(vec![1, 7, 8, 9], FaultKind::Err);
+        let mut m = MockModelBackend::dense(3, 6, 32, 32).with_faults(plan);
+        // every placement of the doomed prompt fails; other prompts pass
+        assert!(m.prefill_slot(0, &[1, 7, 8, 9]).is_err());
+        assert!(m.prefill_slot(2, &[1, 7, 8, 9]).is_err());
+        assert!(m.prefill_slot(0, &[1, 7, 8]).is_ok());
+        assert!(m.prepare_prefill(&[1, 7, 8, 9]).is_err());
+        assert!(m.prepare_prefill(&[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn fault_plan_probabilistic_stream_is_seed_deterministic() {
+        let mk = || {
+            MockModelBackend::dense(1, 4, 32, 32)
+                .with_faults(FaultPlan::new().with_error_rate(0.35, 0xFA_0175))
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let run = |m: &mut MockModelBackend| -> Vec<bool> {
+            m.prefill(&[1, 3, 4, 5], &[4]).unwrap_or_default();
+            (0..32).map(|_| m.decode(&[4], &[4], &[9]).is_ok()).collect()
+        };
+        let (ra, rb) = (run(&mut a), run(&mut b));
+        assert_eq!(ra, rb, "same seed must replay the same fault stream");
+        assert!(ra.iter().any(|ok| !ok), "rate 0.35 over 32 calls should fire");
+        assert!(ra.iter().any(|ok| *ok), "rate 0.35 should not fire always");
+        assert_eq!(
+            a.faults.as_ref().unwrap().injected_errs,
+            b.faults.as_ref().unwrap().injected_errs
+        );
+    }
+
+    #[test]
+    fn fault_plan_panic_carries_distinctive_payload() {
+        let plan = FaultPlan::new().scripted(FaultOp::PrefillSlot, 0, FaultKind::Panic);
+        let mut m = MockModelBackend::dense(1, 4, 32, 32).with_faults(plan);
+        let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = m.prefill_slot(0, &[1, 2]);
+        }))
+        .unwrap_err();
+        let msg = p
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("injected fault: prefill_slot call 0 panicked"), "{msg}");
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //!   (all token-identical per task)
 //! * `backend`    — the model surface the engines drive (artifacts or mock)
 //! * `mock`       — deterministic pure-Rust backend for the equivalence
-//!   test harness and engine benches
+//!   test harness, the engine benches, and the chaos suite (seeded
+//!   backend fault injection)
 //! * `fleet`      — the replica tier: N full engine instances (scheduler
 //!   + private KV wall + lane pool each) under a global load-modeled
 //!   router with cross-replica work stealing
@@ -42,6 +43,6 @@ pub use eval::{
 pub use fleet::{rollout_fleet, route_tasks, FleetReport, Replica};
 pub use kv_manager::KvMemoryManager;
 pub use metrics::Metrics;
-pub use mock::MockModelBackend;
+pub use mock::{FaultKind, FaultOp, FaultPlan, MockModelBackend};
 pub use scheduler::{AdmissionQueue, Scheduler};
 pub use trainer::{StepReport, Trainer};

@@ -178,6 +178,12 @@ pub struct SchedulerStats {
     pub grow_stalls: usize,
     /// Sequences preempted and requeued to resolve a grow stall.
     pub preemptions: usize,
+    /// Sequences released by task quarantine (`fault-policy = quarantine`
+    /// after a backend call exhausted its retry budget). Conservation over
+    /// a full drain: `seq_admissions == finished + preemptions +
+    /// quarantined` — a quarantined task's pages and slot return to the
+    /// pool exactly like a preemption's, it just never reruns.
+    pub quarantined: usize,
     /// Admissions that attached to an already-resident shared prompt
     /// prefix instead of paying for it (prefix sharing).
     pub shared_admissions: usize,
@@ -604,6 +610,21 @@ impl Scheduler {
     pub fn preempt(&mut self, kv: &mut KvMemoryManager, seq: SeqId) -> anyhow::Result<usize> {
         let tokens = self.release_seq(kv, seq)?;
         self.stats.preemptions += 1;
+        Ok(tokens)
+    }
+
+    /// Release a live sequence because its task was quarantined
+    /// (`fault-policy = quarantine`): pages and slot return to the pool
+    /// like a preemption, but the task is recorded failed instead of
+    /// requeued, and the `quarantined` counter keeps the conservation
+    /// ledger balanced (see [`SchedulerStats::quarantined`]).
+    pub fn quarantine_seq(
+        &mut self,
+        kv: &mut KvMemoryManager,
+        seq: SeqId,
+    ) -> anyhow::Result<usize> {
+        let tokens = self.release_seq(kv, seq)?;
+        self.stats.quarantined += 1;
         Ok(tokens)
     }
 

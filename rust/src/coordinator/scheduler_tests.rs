@@ -210,6 +210,29 @@ fn double_release_is_an_error() {
 }
 
 #[test]
+fn quarantine_seq_releases_and_counts() {
+    let mut kv = KvMemoryManager::new(100);
+    let mut s = mk(4, 40);
+    assert!(s.try_admit(&mut kv, 1, 10));
+    assert!(s.try_admit(&mut kv, 2, 10));
+    // quarantine returns the reservation exactly like release_seq and
+    // additionally counts toward the conservation ledger's quarantined arm
+    assert_eq!(s.quarantine_seq(&mut kv, 1).unwrap(), 40);
+    assert_eq!(s.stats.quarantined, 1);
+    assert_eq!(kv.reserved(), 40);
+    assert_eq!(s.stats.seq_releases, 1, "a quarantine IS a release");
+    assert_eq!(s.stats.live_seqs(), 1);
+    // quarantining an already-released id fails like a double release
+    assert!(s.quarantine_seq(&mut kv, 1).is_err());
+    assert_eq!(s.stats.quarantined, 1, "a failed quarantine must not count");
+    s.release_seq(&mut kv, 2).unwrap();
+    assert_eq!(kv.reserved(), 0);
+    assert_eq!(s.stats.seq_admissions, s.stats.seq_releases);
+    assert_eq!(s.stats.quarantined, 1, "plain releases never count");
+    kv.check_invariants().unwrap();
+}
+
+#[test]
 fn prop_seq_admission_never_deadlocks_or_leaks() {
     // Random interleavings of per-sequence admit/grow/release/preempt
     // under BOTH admission policies: admission must succeed iff the

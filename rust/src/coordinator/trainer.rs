@@ -17,7 +17,7 @@
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::{EngineKind, ExperimentConfig};
 use crate::data::task::{looks_repetitive, Task};
@@ -101,6 +101,57 @@ pub struct StepReport {
     /// Modeled end-to-end makespan (serial sum, or the lane max when
     /// pipelined).
     pub modeled_makespan_ticks: u64,
+    /// Backend calls that failed and were retried under the bounded-retry
+    /// budget (`fault-retries`; 0 fault-free).
+    pub retries: usize,
+    /// Tasks requeued from a dead replica to a survivor by fleet failover
+    /// (`fault-policy = quarantine` with `replicas > 1`; 0 otherwise).
+    pub requeues: usize,
+    /// Tasks quarantined after exhausting their retry budget
+    /// (`fault-policy = quarantine`; 0 otherwise — abort errors instead).
+    pub failed_tasks: usize,
+    /// Replica threads declared dead and failed over this step.
+    pub replica_deaths: usize,
+    /// GRPO groups dropped by partial-batch delivery because a member was
+    /// quarantined (the surviving groups trained normally).
+    pub dropped_groups: usize,
+}
+
+/// Partial-batch delivery: drop every whole GRPO group containing a
+/// quarantined member, keeping the survivors (in their original group
+/// order, with their original flat `task_idx` — reward lookup stays
+/// `task_indices[task_idx / g]`). A failed rollout carries no trustworthy
+/// sampler log-probs, and group advantages (Eq. 10) need the full G-member
+/// baseline, so the whole group goes. Returns the survivors plus the
+/// dropped-group count; errors when nothing survives (a zero-sequence
+/// train step has no gradient — surface the fault instead of dividing by
+/// zero downstream).
+fn drop_failed_groups(seqs: Vec<GenSeq>, g: usize) -> Result<(Vec<GenSeq>, usize)> {
+    if !seqs.iter().any(|s| s.failed) {
+        return Ok((seqs, 0));
+    }
+    let groups = seqs.len() / g.max(1);
+    let mut out: Vec<GenSeq> = Vec::with_capacity(seqs.len());
+    let mut buf: Vec<GenSeq> = Vec::with_capacity(g);
+    let mut dropped = 0usize;
+    for s in seqs {
+        buf.push(s);
+        if buf.len() == g {
+            if buf.iter().any(|s| s.failed) {
+                dropped += 1;
+                buf.clear();
+            } else {
+                out.append(&mut buf);
+            }
+        }
+    }
+    if out.is_empty() {
+        bail!(
+            "all {groups} rollout groups had a quarantined member — nothing \
+             left to train on (raise fault-retries or fix the backend)"
+        );
+    }
+    Ok((out, dropped))
 }
 
 /// The trainer: owns learner state, data order, metrics, and the wall.
@@ -171,7 +222,9 @@ impl<'a> Trainer<'a> {
         let rollout = RolloutEngine::new(self.engine, self.cfg.mode, self.cfg.sampling)
             .with_steal(self.cfg.steal)
             .with_prefill(self.cfg.prefill)
-            .with_sharing(self.cfg.memory.prefix_sharing);
+            .with_sharing(self.cfg.memory.prefix_sharing)
+            .with_fault_retries(self.cfg.fault_retries)
+            .with_fault_policy(self.cfg.fault_policy);
         let seed = self.rng.next_u64();
         let params = ParamsLit::new(&self.state.params);
         // flat sequence ids: seq s belongs to prompt s / g
@@ -296,6 +349,10 @@ impl<'a> Trainer<'a> {
         let t0 = Instant::now();
         let (seqs, rstats) = self.rollout_batch(&task_indices)?;
         let rollout_secs = t0.elapsed().as_secs_f64();
+
+        // ---- partial-batch delivery: quarantined tasks (fault-policy =
+        // quarantine) poison their whole GRPO group; train on the rest ----
+        let (seqs, dropped_groups) = drop_failed_groups(seqs, g)?;
 
         // ---- dense scoring (π_old) --------------------------------------
         let scored = self.score_sequences(&seqs)?;
@@ -443,6 +500,11 @@ impl<'a> Trainer<'a> {
             prefill_blocked_ticks: rstats.prefill_blocked_ticks,
             sched_stall_ticks: rstats.sched_stall_ticks,
             modeled_makespan_ticks: rstats.modeled_makespan_ticks,
+            retries: rstats.retries,
+            requeues: rstats.requeues,
+            failed_tasks: rstats.failed_tasks,
+            replica_deaths: rstats.replica_deaths,
+            dropped_groups,
         };
 
         self.metrics.begin_step();
@@ -492,6 +554,13 @@ impl<'a> Trainer<'a> {
         self.metrics.push("prefill_blocked_ticks", report.prefill_blocked_ticks as f64);
         self.metrics.push("sched_stall_ticks", report.sched_stall_ticks as f64);
         self.metrics.push("modeled_makespan_ticks", report.modeled_makespan_ticks as f64);
+        // fault-tolerance counters (all zero fault-free and under the
+        // default abort policy — the CSV schema is stable either way)
+        self.metrics.push("retries", report.retries as f64);
+        self.metrics.push("requeues", report.requeues as f64);
+        self.metrics.push("failed_tasks", report.failed_tasks as f64);
+        self.metrics.push("replica_deaths", report.replica_deaths as f64);
+        self.metrics.push("dropped_groups", report.dropped_groups as f64);
         self.metrics.push("informative_groups", summary.informative_groups);
         Ok(report)
     }
@@ -525,5 +594,61 @@ impl<'a> Trainer<'a> {
             }
         }
         Ok(losses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::KvAccounting;
+
+    fn seq(task_idx: usize, failed: bool) -> GenSeq {
+        GenSeq {
+            task_idx,
+            prompt_ids: vec![1, 2],
+            response_ids: vec![3],
+            sampler_logp: vec![-0.5],
+            finished: true,
+            accounting: KvAccounting::new(),
+            failed,
+        }
+    }
+
+    #[test]
+    fn drop_failed_groups_is_identity_fault_free() {
+        let seqs: Vec<GenSeq> = (0..6).map(|i| seq(i, false)).collect();
+        let (kept, dropped) = drop_failed_groups(seqs, 3).unwrap();
+        assert_eq!(dropped, 0);
+        assert_eq!(kept.len(), 6);
+        // original order and ids untouched
+        assert!(kept.iter().enumerate().all(|(i, s)| s.task_idx == i));
+    }
+
+    #[test]
+    fn drop_failed_groups_drops_exactly_the_poisoned_groups() {
+        // groups of 2 over 8 seqs; fail one member of group 1 and both of
+        // group 3 — groups 0 and 2 must survive intact, in order, with
+        // their ORIGINAL flat task ids (reward lookup is task_idx / g)
+        let mut seqs: Vec<GenSeq> = (0..8).map(|i| seq(i, false)).collect();
+        seqs[3].failed = true; // group 1
+        seqs[6].failed = true; // group 3
+        seqs[7].failed = true; // group 3
+        let (kept, dropped) = drop_failed_groups(seqs, 2).unwrap();
+        assert_eq!(dropped, 2);
+        let ids: Vec<usize> = kept.iter().map(|s| s.task_idx).collect();
+        assert_eq!(ids, vec![0, 1, 4, 5]);
+        assert!(kept.iter().all(|s| !s.failed));
+    }
+
+    #[test]
+    fn drop_failed_groups_errors_when_nothing_survives() {
+        // one failed member per group — every group is poisoned, and a
+        // zero-sequence train step must be a loud error, not a panic in
+        // the advantage math
+        let mut seqs: Vec<GenSeq> = (0..4).map(|i| seq(i, false)).collect();
+        seqs[0].failed = true;
+        seqs[2].failed = true;
+        let err = drop_failed_groups(seqs, 2).unwrap_err().to_string();
+        assert!(err.contains("all 2 rollout groups"), "got: {err}");
     }
 }

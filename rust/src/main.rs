@@ -14,7 +14,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use sparse_rl::config::{ExperimentConfig, RolloutMode};
 use sparse_rl::coordinator::engine::RolloutEngine;
@@ -44,6 +44,8 @@ fn usage() -> ! {
             [--replicas N] [--replica-steal on|off]
             [--admission worst-case|paged] [--kv-admit-headroom-pages N]
             [--kv-page-tokens N] [--global-kv-tokens N]
+            [--fault-retries N] [--fault-policy abort|quarantine]
+            (unrecognized --flags are an error listing the valid set)
   rollout:  --checkpoint ckpt --mode <...> [--n 4] [--temperature T]"
     );
     std::process::exit(2);
@@ -140,7 +142,47 @@ fn cmd_train(args: &CliArgs) -> Result<()> {
     Ok(())
 }
 
+/// Options the eval subcommand accepts beyond `ExperimentConfig`'s keys.
+const EVAL_EXTRA_KEYS: &[&str] = &["model", "checkpoint", "limit", "bench", "config"];
+
+/// Hard-reject unrecognized `--flag`s. `apply_cli` deliberately ignores
+/// keys it doesn't know (every subcommand carries extras like `--bench`),
+/// which silently turned typos into misconfigured runs — `--replica 4`
+/// evaluated on one replica. Each subcommand whitelists its extras and
+/// anything else errors, listing the valid flags.
+fn reject_unknown_options(args: &CliArgs, extras: &[&str]) -> Result<()> {
+    let unknown: Vec<String> = args
+        .options
+        .keys()
+        .chain(args.flags.iter())
+        .filter(|k| {
+            !ExperimentConfig::is_known_key(k) && !extras.contains(&k.as_str())
+        })
+        .map(|k| format!("--{k}"))
+        .collect();
+    if unknown.is_empty() {
+        return Ok(());
+    }
+    let mut valid: Vec<&str> = ExperimentConfig::KNOWN_KEYS
+        .iter()
+        .copied()
+        .chain(extras.iter().copied())
+        .collect();
+    valid.sort_unstable();
+    bail!(
+        "unknown option{} {} — valid flags: {}",
+        if unknown.len() == 1 { "" } else { "s" },
+        unknown.join(", "),
+        valid
+            .iter()
+            .map(|k| format!("--{k}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    )
+}
+
 fn cmd_eval(args: &CliArgs) -> Result<()> {
+    reject_unknown_options(args, EVAL_EXTRA_KEYS)?;
     let engine = load_engine(args)?;
     let state = load_state(&engine, args)?;
     let mode = RolloutMode::parse(&args.get("mode", "dense".to_string()))?;
@@ -165,6 +207,8 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
         "kv-admit-headroom-pages",
         "kv-page-tokens",
         "global-kv-tokens",
+        "fault-retries",
+        "fault-policy",
     ] {
         if let Some(v) = args.opt(key) {
             cfg.apply(key, v).with_context(|| format!("--{key}"))?;
@@ -179,6 +223,8 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
         prefill: cfg.prefill,
         replicas: cfg.replicas,
         replica_steal: cfg.replica_steal,
+        fault_retries: cfg.fault_retries,
+        fault_policy: cfg.fault_policy,
     };
     match args.opt("bench") {
         Some(name) => {
@@ -278,4 +324,39 @@ fn cmd_latency(args: &CliArgs) -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> CliArgs {
+        CliArgs::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn eval_accepts_known_keys_and_extras() {
+        let a = parse(
+            "eval --model tiny --checkpoint c.srl --limit 10 --bench gsm \
+             --engine continuous --replicas 2 --fault-retries 3 \
+             --fault-policy quarantine --seed 7",
+        );
+        assert!(reject_unknown_options(&a, EVAL_EXTRA_KEYS).is_ok());
+    }
+
+    #[test]
+    fn eval_rejects_typod_flags_loudly() {
+        // the classic silent misconfiguration: --replica (no s) used to be
+        // dropped and the eval ran on 1 replica
+        let a = parse("eval --model tiny --replica 4");
+        let err = reject_unknown_options(&a, EVAL_EXTRA_KEYS)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--replica"), "got: {err}");
+        assert!(err.contains("--replicas"), "must list the valid set: {err}");
+        assert!(err.contains("--fault-policy"), "must list the valid set: {err}");
+        // boolean-style flags are checked too
+        let b = parse("eval --model tiny --vrebose");
+        assert!(reject_unknown_options(&b, EVAL_EXTRA_KEYS).is_err());
+    }
 }

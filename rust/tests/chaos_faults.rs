@@ -1,0 +1,606 @@
+//! Chaos harness: seeded backend fault injection against every engine
+//! shell and the replica fleet.
+//!
+//! Runs entirely on the deterministic mock backend with a scripted
+//! `FaultPlan` (`coordinator::mock`), so every fault fires at an exact,
+//! reproducible call — no timing, no flakes. The contract under test is
+//! the fault-tolerance tentpole:
+//!
+//! 1. **Retry absorption** — scripted `Err` bursts no longer than the
+//!    `fault-retries` budget are invisible: tokens, logp bits, and
+//!    accounting are identical to the fault-free run, and the
+//!    `RolloutStats::retries` counter matches the plan's injected-error
+//!    count exactly (backends fail BEFORE side effects, so a retried
+//!    call is the identical call).
+//! 2. **Quarantine conservation** — past the budget under
+//!    `fault-policy = quarantine`, exactly the poisoned work is marked
+//!    failed (one task on the per-task prefill path, the live wave on
+//!    batch paths, the chunk on the static path), every other task is
+//!    token-identical to the fault-free run, and the pool balances:
+//!    admissions == releases, a quarantine IS a release, the wall
+//!    drains to zero.
+//! 3. **Abort is loud** — the default policy surfaces the injected
+//!    error verbatim; injected panics cross thread joins as readable
+//!    payloads ("injected fault: ... panicked"), never as deadlocks.
+//! 4. **Replica failover** — a dead replica's work requeues to
+//!    survivors and reruns token-identically (per-task RNG), requeue /
+//!    death counters match the plan exactly, survivor pools conserve,
+//!    and an all-dead fleet errors cleanly instead of hanging.
+
+use sparse_rl::config::{EngineKind, FaultPolicy, PrefillMode, RolloutMode, SamplingConfig};
+use sparse_rl::coordinator::{
+    rollout_fleet, CostModel, FaultKind, FaultOp, FaultPlan, GenSeq, KvMemoryManager,
+    MockModelBackend, Replica, RolloutPolicy, RolloutStats, Scheduler,
+};
+use sparse_rl::data::task::Task;
+use sparse_rl::util::propcheck::{self, PropConfig};
+use sparse_rl::util::rng::Rng;
+
+const PROMPT_LEN: usize = 24;
+const MAX_SEQ: usize = 40;
+const SEED: u64 = 0xC4A0_5EED;
+
+fn dense_backend(slots: usize) -> MockModelBackend {
+    let mut b = MockModelBackend::dense(slots, PROMPT_LEN, MAX_SEQ, 32);
+    b.eos_pull = 0.08;
+    b
+}
+
+fn mk_sched(slots: usize) -> Scheduler {
+    Scheduler::worst_case(slots, MAX_SEQ)
+}
+
+fn mk_kv(slots: usize) -> KvMemoryManager {
+    KvMemoryManager::new(slots * MAX_SEQ)
+}
+
+fn mk_policy() -> RolloutPolicy {
+    RolloutPolicy::new(
+        RolloutMode::Dense,
+        SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 12 },
+    )
+}
+
+/// Tasks with pairwise-distinct prompts (the first token is pinned to
+/// the task index) so a prompt-keyed fault targets exactly one task.
+fn gen_tasks(n: usize, seed: u64) -> Vec<Task> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let mut t = Task::gen(&mut rng, 1, PROMPT_LEN);
+            t.prompt_ids[0] = i as i32;
+            t
+        })
+        .collect()
+}
+
+fn run_static(
+    policy: &RolloutPolicy,
+    backend: &mut MockModelBackend,
+    tasks: &[Task],
+    sched: &mut Scheduler,
+    kv: &mut KvMemoryManager,
+) -> Result<(Vec<GenSeq>, RolloutStats), String> {
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    policy.rollout_static_queue(backend, &flat, SEED, sched, kv, 0).map_err(|e| format!("{e:#}"))
+}
+
+fn run_continuous(
+    policy: &RolloutPolicy,
+    backend: &mut MockModelBackend,
+    tasks: &[Task],
+    sched: &mut Scheduler,
+    kv: &mut KvMemoryManager,
+) -> Result<(Vec<GenSeq>, RolloutStats), String> {
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    policy.rollout_continuous(backend, &flat, SEED, sched, kv, 0).map_err(|e| format!("{e:#}"))
+}
+
+fn run_pipelined(
+    policy: &RolloutPolicy,
+    proto: &MockModelBackend,
+    tasks: &[Task],
+    sched: &mut Scheduler,
+    kv: &mut KvMemoryManager,
+    workers: usize,
+) -> Result<(Vec<GenSeq>, RolloutStats), String> {
+    let mut backends: Vec<MockModelBackend> = (0..workers).map(|_| proto.clone()).collect();
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    if policy.prefill.is_async() {
+        let mut exec = proto.clone();
+        policy
+            .rollout_pipelined(&mut backends, Some(&mut exec), &flat, SEED, sched, kv, 0)
+            .map_err(|e| format!("{e:#}"))
+    } else {
+        policy
+            .rollout_pipelined(&mut backends, None, &flat, SEED, sched, kv, 0)
+            .map_err(|e| format!("{e:#}"))
+    }
+}
+
+/// Same comparator the equivalence harness uses: tokens, logp bits,
+/// finished flag, and the full KV accounting must agree.
+fn seqs_equal(a: &GenSeq, b: &GenSeq) -> Result<(), String> {
+    if a.task_idx != b.task_idx {
+        return Err(format!("task_idx {} != {}", a.task_idx, b.task_idx));
+    }
+    if a.response_ids != b.response_ids {
+        return Err(format!(
+            "task {}: response_ids diverge\n  a: {:?}\n  b: {:?}",
+            a.task_idx, a.response_ids, b.response_ids
+        ));
+    }
+    if a.sampler_logp != b.sampler_logp {
+        return Err(format!("task {}: sampler_logp not bit-identical", a.task_idx));
+    }
+    if a.finished != b.finished {
+        return Err(format!("task {}: finished {} != {}", a.task_idx, a.finished, b.finished));
+    }
+    let (x, y) = (&a.accounting, &b.accounting);
+    if x.integral_actual != y.integral_actual
+        || x.integral_dense != y.integral_dense
+        || x.peak_actual != y.peak_actual
+        || x.peak_dense != y.peak_dense
+        || x.steps != y.steps
+        || x.compressions != y.compressions
+        || x.evicted != y.evicted
+    {
+        return Err(format!("task {}: accounting diverges: {x:?} vs {y:?}", a.task_idx));
+    }
+    Ok(())
+}
+
+/// Fault-free continuous reference for a task set (the equivalence
+/// suite already proves all engines/fleets agree with this).
+fn reference_seqs(tasks: &[Task], slots: usize) -> Vec<GenSeq> {
+    let policy = mk_policy();
+    let (mut sched, mut kv) = (mk_sched(slots), mk_kv(slots));
+    let (seqs, _) =
+        run_continuous(&policy, &mut dense_backend(slots), tasks, &mut sched, &mut kv)
+            .expect("fault-free reference run must succeed");
+    seqs
+}
+
+// ---------------------------------------------------------------------
+// 1. retry absorption
+// ---------------------------------------------------------------------
+
+#[test]
+fn retry_budget_absorbs_error_bursts_token_identically() {
+    let slots = 2;
+    let tasks = gen_tasks(6, 0xC0FFEE);
+    let reference = reference_seqs(&tasks, slots);
+    let policy = mk_policy().with_fault_retries(3);
+
+    // A 3-deep decode burst plus single prefill-path errors, all inside
+    // the budget. `with_retries` re-attempts immediately, so a burst at
+    // calls {2,3,4} is absorbed by one retry loop: 3 retries, then the
+    // call at index 5 succeeds.
+    let burst = |plan: FaultPlan| {
+        plan.scripted(FaultOp::Decode, 2, FaultKind::Err)
+            .scripted(FaultOp::Decode, 3, FaultKind::Err)
+            .scripted(FaultOp::Decode, 4, FaultKind::Err)
+    };
+
+    // static: wave prefill (call 0) + the decode burst → exactly 4
+    // injected errors, exactly 4 counted retries
+    let plan = burst(FaultPlan::new().scripted(FaultOp::Prefill, 0, FaultKind::Err));
+    let mut b = dense_backend(slots).with_faults(plan);
+    let (mut sched, mut kv) = (mk_sched(slots), mk_kv(slots));
+    let (seqs, stats) = run_static(&policy, &mut b, &tasks, &mut sched, &mut kv).unwrap();
+    for (a, s) in reference.iter().zip(seqs.iter()) {
+        seqs_equal(a, s).unwrap();
+    }
+    let fired = b.faults.as_ref().unwrap().injected_errs;
+    assert_eq!(fired, 4, "static: plan must fire exactly");
+    assert_eq!(stats.retries as u64, fired, "static: one retry per injected error");
+    assert_eq!(stats.failed_tasks, 0);
+    assert_eq!(kv.reserved(), 0);
+
+    // continuous: additionally poison the first slot-refill (call 0 of
+    // the per-task prefill path) → 5 errors, 5 retries
+    let plan = burst(
+        FaultPlan::new()
+            .scripted(FaultOp::Prefill, 0, FaultKind::Err)
+            .scripted(FaultOp::PrefillSlot, 0, FaultKind::Err),
+    );
+    let mut b = dense_backend(slots).with_faults(plan);
+    let (mut sched, mut kv) = (mk_sched(slots), mk_kv(slots));
+    let (seqs, stats) = run_continuous(&policy, &mut b, &tasks, &mut sched, &mut kv).unwrap();
+    for (a, s) in reference.iter().zip(seqs.iter()) {
+        seqs_equal(a, s).unwrap();
+    }
+    let fired = b.faults.as_ref().unwrap().injected_errs;
+    assert_eq!(fired, 5, "continuous: plan must fire exactly");
+    assert_eq!(stats.retries as u64, fired, "continuous: one retry per injected error");
+    assert_eq!(stats.failed_tasks, 0);
+    assert_eq!(sched.stats.quarantined, 0, "absorbed faults must not quarantine");
+    assert_eq!(kv.reserved(), 0);
+
+    // pipelined: every lane clone carries its own plan copy, so counts
+    // are per-lane — assert absorption (tokens + zero failures), not
+    // exact counters
+    let plan = burst(FaultPlan::new().scripted(FaultOp::PrefillSlot, 0, FaultKind::Err));
+    let proto = dense_backend(slots).with_faults(plan);
+    let (mut sched, mut kv) = (mk_sched(slots), mk_kv(slots));
+    let (seqs, stats) = run_pipelined(&policy, &proto, &tasks, &mut sched, &mut kv, 2).unwrap();
+    for (a, s) in reference.iter().zip(seqs.iter()) {
+        seqs_equal(a, s).unwrap();
+    }
+    assert_eq!(stats.failed_tasks, 0);
+    assert_eq!(kv.reserved(), 0);
+}
+
+// ---------------------------------------------------------------------
+// 2. quarantine: exactly the poisoned work fails, pools conserve
+// ---------------------------------------------------------------------
+
+#[test]
+fn prompt_keyed_fault_quarantines_exactly_one_task() {
+    let slots = 2;
+    let tasks = gen_tasks(6, 0xBEEF);
+    let reference = reference_seqs(&tasks, slots);
+    // with 2 slots the wave admits tasks {0,1}; task 4 arrives by
+    // refill, whose prefill carries the prompt the fault is keyed on —
+    // and a prompt-keyed fault fires on EVERY attempt, so no retry
+    // budget can absorb it
+    let doomed = 4;
+    let plan = FaultPlan::new().scripted_prompt(tasks[doomed].prompt_ids.clone(), FaultKind::Err);
+    let policy =
+        mk_policy().with_fault_retries(2).with_fault_policy(FaultPolicy::Quarantine);
+
+    let mut b = dense_backend(slots).with_faults(plan);
+    let (mut sched, mut kv) = (mk_sched(slots), mk_kv(slots));
+    let (seqs, stats) = run_continuous(&policy, &mut b, &tasks, &mut sched, &mut kv).unwrap();
+
+    assert_eq!(seqs.len(), tasks.len(), "quarantine must still deliver every position");
+    assert!(seqs[doomed].failed, "the poisoned task must be marked failed");
+    assert!(seqs[doomed].response_ids.is_empty(), "fault hit its prefill: no tokens");
+    for (i, s) in seqs.iter().enumerate() {
+        if i != doomed {
+            assert!(!s.failed, "task {i} must survive");
+            seqs_equal(&reference[i], s).unwrap();
+        }
+    }
+    assert_eq!(stats.failed_tasks, 1);
+    assert_eq!(stats.retries, 2, "the full budget was spent on the doomed task");
+    assert_eq!(b.faults.as_ref().unwrap().injected_errs, 3, "1 attempt + 2 retries");
+
+    // conservation: the quarantine is a release, not a leak
+    assert_eq!(sched.stats.quarantined, 1);
+    assert_eq!(sched.stats.seq_admissions, sched.stats.seq_releases);
+    assert_eq!(sched.stats.live_seqs(), 0);
+    assert_eq!(kv.reserved(), 0);
+    kv.check_invariants().unwrap();
+}
+
+#[test]
+fn decode_fault_past_budget_quarantines_the_live_wave_and_continues() {
+    let slots = 2;
+    let tasks = gen_tasks(6, 0xD0_0D1E);
+    let reference = reference_seqs(&tasks, slots);
+    // decode is a batch op: a failure past the budget takes down every
+    // sequence live at that step, then the engine refills and goes on
+    let plan = FaultPlan::new().scripted(FaultOp::Decode, 1, FaultKind::Err);
+    let policy = mk_policy().with_fault_policy(FaultPolicy::Quarantine);
+
+    let mut b = dense_backend(slots).with_faults(plan);
+    let (mut sched, mut kv) = (mk_sched(slots), mk_kv(slots));
+    let (seqs, stats) = run_continuous(&policy, &mut b, &tasks, &mut sched, &mut kv).unwrap();
+
+    assert_eq!(seqs.len(), tasks.len());
+    let failed: Vec<usize> =
+        seqs.iter().enumerate().filter(|(_, s)| s.failed).map(|(i, _)| i).collect();
+    assert!(!failed.is_empty(), "the live wave must have been quarantined");
+    assert!(failed.len() <= slots, "at most one wave of casualties");
+    assert_eq!(stats.failed_tasks, failed.len());
+    assert_eq!(sched.stats.quarantined, failed.len());
+    for (i, s) in seqs.iter().enumerate() {
+        if !failed.contains(&i) {
+            seqs_equal(&reference[i], s).unwrap();
+        }
+    }
+    assert_eq!(sched.stats.seq_admissions, sched.stats.seq_releases);
+    assert_eq!(sched.stats.live_seqs(), 0);
+    assert_eq!(kv.reserved(), 0);
+    kv.check_invariants().unwrap();
+}
+
+#[test]
+fn static_prefill_fault_quarantines_the_chunk_and_continues() {
+    let slots = 2;
+    let tasks = gen_tasks(6, 0x57A71C);
+    let reference = reference_seqs(&tasks, slots);
+    // the static engine's failure domain is the chunk: its wave prefill
+    // (call 0) dying past the budget fails tasks {0,1}, later chunks run
+    let plan = FaultPlan::new().scripted(FaultOp::Prefill, 0, FaultKind::Err);
+    let policy = mk_policy().with_fault_policy(FaultPolicy::Quarantine);
+
+    let mut b = dense_backend(slots).with_faults(plan);
+    let (mut sched, mut kv) = (mk_sched(slots), mk_kv(slots));
+    let (seqs, stats) = run_static(&policy, &mut b, &tasks, &mut sched, &mut kv).unwrap();
+
+    assert_eq!(seqs.len(), tasks.len());
+    for (i, s) in seqs.iter().enumerate() {
+        if i < slots {
+            assert!(s.failed, "chunk-1 task {i} must be quarantined");
+        } else {
+            assert!(!s.failed, "task {i} is in a later chunk");
+            seqs_equal(&reference[i], s).unwrap();
+        }
+    }
+    assert_eq!(stats.failed_tasks, slots);
+    assert_eq!(kv.reserved(), 0, "the poisoned chunk's reservation must drain");
+    kv.check_invariants().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// 3. abort stays loud (and is the default)
+// ---------------------------------------------------------------------
+
+#[test]
+fn abort_policy_surfaces_the_injected_error() {
+    let slots = 2;
+    let tasks = gen_tasks(6, 0xAB_0127);
+    let plan = FaultPlan::new().scripted(FaultOp::Decode, 1, FaultKind::Err);
+    let policy = mk_policy(); // default: retries 0, abort
+
+    let mut b = dense_backend(slots).with_faults(plan);
+    let (mut sched, mut kv) = (mk_sched(slots), mk_kv(slots));
+    let err = run_continuous(&policy, &mut b, &tasks, &mut sched, &mut kv).unwrap_err();
+    assert!(err.contains("injected fault: decode call 1 failed"), "got: {err}");
+}
+
+#[test]
+fn pipelined_worker_panic_surfaces_payload_without_deadlock() {
+    let slots = 2;
+    let tasks = gen_tasks(6, 0x9A71C5);
+    let plan = FaultPlan::new().scripted(FaultOp::Decode, 3, FaultKind::Panic);
+    let proto = dense_backend(slots).with_faults(plan);
+    let policy = mk_policy();
+
+    let (mut sched, mut kv) = (mk_sched(slots), mk_kv(slots));
+    let err = run_pipelined(&policy, &proto, &tasks, &mut sched, &mut kv, 2).unwrap_err();
+    // the join path must fold the panic payload into a readable error
+    // (a poisoned internal lock surfacing as a hang would time out CI)
+    assert!(err.contains("panicked"), "got: {err}");
+    assert!(err.contains("injected fault: decode call 3 panicked"), "got: {err}");
+}
+
+#[test]
+fn prefill_executor_panic_surfaces_payload() {
+    let slots = 2;
+    let tasks = gen_tasks(6, 0xE8EC57);
+    // async prefill: prepare_prefill runs on the dedicated executor
+    // lane; its very first call panicking must come back as an error on
+    // the joining side, not strand parked workers
+    let plan = FaultPlan::new().scripted(FaultOp::PreparePrefill, 0, FaultKind::Panic);
+    let proto = dense_backend(slots).with_faults(plan);
+    let policy = mk_policy().with_prefill(PrefillMode::Async);
+
+    let (mut sched, mut kv) = (mk_sched(slots), mk_kv(slots));
+    let err = run_pipelined(&policy, &proto, &tasks, &mut sched, &mut kv, 2).unwrap_err();
+    assert!(err.contains("panicked"), "got: {err}");
+    assert!(err.contains("injected fault: prepare_prefill call 0 panicked"), "got: {err}");
+}
+
+// ---------------------------------------------------------------------
+// 4. replica failover
+// ---------------------------------------------------------------------
+
+fn mk_fleet(
+    replicas: usize,
+    slots: usize,
+    lanes: usize,
+    costs: CostModel,
+    poison: impl Fn(usize) -> Option<FaultPlan>,
+) -> Vec<Replica<MockModelBackend>> {
+    (0..replicas)
+        .map(|r| {
+            let backends = (0..lanes)
+                .map(|_| {
+                    let b = dense_backend(slots).with_costs(costs);
+                    match poison(r) {
+                        Some(plan) => b.with_faults(plan),
+                        None => b,
+                    }
+                })
+                .collect();
+            Replica::new(mk_sched(slots), mk_kv(slots), backends)
+        })
+        .collect()
+}
+
+/// The plan that kills a replica outright: its wave prefill — the first
+/// backend call every engine shell makes — panics past any budget.
+fn lethal_plan() -> FaultPlan {
+    FaultPlan::new().scripted(FaultOp::Prefill, 0, FaultKind::Panic)
+}
+
+#[test]
+fn fleet_failover_requeues_dead_replica_work_token_identically() {
+    let (slots, replicas, dead) = (2, 4, 1usize);
+    let tasks = gen_tasks(10, 0xFA11);
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    let costs = CostModel::representative();
+    let policy = mk_policy().with_fault_policy(FaultPolicy::Quarantine);
+
+    for engine in [EngineKind::Static, EngineKind::Continuous, EngineKind::Pipelined] {
+        let lanes = if engine == EngineKind::Pipelined { 2 } else { 1 };
+        let grid = format!("engine={}", engine.label());
+
+        // fault-free fleet reference (steal off: fully deterministic)
+        let mut reps = mk_fleet(replicas, slots, lanes, costs, |_| None);
+        let (ref_seqs, _, _) =
+            rollout_fleet(&policy, engine, &mut reps, &flat, SEED, false).unwrap();
+
+        let mut reps = mk_fleet(replicas, slots, lanes, costs, |r| {
+            (r == dead).then(lethal_plan)
+        });
+        let (seqs, stats, report) =
+            rollout_fleet(&policy, engine, &mut reps, &flat, SEED, false)
+                .unwrap_or_else(|e| panic!("{grid}: failover must succeed: {e:#}"));
+
+        // the death and every requeue are plan-exact: with stealing off
+        // the doomed replica takes its whole queue as its first (fatal)
+        // batch, so requeues == tasks the router sent it
+        let routed_to_dead = report.routed.iter().filter(|&&r| r == dead).count();
+        assert!(routed_to_dead > 0, "{grid}: router starved the test");
+        assert_eq!(report.replica_deaths, 1, "{grid}");
+        assert_eq!(stats.replica_deaths, 1, "{grid}");
+        assert_eq!(report.requeues, routed_to_dead, "{grid}");
+        assert_eq!(stats.requeues, routed_to_dead, "{grid}");
+        assert_eq!(stats.failed_tasks, 0, "{grid}: requeued tasks must succeed");
+
+        // requeued reruns are token-identical: per-task RNG keys on the
+        // (seed, task index) pair, not on placement
+        assert_eq!(seqs.len(), tasks.len(), "{grid}");
+        for (a, s) in ref_seqs.iter().zip(seqs.iter()) {
+            seqs_equal(a, s).unwrap_or_else(|e| panic!("{grid}: {e}"));
+        }
+
+        // survivor pools conserve; the dead pool is deliberately
+        // stranded (its wall may hold the fatal batch's reservations)
+        for (r, rep) in reps.iter().enumerate() {
+            if r == dead {
+                continue;
+            }
+            assert_eq!(rep.kv.reserved(), 0, "{grid}: replica {r} leaked KV");
+            assert_eq!(rep.sched.stats.live_seqs(), 0, "{grid}: replica {r} not drained");
+            assert_eq!(
+                rep.sched.stats.seq_admissions, rep.sched.stats.seq_releases,
+                "{grid}: replica {r} pool out of balance"
+            );
+            rep.kv.check_invariants().unwrap();
+        }
+    }
+}
+
+#[test]
+fn fleet_with_no_survivors_errors_cleanly() {
+    let slots = 2;
+    let tasks = gen_tasks(6, 0xDEAD);
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    let policy = mk_policy().with_fault_policy(FaultPolicy::Quarantine);
+
+    let mut reps = mk_fleet(2, slots, 1, CostModel::representative(), |_| Some(lethal_plan()));
+    let err = rollout_fleet(&policy, EngineKind::Continuous, &mut reps, &flat, SEED, false)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no survivors"), "got: {err}");
+    assert!(err.contains("injected fault"), "the payload must survive the joins: {err}");
+}
+
+#[test]
+fn fleet_failover_with_stealing_still_delivers_every_task() {
+    // stealing + failover mutate the same queues; this is the race
+    // smoke: one lethal replica, stealing ON — the step must complete
+    // with every task delivered and token-identical (batch composition
+    // is timing-dependent, so counters beyond the death are not exact)
+    let (slots, replicas, dead) = (2, 4, 2usize);
+    let tasks = gen_tasks(12, 0x57EA1);
+    let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+    let costs = CostModel::representative();
+    let policy = mk_policy().with_fault_policy(FaultPolicy::Quarantine);
+
+    let mut reps = mk_fleet(replicas, slots, 1, costs, |_| None);
+    let (reference, _, _) =
+        rollout_fleet(&policy, EngineKind::Continuous, &mut reps, &flat, SEED, false).unwrap();
+
+    let mut reps = mk_fleet(replicas, slots, 1, costs, |r| (r == dead).then(lethal_plan));
+    let (seqs, stats, _) =
+        rollout_fleet(&policy, EngineKind::Continuous, &mut reps, &flat, SEED, true).unwrap();
+    assert_eq!(seqs.len(), tasks.len());
+    assert_eq!(stats.failed_tasks, 0);
+    // the lethal replica dies at most once, and only if the router or a
+    // steal actually handed it work before the fleet drained
+    assert!(stats.replica_deaths <= 1);
+    for (a, s) in reference.iter().zip(seqs.iter()) {
+        seqs_equal(a, s).unwrap();
+    }
+}
+
+#[test]
+fn prop_fleet_chaos_death_plus_scattered_errors_is_absorbed() {
+    // The acceptance scenario: a 4-replica fleet where one replica dies
+    // on its first batch and every survivor sees scattered injected
+    // errors well inside the retry budget. Whatever the engine shell,
+    // geometry, or workload: the step completes (no hang), tokens are
+    // identical to the fault-free fleet, the death/requeue counters
+    // match the plan exactly, and survivor pools balance their books.
+    propcheck::check(
+        "fleet-chaos-failover",
+        PropConfig { cases: 24, seed: 0xC4_A051, max_size: 40 },
+        |rng, size| {
+            let slots = 1 + rng.below(3);
+            let n = 4 + rng.below(4 + size / 4);
+            let seed = rng.next_u64();
+            let tasks = gen_tasks(n, seed);
+            let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
+            let engine = *rng.choose(&[
+                EngineKind::Static,
+                EngineKind::Continuous,
+                EngineKind::Pipelined,
+            ]);
+            let lanes = if engine == EngineKind::Pipelined { 1 + rng.below(2) } else { 1 };
+            let dead = rng.below(4);
+            let chaos_seed = rng.next_u64();
+            let costs = CostModel::representative();
+            let policy =
+                mk_policy().with_fault_retries(4).with_fault_policy(FaultPolicy::Quarantine);
+            let grid = format!("engine={} slots={slots} n={n} dead={dead}", engine.label());
+
+            let mut reps = mk_fleet(4, slots, lanes, costs, |_| None);
+            let (ref_seqs, _, _) = rollout_fleet(&policy, engine, &mut reps, &flat, seed, false)
+                .map_err(|e| format!("{grid}: fault-free run failed: {e:#}"))?;
+
+            let mut reps = mk_fleet(4, slots, lanes, costs, |r| {
+                Some(if r == dead {
+                    lethal_plan()
+                } else {
+                    // ~2% of survivor calls fail; 4 retries absorb any
+                    // realistic run of them (p^5 per site)
+                    FaultPlan::new().with_error_rate(0.02, chaos_seed ^ r as u64)
+                })
+            });
+            let (seqs, stats, report) = rollout_fleet(&policy, engine, &mut reps, &flat, seed, false)
+                .map_err(|e| format!("{grid}: chaos run failed: {e:#}"))?;
+
+            let routed_to_dead = report.routed.iter().filter(|&&r| r == dead).count();
+            if routed_to_dead == 0 {
+                return Err(format!("{grid}: router starved the dead replica (n >= 4?)"));
+            }
+            if report.replica_deaths != 1 || stats.replica_deaths != 1 {
+                return Err(format!("{grid}: deaths {} != plan's 1", report.replica_deaths));
+            }
+            if report.requeues != routed_to_dead {
+                return Err(format!(
+                    "{grid}: requeues {} != {} routed to the dead replica",
+                    report.requeues, routed_to_dead
+                ));
+            }
+            if stats.failed_tasks != 0 {
+                return Err(format!("{grid}: {} tasks failed past the budget", stats.failed_tasks));
+            }
+            if seqs.len() != tasks.len() {
+                return Err(format!("{grid}: {} of {} tasks delivered", seqs.len(), tasks.len()));
+            }
+            for (a, s) in ref_seqs.iter().zip(seqs.iter()) {
+                seqs_equal(a, s).map_err(|e| format!("{grid}: {e}"))?;
+            }
+            for (r, rep) in reps.iter().enumerate() {
+                if r == dead {
+                    continue;
+                }
+                if rep.kv.reserved() != 0 || rep.sched.stats.live_seqs() != 0 {
+                    return Err(format!("{grid}: survivor {r} leaked"));
+                }
+                if rep.sched.stats.seq_admissions != rep.sched.stats.seq_releases {
+                    return Err(format!("{grid}: survivor {r} pool out of balance"));
+                }
+                rep.kv.check_invariants().map_err(|e| format!("{grid}: {e:#}"))?;
+            }
+            Ok(())
+        },
+    );
+}
