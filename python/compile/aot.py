@@ -171,6 +171,39 @@ def build(cfg: ModelConfig, shapes: RolloutShapes, out_dir: str,
             cache_outs + ["logp_last"],
         )
 
+        # Fused partial-range (chunked) prefill: one chunk of a resumable
+        # prompt per device call, driven by the token-budgeted step packer
+        # (`prefill-chunk-tokens`). Same feature-gating story as the slot
+        # entry: the Rust engine dispatches on this entry's presence and
+        # degrades to defer-then-monolithic for older artifact sets.
+        def prefill_chunk_fn(params, kv, sc, sw, birth, ids, lens, start,
+                             limit, slot_mask, C=C):
+            p = model.ParamLayout(cfg).unflatten(params)
+            return model.prefill_chunk(
+                cfg, p, kv, sc, sw, birth, ids, lens, start, limit,
+                slot_mask, capacity=C
+            )
+
+        b.add(
+            f"prefill_chunk_{variant}",
+            prefill_chunk_fn,
+            [
+                _spec(F32, N),
+                _spec(F32, L, 2, R, H, C, Dh),
+                _spec(F32, L, R, H, C),
+                _spec(F32, L, R, H, C),
+                _spec(I32, L, R, H, C),
+                _spec(I32, R, P),
+                _spec(I32, R),
+                _spec(I32, R),
+                _spec(I32, R),
+                _spec(F32, R),
+            ],
+            ["params", "kv", "stats_cum", "stats_win", "birth", "ids", "lens",
+             "start", "limit", "slot_mask"],
+            cache_outs + ["logp_last"],
+        )
+
     for method in methods:
         b.add(
             f"compress_{method}",

@@ -342,6 +342,59 @@ def prefill_slot(cfg: ModelConfig, p, kv, stats_cum, stats_win, birth, ids,
     return kv, stats_cum, stats_win, birth, logp_last
 
 
+def prefill_chunk(cfg: ModelConfig, p, kv, stats_cum, stats_win, birth, ids,
+                  lens, start, limit, slot_mask, capacity: int):
+    """Fused PARTIAL-RANGE slot prefill: one chunk of a resumable prompt.
+
+    The token-budgeted step packer splits a long prompt's prefill across
+    several device steps; each step writes tokens `[start, limit)` of the
+    prompt into the masked slot's cache planes, preserving the planes of
+    earlier chunks, so a long prompt never head-of-line-blocks a step.
+
+    Correctness rests on the causal-prefix property: a prompt position's
+    K/V depends only on positions <= itself, so running the batched
+    prefill over the VISIBLE prefix (`eff = min(lens, limit)` tokens) and
+    keeping only the fresh range reproduces the monolithic prefill's
+    planes for those positions bit-for-bit. The attention-mass stats are
+    NOT prefix-local (a slot's colsum sums over later query rows), so
+    they are rewritten over the whole prefix every chunk — intermediate
+    values are provisional and never read; the final chunk (limit = lens)
+    leaves them exactly monolithic.
+
+    Args:
+      kv/stats_cum/stats_win/birth: the LIVE cache state.
+      ids:   [B, P] scratch prompt batch — the full prompt in the target
+        slot's row (every chunk resends it; only the visible prefix is
+        attended). Other rows need only be valid.
+      lens:  [B] scratch prompt lengths (full prompt length per row).
+      start: [B] i32 first fresh position per row (tokens already written;
+        0 begins a fresh slot and clears stale planes past the prompt).
+      limit: [B] i32 one past the last fresh position per row. Filler
+        rows use the degenerate range [0, 1).
+      slot_mask: [B] f32, 1.0 for the slot being chunk-prefilled.
+      capacity: cache capacity C (must match the live cache).
+
+    Returns:
+      (kv', stats_cum', stats_win', birth', logp_last [B, V]) — the
+      masked slot's logp_last row is the log-probs after its LAST VISIBLE
+      token (position limit-1): meaningful — and bit-identical to
+      `prefill_slot`'s — exactly when limit = lens (the final chunk).
+    """
+    eff = jnp.minimum(lens, limit)
+    fkv, fsc, fsw, fb, logp_last = prefill(cfg, p, ids, eff, capacity=capacity)
+    pos_c = jnp.arange(capacity, dtype=jnp.int32)
+    fresh = pos_c[None, :] >= start[:, None]  # [B, C]
+    sel_kv = (slot_mask[None, None, :, None, None, None] > 0) & \
+        fresh[None, None, :, None, :, None]
+    sel4 = slot_mask[None, :, None, None] > 0
+    sel_birth = sel4 & fresh[None, :, None, :]
+    kv = jnp.where(sel_kv, fkv, kv)
+    stats_cum = jnp.where(sel4, fsc, stats_cum)
+    stats_win = jnp.where(sel4, fsw, stats_win)
+    birth = jnp.where(sel_birth, fb, birth)
+    return kv, stats_cum, stats_win, birth, logp_last
+
+
 def compress_step(
     kv, stats_cum, stats_win, birth, do, method: str, shapes: RolloutShapes
 ):

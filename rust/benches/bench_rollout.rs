@@ -20,6 +20,11 @@
 //! wide first and runs the giant last. Asserts shortest-first's modeled
 //! makespan is STRICTLY below fifo's with token-identical outputs.
 //!
+//! Part 1i: monolithic vs chunked prefill (`prefill-chunk-tokens`) on a
+//! long-prompt continuous workload: token-budgeted device steps must
+//! strictly lower both the modeled makespan and the per-step tick bound
+//! (`max_step_ticks`) while staying token-identical.
+//!
 //! Part 2 (needs `make artifacts`): every artifact on the rollout/training
 //! path — decode step latency (dense vs sparse — the memory-wall compute
 //! story), compression overhead per method, prefill, dense scoring, and
@@ -653,6 +658,7 @@ fn prefill_mode_comparison() -> Json {
         decode_ticks: 80,
         compress_ticks: 5,
         attach_ticks: 4,
+        chunk_token_ticks: 1,
     };
     let mode = RolloutMode::Dense; // no compression traffic: isolate prefill
     let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 64 };
@@ -1221,6 +1227,143 @@ fn fault_tolerance_comparison() -> Json {
     Json::Obj(out)
 }
 
+/// Chunked prefill (part 1i): the token-budgeted step packer claim, on
+/// the virtual clock. A long-prompt continuous workload (every prompt 32
+/// tokens — wider than anything the decode batch absorbs for free) runs
+/// twice: monolithic (`prefill-chunk-tokens = 0`, every refill charges
+/// the full `slot_prefill_ticks` into one device step) and chunked
+/// (budget = 28 tokens/step, refills ride the decode batch in
+/// `chunk_token_ticks`-per-token slices capped by the step's leftover
+/// budget). Chunking must strictly lower BOTH the modeled makespan (a
+/// chunk has no per-call fixed cost, so 32 chunk-tokens < one 40-tick
+/// monolithic prefill) AND the per-step tick bound `max_step_ticks` (no
+/// refill step ever exceeds decode + leftover-budget work — the
+/// head-of-line-blocking fix), with token-identical outputs. Single-lane
+/// continuous on the virtual clock: both rows fully deterministic.
+fn chunked_prefill_comparison() -> Json {
+    let (slots, prompt_len, max_seq) = (8usize, 32usize, 96usize);
+    let (n_tasks, seed, chunk_budget) = (64usize, 7u64, 28usize);
+    let costs = CostModel::representative();
+    let mode = RolloutMode::Dense; // no compression traffic: isolate prefill packing
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 48 };
+    let reserve = max_seq;
+    // slot-limited wall: isolate the step-packing story
+    let kv_cap = reserve * slots * 4;
+    let mut rng = Rng::new(1);
+    // uniform LONG prompts: every refill is a worst-case monolithic stall
+    let tasks: Vec<Task> = (0..n_tasks).map(|_| sized_task(&mut rng, prompt_len)).collect();
+    let backend = || {
+        let mut b = MockModelBackend::dense(slots, prompt_len, max_seq, 32);
+        b.eos_pull = 0.12; // long-tailed response lengths
+        b.with_costs(costs)
+    };
+
+    println!(
+        "== chunked-prefill comparison: monolithic vs token-budgeted steps (continuous, dense, \
+         R={slots}, {n_tasks} tasks, prompt={prompt_len} tok, budget={chunk_budget} tok/step, \
+         slot-prefill={}t chunk-token={}t) ==",
+        costs.slot_prefill_ticks, costs.chunk_token_ticks
+    );
+    println!(
+        "{:<12} {:>12} {:>10} {:>10} {:>13} {:>8} {:>8}",
+        "prefill", "decode-steps", "makespan", "blocked", "max-step-tick", "chunks", "refills"
+    );
+
+    let base = RolloutPolicy::new(mode, sampling);
+    let mut out = BTreeMap::new();
+    let mut seqs_by_row = Vec::new();
+    let mut stats_by_row = Vec::new();
+    for (label, chunk) in [("monolithic", 0usize), ("chunked", chunk_budget)] {
+        let policy = base.with_prefill_chunk_tokens(chunk);
+        let (seqs, st) =
+            run_continuous_mock(&policy, &mut backend(), &tasks, seed, reserve, kv_cap);
+        println!(
+            "{:<12} {:>12} {:>10} {:>10} {:>13} {:>8} {:>8}",
+            label,
+            st.decode_steps,
+            st.modeled_makespan_ticks,
+            st.prefill_blocked_ticks,
+            st.max_step_ticks,
+            st.prefill_chunks,
+            st.refills,
+        );
+        let mut row = BTreeMap::new();
+        row.insert("decode_steps".into(), Json::Num(st.decode_steps as f64));
+        row.insert("makespan_ticks".into(), Json::Num(st.modeled_makespan_ticks as f64));
+        row.insert(
+            "prefill_blocked_ticks".into(),
+            Json::Num(st.prefill_blocked_ticks as f64),
+        );
+        row.insert("max_step_ticks".into(), Json::Num(st.max_step_ticks as f64));
+        row.insert("prefill_chunks".into(), Json::Num(st.prefill_chunks as f64));
+        row.insert("refills".into(), Json::Num(st.refills as f64));
+        // single-lane continuous on the virtual clock: fully deterministic
+        row.insert("deterministic".into(), Json::Bool(true));
+        out.insert(label.to_string(), Json::Obj(row));
+        seqs_by_row.push(seqs);
+        stats_by_row.push(st);
+    }
+
+    // chunking is a pure scheduling choice: identical tokens per task
+    let agree = seqs_by_row[0]
+        .iter()
+        .zip(seqs_by_row[1].iter())
+        .all(|(a, b)| a.response_ids == b.response_ids && a.sampler_logp == b.sampler_logp);
+    assert!(agree, "chunked prefill changed tokens (BUG)");
+    let (mono, ch) = (&stats_by_row[0], &stats_by_row[1]);
+    assert!(mono.refills > 0, "workload never recycled a slot");
+    assert_eq!(mono.prefill_chunks, 0, "monolithic run recorded chunks");
+    assert_eq!(ch.slot_prefills, 0, "chunked run issued monolithic slot prefills");
+    assert!(
+        ch.prefill_chunks >= ch.refills,
+        "{} refills but only {} chunks",
+        ch.refills,
+        ch.prefill_chunks
+    );
+    assert!(
+        ch.modeled_makespan_ticks < mono.modeled_makespan_ticks,
+        "chunked modeled makespan {} !< monolithic {} (per-token chunk work must \
+         undercut the fixed slot-prefill charge)",
+        ch.modeled_makespan_ticks,
+        mono.modeled_makespan_ticks
+    );
+    assert!(
+        ch.max_step_ticks < mono.max_step_ticks,
+        "chunked max step {} !< monolithic {} (the packer must remove the \
+         head-of-line prefill stall)",
+        ch.max_step_ticks,
+        mono.max_step_ticks
+    );
+    // the packer's hard per-step bound: decode + at most the leftover
+    // token budget of one chunk (floored at one token for progress)
+    assert!(
+        ch.max_step_ticks
+            <= costs.decode_ticks + chunk_budget as u64 * costs.chunk_token_ticks,
+        "chunked max step {} exceeds the packed budget bound",
+        ch.max_step_ticks
+    );
+    println!(
+        "  -> chunking saves {:.1}% modeled makespan and caps steps at {} ticks (vs {}), \
+         token-identical: yes\n",
+        100.0 * (1.0 - ch.modeled_makespan_ticks as f64
+            / mono.modeled_makespan_ticks.max(1) as f64),
+        ch.max_step_ticks,
+        mono.max_step_ticks,
+    );
+    out.insert("tasks".into(), Json::Num(n_tasks as f64));
+    out.insert("prompt_tokens".into(), Json::Num(prompt_len as f64));
+    out.insert("chunk_budget_tokens".into(), Json::Num(chunk_budget as f64));
+    out.insert(
+        "chunk_token_ticks".into(),
+        Json::Num(costs.chunk_token_ticks as f64),
+    );
+    out.insert(
+        "slot_prefill_ticks".into(),
+        Json::Num(costs.slot_prefill_ticks as f64),
+    );
+    Json::Obj(out)
+}
+
 fn main() {
     let args = CliArgs::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
 
@@ -1233,7 +1376,8 @@ fn main() {
     // head-of-line workload; Part 1e: sync vs async slot prefill; Part
     // 1f: prefix sharing off vs group on a GRPO-grouped workload; Part
     // 1g: replica fleet 1/2/4 on the straggler-skewed workload; Part
-    // 1h: fault-tolerance overhead (retry backoff + quarantine). All
+    // 1h: fault-tolerance overhead (retry backoff + quarantine); Part
+    // 1i: chunked vs monolithic prefill on the long-prompt workload. All
     // feed BENCH_rollout.json so CI records the perf trajectory (and the
     // bench guard compares deterministic makespans against it).
     let paged = paged_comparison();
@@ -1243,6 +1387,7 @@ fn main() {
     let sharing = prefix_sharing_comparison();
     let fleet = fleet_comparison();
     let faults = fault_tolerance_comparison();
+    let chunked = chunked_prefill_comparison();
     {
         let mut doc = BTreeMap::new();
         doc.insert("bench".to_string(), Json::Str("rollout".into()));
@@ -1253,6 +1398,7 @@ fn main() {
         doc.insert("prefix_sharing".to_string(), sharing);
         doc.insert("fleet".to_string(), fleet);
         doc.insert("fault_tolerance".to_string(), faults);
+        doc.insert("chunked_prefill".to_string(), chunked);
         let path = "BENCH_rollout.json";
         match std::fs::write(path, sparse_rl::util::json::to_string(&Json::Obj(doc))) {
             Ok(()) => println!("wrote {path}"),

@@ -458,6 +458,13 @@ pub struct ExperimentConfig {
     /// charged to the calling lane) before the fault policy applies.
     /// Default 0 = no retries, the seed behavior.
     pub fault_retries: usize,
+    /// Chunked prefill: token budget per device step for the continuous
+    /// and pipelined engines. 0 (default) keeps monolithic slot prefills
+    /// — the seed behavior; N > 0 packs each engine step with the decode
+    /// batch plus one ≤ N-token chunk of the cheapest pending prompt,
+    /// bounding per-step latency. Scheduling-only: tokens are identical
+    /// either way.
+    pub prefill_chunk_tokens: usize,
     /// What happens when a backend call exhausts its retries: `abort`
     /// (seed behavior — the error kills the batch) or `quarantine` (the
     /// failed task is released and recorded; the batch survives).
@@ -486,6 +493,7 @@ impl ExperimentConfig {
         "replicas",
         "replica-steal",
         "prefill",
+        "prefill-chunk-tokens",
         "fault-retries",
         "fault-policy",
         "temperature",
@@ -531,6 +539,7 @@ impl ExperimentConfig {
             replicas: 1,
             replica_steal: true,
             prefill: PrefillMode::default(),
+            prefill_chunk_tokens: 0,
             fault_retries: 0,
             fault_policy: FaultPolicy::default(),
             sampling: SamplingConfig::default(),
@@ -578,6 +587,10 @@ impl ExperimentConfig {
                 }
             }
             "prefill" => self.prefill = PrefillMode::parse(value)?,
+            "prefill-chunk-tokens" => {
+                self.prefill_chunk_tokens =
+                    value.parse().context("prefill-chunk-tokens")?
+            }
             "fault-retries" => {
                 self.fault_retries = value.parse().context("fault-retries")?
             }
@@ -841,6 +854,19 @@ mod tests {
         assert!(c.apply("fault-policy", "retry-forever").is_err());
         assert_eq!(FaultPolicy::Quarantine.label(), "quarantine");
         assert_eq!(FaultPolicy::Abort.label(), "abort");
+    }
+
+    #[test]
+    fn prefill_chunk_tokens_knob() {
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        // default 0 = monolithic slot prefills, the seed behavior exactly
+        assert_eq!(c.prefill_chunk_tokens, 0);
+        c.apply("prefill-chunk-tokens", "24").unwrap();
+        assert_eq!(c.prefill_chunk_tokens, 24);
+        c.apply("prefill-chunk-tokens", "0").unwrap();
+        assert_eq!(c.prefill_chunk_tokens, 0);
+        assert!(c.apply("prefill-chunk-tokens", "lots").is_err());
+        assert!(ExperimentConfig::is_known_key("prefill-chunk-tokens"));
     }
 
     #[test]

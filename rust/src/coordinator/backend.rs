@@ -66,6 +66,13 @@ pub struct CostModel {
     /// prefill-once-attach-G path). A slot write, not a model run, so it
     /// is far cheaper than `slot_prefill_ticks`.
     pub attach_ticks: u64,
+    /// Per-TOKEN cost of a chunked prefill call (`prefill_chunk`): a
+    /// chunk of `n` prompt tokens charges `n * chunk_token_ticks`. The
+    /// cost is token-proportional because a chunk rides an already-issued
+    /// device step (no per-call fixed overhead), which is exactly the win
+    /// `prefill-chunk-tokens` buys over the monolithic
+    /// `slot_prefill_ticks` charge.
+    pub chunk_token_ticks: u64,
 }
 
 impl CostModel {
@@ -80,6 +87,10 @@ impl CostModel {
             decode_ticks: 10,
             compress_ticks: 5,
             attach_ticks: 4,
+            // slot_prefill_ticks ≈ call overhead + the full prompt's
+            // marginal token cost; a fused chunk pays only the marginal
+            // part, so per-token it is far below 40 / typical prompt len
+            chunk_token_ticks: 1,
         }
     }
 
@@ -129,6 +140,23 @@ pub trait RolloutBackend {
     /// Prefill one slot in place without disturbing the others (slot
     /// recycling). Returns that slot's last-prompt-token log-probs `[V]`.
     fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>>;
+
+    /// Chunked slot prefill: write the partial prompt range
+    /// `[start, start + chunk)` into `slot`'s cache planes, resuming
+    /// where the previous chunk stopped (`start` must equal the tokens
+    /// already written; `start == 0` begins a fresh slot). Returns
+    /// `Some(logits [V])` — bit-identical to what `prefill_slot(slot,
+    /// prompt)` would have produced — exactly when this chunk completes
+    /// the prompt, `None` for an intermediate chunk. The token-budgeted
+    /// step packer (`prefill-chunk-tokens`) drives this so a long prompt
+    /// never head-of-line-blocks a whole device step.
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        start: usize,
+        chunk: usize,
+    ) -> Result<Option<Vec<f32>>>;
 
     /// Expensive, cache-independent half of a slot prefill: run the
     /// prompt through the model without touching any live rollout state.
@@ -232,6 +260,21 @@ impl RolloutBackend for EngineBackend<'_> {
             .as_mut()
             .context("prefill_slot before the initial batched prefill")?;
         self.engine.prefill_slot(self.params, cache, slot, prompt)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        start: usize,
+        chunk: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        let cache = self
+            .cache
+            .as_mut()
+            .context("prefill_chunk before the initial batched prefill")?;
+        self.engine
+            .prefill_chunk(self.params, cache, slot, prompt, start, chunk)
     }
 
     fn prepare_prefill(&mut self, prompt: &[i32]) -> Result<Self::Prepared> {

@@ -16,8 +16,8 @@ use super::super::backend::RolloutBackend;
 use super::super::kv_manager::KvMemoryManager;
 use super::super::scheduler::{AdmissionQueue, Scheduler};
 use super::core::{
-    admission_costs, admit_next, snap_residency, DecodeCore, GenSeq, Geometry, PrefillCache,
-    PrefillWave,
+    admission_costs, admit_next, prefill_chunk_step, snap_residency, ChunkInProgress,
+    DecodeCore, GenSeq, Geometry, PrefillCache, PrefillWave,
 };
 use super::stats::RolloutStats;
 use super::RolloutPolicy;
@@ -123,11 +123,24 @@ impl RolloutPolicy {
             }
         }
 
+        // ---- chunked-prefill bookkeeping (prefill-chunk-tokens > 0): at
+        // most one prompt is mid-chunk at a time on this serial lane; its
+        // partial KV lives in `chunk.slot`, so the task is committed to
+        // that slot until the final chunk joins it into the decode batch.
+        let mut chunk: Option<ChunkInProgress> = None;
+        // per-step latency high-water: ticks charged between consecutive
+        // loop iterations (one virtual-clock engine step). Initialized
+        // AFTER the wave so the one-off batched prefill is excluded.
+        let mut tick_mark = stats.decode_busy_ticks + stats.prefill_blocked_ticks;
+
         loop {
+            let t = stats.decode_busy_ticks + stats.prefill_blocked_ticks;
+            stats.max_step_ticks = stats.max_step_ticks.max(t - tick_mark);
+            tick_mark = t;
             // fully drained (or the whole initial wave quarantined):
             // nothing live and nothing pending — `logp` may be empty on
             // the quarantined path, so check before slicing it
-            if core.occupied() == 0 && queue.is_empty() {
+            if core.occupied() == 0 && queue.is_empty() && chunk.is_none() {
                 break;
             }
             // ---- sample one token per occupied slot; retire finishers ---
@@ -143,6 +156,64 @@ impl RolloutPolicy {
             }
 
             // ---- slot recycling: refill freed slots from the queue ------
+            if self.prefill_chunk_tokens > 0 {
+                // token-budgeted step packing: each engine step carries the
+                // decode batch plus at most ONE chunk of the scheduler's
+                // cheapest pending prompt, sized to the budget's leftover
+                // (floored at 1 so a saturated batch still progresses).
+                // Only when the final chunk lands does the task join the
+                // decode batch — token-identically, since the completed
+                // cache and logits row match a monolithic `prefill_slot`
+                // bit-for-bit and per-token sampling is task-keyed.
+                if chunk.is_none() {
+                    if let Some(slot) = core.free_slot() {
+                        if let Some(pos) =
+                            admit_next(sched, kv, &mut queue, tasks, seq_id_base)
+                        {
+                            chunk = Some(ChunkInProgress { pos, slot, offset: 0 });
+                            snap_residency(kv, &mut stats);
+                        }
+                    }
+                }
+                if let Some(c) = chunk.as_mut() {
+                    let (idx, task) = tasks[c.pos];
+                    match prefill_chunk_step(
+                        b,
+                        &geom,
+                        c,
+                        &task.prompt_ids,
+                        self.prefill_chunk_tokens,
+                        core.occupied(),
+                        self.fault_retries,
+                        &mut stats,
+                    ) {
+                        Ok((Some(row), _)) => {
+                            // final chunk: the slot's cache now equals a
+                            // monolithic prefill — join the decode batch
+                            stats.refills += 1;
+                            let (pos, slot) = (c.pos, c.slot);
+                            chunk = None;
+                            if let Some(done) =
+                                core.join(self, slot, pos, idx, &task.prompt_ids, &row, seed)
+                            {
+                                // degenerate single-token sequence
+                                sched.release_seq(kv, seq_id_base + done.pos as u64)?;
+                                results[done.pos] = Some(done.gen);
+                            }
+                        }
+                        Ok((None, _)) => {} // mid-prompt: resume next step
+                        Err(e) if self.fault_policy.is_quarantine() => {
+                            let _ = e;
+                            sched.quarantine_seq(kv, seq_id_base + c.pos as u64)?;
+                            stats.failed_tasks += 1;
+                            results[c.pos] =
+                                Some(GenSeq::failed_seq(idx, task.prompt_ids.clone()));
+                            chunk = None;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+            } else {
             for slot in 0..geom.slots {
                 if core.slots[slot].is_some() {
                     continue;
@@ -191,9 +262,16 @@ impl RolloutPolicy {
                     break;
                 }
             }
+            }
 
             // ---- drained? -----------------------------------------------
             if core.occupied() == 0 {
+                if chunk.is_some() {
+                    // the in-flight chunk is the only live work: keep
+                    // advancing it (it charges ticks every pass, so the
+                    // virtual clock moves and this cannot spin forever)
+                    continue;
+                }
                 if queue.is_empty() {
                     break;
                 }
@@ -250,6 +328,10 @@ impl RolloutPolicy {
                 Err(e) => return Err(e),
             };
         }
+
+        // fold the final iteration's charges into the per-step high-water
+        let t = stats.decode_busy_ticks + stats.prefill_blocked_ticks;
+        stats.max_step_ticks = stats.max_step_ticks.max(t - tick_mark);
 
         // serial engine: makespan is the sum of everything the lane did
         stats.modeled_makespan_ticks =

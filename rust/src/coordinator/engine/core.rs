@@ -820,6 +820,63 @@ pub(crate) fn prefill_single_row<B: RolloutBackend>(
     Ok(all[slot * geom.vocab..(slot + 1) * geom.vocab].to_vec())
 }
 
+/// Bookkeeping for a prompt mid-way through chunked prefill: which task it
+/// is, which slot owns its partially written cache, and how many prompt
+/// tokens earlier chunks already wrote. The next chunk MUST resume at
+/// `offset` on the same backend (the partial KV lives in that backend's
+/// slot), so engines keep this lane-local: pending refills that have not
+/// started chunking remain stealable, but a chunk in progress is pinned to
+/// the lane that started it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct ChunkInProgress {
+    /// Position in the pending task list (== results index).
+    pub pos: usize,
+    /// Slot whose KV planes hold the partial prefix.
+    pub slot: usize,
+    /// Prompt tokens already written; the next chunk starts here.
+    pub offset: usize,
+}
+
+/// Tokens the next chunk may write under a per-step token budget shared
+/// with the decode batch: the budget's leftover after `occupied` decode
+/// lanes, floored at 1 so a fully occupied batch still makes progress
+/// (without the floor, `occupied >= budget` would starve the chunk
+/// forever and deadlock engines that wait for it), capped at what remains
+/// of the prompt.
+pub(crate) fn packed_chunk_len(budget: usize, occupied: usize, remaining: usize) -> usize {
+    budget.saturating_sub(occupied).max(1).min(remaining)
+}
+
+/// Advance one chunk of `prompt` into its owning slot: size the chunk by
+/// [`packed_chunk_len`], fire the backend's `prefill_chunk` under the
+/// bounded-retry wrapper, charge `chunk_token_ticks` per token into the
+/// prefill bucket, and bump the offset. Returns the slot's logits row
+/// exactly when this chunk completed the prompt (bit-identical to a
+/// monolithic `prefill_slot` by the backend contract) plus the ticks
+/// charged, so the caller can fold them into its step clock.
+pub(crate) fn prefill_chunk_step<B: RolloutBackend>(
+    b: &mut B,
+    geom: &Geometry,
+    c: &mut ChunkInProgress,
+    prompt: &[i32],
+    budget: usize,
+    occupied: usize,
+    retries: usize,
+    stats: &mut RolloutStats,
+) -> Result<(Option<Vec<f32>>, u64)> {
+    let len = packed_chunk_len(budget, occupied, prompt.len() - c.offset);
+    let ticks = geom.costs.chunk_token_ticks * len as u64;
+    let (slot, offset) = (c.slot, c.offset);
+    let row = with_retries(retries, ticks, TickBucket::Prefill, stats, || {
+        b.prefill_chunk(slot, prompt, offset, len)
+    })?;
+    stats.prefill_chunks += 1;
+    stats.prefill_blocked_ticks += ticks;
+    c.offset += len;
+    debug_assert_eq!(row.is_some(), c.offset == prompt.len());
+    Ok((row, ticks))
+}
+
 #[cfg(test)]
 #[path = "core_tests.rs"]
 mod tests;

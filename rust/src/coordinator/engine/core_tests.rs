@@ -87,6 +87,105 @@ use super::*;
     }
 
     #[test]
+    fn packed_chunk_len_never_exceeds_budget_and_floors_at_one() {
+        for budget in 0..12usize {
+            for occupied in 0..12usize {
+                for remaining in 1..20usize {
+                    let len = packed_chunk_len(budget, occupied, remaining);
+                    assert!(len >= 1, "progress floor violated");
+                    assert!(len <= remaining, "chunk past the prompt end");
+                    // the budget bound only binds when leftover >= 1; a
+                    // saturated batch still advances by exactly one token
+                    if budget > occupied {
+                        assert!(len <= budget - occupied, "budget exceeded");
+                    } else {
+                        assert_eq!(len, 1.min(remaining));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_step_respects_budget_and_matches_monolithic() {
+        use crate::coordinator::mock::MockModelBackend;
+        let costs = CostModel::representative();
+        let mut b = MockModelBackend::dense(4, 32, 64, 16).with_costs(costs);
+        let mut mono = b.clone();
+        let geom = Geometry::of(&b);
+        let prompt: Vec<i32> = (0..23).map(|i| 3 + (i * 5) % 11).collect();
+        let (budget, occupied) = (8usize, 3usize);
+        let mut c = ChunkInProgress { pos: 0, slot: 1, offset: 0 };
+        let mut stats = RolloutStats::default();
+        let mut final_row = None;
+        let mut chunks = 0usize;
+        while final_row.is_none() {
+            let before = c.offset;
+            let (row, ticks) =
+                prefill_chunk_step(&mut b, &geom, &mut c, &prompt, budget, occupied, 0, &mut stats)
+                    .unwrap();
+            let len = c.offset - before;
+            assert!(len >= 1 && len <= budget - occupied, "packed len {len} out of bounds");
+            assert_eq!(ticks, costs.chunk_token_ticks * len as u64);
+            chunks += 1;
+            final_row = row;
+        }
+        assert_eq!(c.offset, prompt.len());
+        assert_eq!(chunks, prompt.len().div_ceil(budget - occupied));
+        assert_eq!(stats.prefill_chunks, chunks);
+        assert_eq!(
+            stats.prefill_blocked_ticks,
+            costs.chunk_token_ticks * prompt.len() as u64
+        );
+        // completion row is bit-identical to the monolithic slot prefill
+        let mono_row = mono.prefill_slot(1, &prompt).unwrap();
+        assert_eq!(final_row.unwrap(), mono_row);
+        // a budget covering the whole prompt degenerates to one chunk
+        let mut c1 = ChunkInProgress { pos: 0, slot: 2, offset: 0 };
+        let (row1, _) = prefill_chunk_step(
+            &mut b,
+            &geom,
+            &mut c1,
+            &prompt,
+            prompt.len() + occupied,
+            occupied,
+            0,
+            &mut stats,
+        )
+        .unwrap();
+        assert_eq!(c1.offset, prompt.len());
+        assert_eq!(row1.unwrap(), mono_row);
+    }
+
+    #[test]
+    fn chunk_resumes_at_recorded_offset_across_unrelated_slot_traffic() {
+        use crate::coordinator::mock::MockModelBackend;
+        let mut b =
+            MockModelBackend::dense(4, 32, 64, 16).with_costs(CostModel::representative());
+        let mut mono = b.clone();
+        let geom = Geometry::of(&b);
+        let prompt: Vec<i32> = (0..17).map(|i| 4 + (i * 7) % 9).collect();
+        let other: Vec<i32> = vec![6; 12];
+        let mut c = ChunkInProgress { pos: 3, slot: 0, offset: 0 };
+        let mut stats = RolloutStats::default();
+        let (row, _) =
+            prefill_chunk_step(&mut b, &geom, &mut c, &prompt, 6, 0, 0, &mut stats).unwrap();
+        assert!(row.is_none());
+        assert_eq!(c.offset, 6);
+        // steal/preemption traffic elsewhere: a full prefill into another
+        // slot and a victim eviction must not disturb the partial prefix
+        b.prefill_slot(2, &other).unwrap();
+        // resume exactly at the recorded offset until done
+        let mut done = None;
+        while done.is_none() {
+            let (row, _) =
+                prefill_chunk_step(&mut b, &geom, &mut c, &prompt, 6, 0, 0, &mut stats).unwrap();
+            done = row;
+        }
+        assert_eq!(done.unwrap(), mono.prefill_slot(0, &prompt).unwrap());
+    }
+
+    #[test]
     fn task_rng_is_slot_and_order_independent() {
         // same (seed, task) => same stream; different task => different
         let mut a = task_rng(42, 7);

@@ -91,6 +91,17 @@ pub struct RolloutPolicy {
     /// charges virtual-clock backoff to the calling lane and counts in
     /// `RolloutStats::retries`.
     pub fault_retries: usize,
+    /// Token budget per device step for chunked prefill
+    /// (`prefill-chunk-tokens` config knob, default 0 = monolithic seed
+    /// behavior): with a budget N, the continuous and pipelined shells
+    /// stop issuing whole-prompt slot prefills and instead pack each
+    /// engine step with the decode batch plus one ≤ N-token chunk of the
+    /// scheduler's cheapest pending prompt, bounding per-step latency
+    /// (`RolloutStats::max_step_ticks`). Scheduling-only — the completed
+    /// chunked cache and first-token logits are bit-identical to a
+    /// monolithic prefill, so tokens are budget-invariant. The static
+    /// shell ignores it (no slot refills to chunk).
+    pub prefill_chunk_tokens: usize,
     /// What exhausted retries do (`fault-policy` config knob, default
     /// abort = seed behavior): abort kills the batch with the error;
     /// quarantine releases the failed task (slot, KV pages, scheduler
@@ -108,6 +119,7 @@ impl RolloutPolicy {
             prefill: PrefillMode::Sync,
             sharing: PrefixSharing::Off,
             fault_retries: 0,
+            prefill_chunk_tokens: 0,
             fault_policy: FaultPolicy::Abort,
         }
     }
@@ -137,6 +149,13 @@ impl RolloutPolicy {
         self
     }
 
+    /// Set the chunked-prefill token budget (builder style; see
+    /// `prefill_chunk_tokens`).
+    pub fn with_prefill_chunk_tokens(mut self, tokens: usize) -> Self {
+        self.prefill_chunk_tokens = tokens;
+        self
+    }
+
     /// Select the exhausted-retries policy (builder style; see
     /// `fault_policy`).
     pub fn with_fault_policy(mut self, policy: FaultPolicy) -> Self {
@@ -158,6 +177,9 @@ pub struct RolloutEngine<'a> {
     pub sharing: PrefixSharing,
     /// Bounded retry budget (see `RolloutPolicy::fault_retries`).
     pub fault_retries: usize,
+    /// Chunked-prefill token budget (see
+    /// `RolloutPolicy::prefill_chunk_tokens`).
+    pub prefill_chunk_tokens: usize,
     /// Exhausted-retries policy (see `RolloutPolicy::fault_policy`).
     pub fault_policy: FaultPolicy,
 }
@@ -172,6 +194,7 @@ impl<'a> RolloutEngine<'a> {
             prefill: PrefillMode::Sync,
             sharing: PrefixSharing::Off,
             fault_retries: 0,
+            prefill_chunk_tokens: 0,
             fault_policy: FaultPolicy::Abort,
         }
     }
@@ -200,6 +223,12 @@ impl<'a> RolloutEngine<'a> {
         self
     }
 
+    /// Set the chunked-prefill token budget (builder style).
+    pub fn with_prefill_chunk_tokens(mut self, tokens: usize) -> Self {
+        self.prefill_chunk_tokens = tokens;
+        self
+    }
+
     /// Select the exhausted-retries policy (builder style).
     pub fn with_fault_policy(mut self, policy: FaultPolicy) -> Self {
         self.fault_policy = policy;
@@ -212,6 +241,7 @@ impl<'a> RolloutEngine<'a> {
             .with_prefill(self.prefill)
             .with_sharing(self.sharing)
             .with_fault_retries(self.fault_retries)
+            .with_prefill_chunk_tokens(self.prefill_chunk_tokens)
             .with_fault_policy(self.fault_policy)
     }
 

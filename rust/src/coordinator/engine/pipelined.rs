@@ -48,8 +48,8 @@ use super::super::backend::RolloutBackend;
 use super::super::kv_manager::KvMemoryManager;
 use super::super::scheduler::{AdmissionQueue, Scheduler};
 use super::core::{
-    self, admission_costs, admit_next, prefill_single_row, DecodeCore, GenSeq, Geometry,
-    PrefillCache, PrefillWave,
+    self, admission_costs, admit_next, prefill_chunk_step, prefill_single_row, ChunkInProgress,
+    DecodeCore, GenSeq, Geometry, PrefillCache, PrefillWave,
 };
 use super::stats::RolloutStats;
 use super::RolloutPolicy;
@@ -531,6 +531,15 @@ impl RolloutPolicy {
         let geom = Geometry::of(b);
         let r = geom.slots;
         let asynch = self.prefill.is_async();
+        // chunked prefill (prefill-chunk-tokens > 0): pending refills stay
+        // in the shared registry (and stay stealable), but the device work
+        // happens in token-budgeted chunks on THIS lane's backend — the
+        // partial KV lives in this lane's slot, so an in-progress chunk is
+        // lane-pinned and never enters the steal surface. The async
+        // executor is bypassed (chunks are cache-dependent, so there is no
+        // cache-independent prepare to offload): refills carry
+        // `ready_at = now` and `async_prefills_submitted` stays 0.
+        let chunked = self.prefill_chunk_tokens > 0;
         let lock = || {
             shared
                 .lock()
@@ -636,7 +645,17 @@ impl RolloutPolicy {
             }
         }
 
+        // at most one prompt mid-chunk on this lane (see `chunked` above)
+        let mut chunk: Option<ChunkInProgress> = None;
+        // per-step latency high-water: ticks this lane charges between
+        // consecutive loop iterations. Initialized AFTER the wave so the
+        // one-off batched prefill is excluded.
+        let mut tick_mark = stats.decode_busy_ticks + stats.prefill_blocked_ticks;
+
         loop {
+            let t = stats.decode_busy_ticks + stats.prefill_blocked_ticks;
+            stats.max_step_ticks = stats.max_step_ticks.max(t - tick_mark);
+            tick_mark = t;
             // ---- sample from fresh logits; release finishers ------------
             let mut released = false;
             for slot in 0..r {
@@ -663,8 +682,79 @@ impl RolloutPolicy {
             let mut joins: Vec<PendingRefill> = Vec::new();
             {
                 let mut guard = lock()?;
-                while guard.refills[me].front().is_some_and(|p| p.ready_at <= now) {
-                    joins.push(guard.refills[me].pop_front().expect("checked front"));
+                if chunked {
+                    // one refill leaves the (stealable) registry at a time,
+                    // exactly when this lane starts chunking its prompt —
+                    // from then on the partial KV pins it to this lane
+                    if chunk.is_none()
+                        && guard.refills[me].front().is_some_and(|p| p.ready_at <= now)
+                    {
+                        let p = guard.refills[me].pop_front().expect("checked front");
+                        let slot = core.free_slot().expect(
+                            "a free slot exists per pending refill (registry invariant)",
+                        );
+                        chunk = Some(ChunkInProgress { pos: p.pos, slot, offset: 0 });
+                    }
+                } else {
+                    while guard.refills[me].front().is_some_and(|p| p.ready_at <= now) {
+                        joins.push(guard.refills[me].pop_front().expect("checked front"));
+                    }
+                }
+            }
+            if let Some(c) = chunk.as_mut() {
+                // advance the in-progress chunk by one token-budgeted step;
+                // only the final chunk joins the decode batch (with a cache
+                // and logits row bit-identical to a monolithic prefill)
+                let (idx, task) = tasks[c.pos];
+                match prefill_chunk_step(
+                    b,
+                    &geom,
+                    c,
+                    &task.prompt_ids,
+                    self.prefill_chunk_tokens,
+                    core.occupied(),
+                    self.fault_retries,
+                    &mut stats,
+                ) {
+                    Ok((row, ticks)) => {
+                        now += ticks;
+                        if let Some(row) = row {
+                            stats.refills += 1;
+                            let (pos, slot) = (c.pos, c.slot);
+                            chunk = None;
+                            if let Some(done) =
+                                core.join(self, slot, pos, idx, &task.prompt_ids, &row, seed)
+                            {
+                                // degenerate single-token sequence
+                                let mut guard = lock()?;
+                                let sh = &mut *guard;
+                                sh.sched.release_seq(sh.kv, seq_id_base + done.pos as u64)?;
+                                sh.release_at(now);
+                                sh.results[done.pos] = Some(done.gen);
+                                sh.lane_live[me] = core.occupied();
+                                drop(guard);
+                                cv.notify_all();
+                            } else {
+                                decoded[slot] = false;
+                                lock()?.lane_live[me] = core.occupied();
+                            }
+                        }
+                    }
+                    Err(e) if self.fault_policy.is_quarantine() => {
+                        let _ = e;
+                        let pos = c.pos;
+                        chunk = None;
+                        let mut guard = lock()?;
+                        let sh = &mut *guard;
+                        sh.sched.quarantine_seq(sh.kv, seq_id_base + pos as u64)?;
+                        sh.release_at(now);
+                        sh.results[pos] =
+                            Some(GenSeq::failed_seq(idx, task.prompt_ids.clone()));
+                        drop(guard);
+                        stats.failed_tasks += 1;
+                        cv.notify_all();
+                    }
+                    Err(e) => return Err(e),
                 }
             }
             let mut joined_any = false;
@@ -793,11 +883,20 @@ impl RolloutPolicy {
             {
                 let mut guard = lock()?;
                 let mut submitted = false;
-                while core.occupied() + guard.refills[me].len() < r {
+                // an in-progress chunk owns a slot that neither `occupied`
+                // nor the registry counts yet
+                while core.occupied() + guard.refills[me].len() + (chunk.is_some() as usize) < r
+                {
                     let Some(pos) = guard.admit_next(tasks, seq_id_base) else {
                         break; // queue empty, or wall: retry after releases
                     };
-                    guard.issue_refill(me, pos, now, geom.costs.slot_prefill_ticks, asynch);
+                    guard.issue_refill(
+                        me,
+                        pos,
+                        now,
+                        geom.costs.slot_prefill_ticks,
+                        asynch && !chunked,
+                    );
                     guard.snap_residency(&mut stats);
                     submitted = true;
                 }
@@ -809,6 +908,12 @@ impl RolloutPolicy {
 
             // ---- empty lane: wait, steal, or drain ----------------------
             if core.occupied() == 0 {
+                if chunk.is_some() {
+                    // the in-flight chunk is this lane's only live work:
+                    // keep advancing it (each pass charges ticks, so the
+                    // virtual clock moves and the loop cannot spin)
+                    continue;
+                }
                 let mut guard = lock()?;
                 if let Some(t) = guard.refills[me].front().map(|p| p.ready_at) {
                     // nothing decodable while the lane prefills: the
@@ -837,9 +942,15 @@ impl RolloutPolicy {
                         // honest virtual time: this admission only became
                         // possible when a peer released KV
                         now = now.max(guard.release_floor);
-                        guard.issue_refill(me, pos, now, geom.costs.slot_prefill_ticks, asynch);
+                        guard.issue_refill(
+                            me,
+                            pos,
+                            now,
+                            geom.costs.slot_prefill_ticks,
+                            asynch && !chunked,
+                        );
                         guard.snap_residency(&mut stats);
-                        submitted = asynch;
+                        submitted = asynch && !chunked;
                         break true;
                     }
                     if self.steal {
@@ -984,6 +1095,10 @@ impl RolloutPolicy {
                 decoded[slot] = core.slots[slot].is_some();
             }
         }
+
+        // fold the final iteration's charges into the per-step high-water
+        let t = stats.decode_busy_ticks + stats.prefill_blocked_ticks;
+        stats.max_step_ticks = stats.max_step_ticks.max(t - tick_mark);
 
         // open the executor's shutdown gate (async: it exits once every
         // worker has drained and the request queue is empty)

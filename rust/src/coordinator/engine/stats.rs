@@ -36,6 +36,12 @@ pub struct RolloutStats {
     /// path; 0 with `prefix-sharing = off`). Disjoint from
     /// `slot_prefills`: a refill is counted in exactly one of the two.
     pub shared_prefill_attaches: usize,
+    /// Chunked-prefill backend calls (`prefill-chunk-tokens > 0` only):
+    /// each partial prompt range written into a slot counts once, so a
+    /// prompt trickled in over k steps contributes k. Disjoint from
+    /// `slot_prefills`/`shared_prefill_attaches` — a chunked refill makes
+    /// no monolithic prefill call at all.
+    pub prefill_chunks: usize,
     /// Max KV tokens reserved simultaneously (continuous only; the
     /// invariant tests check this never exceeds the wall).
     pub max_reserved_kv: usize,
@@ -103,6 +109,14 @@ pub struct RolloutStats {
     /// why `merge` (serial composition, e.g. static chunks) SUMS this
     /// field and the pipelined joiner overwrites it with the lane max.
     pub modeled_makespan_ticks: u64,
+    /// Peak modeled ticks charged by any single steady-state engine step
+    /// (one main-loop iteration; the initial batched prefill wave is
+    /// excluded). This is the per-step latency bound chunked prefill
+    /// lowers: a monolithic refill step costs `slot_prefill_ticks` on top
+    /// of the decode, a chunked step at most the token budget's worth of
+    /// `chunk_token_ticks`. A high-water mark: both merges take the MAX.
+    /// Populated by the continuous and pipelined shells; 0 for static.
+    pub max_step_ticks: u64,
 }
 
 impl RolloutStats {
@@ -150,6 +164,7 @@ impl RolloutStats {
         self.prefills += o.prefills;
         self.slot_prefills += o.slot_prefills;
         self.shared_prefill_attaches += o.shared_prefill_attaches;
+        self.prefill_chunks += o.prefill_chunks;
         self.max_reserved_kv = self.max_reserved_kv.max(o.max_reserved_kv);
         self.max_used_pages = self.max_used_pages.max(o.max_used_pages);
         self.peak_live_slots = self.peak_live_slots.max(o.peak_live_slots);
@@ -168,6 +183,7 @@ impl RolloutStats {
         self.prefill_blocked_ticks += o.prefill_blocked_ticks;
         self.sched_stall_ticks += o.sched_stall_ticks;
         self.modeled_makespan_ticks += o.modeled_makespan_ticks;
+        self.max_step_ticks = self.max_step_ticks.max(o.max_step_ticks);
     }
 
     /// Combine stats from runs that executed CONCURRENTLY on separate
@@ -215,6 +231,7 @@ mod tests {
             prefills: 1,
             slot_prefills: 2,
             shared_prefill_attaches: 3,
+            prefill_chunks: 4,
             max_reserved_kv: 100,
             max_used_pages: 5,
             peak_live_slots: 4,
@@ -232,6 +249,7 @@ mod tests {
             prefill_blocked_ticks: 40,
             sched_stall_ticks: 0,
             modeled_makespan_ticks: 140,
+            max_step_ticks: 50,
         };
         let b = RolloutStats {
             chunks: 1,
@@ -247,10 +265,12 @@ mod tests {
             retries: 1,
             replica_deaths: 1,
             workers: 1,
+            prefill_chunks: 2,
             decode_busy_ticks: 50,
             prefill_blocked_ticks: 40,
             sched_stall_ticks: 7,
             modeled_makespan_ticks: 97,
+            max_step_ticks: 37,
             ..RolloutStats::default()
         };
         let mut m = a;
@@ -272,7 +292,10 @@ mod tests {
         assert_eq!(m.requeues, 1);
         assert_eq!(m.failed_tasks, 1);
         assert_eq!(m.replica_deaths, 1);
+        // chunked-prefill calls are work too
+        assert_eq!(m.prefill_chunks, 6);
         // ...high-water marks take the max
+        assert_eq!(m.max_step_ticks, 50, "per-step peak is a high-water, not a sum");
         assert_eq!(m.async_prefill_inflight_peak, 2);
         assert_eq!(m.max_reserved_kv, 100);
         assert_eq!(m.max_used_pages, 9);
@@ -312,6 +335,7 @@ mod tests {
                     prefills: rng.below(4),
                     slot_prefills: rng.below(20),
                     shared_prefill_attaches: rng.below(20),
+                    prefill_chunks: rng.below(40),
                     max_reserved_kv: rng.below(4096),
                     max_used_pages: rng.below(256),
                     peak_live_slots: rng.below(slots + 1),
@@ -329,6 +353,7 @@ mod tests {
                     prefill_blocked_ticks: rng.below(10_000) as u64,
                     sched_stall_ticks: rng.below(10_000) as u64,
                     modeled_makespan_ticks: rng.below(30_000) as u64,
+                    max_step_ticks: rng.below(200) as u64,
                 });
             }
             let mut merged = RolloutStats::default();
@@ -350,6 +375,7 @@ mod tests {
                 || merged.prefills != sum(|l| l.prefills)
                 || merged.slot_prefills != sum(|l| l.slot_prefills)
                 || merged.shared_prefill_attaches != sum(|l| l.shared_prefill_attaches)
+                || merged.prefill_chunks != sum(|l| l.prefill_chunks)
                 || merged.async_prefills_submitted != sum(|l| l.async_prefills_submitted)
                 || merged.async_prefills_completed != sum(|l| l.async_prefills_completed)
                 || merged.retries != sum(|l| l.retries)
@@ -376,6 +402,10 @@ mod tests {
                 || merged.workers != max(|l| l.workers)
             {
                 return Err("a high-water mark is not the exact max".into());
+            }
+            let step_max = lanes.iter().map(|l| l.max_step_ticks).max().unwrap_or(0);
+            if merged.max_step_ticks != step_max {
+                return Err("max_step_ticks is not the exact max".into());
             }
             // merge is order-independent for every audited field
             let mut rev = RolloutStats::default();
@@ -461,6 +491,7 @@ mod tests {
                     prefills: rng.below(4),
                     slot_prefills: rng.below(20),
                     shared_prefill_attaches: rng.below(20),
+                    prefill_chunks: rng.below(40),
                     max_reserved_kv: rng.below(4096),
                     max_used_pages: rng.below(256),
                     peak_live_slots: rng.below(slots + 1),
@@ -478,6 +509,7 @@ mod tests {
                     prefill_blocked_ticks: rng.below(10_000) as u64,
                     sched_stall_ticks: rng.below(10_000) as u64,
                     modeled_makespan_ticks: rng.below(30_000) as u64,
+                    max_step_ticks: rng.below(200) as u64,
                 });
             }
             // every replica individually upholds the denominator contract;
@@ -522,6 +554,10 @@ mod tests {
                 || fleet.async_prefill_inflight_peak != max(|r| r.async_prefill_inflight_peak)
             {
                 return Err("a per-device peak is not the exact max".into());
+            }
+            let step_max = reps.iter().map(|r| r.max_step_ticks).max().unwrap_or(0);
+            if fleet.max_step_ticks != step_max {
+                return Err("fleet max_step_ticks is not the exact max".into());
             }
             // order independence: every field combine is commutative +
             // associative with the default as identity

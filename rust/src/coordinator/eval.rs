@@ -86,6 +86,10 @@ pub struct EvalOptions {
     /// Bounded-retry budget for failing backend calls (`fault-retries`;
     /// default 0 = the bare-call seed behavior).
     pub fault_retries: usize,
+    /// Chunked-prefill token budget (`prefill-chunk-tokens`; default 0 =
+    /// monolithic slot prefills). Scheduling-only: accuracy and every
+    /// sampled token are budget-invariant.
+    pub prefill_chunk_tokens: usize,
     /// What happens when a call exhausts its retries: `abort` (default —
     /// the error kills the eval) or `quarantine` (the sample is recorded
     /// failed; with fleets, dead replicas fail over to survivors).
@@ -104,6 +108,7 @@ impl Default for EvalOptions {
             replicas: 1,
             replica_steal: true,
             fault_retries: 0,
+            prefill_chunk_tokens: 0,
             fault_policy: FaultPolicy::default(),
         }
     }
@@ -281,6 +286,7 @@ pub fn evaluate(
         .with_prefill(opts.prefill)
         .with_sharing(opts.memory.prefix_sharing)
         .with_fault_retries(opts.fault_retries)
+        .with_prefill_chunk_tokens(opts.prefill_chunk_tokens)
         .with_fault_policy(opts.fault_policy);
     let params_lit = ParamsLit::new(params);
     // one backend per decode lane (single-lane engines use the first);

@@ -44,10 +44,11 @@ pub enum FaultOp {
     ApplyPrefill,
     Decode,
     Compress,
+    PrefillChunk,
 }
 
 impl FaultOp {
-    const COUNT: usize = 6;
+    const COUNT: usize = 7;
 
     fn index(self) -> usize {
         match self {
@@ -57,6 +58,7 @@ impl FaultOp {
             FaultOp::ApplyPrefill => 3,
             FaultOp::Decode => 4,
             FaultOp::Compress => 5,
+            FaultOp::PrefillChunk => 6,
         }
     }
 
@@ -69,6 +71,7 @@ impl FaultOp {
             FaultOp::ApplyPrefill => "apply_prefill",
             FaultOp::Decode => "decode",
             FaultOp::Compress => "compress",
+            FaultOp::PrefillChunk => "prefill_chunk",
         }
     }
 }
@@ -381,6 +384,47 @@ impl RolloutBackend for MockModelBackend {
         Ok(self.row_logp(&self.cache[slot]))
     }
 
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        start: usize,
+        chunk: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        // prompt-keyed like prefill_slot: a task-pinned fault follows its
+        // prompt onto the chunked path too
+        self.fault(FaultOp::PrefillChunk, Some(prompt))?;
+        if slot >= self.slots {
+            bail!("prefill_chunk: slot {slot} out of range");
+        }
+        if prompt.is_empty() || prompt.len() > self.prompt_len {
+            bail!("prefill_chunk: prompt length {} out of range", prompt.len());
+        }
+        if chunk == 0 || start + chunk > prompt.len() {
+            bail!(
+                "prefill_chunk: range [{start}, {}) exceeds the prompt ({} tokens)",
+                start + chunk,
+                prompt.len()
+            );
+        }
+        if start == 0 {
+            self.cache[slot].clear();
+        } else if self.cache[slot].len() != start {
+            bail!(
+                "prefill_chunk: slot {slot} resumes at {start} but holds {} tokens",
+                self.cache[slot].len()
+            );
+        }
+        self.cache[slot].extend_from_slice(&prompt[start..start + chunk]);
+        if start + chunk == prompt.len() {
+            // final chunk: the slot now holds exactly what prefill_slot
+            // would have written, so the logits row is bit-identical
+            Ok(Some(self.row_logp(&self.cache[slot])))
+        } else {
+            Ok(None)
+        }
+    }
+
     fn prepare_prefill(&mut self, prompt: &[i32]) -> Result<Self::Prepared> {
         self.fault(FaultOp::PreparePrefill, Some(prompt))?;
         if prompt.is_empty() || prompt.len() > self.prompt_len {
@@ -532,6 +576,38 @@ mod tests {
         let a = worker.decode(&[4, 4, 4], &[4, 4, 4], &[3, 3, 3]).unwrap();
         let b = reference.decode(&[4, 4, 4], &[4, 4, 4], &[3, 3, 3]).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_bit_for_bit() {
+        // the chunked-prefill contract: after the final chunk, the slot's
+        // cache and returned logits row are exactly prefill_slot's
+        let mut chunked = MockModelBackend::dense(3, 8, 32, 32);
+        let mut mono = MockModelBackend::dense(3, 8, 32, 32);
+        chunked.prefill(&[5i32; 24], &[8, 8, 8]).unwrap();
+        mono.prefill(&[5i32; 24], &[8, 8, 8]).unwrap();
+        let prompt = [1, 7, 8, 9, 4, 6, 2];
+        assert_eq!(chunked.prefill_chunk(1, &prompt, 0, 3).unwrap(), None);
+        assert_eq!(chunked.prefill_chunk(1, &prompt, 3, 2).unwrap(), None);
+        let row = chunked.prefill_chunk(1, &prompt, 5, 2).unwrap().expect("final chunk");
+        let direct = mono.prefill_slot(1, &prompt).unwrap();
+        assert_eq!(row, direct, "final-chunk logits diverge from prefill_slot");
+        assert_eq!(chunked.cache[1], mono.cache[1]);
+        // neighbour slots untouched; decode sees identical state
+        assert_eq!(chunked.cache[0], mono.cache[0]);
+        let a = chunked.decode(&[8, 7, 8], &[8, 7, 8], &[3, 3, 3]).unwrap();
+        let b = mono.decode(&[8, 7, 8], &[8, 7, 8], &[3, 3, 3]).unwrap();
+        assert_eq!(a, b);
+        // a whole-prompt chunk is exactly a monolithic prefill
+        let one = chunked
+            .prefill_chunk(2, &prompt, 0, prompt.len())
+            .unwrap()
+            .expect("whole prompt completes");
+        assert_eq!(one, direct);
+        // resuming at the wrong offset is loud, not silent corruption
+        assert!(chunked.prefill_chunk(0, &prompt, 3, 2).is_err());
+        // an over-long range is rejected
+        assert!(chunked.prefill_chunk(0, &prompt, 0, prompt.len() + 1).is_err());
     }
 
     #[test]

@@ -61,6 +61,9 @@ pub struct StepReport {
     pub idle_token_frac: f64,
     /// Mid-flight slot refills (continuous engine; 0 under static).
     pub refills: usize,
+    /// Partial prompt ranges written by chunked prefill
+    /// (`prefill-chunk-tokens > 0`; 0 under monolithic prefill).
+    pub prefill_chunks: usize,
     /// Refills served by attaching a cached prepared prompt instead of a
     /// model prefill (`prefix-sharing = group`; 0 otherwise).
     pub shared_prefill_attaches: usize,
@@ -101,6 +104,9 @@ pub struct StepReport {
     /// Modeled end-to-end makespan (serial sum, or the lane max when
     /// pipelined).
     pub modeled_makespan_ticks: u64,
+    /// Peak ticks any single engine step took (the per-step latency bound
+    /// chunked prefill lowers; 0 under the static engine).
+    pub max_step_ticks: u64,
     /// Backend calls that failed and were retried under the bounded-retry
     /// budget (`fault-retries`; 0 fault-free).
     pub retries: usize,
@@ -224,6 +230,7 @@ impl<'a> Trainer<'a> {
             .with_prefill(self.cfg.prefill)
             .with_sharing(self.cfg.memory.prefix_sharing)
             .with_fault_retries(self.cfg.fault_retries)
+            .with_prefill_chunk_tokens(self.cfg.prefill_chunk_tokens)
             .with_fault_policy(self.cfg.fault_policy);
         let seed = self.rng.next_u64();
         let params = ParamsLit::new(&self.state.params);
@@ -482,6 +489,7 @@ impl<'a> Trainer<'a> {
             slot_occupancy: rstats.occupancy(),
             idle_token_frac: rstats.idle_frac(),
             refills: rstats.refills,
+            prefill_chunks: rstats.prefill_chunks,
             shared_prefill_attaches: rstats.shared_prefill_attaches,
             preemptions: rstats.preemptions,
             steals: rstats.steals,
@@ -500,6 +508,7 @@ impl<'a> Trainer<'a> {
             prefill_blocked_ticks: rstats.prefill_blocked_ticks,
             sched_stall_ticks: rstats.sched_stall_ticks,
             modeled_makespan_ticks: rstats.modeled_makespan_ticks,
+            max_step_ticks: rstats.max_step_ticks,
             retries: rstats.retries,
             requeues: rstats.requeues,
             failed_tasks: rstats.failed_tasks,
@@ -524,6 +533,7 @@ impl<'a> Trainer<'a> {
         self.metrics.push("slot_occupancy", report.slot_occupancy);
         self.metrics.push("idle_token_frac", report.idle_token_frac);
         self.metrics.push("refills", report.refills as f64);
+        self.metrics.push("prefill_chunks", report.prefill_chunks as f64);
         self.metrics
             .push("shared_prefill_attaches", report.shared_prefill_attaches as f64);
         self.metrics.push("preemptions", report.preemptions as f64);
@@ -554,6 +564,7 @@ impl<'a> Trainer<'a> {
         self.metrics.push("prefill_blocked_ticks", report.prefill_blocked_ticks as f64);
         self.metrics.push("sched_stall_ticks", report.sched_stall_ticks as f64);
         self.metrics.push("modeled_makespan_ticks", report.modeled_makespan_ticks as f64);
+        self.metrics.push("max_step_ticks", report.max_step_ticks as f64);
         // fault-tolerance counters (all zero fault-free and under the
         // default abort policy — the CSV schema is stable either way)
         self.metrics.push("retries", report.retries as f64);

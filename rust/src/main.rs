@@ -45,6 +45,7 @@ fn usage() -> ! {
             [--admission worst-case|paged] [--kv-admit-headroom-pages N]
             [--kv-page-tokens N] [--global-kv-tokens N]
             [--fault-retries N] [--fault-policy abort|quarantine]
+            [--prefill-chunk-tokens N]
             (unrecognized --flags are an error listing the valid set)
   rollout:  --checkpoint ckpt --mode <...> [--n 4] [--temperature T]"
     );
@@ -200,6 +201,7 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
         "steal",
         "admission-order",
         "prefill",
+        "prefill-chunk-tokens",
         "prefix-sharing",
         "replicas",
         "replica-steal",
@@ -224,6 +226,7 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
         replicas: cfg.replicas,
         replica_steal: cfg.replica_steal,
         fault_retries: cfg.fault_retries,
+        prefill_chunk_tokens: cfg.prefill_chunk_tokens,
         fault_policy: cfg.fault_policy,
     };
     match args.opt("bench") {
@@ -339,7 +342,7 @@ mod tests {
         let a = parse(
             "eval --model tiny --checkpoint c.srl --limit 10 --bench gsm \
              --engine continuous --replicas 2 --fault-retries 3 \
-             --fault-policy quarantine --seed 7",
+             --fault-policy quarantine --prefill-chunk-tokens 24 --seed 7",
         );
         assert!(reject_unknown_options(&a, EVAL_EXTRA_KEYS).is_ok());
     }

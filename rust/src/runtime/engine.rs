@@ -350,6 +350,131 @@ impl ModelEngine {
         Ok(logp[slot * vocab..(slot + 1) * vocab].to_vec())
     }
 
+    /// Prefill tokens `[start, start + chunk)` of `prompt` into `slot` of
+    /// a live cache, every other slot untouched — the resumable form of
+    /// `prefill_slot` behind the token-budgeted step packer
+    /// (`prefill-chunk-tokens`). `start` must equal the number of prompt
+    /// tokens already written to the slot (`start == 0` begins a fresh
+    /// slot). Returns `Some(logits [V])` — bit-identical to a monolithic
+    /// `prefill_slot(slot, prompt)` — exactly when `start + chunk`
+    /// reaches the prompt end, `None` for an intermediate chunk.
+    ///
+    /// Two implementations, selected by the manifest:
+    ///
+    /// * **Fused** (`prefill_chunk_<variant>` entry present): one device
+    ///   call takes the live cache, the scratch prompt batch, per-row
+    ///   `[start, limit)` ranges and a slot mask. The entry recomputes
+    ///   the grown prefix's activations and writes only the fresh
+    ///   KV/birth range plus whole-prefix stats in-graph (stats colsum
+    ///   over later query rows, so they are rewritten — not accumulated —
+    ///   each chunk; the final chunk leaves them exactly monolithic).
+    /// * **Fallback** (older artifact sets without the entry): chunking
+    ///   degrades instead of breaking — intermediate chunks defer all
+    ///   device work and the final chunk delegates to `prefill_slot`
+    ///   over the whole prompt, which is token-identical. The packer's
+    ///   modeled cost still uses chunked accounting; only the shape of
+    ///   the device calls differs.
+    pub fn prefill_chunk(
+        &self,
+        params: &ParamsLit,
+        cache: &mut CacheState,
+        slot: usize,
+        prompt: &[i32],
+        start: usize,
+        chunk: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let (r, p_len) = (s.decode_batch, c.prompt_len);
+        if slot >= r {
+            bail!("prefill_chunk: slot {slot} out of range (R = {r})");
+        }
+        if prompt.is_empty() || prompt.len() > p_len {
+            bail!("prefill_chunk: prompt length {} not in 1..={p_len}", prompt.len());
+        }
+        if chunk == 0 || start + chunk > prompt.len() {
+            bail!(
+                "prefill_chunk: range [{start}, {}) invalid for prompt length {}",
+                start + chunk,
+                prompt.len()
+            );
+        }
+        let done = start + chunk == prompt.len();
+        let entry = chunk_prefill_entry(cache.variant);
+        if self.manifest.has_entry(&entry) {
+            let logp =
+                self.prefill_chunk_fused(&entry, params, cache, slot, prompt, start, chunk)?;
+            return Ok(if done { Some(logp) } else { None });
+        }
+        if done {
+            return self.prefill_slot(params, cache, slot, prompt).map(Some);
+        }
+        Ok(None)
+    }
+
+    /// Fused partial-range prefill: one device call on the
+    /// `prefill_chunk_<variant>` entry. The scratch batch carries the
+    /// WHOLE prompt prefix seen so far (positions `< start + chunk`) —
+    /// the entry re-attends over it causally, exactly as the monolithic
+    /// prefill would, and the per-row `[start, limit)` range restricts
+    /// the KV/birth writes to the fresh tokens so earlier chunks' planes
+    /// are preserved bit-for-bit. Returns the slot's logits row at the
+    /// last visible token (only meaningful to the caller on the final
+    /// chunk).
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_chunk_fused(
+        &self,
+        entry: &str,
+        params: &ParamsLit,
+        cache: &mut CacheState,
+        slot: usize,
+        prompt: &[i32],
+        start: usize,
+        chunk: usize,
+    ) -> Result<Vec<f32>> {
+        let s = &self.manifest.shapes;
+        let c = &self.manifest.config;
+        let (r, p_len, vocab) = (s.decode_batch, c.prompt_len, c.vocab);
+        let (ids, plens) = scratch_prompt_batch(r, p_len, slot, prompt);
+        let mut mask = vec![0.0f32; r];
+        mask[slot] = 1.0;
+        // Filler rows get the degenerate range [0, 1): a single-token
+        // "fresh" write whose planes the slot mask discards anyway.
+        let mut starts = vec![0i32; r];
+        let mut limits = vec![1i32; r];
+        starts[slot] = start as i32;
+        limits[slot] = (start + chunk) as i32;
+        let exe = self.exe(entry)?;
+        let ids_l = HostTensor::i32(ids, &[r, p_len]).to_literal()?;
+        let lens_l = HostTensor::i32(plens, &[r]).to_literal()?;
+        let start_l = HostTensor::i32(starts, &[r]).to_literal()?;
+        let limit_l = HostTensor::i32(limits, &[r]).to_literal()?;
+        let mask_l = HostTensor::f32(mask, &[r]).to_literal()?;
+        let out = exe.run_literals(&[
+            &params.0,
+            &cache.kv,
+            &cache.stats_cum,
+            &cache.stats_win,
+            &cache.birth,
+            &ids_l,
+            &lens_l,
+            &start_l,
+            &limit_l,
+            &mask_l,
+        ])?;
+        let mut it = out.into_iter();
+        cache.kv = it.next().unwrap();
+        cache.stats_cum = it.next().unwrap();
+        cache.stats_win = it.next().unwrap();
+        cache.birth = it.next().unwrap();
+        let logp = it
+            .next()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("prefill_chunk_fused logp: {e:?}"))?;
+        Ok(logp[slot * vocab..(slot + 1) * vocab].to_vec())
+    }
+
     /// Cache-independent half of a slot prefill: run the batched prefill
     /// on a scratch batch carrying `prompt` in ROW 0 and return the fresh
     /// cache plus row 0's last-prompt-token log-probs `[V]`.
@@ -705,6 +830,15 @@ pub fn fused_prefill_entry(variant: Variant) -> String {
     format!("prefill_slot_{}", variant.name())
 }
 
+/// Manifest entry name of the fused partial-range prefill for `variant`
+/// (`prefill_chunk_dense` / `prefill_chunk_sparse`). `prefill_chunk`
+/// dispatches on `Manifest::has_entry` of this name: artifact sets built
+/// before the entry existed fall back to deferring intermediate chunks
+/// and running the monolithic slot prefill on the final one.
+pub fn chunk_prefill_entry(variant: Variant) -> String {
+    format!("prefill_chunk_{}", variant.name())
+}
+
 /// Copy slot `src_slot`'s plane from `src` into slot `dst_slot` of `dst`
 /// for a tensor whose row-major layout is [outer.., R, plane..]: `outer`
 /// leading blocks, each holding R slot planes of `plane` elements (the
@@ -884,6 +1018,26 @@ mod tests {
         ]);
         assert!(new.has_entry(&fused_prefill_entry(Variant::Dense)));
         assert!(new.has_entry(&fused_prefill_entry(Variant::Sparse)));
+    }
+
+    #[test]
+    fn chunk_prefill_dispatch_is_manifest_gated() {
+        // the dispatch rule `prefill_chunk` implements: fused partial-
+        // range entry when the manifest carries it, defer-then-monolithic
+        // fallback when not
+        assert_eq!(chunk_prefill_entry(Variant::Dense), "prefill_chunk_dense");
+        assert_eq!(chunk_prefill_entry(Variant::Sparse), "prefill_chunk_sparse");
+        let old = bare_manifest(&["prefill_dense", "prefill_slot_dense"]);
+        assert!(!old.has_entry(&chunk_prefill_entry(Variant::Dense)));
+        assert!(!old.has_entry(&chunk_prefill_entry(Variant::Sparse)));
+        let new = bare_manifest(&[
+            "prefill_dense",
+            "prefill_slot_dense",
+            "prefill_chunk_dense",
+            "prefill_chunk_sparse",
+        ]);
+        assert!(new.has_entry(&chunk_prefill_entry(Variant::Dense)));
+        assert!(new.has_entry(&chunk_prefill_entry(Variant::Sparse)));
     }
 
     #[test]

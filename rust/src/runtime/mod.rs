@@ -12,8 +12,8 @@ pub mod params;
 pub mod tensor;
 
 pub use engine::{
-    fused_prefill_entry, CacheState, Hyp, Method, ModelEngine, ParamsLit, SlotPlanes, TrainState,
-    TrainStats, Variant,
+    chunk_prefill_entry, fused_prefill_entry, CacheState, Hyp, Method, ModelEngine, ParamsLit,
+    SlotPlanes, TrainState, TrainStats, Variant,
 };
 pub use manifest::Manifest;
 pub use tensor::HostTensor;

@@ -24,7 +24,8 @@
 //! 4. **Pipelined equivalence** — the pipelined worker-pool engine is
 //!    token-identical to continuous (and static) for every task over the
 //!    full grid {workers 1/2/4} × {steal on/off} × {fifo,
-//!    shortest-first} × {prefill sync/async} (override the counts with
+//!    shortest-first} × {prefill sync/async} × {chunked prefill off/on,
+//!    `prefill-chunk-tokens` 0/12} (override the counts with
 //!    `ROLLOUT_WORKERS=n`; async runs a REAL prefill-executor thread
 //!    against the mock), its slot-step accounting obeys the shared
 //!    denominator contract (`occupied + idle == decode_steps * slots`),
@@ -349,6 +350,53 @@ fn prop_static_and_continuous_engines_agree_per_task() {
                     if cont_stats != cont2_stats {
                         return Err("continuous stats not reproducible".into());
                     }
+
+                    // 2b) chunked prefill (`prefill-chunk-tokens` > 0) is
+                    //     scheduling-only: token/logp/accounting-identical
+                    //     to the monolithic path, with refills served by
+                    //     resumable chunks instead of slot prefills. No
+                    //     closed-form step prediction here — the packer
+                    //     interleaves chunks with decode steps, which the
+                    //     monolithic list-scheduling formula doesn't model.
+                    let mut kv_ck = KvMemoryManager::new(sc.kv_cap);
+                    let (chunk_seqs, chunk_stats) = run_continuous(
+                        &policy.with_prefill_chunk_tokens(12),
+                        &mut sc.backend(),
+                        &sc.tasks,
+                        sc.seed,
+                        sc.reserve,
+                        &mut kv_ck,
+                        order,
+                    )?;
+                    for (a, b) in cont_seqs.iter().zip(chunk_seqs.iter()) {
+                        seqs_equal(a, b)
+                            .map_err(|e| format!("chunked prefill changed tokens: {e}"))?;
+                    }
+                    if chunk_stats.refills != cont_stats.refills {
+                        return Err(format!(
+                            "chunked prefill changed the refill schedule: {} vs {}",
+                            chunk_stats.refills, cont_stats.refills
+                        ));
+                    }
+                    if chunk_stats.slot_prefills != 0 {
+                        return Err(format!(
+                            "chunked run still issued {} monolithic slot prefills",
+                            chunk_stats.slot_prefills
+                        ));
+                    }
+                    if chunk_stats.prefill_chunks < chunk_stats.refills {
+                        return Err(format!(
+                            "{} refills but only {} chunks (each refill needs >= 1)",
+                            chunk_stats.refills, chunk_stats.prefill_chunks
+                        ));
+                    }
+                    if kv_ck.reserved() != 0 {
+                        return Err(format!(
+                            "chunked run leaked {} KV tokens",
+                            kv_ck.reserved()
+                        ));
+                    }
+                    kv_ck.check_invariants().map_err(|e| e.to_string())?;
                 }
 
                 // 3) memory-wall invariants
@@ -567,14 +615,16 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
 
             // the full pipelined grid: every worker count, stealing on and
             // off, both admission orders, both prefill modes (async runs a
-            // real executor thread) — tokens must never move
+            // real executor thread), chunked prefill off and on — tokens
+            // must never move
             for &workers in &counts {
                 for steal in [true, false] {
                     for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
                     for prefill in [PrefillMode::Sync, PrefillMode::Async] {
                     for sharing in [PrefixSharing::Off, PrefixSharing::Group] {
+                    for chunk in [0usize, 12] {
                         let grid = format!(
-                            "w={workers} steal={steal} order={} prefill={} share={}",
+                            "w={workers} steal={steal} order={} prefill={} share={} chunk={chunk}",
                             order.label(),
                             prefill.label(),
                             sharing.label()
@@ -588,7 +638,8 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
                             &policy
                                 .with_steal(steal)
                                 .with_prefill(prefill)
-                                .with_sharing(sharing),
+                                .with_sharing(sharing)
+                                .with_prefill_chunk_tokens(chunk),
                             &proto,
                             &sc.tasks,
                             sc.seed,
@@ -678,17 +729,35 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
                                 workers * sc.slots
                             ));
                         }
-                        // prefill-executor bookkeeping: sync leaves the
-                        // counters untouched; async prepares every
+                        // chunked admission serves every refill by
+                        // resumable chunks — never a monolithic slot
+                        // prefill, and never through the async executor
+                        if chunk > 0 {
+                            if pipe_stats.slot_prefills != 0 {
+                                return Err(format!(
+                                    "{grid}: chunked run issued {} slot prefills",
+                                    pipe_stats.slot_prefills
+                                ));
+                            }
+                            if pipe_stats.prefill_chunks < pipe_stats.refills {
+                                return Err(format!(
+                                    "{grid}: {} refills but only {} chunks",
+                                    pipe_stats.refills, pipe_stats.prefill_chunks
+                                ));
+                            }
+                        }
+                        // prefill-executor bookkeeping: sync mode and
+                        // chunked admission both leave the counters
+                        // untouched; monolithic async prepares every
                         // submission exactly once (== total refills) and
                         // the in-flight peak is bounded by submissions
-                        if prefill == PrefillMode::Sync {
+                        if prefill == PrefillMode::Sync || chunk > 0 {
                             if pipe_stats.async_prefills_submitted != 0
                                 || pipe_stats.async_prefills_completed != 0
                                 || pipe_stats.async_prefill_inflight_peak != 0
                             {
                                 return Err(format!(
-                                    "{grid}: sync mode touched executor counters"
+                                    "{grid}: executor counters touched unexpectedly"
                                 ));
                             }
                         } else {
@@ -737,6 +806,7 @@ fn prop_pipelined_matches_continuous_and_static_for_every_task() {
                                 pipe_stats.refills
                             ));
                         }
+                    }
                     }
                     }
                     }
@@ -789,8 +859,9 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
             for order in [AdmissionOrder::Fifo, AdmissionOrder::ShortestFirst] {
             for prefill in [PrefillMode::Sync, PrefillMode::Async] {
             for sharing in [PrefixSharing::Off, PrefixSharing::Group] {
+            for chunk in [0usize, 12] {
                 let grid = format!(
-                    "w={workers} steal={steal} order={} prefill={} share={}",
+                    "w={workers} steal={steal} order={} prefill={} share={} chunk={chunk}",
                     order.label(),
                     prefill.label(),
                     sharing.label()
@@ -804,7 +875,8 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
                     &policy
                         .with_steal(steal)
                         .with_prefill(prefill)
-                        .with_sharing(sharing),
+                        .with_sharing(sharing)
+                        .with_prefill_chunk_tokens(chunk),
                     &backend(),
                     &tasks,
                     seed,
@@ -839,10 +911,10 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
                 // every async submission is prepared exactly once, and a
                 // preempted-then-requeued task resubmits (so submissions
                 // can exceed task count but always equal joins = refills)
-                if prefill == PrefillMode::Sync {
+                if prefill == PrefillMode::Sync || chunk > 0 {
                     assert_eq!(
                         stats.async_prefills_submitted, 0,
-                        "{grid}: sync mode submitted to the executor"
+                        "{grid}: executor submission despite sync/chunked admission"
                     );
                 } else {
                     assert_eq!(
@@ -852,6 +924,18 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
                     assert_eq!(
                         stats.async_prefills_submitted, stats.refills,
                         "{grid}: submissions must equal joined refills"
+                    );
+                }
+                if chunk > 0 {
+                    assert_eq!(
+                        stats.slot_prefills, 0,
+                        "{grid}: chunked run issued monolithic slot prefills"
+                    );
+                    assert!(
+                        stats.prefill_chunks >= stats.refills,
+                        "{grid}: {} refills but only {} chunks",
+                        stats.refills,
+                        stats.prefill_chunks
                     );
                 }
                 assert!(
@@ -875,6 +959,7 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
                     );
                     assert_eq!(sched.stats.cow_forks, 0, "{grid}: sharing=off forked");
                 }
+            }
             }
             }
             }

@@ -12,8 +12,9 @@ Rules:
   * Scenarios present in the baseline but no longer emitted are noted,
     not failed (scenarios evolve; the recorder refreshes the baseline on
     the next main push).
-  * Scenarios only in the FRESH file (a newly added bench part, e.g. a
-    new comparison landing in the same PR) are listed as new and pass —
+  * Scenarios only in the FRESH file (a newly added bench part, e.g.
+    part 1i's `chunked_prefill` monolithic/chunked rows on the PR that
+    introduced them) are listed as new and pass —
     comparison iterates baseline keys only, so growing the bench never
     trips the guard; the recorder picks the new rows up on the next
     main push.
