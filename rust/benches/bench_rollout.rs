@@ -25,6 +25,12 @@
 //! strictly lower both the modeled makespan and the per-step tick bound
 //! (`max_step_ticks`) while staying token-identical.
 //!
+//! Part 1j: SLO vs FIFO serving admission on a deterministic flash-crowd
+//! trace (warmup + an infeasible burst + a feasible late wave): the SLO
+//! controller sheds the burst up front with estimates and keeps the
+//! modeled p99 TTFT of everything it serves strictly below the
+//! admit-everything FIFO baseline, token-identical to the closed batch.
+//!
 //! Part 2 (needs `make artifacts`): every artifact on the rollout/training
 //! path — decode step latency (dense vs sparse — the memory-wall compute
 //! story), compression overhead per method, prefill, dense scoring, and
@@ -36,11 +42,12 @@ use std::collections::BTreeMap;
 
 use sparse_rl::config::{
     AdmissionOrder, AdmissionPolicy, EngineKind, FaultPolicy, PrefillMode, PrefixSharing,
-    RolloutMode, SamplingConfig,
+    RolloutMode, SamplingConfig, ServeAdmission, ServeConfig,
 };
 use sparse_rl::coordinator::{
     rollout_fleet, CostModel, FaultKind, FaultOp, FaultPlan, GenSeq, KvMemoryManager,
-    MockModelBackend, Replica, RolloutBackend, RolloutPolicy, RolloutStats, Scheduler,
+    MockModelBackend, Replica, RolloutBackend, RolloutCtx, RolloutPolicy, RolloutStats, Scheduler,
+    ServeOutcome, ServeRequest, ServeServer,
 };
 use sparse_rl::data::task::Task;
 use sparse_rl::experiments;
@@ -66,7 +73,7 @@ fn run_static_mock(
     let mut sched = mk_sched(backend.slots(), reserve);
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
     policy
-        .rollout_static_queue(backend, &flat, seed, &mut sched, &mut kv, 0)
+        .rollout_static_queue(backend, &flat, seed, RolloutCtx::new(&mut sched, &mut kv))
         .expect("rollout")
 }
 
@@ -82,7 +89,7 @@ fn run_continuous_mock(
     let mut sched = mk_sched(backend.slots(), reserve);
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
     policy
-        .rollout_continuous(backend, &flat, seed, &mut sched, &mut kv, 0)
+        .rollout_continuous(backend, &flat, seed, RolloutCtx::new(&mut sched, &mut kv))
         .expect("rollout")
 }
 
@@ -100,7 +107,7 @@ fn run_continuous_paged_mock(
         mk_sched(backend.slots(), reserve).with_admission(AdmissionPolicy::Paged);
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
     let (seqs, stats) = policy
-        .rollout_continuous(backend, &flat, seed, &mut sched, &mut kv, 0)
+        .rollout_continuous(backend, &flat, seed, RolloutCtx::new(&mut sched, &mut kv))
         .expect("rollout");
     (seqs, stats, kv)
 }
@@ -323,11 +330,17 @@ fn run_pipelined_mock(
     let (seqs, stats) = if policy.prefill.is_async() {
         let mut exec = proto.clone();
         policy
-            .rollout_pipelined(&mut backends, Some(&mut exec), &flat, seed, &mut sched, &mut kv, 0)
+            .rollout_pipelined(
+                &mut backends,
+                Some(&mut exec),
+                &flat,
+                seed,
+                RolloutCtx::new(&mut sched, &mut kv),
+            )
             .expect("rollout")
     } else {
         policy
-            .rollout_pipelined(&mut backends, None, &flat, seed, &mut sched, &mut kv, 0)
+            .rollout_pipelined(&mut backends, None, &flat, seed, RolloutCtx::new(&mut sched, &mut kv))
             .expect("rollout")
     };
     assert_eq!(kv.reserved(), 0, "pipelined run leaked KV");
@@ -397,7 +410,12 @@ fn pipelined_comparison() -> Json {
                 let mut sched = mk_sched(slots, reserve).with_admission(admission);
                 let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
                 policy
-                    .rollout_continuous(&mut proto.clone(), &flat, seed, &mut sched, &mut kv, 0)
+                    .rollout_continuous(
+                        &mut proto.clone(),
+                        &flat,
+                        seed,
+                        RolloutCtx::new(&mut sched, &mut kv),
+                    )
                     .expect("rollout")
             };
             let label = format!("{}/{}", mode.label(), admission.label());
@@ -556,7 +574,13 @@ fn admission_order_comparison() -> Json {
         let mut exec = proto.clone();
         let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
         let (seqs, st) = policy
-            .rollout_pipelined(&mut backends, Some(&mut exec), &flat, seed, &mut sched, &mut kv, 0)
+            .rollout_pipelined(
+                &mut backends,
+                Some(&mut exec),
+                &flat,
+                seed,
+                RolloutCtx::new(&mut sched, &mut kv),
+            )
             .expect("rollout");
         assert_eq!(kv.reserved(), 0, "{}: run leaked KV", order.label());
         kv.check_invariants().expect("wall invariants");
@@ -824,7 +848,7 @@ fn prefix_sharing_comparison() -> Json {
         let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
         let (seqs, st) = policy
             .with_sharing(sharing)
-            .rollout_continuous(&mut backend(), &flat, seed, &mut sched, &mut kv, 0)
+            .rollout_continuous(&mut backend(), &flat, seed, RolloutCtx::new(&mut sched, &mut kv))
             .expect("rollout");
         assert_eq!(kv.reserved(), 0, "{}: run leaked KV", sharing.label());
         assert_eq!(kv.live_prefixes(), 0, "{}: prefix entries leaked", sharing.label());
@@ -1120,7 +1144,7 @@ fn fault_tolerance_comparison() -> Json {
         let mut sched = mk_sched(slots, reserve);
         let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
         let (seqs, st) = policy
-            .rollout_continuous(&mut backend(plan), &flat, seed, &mut sched, &mut kv, 0)
+            .rollout_continuous(&mut backend(plan), &flat, seed, RolloutCtx::new(&mut sched, &mut kv))
             .expect("rollout");
         assert_eq!(kv.reserved(), 0, "fault bench run leaked KV");
         kv.check_invariants().expect("wall invariants");
@@ -1364,6 +1388,146 @@ fn chunked_prefill_comparison() -> Json {
     Json::Obj(out)
 }
 
+/// SLO vs FIFO serving admission (part 1j): the serving-front-end claim,
+/// on the virtual clock. A deterministic flash-crowd trace — one warmup
+/// request, then a 24-request burst whose deadlines sit one tick short of
+/// their own modeled cost (infeasible at any dispatch tick), then a
+/// feasible 3-request wave long after the burst would have drained — runs
+/// through `ServeServer` twice. Under `serve-admission = slo` the
+/// admission oracle (`predicted_cost_ticks`, the router's
+/// residency × admission-cost product) refuses the whole burst up front
+/// with reject-with-estimate outcomes, so the completed requests all
+/// start essentially on arrival; under `fifo` the burst is admitted, and
+/// its queueing delay lands in the TTFT tail. Asserts the SLO arm's
+/// modeled p99 TTFT (and max) is STRICTLY below FIFO's, that every
+/// completed request on both arms streams tokens identical to one closed
+/// batch of the whole trace, and that shedding is exact: precisely the
+/// burst, each refusal carrying the modeled cost it was refused on.
+/// Single-lane continuous on the virtual clock: both rows deterministic
+/// (fresh-only on first recording, so `bench_guard.py` lists them as new).
+fn serving_comparison() -> Json {
+    let (slots, prompt_len) = (2usize, 24usize);
+    let (burst, wave, seed) = (24usize, 3usize, 9u64);
+    let costs = CostModel::representative();
+    let sampling = SamplingConfig { temperature: 1.0, top_p: 1.0, max_response: 24 };
+    let max_seq = prompt_len + sampling.max_response;
+    let reserve = max_seq;
+    let kv_cap = reserve * slots * 2;
+    let n = 1 + burst + wave;
+    let mut rng = Rng::new(3);
+    // uniform prompts: one modeled admission cost for the whole trace
+    let tasks: Vec<Task> = (0..n).map(|_| sized_task(&mut rng, prompt_len)).collect();
+    let backend = || {
+        let mut b = MockModelBackend::dense(slots, prompt_len, max_seq, 32);
+        b.eos_pull = 0.12; // long-tailed response lengths
+        b.with_costs(costs)
+    };
+    let pred = mk_sched(slots, reserve)
+        .predicted_cost_ticks(prompt_len, sampling.max_response);
+
+    let mut trace: Vec<ServeRequest> = vec![ServeRequest::new(tasks[0].clone(), 0)];
+    for t in &tasks[1..=burst] {
+        // deadline one tick short of the modeled cost: infeasible even if
+        // dispatched the instant it arrives
+        trace.push(ServeRequest::new(t.clone(), 1).with_deadline(pred));
+    }
+    for t in &tasks[1 + burst..] {
+        trace.push(ServeRequest::new(t.clone(), 10_000).with_deadline(10_000 + 2 * pred));
+    }
+
+    let policy = RolloutPolicy::new(RolloutMode::Dense, sampling);
+    // the closed-batch oracle: serving must stream exactly these tokens
+    let (closed, _) = run_continuous_mock(&policy, &mut backend(), &tasks, seed, reserve, kv_cap);
+
+    println!(
+        "== serving comparison: slo vs fifo admission (continuous, R={slots}, warmup + \
+         {burst}-request infeasible burst + {wave}-request late wave, predicted cost {pred}t) ==",
+    );
+    println!(
+        "{:<6} {:>9} {:>6} {:>6} {:>9} {:>9} {:>9} {:>10}",
+        "adm", "completed", "shed", "rounds", "ttft-p50", "ttft-p99", "e2e-p99", "makespan"
+    );
+
+    let mut out = BTreeMap::new();
+    let mut reports = Vec::new();
+    for admission in [ServeAdmission::Slo, ServeAdmission::Fifo] {
+        let mut server = ServeServer::new(
+            policy,
+            EngineKind::Continuous,
+            ServeConfig { admission, queue_depth: 0, slo_ticks: 0 },
+            vec![backend()],
+            mk_sched(slots, reserve),
+            KvMemoryManager::new(kv_cap),
+        );
+        let report = server.run(&trace, seed).expect("serve");
+        for (i, o) in report.outcomes.iter().enumerate() {
+            if let ServeOutcome::Completed { response, .. } = o {
+                assert_eq!(
+                    response, &closed[i].response_ids,
+                    "serving changed request {i}'s tokens (BUG)"
+                );
+            }
+        }
+        println!(
+            "{:<6} {:>9} {:>6} {:>6} {:>9} {:>9} {:>9} {:>10}",
+            admission.label(),
+            report.completed(),
+            report.shed(),
+            report.rounds,
+            report.ttft.p50(),
+            report.ttft.p99(),
+            report.e2e.p99(),
+            report.makespan_ticks,
+        );
+        let mut row = BTreeMap::new();
+        row.insert("completed".into(), Json::Num(report.completed() as f64));
+        row.insert("shed".into(), Json::Num(report.shed() as f64));
+        row.insert("rounds".into(), Json::Num(report.rounds as f64));
+        row.insert("ttft_p50_ticks".into(), Json::Num(report.ttft.p50() as f64));
+        row.insert("ttft_p99_ticks".into(), Json::Num(report.ttft.p99() as f64));
+        row.insert("e2e_p99_ticks".into(), Json::Num(report.e2e.p99() as f64));
+        row.insert("makespan_ticks".into(), Json::Num(report.makespan_ticks as f64));
+        // single-lane continuous serve on the virtual clock: deterministic
+        row.insert("deterministic".into(), Json::Bool(true));
+        out.insert(admission.label().to_string(), Json::Obj(row));
+        reports.push(report);
+    }
+
+    let (slo, fifo) = (&reports[0], &reports[1]);
+    assert_eq!(slo.shed(), burst, "slo must shed exactly the infeasible burst");
+    assert_eq!(slo.completed(), 1 + wave);
+    for i in 1..=burst {
+        match &slo.outcomes[i] {
+            ServeOutcome::Shed { predicted_cost_ticks, predicted_done_tick, .. } => {
+                assert_eq!(*predicted_cost_ticks, pred, "request {i}");
+                assert!(*predicted_done_tick > trace[i].deadline_tick, "request {i}");
+            }
+            other => panic!("request {i}: expected Shed, got {other:?}"),
+        }
+    }
+    assert_eq!(fifo.shed(), 0, "fifo is the no-controller baseline");
+    assert_eq!(fifo.completed(), n);
+    assert!(
+        slo.ttft.p99() < fifo.ttft.p99(),
+        "slo p99 ttft {} !< fifo p99 ttft {} (the admission controller must \
+         keep the burst's queueing delay out of the served tail)",
+        slo.ttft.p99(),
+        fifo.ttft.p99()
+    );
+    assert!(slo.ttft.max() < fifo.ttft.max());
+    println!(
+        "  -> slo sheds {burst} with estimates and cuts served p99 ttft {} -> {} ticks \
+         ({:.1}%), token-identical: yes\n",
+        fifo.ttft.p99(),
+        slo.ttft.p99(),
+        100.0 * (1.0 - slo.ttft.p99() as f64 / fifo.ttft.p99().max(1) as f64),
+    );
+    out.insert("requests".into(), Json::Num(n as f64));
+    out.insert("burst".into(), Json::Num(burst as f64));
+    out.insert("predicted_cost_ticks".into(), Json::Num(pred as f64));
+    Json::Obj(out)
+}
+
 fn main() {
     let args = CliArgs::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
 
@@ -1377,9 +1541,10 @@ fn main() {
     // 1f: prefix sharing off vs group on a GRPO-grouped workload; Part
     // 1g: replica fleet 1/2/4 on the straggler-skewed workload; Part
     // 1h: fault-tolerance overhead (retry backoff + quarantine); Part
-    // 1i: chunked vs monolithic prefill on the long-prompt workload. All
-    // feed BENCH_rollout.json so CI records the perf trajectory (and the
-    // bench guard compares deterministic makespans against it).
+    // 1i: chunked vs monolithic prefill on the long-prompt workload;
+    // Part 1j: slo vs fifo serving admission on the flash-crowd trace.
+    // All feed BENCH_rollout.json so CI records the perf trajectory (and
+    // the bench guard compares deterministic makespans against it).
     let paged = paged_comparison();
     let pipelined = pipelined_comparison();
     let order = admission_order_comparison();
@@ -1388,6 +1553,7 @@ fn main() {
     let fleet = fleet_comparison();
     let faults = fault_tolerance_comparison();
     let chunked = chunked_prefill_comparison();
+    let serving = serving_comparison();
     {
         let mut doc = BTreeMap::new();
         doc.insert("bench".to_string(), Json::Str("rollout".into()));
@@ -1399,6 +1565,7 @@ fn main() {
         doc.insert("fleet".to_string(), fleet);
         doc.insert("fault_tolerance".to_string(), faults);
         doc.insert("chunked_prefill".to_string(), chunked);
+        doc.insert("serving".to_string(), serving);
         let path = "BENCH_rollout.json";
         match std::fs::write(path, sparse_rl::util::json::to_string(&Json::Obj(doc))) {
             Ok(()) => println!("wrote {path}"),

@@ -379,6 +379,68 @@ impl FaultPolicy {
     }
 }
 
+/// How the serving front-end admits queued requests into a dispatch
+/// round.
+///
+/// `Slo` (default) is the deadline-aware admission controller: queued
+/// requests are considered in (priority, deadline, modeled cost) order
+/// via `Scheduler::pick_next_deadline`, and a request is admitted only
+/// when its modeled completion — virtual clock now + the round's
+/// accumulated backlog + its own predicted residency × admission cost —
+/// fits its deadline; an infeasible request is shed immediately with
+/// that estimate (reject-with-estimate, never queue collapse). `Fifo`
+/// is the baseline: admit everything in arrival order; overload shows
+/// up as unbounded queueing delay instead of sheds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServeAdmission {
+    Fifo,
+    #[default]
+    Slo,
+}
+
+impl ServeAdmission {
+    pub fn parse(s: &str) -> Result<ServeAdmission> {
+        Ok(match s {
+            "fifo" => ServeAdmission::Fifo,
+            "slo" | "deadline" => ServeAdmission::Slo,
+            other => bail!("bad serve admission {other:?} (fifo | slo)"),
+        })
+    }
+
+    pub fn is_slo(&self) -> bool {
+        matches!(self, ServeAdmission::Slo)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ServeAdmission::Fifo => "fifo",
+            ServeAdmission::Slo => "slo",
+        }
+    }
+}
+
+/// The streaming serving front-end (`serve` subcommand /
+/// `coordinator::serve`). Deadlines and the SLO are in virtual-clock
+/// ticks — the same `CostModel` units every modeled makespan uses.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Admission policy for each dispatch round (default `slo`).
+    pub admission: ServeAdmission,
+    /// Maximum requests waiting in the serve queue; an arrival past a
+    /// full queue is shed on ingest with an estimate. 0 = unbounded.
+    pub queue_depth: usize,
+    /// Default SLO: a request with no explicit deadline gets
+    /// `arrival + slo_ticks`. 0 = no deadline (admit everything the
+    /// wall accepts; only the queue-depth bound sheds).
+    pub slo_ticks: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { admission: ServeAdmission::Slo, queue_depth: 0, slo_ticks: 0 }
+    }
+}
+
 /// The memory wall: a global KV token budget shared by concurrent
 /// sequences (the simulated HBM capacity the scheduler packs against).
 #[derive(Debug, Clone, Copy)]
@@ -472,6 +534,9 @@ pub struct ExperimentConfig {
     pub sampling: SamplingConfig,
     pub train: TrainConfig,
     pub memory: MemoryConfig,
+    /// The streaming serving front-end (`serve` subcommand): admission
+    /// policy, queue bound, and the default SLO in virtual-clock ticks.
+    pub serve: ServeConfig,
     /// Optional checkpoint to start from (pretrained base model).
     pub init_checkpoint: Option<PathBuf>,
     /// Where to write checkpoints/metrics.
@@ -518,6 +583,9 @@ impl ExperimentConfig {
         "admission",
         "prefix-sharing",
         "kv-admit-headroom-pages",
+        "serve-admission",
+        "serve-queue-depth",
+        "serve-slo-ticks",
         "init-checkpoint",
         "out-dir",
     ];
@@ -545,6 +613,7 @@ impl ExperimentConfig {
             sampling: SamplingConfig::default(),
             train: TrainConfig::default(),
             memory: MemoryConfig::default(),
+            serve: ServeConfig::default(),
             init_checkpoint: None,
             out_dir: PathBuf::from("runs/default"),
         }
@@ -637,6 +706,13 @@ impl ExperimentConfig {
             "kv-admit-headroom-pages" => {
                 self.memory.kv_admit_headroom_pages =
                     value.parse().context("kv-admit-headroom-pages")?
+            }
+            "serve-admission" => self.serve.admission = ServeAdmission::parse(value)?,
+            "serve-queue-depth" => {
+                self.serve.queue_depth = value.parse().context("serve-queue-depth")?
+            }
+            "serve-slo-ticks" => {
+                self.serve.slo_ticks = value.parse().context("serve-slo-ticks")?
             }
             "init-checkpoint" => self.init_checkpoint = Some(PathBuf::from(value)),
             "out-dir" => self.out_dir = PathBuf::from(value),
@@ -867,6 +943,30 @@ mod tests {
         assert_eq!(c.prefill_chunk_tokens, 0);
         assert!(c.apply("prefill-chunk-tokens", "lots").is_err());
         assert!(ExperimentConfig::is_known_key("prefill-chunk-tokens"));
+    }
+
+    #[test]
+    fn serve_knobs() {
+        let mut c = ExperimentConfig::new(Path::new("a"));
+        // defaults: SLO admission, unbounded queue, no deadline
+        assert_eq!(c.serve.admission, ServeAdmission::Slo);
+        assert!(c.serve.admission.is_slo());
+        assert_eq!(c.serve.queue_depth, 0);
+        assert_eq!(c.serve.slo_ticks, 0);
+        c.apply("serve-admission", "fifo").unwrap();
+        assert_eq!(c.serve.admission, ServeAdmission::Fifo);
+        assert!(!c.serve.admission.is_slo());
+        c.apply("serve-admission", "deadline").unwrap();
+        assert_eq!(c.serve.admission, ServeAdmission::Slo);
+        assert!(c.apply("serve-admission", "lifo").is_err());
+        c.apply("serve-queue-depth", "64").unwrap();
+        assert_eq!(c.serve.queue_depth, 64);
+        assert!(c.apply("serve-queue-depth", "deep").is_err());
+        c.apply("serve-slo-ticks", "4000").unwrap();
+        assert_eq!(c.serve.slo_ticks, 4000);
+        assert!(c.apply("serve-slo-ticks", "soon").is_err());
+        assert_eq!(ServeAdmission::Fifo.label(), "fifo");
+        assert_eq!(ServeAdmission::Slo.label(), "slo");
     }
 
     #[test]

@@ -13,14 +13,13 @@ use anyhow::{bail, Result};
 use crate::data::task::Task;
 
 use super::super::backend::RolloutBackend;
-use super::super::kv_manager::KvMemoryManager;
-use super::super::scheduler::{AdmissionQueue, Scheduler};
+use super::super::scheduler::AdmissionQueue;
 use super::core::{
     admission_costs, admit_next, prefill_chunk_step, snap_residency, ChunkInProgress,
     DecodeCore, GenSeq, Geometry, PrefillCache, PrefillWave,
 };
 use super::stats::RolloutStats;
-use super::RolloutPolicy;
+use super::{RolloutCtx, RolloutPolicy};
 
 impl RolloutPolicy {
     /// Continuous-batching rollout with slot recycling over an arbitrarily
@@ -40,10 +39,9 @@ impl RolloutPolicy {
         b: &mut B,
         tasks: &[(usize, &Task)],
         seed: u64,
-        sched: &mut Scheduler,
-        kv: &mut KvMemoryManager,
-        seq_id_base: u64,
+        ctx: RolloutCtx,
     ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let RolloutCtx { sched, kv, seq_id_base, stream } = ctx;
         let geom = Geometry::of(b);
         let n = tasks.len();
         let mut stats = RolloutStats { chunks: 1, workers: 1, ..RolloutStats::default() };
@@ -68,8 +66,9 @@ impl RolloutPolicy {
             sched.order,
             admission_costs(sched, tasks, self.sampling.max_response),
         );
-        let mut core =
-            DecodeCore::new(geom, self.mode.is_sparse()).with_retries(self.fault_retries);
+        let mut core = DecodeCore::new(geom, self.mode.is_sparse())
+            .with_retries(self.fault_retries)
+            .with_stream(stream);
         // prefill-once-attach-G: under `prefix-sharing = group`, refills of
         // an already-prepared prompt attach the cached payload instead of
         // re-running the model (token-identical by the prepare/apply
@@ -144,6 +143,10 @@ impl RolloutPolicy {
                 break;
             }
             // ---- sample one token per occupied slot; retire finishers ---
+            // streamed tokens are stamped with the lane's accumulated work:
+            // the logits being sampled were paid for by everything charged
+            // so far (pure observability — no engine decision reads it)
+            core.clock = stats.decode_busy_ticks + stats.prefill_blocked_ticks;
             for slot in 0..geom.slots {
                 let dist = &logp[slot * geom.vocab..(slot + 1) * geom.vocab];
                 if let Some(done) = core.sample(self, slot, dist) {

@@ -13,6 +13,8 @@
 //! it does not implement any.
 
 use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -78,6 +80,66 @@ impl GenSeq {
         let mut v = self.prompt_ids.clone();
         v.extend_from_slice(&self.response_ids);
         v
+    }
+}
+
+/// One generated token, streamed live out of the decode core. `index` is
+/// the token's 0-based position within the response (`index == 0` is the
+/// first response token — its `tick` minus the request's arrival is the
+/// TTFT); `tick` is the engine's virtual-clock time when the token was
+/// produced. Tokens are the per-task-RNG tokens — identical to what the
+/// closed-batch result returns — so streaming adds observability, never a
+/// second token path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenEvent {
+    /// Caller-side task identifier (same as `GenSeq::task_idx`).
+    pub task_idx: usize,
+    /// 0-based position within the response.
+    pub index: usize,
+    pub token: i32,
+    /// Virtual-clock tick the token was produced at.
+    pub tick: u64,
+}
+
+/// Per-sequence streaming sinks: one mpsc sender per subscribed task,
+/// keyed by the caller-side task index. Cloning shares the sink table
+/// (`Arc`), so one hub can be handed to every engine lane and replica
+/// thread of a rollout. Emission is best-effort: unsubscribed tasks and
+/// dropped receivers cost one map lookup and nothing else, so engines
+/// never block (or fail) on a slow or departed consumer.
+///
+/// Preemption semantics: a preempted-and-rerun task re-emits its tokens
+/// from index 0 — bit-identical by per-task RNG — so consumers keep the
+/// FIRST event per index and treat repeats as replay, not new tokens.
+#[derive(Debug, Clone, Default)]
+pub struct StreamHub {
+    sinks: Arc<Mutex<BTreeMap<usize, Sender<TokenEvent>>>>,
+}
+
+impl StreamHub {
+    pub fn new() -> StreamHub {
+        StreamHub::default()
+    }
+
+    /// Open a stream for `task_idx`; events for that task flow into the
+    /// returned receiver until [`StreamHub::unsubscribe`] (or the hub
+    /// itself) drops the sender.
+    pub fn subscribe(&self, task_idx: usize) -> Receiver<TokenEvent> {
+        let (tx, rx) = channel();
+        self.sinks.lock().unwrap().insert(task_idx, tx);
+        rx
+    }
+
+    /// Drop `task_idx`'s sink (its receiver sees the channel close).
+    pub fn unsubscribe(&self, task_idx: usize) {
+        self.sinks.lock().unwrap().remove(&task_idx);
+    }
+
+    pub(crate) fn emit(&self, task_idx: usize, index: usize, token: i32, tick: u64) {
+        if let Some(tx) = self.sinks.lock().unwrap().get(&task_idx) {
+            // a dropped receiver is a departed consumer, not an error
+            let _ = tx.send(TokenEvent { task_idx, index, token, tick });
+        }
     }
 }
 
@@ -414,6 +476,13 @@ pub(crate) struct DecodeCore {
     /// Token fed to the next decode step per slot (PAD when idle).
     pub tokens: Vec<i32>,
     do_mask: Vec<f32>,
+    /// The engine's virtual-clock time, refreshed by the owning shell at
+    /// every sampling point; stamps streamed [`TokenEvent`]s. Pure
+    /// observability — no engine decision reads it.
+    pub clock: u64,
+    /// Live token sink, when a serving front-end subscribed one. `None`
+    /// (every closed-batch path) makes streaming a strict no-op.
+    pub stream: Option<StreamHub>,
 }
 
 impl DecodeCore {
@@ -428,11 +497,20 @@ impl DecodeCore {
             abs_pos: vec![1i32; r],
             tokens: vec![PAD; r],
             do_mask: vec![0.0f32; r],
+            clock: 0,
+            stream: None,
         }
     }
 
     pub fn with_retries(mut self, retries: usize) -> Self {
         self.retries = retries;
+        self
+    }
+
+    /// Attach (or detach) the live token sink; `None` keeps streaming a
+    /// strict no-op.
+    pub fn with_stream(mut self, stream: Option<StreamHub>) -> Self {
+        self.stream = stream;
         self
     }
 
@@ -484,6 +562,9 @@ impl DecodeCore {
             self.geom.max_seq,
         );
         self.tokens[slot] = tok;
+        if let Some(hub) = &self.stream {
+            hub.emit(live.gen.task_idx, live.gen.response_ids.len() - 1, tok, self.clock);
+        }
         if done {
             let live = self.slots[slot].take().expect("occupied");
             self.tokens[slot] = PAD;

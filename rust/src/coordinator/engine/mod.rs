@@ -42,18 +42,58 @@ mod continuous;
 mod pipelined;
 mod static_;
 
-pub use self::core::{sample_token, task_rng, GenSeq};
-pub use self::stats::RolloutStats;
+pub use self::core::{sample_token, task_rng, GenSeq, StreamHub, TokenEvent};
+pub use self::stats::{LatencyHistogram, RolloutStats};
 
 use anyhow::Result;
 
-use crate::config::{FaultPolicy, PrefillMode, PrefixSharing, RolloutMode, SamplingConfig};
+use crate::config::{
+    EngineKind, ExperimentConfig, FaultPolicy, PrefillMode, PrefixSharing, RolloutMode,
+    SamplingConfig,
+};
 use crate::data::task::Task;
 use crate::runtime::{ModelEngine, ParamsLit, Variant};
 
 use super::backend::EngineBackend;
 use super::kv_manager::KvMemoryManager;
 use super::scheduler::Scheduler;
+
+/// The per-rollout mutable context every queue engine needs, as one
+/// borrow-struct: the scheduler, the KV wall it admits against, the
+/// sequence-id namespace base, and (when a serving front-end subscribed)
+/// the live token sink. This is the API collapse the engine entry points
+/// were asking for — one `RolloutCtx` travels where the positional
+/// `(sched, kv, seq_id_base)` tail used to, and new per-run state (like
+/// `stream`) lands here instead of rippling another argument through
+/// every engine signature and call site.
+pub struct RolloutCtx<'c> {
+    pub sched: &'c mut Scheduler,
+    pub kv: &'c mut KvMemoryManager,
+    /// Namespaces this rollout's sequence ids within `kv` (callers running
+    /// several rollouts against one wall pass disjoint bases; 0 otherwise).
+    pub seq_id_base: u64,
+    /// Live per-token streaming sink; `None` (the closed-batch default)
+    /// makes streaming a strict no-op.
+    pub stream: Option<StreamHub>,
+}
+
+impl<'c> RolloutCtx<'c> {
+    pub fn new(sched: &'c mut Scheduler, kv: &'c mut KvMemoryManager) -> RolloutCtx<'c> {
+        RolloutCtx { sched, kv, seq_id_base: 0, stream: None }
+    }
+
+    /// Set the sequence-id namespace base (builder style).
+    pub fn with_base(mut self, seq_id_base: u64) -> Self {
+        self.seq_id_base = seq_id_base;
+        self
+    }
+
+    /// Attach a live token sink (builder style).
+    pub fn with_stream(mut self, stream: StreamHub) -> Self {
+        self.stream = Some(stream);
+        self
+    }
+}
 
 /// The backend-independent rollout policy: mode + sampling + the
 /// engine-scheduling switches that must never change tokens. Holds every
@@ -121,6 +161,22 @@ impl RolloutPolicy {
             fault_retries: 0,
             prefill_chunk_tokens: 0,
             fault_policy: FaultPolicy::Abort,
+        }
+    }
+
+    /// The policy an experiment config describes, in one step — the
+    /// construction-site replacement for chaining every `with_*` setter
+    /// (which had to grow at each call site whenever a knob landed).
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        RolloutPolicy {
+            mode: cfg.mode,
+            sampling: cfg.sampling,
+            steal: cfg.steal,
+            prefill: cfg.prefill,
+            sharing: cfg.memory.prefix_sharing,
+            fault_retries: cfg.fault_retries,
+            prefill_chunk_tokens: cfg.prefill_chunk_tokens,
+            fault_policy: cfg.fault_policy,
         }
     }
 
@@ -196,6 +252,23 @@ impl<'a> RolloutEngine<'a> {
             fault_retries: 0,
             prefill_chunk_tokens: 0,
             fault_policy: FaultPolicy::Abort,
+        }
+    }
+
+    /// The engine an experiment config describes, bound to `engine`'s
+    /// artifacts — one step instead of the ever-growing `with_*` chain.
+    pub fn from_config(engine: &'a ModelEngine, cfg: &ExperimentConfig) -> Self {
+        let p = RolloutPolicy::from_config(cfg);
+        RolloutEngine {
+            engine,
+            mode: p.mode,
+            sampling: p.sampling,
+            steal: p.steal,
+            prefill: p.prefill,
+            sharing: p.sharing,
+            fault_retries: p.fault_retries,
+            prefill_chunk_tokens: p.prefill_chunk_tokens,
+            fault_policy: p.fault_policy,
         }
     }
 
@@ -289,69 +362,77 @@ impl<'a> RolloutEngine<'a> {
         self.policy().rollout_static(&mut backend, tasks, seed)
     }
 
-    /// Static chunked rollout over the whole pending queue (any length).
-    /// See `RolloutPolicy::rollout_static_queue`.
-    pub fn rollout_static_queue_lit(
+    /// Open a rollout session over pre-uploaded weights: bind the engine
+    /// shell to dispatch on, the pipelined lane count (ignored by the
+    /// serial shells), and the per-run context. The session is the single
+    /// queue-rollout entry point — callers that used to pick one of three
+    /// seven-argument `rollout_*_lit` methods now build a `RolloutCtx` and
+    /// call [`RolloutSession::run`].
+    pub fn session<'p, 'c>(
         &self,
-        params: &ParamsLit,
-        tasks: &[(usize, &Task)],
-        seed: u64,
-        sched: &mut Scheduler,
-        kv: &mut KvMemoryManager,
-        seq_id_base: u64,
-    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
-        let mut backend = EngineBackend::new(self.engine, params, self.mode);
-        self.policy()
-            .rollout_static_queue(&mut backend, tasks, seed, sched, kv, seq_id_base)
-    }
-
-    /// Continuous-batching rollout over the whole pending queue (any
-    /// length), recycling slots as sequences finish. See
-    /// `RolloutPolicy::rollout_continuous`.
-    pub fn rollout_continuous_lit(
-        &self,
-        params: &ParamsLit,
-        tasks: &[(usize, &Task)],
-        seed: u64,
-        sched: &mut Scheduler,
-        kv: &mut KvMemoryManager,
-        seq_id_base: u64,
-    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
-        let mut backend = EngineBackend::new(self.engine, params, self.mode);
-        self.policy()
-            .rollout_continuous(&mut backend, tasks, seed, sched, kv, seq_id_base)
-    }
-
-    /// Pipelined rollout over the whole pending queue: `workers` decode
-    /// lanes (one `EngineBackend` each, all over this engine's artifacts)
-    /// against the shared scheduler/wall — plus, under `prefill = async`,
-    /// one extra `EngineBackend` for the dedicated prefill-executor
-    /// thread. See `RolloutPolicy::rollout_pipelined`. This is the
-    /// "handle story" for the production path: `ModelEngine` is `Sync`
-    /// (executable cache behind a mutex), so N worker threads — and the
-    /// executor — may each own an `EngineBackend` borrowing the same
-    /// engine + uploaded weights.
-    #[allow(clippy::too_many_arguments)]
-    pub fn rollout_pipelined_lit(
-        &self,
-        params: &ParamsLit,
-        tasks: &[(usize, &Task)],
-        seed: u64,
-        sched: &mut Scheduler,
-        kv: &mut KvMemoryManager,
-        seq_id_base: u64,
+        params: &'p ParamsLit,
+        kind: EngineKind,
         workers: usize,
-    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
-        let mut backends: Vec<EngineBackend> = (0..workers.max(1))
-            .map(|_| EngineBackend::new(self.engine, params, self.mode))
-            .collect();
-        if self.prefill.is_async() {
-            let mut exec = EngineBackend::new(self.engine, params, self.mode);
-            self.policy()
-                .rollout_pipelined(&mut backends, Some(&mut exec), tasks, seed, sched, kv, seq_id_base)
-        } else {
-            self.policy()
-                .rollout_pipelined(&mut backends, None, tasks, seed, sched, kv, seq_id_base)
+        ctx: RolloutCtx<'c>,
+    ) -> RolloutSession<'a, 'p, 'c> {
+        RolloutSession {
+            model: self.engine,
+            mode: self.mode,
+            policy: self.policy(),
+            params,
+            kind,
+            workers,
+            ctx,
+        }
+    }
+}
+
+/// One prepared queue rollout: the artifact binding, the engine shell to
+/// dispatch on, the lane count, and the borrowed per-run context, behind
+/// a single `run(tasks, seed)` entry point. Built by
+/// [`RolloutEngine::session`]. The pipelined shell gets `workers.max(1)`
+/// decode lanes (one `EngineBackend` each over the same artifacts) —
+/// plus, under `prefill = async`, one extra lane for the dedicated
+/// prefill-executor thread. This is the "handle story" for the
+/// production path: `ModelEngine` is `Sync` (executable cache behind a
+/// mutex), so N worker threads — and the executor — may each own an
+/// `EngineBackend` borrowing the same engine + uploaded weights.
+pub struct RolloutSession<'a, 'p, 'c> {
+    model: &'a ModelEngine,
+    mode: RolloutMode,
+    policy: RolloutPolicy,
+    params: &'p ParamsLit,
+    kind: EngineKind,
+    workers: usize,
+    ctx: RolloutCtx<'c>,
+}
+
+impl RolloutSession<'_, '_, '_> {
+    /// Run `tasks` to completion under the session's shell. Tokens are
+    /// shell-invariant (per-task RNG); the stats are the shell's own
+    /// virtual-clock accounting.
+    pub fn run(self, tasks: &[(usize, &Task)], seed: u64) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let RolloutSession { model, mode, policy, params, kind, workers, ctx } = self;
+        match kind {
+            EngineKind::Static => {
+                let mut backend = EngineBackend::new(model, params, mode);
+                policy.rollout_static_queue(&mut backend, tasks, seed, ctx)
+            }
+            EngineKind::Continuous => {
+                let mut backend = EngineBackend::new(model, params, mode);
+                policy.rollout_continuous(&mut backend, tasks, seed, ctx)
+            }
+            EngineKind::Pipelined => {
+                let mut backends: Vec<EngineBackend> = (0..workers.max(1))
+                    .map(|_| EngineBackend::new(model, params, mode))
+                    .collect();
+                if policy.prefill.is_async() {
+                    let mut exec = EngineBackend::new(model, params, mode);
+                    policy.rollout_pipelined(&mut backends, Some(&mut exec), tasks, seed, ctx)
+                } else {
+                    policy.rollout_pipelined(&mut backends, None, tasks, seed, ctx)
+                }
+            }
         }
     }
 }

@@ -49,10 +49,10 @@ use super::super::kv_manager::KvMemoryManager;
 use super::super::scheduler::{AdmissionQueue, Scheduler};
 use super::core::{
     self, admission_costs, admit_next, prefill_chunk_step, prefill_single_row, ChunkInProgress,
-    DecodeCore, GenSeq, Geometry, PrefillCache, PrefillWave,
+    DecodeCore, GenSeq, Geometry, PrefillCache, PrefillWave, StreamHub,
 };
 use super::stats::RolloutStats;
-use super::RolloutPolicy;
+use super::{RolloutCtx, RolloutPolicy};
 
 /// A slot refill admitted to the wall but not yet joined into a worker's
 /// decode batch. Its KV reservation is already held; the owning lane
@@ -116,6 +116,9 @@ struct PipeShared<'s, P> {
     /// consumes the marker and quarantines the task instead of waiting
     /// forever for a payload that will never arrive.
     failed_prepares: BTreeSet<usize>,
+    /// Live token sink (serving front-ends); each worker lane clones it
+    /// into its own `DecodeCore`. `None` keeps streaming a strict no-op.
+    stream: Option<StreamHub>,
     /// Workers that finished their drain (the executor's shutdown gate).
     workers_done: usize,
     workers_total: usize,
@@ -316,17 +319,15 @@ impl RolloutPolicy {
     /// sum over lanes; `modeled_makespan_ticks` is the lane max,
     /// `peak_live_slots` the peak globally admitted width, and the
     /// `async_prefills_*` counters the executor's global totals.
-    #[allow(clippy::too_many_arguments)]
     pub fn rollout_pipelined<B: RolloutBackend + Send>(
         &self,
         backends: &mut [B],
         prefill_backend: Option<&mut B>,
         tasks: &[(usize, &Task)],
         seed: u64,
-        sched: &mut Scheduler,
-        kv: &mut KvMemoryManager,
-        seq_id_base: u64,
+        ctx: RolloutCtx,
     ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let RolloutCtx { sched, kv, seq_id_base, stream } = ctx;
         let workers = backends.len();
         if workers == 0 {
             bail!("pipelined rollout needs at least one worker backend");
@@ -389,6 +390,7 @@ impl RolloutPolicy {
             prefill_inflight_peak: 0,
             exec_retries: 0,
             failed_prepares: BTreeSet::new(),
+            stream,
             workers_done: 0,
             workers_total: workers,
             failed: None,
@@ -575,8 +577,10 @@ impl RolloutPolicy {
         let mut stats = RolloutStats { chunks: 1, workers: 1, ..RolloutStats::default() };
         // this lane's virtual clock (ticks on the backend's cost model)
         let mut now = 0u64;
-        let mut core =
-            DecodeCore::new(geom, self.mode.is_sparse()).with_retries(self.fault_retries);
+        let stream = lock()?.stream.clone();
+        let mut core = DecodeCore::new(geom, self.mode.is_sparse())
+            .with_retries(self.fault_retries)
+            .with_stream(stream);
         // prefill-once-attach-G, per lane (sync joins only: the async
         // executor's pipeline already overlaps prepares with decode, and
         // its payloads are keyed by task — attach-sharing there would
@@ -656,6 +660,9 @@ impl RolloutPolicy {
             let t = stats.decode_busy_ticks + stats.prefill_blocked_ticks;
             stats.max_step_ticks = stats.max_step_ticks.max(t - tick_mark);
             tick_mark = t;
+            // streamed tokens carry this lane's virtual time (pure
+            // observability — no scheduling decision reads it)
+            core.clock = now;
             // ---- sample from fresh logits; release finishers ------------
             let mut released = false;
             for slot in 0..r {
@@ -718,6 +725,7 @@ impl RolloutPolicy {
                 ) {
                     Ok((row, ticks)) => {
                         now += ticks;
+                        core.clock = now;
                         if let Some(row) = row {
                             stats.refills += 1;
                             let (pos, slot) = (c.pos, c.slot);
@@ -858,6 +866,7 @@ impl RolloutPolicy {
                     continue;
                 };
                 stats.refills += 1;
+                core.clock = now;
                 // identical per-token semantics to the continuous refill
                 // path: first token from the slot-prefill logits
                 if let Some(done) = core.join(self, slot, p.pos, idx, pi, &row, seed) {

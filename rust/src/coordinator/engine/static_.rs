@@ -11,11 +11,9 @@ use crate::data::task::Task;
 use crate::data::tokenizer::PAD;
 
 use super::super::backend::RolloutBackend;
-use super::super::kv_manager::KvMemoryManager;
-use super::super::scheduler::Scheduler;
-use super::core::{admission_costs, DecodeCore, GenSeq, Geometry, PrefillWave};
+use super::core::{admission_costs, DecodeCore, GenSeq, Geometry, PrefillWave, StreamHub};
 use super::stats::RolloutStats;
-use super::RolloutPolicy;
+use super::{RolloutCtx, RolloutPolicy};
 
 /// Quarantine every live member of a static chunk after a batch backend
 /// call (wave prefill / compress / decode) exhausted its retry budget:
@@ -50,6 +48,21 @@ impl RolloutPolicy {
         tasks: &[(usize, &Task)],
         seed: u64,
     ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        self.rollout_static_stream(b, tasks, seed, None, 0)
+    }
+
+    /// `rollout_static` with the streaming extras: a live token sink and
+    /// the virtual-clock time this chunk starts at (the queue driver's
+    /// accumulated makespan — chunks run serially on one lane, so chunk
+    /// k's tokens are stamped after every earlier chunk's work).
+    fn rollout_static_stream<B: RolloutBackend>(
+        &self,
+        b: &mut B,
+        tasks: &[(usize, &Task)],
+        seed: u64,
+        stream: Option<StreamHub>,
+        clock_base: u64,
+    ) -> Result<(Vec<GenSeq>, RolloutStats)> {
         let geom = Geometry::of(b);
         let n = tasks.len();
         assert!(n <= geom.slots, "chunk of {} > {} slots", n, geom.slots);
@@ -59,8 +72,9 @@ impl RolloutPolicy {
         }
 
         // ---- prefill: the whole chunk in one batched call ---------------
-        let mut core =
-            DecodeCore::new(geom, self.mode.is_sparse()).with_retries(self.fault_retries);
+        let mut core = DecodeCore::new(geom, self.mode.is_sparse())
+            .with_retries(self.fault_retries)
+            .with_stream(stream);
         let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
         let mut wave = PrefillWave::new(&geom);
         for (slot, (idx, task)) in tasks.iter().enumerate() {
@@ -80,6 +94,13 @@ impl RolloutPolicy {
 
         // ---- decode loop: run until the slowest sequence finishes -------
         while core.occupied() > 0 {
+            // stamp streamed tokens with the lane's accumulated work (the
+            // serial makespan so far): the logits being sampled were paid
+            // for by everything already charged into this chunk's stats
+            core.clock = clock_base
+                + stats.decode_busy_ticks
+                + stats.prefill_blocked_ticks
+                + stats.sched_stall_ticks;
             for slot in 0..geom.slots {
                 let dist = &logp[slot * geom.vocab..(slot + 1) * geom.vocab];
                 if let Some(done) = core.sample(self, slot, dist) {
@@ -135,10 +156,9 @@ impl RolloutPolicy {
         b: &mut B,
         tasks: &[(usize, &Task)],
         seed: u64,
-        sched: &mut Scheduler,
-        kv: &mut KvMemoryManager,
-        seq_id_base: u64,
+        ctx: RolloutCtx,
     ) -> Result<(Vec<GenSeq>, RolloutStats)> {
+        let RolloutCtx { sched, kv, seq_id_base, stream } = ctx;
         let n = tasks.len();
         let mut pending: Vec<usize> = (0..n).collect();
         let mut results: Vec<Option<GenSeq>> = (0..n).map(|_| None).collect();
@@ -170,7 +190,15 @@ impl RolloutPolicy {
             stats.max_used_pages = stats.max_used_pages.max(kv.used_pages());
             let chunk_tasks: Vec<(usize, &Task)> =
                 chunk.items.iter().map(|&i| tasks[i]).collect();
-            let (seqs, cstats) = self.rollout_static(b, &chunk_tasks, seed)?;
+            // chunk k starts at the serial merge's accumulated makespan
+            // (chunks run back to back on this one lane)
+            let (seqs, cstats) = self.rollout_static_stream(
+                b,
+                &chunk_tasks,
+                seed,
+                stream.clone(),
+                stats.modeled_makespan_ticks,
+            )?;
             stats.merge(&cstats);
             // rollout_static returns sequences in slot (= chunk) order
             for (&pos, seq) in chunk.items.iter().zip(seqs) {

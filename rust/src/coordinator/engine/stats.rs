@@ -1,6 +1,78 @@
 //! Rollout throughput/occupancy statistics + virtual-clock tick
 //! accounting, shared by every engine shell over the decode core.
 
+/// Per-request latency distribution over virtual-clock ticks — the
+/// serving front-end keeps one each for TTFT (arrival → first streamed
+/// token), inter-token gaps, and end-to-end completion. Samples are
+/// modeled ticks (the mock backend's `CostModel`), so the histograms are
+/// bit-deterministic and the hermetic serve tests assert exact p50/p99
+/// values. Quantiles are nearest-rank over the sorted sample set: exact,
+/// scale-free, and stable under insertion order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    samples: Vec<u64>,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Record one latency sample (virtual-clock ticks).
+    pub fn record(&mut self, ticks: u64) {
+        self.samples.push(ticks);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Fold another histogram's samples into this one (fleet / per-lane
+    /// composition; quantiles over the union, not a mean of quantiles).
+    pub fn merge(&mut self, o: &LatencyHistogram) {
+        self.samples.extend_from_slice(&o.samples);
+    }
+
+    pub fn max(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
+    }
+
+    /// Nearest-rank quantile: the smallest sample with at least
+    /// `q * len` samples at or below it (`q` clamped to [0, 1]; 0 on an
+    /// empty histogram). `quantile(1.0)` is the max, `quantile(0.5)` the
+    /// upper median — exact order statistics, no interpolation, so
+    /// hermetic tests can pin values to the tick.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as usize).clamp(1, n);
+        sorted[rank - 1]
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
 /// Throughput/occupancy statistics for one rollout (any engine).
 ///
 /// `occupied_slot_steps` counts, per decode step, the slots doing live
@@ -219,6 +291,32 @@ impl RolloutStats {
 mod tests {
     use super::*;
     use crate::util::propcheck;
+
+    #[test]
+    fn latency_histogram_nearest_rank_quantiles_are_exact() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.99), 0, "empty histogram quantiles are 0");
+        assert!(h.is_empty());
+        // insertion order must not matter (nearest-rank over the sorted set)
+        for t in [40u64, 10, 30, 20, 50] {
+            h.record(t);
+        }
+        assert_eq!(h.len(), 5);
+        assert_eq!(h.p50(), 30, "upper median of 5 samples");
+        assert_eq!(h.quantile(0.0), 10, "q=0 clamps to the min rank");
+        assert_eq!(h.quantile(1.0), 50);
+        assert_eq!(h.p99(), 50, "ceil(0.99 * 5) = 5 -> the max");
+        assert_eq!(h.max(), 50);
+        assert!((h.mean() - 30.0).abs() < 1e-12);
+        // merge pools samples: quantiles over the union
+        let mut o = LatencyHistogram::new();
+        o.record(60);
+        o.record(70);
+        h.merge(&o);
+        assert_eq!(h.len(), 7);
+        assert_eq!(h.p50(), 40, "upper median shifts with the pooled set");
+        assert_eq!(h.p99(), 70);
+    }
 
     #[test]
     fn stats_merge_sums_work_and_maxes_peaks() {

@@ -17,15 +17,15 @@
 use anyhow::{bail, Result};
 
 use crate::config::{
-    AdmissionOrder, EngineKind, FaultPolicy, MemoryConfig, PrefillMode, RolloutMode,
-    SamplingConfig,
+    AdmissionOrder, EngineKind, ExperimentConfig, FaultPolicy, MemoryConfig, PrefillMode,
+    RolloutMode, SamplingConfig,
 };
 use crate::data::benchmarks::{Benchmark, Protocol};
 use crate::data::task::Task;
 use crate::runtime::{ModelEngine, ParamsLit};
 
 use super::backend::{EngineBackend, RolloutBackend};
-use super::engine::{GenSeq, RolloutPolicy};
+use super::engine::{GenSeq, RolloutCtx, RolloutPolicy};
 use super::fleet::{rollout_fleet, Replica};
 use super::kv_manager::KvMemoryManager;
 use super::scheduler::Scheduler;
@@ -114,6 +114,48 @@ impl Default for EvalOptions {
     }
 }
 
+impl EvalOptions {
+    /// Mirror every engine / memory / fleet / fault knob the trainer
+    /// reads from `ExperimentConfig`. The one construction site that
+    /// tracks the full field list lives here — callers (the `eval`
+    /// subcommand, harnesses) stop rippling when a knob is added.
+    pub fn from_config(cfg: &ExperimentConfig) -> EvalOptions {
+        EvalOptions {
+            engine: cfg.engine,
+            memory: cfg.memory,
+            rollout_workers: cfg.rollout_workers,
+            steal: cfg.steal,
+            admission_order: cfg.admission_order,
+            prefill: cfg.prefill,
+            replicas: cfg.replicas,
+            replica_steal: cfg.replica_steal,
+            fault_retries: cfg.fault_retries,
+            prefill_chunk_tokens: cfg.prefill_chunk_tokens,
+            fault_policy: cfg.fault_policy,
+        }
+    }
+
+    /// Builder over [`Default`] (or [`EvalOptions::from_config`]) for the
+    /// handful of knobs a harness actually overrides — avoids 11-field
+    /// struct literals at every test/bench call site.
+    pub fn with_engine(mut self, engine: EngineKind) -> EvalOptions {
+        self.engine = engine;
+        self
+    }
+    pub fn with_memory(mut self, memory: MemoryConfig) -> EvalOptions {
+        self.memory = memory;
+        self
+    }
+    pub fn with_workers(mut self, workers: usize) -> EvalOptions {
+        self.rollout_workers = workers;
+        self
+    }
+    pub fn with_replicas(mut self, replicas: usize) -> EvalOptions {
+        self.replicas = replicas;
+        self
+    }
+}
+
 /// Fold rolled-out samples into the per-item accuracy / length /
 /// savings summary. `seqs` carry flat sample ids (item `i` sample `j`
 /// at `i*k + j`), in any order — the fold keys off `task_idx`, so the
@@ -184,28 +226,23 @@ pub fn evaluate_with_backend<B: RolloutBackend + Send>(
         .collect();
     let (seqs, _stats) = match engine_kind {
         EngineKind::Static => {
-            policy.rollout_static_queue(&mut backends[0], &flat, rollout_seed, sched, kv, 0)?
+            let ctx = RolloutCtx::new(sched, kv);
+            policy.rollout_static_queue(&mut backends[0], &flat, rollout_seed, ctx)?
         }
         EngineKind::Continuous => {
-            policy.rollout_continuous(&mut backends[0], &flat, rollout_seed, sched, kv, 0)?
+            let ctx = RolloutCtx::new(sched, kv);
+            policy.rollout_continuous(&mut backends[0], &flat, rollout_seed, ctx)?
         }
         EngineKind::Pipelined => {
+            let ctx = RolloutCtx::new(sched, kv);
             if policy.prefill.is_async() {
                 if backends.len() < 2 {
                     bail!("pipelined async eval needs worker lanes + one executor backend");
                 }
                 let (workers, exec) = backends.split_at_mut(backends.len() - 1);
-                policy.rollout_pipelined(
-                    workers,
-                    Some(&mut exec[0]),
-                    &flat,
-                    rollout_seed,
-                    sched,
-                    kv,
-                    0,
-                )?
+                policy.rollout_pipelined(workers, Some(&mut exec[0]), &flat, rollout_seed, ctx)?
             } else {
-                policy.rollout_pipelined(backends, None, &flat, rollout_seed, sched, kv, 0)?
+                policy.rollout_pipelined(backends, None, &flat, rollout_seed, ctx)?
             }
         }
     };

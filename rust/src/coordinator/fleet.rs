@@ -45,7 +45,7 @@ use crate::data::task::Task;
 
 use super::backend::RolloutBackend;
 use super::engine::core::panic_msg;
-use super::engine::{GenSeq, RolloutPolicy, RolloutStats};
+use super::engine::{GenSeq, RolloutCtx, RolloutPolicy, RolloutStats, StreamHub};
 use super::kv_manager::KvMemoryManager;
 use super::scheduler::Scheduler;
 
@@ -158,7 +158,9 @@ struct FleetShared {
 /// Run one batch of tasks on one replica with the configured engine
 /// shell. `base` namespaces sequence ids within the replica's own KV
 /// wall (walls are private, so bases only need to be distinct across a
-/// single replica's successive runs).
+/// single replica's successive runs). `stream`, when a serving front-end
+/// subscribed one, is cloned into the engine context — the hub is shared
+/// (`Arc`), so every replica emits into the same per-request sinks.
 fn run_batch<B: RolloutBackend + Send>(
     policy: &RolloutPolicy,
     engine: EngineKind,
@@ -166,22 +168,24 @@ fn run_batch<B: RolloutBackend + Send>(
     batch: &[(usize, &Task)],
     seed: u64,
     base: u64,
+    stream: &Option<StreamHub>,
 ) -> Result<(Vec<GenSeq>, RolloutStats)> {
     let Replica { sched, kv, backends } = rep;
+    let ctx = RolloutCtx { sched, kv, seq_id_base: base, stream: stream.clone() };
     match engine {
         EngineKind::Static => {
-            policy.rollout_static_queue(&mut backends[0], batch, seed, sched, kv, base)
+            policy.rollout_static_queue(&mut backends[0], batch, seed, ctx)
         }
         EngineKind::Continuous => {
-            policy.rollout_continuous(&mut backends[0], batch, seed, sched, kv, base)
+            policy.rollout_continuous(&mut backends[0], batch, seed, ctx)
         }
         EngineKind::Pipelined => {
             if policy.prefill.is_async() && backends.len() >= 2 {
                 let split = backends.len() - 1;
                 let (lanes, exec) = backends.split_at_mut(split);
-                policy.rollout_pipelined(lanes, Some(&mut exec[0]), batch, seed, sched, kv, base)
+                policy.rollout_pipelined(lanes, Some(&mut exec[0]), batch, seed, ctx)
             } else {
-                policy.rollout_pipelined(backends, None, batch, seed, sched, kv, base)
+                policy.rollout_pipelined(backends, None, batch, seed, ctx)
             }
         }
     }
@@ -202,6 +206,24 @@ pub fn rollout_fleet<B: RolloutBackend + Send>(
     seed: u64,
     replica_steal: bool,
 ) -> Result<(Vec<GenSeq>, RolloutStats, FleetReport)> {
+    rollout_fleet_streaming(policy, engine, replicas, tasks, seed, replica_steal, None)
+}
+
+/// [`rollout_fleet`] with a live token sink: the serving front-end's
+/// entry. The hub is shared (`Arc`-cloned into every replica thread's
+/// engine context), so per-request streams work across replica
+/// boundaries — including stolen and failed-over tasks, whose events
+/// carry the same caller-side task index wherever they run. `None` is
+/// bit-exact with `rollout_fleet`.
+pub fn rollout_fleet_streaming<B: RolloutBackend + Send>(
+    policy: &RolloutPolicy,
+    engine: EngineKind,
+    replicas: &mut [Replica<B>],
+    tasks: &[(usize, &Task)],
+    seed: u64,
+    replica_steal: bool,
+    stream: Option<StreamHub>,
+) -> Result<(Vec<GenSeq>, RolloutStats, FleetReport)> {
     let n_reps = replicas.len();
     if n_reps == 0 {
         bail!("rollout_fleet needs at least one replica");
@@ -219,7 +241,7 @@ pub fn rollout_fleet<B: RolloutBackend + Send>(
         // Single replica: the fleet tier vanishes — one engine pass,
         // calling thread, seq ids from 0. This is the `replicas = 1`
         // bit-exactness guarantee.
-        let (seqs, stats) = run_batch(policy, engine, &mut replicas[0], tasks, seed, 0)?;
+        let (seqs, stats) = run_batch(policy, engine, &mut replicas[0], tasks, seed, 0, &stream)?;
         let mut fleet = RolloutStats::default();
         fleet.merge_parallel(&stats);
         let report = FleetReport {
@@ -260,6 +282,7 @@ pub fn rollout_fleet<B: RolloutBackend + Send>(
     // replica error fails the whole fleet, nothing waits or requeues).
     let failover = policy.fault_policy.is_quarantine();
 
+    let stream = &stream;
     std::thread::scope(|scope| {
         for (r, rep) in replicas.iter_mut().enumerate() {
             let (shared, cv) = (&shared, &cv);
@@ -348,7 +371,7 @@ pub fn rollout_fleet<B: RolloutBackend + Send>(
                     // replica can die IN BAND: flag itself dead, requeue
                     // its work, and let survivors finish the step.
                     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || run_batch(policy, engine, rep, &batch, seed, base),
+                        || run_batch(policy, engine, rep, &batch, seed, base, stream),
                     ));
                     let note = match outcome {
                         Ok(Ok((seqs, rstats))) => {

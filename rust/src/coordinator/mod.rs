@@ -19,6 +19,9 @@
 //! * `rejection`  — Sparsity-Aware Rejection Sampling (Eq. 5-6)
 //! * `reweight`   — Importance-based Reweighting inputs (Eq. 7)
 //! * `trainer`    — the full RL loop tying it together
+//! * `serve`      — streaming serving front-end: deadline-aware (SLO)
+//!   admission over the session rollout API, with per-request token
+//!   streams and latency histograms on the virtual clock
 //! * `eval`       — the 7-benchmark evaluation harness
 //! * `metrics`    — training-dynamics time series (Figs. 1-6)
 
@@ -33,14 +36,19 @@ pub mod mock;
 pub mod rejection;
 pub mod reweight;
 pub mod scheduler;
+pub mod serve;
 pub mod trainer;
 
 pub use backend::{CostModel, EngineBackend, PreparedSlotPrefill, RolloutBackend};
-pub use engine::{task_rng, GenSeq, RolloutEngine, RolloutPolicy, RolloutStats};
+pub use engine::{
+    task_rng, GenSeq, LatencyHistogram, RolloutCtx, RolloutEngine, RolloutPolicy, RolloutStats,
+    StreamHub, TokenEvent,
+};
 pub use eval::{
     evaluate, evaluate_suite, evaluate_with_backend, evaluate_with_fleet, EvalOptions, EvalResult,
 };
-pub use fleet::{rollout_fleet, route_tasks, FleetReport, Replica};
+pub use fleet::{rollout_fleet, rollout_fleet_streaming, route_tasks, FleetReport, Replica};
+pub use serve::{synthetic_trace, ServeOutcome, ServeReport, ServeRequest, ServeServer, ShedReason};
 pub use kv_manager::KvMemoryManager;
 pub use metrics::Metrics;
 pub use mock::{FaultKind, FaultOp, FaultPlan, MockModelBackend};

@@ -357,6 +357,44 @@ impl Scheduler {
         }
     }
 
+    /// Deadline-aware generalization of [`Scheduler::pick_next`] (the
+    /// serving front-end's queue pick): earliest-deadline-first over the
+    /// queue, with `admission_cost` breaking deadline ties and queue order
+    /// breaking cost ties — the same stable first-min discipline as
+    /// `pick_next`. Missing entries read as "no deadline" (`u64::MAX`),
+    /// so a queue whose deadlines are ALL infinite degenerates EXACTLY to
+    /// shortest-first (`pick_next` under `AdmissionOrder::ShortestFirst`
+    /// is the oracle; the propcheck replays random queues through both).
+    /// Ignores `self.order` deliberately: the serve loop's admission mode
+    /// (`serve-admission = fifo|slo`) decides which picker runs, not the
+    /// rollout-engine ordering knob.
+    pub fn pick_next_deadline(
+        &self,
+        queue: &VecDeque<usize>,
+        cost: &[usize],
+        deadline: &[u64],
+    ) -> Option<usize> {
+        (0..queue.len()).min_by_key(|&qi| {
+            let task = queue[qi];
+            (
+                deadline.get(task).copied().unwrap_or(u64::MAX),
+                cost.get(task).copied().unwrap_or(usize::MAX),
+            )
+        })
+    }
+
+    /// Modeled completion cost of one request, in virtual-clock ticks:
+    /// `predicted_residency × admission_cost` — the same load model the
+    /// fleet router balances replicas by, reused as the serving
+    /// front-end's admission controller. A request is admitted when
+    /// `now + predicted_cost_ticks` fits its deadline and shed with this
+    /// estimate otherwise, so overload degrades to honest rejections
+    /// instead of queue collapse.
+    pub fn predicted_cost_ticks(&self, prompt_tokens: usize, max_response: usize) -> u64 {
+        self.predicted_residency(prompt_tokens, max_response) as u64
+            * self.admission_cost(prompt_tokens, max_response) as u64
+    }
+
     /// Tokens a fresh sequence with `prompt_tokens` of prompt is charged
     /// at admission. Worst-case: the full bound. Paged: the prompt plus
     /// the first decode write (page-rounded by the manager).

@@ -585,6 +585,79 @@ fn width_paged_tracks_mean_residency() {
 }
 
 #[test]
+fn pick_next_deadline_orders_by_edf_then_cost_then_queue() {
+    let s = mk(4, 100);
+    // deadlines/cost indexed by TASK position; queue holds positions
+    let cost = vec![80usize, 20, 50, 20];
+    let deadline = vec![900u64, 500, 500, 100];
+    let queue: VecDeque<usize> = vec![0, 1, 2, 3].into();
+    // earliest deadline wins regardless of cost or queue position
+    assert_eq!(s.pick_next_deadline(&queue, &cost, &deadline), Some(3));
+    // deadline tie (tasks 1 and 2 at 500): cheaper cost wins
+    let queue: VecDeque<usize> = vec![0, 2, 1].into();
+    let deadline = vec![900u64, 500, 500, 100];
+    assert_eq!(s.pick_next_deadline(&queue, &cost, &deadline), Some(2), "cost 20 beats 50");
+    // deadline AND cost tie: earlier queue position wins (stable)
+    let cost = vec![20usize, 20, 20];
+    let deadline = vec![500u64, 500, 500];
+    let queue: VecDeque<usize> = vec![2, 0, 1].into();
+    assert_eq!(s.pick_next_deadline(&queue, &cost, &deadline), Some(0), "stable first-min");
+    // a missing deadline entry reads as infinite — it never preempts a
+    // task with a real deadline
+    let queue: VecDeque<usize> = vec![4, 1].into(); // task 4 out of range
+    assert_eq!(s.pick_next_deadline(&queue, &cost, &deadline), Some(1));
+    // the picker ignores the scheduler's own admission order knob — the
+    // serve-admission knob decides who calls it, not how it sorts
+    let sjf = mk(4, 100).with_order(AdmissionOrder::ShortestFirst);
+    let cost = vec![80usize, 20];
+    let deadline = vec![100u64, 900];
+    let queue: VecDeque<usize> = vec![0, 1].into();
+    assert_eq!(sjf.pick_next_deadline(&queue, &cost, &deadline), Some(0));
+    let empty: VecDeque<usize> = VecDeque::new();
+    assert_eq!(s.pick_next_deadline(&empty, &cost, &deadline), None);
+}
+
+#[test]
+fn predicted_cost_ticks_is_residency_times_admission_cost() {
+    let s = mk(8, 100);
+    // below the cap: (p + r + 1)^2; at the cap: reserve * (p + r + 1) —
+    // the same product the fleet router's load model charges per task
+    assert_eq!(s.predicted_cost_ticks(10, 20), 31 * 31);
+    assert_eq!(s.predicted_cost_ticks(90, 20), 100 * 111);
+    // monotone in prompt length (shed decisions must be order-sane)
+    assert!(s.predicted_cost_ticks(80, 20) < s.predicted_cost_ticks(90, 20));
+}
+
+#[test]
+fn prop_pick_next_deadline_degenerates_to_shortest_first() {
+    // With every deadline infinite, the EDF key collapses to
+    // (cost, queue order) — exactly `pick_next` under ShortestFirst.
+    // The existing picker is the oracle, over heavily tied costs.
+    propcheck::quick("deadline-degenerates-to-sjf", |rng, size| {
+        let n = 1 + rng.below(4 + size);
+        let cost: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let deadline = vec![u64::MAX; n];
+        let sjf = mk(4, 100).with_order(AdmissionOrder::ShortestFirst);
+        // drive both pickers through a full random-order drain
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut queue: VecDeque<usize> = order.into_iter().collect();
+        while !queue.is_empty() {
+            let got = sjf.pick_next_deadline(&queue, &cost, &deadline);
+            let want = sjf.pick_next(&queue, &cost);
+            if got != want {
+                return Err(format!(
+                    "infinite deadlines diverged from shortest-first: \
+                     {got:?} != {want:?} (cost {cost:?}, queue {queue:?})"
+                ));
+            }
+            let _ = queue.remove(got.ok_or("picker returned None on non-empty queue")?);
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn continuous_never_worse_than_static_prediction() {
     propcheck::quick("continuous-leq-static", |rng, size| {
         let s = mk(1 + rng.below(8), 1 + rng.below(64));

@@ -1,0 +1,376 @@
+//! Streaming serving front-end: SLO-aware admission over the session
+//! rollout API.
+//!
+//! The serve loop is a long-lived, round-based service over the existing
+//! engine stack. Requests arrive on a deterministic virtual-clock trace
+//! (`ServeRequest { task, arrival, deadline, priority }`); each round the
+//! server pulls the due arrivals, runs the admission controller, and
+//! dispatches the admitted batch through the exact rollout shells the
+//! trainer uses (`RolloutCtx` + the engine entry points — static,
+//! continuous, or pipelined, chunked prefill and all). Per-request tokens
+//! stream out of the decode core through a [`StreamHub`], stamped with
+//! the engine's virtual clock, which is what makes TTFT / inter-token /
+//! end-to-end latency hermetically assertable on the mock backend.
+//!
+//! Admission (`serve-admission` knob):
+//!
+//! * `slo`  — the modeled-makespan oracle as an admission controller: a
+//!   request is admitted iff its predicted cost
+//!   ([`Scheduler::predicted_cost_ticks`], the same
+//!   residency × admission-cost product the fleet router load-balances
+//!   by) fits before its deadline; otherwise it is shed immediately with
+//!   a reject-with-estimate ([`ServeOutcome::Shed`] carries the modeled
+//!   completion tick the client would have seen). Under overload the
+//!   queue therefore never collapses — late work is refused up front
+//!   instead of rotting in the queue and dragging every later request
+//!   past its own deadline. Dispatch order within a round is
+//!   [`Scheduler::pick_next_deadline`] (EDF, cost tie-break).
+//! * `fifo` — the no-controller baseline: everything is admitted in
+//!   arrival order and the tail latency lands where it lands. Kept as
+//!   the comparison arm for the serving bench.
+//!
+//! Tokens are serve-invariant: per-task RNG keys off (seed, request
+//! index), so an admitted request streams exactly the tokens a
+//! closed-batch rollout of the same trace would produce — round
+//! composition, admission policy, and shedding change latency only.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+
+use anyhow::{bail, Result};
+
+use crate::config::{EngineKind, ServeConfig};
+use crate::data::task::Task;
+
+use super::backend::RolloutBackend;
+use super::engine::{
+    LatencyHistogram, RolloutCtx, RolloutPolicy, RolloutStats, StreamHub, TokenEvent,
+};
+use super::kv_manager::KvMemoryManager;
+use super::scheduler::Scheduler;
+
+/// One serving request: a task plus its arrival and service-level terms,
+/// all in virtual-clock ticks (the mock cost model's unit; zero-cost on
+/// real backends, where the trace degenerates to batch order).
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub task: Task,
+    /// Virtual tick the request becomes visible to the server.
+    pub arrival_tick: u64,
+    /// Absolute completion deadline (`u64::MAX` = no SLO — never shed).
+    pub deadline_tick: u64,
+    /// Dispatch priority: higher dispatches first among equal deadlines
+    /// and costs (the serve queue is priority-ordered before the
+    /// deadline picker's stable queue-order tie-break applies).
+    pub priority: u32,
+}
+
+impl ServeRequest {
+    pub fn new(task: Task, arrival_tick: u64) -> ServeRequest {
+        ServeRequest { task, arrival_tick, deadline_tick: u64::MAX, priority: 0 }
+    }
+
+    /// Set an absolute completion deadline (builder style).
+    pub fn with_deadline(mut self, deadline_tick: u64) -> Self {
+        self.deadline_tick = deadline_tick;
+        self
+    }
+
+    /// Set the dispatch priority (builder style).
+    pub fn with_priority(mut self, priority: u32) -> Self {
+        self.priority = priority;
+        self
+    }
+}
+
+/// Why a request was shed instead of served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The admission oracle predicted the deadline cannot be met.
+    Deadline,
+    /// The bounded pending queue (`serve-queue-depth`) was full on
+    /// arrival.
+    QueueFull,
+}
+
+/// Per-request terminal state. Every request in the trace gets exactly
+/// one outcome; latencies are virtual-clock ticks measured from the
+/// request's arrival.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeOutcome {
+    Completed {
+        /// The streamed response (identical to the closed-batch tokens).
+        response: Vec<i32>,
+        /// Arrival → first streamed token.
+        ttft_ticks: u64,
+        /// Arrival → last streamed token.
+        e2e_ticks: u64,
+    },
+    /// Reject-with-estimate: the server refused the request and told the
+    /// client what the model predicted — the admission cost it would
+    /// have charged and the tick it would have completed at.
+    Shed {
+        reason: ShedReason,
+        predicted_cost_ticks: u64,
+        predicted_done_tick: u64,
+    },
+}
+
+impl ServeOutcome {
+    pub fn is_shed(&self) -> bool {
+        matches!(self, ServeOutcome::Shed { .. })
+    }
+}
+
+/// Everything one serve run produced: per-request outcomes (indexed like
+/// the input trace), the three live latency histograms, and the merged
+/// engine stats underneath.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub outcomes: Vec<ServeOutcome>,
+    /// Time-to-first-token over completed requests.
+    pub ttft: LatencyHistogram,
+    /// Gaps between consecutive streamed tokens of one request.
+    pub inter_token: LatencyHistogram,
+    /// Arrival → last token over completed requests.
+    pub e2e: LatencyHistogram,
+    /// Dispatch rounds the trace took.
+    pub rounds: usize,
+    /// Virtual clock when the last round finished.
+    pub makespan_ticks: u64,
+    /// Serial merge of every round's rollout stats.
+    pub stats: RolloutStats,
+}
+
+impl ServeReport {
+    pub fn completed(&self) -> usize {
+        self.outcomes.iter().filter(|o| !o.is_shed()).count()
+    }
+
+    pub fn shed(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.is_shed()).count()
+    }
+}
+
+/// Build the deterministic open-loop arrival trace the `serve`
+/// subcommand and the benches drive: request `i` arrives at
+/// `i * interarrival_ticks` with deadline `arrival + slo_ticks`
+/// (`slo_ticks = 0` = no deadline), priority 0.
+pub fn synthetic_trace(tasks: Vec<Task>, interarrival_ticks: u64, slo_ticks: u64) -> Vec<ServeRequest> {
+    tasks
+        .into_iter()
+        .enumerate()
+        .map(|(i, task)| {
+            let arrival = i as u64 * interarrival_ticks;
+            let deadline = if slo_ticks == 0 { u64::MAX } else { arrival + slo_ticks };
+            ServeRequest::new(task, arrival).with_deadline(deadline)
+        })
+        .collect()
+}
+
+/// The serving front-end: one engine stack (scheduler + KV wall + lane
+/// pool) behind an admission-controlled request queue. Generic over the
+/// backend so the whole loop — admission, shedding, streaming, latency
+/// accounting — is exercised hermetically on the mock.
+///
+/// Backend-lane convention matches `evaluate_with_backend`: the serial
+/// engines use `backends[0]`; the pipelined engine uses them all, and
+/// when the policy selects `prefill = async` the LAST backend is the
+/// dedicated prefill-executor lane.
+pub struct ServeServer<B: RolloutBackend + Send> {
+    policy: RolloutPolicy,
+    kind: EngineKind,
+    cfg: ServeConfig,
+    backends: Vec<B>,
+    sched: Scheduler,
+    kv: KvMemoryManager,
+}
+
+impl<B: RolloutBackend + Send> ServeServer<B> {
+    pub fn new(
+        policy: RolloutPolicy,
+        kind: EngineKind,
+        cfg: ServeConfig,
+        backends: Vec<B>,
+        sched: Scheduler,
+        kv: KvMemoryManager,
+    ) -> ServeServer<B> {
+        ServeServer { policy, kind, cfg, backends, sched, kv }
+    }
+
+    /// Serve an arrival trace to completion. `trace` must be sorted by
+    /// `arrival_tick`; `seed` keys the per-task RNG streams off the
+    /// request index, so tokens match a closed-batch rollout of the same
+    /// trace under the same seed exactly.
+    pub fn run(&mut self, trace: &[ServeRequest], seed: u64) -> Result<ServeReport> {
+        if self.backends.is_empty() {
+            bail!("serve needs at least one backend lane");
+        }
+        if trace.windows(2).any(|w| w[0].arrival_tick > w[1].arrival_tick) {
+            bail!("serve trace must be sorted by arrival tick");
+        }
+        let ServeServer { policy, kind, cfg, backends, sched, kv } = self;
+        let n = trace.len();
+        let max_response = policy.sampling.max_response;
+        // the admission oracle's terms, by request index (the "task
+        // position" namespace the deadline picker indexes)
+        let cost: Vec<usize> = trace
+            .iter()
+            .map(|r| sched.predicted_cost_ticks(r.task.prompt_ids.len(), max_response) as usize)
+            .collect();
+        let deadline: Vec<u64> = trace.iter().map(|r| r.deadline_tick).collect();
+
+        let mut outcomes: Vec<Option<ServeOutcome>> = vec![None; n];
+        let mut ttft = LatencyHistogram::new();
+        let mut inter_token = LatencyHistogram::new();
+        let mut e2e = LatencyHistogram::new();
+        let mut stats_total = RolloutStats::default();
+        let mut rounds = 0usize;
+        let mut now = 0u64;
+        let mut next = 0usize; // trace cursor
+        let mut queue: VecDeque<usize> = VecDeque::new();
+
+        loop {
+            // pull due arrivals; a bounded queue sheds overflow on the
+            // spot (reject-with-estimate, like any other shed)
+            while next < n && trace[next].arrival_tick <= now {
+                if cfg.queue_depth > 0 && queue.len() >= cfg.queue_depth {
+                    outcomes[next] = Some(ServeOutcome::Shed {
+                        reason: ShedReason::QueueFull,
+                        predicted_cost_ticks: cost[next] as u64,
+                        predicted_done_tick: now + cost[next] as u64,
+                    });
+                } else {
+                    queue.push_back(next);
+                }
+                next += 1;
+            }
+            if queue.is_empty() {
+                if next < n {
+                    // idle until the next arrival
+                    now = now.max(trace[next].arrival_tick);
+                    continue;
+                }
+                break;
+            }
+            // priority classes dispatch first; the sort is stable so the
+            // deadline picker's queue-order tie-break still resolves
+            // inside a class by arrival
+            let mut held: Vec<usize> = queue.drain(..).collect();
+            held.sort_by_key(|&r| std::cmp::Reverse(trace[r].priority));
+            let mut pending: VecDeque<usize> = held.into();
+
+            // admission at round start: every queued request is either
+            // dispatched this round or shed with an estimate — under
+            // overload the queue refuses work instead of collapsing
+            let mut batch_reqs: Vec<usize> = Vec::new();
+            if cfg.admission.is_slo() {
+                while let Some(qi) = sched.pick_next_deadline(&pending, &cost, &deadline) {
+                    let r = pending.remove(qi).expect("picked index in range");
+                    let predicted = cost[r] as u64;
+                    if now.saturating_add(predicted) > trace[r].deadline_tick {
+                        outcomes[r] = Some(ServeOutcome::Shed {
+                            reason: ShedReason::Deadline,
+                            predicted_cost_ticks: predicted,
+                            predicted_done_tick: now + predicted,
+                        });
+                    } else {
+                        batch_reqs.push(r);
+                    }
+                }
+            } else {
+                batch_reqs.extend(pending.drain(..));
+            }
+            if batch_reqs.is_empty() {
+                continue; // everything due was shed; wait for arrivals
+            }
+
+            // dispatch one session round: task_idx IS the request index,
+            // so tokens are a pure function of (seed, request) — the
+            // closed-batch identity the serve tests pin
+            rounds += 1;
+            let hub = StreamHub::new();
+            let taps: Vec<(usize, Receiver<TokenEvent>)> =
+                batch_reqs.iter().map(|&r| (r, hub.subscribe(r))).collect();
+            let flat: Vec<(usize, &Task)> =
+                batch_reqs.iter().map(|&r| (r, &trace[r].task)).collect();
+            let ctx = RolloutCtx::new(sched, kv).with_stream(hub);
+            let (seqs, stats) = match *kind {
+                EngineKind::Static => {
+                    policy.rollout_static_queue(&mut backends[0], &flat, seed, ctx)?
+                }
+                EngineKind::Continuous => {
+                    policy.rollout_continuous(&mut backends[0], &flat, seed, ctx)?
+                }
+                EngineKind::Pipelined => {
+                    if policy.prefill.is_async() && backends.len() >= 2 {
+                        let split = backends.len() - 1;
+                        let (lanes, exec) = backends.split_at_mut(split);
+                        policy.rollout_pipelined(lanes, Some(&mut exec[0]), &flat, seed, ctx)?
+                    } else {
+                        policy.rollout_pipelined(backends, None, &flat, seed, ctx)?
+                    }
+                }
+            };
+
+            // fold the round's streams into per-request latencies; event
+            // ticks are round-relative, `now` is the round's epoch
+            for (r, rx) in taps {
+                // keep the FIRST event per index (preempted-and-rerun
+                // tasks replay their prefix bit-identically)
+                let mut first_tick: Vec<Option<u64>> = Vec::new();
+                for ev in rx.try_iter() {
+                    if ev.index >= first_tick.len() {
+                        first_tick.resize(ev.index + 1, None);
+                    }
+                    if first_tick[ev.index].is_none() {
+                        first_tick[ev.index] = Some(ev.tick);
+                    }
+                }
+                let seq = seqs
+                    .iter()
+                    .find(|s| s.task_idx == r)
+                    .ok_or_else(|| anyhow::anyhow!("request {r} dispatched but not returned"))?;
+                let ticks: Vec<u64> = first_tick.iter().filter_map(|t| *t).collect();
+                let arrival = trace[r].arrival_tick;
+                let (ttft_ticks, e2e_ticks) = match (ticks.first(), ticks.last()) {
+                    (Some(&first), Some(&last)) => {
+                        let ttft_t = (now + first).saturating_sub(arrival);
+                        let e2e_t = (now + last).saturating_sub(arrival);
+                        ttft.record(ttft_t);
+                        e2e.record(e2e_t);
+                        for pair in ticks.windows(2) {
+                            inter_token.record(pair[1].saturating_sub(pair[0]));
+                        }
+                        (ttft_t, e2e_t)
+                    }
+                    // a request that streamed nothing (e.g. quarantined
+                    // before its first token) records no latency sample
+                    _ => (0, 0),
+                };
+                outcomes[r] = Some(ServeOutcome::Completed {
+                    response: seq.response_ids.clone(),
+                    ttft_ticks,
+                    e2e_ticks,
+                });
+            }
+            now += stats.modeled_makespan_ticks;
+            stats_total.merge(&stats);
+        }
+
+        let outcomes: Vec<ServeOutcome> = outcomes
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| o.ok_or_else(|| anyhow::anyhow!("request {i} never resolved")))
+            .collect::<Result<_>>()?;
+        Ok(ServeReport {
+            outcomes,
+            ttft,
+            inter_token,
+            e2e,
+            rounds,
+            makespan_ticks: now,
+            stats: stats_total,
+        })
+    }
+}

@@ -25,7 +25,7 @@ use crate::runtime::{ModelEngine, ParamsLit, TrainState};
 use crate::util::rng::Rng;
 
 use super::backend::EngineBackend;
-use super::engine::{GenSeq, RolloutEngine, RolloutStats};
+use super::engine::{GenSeq, RolloutCtx, RolloutEngine, RolloutStats};
 use super::fleet::{rollout_fleet, FleetReport, Replica};
 use super::group::{batched_group_advantages, summarize};
 use super::kv_manager::KvMemoryManager;
@@ -225,13 +225,7 @@ impl<'a> Trainer<'a> {
     ) -> Result<(Vec<GenSeq>, RolloutStats)> {
         let g = self.cfg.train.group_size;
         let n = task_indices.len() * g;
-        let rollout = RolloutEngine::new(self.engine, self.cfg.mode, self.cfg.sampling)
-            .with_steal(self.cfg.steal)
-            .with_prefill(self.cfg.prefill)
-            .with_sharing(self.cfg.memory.prefix_sharing)
-            .with_fault_retries(self.cfg.fault_retries)
-            .with_prefill_chunk_tokens(self.cfg.prefill_chunk_tokens)
-            .with_fault_policy(self.cfg.fault_policy);
+        let rollout = RolloutEngine::from_config(self.engine, &self.cfg);
         let seed = self.rng.next_u64();
         let params = ParamsLit::new(&self.state.params);
         // flat sequence ids: seq s belongs to prompt s / g
@@ -288,33 +282,9 @@ impl<'a> Trainer<'a> {
             .with_headroom(self.cfg.memory.kv_admit_headroom_pages)
             .with_order(self.cfg.admission_order)
             .with_sharing(self.cfg.memory.prefix_sharing);
-        match self.cfg.engine {
-            EngineKind::Continuous => rollout.rollout_continuous_lit(
-                &params,
-                &tasks,
-                seed,
-                &mut scheduler,
-                &mut self.kv,
-                0,
-            ),
-            EngineKind::Pipelined => rollout.rollout_pipelined_lit(
-                &params,
-                &tasks,
-                seed,
-                &mut scheduler,
-                &mut self.kv,
-                0,
-                self.cfg.rollout_workers,
-            ),
-            EngineKind::Static => rollout.rollout_static_queue_lit(
-                &params,
-                &tasks,
-                seed,
-                &mut scheduler,
-                &mut self.kv,
-                0,
-            ),
-        }
+        let (kind, workers) = (self.cfg.engine, self.cfg.rollout_workers);
+        let ctx = RolloutCtx::new(&mut scheduler, &mut self.kv);
+        rollout.session(&params, kind, workers, ctx).run(&tasks, seed)
     }
 
     /// Dense teacher-forcing scores for a set of sequences under the

@@ -5,6 +5,8 @@
 //!   train      RL training (dense | naive:<m> | sparse-rl:<m>)
 //!   eval       benchmark-suite evaluation of a checkpoint
 //!   rollout    print sample generations (debugging / demos)
+//!   serve      streaming serving front-end on a deterministic arrival
+//!              trace (SLO admission, shedding, latency histograms)
 //!   table3     print the benchmark-statistics table (paper Table 3)
 //!   latency    per-artifact execution latency report
 //!
@@ -32,7 +34,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: sparse-rl <pretrain|train|eval|rollout|table3|latency> [options]
+        "usage: sparse-rl <pretrain|train|eval|rollout|serve|table3|latency> [options]
   common:   --model <nano|tiny|small|base|e2e>   --artifacts <dir>
   pretrain: --steps N --seed S --out ckpt.srl
   train:    --mode <dense|naive:M|sparse-rl:M> --steps N
@@ -47,7 +49,12 @@ fn usage() -> ! {
             [--fault-retries N] [--fault-policy abort|quarantine]
             [--prefill-chunk-tokens N]
             (unrecognized --flags are an error listing the valid set)
-  rollout:  --checkpoint ckpt --mode <...> [--n 4] [--temperature T]"
+  rollout:  --checkpoint ckpt --mode <...> [--n 4] [--temperature T]
+  serve:    hermetic mock-backend serving demo (no artifacts needed)
+            [--requests N] [--interarrival TICKS] [--slots N] [--seed S]
+            [--serve-admission slo|fifo] [--serve-queue-depth N]
+            [--serve-slo-ticks N] [--mode <...>] [--engine <...>]
+            [--rollout-workers N] [--prefill sync|async] [...]"
     );
     std::process::exit(2);
 }
@@ -90,6 +97,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "rollout" => cmd_rollout(&args),
+        "serve" => cmd_serve(&args),
         "table3" => cmd_table3(),
         "latency" => cmd_latency(&args),
         other => {
@@ -216,19 +224,7 @@ fn cmd_eval(args: &CliArgs) -> Result<()> {
             cfg.apply(key, v).with_context(|| format!("--{key}"))?;
         }
     }
-    let opts = sparse_rl::coordinator::EvalOptions {
-        engine: cfg.engine,
-        memory: cfg.memory,
-        rollout_workers: cfg.rollout_workers,
-        steal: cfg.steal,
-        admission_order: cfg.admission_order,
-        prefill: cfg.prefill,
-        replicas: cfg.replicas,
-        replica_steal: cfg.replica_steal,
-        fault_retries: cfg.fault_retries,
-        prefill_chunk_tokens: cfg.prefill_chunk_tokens,
-        fault_policy: cfg.fault_policy,
-    };
+    let opts = sparse_rl::coordinator::EvalOptions::from_config(&cfg);
     match args.opt("bench") {
         Some(name) => {
             let suite = benchmarks::suite();
@@ -282,6 +278,137 @@ fn cmd_rollout(args: &CliArgs) -> Result<()> {
             seq.accounting.toks_saving()
         );
         println!("response: {}\n", tokenizer::decode(&seq.response_ids));
+    }
+    Ok(())
+}
+
+/// Options the serve subcommand accepts beyond `ExperimentConfig`'s keys.
+const SERVE_EXTRA_KEYS: &[&str] = &["requests", "interarrival", "slots", "config"];
+
+/// Drive the streaming serving front-end over a deterministic open-loop
+/// arrival trace on the mock backend — hermetic (no artifacts), with the
+/// representative cost model providing the virtual clock, so the printed
+/// TTFT / inter-token / e2e latencies and shed counts are reproducible
+/// to the tick for a given flag set.
+fn cmd_serve(args: &CliArgs) -> Result<()> {
+    use sparse_rl::coordinator::{
+        synthetic_trace, CostModel, KvMemoryManager, MockModelBackend, RolloutPolicy, Scheduler,
+        ServeOutcome, ServeServer, ShedReason,
+    };
+    use sparse_rl::config::EngineKind;
+
+    reject_unknown_options(args, SERVE_EXTRA_KEYS)?;
+    let mut cfg = ExperimentConfig::new(std::path::Path::new("runs/serve"));
+    cfg.apply_cli(args)?;
+    // fail loudly on bad values for the knobs this subcommand advertises
+    // (apply_cli tolerates extras, same contract as cmd_eval)
+    for key in [
+        "mode",
+        "engine",
+        "rollout-workers",
+        "steal",
+        "admission-order",
+        "prefill",
+        "prefill-chunk-tokens",
+        "prefix-sharing",
+        "admission",
+        "kv-admit-headroom-pages",
+        "kv-page-tokens",
+        "global-kv-tokens",
+        "serve-admission",
+        "serve-queue-depth",
+        "serve-slo-ticks",
+    ] {
+        if let Some(v) = args.opt(key) {
+            cfg.apply(key, v).with_context(|| format!("--{key}"))?;
+        }
+    }
+    let n = args.get("requests", 16usize);
+    let interarrival = args.get("interarrival", 25u64);
+    let slots = args.get("slots", 4usize).max(1);
+    let seed = args.get("seed", 0u64);
+
+    // mock geometry: same shape the hermetic engine tests use
+    let prompt_len = 24usize;
+    let max_seq = prompt_len + cfg.sampling.max_response;
+    let (proto, reserve) = if cfg.mode.is_sparse() {
+        let (budget, buffer) = (prompt_len + 8, 8);
+        let b = MockModelBackend::sparse(slots, prompt_len, max_seq, 32, budget, buffer);
+        (b, budget + buffer)
+    } else {
+        (MockModelBackend::dense(slots, prompt_len, max_seq, 32), max_seq)
+    };
+    let proto = proto.with_costs(CostModel::representative());
+    let decode_lanes = if cfg.engine == EngineKind::Pipelined {
+        cfg.rollout_workers.max(1)
+    } else {
+        1
+    };
+    let lanes = if cfg.engine == EngineKind::Pipelined && cfg.prefill.is_async() {
+        decode_lanes + 1
+    } else {
+        decode_lanes
+    };
+    let backends: Vec<MockModelBackend> = (0..lanes).map(|_| proto.clone()).collect();
+    let sched = Scheduler::worst_case(slots, reserve)
+        .with_admission(cfg.memory.admission)
+        .with_headroom(cfg.memory.kv_admit_headroom_pages)
+        .with_order(cfg.admission_order)
+        .with_sharing(cfg.memory.prefix_sharing);
+    // like eval, the wall exists to drive admission, not to starve the
+    // demo: clamp it up so every decode lane can fill its batch
+    let page = cfg.memory.kv_page_tokens;
+    let per_seq = sched.reserve_per_seq.div_ceil(page) * page;
+    let wall = cfg.memory.global_kv_tokens.max(per_seq * slots * decode_lanes);
+    let kv = KvMemoryManager::with_pages(wall, page);
+
+    let tasks = benchmarks::training_split(n, prompt_len, seed);
+    let trace = synthetic_trace(tasks, interarrival, cfg.serve.slo_ticks);
+    let policy = RolloutPolicy::from_config(&cfg);
+    let mut server = ServeServer::new(policy, cfg.engine, cfg.serve, backends, sched, kv);
+    let report = server.run(&trace, seed)?;
+
+    let (mut shed_deadline, mut shed_queue) = (0usize, 0usize);
+    for o in &report.outcomes {
+        if let ServeOutcome::Shed { reason, .. } = o {
+            match reason {
+                ShedReason::Deadline => shed_deadline += 1,
+                ShedReason::QueueFull => shed_queue += 1,
+            }
+        }
+    }
+    println!(
+        "serve: {} requests, interarrival {} ticks, engine {}, admission {}, slo {} ticks, queue-depth {}",
+        trace.len(),
+        interarrival,
+        cfg.engine.label(),
+        cfg.serve.admission.label(),
+        cfg.serve.slo_ticks,
+        cfg.serve.queue_depth,
+    );
+    println!(
+        "completed {}  shed {} (deadline {}, queue-full {})  rounds {}  makespan {} ticks",
+        report.completed(),
+        report.shed(),
+        shed_deadline,
+        shed_queue,
+        report.rounds,
+        report.makespan_ticks,
+    );
+    for (name, h) in [
+        ("ttft", &report.ttft),
+        ("inter-token", &report.inter_token),
+        ("e2e", &report.e2e),
+    ] {
+        println!(
+            "{:<12} p50 {:>6}  p99 {:>6}  mean {:>8.1}  max {:>6}  ({} samples)",
+            name,
+            h.p50(),
+            h.p99(),
+            h.mean(),
+            h.max(),
+            h.len(),
+        );
     }
     Ok(())
 }
@@ -361,5 +488,28 @@ mod tests {
         // boolean-style flags are checked too
         let b = parse("eval --model tiny --vrebose");
         assert!(reject_unknown_options(&b, EVAL_EXTRA_KEYS).is_err());
+    }
+
+    #[test]
+    fn serve_accepts_known_keys_and_extras() {
+        let a = parse(
+            "serve --requests 64 --interarrival 10 --slots 4 --seed 3 \
+             --serve-admission slo --serve-queue-depth 8 --serve-slo-ticks 600 \
+             --engine continuous --prefill-chunk-tokens 24",
+        );
+        assert!(reject_unknown_options(&a, SERVE_EXTRA_KEYS).is_ok());
+    }
+
+    #[test]
+    fn serve_rejects_typod_flags_loudly() {
+        let a = parse("serve --requests 64 --slo-tick 600");
+        let err = reject_unknown_options(&a, SERVE_EXTRA_KEYS)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--slo-tick"), "got: {err}");
+        assert!(err.contains("--serve-slo-ticks"), "must list the valid set: {err}");
+        // eval-only extras are not serve extras
+        let b = parse("serve --bench gsm");
+        assert!(reject_unknown_options(&b, SERVE_EXTRA_KEYS).is_err());
     }
 }

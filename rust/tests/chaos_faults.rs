@@ -30,7 +30,7 @@
 use sparse_rl::config::{EngineKind, FaultPolicy, PrefillMode, RolloutMode, SamplingConfig};
 use sparse_rl::coordinator::{
     rollout_fleet, CostModel, FaultKind, FaultOp, FaultPlan, GenSeq, KvMemoryManager,
-    MockModelBackend, Replica, RolloutPolicy, RolloutStats, Scheduler,
+    MockModelBackend, Replica, RolloutCtx, RolloutPolicy, RolloutStats, Scheduler,
 };
 use sparse_rl::data::task::Task;
 use sparse_rl::util::propcheck::{self, PropConfig};
@@ -82,7 +82,9 @@ fn run_static(
     kv: &mut KvMemoryManager,
 ) -> Result<(Vec<GenSeq>, RolloutStats), String> {
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
-    policy.rollout_static_queue(backend, &flat, SEED, sched, kv, 0).map_err(|e| format!("{e:#}"))
+    policy
+        .rollout_static_queue(backend, &flat, SEED, RolloutCtx::new(sched, kv))
+        .map_err(|e| format!("{e:#}"))
 }
 
 fn run_continuous(
@@ -93,7 +95,9 @@ fn run_continuous(
     kv: &mut KvMemoryManager,
 ) -> Result<(Vec<GenSeq>, RolloutStats), String> {
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
-    policy.rollout_continuous(backend, &flat, SEED, sched, kv, 0).map_err(|e| format!("{e:#}"))
+    policy
+        .rollout_continuous(backend, &flat, SEED, RolloutCtx::new(sched, kv))
+        .map_err(|e| format!("{e:#}"))
 }
 
 fn run_pipelined(
@@ -109,11 +113,11 @@ fn run_pipelined(
     if policy.prefill.is_async() {
         let mut exec = proto.clone();
         policy
-            .rollout_pipelined(&mut backends, Some(&mut exec), &flat, SEED, sched, kv, 0)
+            .rollout_pipelined(&mut backends, Some(&mut exec), &flat, SEED, RolloutCtx::new(sched, kv))
             .map_err(|e| format!("{e:#}"))
     } else {
         policy
-            .rollout_pipelined(&mut backends, None, &flat, SEED, sched, kv, 0)
+            .rollout_pipelined(&mut backends, None, &flat, SEED, RolloutCtx::new(sched, kv))
             .map_err(|e| format!("{e:#}"))
     }
 }

@@ -46,7 +46,7 @@ use sparse_rl::config::{
 };
 use sparse_rl::coordinator::{
     rollout_fleet, CostModel, GenSeq, KvMemoryManager, MockModelBackend, Replica, RolloutBackend,
-    RolloutPolicy, RolloutStats, Scheduler,
+    RolloutCtx, RolloutPolicy, RolloutStats, Scheduler,
 };
 use sparse_rl::data::task::Task;
 use sparse_rl::runtime::Method;
@@ -103,7 +103,7 @@ fn run_static(
     let mut sched = mk_sched(backend.slots(), reserve).with_order(order);
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
     policy
-        .rollout_static_queue(backend, &flat, seed, &mut sched, kv, 0)
+        .rollout_static_queue(backend, &flat, seed, RolloutCtx::new(&mut sched, kv))
         .map_err(|e| e.to_string())
 }
 
@@ -120,7 +120,7 @@ fn run_continuous(
     let mut sched = mk_sched(backend.slots(), reserve).with_order(order);
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
     policy
-        .rollout_continuous(backend, &flat, seed, &mut sched, kv, 0)
+        .rollout_continuous(backend, &flat, seed, RolloutCtx::new(&mut sched, kv))
         .map_err(|e| e.to_string())
 }
 
@@ -143,11 +143,11 @@ fn run_pipelined(
     if policy.prefill.is_async() {
         let mut exec = proto.clone();
         policy
-            .rollout_pipelined(&mut backends, Some(&mut exec), &flat, seed, sched, kv, 0)
+            .rollout_pipelined(&mut backends, Some(&mut exec), &flat, seed, RolloutCtx::new(sched, kv))
             .map_err(|e| e.to_string())
     } else {
         policy
-            .rollout_pipelined(&mut backends, None, &flat, seed, sched, kv, 0)
+            .rollout_pipelined(&mut backends, None, &flat, seed, RolloutCtx::new(sched, kv))
             .map_err(|e| e.to_string())
     }
 }
@@ -851,7 +851,7 @@ fn pipelined_preemption_stress_no_deadlock_and_pool_conserved() {
     let mut sched_c = mk_sched(slots, reserve).with_admission(AdmissionPolicy::Paged);
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
     let (cont_seqs, _) = policy
-        .rollout_continuous(&mut backend(), &flat, seed, &mut sched_c, &mut kv_c, 0)
+        .rollout_continuous(&mut backend(), &flat, seed, RolloutCtx::new(&mut sched_c, &mut kv_c))
         .expect("continuous reference");
 
     for workers in worker_counts() {

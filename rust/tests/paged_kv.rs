@@ -30,7 +30,7 @@ use sparse_rl::config::{
     AdmissionPolicy, EngineKind, PrefillMode, PrefixSharing, RolloutMode, SamplingConfig,
 };
 use sparse_rl::coordinator::{
-    evaluate_with_backend, GenSeq, KvMemoryManager, MockModelBackend, RolloutPolicy,
+    evaluate_with_backend, GenSeq, KvMemoryManager, MockModelBackend, RolloutCtx, RolloutPolicy,
     RolloutStats, Scheduler,
 };
 use sparse_rl::data::task::Task;
@@ -169,7 +169,7 @@ fn run(
 ) -> Result<(Vec<GenSeq>, RolloutStats), String> {
     let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
     policy
-        .rollout_continuous(backend, &flat, seed, sched, kv, 0)
+        .rollout_continuous(backend, &flat, seed, RolloutCtx::new(sched, kv))
         .map_err(|e| e.to_string())
 }
 
@@ -433,7 +433,7 @@ fn admit_headroom_cuts_preemption_thrash() {
         let mut sched = paged(slots, reserve).with_headroom(headroom);
         let flat: Vec<(usize, &Task)> = tasks.iter().enumerate().collect();
         let (seqs, stats) = policy
-            .rollout_continuous(&mut backend, &flat, seed, &mut sched, &mut kv, 0)
+            .rollout_continuous(&mut backend, &flat, seed, RolloutCtx::new(&mut sched, &mut kv))
             .expect("rollout under pressure");
         assert_eq!(kv.reserved(), 0, "headroom {headroom}: leaked KV");
         kv.check_invariants().unwrap();
